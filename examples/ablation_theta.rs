@@ -1,0 +1,72 @@
+//! Interactive Table-4 ablation: sweep θ with and without the anchor and
+//! print the sparsity/recall/latency frontier (plus the decode-reuse
+//! extension statistics from the paged KV pool).
+//!
+//! ```bash
+//! cargo run --release --example ablation_theta -- --n 8192
+//! ```
+
+use anchor_attention::attention::anchor::{anchor_attention_timed, AnchorConfig};
+use anchor_attention::attention::{metrics, TileConfig};
+use anchor_attention::coordinator::kv_cache::PagePool;
+use anchor_attention::util::cli::Args;
+use anchor_attention::workload::qkv::generate;
+use anchor_attention::workload::WorkloadProfile;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.usize_or("n", 8192)?;
+    let tile = TileConfig::new(128, 128);
+    let step = anchor_attention::experiments::common::scaled_step(n, tile);
+    let wl = generate(&WorkloadProfile::llama_like(), n, 42);
+
+    println!("θ sweep on a llama-like head (n = {n}, step = {step}):\n");
+    println!(
+        "{:<16} {:>5} {:>10} {:>9} {:>9}",
+        "arm", "θ", "sparsity", "recall", "ms"
+    );
+    println!("{}", "─".repeat(54));
+    for use_anchor in [true, false] {
+        for theta in [10.0f32, 11.0, 12.0, 13.0, 14.0, 15.0] {
+            let cfg = AnchorConfig { tile, theta, step, init_blocks: 1, use_anchor };
+            let (out, t) = anchor_attention_timed(&wl.head, &cfg);
+            let rec = metrics::recall(&wl.head, &out.coverage, tile);
+            println!(
+                "{:<16} {:>5.1} {:>9.1}% {:>8.1}% {:>9.1}",
+                if use_anchor { "with anchor" } else { "without anchor" },
+                theta,
+                out.coverage.sparsity() * 100.0,
+                rec.mean_recall * 100.0,
+                t.total_s() * 1e3
+            );
+        }
+        println!();
+    }
+
+    // Decode-reuse extension (DESIGN.md §7): per-page stripe statistics.
+    println!("decode-reuse extension: per-page stripe heat from prefill identification");
+    let cfg = AnchorConfig { tile, theta: 12.0, step, init_blocks: 1, use_anchor: true };
+    let out = cfg;
+    let attn = anchor_attention::attention::anchor::anchor_attention(&wl.head, &out);
+    let page_tokens = 256;
+    let mut pool = PagePool::new(n / page_tokens + 1, page_tokens);
+    pool.admit(0, n)?;
+    // Use the last q block's coverage as the decode-relevant heat.
+    let last_qb = attn.coverage.q_blocks() - 1;
+    for page in 0..n / page_tokens {
+        let start = page * page_tokens;
+        let hot = (start..start + page_tokens)
+            .filter(|&c| attn.coverage.covered(last_qb, c))
+            .count() as f32
+            / page_tokens as f32;
+        pool.record_stripe_stats(0, start, hot)?;
+    }
+    let hot_pages = pool.hot_pages(0, 0.5);
+    println!(
+        "{} of {} pages are ≥50% hot for decode ({}% KV-page reduction available)",
+        hot_pages.len(),
+        n / page_tokens,
+        100 * (n / page_tokens - hot_pages.len()) / (n / page_tokens)
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Needle-in-a-haystack demo (Fig. 7's mechanism, single run): plant a
+//! needle key at a chosen depth, then show which sparse methods' coverage
+//! retains it and how output fidelity at the answer position responds.
+//!
+//! ```bash
+//! cargo run --release --example needle_haystack -- --n 8192 --depth 0.35
+//! ```
+
+use anchor_attention::attention::full::full_attention;
+use anchor_attention::experiments::common::{evaluate, paper_methods};
+use anchor_attention::experiments::tab3_ruler::niah_accuracy;
+use anchor_attention::util::cli::Args;
+use anchor_attention::workload::qkv::generate_with_needle;
+use anchor_attention::workload::WorkloadProfile;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.usize_or("n", 8192)?;
+    let depth = args.f64_or("depth", 0.35)?;
+    let tile = anchor_attention::attention::TileConfig::new(128, 128);
+
+    println!("planting a needle at depth {:.0}% of a {}-token haystack…", depth * 100.0, n);
+    let wl = generate_with_needle(&WorkloadProfile::llama_like(), n, 9, Some(depth));
+    let needle = wl.meta.needle.as_ref().unwrap();
+    println!("needle at position {} (logit {:.1})", needle.position, needle.logit);
+
+    let full = full_attention(&wl.head, tile);
+    println!("\n{:<16} {:>9} {:>9} {:>10} {:>8}", "method", "covered?", "sparsity", "accuracy", "ms");
+    println!("{}", "─".repeat(58));
+    for m in paper_methods(n, tile, 12.0) {
+        let e = evaluate(&wl.head, &m, tile);
+        let out = m.run(&wl.head);
+        let last_qb = out.coverage.q_blocks() - 1;
+        let covered = out.coverage.covered(last_qb, needle.position);
+        let acc = niah_accuracy(&wl.head, &out.coverage, &out.out, &full.out, needle.position, tile);
+        println!(
+            "{:<16} {:>9} {:>8.1}% {:>10.1} {:>8.1}",
+            e.method,
+            if covered { "yes" } else { "NO" },
+            e.sparsity * 100.0,
+            acc,
+            e.latency_s * 1e3
+        );
+    }
+    println!("\n(static patterns lose mid-context needles; anchor's global identification keeps them)");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: run AnchorAttention on one synthetic head and compare to
+//! dense attention — recall, sparsity, output error, and latency — then
+//! cross-check the AOT HLO artifact on the PJRT runtime if artifacts are
+//! built.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use anchor_attention::attention::anchor::{anchor_attention_timed, AnchorConfig};
+use anchor_attention::attention::full::full_attention;
+use anchor_attention::attention::{metrics, TileConfig};
+use anchor_attention::workload::qkv::generate;
+use anchor_attention::workload::WorkloadProfile;
+
+fn main() -> anyhow::Result<()> {
+    let n = 8192;
+    let tile = TileConfig::new(128, 128);
+    println!("generating a llama-like synthetic head (n = {n}, d = 64)…");
+    let wl = generate(&WorkloadProfile::llama_like(), n, 42);
+
+    println!("dense attention (FlashAttention-style blocked engine)…");
+    let t0 = std::time::Instant::now();
+    let full = full_attention(&wl.head, tile);
+    let t_full = t0.elapsed().as_secs_f64();
+
+    println!("AnchorAttention (θ = 12, step = 4)…");
+    let cfg = AnchorConfig { tile, theta: 12.0, step: 4, init_blocks: 1, use_anchor: true };
+    let (out, phases) = anchor_attention_timed(&wl.head, &cfg);
+    let rec = metrics::recall(&wl.head, &out.coverage, tile);
+
+    println!("\n── results ───────────────────────────────────────────");
+    println!("recall                 {:.2}%", rec.mean_recall * 100.0);
+    println!("sparsity               {:.2}%", out.coverage.sparsity() * 100.0);
+    println!("output rel. error      {:.2e}", out.out.rel_err(&full.out));
+    println!("dense latency          {:.1} ms", t_full * 1e3);
+    println!(
+        "anchor latency         {:.1} ms  (anchor {:.1} + identify {:.1} + sparse {:.1})",
+        phases.total_s() * 1e3,
+        phases.anchor_s * 1e3,
+        phases.identify_s * 1e3,
+        phases.sparse_s * 1e3
+    );
+    println!("speedup                {:.2}x", t_full / phases.total_s());
+
+    // Cross-check against the AOT artifact when available.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\ncross-checking Pallas AOT artifact over PJRT (n = 256)…");
+        let rt = anchor_attention::runtime::Runtime::open("artifacts")?;
+        let spec = rt.manifest().anchor;
+        let small = generate(&WorkloadProfile::llama_like(), 256, 7);
+        let lits = [
+            anchor_attention::runtime::literal_f32(&[256, 64], &small.head.q.data)?,
+            anchor_attention::runtime::literal_f32(&[256, 64], &small.head.k.data)?,
+            anchor_attention::runtime::literal_f32(&[256, 64], &small.head.v.data)?,
+        ];
+        let hlo_out = rt.execute("attn_anchor_256", &lits)?;
+        let hlo = anchor_attention::tensor::Mat::from_vec(256, 64, hlo_out[0].to_vec::<f32>()?);
+        let cfg = AnchorConfig {
+            tile: TileConfig::new(spec.block, spec.block),
+            theta: spec.theta as f32,
+            step: spec.step,
+            init_blocks: spec.init_blocks,
+            use_anchor: true,
+        };
+        let rust = anchor_attention::attention::anchor::anchor_attention(&small.head, &cfg);
+        println!(
+            "HLO vs engine max diff  {:.2e}  (three-layer consistency)",
+            hlo.max_abs_diff(&rust.out)
+        );
+    } else {
+        println!("\n(run `make artifacts` to also cross-check the Pallas AOT path)");
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! **End-to-end serving driver** (the repo's headline integration proof):
+//! loads the AOT-compiled tiny LM through the PJRT runtime, serves a
+//! Poisson trace of batched requests through the full coordinator stack
+//! (admission queue → paged KV pool → chunked-prefill scheduler → dynamic
+//! batcher → engine), and reports latency/throughput — once with the dense
+//! scheduler cost model and once with the anchor-sparsity-aware model.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_trace
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use anchor_attention::coordinator::engine::PjrtEngine;
+use anchor_attention::coordinator::request::Request;
+use anchor_attention::coordinator::scheduler::SparsityModel;
+use anchor_attention::coordinator::server::{serve, ServerConfig};
+use anchor_attention::workload::trace::{generate_trace, TraceConfig};
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let trace_cfg = TraceConfig {
+        rate: 4.0,
+        num_requests: 12,
+        length_mix: vec![(256, 0.4), (768, 0.4), (1536, 0.2)],
+        decode_min: 4,
+        decode_max: 12,
+        seed: 7,
+    };
+    let trace = generate_trace(&trace_cfg);
+
+    for (label, sparsity) in [
+        ("dense scheduler", SparsityModel::Dense),
+        ("anchor-aware scheduler", SparsityModel::Anchor { stripe_keep: 0.1, anchor_tokens: 256 }),
+    ] {
+        println!("\n════ {label} ══════════════════════════════════════");
+        println!("loading engine (compiling artifacts)…");
+        let mut engine = PjrtEngine::new("artifacts")?;
+        let vocab = engine.vocab() as i32;
+
+        let requests: Vec<Request> = trace
+            .iter()
+            .map(|t| {
+                let len = t.prompt_tokens.min(1800);
+                let prompt: Vec<i32> = (0..len)
+                    .map(|i| ((t.id as usize * 131 + i * 7) % vocab as usize) as i32)
+                    .collect();
+                Request::new(t.id, prompt, t.decode_tokens, t.arrival_s)
+            })
+            .collect();
+
+        let mut cfg = ServerConfig::default();
+        cfg.scheduler.sparsity = sparsity;
+        cfg.pool_pages = 128;
+
+        let report = serve(&cfg, requests, &mut engine, |e, r| {
+            e.register(r.id, r.prompt.clone());
+        })?;
+        report.print_summary();
+    }
+    Ok(())
+}

@@ -1,0 +1,199 @@
+"""AOT artifact emission: lower JAX/Pallas graphs to HLO **text** for the
+Rust PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the `xla` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (``make artifacts`` -> artifacts/):
+    attn_full_<n>.hlo.txt     dense causal attention, one head  [n,d]³ -> [n,d]
+    attn_anchor_<n>.hlo.txt   Alg. 1-3 Pallas pipeline, one head
+    lm_prefill256.hlo.txt     chunked prefill step (chunk=256)
+    lm_decode.hlo.txt         single-token decode step
+    lm_prefill_anchor512.hlo.txt  whole-prompt prefill w/ anchor attention
+    weights.bin               flat f32 parameter blob (ordered)
+    manifest.json             shapes/dtypes/offsets contract for Rust
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import ref
+from .kernels import sparse as sparse_mod
+
+ATTN_D = 64
+ANCHOR_CFG = ref.AnchorCfg(block=32, theta=12.0, step=4, init_blocks=1)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return {"dtype": dtype, "shape": list(shape)}
+
+
+def lower_and_write(fn, args, out_dir, name, inputs, outputs):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {fname}: {len(text)} chars")
+    return {"name": name, "file": fname, "inputs": inputs, "outputs": outputs}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-anchor-lm", action="store_true", help="skip the slow anchor-LM artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    artifacts = []
+    cfg = model_mod.ModelCfg()
+    acfg = ANCHOR_CFG
+
+    # ---- single-head attention ops -------------------------------------
+    for n in (256, 512):
+        s = jax.ShapeDtypeStruct((n, ATTN_D), jnp.float32)
+        artifacts.append(
+            lower_and_write(
+                lambda q, k, v: (ref.full_attention(q, k, v),),
+                (s, s, s),
+                args.out,
+                f"attn_full_{n}",
+                inputs=[spec((n, ATTN_D))] * 3,
+                outputs=[spec((n, ATTN_D))],
+            )
+        )
+        artifacts.append(
+            lower_and_write(
+                lambda q, k, v: (sparse_mod.anchor_attention(q, k, v, acfg),),
+                (s, s, s),
+                args.out,
+                f"attn_anchor_{n}",
+                inputs=[spec((n, ATTN_D))] * 3,
+                outputs=[spec((n, ATTN_D))],
+            )
+        )
+
+    # ---- LM serving steps ------------------------------------------------
+    params = model_mod.init_params(cfg, seed=0)
+    specs = model_mod.param_specs(cfg)
+    cache_shape = (cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.d_head)
+    param_inputs = [spec(shape) for _, shape in specs]
+
+    def lm_fn(chunk):
+        def fn(*flat):
+            nparams = len(specs)
+            params_ = list(flat[:nparams])
+            ids, kc, vc, pos = flat[nparams:]
+            logits, kc2, vc2 = model_mod.step(params_, ids, kc, vc, pos, cfg)
+            return (logits, kc2, vc2)
+
+        return fn
+
+    for chunk, name in ((256, "lm_prefill256"), (1, "lm_decode")):
+        arg_specs = tuple(
+            [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in specs]
+            + [
+                jax.ShapeDtypeStruct((chunk,), jnp.int32),
+                jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+                jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.int32),
+            ]
+        )
+        artifacts.append(
+            lower_and_write(
+                lm_fn(chunk),
+                arg_specs,
+                args.out,
+                name,
+                inputs=param_inputs
+                + [
+                    {"dtype": "i32", "shape": [chunk]},
+                    spec(cache_shape),
+                    spec(cache_shape),
+                    {"dtype": "i32", "shape": []},
+                ],
+                outputs=[spec((chunk, cfg.vocab)), spec(cache_shape), spec(cache_shape)],
+            )
+        )
+
+    # ---- anchor-attention prefill --------------------------------------
+    if not args.skip_anchor_lm:
+        n_anchor = acfg.block * acfg.step * 4  # 512
+        arg_specs = tuple(
+            [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in specs]
+            + [jax.ShapeDtypeStruct((n_anchor,), jnp.int32)]
+        )
+
+        def anchor_fn(*flat):
+            params_ = list(flat[: len(specs)])
+            ids = flat[len(specs)]
+            return (model_mod.prefill_anchor(params_, ids, cfg, acfg),)
+
+        artifacts.append(
+            lower_and_write(
+                anchor_fn,
+                arg_specs,
+                args.out,
+                f"lm_prefill_anchor{n_anchor}",
+                inputs=param_inputs + [{"dtype": "i32", "shape": [n_anchor]}],
+                outputs=[spec((n_anchor, cfg.vocab))],
+            )
+        )
+
+    # ---- weights + manifest ----------------------------------------------
+    blob = np.concatenate([np.asarray(p, np.float32).ravel() for p in params])
+    blob.tofile(os.path.join(args.out, "weights.bin"))
+    print(f"  weights.bin: {blob.nbytes} bytes ({blob.size} f32)")
+
+    offset = 0
+    weight_entries = []
+    for (name, shape), p in zip(specs, params):
+        count = int(np.prod(shape))
+        weight_entries.append({"name": name, "shape": list(shape), "offset": offset, "count": count})
+        offset += count
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "d_head": cfg.d_head,
+            "d_ffn": cfg.d_ffn,
+            "max_seq": cfg.max_seq,
+            "prefill_chunk": 256,
+        },
+        "anchor": {
+            "block": acfg.block,
+            "theta": acfg.theta,
+            "step": acfg.step,
+            "init_blocks": acfg.init_blocks,
+        },
+        "weights": {"file": "weights.bin", "params": weight_entries, "total_f32": int(blob.size)},
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  manifest.json: {len(artifacts)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Pallas kernel for Algorithm 1 — Pattern-based Anchor Computation.
+
+Per query block: exact online-softmax attention over the initial key
+block(s) and the group-aligned causal local window, emitting the cached
+state `(M, L, Acc)` that Algorithm 3 resumes from (paper §3.4).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _anchor_kernel(
+    q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, *, cfg: ref.AnchorCfg, n: int
+):
+    qb = pl.program_id(0)
+    block = cfg.block
+    d = q_ref.shape[-1]
+    q = pl.load(q_ref, (pl.ds(qb * block, block), slice(None)))
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    row0 = qb * block
+    rows = row0 + jax.lax.iota(jnp.int32, block)
+
+    def fold(j, carry):
+        m, l, acc = carry
+        col0 = j * block
+        k_j = jax.lax.dynamic_slice(k_ref[...], (col0, 0), (block, d))
+        v_j = jax.lax.dynamic_slice(v_ref[...], (col0, 0), (block, d))
+        s = (q @ k_j.T) * scale
+        cols = col0 + jax.lax.iota(jnp.int32, block)
+        s = jnp.where(cols[None, :] <= rows[:, None], s, ref.NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_j
+        return m_new, l, acc
+
+    m0 = jnp.full((block,), ref.NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block, d), dtype=jnp.float32)
+
+    # Window: group-aligned start (Alg. 1 line 8) through the diagonal.
+    win_start_blk = qb // cfg.step * cfg.step
+    init_blks = jnp.minimum(cfg.init_blocks, win_start_blk)
+
+    # Init blocks not overlapped by the window: j in [0, init_blks).
+    state = jax.lax.fori_loop(0, init_blks, fold, (m0, l0, acc0))
+    # Window blocks: j in [win_start_blk, qb].
+    state = jax.lax.fori_loop(win_start_blk, qb + 1, fold, state)
+
+    m, l, acc = state
+    pl.store(m_ref, (pl.ds(qb * block, block),), m)
+    pl.store(l_ref, (pl.ds(qb * block, block),), l)
+    pl.store(acc_ref, (pl.ds(qb * block, block), slice(None)), acc)
+
+
+def anchor_state(q, k, v, cfg: ref.AnchorCfg):
+    """Run Alg. 1; returns `(m, l, acc)` matching `ref.anchor_state`."""
+    n, d = q.shape
+    assert n % cfg.block == 0, f"n={n} must be a multiple of block={cfg.block}"
+    kernel = functools.partial(_anchor_kernel, cfg=cfg, n=n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+        ),
+        grid=(n // cfg.block,),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,60 @@
+"""Pallas baseline: dense causal FlashAttention-style kernel.
+
+Grid over query blocks; K/V stay whole-array (interpret mode stages them;
+on real TPU the BlockSpec pipeline would stream `block`-sized windows into
+VMEM — see DESIGN.md §5). Online softmax over kv tiles, exactly the
+blocked scheme of the Rust engine (`attention/full.rs`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block: int, n: int):
+    qb = pl.program_id(0)
+    d = q_ref.shape[-1]
+    q = pl.load(q_ref, (pl.ds(qb * block, block), slice(None)))  # [block, d]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    row0 = qb * block
+    rows = row0 + jax.lax.iota(jnp.int32, block)
+
+    num_kv = qb + 1  # causal: kv blocks 0..=qb
+
+    def body(j, carry):
+        m, l, acc = carry
+        col0 = j * block
+        k_j = jax.lax.dynamic_slice(k_ref[...], (col0, 0), (block, d))
+        v_j = jax.lax.dynamic_slice(v_ref[...], (col0, 0), (block, d))
+        s = (q @ k_j.T) * scale
+        cols = col0 + jax.lax.iota(jnp.int32, block)
+        s = jnp.where(cols[None, :] <= rows[:, None], s, ref.NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_j
+        return m_new, l, acc
+
+    m0 = jnp.full((block,), ref.NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block, d), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_kv, body, (m0, l0, acc0))
+    pl.store(o_ref, (pl.ds(qb * block, block), slice(None)), acc / l[:, None])
+
+
+def flash_attention(q, k, v, *, block: int = 128):
+    """Dense causal attention via the Pallas kernel (interpret mode)."""
+    n, d = q.shape
+    assert n % block == 0, f"n={n} must be a multiple of block={block}"
+    kernel = functools.partial(_flash_kernel, block=block, n=n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        grid=(n // block,),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,161 @@
+"""Pure-jnp reference oracle for the AnchorAttention pipeline.
+
+Dense (O(N²)-memory) implementations of the paper's Algorithms 1-3 with
+*identical semantics* to both the Pallas kernels in this package and the
+Rust engine (`rust/src/attention/anchor/`): every kernel test asserts
+allclose against these functions, and `aot.py` lowers the same math into
+the HLO artifacts the Rust runtime cross-checks against the engine.
+
+Conventions: single head, row-major `[n, d]` float32, causal masking,
+logits scaled by 1/sqrt(d).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps exp() well-defined
+
+
+@dataclass(frozen=True)
+class AnchorCfg:
+    """Mirror of the Rust `AnchorConfig` (b_q == b_kv == block)."""
+
+    block: int = 128
+    theta: float = 12.0
+    step: int = 16
+    init_blocks: int = 1
+    use_anchor: bool = True
+
+    def window_start(self, qb: int) -> int:
+        """First column of the local window for query block `qb` (Alg. 1)."""
+        return (qb // self.step) * self.step * self.block
+
+    def init_cols(self, n: int) -> int:
+        return min(self.init_blocks * self.block, n)
+
+
+def full_attention(q, k, v):
+    """Dense causal attention — the numeric baseline."""
+    n, d = q.shape
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    causal = jnp.tril(jnp.ones((n, n), dtype=bool))
+    s = jnp.where(causal, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v
+
+
+def anchor_region_mask(n: int, cfg: AnchorCfg):
+    """Boolean `[n, n]` mask of the anchor regions (init ∪ window), causal.
+
+    Row r belongs to query block r // block; its anchor region is
+    `[0, init_cols) ∪ [window_start(qb), r]`.
+    """
+    rows = jnp.arange(n)[:, None]
+    cols = jnp.arange(n)[None, :]
+    qb = rows // cfg.block
+    win = (qb // cfg.step) * cfg.step * cfg.block
+    causal = cols <= rows
+    in_init = cols < cfg.init_cols(n)
+    in_window = cols >= win
+    return causal & (in_init | in_window)
+
+
+def anchor_state(q, k, v, cfg: AnchorCfg):
+    """Algorithm 1 (dense form): returns `(m, l, acc)` per row.
+
+    `m` is the row max over the anchor regions (the anchor `x_a`),
+    `l` the softmax normalizer over those regions, `acc` the unnormalized
+    value accumulator.
+    """
+    n, d = q.shape
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    region = anchor_region_mask(n, cfg)
+    s = jnp.where(region, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(region, jnp.exp(s - m[:, None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = p @ v
+    return m, l, acc
+
+
+def stripe_mask(q, k, m, cfg: AnchorCfg):
+    """Algorithm 2 (dense form): boolean `[groups, n]` stripe selection.
+
+    Pooled queries (`avgpool(Q, block)`) of each group are scored against
+    every key; a candidate column survives iff
+    `avgpool(x_a) − qk ≤ θ` for any pooled row of the group. Columns inside
+    the init region or at/after the group's window are not candidates
+    (they are already covered by Alg. 1).
+    """
+    n, d = q.shape
+    nb = n // cfg.block
+    groups = -(-nb // cfg.step)
+
+    q_pool = q.reshape(nb, cfg.block, d).mean(axis=1)
+    a_pool = m.reshape(nb, cfg.block).mean(axis=1)
+    if not cfg.use_anchor:
+        a_pool = jnp.zeros_like(a_pool)
+
+    s = (q_pool @ k.T) / jnp.sqrt(jnp.float32(d))  # [nb, n]
+    hit = (a_pool[:, None] - s) <= cfg.theta  # [nb, n]
+
+    # Pad row-count to a multiple of step, then OR within each group.
+    pad = groups * cfg.step - nb
+    hit = jnp.pad(hit, ((0, pad), (0, 0)), constant_values=False)
+    hit = hit.reshape(groups, cfg.step, n).any(axis=1)  # [groups, n]
+
+    cols = jnp.arange(n)[None, :]
+    g = jnp.arange(groups)[:, None]
+    candidate = (cols >= cfg.init_cols(n)) & (cols < g * cfg.step * cfg.block)
+    return hit & candidate
+
+
+def coverage_mask(n: int, stripes, cfg: AnchorCfg):
+    """Full per-row coverage: anchor regions ∪ the row's group stripes."""
+    region = anchor_region_mask(n, cfg)
+    rows = jnp.arange(n)
+    g = rows // cfg.block // cfg.step
+    stripe_rows = stripes[g]  # [n, n]
+    causal = jnp.arange(n)[None, :] <= rows[:, None]
+    return region | (stripe_rows & causal)
+
+
+def sparse_output(q, k, v, state, stripes, cfg: AnchorCfg):
+    """Algorithm 3 (dense form): softmax over the covered set.
+
+    With exact arithmetic, resuming the online softmax from `(m, l, acc)`
+    and folding the gathered stripes equals masked softmax over
+    anchor-region ∪ stripes — which is what this computes.
+    """
+    del state  # the dense form recomputes; kernels resume from the cache
+    n, d = q.shape
+    cov = coverage_mask(n, stripes, cfg)
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    s = jnp.where(cov, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(cov, jnp.exp(s - m), 0.0)
+    return (p @ v) / jnp.sum(p, axis=-1, keepdims=True)
+
+
+def anchor_attention(q, k, v, cfg: AnchorCfg):
+    """The full three-stage pipeline (dense form). Returns (out, stripes)."""
+    m, l, acc = anchor_state(q, k, v, cfg)
+    stripes = stripe_mask(q, k, m, cfg)
+    out = sparse_output(q, k, v, (m, l, acc), stripes, cfg)
+    return out, stripes
+
+
+def recall(q, k, cov_rows):
+    """Paper's recall metric: covered fraction of true attention mass.
+
+    `cov_rows` is a boolean `[n, n]` per-row coverage mask.
+    """
+    n, d = q.shape
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    causal = jnp.tril(jnp.ones((n, n), dtype=bool))
+    s = jnp.where(causal, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    covered = jnp.where(cov_rows & causal, p, 0.0).sum(axis=-1)
+    return covered.mean()

@@ -1,0 +1,86 @@
+"""Pallas kernel for Algorithm 3 — Fine-Grained Sparse Computation.
+
+Per query block: resume the online softmax from the cached Alg. 1 state
+`(M, L, Acc)` and fold in the surviving stripe columns. Key blocks whose
+stripe mask is empty are **skipped entirely** (`lax.cond` — the TPU
+realization of block skipping); within a touched block, non-surviving
+columns are masked in-VMEM. This is the hardware adaptation of the paper's
+discrete gather described in DESIGN.md §5: same skipped computation, block
+granularity for the HBM→VMEM schedule, stripe granularity for the scores.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _sparse_kernel(
+    q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref, mask_ref, o_ref, *, cfg: ref.AnchorCfg, n: int
+):
+    qb = pl.program_id(0)
+    block = cfg.block
+    d = q_ref.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    q = pl.load(q_ref, (pl.ds(qb * block, block), slice(None)))
+    g = qb // cfg.step
+
+    # Resume from cached anchor state (§3.4).
+    m = pl.load(m_ref, (pl.ds(qb * block, block),))
+    l = pl.load(l_ref, (pl.ds(qb * block, block),))
+    acc = pl.load(acc_ref, (pl.ds(qb * block, block), slice(None)))
+
+    win_start_blk = qb // cfg.step * cfg.step
+
+    def body(j, carry):
+        col0 = j * block
+        gmask = pl.load(mask_ref, (pl.ds(g, 1), slice(None)))[0]
+        colmask = jax.lax.dynamic_slice(gmask, (col0,), (block,))
+
+        def fold(carry):
+            m, l, acc = carry
+            k_j = jax.lax.dynamic_slice(k_ref[...], (col0, 0), (block, d))
+            v_j = jax.lax.dynamic_slice(v_ref[...], (col0, 0), (block, d))
+            s = (q @ k_j.T) * scale
+            s = jnp.where(colmask[None, :], s, ref.NEG_INF)
+            m_, l_, acc_ = m, l, acc
+            m_new = jnp.maximum(m_, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_ - m_new)
+            p = jnp.where(colmask[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+            l_ = l_ * alpha + jnp.sum(p, axis=-1)
+            acc_ = acc_ * alpha[:, None] + p @ v_j
+            return m_new, l_, acc_
+
+        # Block skip: untouched when no stripe survives in this key block.
+        return jax.lax.cond(jnp.any(colmask), fold, lambda c: c, carry)
+
+    m, l, acc = jax.lax.fori_loop(0, win_start_blk, body, (m, l, acc))
+    pl.store(o_ref, (pl.ds(qb * block, block), slice(None)), acc / l[:, None])
+
+
+def sparse_attention(q, k, v, state, stripes, cfg: ref.AnchorCfg):
+    """Run Alg. 3; returns the final output matching `ref.sparse_output`."""
+    n, d = q.shape
+    m, l, acc = state
+    assert n % cfg.block == 0
+    kernel = functools.partial(_sparse_kernel, cfg=cfg, n=n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        grid=(n // cfg.block,),
+        interpret=True,
+    )(q, k, v, m, l, acc, stripes)
+
+
+def anchor_attention(q, k, v, cfg: ref.AnchorCfg):
+    """Full three-kernel pipeline: Alg. 1 → Alg. 2 → Alg. 3."""
+    from . import anchor as anchor_mod
+    from . import stripe as stripe_mod
+
+    state = anchor_mod.anchor_state(q, k, v, cfg)
+    q_pool, a_pool = stripe_mod.pool_inputs(q, state[0], cfg)
+    stripes = stripe_mod.stripe_mask(q_pool, a_pool, k, cfg)
+    return sparse_attention(q, k, v, state, stripes, cfg)

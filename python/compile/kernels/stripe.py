@@ -1,0 +1,66 @@
+"""Pallas kernel for Algorithm 2 — Difference-aware Stripe Sparsity
+Identification.
+
+Grid over identification groups (`step` query blocks each). The group's
+pooled queries are scored against all keys; a candidate column survives iff
+`avgpool(x_a) − qk ≤ θ` for any pooled row (Eq. 2). Emits the boolean
+stripe mask `[groups, n]` consumed by the Algorithm 3 kernel.
+
+No sorting anywhere — the selection is one compare per score, the paper's
+advantage over top-k / top-cdf (§2.1.1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _stripe_kernel(qp_ref, ap_ref, k_ref, o_ref, *, cfg: ref.AnchorCfg, n: int):
+    g = pl.program_id(0)
+    step = cfg.step
+    d = qp_ref.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    qg = pl.load(qp_ref, (pl.ds(g * step, step), slice(None)))  # [step, d]
+    ag = pl.load(ap_ref, (pl.ds(g * step, step),))  # [step] pooled anchors
+
+    # Pooled scores against every key (on TPU this would tile over K; the
+    # selection rule is per-column so tiling is mechanical).
+    s = (qg @ k_ref[...].T) * scale  # [step, n]
+    hit = jnp.any((ag[:, None] - s) <= cfg.theta, axis=0)  # [n]
+
+    cols = jax.lax.iota(jnp.int32, n)
+    candidate = (cols >= cfg.init_cols(n)) & (cols < g * step * cfg.block)
+    pl.store(o_ref, (pl.ds(g, 1), slice(None)), (hit & candidate)[None, :])
+
+
+def stripe_mask(q_pool, anchor_pool, k, cfg: ref.AnchorCfg):
+    """Run Alg. 2. `q_pool`/`anchor_pool` are the `avgpool(·, block)` of Q
+    and of the Alg. 1 anchors; returns bool `[groups, n]` matching
+    `ref.stripe_mask`."""
+    nb, d = q_pool.shape
+    n = k.shape[0]
+    assert nb % cfg.step == 0, f"q blocks {nb} must be a multiple of step={cfg.step}"
+    groups = nb // cfg.step
+    if not cfg.use_anchor:
+        anchor_pool = jnp.zeros_like(anchor_pool)
+    kernel = functools.partial(_stripe_kernel, cfg=cfg, n=n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((groups, n), jnp.bool_),
+        grid=(groups,),
+        interpret=True,
+    )(q_pool, anchor_pool, k)
+
+
+def pool_inputs(q, m, cfg: ref.AnchorCfg):
+    """`avgpool(Q, block)` and `avgpool(x_a, block)` (Alg. 2 lines 1-2)."""
+    n, d = q.shape
+    nb = n // cfg.block
+    q_pool = q.reshape(nb, cfg.block, d).mean(axis=1)
+    a_pool = m.reshape(nb, cfg.block).mean(axis=1)
+    return q_pool, a_pool

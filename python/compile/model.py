@@ -1,0 +1,229 @@
+"""L2: tiny GQA transformer LM (build-time JAX, never on the request path).
+
+A LLaMA-style decoder — RMSNorm, RoPE, grouped-query attention, SwiGLU —
+sized to serve from the CPU PJRT runtime (≈2.7 M params, synthetic weights;
+the paper's 7-8B checkpoints are unavailable offline, see DESIGN.md §1).
+
+Two attention backends:
+
+* ``full``   — dense causal attention against the functional KV cache;
+  used by the chunked serving artifacts (`lm_prefill_*`, `lm_decode`).
+* ``anchor`` — the paper's pipeline, lowered *from the Pallas kernels* in
+  `kernels/` so the HLO artifact exercises the same Alg. 1-3 math the Rust
+  engine implements (`lm_prefill_anchor`, `attn_anchor_*`).
+
+Weights are passed as ordered parameter lists (never baked into HLO) so the
+artifacts stay small; `aot.py` serializes them to `weights.bin` +
+`manifest.json` for the Rust loader.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    d_head: int = 32
+    d_ffn: int = 512
+    max_seq: int = 2048
+    rope_base: float = 10000.0
+    eps: float = 1e-5
+
+    @property
+    def kv_groups(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameters: ordered (name, shape) list -> init -> flat blob
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelCfg):
+    """Ordered (name, shape) list — the contract with the Rust loader."""
+    specs = [("embed", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "attn_norm", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.n_heads * cfg.d_head)),
+            (p + "wk", (cfg.d_model, cfg.n_kv_heads * cfg.d_head)),
+            (p + "wv", (cfg.d_model, cfg.n_kv_heads * cfg.d_head)),
+            (p + "wo", (cfg.n_heads * cfg.d_head, cfg.d_model)),
+            (p + "mlp_norm", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.d_ffn)),
+            (p + "w_up", (cfg.d_model, cfg.d_ffn)),
+            (p + "w_down", (cfg.d_ffn, cfg.d_model)),
+        ]
+    specs += [("final_norm", (cfg.d_model,)), ("lm_head", (cfg.d_model, cfg.vocab))]
+    return specs
+
+
+def init_params(cfg: ModelCfg, seed: int = 0):
+    """Deterministic synthetic weights (truncated-normal-ish scaling)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else cfg.d_model
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(jnp.float32(fan_in))
+            )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope(x, positions, base):
+    """x: [n, heads, d_head]; positions: [n]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [n, half]
+    cos = jnp.cos(ang)[:, None, :]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _cache_attention(q, kcache, vcache, q_positions, valid_len, cfg: ModelCfg):
+    """Causal attention of q [n, H, dh] over caches [Hkv, max, dh]."""
+    n = q.shape[0]
+    maxlen = kcache.shape[1]
+    # GQA: expand kv heads to query heads.
+    k = jnp.repeat(kcache, cfg.kv_groups, axis=0)  # [H, max, dh]
+    v = jnp.repeat(vcache, cfg.kv_groups, axis=0)
+    qh = jnp.transpose(q, (1, 0, 2))  # [H, n, dh]
+    s = jnp.einsum("hnd,hmd->hnm", qh, k) / jnp.sqrt(jnp.float32(cfg.d_head))
+    key_pos = jnp.arange(maxlen)
+    mask = (key_pos[None, :] <= q_positions[:, None]) & (key_pos[None, :] < valid_len)
+    s = jnp.where(mask[None, :, :], s, ref.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hnm,hmd->hnd", p, v)  # [H, n, dh]
+    return jnp.transpose(out, (1, 0, 2)).reshape(n, cfg.n_heads * cfg.d_head)
+
+
+def step(params, ids, kcache, vcache, pos, cfg: ModelCfg):
+    """One chunk step (prefill chunk or single decode token).
+
+    ids:    i32 [chunk]           token ids
+    kcache: f32 [L, Hkv, max, dh] functional KV cache (updated copy returned)
+    vcache: f32 [L, Hkv, max, dh]
+    pos:    i32 scalar            absolute position of ids[0]
+
+    Returns (logits [chunk, vocab], kcache', vcache').
+    """
+    n = ids.shape[0]
+    it = iter(params)
+
+    def nxt():
+        return next(it)
+
+    embed = nxt()
+    x = embed[ids]  # [n, d_model]
+    positions = pos + jnp.arange(n)
+
+    new_k, new_v = [], []
+    for layer in range(cfg.n_layers):
+        attn_norm, wq, wk, wv, wo = nxt(), nxt(), nxt(), nxt(), nxt()
+        mlp_norm, w_gate, w_up, w_down = nxt(), nxt(), nxt(), nxt()
+
+        h = rmsnorm(x, attn_norm, cfg.eps)
+        q = (h @ wq).reshape(n, cfg.n_heads, cfg.d_head)
+        k = (h @ wk).reshape(n, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ wv).reshape(n, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, positions, cfg.rope_base)
+        k = rope(k, positions, cfg.rope_base)
+
+        # Functional cache update at [pos, pos+n).
+        kc = jax.lax.dynamic_update_slice(
+            kcache[layer], jnp.transpose(k, (1, 0, 2)), (0, pos, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            vcache[layer], jnp.transpose(v, (1, 0, 2)), (0, pos, 0)
+        )
+        new_k.append(kc)
+        new_v.append(vc)
+
+        attn = _cache_attention(q, kc, vc, positions, pos + n, cfg)
+        x = x + attn @ wo
+
+        h = rmsnorm(x, mlp_norm, cfg.eps)
+        x = x + (jax.nn.silu(h @ w_gate) * (h @ w_up)) @ w_down
+
+    final_norm, lm_head = nxt(), nxt()
+    logits = rmsnorm(x, final_norm, cfg.eps) @ lm_head
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def empty_caches(cfg: ModelCfg):
+    shape = (cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Anchor-attention prefill (the paper's pipeline inside the model)
+# ---------------------------------------------------------------------------
+
+
+def prefill_anchor(params, ids, cfg: ModelCfg, acfg: ref.AnchorCfg):
+    """Whole-prompt prefill whose self-attention is AnchorAttention,
+    lowered from the Pallas kernels (Alg. 1-3). Returns logits [n, vocab].
+
+    Prompt length must be a multiple of ``acfg.block * acfg.step``.
+    """
+    from .kernels import sparse as sparse_mod
+
+    n = ids.shape[0]
+    it = iter(params)
+
+    def nxt():
+        return next(it)
+
+    x = nxt()[ids]
+    positions = jnp.arange(n)
+
+    def head_attn(q, k, v):
+        return sparse_mod.anchor_attention(q, k, v, acfg)
+
+    for _ in range(cfg.n_layers):
+        attn_norm, wq, wk, wv, wo = nxt(), nxt(), nxt(), nxt(), nxt()
+        mlp_norm, w_gate, w_up, w_down = nxt(), nxt(), nxt(), nxt()
+
+        h = rmsnorm(x, attn_norm, cfg.eps)
+        q = (h @ wq).reshape(n, cfg.n_heads, cfg.d_head)
+        k = (h @ wk).reshape(n, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ wv).reshape(n, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, positions, cfg.rope_base)
+        k = rope(k, positions, cfg.rope_base)
+        # GQA expand, then per-head anchor attention.
+        k = jnp.repeat(k, cfg.kv_groups, axis=1)
+        v = jnp.repeat(v, cfg.kv_groups, axis=1)
+        attn = jax.vmap(head_attn, in_axes=1, out_axes=1)(q, k, v)
+        x = x + attn.reshape(n, cfg.n_heads * cfg.d_head) @ wo
+
+        h = rmsnorm(x, mlp_norm, cfg.eps)
+        x = x + (jax.nn.silu(h @ w_gate) * (h @ w_up)) @ w_down
+
+    final_norm, lm_head = nxt(), nxt()
+    return rmsnorm(x, final_norm, cfg.eps) @ lm_head

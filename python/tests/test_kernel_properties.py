@@ -1,0 +1,87 @@
+"""Hypothesis sweeps over the Pallas kernels: shapes, dtypes, θ, step —
+each case asserts allclose against the pure-jnp oracle (ref.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash as flash_mod
+from compile.kernels import ref
+from compile.kernels import sparse as sparse_mod
+
+# Interpret-mode pallas is slow; keep the search space tight but real.
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand_qkv(seed, n, d, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    mk = lambda k: jax.random.normal(k, (n, d), jnp.float32).astype(dtype).astype(jnp.float32)
+    return mk(kq), mk(kk), mk(kv)
+
+
+@settings(**SETTINGS)
+@given(
+    blocks=st.integers(min_value=2, max_value=6),
+    block=st.sampled_from([8, 16, 32]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_flash_matches_ref_across_shapes(blocks, block, d, seed):
+    n = blocks * block
+    q, k, v = rand_qkv(seed, n, d)
+    got = flash_mod.flash_attention(q, k, v, block=block)
+    want = ref.full_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    groups=st.integers(min_value=1, max_value=3),
+    step=st.sampled_from([2, 4]),
+    theta=st.floats(min_value=-5.0, max_value=20.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_anchor_pipeline_matches_ref_across_theta(groups, step, theta, seed):
+    block = 16
+    d = 8
+    n = groups * step * block
+    cfg = ref.AnchorCfg(block=block, theta=float(theta), step=step, init_blocks=1)
+    q, k, v = rand_qkv(seed, n, d)
+    got = sparse_mod.anchor_attention(q, k, v, cfg)
+    want, _ = ref.anchor_attention(q, k, v, cfg)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31),
+    use_anchor=st.booleans(),
+)
+def test_stripe_monotonicity_property(seed, use_anchor):
+    """Stripe sets grow monotonically with θ (kernel-level invariant)."""
+    from compile.kernels import anchor as anchor_mod
+    from compile.kernels import stripe as stripe_mod
+
+    n, d, block, step = 128, 8, 16, 2
+    q, k, v = rand_qkv(seed, n, d)
+    base = ref.AnchorCfg(block=block, theta=0.0, step=step, use_anchor=use_anchor)
+    m, _, _ = anchor_mod.anchor_state(q, k, v, base)
+    q_pool, a_pool = stripe_mod.pool_inputs(q, m, base)
+    lo = stripe_mod.stripe_mask(q_pool, a_pool, k, base)
+    hi_cfg = ref.AnchorCfg(block=block, theta=5.0, step=step, use_anchor=use_anchor)
+    hi = stripe_mod.stripe_mask(q_pool, a_pool, k, hi_cfg)
+    assert bool(jnp.all(hi | ~lo)), "θ=0 selection must be a subset of θ=5"
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_output_rows_convex_combinations(seed):
+    """Kernel outputs stay in the convex hull of V rows (softmax property)."""
+    cfg = ref.AnchorCfg(block=16, theta=3.0, step=2)
+    q, k, v = rand_qkv(seed, 96, 8)
+    out = sparse_mod.anchor_attention(q, k, v, cfg)
+    vmin = jnp.min(v, axis=0) - 1e-4
+    vmax = jnp.max(v, axis=0) + 1e-4
+    assert bool(jnp.all(out >= vmin[None, :])) and bool(jnp.all(out <= vmax[None, :]))

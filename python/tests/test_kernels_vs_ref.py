@@ -1,0 +1,120 @@
+"""Pallas kernels (interpret=True) vs the pure-jnp oracle in ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import anchor as anchor_mod
+from compile.kernels import flash as flash_mod
+from compile.kernels import ref
+from compile.kernels import sparse as sparse_mod
+from compile.kernels import stripe as stripe_mod
+
+
+def rand_qkv(seed, n, d):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    return (
+        jax.random.normal(kq, (n, d), jnp.float32),
+        jax.random.normal(kk, (n, d), jnp.float32),
+        jax.random.normal(kv, (n, d), jnp.float32),
+    )
+
+
+CFG = ref.AnchorCfg(block=16, theta=2.0, step=2, init_blocks=1)
+
+
+class TestFlash:
+    @pytest.mark.parametrize("n,d,block", [(64, 8, 16), (128, 16, 32), (64, 32, 64)])
+    def test_matches_ref(self, n, d, block):
+        q, k, v = rand_qkv(0, n, d)
+        got = flash_mod.flash_attention(q, k, v, block=block)
+        want = ref.full_attention(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_first_row_is_v0(self):
+        q, k, v = rand_qkv(1, 32, 8)
+        got = flash_mod.flash_attention(q, k, v, block=16)
+        np.testing.assert_allclose(got[0], v[0], rtol=1e-5, atol=1e-6)
+
+
+class TestAnchorState:
+    def test_matches_ref(self):
+        q, k, v = rand_qkv(2, 96, 8)
+        m, l, acc = anchor_mod.anchor_state(q, k, v, CFG)
+        m_r, l_r, acc_r = ref.anchor_state(q, k, v, CFG)
+        np.testing.assert_allclose(m, m_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(l, l_r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(acc, acc_r, rtol=1e-4, atol=1e-4)
+
+    def test_multi_init_blocks(self):
+        cfg = ref.AnchorCfg(block=16, theta=2.0, step=2, init_blocks=2)
+        q, k, v = rand_qkv(3, 128, 8)
+        m, l, acc = anchor_mod.anchor_state(q, k, v, cfg)
+        m_r, l_r, acc_r = ref.anchor_state(q, k, v, cfg)
+        np.testing.assert_allclose(m, m_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(acc, acc_r, rtol=1e-4, atol=1e-4)
+
+
+class TestStripeMask:
+    def test_matches_ref(self):
+        q, k, v = rand_qkv(4, 128, 8)
+        m_r, _, _ = ref.anchor_state(q, k, v, CFG)
+        q_pool, a_pool = stripe_mod.pool_inputs(q, m_r, CFG)
+        got = stripe_mod.stripe_mask(q_pool, a_pool, k, CFG)
+        want = ref.stripe_mask(q, k, m_r, CFG)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_without_anchor(self):
+        cfg = ref.AnchorCfg(block=16, theta=0.5, step=2, use_anchor=False)
+        q, k, v = rand_qkv(5, 128, 8)
+        m_r, _, _ = ref.anchor_state(q, k, v, cfg)
+        q_pool, a_pool = stripe_mod.pool_inputs(q, m_r, cfg)
+        got = stripe_mod.stripe_mask(q_pool, a_pool, k, cfg)
+        want = ref.stripe_mask(q, k, m_r, cfg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestSparse:
+    def test_pipeline_matches_ref(self):
+        q, k, v = rand_qkv(6, 128, 8)
+        got = sparse_mod.anchor_attention(q, k, v, CFG)
+        want, _ = ref.anchor_attention(q, k, v, CFG)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_infinite_theta_equals_full(self):
+        cfg = ref.AnchorCfg(block=16, theta=1e9, step=2)
+        q, k, v = rand_qkv(7, 96, 8)
+        got = sparse_mod.anchor_attention(q, k, v, cfg)
+        want = ref.full_attention(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_tiny_theta_equals_anchor_only(self):
+        cfg = ref.AnchorCfg(block=16, theta=-1e9, step=2)
+        q, k, v = rand_qkv(8, 96, 8)
+        got = sparse_mod.anchor_attention(q, k, v, cfg)
+        m, l, acc = ref.anchor_state(q, k, v, cfg)
+        want = acc / l[:, None]
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestRefInvariants:
+    def test_recall_of_full_coverage_is_one(self):
+        q, k, _ = rand_qkv(9, 64, 8)
+        cov = jnp.ones((64, 64), dtype=bool)
+        assert abs(float(ref.recall(q, k, cov)) - 1.0) < 1e-6
+
+    def test_anchor_coverage_recall_below_one(self):
+        q, k, v = rand_qkv(10, 128, 8)
+        _, stripes = ref.anchor_attention(q, k, v, CFG)
+        cov = ref.coverage_mask(128, stripes, CFG)
+        r = float(ref.recall(q, k, cov))
+        assert 0.0 < r <= 1.0 + 1e-6
+
+    def test_stripes_monotone_in_theta(self):
+        q, k, v = rand_qkv(11, 128, 8)
+        m, _, _ = ref.anchor_state(q, k, v, CFG)
+        lo = ref.stripe_mask(q, k, m, ref.AnchorCfg(block=16, theta=0.0, step=2))
+        hi = ref.stripe_mask(q, k, m, ref.AnchorCfg(block=16, theta=4.0, step=2))
+        assert bool(jnp.all(hi | ~lo))  # lo ⊆ hi

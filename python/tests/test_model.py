@@ -1,0 +1,121 @@
+"""L2 model: shapes, cache semantics, chunked-vs-monolithic consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as model_mod
+from compile.kernels import ref
+
+CFG = model_mod.ModelCfg(
+    vocab=64, d_model=32, n_layers=2, n_heads=4, n_kv_heads=2, d_head=8, d_ffn=64, max_seq=128
+)
+
+
+def make_params():
+    return model_mod.init_params(CFG, seed=1)
+
+
+class TestParams:
+    def test_spec_order_matches_init(self):
+        specs = model_mod.param_specs(CFG)
+        params = make_params()
+        assert len(specs) == len(params)
+        for (name, shape), p in zip(specs, params):
+            assert tuple(shape) == p.shape, name
+
+    def test_deterministic(self):
+        a = model_mod.init_params(CFG, seed=3)
+        b = model_mod.init_params(CFG, seed=3)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_norm_params_are_ones(self):
+        specs = model_mod.param_specs(CFG)
+        for (name, _), p in zip(specs, make_params()):
+            if name.endswith("norm"):
+                assert bool(jnp.all(p == 1.0))
+
+
+class TestStep:
+    def test_shapes(self):
+        params = make_params()
+        k, v = model_mod.empty_caches(CFG)
+        ids = jnp.arange(16, dtype=jnp.int32)
+        logits, k2, v2 = model_mod.step(params, ids, k, v, jnp.int32(0), CFG)
+        assert logits.shape == (16, CFG.vocab)
+        assert k2.shape == k.shape and v2.shape == v.shape
+
+    def test_cache_written_at_position(self):
+        params = make_params()
+        k, v = model_mod.empty_caches(CFG)
+        ids = jnp.arange(8, dtype=jnp.int32)
+        _, k2, _ = model_mod.step(params, ids, k, v, jnp.int32(16), CFG)
+        # Rows 16..24 must be non-zero; rows after must stay zero.
+        assert float(jnp.abs(k2[:, :, 16:24, :]).sum()) > 0
+        assert float(jnp.abs(k2[:, :, 24:, :]).sum()) == 0
+
+    def test_chunked_prefill_matches_monolithic(self):
+        """Prefill in two chunks == prefill in one chunk (KV-cache exactness)."""
+        params = make_params()
+        ids = jnp.array(np.random.RandomState(0).randint(0, CFG.vocab, 32), jnp.int32)
+
+        k, v = model_mod.empty_caches(CFG)
+        logits_all, _, _ = model_mod.step(params, ids, k, v, jnp.int32(0), CFG)
+
+        k, v = model_mod.empty_caches(CFG)
+        l1, k, v = model_mod.step(params, ids[:16], k, v, jnp.int32(0), CFG)
+        l2, k, v = model_mod.step(params, ids[16:], k, v, jnp.int32(16), CFG)
+        np.testing.assert_allclose(l1, logits_all[:16], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(l2, logits_all[16:], rtol=1e-4, atol=1e-4)
+
+    def test_decode_matches_prefill_tail(self):
+        """Token-by-token decode == monolithic prefill for the same tokens."""
+        params = make_params()
+        ids = jnp.array([3, 17, 42, 9], jnp.int32)
+        k, v = model_mod.empty_caches(CFG)
+        logits_all, _, _ = model_mod.step(params, ids, k, v, jnp.int32(0), CFG)
+
+        k, v = model_mod.empty_caches(CFG)
+        for t in range(4):
+            lt, k, v = model_mod.step(params, ids[t : t + 1], k, v, jnp.int32(t), CFG)
+            np.testing.assert_allclose(lt[0], logits_all[t], rtol=1e-4, atol=1e-4)
+
+    def test_causality(self):
+        """Changing a later token must not affect earlier logits."""
+        params = make_params()
+        k, v = model_mod.empty_caches(CFG)
+        a = jnp.array([1, 2, 3, 4, 5, 6, 7, 8], jnp.int32)
+        b = a.at[6].set(33)
+        la, _, _ = model_mod.step(params, a, k, v, jnp.int32(0), CFG)
+        lb, _, _ = model_mod.step(params, b, k, v, jnp.int32(0), CFG)
+        np.testing.assert_allclose(la[:6], lb[:6], rtol=1e-5, atol=1e-5)
+        assert float(jnp.abs(la[6] - lb[6]).max()) > 1e-4
+
+
+class TestAnchorPrefill:
+    def test_runs_and_matches_full_at_huge_theta(self):
+        """θ→∞ anchor prefill == full-attention prefill (whole prompt)."""
+        acfg = ref.AnchorCfg(block=8, theta=1e9, step=2, init_blocks=1)
+        params = make_params()
+        n = acfg.block * acfg.step * 2  # 32
+        ids = jnp.array(np.random.RandomState(1).randint(0, CFG.vocab, n), jnp.int32)
+
+        logits_anchor = model_mod.prefill_anchor(params, ids, CFG, acfg)
+        k, v = model_mod.empty_caches(CFG)
+        logits_full, _, _ = model_mod.step(params, ids, k, v, jnp.int32(0), CFG)
+        np.testing.assert_allclose(logits_anchor, logits_full, rtol=1e-3, atol=1e-3)
+
+    def test_finite_theta_close_to_full(self):
+        acfg = ref.AnchorCfg(block=8, theta=8.0, step=2, init_blocks=1)
+        params = make_params()
+        n = 32
+        ids = jnp.array(np.random.RandomState(2).randint(0, CFG.vocab, n), jnp.int32)
+        logits_anchor = model_mod.prefill_anchor(params, ids, CFG, acfg)
+        k, v = model_mod.empty_caches(CFG)
+        logits_full, _, _ = model_mod.step(params, ids, k, v, jnp.int32(0), CFG)
+        # Sparse prefill approximates dense: correlation of next-token
+        # distributions stays high.
+        pa = jax.nn.softmax(logits_anchor[-1])
+        pf = jax.nn.softmax(logits_full[-1])
+        assert float(jnp.abs(pa - pf).sum()) < 0.5, "TV distance too large"

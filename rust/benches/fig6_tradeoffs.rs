@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig6_tradeoffs` — regenerates the corresponding paper
+//! table/figure (see DESIGN.md §3). Set ANCHOR_BENCH_QUICK=1 for a fast
+//! reduced-scale pass.
+
+use anchor_attention::experiments::{fig6_tradeoffs, ExpScale};
+
+fn main() {
+    let quick = std::env::var("ANCHOR_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let scale = ExpScale::from_quick_flag(quick);
+    let seed = 42;
+    let t0 = std::time::Instant::now();
+    let _ = fig6_tradeoffs::run(scale, seed);
+    println!("\n[fig6_tradeoffs] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,229 @@
+//! Algorithm 2 — Difference-aware Stripe Sparsity Identification.
+//!
+//! Queries are average-pooled per block (`avgpool(Q, b_q)`), the anchor
+//! scores likewise (`avgpool(x_a, b_q)`), and `step` pooled query rows form
+//! one identification *group* sharing a stripe set (§3.4). For each group,
+//! pooled queries are dotted against every candidate key (global scope —
+//! everything before the group's local window and after the init block),
+//! and key `j` survives iff
+//!
+//! ```text
+//! avgpool(x_a)_i − qk_ij ≤ θ          (Eq. 2)
+//! ```
+//!
+//! for *any* pooled row `i` in the group (a key useful to any of the
+//! group's `b_q·step` queries is gathered for all of them — the paper's
+//! parallelism/accuracy trade).
+//!
+//! No sorting anywhere: selection is a single comparison per score, which
+//! is the paper's complexity win over top-k/top-cdf (§2.1.1).
+
+use super::{AnchorConfig, AnchorState, StripeSet};
+use crate::attention::{CostTally, HeadInput};
+use crate::tensor::ops::{avgpool_rows, avgpool_vec};
+use crate::tensor::{matmul_nt_scaled, Mat};
+use crate::util::threadpool::parallel_map;
+
+/// Run Alg. 2 against the cached anchor state.
+pub fn identify_stripes(
+    input: &HeadInput,
+    cfg: &AnchorConfig,
+    state: &AnchorState,
+) -> StripeSet {
+    let n = input.n();
+    let d = input.d();
+    let scale = input.scale();
+    let tile = cfg.tile;
+    let q_blocks = tile.q_blocks(n);
+    let groups = q_blocks.div_ceil(cfg.step);
+
+    // avgpool(Q, b_q) and avgpool(x_a, b_q): one pooled row per query block.
+    let q_pool = avgpool_rows(&input.q, tile.b_q);
+    let anchor_pool: Vec<f32> = if cfg.use_anchor {
+        avgpool_vec(&state.m, tile.b_q)
+    } else {
+        // Table 4 "Without Anchor": anchor is a zero tensor.
+        vec![0.0; q_blocks]
+    };
+
+    let per_group: Vec<(Vec<u32>, CostTally)> = parallel_map(groups, |g| {
+        let (cand_start, cand_end) = cfg.candidate_range(g, n);
+        if cand_start >= cand_end {
+            return (Vec::new(), CostTally::default());
+        }
+        let row_start = g * cfg.step;
+        let row_end = ((g + 1) * cfg.step).min(q_blocks);
+        let grows = row_end - row_start;
+        let qg = q_pool.rows_mat(row_start, grows);
+        let anchors = &anchor_pool[row_start..row_end];
+
+        let mut selected = Vec::new();
+        let mut cost = CostTally::default();
+        let mut s = Mat::zeros(grows, tile.b_kv);
+        let mut col0 = cand_start;
+        while col0 < cand_end {
+            let cols = (cand_end - col0).min(tile.b_kv);
+            let k_j = input.k.rows_mat(col0, cols);
+            if s.cols != cols {
+                s = Mat::zeros(grows, cols);
+            }
+            matmul_nt_scaled(&qg, &k_j, scale, &mut s);
+            cost.add(CostTally::ident_tile(grows, cols, d));
+            // Column survives if ANY pooled row in the group is within θ of
+            // its anchor.
+            for c in 0..cols {
+                let mut hit = false;
+                for r in 0..grows {
+                    if anchors[r] - s.at(r, c) <= cfg.theta {
+                        hit = true;
+                        break;
+                    }
+                }
+                if hit {
+                    selected.push((col0 + c) as u32);
+                }
+            }
+            col0 += cols;
+        }
+        (selected, cost)
+    });
+
+    let mut cost = CostTally::default();
+    let mut out_groups = Vec::with_capacity(groups);
+    for (sel, c) in per_group {
+        cost.add(c);
+        out_groups.push(sel);
+    }
+    StripeSet { step: cfg.step, groups: out_groups, cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::anchor::compute::anchor_pass;
+    use crate::attention::TileConfig;
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn cfg(theta: f32) -> AnchorConfig {
+        AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        }
+    }
+
+    #[test]
+    fn infinite_theta_selects_every_candidate() {
+        let h = rand_head(31, 128, 8);
+        let c = cfg(f32::INFINITY);
+        let (state, _) = anchor_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &state);
+        for (g, sel) in stripes.groups.iter().enumerate() {
+            let (start, end) = c.candidate_range(g, 128);
+            assert_eq!(sel.len(), end - start, "group {g}");
+            // Sorted and in-range.
+            assert!(sel.windows(2).all(|w| w[0] < w[1]));
+            assert!(sel.iter().all(|&x| (x as usize) >= start && (x as usize) < end));
+        }
+    }
+
+    #[test]
+    fn negative_infinite_theta_selects_nothing() {
+        let h = rand_head(32, 128, 8);
+        let c = cfg(f32::NEG_INFINITY);
+        let (state, _) = anchor_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &state);
+        assert_eq!(stripes.total(), 0);
+    }
+
+    #[test]
+    fn selection_matches_bruteforce_rule() {
+        let n = 128;
+        let d = 8;
+        let h = rand_head(33, n, d);
+        let c = cfg(1.0);
+        let (state, _) = anchor_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &state);
+
+        // Brute-force Eq. 2 on pooled matrices.
+        let q_pool = avgpool_rows(&h.q, 16);
+        let a_pool = avgpool_vec(&state.m, 16);
+        let mut s = Mat::zeros(q_pool.rows, n);
+        matmul_nt_scaled(&q_pool, &h.k, h.scale(), &mut s);
+
+        for g in 0..stripes.groups.len() {
+            let (start, end) = c.candidate_range(g, n);
+            let mut expect = Vec::new();
+            for col in start..end {
+                let mut hit = false;
+                for r in g * 2..((g + 1) * 2).min(q_pool.rows) {
+                    if a_pool[r] - s.at(r, col) <= 1.0 {
+                        hit = true;
+                    }
+                }
+                if hit {
+                    expect.push(col as u32);
+                }
+            }
+            assert_eq!(stripes.groups[g], expect, "group {g}");
+        }
+    }
+
+    #[test]
+    fn without_anchor_uses_zero_baseline() {
+        let n = 128;
+        let h = rand_head(34, n, 8);
+        let mut c = cfg(0.5);
+        c.use_anchor = false;
+        let (state, _) = anchor_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &state);
+
+        // Rule becomes: select iff qk >= -θ for any pooled row.
+        let q_pool = avgpool_rows(&h.q, 16);
+        let mut s = Mat::zeros(q_pool.rows, n);
+        matmul_nt_scaled(&q_pool, &h.k, h.scale(), &mut s);
+        for g in 0..stripes.groups.len() {
+            let (start, end) = c.candidate_range(g, n);
+            for col in start..end {
+                let mut hit = false;
+                for r in g * 2..((g + 1) * 2).min(q_pool.rows) {
+                    if -s.at(r, col) <= 0.5 {
+                        hit = true;
+                    }
+                }
+                assert_eq!(stripes.groups[g].contains(&(col as u32)), hit);
+            }
+        }
+    }
+
+    #[test]
+    fn early_groups_have_no_candidates() {
+        let h = rand_head(35, 64, 8);
+        let c = cfg(f32::INFINITY);
+        let (state, _) = anchor_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &state);
+        // Group 0: window starts at 0, so no candidate columns at all.
+        assert!(stripes.groups[0].is_empty());
+    }
+
+    #[test]
+    fn identification_cost_counted() {
+        let h = rand_head(36, 256, 8);
+        let c = cfg(0.0);
+        let (state, _) = anchor_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &state);
+        assert!(stripes.cost.ident_scores > 0);
+        assert!(stripes.cost.flops > 0);
+    }
+}

@@ -1,0 +1,287 @@
+//! **AnchorAttention** — the paper's contribution (§3, Algorithms 1–3).
+//!
+//! Pipeline:
+//!
+//! 1. [`compute::anchor_pass`] (*Pattern-based Anchor Computation*, Alg. 1)
+//!    — exact blocked attention over the initial block(s) and the causal
+//!    local window, caching online-softmax state `(M, L, Acc)` per row.
+//!    `M` is the **anchor**: a near-maximum of each row's logits, because
+//!    row maxima concentrate in those regions (paper Fig. 5).
+//! 2. [`identify::identify_stripes`] (*Difference-aware Stripe Sparsity
+//!    Identification*, Alg. 2) — pooled queries vs all remaining keys; a
+//!    key survives iff `avgpool(anchor) − qk ≤ θ`. No sorting; stripe
+//!    `(b_q·step, 1)` granularity.
+//! 3. [`sparse::sparse_pass`] (*Fine-Grained Sparse Computation*, Alg. 3)
+//!    — gathers the surviving discrete keys/values and **continues** the
+//!    online softmax from the cached `(M, L, Acc)`, so anchor-region work
+//!    is reused, not recomputed (paper §3.4).
+
+pub mod compute;
+pub mod identify;
+pub mod sparse;
+
+use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
+use crate::tensor::Mat;
+
+/// Hyperparameters of AnchorAttention. Paper defaults: `θ = 12`,
+/// `step = 16`, block size 128, one initial block.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AnchorConfig {
+    pub tile: TileConfig,
+    /// Difference threshold θ (Eq. 2): key `j` survives for pooled query
+    /// `i` iff `anchor_i − qk_ij ≤ θ`. Larger θ ⇒ more keys ⇒ higher
+    /// recall, lower sparsity (Table 4).
+    pub theta: f32,
+    /// Query blocks sharing one identification pass / stripe set (§3.4).
+    pub step: usize,
+    /// Number of initial key blocks always computed (the attention sink).
+    pub init_blocks: usize,
+    /// Ablation switch (Table 4 "Without Anchor"): when false the anchor
+    /// is a zero tensor, exactly as the paper implements it.
+    pub use_anchor: bool,
+}
+
+impl Default for AnchorConfig {
+    fn default() -> Self {
+        Self {
+            tile: TileConfig::default(),
+            theta: 12.0,
+            step: 16,
+            init_blocks: 1,
+            use_anchor: true,
+        }
+    }
+}
+
+impl AnchorConfig {
+    pub fn with_theta(theta: f32) -> Self {
+        Self { theta, ..Default::default() }
+    }
+
+    /// First column of the local window for query block `qb` (absolute key
+    /// position): Alg. 1 line 8, `⌊i/step⌋ · step · b_q`, group-aligned so
+    /// all `step` blocks of a group share a stripe set.
+    pub fn window_start(&self, qb: usize) -> usize {
+        (qb / self.step) * self.step * self.tile.b_q
+    }
+
+    /// Columns always covered by the anchor pass for query block `qb`:
+    /// `[0, init_cols) ∪ [window_start, causal_limit)`.
+    pub fn init_cols(&self, n: usize) -> usize {
+        (self.init_blocks * self.tile.b_kv).min(n)
+    }
+
+    /// Candidate range for identification for group `g`: keys in
+    /// `[init_cols, group_window_start)` (Alg. 2 line 7: everything before
+    /// the group's window that is not the initial region).
+    pub fn candidate_range(&self, g: usize, n: usize) -> (usize, usize) {
+        let start = self.init_cols(n);
+        let end = (g * self.step * self.tile.b_q).min(n);
+        (start, end.max(start))
+    }
+}
+
+/// Cached Alg. 1 state, reused by Alg. 3 (paper §3.4 "temporarily cache the
+/// intermediate results … and reuse them").
+#[derive(Clone, Debug)]
+pub struct AnchorState {
+    /// Per-row running max `M` — the anchor scores `x_a`.
+    pub m: Vec<f32>,
+    /// Per-row normalizer `L`.
+    pub l: Vec<f32>,
+    /// Unnormalized accumulator `Acc` `[N, d]`.
+    pub acc: Mat,
+    pub cost: CostTally,
+}
+
+/// Output of Alg. 2: for every query-block *group*, the sorted discrete key
+/// columns (stripes) to gather, plus identification cost.
+#[derive(Clone, Debug)]
+pub struct StripeSet {
+    pub step: usize,
+    pub groups: Vec<Vec<u32>>,
+    pub cost: CostTally,
+}
+
+impl StripeSet {
+    /// Total stripes across groups (for reporting).
+    pub fn total(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+}
+
+/// Full three-stage AnchorAttention over one head.
+pub fn anchor_attention(input: &HeadInput, cfg: &AnchorConfig) -> AttnOutput {
+    let (state, mut coverage) = compute::anchor_pass(input, cfg);
+    let stripes = identify::identify_stripes(input, cfg, &state);
+    let (out, sparse_cost) = sparse::sparse_pass(input, cfg, &state, &stripes, &mut coverage);
+
+    let mut cost = state.cost;
+    cost.add(stripes.cost);
+    cost.add(sparse_cost);
+    AttnOutput { out, coverage, cost }
+}
+
+/// Timing breakdown of the three stages (for Fig. 6b/6c style reporting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimings {
+    pub anchor_s: f64,
+    pub identify_s: f64,
+    pub sparse_s: f64,
+}
+
+impl PhaseTimings {
+    pub fn total_s(&self) -> f64 {
+        self.anchor_s + self.identify_s + self.sparse_s
+    }
+}
+
+/// As [`anchor_attention`] but also returns per-phase wallclock.
+pub fn anchor_attention_timed(
+    input: &HeadInput,
+    cfg: &AnchorConfig,
+) -> (AttnOutput, PhaseTimings) {
+    let t0 = std::time::Instant::now();
+    let (state, mut coverage) = compute::anchor_pass(input, cfg);
+    let t1 = std::time::Instant::now();
+    let stripes = identify::identify_stripes(input, cfg, &state);
+    let t2 = std::time::Instant::now();
+    let (out, sparse_cost) = sparse::sparse_pass(input, cfg, &state, &stripes, &mut coverage);
+    let t3 = std::time::Instant::now();
+
+    let mut cost = state.cost;
+    cost.add(stripes.cost);
+    cost.add(sparse_cost);
+    (
+        AttnOutput { out, coverage, cost },
+        PhaseTimings {
+            anchor_s: (t1 - t0).as_secs_f64(),
+            identify_s: (t2 - t1).as_secs_f64(),
+            sparse_s: (t3 - t2).as_secs_f64(),
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full::naive_attention;
+    use crate::attention::mask::Coverage;
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn small_cfg(theta: f32) -> AnchorConfig {
+        AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        }
+    }
+
+    #[test]
+    fn window_start_group_aligned() {
+        let cfg = AnchorConfig { step: 4, tile: TileConfig::new(128, 128), ..Default::default() };
+        assert_eq!(cfg.window_start(0), 0);
+        assert_eq!(cfg.window_start(3), 0);
+        assert_eq!(cfg.window_start(4), 4 * 128);
+        assert_eq!(cfg.window_start(7), 4 * 128);
+        assert_eq!(cfg.window_start(8), 8 * 128);
+    }
+
+    #[test]
+    fn candidate_range_excludes_init_and_window() {
+        let cfg = AnchorConfig {
+            step: 2,
+            tile: TileConfig::new(16, 16),
+            init_blocks: 1,
+            ..Default::default()
+        };
+        // Group 0's window starts at 0 -> empty candidates.
+        assert_eq!(cfg.candidate_range(0, 256), (16, 16));
+        // Group 2 windows from 64; candidates are [16, 64).
+        assert_eq!(cfg.candidate_range(2, 256), (16, 64));
+    }
+
+    #[test]
+    fn large_theta_converges_to_full_attention() {
+        // θ = ∞ selects every candidate stripe, so the output must equal
+        // dense attention exactly (all probability mass covered).
+        let h = rand_head(7, 128, 16);
+        let cfg = small_cfg(1e9);
+        let out = anchor_attention(&h, &cfg);
+        let expect = naive_attention(&h);
+        assert!(
+            out.out.max_abs_diff(&expect) < 1e-4,
+            "max diff {}",
+            out.out.max_abs_diff(&expect)
+        );
+        assert_eq!(out.coverage.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn tiny_theta_reduces_to_anchor_regions() {
+        let h = rand_head(8, 128, 16);
+        let cfg = small_cfg(-1e9);
+        let out = anchor_attention(&h, &cfg);
+        // Coverage should be exactly the anchor regions: init + window.
+        let mut expect_cov = Coverage::new(128, 16);
+        for qb in 0..8 {
+            expect_cov.set_range(qb, 0, cfg.init_cols(128));
+            let ws = cfg.window_start(qb);
+            expect_cov.set_range(qb, ws, (qb + 1) * 16);
+        }
+        assert_eq!(out.coverage.total_covered(), expect_cov.total_covered());
+        assert!(out.coverage.sparsity() > 0.0);
+    }
+
+    #[test]
+    fn sparsity_monotone_in_theta() {
+        let h = rand_head(9, 256, 16);
+        let mut last = -1.0f64;
+        for theta in [-5.0, 0.0, 5.0, 1e9] {
+            let out = anchor_attention(&h, &small_cfg(theta));
+            let s = out.coverage.sparsity();
+            assert!(s <= last + 1e-12 || last < 0.0, "sparsity not decreasing: {last} -> {s}");
+            last = s;
+        }
+    }
+
+    #[test]
+    fn output_rows_are_convex_combinations() {
+        // Every output row of (sparse) softmax attention lies in the convex
+        // hull of V rows => bounded by min/max of V per column.
+        let h = rand_head(10, 96, 8);
+        let out = anchor_attention(&h, &small_cfg(2.0));
+        for c in 0..8 {
+            let (mut vmin, mut vmax) = (f32::INFINITY, f32::NEG_INFINITY);
+            for r in 0..96 {
+                vmin = vmin.min(h.v.at(r, c));
+                vmax = vmax.max(h.v.at(r, c));
+            }
+            for r in 0..96 {
+                let x = out.out.at(r, c);
+                assert!(x >= vmin - 1e-4 && x <= vmax + 1e-4, "row {r} col {c}: {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn timed_variant_matches_untimed() {
+        let h = rand_head(11, 64, 8);
+        let cfg = small_cfg(3.0);
+        let a = anchor_attention(&h, &cfg);
+        let (b, t) = anchor_attention_timed(&h, &cfg);
+        assert!(a.out.max_abs_diff(&b.out) < 1e-6);
+        assert!(t.total_s() > 0.0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Algorithm 3 — Fine-Grained Sparse Computation.
+//!
+//! For every query block, resume the online softmax from the cached Alg. 1
+//! state `(M, L, Acc)` and fold in the *discrete* key/value columns of the
+//! block's group stripe set (Eq. 4, `load_discrete`). Gathers happen in
+//! `b_kv`-sized chunks so the inner matmul keeps dense-tile shape — the
+//! paper's point (3): discrete loading preserves full hardware parallelism.
+
+use super::{AnchorConfig, AnchorState, StripeSet};
+use crate::attention::full::BlockState;
+use crate::attention::mask::Coverage;
+use crate::attention::{CostTally, HeadInput};
+use crate::tensor::{matmul_nt_scaled, Mat};
+use crate::util::threadpool::parallel_map;
+
+/// Run Alg. 3. Updates `coverage` with the gathered stripes and returns the
+/// final attention output plus the sparse-phase cost.
+pub fn sparse_pass(
+    input: &HeadInput,
+    cfg: &AnchorConfig,
+    state: &AnchorState,
+    stripes: &StripeSet,
+    coverage: &mut Coverage,
+) -> (Mat, CostTally) {
+    let n = input.n();
+    let d = input.d();
+    let scale = input.scale();
+    let tile = cfg.tile;
+    let q_blocks = tile.q_blocks(n);
+
+    // Parallelize over *groups*: all `step` query blocks of a group share
+    // one stripe set, so K'/V' are gathered **once per group** and reused
+    // across the group's blocks (§3.4's caching — gathering per query
+    // block would redo the same discrete loads `step` times; see
+    // EXPERIMENTS.md §Perf for the measured effect).
+    let groups = q_blocks.div_ceil(cfg.step);
+    let results = parallel_map(groups, |g| {
+        let idx = &stripes.groups[g];
+        let qb_start = g * cfg.step;
+        let qb_end = ((g + 1) * cfg.step).min(q_blocks);
+
+        // Gather the group's discrete K/V columns once, chunked to tile
+        // width so the inner matmuls stay dense.
+        let mut gathered: Vec<(Mat, Mat)> = Vec::with_capacity(idx.len().div_ceil(tile.b_kv));
+        let mut off = 0;
+        while off < idx.len() {
+            let chunk = &idx[off..(off + tile.b_kv).min(idx.len())];
+            gathered.push((input.k.gather_rows(chunk), input.v.gather_rows(chunk)));
+            off += chunk.len();
+        }
+
+        let mut group_out = Vec::with_capacity((qb_end - qb_start) * tile.b_q * d);
+        let mut cost = CostTally::default();
+        let mut s = Mat::zeros(tile.b_q, tile.b_kv);
+        for qb in qb_start..qb_end {
+            let row0 = qb * tile.b_q;
+            let rows = (n - row0).min(tile.b_q);
+            let q_i = input.q.rows_mat(row0, rows);
+
+            // Resume from the cached anchor state (§3.4 reuse).
+            let mut st = BlockState {
+                m: state.m[row0..row0 + rows].to_vec(),
+                l: state.l[row0..row0 + rows].to_vec(),
+                acc: Mat::from_vec(
+                    rows,
+                    d,
+                    state.acc.data[row0 * d..(row0 + rows) * d].to_vec(),
+                ),
+            };
+            // All stripe columns precede the group's window start <= row0,
+            // so no causal masking is needed inside the gathered tiles.
+            for (k_g, v_g) in &gathered {
+                if s.cols != k_g.rows || s.rows != rows {
+                    s = Mat::zeros(rows, k_g.rows);
+                }
+                matmul_nt_scaled(&q_i, k_g, scale, &mut s);
+                st.fold_tile(&mut s, v_g);
+                cost.add(CostTally::attn_tile(rows, k_g.rows, d));
+            }
+            let base = group_out.len();
+            group_out.resize(base + rows * d, 0.0f32);
+            st.write_output(&mut group_out[base..], d);
+        }
+        (group_out, cost)
+    });
+
+    let mut out = Mat::zeros(n, d);
+    let mut cost = CostTally::default();
+    for (g, (rows_data, c)) in results.into_iter().enumerate() {
+        let row0 = g * cfg.step * tile.b_q;
+        out.data[row0 * d..row0 * d + rows_data.len()].copy_from_slice(&rows_data);
+        cost.add(c);
+    }
+    for qb in 0..q_blocks {
+        coverage.set_indices(qb, &stripes.groups[qb / cfg.step]);
+    }
+    (out, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::anchor::compute::anchor_pass;
+    use crate::attention::anchor::identify::identify_stripes;
+    use crate::attention::full::naive_attention;
+    use crate::attention::TileConfig;
+    use crate::tensor::ops::{causal_mask_inplace, softmax_rows};
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn cfg(theta: f32) -> AnchorConfig {
+        AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        }
+    }
+
+    /// With θ = ∞, every candidate is gathered, so the result is exact.
+    #[test]
+    fn full_stripe_set_equals_dense() {
+        let h = rand_head(41, 160, 8);
+        let c = cfg(f32::INFINITY);
+        let (state, mut cov) = anchor_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &state);
+        let (out, _) = sparse_pass(&h, &c, &state, &stripes, &mut cov);
+        let expect = naive_attention(&h);
+        assert!(out.max_abs_diff(&expect) < 1e-4);
+    }
+
+    /// Sparse output must equal softmax restricted to the covered set —
+    /// the defining property of masked attention with exact arithmetic.
+    #[test]
+    fn output_equals_coverage_masked_softmax() {
+        let n = 128;
+        let d = 8;
+        let h = rand_head(42, n, d);
+        let c = cfg(2.0);
+        let (state, mut cov) = anchor_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &state);
+        let (out, _) = sparse_pass(&h, &c, &state, &stripes, &mut cov);
+
+        let mut s = Mat::zeros(n, n);
+        matmul_nt_scaled(&h.q, &h.k, h.scale(), &mut s);
+        causal_mask_inplace(&mut s, 0, 0);
+        for r in 0..n {
+            let qb = r / 16;
+            for col in 0..n {
+                if !cov.covered(qb, col) {
+                    s.set(r, col, f32::NEG_INFINITY);
+                }
+            }
+        }
+        softmax_rows(&mut s);
+        let mut expect = Mat::zeros(n, d);
+        crate::tensor::matmul_nn_acc(&s, &h.v, &mut expect);
+        assert!(
+            out.max_abs_diff(&expect) < 1e-4,
+            "max diff {}",
+            out.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn empty_stripes_reduce_to_anchor_output() {
+        let h = rand_head(43, 96, 8);
+        let c = cfg(f32::NEG_INFINITY);
+        let (state, mut cov) = anchor_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &state);
+        assert_eq!(stripes.total(), 0);
+        let (out, cost) = sparse_pass(&h, &c, &state, &stripes, &mut cov);
+        assert_eq!(cost.flops, 0, "no gathered tiles -> no sparse flops");
+        // Output = normalized anchor state.
+        for r in 0..96 {
+            let inv = 1.0 / state.l[r];
+            for col in 0..8 {
+                assert!((out.at(r, col) - state.acc.at(r, col) * inv).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn coverage_includes_gathered_stripes() {
+        let h = rand_head(44, 128, 8);
+        let c = cfg(5.0);
+        let (state, mut cov) = anchor_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &state);
+        let before = cov.total_covered();
+        let (_, _) = sparse_pass(&h, &c, &state, &stripes, &mut cov);
+        // Each gathered stripe appears in the coverage of each block in its
+        // group (cov only counts causal ones).
+        assert!(cov.total_covered() >= before);
+        for (g, sel) in stripes.groups.iter().enumerate() {
+            for qb in (g * 2)..((g + 1) * 2).min(cov.q_blocks()) {
+                for &col in sel {
+                    assert!(cov.covered(qb, col as usize), "g={g} qb={qb} col={col}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_chunking_invariant_to_bkv() {
+        // Same θ, different kv tile width: outputs must match (chunking is
+        // a pure implementation detail of the online softmax).
+        let h = rand_head(45, 128, 8);
+        let mut c1 = cfg(3.0);
+        c1.tile = TileConfig::new(16, 8);
+        c1.init_blocks = 8; // init region = 64 columns
+        let mut c2 = cfg(3.0);
+        c2.tile = TileConfig::new(16, 64);
+        c2.init_blocks = 1; // init region = 64 columns
+        let o1 = crate::attention::anchor::anchor_attention(&h, &c1);
+        let o2 = crate::attention::anchor::anchor_attention(&h, &c2);
+        assert!(o1.out.max_abs_diff(&o2.out) < 1e-4);
+    }
+}

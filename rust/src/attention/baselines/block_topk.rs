@@ -1,0 +1,125 @@
+//! Block-granular top-k baseline — the analysis comparator of Table 1
+//! (block (128,128) top-k=256 vs stripe (128,1) top-k=16384) and §2.1.1's
+//! "static k" discussion.
+
+use super::block_sparse_attention;
+use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
+use crate::tensor::ops::avgpool_rows;
+use crate::tensor::{matmul_nt_scaled, Mat};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockTopKConfig {
+    pub tile: TileConfig,
+    /// Key blocks kept per query block (Table 1 uses k=256 at 128k; scale
+    /// proportionally at shorter lengths).
+    pub k: usize,
+    /// Always include the diagonal block (local) and block 0 (sink) — set
+    /// false for the "pure top-k" analysis variant.
+    pub force_sink_local: bool,
+}
+
+impl Default for BlockTopKConfig {
+    fn default() -> Self {
+        Self { tile: TileConfig::default(), k: 256, force_sink_local: true }
+    }
+}
+
+/// Per-query-block top-k key blocks by pooled block score.
+pub fn select_topk_blocks(input: &HeadInput, cfg: &BlockTopKConfig) -> (Vec<Vec<u32>>, CostTally) {
+    let n = input.n();
+    let d = input.d();
+    let scale = input.scale();
+    let tile = cfg.tile;
+    let q_blocks = tile.q_blocks(n);
+    let kv_blocks = tile.kv_blocks(n);
+
+    let q_pool = avgpool_rows(&input.q, tile.b_q);
+    let k_pool = avgpool_rows(&input.k, tile.b_kv);
+    let mut s = Mat::zeros(q_blocks, kv_blocks);
+    matmul_nt_scaled(&q_pool, &k_pool, scale, &mut s);
+    let cost = CostTally::ident_tile(q_blocks, kv_blocks, d);
+
+    let mut sets = Vec::with_capacity(q_blocks);
+    for qb in 0..q_blocks {
+        let visible = kv_blocks.min(((qb + 1) * tile.b_q).div_ceil(tile.b_kv));
+        let row = &s.row(qb)[..visible];
+        let mut order: Vec<u32> = (0..visible as u32).collect();
+        order.sort_unstable_by(|&a, &b| row[b as usize].partial_cmp(&row[a as usize]).unwrap());
+        order.truncate(cfg.k.min(visible));
+        if cfg.force_sink_local {
+            let diag = (visible - 1) as u32;
+            if !order.contains(&0) {
+                order.push(0);
+            }
+            if !order.contains(&diag) {
+                order.push(diag);
+            }
+        }
+        order.sort_unstable();
+        sets.push(order);
+    }
+    (sets, cost)
+}
+
+pub fn block_topk_attention(input: &HeadInput, cfg: &BlockTopKConfig) -> AttnOutput {
+    let (sets, est_cost) = select_topk_blocks(input, cfg);
+    let mut out = block_sparse_attention(input, cfg.tile, &sets);
+    out.cost.add(est_cost);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full::naive_attention;
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn cfg(k: usize, b: usize) -> BlockTopKConfig {
+        BlockTopKConfig { tile: TileConfig::new(b, b), k, force_sink_local: true }
+    }
+
+    #[test]
+    fn k_covering_all_equals_dense() {
+        let h = rand_head(91, 128, 8);
+        let out = block_topk_attention(&h, &cfg(8, 16));
+        let expect = naive_attention(&h);
+        assert!(out.out.max_abs_diff(&expect) < 1e-4);
+    }
+
+    #[test]
+    fn exactly_k_blocks_selected() {
+        let h = rand_head(92, 512, 8);
+        let c = BlockTopKConfig { tile: TileConfig::new(16, 16), k: 3, force_sink_local: false };
+        let (sets, _) = select_topk_blocks(&h, &c);
+        for (qb, set) in sets.iter().enumerate() {
+            assert_eq!(set.len(), 3.min(qb + 1), "qb {qb}");
+        }
+    }
+
+    #[test]
+    fn sink_and_local_forced() {
+        let h = rand_head(93, 512, 8);
+        let (sets, _) = select_topk_blocks(&h, &cfg(2, 16));
+        for (qb, set) in sets.iter().enumerate() {
+            assert!(set.contains(&0), "qb {qb} missing sink");
+            assert!(set.contains(&(qb as u32)), "qb {qb} missing diagonal");
+        }
+    }
+
+    #[test]
+    fn sparsity_grows_as_k_shrinks() {
+        let h = rand_head(94, 512, 8);
+        let s_small = block_topk_attention(&h, &cfg(2, 16)).coverage.sparsity();
+        let s_large = block_topk_attention(&h, &cfg(16, 16)).coverage.sparsity();
+        assert!(s_small > s_large);
+    }
+}

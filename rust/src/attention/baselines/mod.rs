@@ -1,0 +1,220 @@
+//! Baseline sparse-attention methods the paper evaluates against
+//! (Table 2/3, Fig. 6/7): StreamingLLM, MInference's Vertical_Slash,
+//! FlexPrefill, and a block-top-k analysis baseline (Table 1).
+//!
+//! All baselines produce a [`Coverage`] and compute *exact* softmax
+//! attention restricted to that coverage, via one of two shared kernels:
+//!
+//! * [`block_sparse_attention`] — contiguous key-block tiles (the fast path
+//!   block-sparse methods get on real hardware);
+//! * [`coverage_attention`] — gather-based, for methods with discrete
+//!   column patterns (Vertical_Slash's verticals).
+
+pub mod block_topk;
+pub mod flexprefill;
+pub mod streaming;
+pub mod vertical_slash;
+
+use crate::attention::full::{mask_tile_causal, BlockState};
+use crate::attention::mask::Coverage;
+use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
+use crate::tensor::{matmul_nt_scaled, Mat};
+use crate::util::threadpool::parallel_map;
+
+/// Exact attention over per-query-block *key block* lists (contiguous
+/// tiles). `block_sets[qb]` holds sorted kv-block indices; blocks past the
+/// causal limit are clipped, diagonal blocks are causally masked.
+pub fn block_sparse_attention(
+    input: &HeadInput,
+    tile: TileConfig,
+    block_sets: &[Vec<u32>],
+) -> AttnOutput {
+    let n = input.n();
+    let d = input.d();
+    let scale = input.scale();
+    let q_blocks = tile.q_blocks(n);
+    assert_eq!(block_sets.len(), q_blocks);
+
+    let results = parallel_map(q_blocks, |qb| {
+        let row0 = qb * tile.b_q;
+        let rows = (n - row0).min(tile.b_q);
+        let limit = row0 + rows;
+        let q_i = input.q.rows_mat(row0, rows);
+        let mut st = BlockState::new(rows, d);
+        let mut cost = CostTally::default();
+        let mut s = Mat::zeros(rows, tile.b_kv);
+        for &jb in &block_sets[qb] {
+            let col0 = jb as usize * tile.b_kv;
+            if col0 >= limit {
+                continue;
+            }
+            let cols = (limit - col0).min(tile.b_kv);
+            let k_j = input.k.rows_mat(col0, cols);
+            let v_j = input.v.rows_mat(col0, cols);
+            if s.cols != cols || s.rows != rows {
+                s = Mat::zeros(rows, cols);
+            }
+            matmul_nt_scaled(&q_i, &k_j, scale, &mut s);
+            if col0 + cols > row0 {
+                mask_tile_causal(&mut s, row0, col0);
+            }
+            st.fold_tile(&mut s, &v_j);
+            cost.add(CostTally::attn_tile(rows, cols, d));
+        }
+        let mut out_rows = vec![0.0f32; rows * d];
+        st.write_output(&mut out_rows, d);
+        (out_rows, cost)
+    });
+
+    let mut out = Mat::zeros(n, d);
+    let mut cost = CostTally::default();
+    let mut coverage = Coverage::new(n, tile.b_q);
+    for (qb, (rows_data, c)) in results.into_iter().enumerate() {
+        let row0 = qb * tile.b_q;
+        out.data[row0 * d..row0 * d + rows_data.len()].copy_from_slice(&rows_data);
+        cost.add(c);
+        let limit = ((qb + 1) * tile.b_q).min(n);
+        for &jb in &block_sets[qb] {
+            let col0 = jb as usize * tile.b_kv;
+            if col0 < limit {
+                coverage.set_range(qb, col0, (col0 + tile.b_kv).min(limit));
+            }
+        }
+    }
+    AttnOutput { out, coverage, cost }
+}
+
+/// Exact attention over an arbitrary [`Coverage`] (gather path). Columns
+/// beyond each row's causal limit are masked per-row inside the tile.
+pub fn coverage_attention(input: &HeadInput, tile: TileConfig, coverage: &Coverage) -> AttnOutput {
+    let n = input.n();
+    let d = input.d();
+    let scale = input.scale();
+    let q_blocks = tile.q_blocks(n);
+    assert_eq!(coverage.n, n);
+    assert_eq!(coverage.b_q, tile.b_q);
+
+    let results = parallel_map(q_blocks, |qb| {
+        let row0 = qb * tile.b_q;
+        let rows = (n - row0).min(tile.b_q);
+        let limit = row0 + rows;
+        let q_i = input.q.rows_mat(row0, rows);
+        let mut st = BlockState::new(rows, d);
+        let mut cost = CostTally::default();
+
+        let cols: Vec<u32> =
+            coverage.columns(qb).into_iter().filter(|&c| (c as usize) < limit).collect();
+        let mut s = Mat::zeros(rows, tile.b_kv.min(cols.len().max(1)));
+        let mut off = 0;
+        while off < cols.len() {
+            let chunk = &cols[off..(off + tile.b_kv).min(cols.len())];
+            let k_g = input.k.gather_rows(chunk);
+            let v_g = input.v.gather_rows(chunk);
+            if s.cols != chunk.len() || s.rows != rows {
+                s = Mat::zeros(rows, chunk.len());
+            }
+            matmul_nt_scaled(&q_i, &k_g, scale, &mut s);
+            // Per-row causal mask against absolute column ids.
+            for r in 0..rows {
+                let abs_row = row0 + r;
+                let srow = s.row_mut(r);
+                for (ci, &col) in chunk.iter().enumerate() {
+                    if col as usize > abs_row {
+                        srow[ci] = f32::NEG_INFINITY;
+                    }
+                }
+            }
+            st.fold_tile(&mut s, &v_g);
+            cost.add(CostTally::attn_tile(rows, chunk.len(), d));
+            off += chunk.len();
+        }
+        let mut out_rows = vec![0.0f32; rows * d];
+        st.write_output(&mut out_rows, d);
+        (out_rows, cost)
+    });
+
+    let mut out = Mat::zeros(n, d);
+    let mut cost = CostTally::default();
+    for (qb, (rows_data, c)) in results.into_iter().enumerate() {
+        let row0 = qb * tile.b_q;
+        out.data[row0 * d..row0 * d + rows_data.len()].copy_from_slice(&rows_data);
+        cost.add(c);
+    }
+    AttnOutput { out, coverage: coverage.clone(), cost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full::naive_attention;
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    #[test]
+    fn all_blocks_equals_dense() {
+        let h = rand_head(51, 128, 8);
+        let tile = TileConfig::new(16, 16);
+        let sets: Vec<Vec<u32>> = (0..8).map(|qb| (0..=qb as u32).collect()).collect();
+        let out = block_sparse_attention(&h, tile, &sets);
+        let expect = naive_attention(&h);
+        assert!(out.out.max_abs_diff(&expect) < 1e-4);
+        assert_eq!(out.coverage.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn coverage_attention_full_equals_dense() {
+        let h = rand_head(52, 96, 8);
+        let tile = TileConfig::new(32, 32);
+        let cov = Coverage::full(96, 32);
+        let out = coverage_attention(&h, tile, &cov);
+        let expect = naive_attention(&h);
+        assert!(out.out.max_abs_diff(&expect) < 1e-4);
+    }
+
+    #[test]
+    fn block_and_gather_paths_agree() {
+        let h = rand_head(53, 128, 8);
+        let tile = TileConfig::new(16, 16);
+        let sets: Vec<Vec<u32>> = (0..8)
+            .map(|qb| {
+                let mut v: Vec<u32> = vec![0, qb as u32];
+                v.dedup();
+                v
+            })
+            .collect();
+        let a = block_sparse_attention(&h, tile, &sets);
+        let b = coverage_attention(&h, tile, &a.coverage);
+        assert!(a.out.max_abs_diff(&b.out) < 1e-4);
+        assert_eq!(a.coverage.total_covered(), b.coverage.total_covered());
+    }
+
+    #[test]
+    fn acausal_blocks_are_clipped() {
+        let h = rand_head(54, 64, 8);
+        let tile = TileConfig::new(16, 16);
+        // Request future blocks for qb 0 — should be ignored gracefully.
+        let sets: Vec<Vec<u32>> = vec![vec![0, 3], vec![0, 1], vec![0, 1, 2], vec![0, 1, 2, 3]];
+        let out = block_sparse_attention(&h, tile, &sets);
+        assert!(out.coverage.covered(0, 0));
+        assert!(!out.coverage.covered(0, 48));
+    }
+
+    #[test]
+    fn diagonal_only_first_row_is_v0() {
+        let h = rand_head(55, 64, 8);
+        let tile = TileConfig::new(16, 16);
+        let sets: Vec<Vec<u32>> = (0..4).map(|qb| vec![qb as u32]).collect();
+        let out = block_sparse_attention(&h, tile, &sets);
+        for c in 0..8 {
+            assert!((out.out.at(0, c) - h.v.at(0, c)).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! StreamingLLM baseline (Xiao et al., 2024): keep only the initial
+//! "attention sink" tokens and a rolling local window. Static pattern —
+//! fast, but misses mid-context information (the failure mode Table 3 and
+//! Fig. 7 show at long lengths).
+
+use super::block_sparse_attention;
+use crate::attention::{AttnOutput, HeadInput, TileConfig};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StreamingConfig {
+    pub tile: TileConfig,
+    /// Tokens kept at the start of the sequence (paper setup: 1024).
+    pub global_tokens: usize,
+    /// Rolling local window in tokens (paper setup: 8192 long-context,
+    /// 1024 LongBench).
+    pub local_tokens: usize,
+}
+
+impl Default for StreamingConfig {
+    fn default() -> Self {
+        Self { tile: TileConfig::default(), global_tokens: 1024, local_tokens: 8192 }
+    }
+}
+
+impl StreamingConfig {
+    pub fn new(global_tokens: usize, local_tokens: usize) -> Self {
+        Self { tile: TileConfig::default(), global_tokens, local_tokens }
+    }
+}
+
+/// Per-query-block key-block list for the streaming pattern.
+pub fn streaming_blocks(cfg: &StreamingConfig, n: usize) -> Vec<Vec<u32>> {
+    let tile = cfg.tile;
+    let q_blocks = tile.q_blocks(n);
+    let g_blocks = cfg.global_tokens.div_ceil(tile.b_kv);
+    let l_blocks = cfg.local_tokens.div_ceil(tile.b_kv).max(1);
+    (0..q_blocks)
+        .map(|qb| {
+            // Last kv block overlapping this q block (block-level causal).
+            let diag = (((qb + 1) * tile.b_q - 1) / tile.b_kv).min(tile.kv_blocks(n) - 1);
+            let local_start = (diag + 1).saturating_sub(l_blocks);
+            let mut set: Vec<u32> = (0..g_blocks.min(diag + 1) as u32).collect();
+            for jb in local_start..=diag {
+                if jb >= g_blocks {
+                    set.push(jb as u32);
+                }
+            }
+            set
+        })
+        .collect()
+}
+
+pub fn streaming_attention(input: &HeadInput, cfg: &StreamingConfig) -> AttnOutput {
+    let sets = streaming_blocks(cfg, input.n());
+    block_sparse_attention(input, cfg.tile, &sets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full::naive_attention;
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn cfg(global: usize, local: usize, b: usize) -> StreamingConfig {
+        StreamingConfig { tile: TileConfig::new(b, b), global_tokens: global, local_tokens: local }
+    }
+
+    #[test]
+    fn window_covering_everything_equals_dense() {
+        let h = rand_head(61, 128, 8);
+        let c = cfg(16, 128, 16);
+        let out = streaming_attention(&h, &c);
+        let expect = naive_attention(&h);
+        assert!(out.out.max_abs_diff(&expect) < 1e-4);
+    }
+
+    #[test]
+    fn pattern_is_sink_plus_window() {
+        let c = cfg(16, 32, 16);
+        let sets = streaming_blocks(&c, 160); // 10 blocks
+        // q block 9 (rows 144..160): sink block 0 + local window blocks 8,9.
+        assert_eq!(sets[9], vec![0, 8, 9]);
+        // q block 1: diag=1, window covers 0..=1, sink = 0 -> {0, 1}.
+        assert_eq!(sets[1], vec![0, 1]);
+    }
+
+    #[test]
+    fn mid_context_not_covered() {
+        let h = rand_head(62, 256, 8);
+        let c = cfg(16, 32, 16);
+        let out = streaming_attention(&h, &c);
+        // Key block 4 (cols 64..80) invisible to q block 15.
+        assert!(!out.coverage.covered(15, 70));
+        assert!(out.coverage.covered(15, 0));
+        assert!(out.coverage.covered(15, 255));
+        assert!(out.coverage.sparsity() > 0.4);
+    }
+
+    #[test]
+    fn no_duplicate_blocks_when_window_meets_sink() {
+        let c = cfg(32, 64, 16);
+        let sets = streaming_blocks(&c, 128);
+        for set in &sets {
+            let mut s = set.clone();
+            s.dedup();
+            assert_eq!(&s, set, "sorted, deduped");
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Vertical_Slash baseline (MInference, Jiang et al. 2024): use the last
+//! few queries to score every key (vertical) and every diagonal (slash),
+//! then keep a fixed token budget of the best verticals and slashes.
+//! The pattern is *estimated once from local information* — the precise
+//! weakness AnchorAttention's global identification addresses (paper §1).
+
+use super::coverage_attention;
+use crate::attention::mask::Coverage;
+use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
+use crate::tensor::{matmul_nt_scaled, Mat};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VerticalSlashConfig {
+    pub tile: TileConfig,
+    /// Token budget for vertical columns (paper setup: 1024).
+    pub vertical_tokens: usize,
+    /// Token budget for slash diagonals (paper setup: 8192 long-context).
+    pub slash_tokens: usize,
+    /// How many trailing queries estimate the pattern (MInference uses 64).
+    pub last_q: usize,
+}
+
+impl Default for VerticalSlashConfig {
+    fn default() -> Self {
+        Self {
+            tile: TileConfig::default(),
+            vertical_tokens: 1024,
+            slash_tokens: 8192,
+            last_q: 64,
+        }
+    }
+}
+
+/// The estimated pattern: selected vertical columns and slash offsets
+/// (`offset = row − col`, 0 = main diagonal).
+#[derive(Clone, Debug)]
+pub struct VsPattern {
+    pub verticals: Vec<u32>,
+    pub slashes: Vec<u32>,
+    pub cost: CostTally,
+}
+
+/// Estimate the vertical/slash pattern from the last `last_q` queries.
+pub fn estimate_pattern(input: &HeadInput, cfg: &VerticalSlashConfig) -> VsPattern {
+    let n = input.n();
+    let d = input.d();
+    let scale = input.scale();
+    let lq = cfg.last_q.min(n);
+    let row0 = n - lq;
+
+    // Scores of the trailing queries against every key (all causally
+    // visible for the last rows except the triangular corner).
+    let q_tail = input.q.rows_mat(row0, lq);
+    let mut s = Mat::zeros(lq, n);
+    matmul_nt_scaled(&q_tail, &input.k, scale, &mut s);
+    crate::tensor::ops::causal_mask_inplace(&mut s, row0, 0);
+    crate::tensor::ops::softmax_rows(&mut s);
+    let cost = CostTally::ident_tile(lq, n, d);
+
+    // Vertical score: mean attention probability per column.
+    let mut vert = vec![0.0f32; n];
+    for r in 0..lq {
+        for (c, &p) in s.row(r).iter().enumerate() {
+            vert[c] += p;
+        }
+    }
+    // Slash score: mean along diagonals (offset = abs_row - col >= 0).
+    let mut slash = vec![0.0f32; n];
+    for r in 0..lq {
+        let abs_row = row0 + r;
+        for (c, &p) in s.row(r).iter().enumerate() {
+            if c <= abs_row {
+                slash[abs_row - c] += p;
+            }
+        }
+    }
+
+    let verticals = top_indices(&vert, cfg.vertical_tokens.min(n));
+    let slashes = top_indices(&slash, cfg.slash_tokens.min(n));
+    VsPattern { verticals, slashes, cost }
+}
+
+/// Indices of the `k` largest scores, ascending order.
+fn top_indices(scores: &[f32], k: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    if k < scores.len() {
+        idx.select_nth_unstable_by(k, |&a, &b| {
+            scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable();
+    idx
+}
+
+/// Materialize the pattern as coverage: verticals cover whole columns;
+/// a slash with offset `o` covers column `row − o` for every row, i.e. per
+/// query block the diagonal band `[row0 − o, row0 + rows − 1 − o]`.
+pub fn pattern_coverage(pattern: &VsPattern, n: usize, tile: TileConfig) -> Coverage {
+    let mut cov = Coverage::new(n, tile.b_q);
+    let q_blocks = tile.q_blocks(n);
+    for qb in 0..q_blocks {
+        let row0 = qb * tile.b_q;
+        let rows = (n - row0).min(tile.b_q);
+        cov.set_indices(qb, &pattern.verticals);
+        for &o in &pattern.slashes {
+            let o = o as usize;
+            let lo = row0.saturating_sub(o);
+            let hi = (row0 + rows).saturating_sub(o); // exclusive
+            cov.set_range(qb, lo, hi);
+        }
+    }
+    cov
+}
+
+pub fn vertical_slash_attention(input: &HeadInput, cfg: &VerticalSlashConfig) -> AttnOutput {
+    let pattern = estimate_pattern(input, cfg);
+    let cov = pattern_coverage(&pattern, input.n(), cfg.tile);
+    let mut out = coverage_attention(input, cfg.tile, &cov);
+    out.cost.add(pattern.cost);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full::naive_attention;
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn cfg(v: usize, s: usize, b: usize) -> VerticalSlashConfig {
+        VerticalSlashConfig {
+            tile: TileConfig::new(b, b),
+            vertical_tokens: v,
+            slash_tokens: s,
+            last_q: 16,
+        }
+    }
+
+    #[test]
+    fn full_budget_equals_dense() {
+        let h = rand_head(71, 96, 8);
+        let c = cfg(96, 96, 16);
+        let out = vertical_slash_attention(&h, &c);
+        let expect = naive_attention(&h);
+        assert!(out.out.max_abs_diff(&expect) < 1e-4);
+        assert_eq!(out.coverage.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn top_indices_selects_largest() {
+        let scores = [0.1f32, 5.0, 0.2, 3.0, 4.0];
+        assert_eq!(top_indices(&scores, 2), vec![1, 4]);
+        assert_eq!(top_indices(&scores, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(top_indices(&scores, 0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn slash_zero_covers_diagonal() {
+        let pattern = VsPattern { verticals: vec![], slashes: vec![0], cost: Default::default() };
+        let cov = pattern_coverage(&pattern, 64, TileConfig::new(16, 16));
+        // q block 1 rows 16..32: slash 0 covers cols 16..32 (band).
+        assert!(cov.covered(1, 16) && cov.covered(1, 31));
+        assert!(!cov.covered(1, 0) && !cov.covered(1, 32));
+    }
+
+    #[test]
+    fn planted_vertical_column_is_found() {
+        // Construct K so column 7 has a huge dot product with every query.
+        let n = 128;
+        let d = 8;
+        let mut rng = Pcg64::seeded(72);
+        let q = Mat::from_fn(n, d, |_, _| rng.normal() * 0.1 + 1.0);
+        let mut k = Mat::from_fn(n, d, |_, _| rng.normal() * 0.1 - 1.0);
+        for c in 0..d {
+            k.set(7, c, 5.0);
+        }
+        let v = Mat::from_fn(n, d, |_, _| rng.normal());
+        let h = HeadInput::new(q, k, v);
+        let c = cfg(4, 4, 16);
+        let pattern = estimate_pattern(&h, &c);
+        assert!(pattern.verticals.contains(&7), "verticals: {:?}", pattern.verticals);
+    }
+
+    #[test]
+    fn sparsity_positive_with_small_budget() {
+        let h = rand_head(73, 256, 8);
+        // Each slash offset covers a b_q-wide band per query block, so keep
+        // the budgets tiny to exercise a genuinely sparse pattern.
+        let c = cfg(2, 2, 16);
+        let out = vertical_slash_attention(&h, &c);
+        assert!(out.coverage.sparsity() > 0.5, "sparsity {}", out.coverage.sparsity());
+    }
+}

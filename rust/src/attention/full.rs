@@ -1,0 +1,233 @@
+//! Dense causal attention in the FlashAttention style: blocked over
+//! (query-block × key-block) tiles with online softmax, parallelized over
+//! query blocks. This is the paper's `Full-attn` baseline (Fig. 2's
+//! denominator) and the numeric reference every sparse method is compared
+//! against.
+
+use crate::attention::mask::Coverage;
+use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
+use crate::tensor::{matmul_nn_acc, matmul_nt_scaled, Mat};
+use crate::util::threadpool::parallel_map;
+
+/// Online-softmax accumulator state for one query block.
+pub(crate) struct BlockState {
+    /// Running row maxima `m` (one per query row).
+    pub m: Vec<f32>,
+    /// Running normalizers `l`.
+    pub l: Vec<f32>,
+    /// Unnormalized accumulator `acc` `[rows, d]`.
+    pub acc: Mat,
+}
+
+impl BlockState {
+    pub fn new(rows: usize, d: usize) -> Self {
+        Self { m: vec![f32::NEG_INFINITY; rows], l: vec![0.0; rows], acc: Mat::zeros(rows, d) }
+    }
+
+    /// Fold one scored tile into the state. `s` holds scaled logits
+    /// `[rows, tile_cols]` (already causally masked where needed); `v`
+    /// holds the matching value rows `[tile_cols, d]`.
+    ///
+    /// This is the standard FlashAttention update:
+    ///   m' = max(m, rowmax(s)); p = exp(s - m'); α = exp(m - m')
+    ///   l  = l·α + rowsum(p);   acc = acc·α + p·V
+    pub fn fold_tile(&mut self, s: &mut Mat, v: &Mat) {
+        let d = self.acc.cols;
+        for r in 0..s.rows {
+            let srow = s.row_mut(r);
+            let mut tile_max = f32::NEG_INFINITY;
+            for &x in srow.iter() {
+                tile_max = tile_max.max(x);
+            }
+            if tile_max == f32::NEG_INFINITY {
+                // Entire tile masked for this row: zero the probabilities so
+                // the P·V accumulate below is a no-op for row r.
+                srow.iter_mut().for_each(|x| *x = 0.0);
+                continue;
+            }
+            let m_new = self.m[r].max(tile_max);
+            let alpha = if self.m[r] == f32::NEG_INFINITY {
+                0.0
+            } else {
+                (self.m[r] - m_new).exp()
+            };
+            let mut rowsum = 0.0f32;
+            for x in srow.iter_mut() {
+                *x = (*x - m_new).exp();
+                rowsum += *x;
+            }
+            self.l[r] = self.l[r] * alpha + rowsum;
+            if alpha != 1.0 {
+                for a in self.acc.row_mut(r) {
+                    *a *= alpha;
+                }
+            }
+            self.m[r] = m_new;
+            let _ = d;
+        }
+        // acc += P · V  (rows with fully-masked tiles contributed zeros).
+        matmul_nn_acc(s, v, &mut self.acc);
+    }
+
+    /// Normalize into the output rows: `O = acc / l`.
+    pub fn write_output(&self, out_rows: &mut [f32], d: usize) {
+        for r in 0..self.l.len() {
+            let inv = if self.l[r] > 0.0 { 1.0 / self.l[r] } else { 0.0 };
+            let src = self.acc.row(r);
+            let dst = &mut out_rows[r * d..(r + 1) * d];
+            for (o, &a) in dst.iter_mut().zip(src) {
+                *o = a * inv;
+            }
+        }
+    }
+}
+
+/// Apply the causal mask to a scored tile whose rows start at absolute
+/// position `row0` and columns at `col0`.
+pub(crate) fn mask_tile_causal(s: &mut Mat, row0: usize, col0: usize) {
+    for r in 0..s.rows {
+        let limit = row0 + r; // visible keys: absolute position <= limit
+        if col0 + s.cols <= limit + 1 {
+            continue; // tile entirely visible for this row
+        }
+        let row = s.row_mut(r);
+        let first_masked = (limit + 1).saturating_sub(col0);
+        for x in row.iter_mut().skip(first_masked) {
+            *x = f32::NEG_INFINITY;
+        }
+    }
+}
+
+/// Dense causal attention over one head.
+pub fn full_attention(input: &HeadInput, tile: TileConfig) -> AttnOutput {
+    let n = input.n();
+    let d = input.d();
+    let scale = input.scale();
+    let q_blocks = tile.q_blocks(n);
+
+    let results = parallel_map(q_blocks, |qb| {
+        let row0 = qb * tile.b_q;
+        let rows = (n - row0).min(tile.b_q);
+        let q_i = input.q.rows_mat(row0, rows);
+        let mut state = BlockState::new(rows, d);
+        let mut cost = CostTally::default();
+        let limit = (row0 + rows).min(n); // widest causal extent in block
+        let kv_blocks = limit.div_ceil(tile.b_kv);
+        let mut s = Mat::zeros(rows, tile.b_kv);
+        for jb in 0..kv_blocks {
+            let col0 = jb * tile.b_kv;
+            let cols = (limit - col0).min(tile.b_kv);
+            let k_j = input.k.rows_mat(col0, cols);
+            let v_j = input.v.rows_mat(col0, cols);
+            if s.cols != cols {
+                s = Mat::zeros(rows, cols);
+            }
+            matmul_nt_scaled(&q_i, &k_j, scale, &mut s);
+            if col0 + cols > row0 {
+                mask_tile_causal(&mut s, row0, col0);
+            }
+            state.fold_tile(&mut s, &v_j);
+            cost.add(CostTally::attn_tile(rows, cols, d));
+        }
+        let mut out_rows = vec![0.0f32; rows * d];
+        state.write_output(&mut out_rows, d);
+        (out_rows, cost)
+    });
+
+    let mut out = Mat::zeros(n, d);
+    let mut cost = CostTally::default();
+    for (qb, (rows_data, c)) in results.into_iter().enumerate() {
+        let row0 = qb * tile.b_q;
+        out.data[row0 * d..row0 * d + rows_data.len()].copy_from_slice(&rows_data);
+        cost.add(c);
+    }
+
+    AttnOutput { out, coverage: Coverage::full(n, tile.b_q), cost }
+}
+
+/// Naive O(N²)-memory reference — materializes the score matrix. Only for
+/// tests (small N); the blocked implementation must match it exactly.
+pub fn naive_attention(input: &HeadInput) -> Mat {
+    let n = input.n();
+    let d = input.d();
+    let scale = input.scale();
+    let mut s = Mat::zeros(n, n);
+    matmul_nt_scaled(&input.q, &input.k, scale, &mut s);
+    crate::tensor::ops::causal_mask_inplace(&mut s, 0, 0);
+    crate::tensor::ops::softmax_rows(&mut s);
+    let mut out = Mat::zeros(n, d);
+    matmul_nn_acc(&s, &input.v, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    pub(crate) fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        let q = Mat::from_fn(n, d, |_, _| rng.normal());
+        let k = Mat::from_fn(n, d, |_, _| rng.normal());
+        let v = Mat::from_fn(n, d, |_, _| rng.normal());
+        HeadInput::new(q, k, v)
+    }
+
+    #[test]
+    fn blocked_matches_naive_exact_blocks() {
+        let h = rand_head(1, 256, 32);
+        let blocked = full_attention(&h, TileConfig::new(64, 64));
+        let naive = naive_attention(&h);
+        assert!(blocked.out.max_abs_diff(&naive) < 1e-4);
+    }
+
+    #[test]
+    fn blocked_matches_naive_ragged() {
+        let h = rand_head(2, 200, 16);
+        let blocked = full_attention(&h, TileConfig::new(64, 48));
+        let naive = naive_attention(&h);
+        assert!(blocked.out.max_abs_diff(&naive) < 1e-4);
+    }
+
+    #[test]
+    fn blocked_matches_naive_single_block() {
+        let h = rand_head(3, 32, 8);
+        let blocked = full_attention(&h, TileConfig::new(128, 128));
+        let naive = naive_attention(&h);
+        assert!(blocked.out.max_abs_diff(&naive) < 1e-4);
+    }
+
+    #[test]
+    fn first_row_attends_only_to_itself() {
+        let h = rand_head(4, 64, 8);
+        let out = full_attention(&h, TileConfig::new(16, 16));
+        // Row 0 of causal attention = V row 0 exactly.
+        for c in 0..8 {
+            assert!((out.out.at(0, c) - h.v.at(0, c)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn coverage_is_full_causal() {
+        let h = rand_head(5, 128, 8);
+        let out = full_attention(&h, TileConfig::new(32, 32));
+        assert_eq!(out.coverage.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn cost_counts_causal_tiles() {
+        let h = rand_head(6, 128, 16);
+        let out = full_attention(&h, TileConfig::new(64, 64));
+        // Tiles touched: qb0 -> 64 cols; qb1 -> 128 cols. flops = 4*rows*cols*d.
+        let expect = 4 * (64 * 64 + 64 * 128) as u64 * 16;
+        assert_eq!(out.cost.flops, expect);
+    }
+
+    #[test]
+    fn mask_tile_causal_diagonal() {
+        let mut s = Mat::from_vec(2, 4, vec![1.0; 8]);
+        mask_tile_causal(&mut s, 2, 0); // rows at abs pos 2,3; cols 0..4
+        assert_eq!(s.row(0), &[1.0, 1.0, 1.0, f32::NEG_INFINITY]);
+        assert_eq!(s.row(1), &[1.0, 1.0, 1.0, 1.0]);
+    }
+}

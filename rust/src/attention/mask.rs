@@ -1,0 +1,261 @@
+//! Coverage bookkeeping: which (query-block, key) pairs a sparse method
+//! actually computed. Coverage is what the recall and sparsity metrics are
+//! defined over, and it is shared by every method so the numbers are
+//! comparable.
+//!
+//! Granularity note (the paper's central point): block-sparse methods can
+//! only cover whole `(b_q, b_kv)` tiles, while AnchorAttention covers
+//! *stripes* — individual key columns per query-block group — so coverage
+//! is stored as a per-query-block **column bitset**.
+
+/// Column bitset over `n` key positions for every query block.
+#[derive(Clone, Debug)]
+pub struct Coverage {
+    pub n: usize,
+    pub b_q: usize,
+    words_per_block: usize,
+    bits: Vec<u64>,
+}
+
+impl Coverage {
+    pub fn new(n: usize, b_q: usize) -> Self {
+        let q_blocks = n.div_ceil(b_q);
+        let words_per_block = n.div_ceil(64);
+        Self { n, b_q, words_per_block, bits: vec![0; q_blocks * words_per_block] }
+    }
+
+    pub fn q_blocks(&self) -> usize {
+        if self.b_q == 0 {
+            0
+        } else {
+            self.n.div_ceil(self.b_q)
+        }
+    }
+
+    #[inline]
+    fn block_words(&self, qb: usize) -> &[u64] {
+        &self.bits[qb * self.words_per_block..(qb + 1) * self.words_per_block]
+    }
+
+    #[inline]
+    fn block_words_mut(&mut self, qb: usize) -> &mut [u64] {
+        &mut self.bits[qb * self.words_per_block..(qb + 1) * self.words_per_block]
+    }
+
+    /// Mark a single key column as computed for query block `qb`.
+    #[inline]
+    pub fn set(&mut self, qb: usize, col: usize) {
+        debug_assert!(col < self.n);
+        let w = self.block_words_mut(qb);
+        w[col / 64] |= 1u64 << (col % 64);
+    }
+
+    /// Mark a contiguous key range `[start, end)`.
+    pub fn set_range(&mut self, qb: usize, start: usize, end: usize) {
+        let end = end.min(self.n);
+        if start >= end {
+            return;
+        }
+        let w = self.block_words_mut(qb);
+        let (sw, sb) = (start / 64, start % 64);
+        let (ew, eb) = ((end - 1) / 64, (end - 1) % 64);
+        if sw == ew {
+            let mask = (!0u64 << sb) & (!0u64 >> (63 - eb));
+            w[sw] |= mask;
+        } else {
+            w[sw] |= !0u64 << sb;
+            for word in &mut w[sw + 1..ew] {
+                *word = !0;
+            }
+            w[ew] |= !0u64 >> (63 - eb);
+        }
+    }
+
+    /// Mark a list of discrete columns (the stripe set).
+    pub fn set_indices(&mut self, qb: usize, cols: &[u32]) {
+        let n = self.n;
+        let w = self.block_words_mut(qb);
+        for &c in cols {
+            debug_assert!((c as usize) < n);
+            w[c as usize / 64] |= 1u64 << (c % 64);
+        }
+    }
+
+    #[inline]
+    pub fn covered(&self, qb: usize, col: usize) -> bool {
+        let w = self.block_words(qb);
+        (w[col / 64] >> (col % 64)) & 1 == 1
+    }
+
+    /// Number of covered columns for a query block.
+    pub fn count(&self, qb: usize) -> usize {
+        self.block_words(qb).iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Sorted covered column indices for a query block.
+    pub fn columns(&self, qb: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        for (wi, &word) in self.block_words(qb).iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let b = bits.trailing_zeros();
+                out.push((wi * 64) as u32 + b);
+                bits &= bits - 1;
+            }
+        }
+        out
+    }
+
+    /// Intersect coverage of block `qb` with causality for the block's
+    /// *last* row (the widest row); callers that need exact per-row
+    /// causality handle the diagonal separately.
+    pub fn causal_limit(&self, qb: usize) -> usize {
+        ((qb + 1) * self.b_q).min(self.n)
+    }
+
+    /// Total covered (q-block, key) pairs, counting only causally-valid
+    /// columns (col < causal_limit).
+    pub fn total_covered(&self) -> u64 {
+        let mut total = 0u64;
+        for qb in 0..self.q_blocks() {
+            let limit = self.causal_limit(qb);
+            for (wi, &word) in self.block_words(qb).iter().enumerate() {
+                let base = wi * 64;
+                if base + 64 <= limit {
+                    total += word.count_ones() as u64;
+                } else if base < limit {
+                    let keep = limit - base;
+                    total += (word & ((1u64 << keep) - 1)).count_ones() as u64;
+                }
+            }
+        }
+        total
+    }
+
+    /// Total causally-valid (q-block, key) pairs — the sparsity denominator
+    /// at the identification granularity `(b_q, 1)`.
+    pub fn total_causal(&self) -> u64 {
+        (0..self.q_blocks()).map(|qb| self.causal_limit(qb) as u64).sum()
+    }
+
+    /// Sparsity rate: fraction of causally-valid (q-block, key) pairs *not*
+    /// computed (the paper's sparsity metric, Table 1 / Fig. 6).
+    pub fn sparsity(&self) -> f64 {
+        let total = self.total_causal();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.total_covered() as f64 / total as f64
+    }
+
+    /// Union with another coverage (same shape).
+    pub fn union(&mut self, other: &Coverage) {
+        assert_eq!(self.n, other.n);
+        assert_eq!(self.b_q, other.b_q);
+        for (a, b) in self.bits.iter_mut().zip(&other.bits) {
+            *a |= b;
+        }
+    }
+
+    /// Full (dense causal) coverage.
+    pub fn full(n: usize, b_q: usize) -> Self {
+        let mut c = Self::new(n, b_q);
+        for qb in 0..c.q_blocks() {
+            let limit = c.causal_limit(qb);
+            c.set_range(qb, 0, limit);
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_and_query_single_bits() {
+        let mut c = Coverage::new(256, 64);
+        c.set(1, 0);
+        c.set(1, 63);
+        c.set(1, 64);
+        c.set(1, 255);
+        assert!(c.covered(1, 0) && c.covered(1, 63) && c.covered(1, 64) && c.covered(1, 255));
+        assert!(!c.covered(1, 1));
+        assert_eq!(c.count(1), 4);
+        assert_eq!(c.count(0), 0);
+        assert_eq!(c.columns(1), vec![0, 63, 64, 255]);
+    }
+
+    #[test]
+    fn set_range_word_boundaries() {
+        let mut c = Coverage::new(256, 64);
+        c.set_range(0, 60, 70);
+        assert_eq!(c.count(0), 10);
+        assert!(c.covered(0, 60) && c.covered(0, 69));
+        assert!(!c.covered(0, 59) && !c.covered(0, 70));
+        // Full-word interior.
+        let mut c2 = Coverage::new(256, 64);
+        c2.set_range(0, 0, 256);
+        assert_eq!(c2.count(0), 256);
+        // Empty range no-op.
+        let mut c3 = Coverage::new(256, 64);
+        c3.set_range(0, 10, 10);
+        assert_eq!(c3.count(0), 0);
+    }
+
+    #[test]
+    fn range_clamps_to_n() {
+        let mut c = Coverage::new(100, 50);
+        c.set_range(1, 90, 1000);
+        assert_eq!(c.count(1), 10);
+    }
+
+    #[test]
+    fn causal_accounting() {
+        // n=4 blocks of 64: causal totals = 64 + 128 + 192 + 256
+        let c = Coverage::full(256, 64);
+        assert_eq!(c.total_causal(), 64 + 128 + 192 + 256);
+        assert_eq!(c.total_covered(), c.total_causal());
+        assert_eq!(c.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn sparsity_of_empty_is_one() {
+        let c = Coverage::new(256, 64);
+        assert_eq!(c.sparsity(), 1.0);
+    }
+
+    #[test]
+    fn acausal_bits_do_not_count() {
+        let mut c = Coverage::new(256, 64);
+        // Cover future columns for q block 0 — must not count toward coverage.
+        c.set_range(0, 128, 256);
+        assert_eq!(c.total_covered(), 0);
+        assert_eq!(c.count(0), 128, "raw bit count still sees them");
+    }
+
+    #[test]
+    fn union_merges() {
+        let mut a = Coverage::new(128, 64);
+        let mut b = Coverage::new(128, 64);
+        a.set(0, 3);
+        b.set(0, 5);
+        a.union(&b);
+        assert!(a.covered(0, 3) && a.covered(0, 5));
+    }
+
+    #[test]
+    fn set_indices_bulk() {
+        let mut c = Coverage::new(200, 100);
+        c.set_indices(1, &[0, 99, 150]);
+        assert_eq!(c.columns(1), vec![0, 99, 150]);
+    }
+
+    #[test]
+    fn ragged_tail_block() {
+        let c = Coverage::full(100, 64); // blocks: 64 + 36 rows
+        assert_eq!(c.q_blocks(), 2);
+        assert_eq!(c.causal_limit(0), 64);
+        assert_eq!(c.causal_limit(1), 100);
+    }
+}

@@ -1,0 +1,256 @@
+//! Evaluation metrics, using the paper's definitions:
+//!
+//! * **Recall** (Fig. 4 caption, following MInference): the fraction of
+//!   true attention probability mass that falls on positions the sparse
+//!   method actually computed. Computed exactly with a streaming
+//!   online-softmax pass, so memory stays O(N) even at long contexts.
+//! * **Sparsity**: fraction of causally-valid (query-block, key) pairs not
+//!   computed — provided by [`Coverage::sparsity`].
+//! * **Output fidelity**: relative Frobenius error of the sparse output vs
+//!   dense attention (drives the LongBench/RULER accuracy proxies).
+
+use crate::attention::mask::Coverage;
+use crate::attention::{HeadInput, TileConfig};
+use crate::tensor::{matmul_nt_scaled, Mat};
+use crate::util::threadpool::parallel_map;
+
+/// Recall statistics for one head.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecallStats {
+    /// Mean over query rows of covered probability mass.
+    pub mean_recall: f64,
+    /// Worst query row.
+    pub min_recall: f64,
+    /// Number of rows measured.
+    pub rows: usize,
+}
+
+/// Exact streaming recall of `coverage` against the true attention
+/// distribution of `input`. O(N) memory, O(N²) time (it *is* the full
+/// score computation — use moderate N; see DESIGN.md §6).
+pub fn recall(input: &HeadInput, coverage: &Coverage, tile: TileConfig) -> RecallStats {
+    let n = input.n();
+    let scale = input.scale();
+    assert_eq!(coverage.n, n);
+    assert_eq!(coverage.b_q, tile.b_q);
+    let q_blocks = tile.q_blocks(n);
+
+    let per_block: Vec<(f64, f64, usize)> = parallel_map(q_blocks, |qb| {
+        let row0 = qb * tile.b_q;
+        let rows = (n - row0).min(tile.b_q);
+        let q_i = input.q.rows_mat(row0, rows);
+        let limit = row0 + rows;
+        let kv_blocks = limit.div_ceil(tile.b_kv);
+
+        let mut m = vec![f32::NEG_INFINITY; rows];
+        let mut den = vec![0.0f64; rows];
+        let mut num = vec![0.0f64; rows];
+        let mut s = Mat::zeros(rows, tile.b_kv);
+
+        for jb in 0..kv_blocks {
+            let col0 = jb * tile.b_kv;
+            let cols = (limit - col0).min(tile.b_kv);
+            let k_j = input.k.rows_mat(col0, cols);
+            if s.cols != cols {
+                s = Mat::zeros(rows, cols);
+            }
+            matmul_nt_scaled(&q_i, &k_j, scale, &mut s);
+            for r in 0..rows {
+                let abs_row = row0 + r;
+                let visible = (abs_row + 1).saturating_sub(col0).min(cols);
+                if visible == 0 {
+                    continue;
+                }
+                let srow = &s.row(r)[..visible];
+                let tile_max = srow.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let m_new = m[r].max(tile_max);
+                let alpha = if m[r] == f32::NEG_INFINITY { 0.0 } else { ((m[r] - m_new) as f64).exp() };
+                den[r] *= alpha;
+                num[r] *= alpha;
+                for (c, &x) in srow.iter().enumerate() {
+                    let p = ((x - m_new) as f64).exp();
+                    den[r] += p;
+                    if coverage.covered(qb, col0 + c) {
+                        num[r] += p;
+                    }
+                }
+                m[r] = m_new;
+            }
+        }
+
+        let mut sum = 0.0f64;
+        let mut min = f64::INFINITY;
+        for r in 0..rows {
+            let rec = if den[r] > 0.0 { num[r] / den[r] } else { 0.0 };
+            sum += rec;
+            min = min.min(rec);
+        }
+        (sum, min, rows)
+    });
+
+    let mut sum = 0.0;
+    let mut min = f64::INFINITY;
+    let mut rows = 0;
+    for (s, mn, r) in per_block {
+        sum += s;
+        min = min.min(mn);
+        rows += r;
+    }
+    RecallStats { mean_recall: if rows > 0 { sum / rows as f64 } else { 0.0 }, min_recall: min, rows }
+}
+
+/// Pooled-row recall for very long contexts: evaluates coverage against the
+/// *block-pooled* score distribution (`avgpool(Q, b_q) · Kᵀ`), which is the
+/// identification granularity itself. Used for N ≥ 64k where exact recall
+/// is impractical on the CPU testbed (DESIGN.md §6).
+pub fn pooled_recall(input: &HeadInput, coverage: &Coverage, tile: TileConfig) -> RecallStats {
+    let n = input.n();
+    let scale = input.scale();
+    let q_pool = crate::tensor::ops::avgpool_rows(&input.q, tile.b_q);
+    let q_blocks = q_pool.rows;
+
+    let per_block: Vec<(f64, f64)> = parallel_map(q_blocks, |qb| {
+        let limit = ((qb + 1) * tile.b_q).min(n);
+        let q_row = q_pool.rows_mat(qb, 1);
+        let mut m = f32::NEG_INFINITY;
+        let mut den = 0.0f64;
+        let mut num = 0.0f64;
+        let mut s = Mat::zeros(1, tile.b_kv);
+        let kv_blocks = limit.div_ceil(tile.b_kv);
+        for jb in 0..kv_blocks {
+            let col0 = jb * tile.b_kv;
+            let cols = (limit - col0).min(tile.b_kv);
+            let k_j = input.k.rows_mat(col0, cols);
+            if s.cols != cols {
+                s = Mat::zeros(1, cols);
+            }
+            matmul_nt_scaled(&q_row, &k_j, scale, &mut s);
+            let srow = s.row(0);
+            let tile_max = srow.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let m_new = m.max(tile_max);
+            let alpha = if m == f32::NEG_INFINITY { 0.0 } else { ((m - m_new) as f64).exp() };
+            den *= alpha;
+            num *= alpha;
+            for (c, &x) in srow.iter().enumerate() {
+                let p = ((x - m_new) as f64).exp();
+                den += p;
+                if coverage.covered(qb, col0 + c) {
+                    num += p;
+                }
+            }
+            m = m_new;
+        }
+        let rec = if den > 0.0 { num / den } else { 0.0 };
+        (rec, rec)
+    });
+
+    let rows = per_block.len();
+    let sum: f64 = per_block.iter().map(|x| x.0).sum();
+    let min = per_block.iter().map(|x| x.1).fold(f64::INFINITY, f64::min);
+    RecallStats { mean_recall: if rows > 0 { sum / rows as f64 } else { 0.0 }, min_recall: min, rows }
+}
+
+/// Output fidelity: relative Frobenius error vs the dense output, mapped to
+/// an accuracy-like score in [0, 100] (`100 · max(0, 1 − err/tol)` — the
+/// LongBench/RULER proxy; see DESIGN.md §1).
+pub fn fidelity_score(sparse_out: &Mat, full_out: &Mat, tol: f64) -> f64 {
+    let err = sparse_out.rel_err(full_out);
+    100.0 * (1.0 - err / tol).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full::{full_attention, naive_attention};
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    #[test]
+    fn full_coverage_has_recall_one() {
+        let h = rand_head(1, 128, 16);
+        let tile = TileConfig::new(32, 32);
+        let cov = Coverage::full(128, 32);
+        let r = recall(&h, &cov, tile);
+        assert!((r.mean_recall - 1.0).abs() < 1e-9, "{}", r.mean_recall);
+        assert!((r.min_recall - 1.0).abs() < 1e-9);
+        assert_eq!(r.rows, 128);
+    }
+
+    #[test]
+    fn empty_coverage_has_recall_zero() {
+        let h = rand_head(2, 64, 8);
+        let tile = TileConfig::new(16, 16);
+        let cov = Coverage::new(64, 16);
+        let r = recall(&h, &cov, tile);
+        assert!(r.mean_recall < 1e-12);
+    }
+
+    #[test]
+    fn recall_matches_naive_probabilities() {
+        // Cover only the first 8 keys for every q block; compare to a naive
+        // softmax computation of the same mass.
+        let n = 64;
+        let d = 8;
+        let h = rand_head(3, n, d);
+        let tile = TileConfig::new(16, 16);
+        let mut cov = Coverage::new(n, 16);
+        for qb in 0..cov.q_blocks() {
+            cov.set_range(qb, 0, 8);
+        }
+        let got = recall(&h, &cov, tile);
+
+        // Naive: full probs, sum over first 8 columns.
+        let scale = h.scale();
+        let mut s = Mat::zeros(n, n);
+        matmul_nt_scaled(&h.q, &h.k, scale, &mut s);
+        crate::tensor::ops::causal_mask_inplace(&mut s, 0, 0);
+        crate::tensor::ops::softmax_rows(&mut s);
+        let mut acc = 0.0;
+        for r in 0..n {
+            let mass: f32 = s.row(r)[..8.min(r + 1)].iter().sum();
+            acc += mass as f64;
+        }
+        let expect = acc / n as f64;
+        assert!((got.mean_recall - expect).abs() < 1e-5, "{} vs {expect}", got.mean_recall);
+    }
+
+    #[test]
+    fn partial_coverage_recall_between_zero_and_one() {
+        let h = rand_head(4, 96, 8);
+        let tile = TileConfig::new(32, 32);
+        let mut cov = Coverage::new(96, 32);
+        for qb in 0..3 {
+            cov.set_range(qb, 0, 16);
+        }
+        let r = recall(&h, &cov, tile);
+        assert!(r.mean_recall > 0.0 && r.mean_recall < 1.0);
+        assert!(r.min_recall <= r.mean_recall);
+    }
+
+    #[test]
+    fn pooled_recall_full_coverage_is_one() {
+        let h = rand_head(5, 128, 8);
+        let tile = TileConfig::new(32, 32);
+        let cov = Coverage::full(128, 32);
+        let r = pooled_recall(&h, &cov, tile);
+        assert!((r.mean_recall - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fidelity_score_bounds() {
+        let h = rand_head(6, 64, 8);
+        let full = naive_attention(&h);
+        let same = full_attention(&h, TileConfig::new(16, 16));
+        assert!(fidelity_score(&same.out, &full, 0.2) > 99.9);
+        let zeros = Mat::zeros(64, 8);
+        assert!(fidelity_score(&zeros, &full, 0.2) < 1.0);
+    }
+}

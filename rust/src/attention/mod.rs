@@ -1,0 +1,200 @@
+//! The attention engine: the paper's contribution (AnchorAttention,
+//! Algorithms 1–3) plus every baseline the evaluation compares against,
+//! all sharing one blocked, multithreaded f32 substrate so measured
+//! latencies are directly comparable (the paper's A100/Triton testbed is
+//! substituted by this engine — see DESIGN.md §1).
+//!
+//! Layout convention: one head at a time, row-major `[N, d]` matrices for
+//! Q, K, V, causal masking, logits scaled by `1/sqrt(d)`.
+
+pub mod anchor;
+pub mod baselines;
+pub mod full;
+pub mod mask;
+pub mod metrics;
+pub mod strategy;
+
+use crate::tensor::Mat;
+
+/// Tiling parameters shared by every method (the paper fixes both to 128).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TileConfig {
+    pub b_q: usize,
+    pub b_kv: usize,
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        Self { b_q: 128, b_kv: 128 }
+    }
+}
+
+impl TileConfig {
+    pub fn new(b_q: usize, b_kv: usize) -> Self {
+        assert!(b_q >= 1 && b_kv >= 1);
+        Self { b_q, b_kv }
+    }
+
+    pub fn q_blocks(&self, n: usize) -> usize {
+        n.div_ceil(self.b_q)
+    }
+
+    pub fn kv_blocks(&self, n: usize) -> usize {
+        n.div_ceil(self.b_kv)
+    }
+}
+
+/// Per-head input to any attention method.
+#[derive(Clone, Debug)]
+pub struct HeadInput {
+    pub q: Mat,
+    pub k: Mat,
+    pub v: Mat,
+}
+
+impl HeadInput {
+    pub fn new(q: Mat, k: Mat, v: Mat) -> Self {
+        assert_eq!(q.cols, k.cols, "q/k head dim");
+        assert_eq!(k.rows, v.rows, "k/v length");
+        assert_eq!(k.cols, v.cols, "k/v head dim (MHA layout)");
+        Self { q, k, v }
+    }
+
+    pub fn n(&self) -> usize {
+        self.q.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.q.cols
+    }
+
+    pub fn scale(&self) -> f32 {
+        1.0 / (self.d() as f32).sqrt()
+    }
+}
+
+/// Work/traffic accounting used by the analytic cost model (DESIGN.md §1):
+/// every method tallies the multiply-accumulate volume and the KV bytes it
+/// actually touches, split by pipeline phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostTally {
+    /// Multiply-adds in QKᵀ and P·V (counted as 2 flops each).
+    pub flops: u64,
+    /// Bytes of K/V loaded from "HBM" (i.e. outside the working tile).
+    pub kv_bytes: u64,
+    /// Score entries evaluated during identification.
+    pub ident_scores: u64,
+}
+
+impl CostTally {
+    pub fn add(&mut self, other: CostTally) {
+        self.flops += other.flops;
+        self.kv_bytes += other.kv_bytes;
+        self.ident_scores += other.ident_scores;
+    }
+
+    /// Tally for an attention tile: `rows × cols` score entries at head
+    /// dim `d` (QKᵀ + PV, 4·rows·cols·d flops), loading cols KV rows.
+    pub fn attn_tile(rows: usize, cols: usize, d: usize) -> CostTally {
+        CostTally {
+            flops: 4 * (rows * cols * d) as u64,
+            kv_bytes: (2 * cols * d * 4) as u64,
+            ident_scores: 0,
+        }
+    }
+
+    /// Tally for an identification tile (pooled-Q × K, scores only).
+    pub fn ident_tile(rows: usize, cols: usize, d: usize) -> CostTally {
+        CostTally {
+            flops: 2 * (rows * cols * d) as u64,
+            kv_bytes: (cols * d * 4) as u64,
+            ident_scores: (rows * cols) as u64,
+        }
+    }
+}
+
+/// Result of running one attention method on one head.
+#[derive(Clone, Debug)]
+pub struct AttnOutput {
+    pub out: Mat,
+    /// Which (q-block, key) pairs were actually computed — drives the
+    /// recall/sparsity metrics.
+    pub coverage: mask::Coverage,
+    pub cost: CostTally,
+}
+
+/// Every method the paper evaluates (Table 2/3, Fig. 6/7).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    /// Dense FlashAttention — the paper's `Full-attn` baseline.
+    Full(TileConfig),
+    /// The paper's contribution.
+    Anchor(anchor::AnchorConfig),
+    /// StreamingLLM: initial + local window only.
+    Streaming(baselines::streaming::StreamingConfig),
+    /// MInference's Vertical_Slash static pattern.
+    VerticalSlash(baselines::vertical_slash::VerticalSlashConfig),
+    /// FlexPrefill-style dynamic block top-cdf.
+    FlexPrefill(baselines::flexprefill::FlexPrefillConfig),
+    /// Block-granular top-k (analysis baseline, Table 1).
+    BlockTopK(baselines::block_topk::BlockTopKConfig),
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Full(_) => "full-attn",
+            Method::Anchor(_) => "anchor",
+            Method::Streaming(_) => "streaming-llm",
+            Method::VerticalSlash(_) => "vertical-slash",
+            Method::FlexPrefill(_) => "flexprefill",
+            Method::BlockTopK(_) => "block-topk",
+        }
+    }
+
+    /// Run the method on one head.
+    pub fn run(&self, input: &HeadInput) -> AttnOutput {
+        match self {
+            Method::Full(tile) => full::full_attention(input, *tile),
+            Method::Anchor(cfg) => anchor::anchor_attention(input, cfg),
+            Method::Streaming(cfg) => baselines::streaming::streaming_attention(input, cfg),
+            Method::VerticalSlash(cfg) => {
+                baselines::vertical_slash::vertical_slash_attention(input, cfg)
+            }
+            Method::FlexPrefill(cfgg) => baselines::flexprefill::flexprefill_attention(input, cfgg),
+            Method::BlockTopK(cfg) => baselines::block_topk::block_topk_attention(input, cfg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_config_block_counts() {
+        let t = TileConfig::new(128, 128);
+        assert_eq!(t.q_blocks(1024), 8);
+        assert_eq!(t.q_blocks(1000), 8);
+        assert_eq!(t.kv_blocks(129), 2);
+    }
+
+    #[test]
+    fn cost_tally_accumulates() {
+        let mut t = CostTally::default();
+        t.add(CostTally::attn_tile(2, 3, 4));
+        assert_eq!(t.flops, 4 * 24);
+        assert_eq!(t.kv_bytes, 2 * 3 * 4 * 4);
+        t.add(CostTally::ident_tile(1, 5, 4));
+        assert_eq!(t.ident_scores, 5);
+    }
+
+    #[test]
+    fn head_input_scale() {
+        let q = Mat::zeros(4, 16);
+        let k = Mat::zeros(4, 16);
+        let v = Mat::zeros(4, 16);
+        let h = HeadInput::new(q, k, v);
+        assert!((h.scale() - 0.25).abs() < 1e-7);
+    }
+}

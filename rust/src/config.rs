@@ -1,0 +1,171 @@
+//! Typed configuration loaded from JSON files (`configs/*.json`).
+//!
+//! Every field has a default, so configs can be sparse overrides; the CLI
+//! further overrides individual fields (`--theta`, `--rate`, …).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::attention::anchor::AnchorConfig;
+use crate::attention::TileConfig;
+use crate::coordinator::scheduler::{SchedulerConfig, SparsityModel};
+use crate::coordinator::server::ServerConfig;
+use crate::util::json::Json;
+use crate::workload::trace::TraceConfig;
+
+/// Top-level application config.
+#[derive(Clone, Debug)]
+pub struct AppConfig {
+    pub artifact_dir: String,
+    pub anchor: AnchorConfig,
+    pub server: ServerConfig,
+    pub trace: TraceConfig,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        Self {
+            artifact_dir: "artifacts".to_string(),
+            anchor: AnchorConfig::default(),
+            server: ServerConfig::default(),
+            trace: TraceConfig::default(),
+        }
+    }
+}
+
+impl AppConfig {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config json: {e}"))?;
+        let mut cfg = AppConfig::default();
+
+        if let Some(s) = j.get("artifact_dir").as_str() {
+            cfg.artifact_dir = s.to_string();
+        }
+
+        let a = j.get("anchor");
+        if !a.is_null() {
+            let d = AnchorConfig::default();
+            let b_q = a.get("b_q").as_usize().unwrap_or(d.tile.b_q);
+            let b_kv = a.get("b_kv").as_usize().unwrap_or(d.tile.b_kv);
+            cfg.anchor = AnchorConfig {
+                tile: TileConfig::new(b_q, b_kv),
+                theta: a.get("theta").as_f64().unwrap_or(d.theta as f64) as f32,
+                step: a.get("step").as_usize().unwrap_or(d.step),
+                init_blocks: a.get("init_blocks").as_usize().unwrap_or(d.init_blocks),
+                use_anchor: a.get("use_anchor").as_bool().unwrap_or(true),
+            };
+        }
+
+        let s = j.get("server");
+        if !s.is_null() {
+            let d = ServerConfig::default();
+            let sd = SchedulerConfig::default();
+            let sched = s.get("scheduler");
+            let sparsity = match sched.get("sparsity").as_str() {
+                None | Some("dense") => SparsityModel::Dense,
+                Some("anchor") => SparsityModel::Anchor {
+                    stripe_keep: sched.get("stripe_keep").as_f64().unwrap_or(0.1),
+                    anchor_tokens: sched.get("anchor_tokens").as_usize().unwrap_or(256),
+                },
+                Some(other) => return Err(anyhow!("unknown sparsity model '{other}'")),
+            };
+            cfg.server = ServerConfig {
+                scheduler: SchedulerConfig {
+                    iter_budget: sched.get("iter_budget").as_f64().unwrap_or(sd.iter_budget),
+                    chunk: sched.get("chunk").as_usize().unwrap_or(sd.chunk),
+                    max_running: sched.get("max_running").as_usize().unwrap_or(sd.max_running),
+                    sparsity,
+                    decode_token_cost: sched
+                        .get("decode_token_cost")
+                        .as_f64()
+                        .unwrap_or(sd.decode_token_cost),
+                },
+                pool_pages: s.get("pool_pages").as_usize().unwrap_or(d.pool_pages),
+                page_tokens: s.get("page_tokens").as_usize().unwrap_or(d.page_tokens),
+                max_seq: s.get("max_seq").as_usize().unwrap_or(d.max_seq),
+                realtime: s.get("realtime").as_bool().unwrap_or(d.realtime),
+            };
+        }
+
+        let t = j.get("trace");
+        if !t.is_null() {
+            let d = TraceConfig::default();
+            let length_mix = match t.get("length_mix").as_arr() {
+                None => d.length_mix.clone(),
+                Some(arr) => arr
+                    .iter()
+                    .map(|pair| -> Result<(usize, f64)> {
+                        let len = pair.idx(0).as_usize().ok_or_else(|| anyhow!("bad mix len"))?;
+                        let w = pair.idx(1).as_f64().ok_or_else(|| anyhow!("bad mix weight"))?;
+                        Ok((len, w))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            cfg.trace = TraceConfig {
+                rate: t.get("rate").as_f64().unwrap_or(d.rate),
+                num_requests: t.get("num_requests").as_usize().unwrap_or(d.num_requests),
+                length_mix,
+                decode_min: t.get("decode_min").as_usize().unwrap_or(d.decode_min),
+                decode_max: t.get("decode_max").as_usize().unwrap_or(d.decode_max),
+                seed: t.get("seed").as_i64().unwrap_or(d.seed as i64) as u64,
+            };
+        }
+
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_config_is_defaults() {
+        let cfg = AppConfig::parse("{}").unwrap();
+        assert_eq!(cfg.artifact_dir, "artifacts");
+        assert_eq!(cfg.anchor.theta, 12.0);
+        assert_eq!(cfg.server.scheduler.chunk, 256);
+    }
+
+    #[test]
+    fn sparse_overrides_apply() {
+        let cfg = AppConfig::parse(
+            r#"{
+            "anchor": {"theta": 13.5, "step": 8},
+            "server": {"pool_pages": 16,
+                       "scheduler": {"sparsity": "anchor", "stripe_keep": 0.05}},
+            "trace": {"rate": 7.5, "num_requests": 3,
+                      "length_mix": [[128, 1.0]]}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.anchor.theta, 13.5);
+        assert_eq!(cfg.anchor.step, 8);
+        assert_eq!(cfg.anchor.init_blocks, 1, "untouched default");
+        assert_eq!(cfg.server.pool_pages, 16);
+        match cfg.server.scheduler.sparsity {
+            SparsityModel::Anchor { stripe_keep, .. } => assert_eq!(stripe_keep, 0.05),
+            _ => panic!("expected anchor sparsity"),
+        }
+        assert_eq!(cfg.trace.rate, 7.5);
+        assert_eq!(cfg.trace.length_mix, vec![(128, 1.0)]);
+    }
+
+    #[test]
+    fn unknown_sparsity_rejected() {
+        let res = AppConfig::parse(r#"{"server": {"scheduler": {"sparsity": "magic"}}}"#);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        assert!(AppConfig::parse("{").is_err());
+    }
+}

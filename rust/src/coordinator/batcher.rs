@@ -1,0 +1,149 @@
+//! Dynamic batcher: turns an [`IterationPlan`] into a validated, ordered
+//! [`EngineBatch`]. Decode steps are packed first (they are
+//! latency-critical and batch naturally), prefill chunks follow.
+
+use anyhow::{anyhow, Result};
+
+use super::request::{Phase, RequestState};
+use super::scheduler::IterationPlan;
+
+/// One unit of engine work.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkItem {
+    /// Run the next `take` prompt tokens of request `req` through a
+    /// prefill chunk.
+    Prefill { req: u64, take: usize },
+    /// One decode step for `req` feeding `token` (the previously sampled
+    /// token, or the prompt-derived first token).
+    Decode { req: u64, token: i32 },
+}
+
+/// A batch handed to the engine thread.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EngineBatch {
+    pub iteration: u64,
+    pub items: Vec<WorkItem>,
+}
+
+impl EngineBatch {
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn decode_width(&self) -> usize {
+        self.items.iter().filter(|i| matches!(i, WorkItem::Decode { .. })).count()
+    }
+
+    pub fn prefill_tokens(&self) -> usize {
+        self.items
+            .iter()
+            .map(|i| match i {
+                WorkItem::Prefill { take, .. } => *take,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Validate a plan against request states and materialize the batch.
+pub fn build_batch(
+    iteration: u64,
+    plan: &IterationPlan,
+    states: &[RequestState],
+) -> Result<EngineBatch> {
+    let find = |id: u64| -> Result<&RequestState> {
+        states
+            .iter()
+            .find(|s| s.request.id == id)
+            .ok_or_else(|| anyhow!("plan references unknown request {id}"))
+    };
+
+    let mut items = Vec::with_capacity(plan.decode.len() + plan.prefill.len());
+
+    for &id in &plan.decode {
+        let st = find(id)?;
+        if st.phase != Phase::Decode {
+            return Err(anyhow!("request {id} scheduled for decode but in {:?}", st.phase));
+        }
+        // Feed the last sampled token; the first decode step after prefill
+        // feeds the token sampled from the prefill logits.
+        let token = *st
+            .generated
+            .last()
+            .ok_or_else(|| anyhow!("request {id} decoding with no seed token"))?;
+        items.push(WorkItem::Decode { req: id, token });
+    }
+
+    for &(id, take) in &plan.prefill {
+        let st = find(id)?;
+        if st.phase != Phase::Prefill {
+            return Err(anyhow!("request {id} scheduled for prefill but in {:?}", st.phase));
+        }
+        if take == 0 || take > st.remaining_prefill() {
+            return Err(anyhow!(
+                "request {id}: chunk {take} exceeds remaining {}",
+                st.remaining_prefill()
+            ));
+        }
+        items.push(WorkItem::Prefill { req: id, take });
+    }
+
+    Ok(EngineBatch { iteration, items })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+
+    fn state(id: u64, prompt: usize, phase: Phase, prefilled: usize) -> RequestState {
+        let mut st = RequestState::new(Request::new(id, vec![1; prompt], 8, 0.0));
+        st.phase = phase;
+        st.prefilled = prefilled;
+        if phase == Phase::Decode {
+            st.generated.push(42);
+        }
+        st
+    }
+
+    #[test]
+    fn decode_items_precede_prefill() {
+        let states = vec![state(1, 64, Phase::Decode, 64), state(2, 512, Phase::Prefill, 0)];
+        let plan = IterationPlan {
+            prefill: vec![(2, 256)],
+            decode: vec![1],
+            admitted: vec![],
+        };
+        let b = build_batch(3, &plan, &states).unwrap();
+        assert_eq!(b.items[0], WorkItem::Decode { req: 1, token: 42 });
+        assert_eq!(b.items[1], WorkItem::Prefill { req: 2, take: 256 });
+        assert_eq!(b.decode_width(), 1);
+        assert_eq!(b.prefill_tokens(), 256);
+    }
+
+    #[test]
+    fn rejects_wrong_phase() {
+        let states = vec![state(1, 64, Phase::Queued, 0)];
+        let plan = IterationPlan { prefill: vec![(1, 64)], decode: vec![], admitted: vec![] };
+        assert!(build_batch(0, &plan, &states).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_chunk() {
+        let states = vec![state(1, 100, Phase::Prefill, 50)];
+        let plan = IterationPlan { prefill: vec![(1, 64)], decode: vec![], admitted: vec![] };
+        assert!(build_batch(0, &plan, &states).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_request() {
+        let plan = IterationPlan { prefill: vec![(9, 1)], decode: vec![], admitted: vec![] };
+        assert!(build_batch(0, &plan, &[]).is_err());
+    }
+
+    #[test]
+    fn empty_plan_empty_batch() {
+        let b = build_batch(0, &IterationPlan::default(), &[]).unwrap();
+        assert!(b.is_empty());
+    }
+}

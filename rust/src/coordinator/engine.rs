@@ -1,0 +1,242 @@
+//! Engine: the single thread that owns the PJRT runtime and executes
+//! [`EngineBatch`]es. `PjRtClient` is `Rc`-based (not `Send`), so the
+//! engine is constructed *inside* its thread and communicates over
+//! channels. A [`StepExecutor`] trait abstracts the engine so the server
+//! and its tests can run against a deterministic mock without artifacts.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{EngineBatch, WorkItem};
+use crate::model::{argmax, LmModel, LmSession};
+use crate::runtime::Runtime;
+
+/// Result of one work item.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepOutcome {
+    /// A prefill chunk completed. `next_token` is only meaningful when
+    /// `prompt_done` (sampled from the last valid logits row).
+    PrefillChunk { req: u64, took: usize, prompt_done: bool, next_token: i32, elapsed_s: f64 },
+    /// One decode step completed, emitting `token`.
+    Decoded { req: u64, token: i32, elapsed_s: f64 },
+    /// The request errored (propagated to the server for teardown).
+    Failed { req: u64, error: String },
+}
+
+/// Anything that can execute engine batches (PJRT engine or mock).
+pub trait StepExecutor {
+    fn execute(&mut self, batch: &EngineBatch) -> Vec<StepOutcome>;
+    /// Free any per-request state (called when a request finishes).
+    fn finish_request(&mut self, req: u64);
+}
+
+/// The real PJRT-backed engine. Owns one [`LmModel`] and per-request
+/// sessions. Must live on a single thread.
+pub struct PjrtEngine {
+    model: LmModel,
+    sessions: HashMap<u64, LmSession>,
+    /// Remaining prompt per in-flight prefill request.
+    prompts: HashMap<u64, (Vec<i32>, usize)>,
+}
+
+impl PjrtEngine {
+    pub fn new(artifact_dir: &str) -> Result<Self> {
+        let runtime = Rc::new(Runtime::open(artifact_dir)?);
+        let model = LmModel::load(runtime)?;
+        model.warmup()?;
+        Ok(Self { model, sessions: HashMap::new(), prompts: HashMap::new() })
+    }
+
+    /// Register a request's prompt before its first prefill chunk.
+    pub fn register(&mut self, req: u64, prompt: Vec<i32>) {
+        self.prompts.insert(req, (prompt, 0));
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.model.vocab
+    }
+
+    fn run_prefill(&mut self, req: u64, take: usize) -> Result<(bool, i32, f64)> {
+        let (prompt, off) = self
+            .prompts
+            .get(&req)
+            .cloned()
+            .ok_or_else(|| anyhow!("request {req} not registered"))?;
+        if !self.sessions.contains_key(&req) {
+            self.sessions.insert(req, self.model.new_session()?);
+        }
+        let t0 = std::time::Instant::now();
+        let chunk = &prompt[off..(off + take).min(prompt.len())];
+        let session = self.sessions.get_mut(&req).unwrap();
+        let logits = self.model.prefill(session, chunk)?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        let new_off = off + chunk.len();
+        let done = new_off >= prompt.len();
+        self.prompts.insert(req, (prompt, new_off));
+        Ok((done, argmax(&logits), elapsed))
+    }
+
+    fn run_decode(&mut self, req: u64, token: i32) -> Result<(i32, f64)> {
+        let session = self
+            .sessions
+            .get_mut(&req)
+            .ok_or_else(|| anyhow!("request {req} has no session"))?;
+        let t0 = std::time::Instant::now();
+        let logits = self.model.decode(session, token)?;
+        Ok((argmax(&logits), t0.elapsed().as_secs_f64()))
+    }
+}
+
+impl StepExecutor for PjrtEngine {
+    fn execute(&mut self, batch: &EngineBatch) -> Vec<StepOutcome> {
+        let mut out = Vec::with_capacity(batch.items.len());
+        for item in &batch.items {
+            match *item {
+                WorkItem::Prefill { req, take } => match self.run_prefill(req, take) {
+                    Ok((done, next, dt)) => out.push(StepOutcome::PrefillChunk {
+                        req,
+                        took: take,
+                        prompt_done: done,
+                        next_token: next,
+                        elapsed_s: dt,
+                    }),
+                    Err(e) => out.push(StepOutcome::Failed { req, error: e.to_string() }),
+                },
+                WorkItem::Decode { req, token } => match self.run_decode(req, token) {
+                    Ok((next, dt)) => {
+                        out.push(StepOutcome::Decoded { req, token: next, elapsed_s: dt })
+                    }
+                    Err(e) => out.push(StepOutcome::Failed { req, error: e.to_string() }),
+                },
+            }
+        }
+        out
+    }
+
+    fn finish_request(&mut self, req: u64) {
+        self.sessions.remove(&req);
+        self.prompts.remove(&req);
+    }
+}
+
+/// Deterministic mock for server tests: each prefill chunk or decode step
+/// costs a fixed virtual time and emits `(req * 31 + step) % vocab`.
+pub struct MockEngine {
+    pub vocab: i32,
+    pub steps: u64,
+}
+
+impl MockEngine {
+    pub fn new(vocab: i32) -> Self {
+        Self { vocab, steps: 0 }
+    }
+}
+
+impl StepExecutor for MockEngine {
+    fn execute(&mut self, batch: &EngineBatch) -> Vec<StepOutcome> {
+        let mut out = Vec::new();
+        for item in &batch.items {
+            self.steps += 1;
+            match *item {
+                WorkItem::Prefill { req, take } => out.push(StepOutcome::PrefillChunk {
+                    req,
+                    took: take,
+                    // The server tracks progress; the mock can't know, so it
+                    // reports done=false and the server infers from counts.
+                    prompt_done: false,
+                    next_token: ((req * 31 + self.steps) % self.vocab as u64) as i32,
+                    elapsed_s: 1e-4 * take as f64,
+                }),
+                WorkItem::Decode { req, .. } => out.push(StepOutcome::Decoded {
+                    req,
+                    token: ((req * 31 + self.steps) % self.vocab as u64) as i32,
+                    elapsed_s: 1e-4,
+                }),
+            }
+        }
+        out
+    }
+
+    fn finish_request(&mut self, _req: u64) {}
+}
+
+/// Commands for a channel-driven engine thread.
+pub enum EngineCmd {
+    Register { req: u64, prompt: Vec<i32> },
+    Run(EngineBatch),
+    Finish { req: u64 },
+    Shutdown,
+}
+
+/// Spawn the PJRT engine on its own thread. Returns command sender and
+/// outcome receiver. The engine compiles artifacts at startup (blocking
+/// until ready; an `Err` is reported through the result channel).
+pub fn spawn_engine(
+    artifact_dir: String,
+) -> (mpsc::Sender<EngineCmd>, mpsc::Receiver<Result<Vec<StepOutcome>, String>>) {
+    let (cmd_tx, cmd_rx) = mpsc::channel::<EngineCmd>();
+    let (res_tx, res_rx) = mpsc::channel::<Result<Vec<StepOutcome>, String>>();
+    std::thread::spawn(move || {
+        let mut engine = match PjrtEngine::new(&artifact_dir) {
+            Ok(e) => {
+                let _ = res_tx.send(Ok(Vec::new())); // ready signal
+                e
+            }
+            Err(e) => {
+                let _ = res_tx.send(Err(format!("engine init: {e}")));
+                return;
+            }
+        };
+        while let Ok(cmd) = cmd_rx.recv() {
+            match cmd {
+                EngineCmd::Register { req, prompt } => engine.register(req, prompt),
+                EngineCmd::Run(batch) => {
+                    let outcomes = engine.execute(&batch);
+                    if res_tx.send(Ok(outcomes)).is_err() {
+                        break;
+                    }
+                }
+                EngineCmd::Finish { req } => engine.finish_request(req),
+                EngineCmd::Shutdown => break,
+            }
+        }
+    });
+    (cmd_tx, res_rx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_engine_is_deterministic() {
+        let batch = EngineBatch {
+            iteration: 0,
+            items: vec![
+                WorkItem::Prefill { req: 1, take: 256 },
+                WorkItem::Decode { req: 2, token: 5 },
+            ],
+        };
+        let mut a = MockEngine::new(512);
+        let mut b = MockEngine::new(512);
+        assert_eq!(a.execute(&batch), b.execute(&batch));
+    }
+
+    #[test]
+    fn mock_tokens_in_vocab() {
+        let mut e = MockEngine::new(64);
+        let batch = EngineBatch {
+            iteration: 0,
+            items: (0..20).map(|i| WorkItem::Decode { req: i, token: 0 }).collect(),
+        };
+        for o in e.execute(&batch) {
+            match o {
+                StepOutcome::Decoded { token, .. } => assert!((0..64).contains(&token)),
+                _ => panic!("unexpected outcome"),
+            }
+        }
+    }
+}

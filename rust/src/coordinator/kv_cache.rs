@@ -1,0 +1,208 @@
+//! Paged KV-cache accounting: fixed-size pages, per-sequence allocation,
+//! and per-page **stripe statistics** — the prefill identification's hot
+//! fraction is attached to each page so the decode phase can prioritize
+//! hot pages (the paper's stated future work, implemented as an extension;
+//! DESIGN.md §7).
+//!
+//! Storage itself lives in each session's functional cache literal; the
+//! pool provides the *admission control* a real serving deployment gets
+//! from GPU memory: a sequence may only run while it holds pages.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+/// Per-page stripe statistics recorded during prefill identification.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PageStripeStats {
+    /// Fraction of this page's keys selected as stripes during prefill.
+    pub hot_fraction: f32,
+}
+
+#[derive(Clone, Debug)]
+struct SeqAlloc {
+    pages: Vec<u32>,
+    tokens: usize,
+}
+
+/// Fixed-capacity page pool.
+pub struct PagePool {
+    page_tokens: usize,
+    free: Vec<u32>,
+    seqs: HashMap<u64, SeqAlloc>,
+    stats: Vec<PageStripeStats>,
+    total_pages: usize,
+}
+
+impl PagePool {
+    pub fn new(total_pages: usize, page_tokens: usize) -> Self {
+        assert!(page_tokens >= 1 && total_pages >= 1);
+        Self {
+            page_tokens,
+            free: (0..total_pages as u32).rev().collect(),
+            seqs: HashMap::new(),
+            stats: vec![PageStripeStats::default(); total_pages],
+            total_pages,
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total_pages - self.free.len()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used_pages() as f64 / self.total_pages as f64
+    }
+
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Can a new sequence of `tokens` total be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.pages_for(tokens.max(1)) <= self.free.len()
+    }
+
+    /// Reserve pages for a new sequence (its *full* expected length —
+    /// conservative admission, no mid-decode eviction in this build).
+    pub fn admit(&mut self, seq: u64, tokens: usize) -> Result<()> {
+        if self.seqs.contains_key(&seq) {
+            return Err(anyhow!("sequence {seq} already admitted"));
+        }
+        let need = self.pages_for(tokens.max(1));
+        if need > self.free.len() {
+            return Err(anyhow!(
+                "admission of {tokens} tokens needs {need} pages, only {} free",
+                self.free.len()
+            ));
+        }
+        let pages = self.free.split_off(self.free.len() - need);
+        self.seqs.insert(seq, SeqAlloc { pages, tokens });
+        Ok(())
+    }
+
+    /// Release a finished sequence's pages.
+    pub fn release(&mut self, seq: u64) -> Result<()> {
+        let alloc = self.seqs.remove(&seq).ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        for p in &alloc.pages {
+            self.stats[*p as usize] = PageStripeStats::default();
+        }
+        self.free.extend(alloc.pages);
+        Ok(())
+    }
+
+    pub fn pages_of(&self, seq: u64) -> Option<&[u32]> {
+        self.seqs.get(&seq).map(|a| a.pages.as_slice())
+    }
+
+    /// Record stripe stats for the page holding `token_pos` of `seq`
+    /// (called by the engine after each prefill chunk's identification).
+    pub fn record_stripe_stats(&mut self, seq: u64, token_pos: usize, hot_fraction: f32) -> Result<()> {
+        let alloc = self.seqs.get(&seq).ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        let page_idx = token_pos / self.page_tokens;
+        let page = *alloc
+            .pages
+            .get(page_idx)
+            .ok_or_else(|| anyhow!("token {token_pos} beyond allocation"))?;
+        self.stats[page as usize].hot_fraction = hot_fraction;
+        Ok(())
+    }
+
+    pub fn stripe_stats(&self, page: u32) -> PageStripeStats {
+        self.stats[page as usize]
+    }
+
+    /// Decode-reuse extension: the pages of `seq` whose prefill hot
+    /// fraction meets `min_hot`, i.e. the pages decode attention should
+    /// visit first.
+    pub fn hot_pages(&self, seq: u64, min_hot: f32) -> Vec<u32> {
+        self.seqs
+            .get(&seq)
+            .map(|a| {
+                a.pages
+                    .iter()
+                    .copied()
+                    .filter(|&p| self.stats[p as usize].hot_fraction >= min_hot)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_and_release_roundtrip() {
+        let mut pool = PagePool::new(8, 64);
+        assert!(pool.can_admit(256));
+        pool.admit(1, 256).unwrap(); // 4 pages
+        assert_eq!(pool.used_pages(), 4);
+        assert_eq!(pool.pages_of(1).unwrap().len(), 4);
+        pool.release(1).unwrap();
+        assert_eq!(pool.used_pages(), 0);
+        assert_eq!(pool.free_pages(), 8);
+    }
+
+    #[test]
+    fn admission_control_blocks_when_full() {
+        let mut pool = PagePool::new(4, 64);
+        pool.admit(1, 200).unwrap(); // 4 pages
+        assert!(!pool.can_admit(1));
+        assert!(pool.admit(2, 64).is_err());
+        pool.release(1).unwrap();
+        assert!(pool.can_admit(256));
+    }
+
+    #[test]
+    fn double_admit_rejected() {
+        let mut pool = PagePool::new(4, 64);
+        pool.admit(7, 64).unwrap();
+        assert!(pool.admit(7, 64).is_err());
+    }
+
+    #[test]
+    fn release_unknown_rejected() {
+        let mut pool = PagePool::new(4, 64);
+        assert!(pool.release(3).is_err());
+    }
+
+    #[test]
+    fn stripe_stats_tracked_per_page() {
+        let mut pool = PagePool::new(8, 64);
+        pool.admit(1, 256).unwrap();
+        pool.record_stripe_stats(1, 0, 0.9).unwrap();
+        pool.record_stripe_stats(1, 130, 0.2).unwrap(); // page 2
+        let pages = pool.pages_of(1).unwrap().to_vec();
+        assert_eq!(pool.stripe_stats(pages[0]).hot_fraction, 0.9);
+        assert_eq!(pool.stripe_stats(pages[2]).hot_fraction, 0.2);
+        let hot = pool.hot_pages(1, 0.5);
+        assert_eq!(hot, vec![pages[0]]);
+    }
+
+    #[test]
+    fn stats_reset_on_release() {
+        let mut pool = PagePool::new(2, 64);
+        pool.admit(1, 64).unwrap();
+        let page = pool.pages_of(1).unwrap()[0];
+        pool.record_stripe_stats(1, 0, 0.7).unwrap();
+        pool.release(1).unwrap();
+        assert_eq!(pool.stripe_stats(page).hot_fraction, 0.0);
+    }
+
+    #[test]
+    fn zero_token_admission_takes_one_page() {
+        let mut pool = PagePool::new(2, 64);
+        pool.admit(1, 0).unwrap();
+        assert_eq!(pool.used_pages(), 1);
+    }
+}

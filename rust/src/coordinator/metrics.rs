@@ -1,0 +1,137 @@
+//! Serving metrics: per-request records and aggregate report.
+
+use crate::util::stats;
+
+/// Final record for one served request.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub arrival_s: f64,
+    /// Time to first token, from arrival.
+    pub ttft_s: f64,
+    /// End-to-end latency, from arrival.
+    pub e2e_s: f64,
+}
+
+/// Aggregate serving report (printed by `serve` / `examples/serve_trace`).
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub records: Vec<RequestRecord>,
+    pub wall_s: f64,
+    pub iterations: u64,
+    pub engine_busy_s: f64,
+}
+
+impl ServeReport {
+    pub fn total_prompt_tokens(&self) -> usize {
+        self.records.iter().map(|r| r.prompt_tokens).sum()
+    }
+
+    pub fn total_generated_tokens(&self) -> usize {
+        self.records.iter().map(|r| r.generated_tokens).sum()
+    }
+
+    pub fn prefill_throughput(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.total_prompt_tokens() as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn decode_throughput(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.total_generated_tokens() as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn ttft_percentile(&self, q: f64) -> f64 {
+        let xs: Vec<f64> = self.records.iter().map(|r| r.ttft_s).collect();
+        stats::percentile(&xs, q)
+    }
+
+    pub fn e2e_percentile(&self, q: f64) -> f64 {
+        let xs: Vec<f64> = self.records.iter().map(|r| r.e2e_s).collect();
+        stats::percentile(&xs, q)
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            (self.engine_busy_s / self.wall_s).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    pub fn print_summary(&self) {
+        println!("── serve report ──────────────────────────────────────");
+        println!("requests          {:>10}", self.records.len());
+        println!("wall time         {:>10.2} s", self.wall_s);
+        println!("iterations        {:>10}", self.iterations);
+        println!("engine util       {:>10.1} %", self.utilization() * 100.0);
+        println!(
+            "prompt tokens     {:>10}   ({:.0} tok/s)",
+            self.total_prompt_tokens(),
+            self.prefill_throughput()
+        );
+        println!(
+            "generated tokens  {:>10}   ({:.0} tok/s)",
+            self.total_generated_tokens(),
+            self.decode_throughput()
+        );
+        println!(
+            "TTFT p50/p95      {:>8.3} / {:.3} s",
+            self.ttft_percentile(50.0),
+            self.ttft_percentile(95.0)
+        );
+        println!(
+            "E2E  p50/p95      {:>8.3} / {:.3} s",
+            self.e2e_percentile(50.0),
+            self.e2e_percentile(95.0)
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(id: u64, ttft: f64, e2e: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            prompt_tokens: 100,
+            generated_tokens: 10,
+            arrival_s: 0.0,
+            ttft_s: ttft,
+            e2e_s: e2e,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let rep = ServeReport {
+            records: vec![record(1, 0.1, 1.0), record(2, 0.3, 2.0)],
+            wall_s: 4.0,
+            iterations: 10,
+            engine_busy_s: 2.0,
+        };
+        assert_eq!(rep.total_prompt_tokens(), 200);
+        assert_eq!(rep.total_generated_tokens(), 20);
+        assert_eq!(rep.prefill_throughput(), 50.0);
+        assert_eq!(rep.decode_throughput(), 5.0);
+        assert_eq!(rep.utilization(), 0.5);
+        assert!((rep.ttft_percentile(50.0) - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_report_is_safe() {
+        let rep = ServeReport::default();
+        assert_eq!(rep.prefill_throughput(), 0.0);
+        assert_eq!(rep.ttft_percentile(99.0), 0.0);
+        assert_eq!(rep.utilization(), 0.0);
+    }
+}

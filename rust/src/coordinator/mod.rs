@@ -1,0 +1,29 @@
+//! L3 serving coordinator — a vLLM-router-style stack in which sparse
+//! prefill is a first-class scheduling citizen (DESIGN.md §4):
+//!
+//! ```text
+//! trace ──▶ AdmissionQueue ──▶ Scheduler ──▶ Batcher ──▶ Engine (PJRT)
+//!                 ▲              │  ▲                        │
+//!                 │              ▼  │ page grants            ▼
+//!              arrivals       PagePool ◀──────────────── step results
+//! ```
+//!
+//! * [`queue`] — admission with arrival timestamps.
+//! * [`kv_cache`] — paged KV accounting (fixed-size pages, per-page stripe
+//!   statistics for the decode-reuse extension, DESIGN.md §7).
+//! * [`scheduler`] — iteration-level planning: chunked prefill + decode
+//!   interleave under a token budget; the anchor sparsity estimate shrinks
+//!   prefill cost, letting more work co-schedule (the paper's speedup as
+//!   scheduler headroom).
+//! * [`batcher`] — packages an iteration plan into engine batches.
+//! * [`engine`] — the single thread that owns the PJRT runtime/model.
+//! * [`server`] — trace-driven driver producing a [`metrics::ServeReport`].
+
+pub mod batcher;
+pub mod engine;
+pub mod kv_cache;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod scheduler;
+pub mod server;

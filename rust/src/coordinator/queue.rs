@@ -1,0 +1,124 @@
+//! Admission queue: thread-safe FIFO with arrival-time-gated release
+//! (trace replay) and graceful close.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use super::request::Request;
+
+#[derive(Default)]
+struct Inner {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+/// MPMC admission queue (Mutex + Condvar; no external deps offline).
+#[derive(Default)]
+pub struct AdmissionQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl AdmissionQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&self, r: Request) {
+        let mut g = self.inner.lock().unwrap();
+        assert!(!g.closed, "push after close");
+        g.queue.push_back(r);
+        self.cv.notify_all();
+    }
+
+    /// No more requests will arrive; wakes all waiters.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pop every request with `arrival_s <= now_s` (trace replay gate).
+    pub fn drain_arrived(&self, now_s: f64) -> Vec<Request> {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        while let Some(front) = g.queue.front() {
+            if front.arrival_s <= now_s {
+                out.push(g.queue.pop_front().unwrap());
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Blocking pop; returns None when closed and drained.
+    pub fn pop_blocking(&self) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.queue.pop_front() {
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64, t: f64) -> Request {
+        Request::new(id, vec![1], 1, t)
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = AdmissionQueue::new();
+        q.push(req(1, 0.0));
+        q.push(req(2, 0.0));
+        assert_eq!(q.pop_blocking().unwrap().id, 1);
+        assert_eq!(q.pop_blocking().unwrap().id, 2);
+    }
+
+    #[test]
+    fn drain_respects_arrival_time() {
+        let q = AdmissionQueue::new();
+        q.push(req(1, 0.5));
+        q.push(req(2, 1.5));
+        q.push(req(3, 2.5));
+        let got = q.drain_arrived(1.6);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn close_unblocks_poppers() {
+        let q = Arc::new(AdmissionQueue::new());
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop_blocking());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(t.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn pop_after_close_drains_remaining() {
+        let q = AdmissionQueue::new();
+        q.push(req(9, 0.0));
+        q.close();
+        assert_eq!(q.pop_blocking().unwrap().id, 9);
+        assert!(q.pop_blocking().is_none());
+    }
+}

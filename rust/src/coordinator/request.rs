@@ -1,0 +1,94 @@
+//! Request/response types flowing through the coordinator.
+
+/// Lifecycle of a request inside the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting for admission (pages not yet granted).
+    Queued,
+    /// Prefill in progress; `prefilled` tracks completed prompt tokens.
+    Prefill,
+    /// Emitting tokens one per iteration.
+    Decode,
+    /// All tokens emitted.
+    Finished,
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Trace-time arrival (seconds from trace start).
+    pub arrival_s: f64,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize, arrival_s: f64) -> Self {
+        Self { id, prompt, max_new_tokens, arrival_s }
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
+}
+
+/// Mutable per-request scheduling state.
+#[derive(Clone, Debug)]
+pub struct RequestState {
+    pub request: Request,
+    pub phase: Phase,
+    /// Prompt tokens already prefetched through the model.
+    pub prefilled: usize,
+    /// Generated tokens so far.
+    pub generated: Vec<i32>,
+    /// Wall-clock seconds (virtual serve time) of first emitted token.
+    pub first_token_s: Option<f64>,
+    /// Completion time.
+    pub finished_s: Option<f64>,
+}
+
+impl RequestState {
+    pub fn new(request: Request) -> Self {
+        Self {
+            request,
+            phase: Phase::Queued,
+            prefilled: 0,
+            generated: Vec::new(),
+            first_token_s: None,
+            finished_s: None,
+        }
+    }
+
+    pub fn remaining_prefill(&self) -> usize {
+        self.request.prompt.len() - self.prefilled
+    }
+
+    pub fn decode_done(&self) -> bool {
+        self.generated.len() >= self.request.max_new_tokens
+    }
+
+    /// Current sequence length (consumed cache tokens).
+    pub fn seq_len(&self) -> usize {
+        self.prefilled + self.generated.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_transitions_bookkeeping() {
+        let r = Request::new(1, vec![1, 2, 3, 4], 2, 0.0);
+        assert_eq!(r.total_tokens(), 6);
+        let mut st = RequestState::new(r);
+        assert_eq!(st.phase, Phase::Queued);
+        assert_eq!(st.remaining_prefill(), 4);
+        st.prefilled = 4;
+        assert_eq!(st.remaining_prefill(), 0);
+        st.generated.push(7);
+        st.generated.push(8);
+        assert!(st.decode_done());
+        assert_eq!(st.seq_len(), 6);
+    }
+}

@@ -1,0 +1,280 @@
+//! Iteration-level scheduler (Orca-style continuous batching with chunked
+//! prefill), sparse-attention-aware.
+//!
+//! Every engine iteration the scheduler assembles a plan under a *cost
+//! budget*: decode steps for all decoding requests (latency-critical),
+//! then prefill chunks for admitted requests, largest-remaining-first.
+//! Chunk costs are scaled by the anchor sparsity estimate: a sparse
+//! prefill chunk at long context costs a fraction of a dense one, so more
+//! prefill co-schedules with decode — the paper's speedup surfacing as
+//! scheduler headroom (DESIGN.md §4).
+
+use super::kv_cache::PagePool;
+use super::request::{Phase, RequestState};
+
+/// How prefill attention cost scales with context for the active method.
+#[derive(Clone, Copy, Debug)]
+pub enum SparsityModel {
+    /// Dense attention: cost ∝ context length.
+    Dense,
+    /// AnchorAttention: anchor regions (window + init) plus a stripe
+    /// fraction of the remaining context survive.
+    Anchor {
+        /// Fraction of non-anchor keys surviving identification
+        /// (1 − sparsity; measured by the engine, e.g. ~0.1 at θ=12).
+        stripe_keep: f64,
+        /// Anchor window + init tokens always computed.
+        anchor_tokens: usize,
+    },
+}
+
+impl SparsityModel {
+    /// Effective attended tokens for a chunk at `context` total length.
+    pub fn effective_context(&self, context: usize) -> f64 {
+        match *self {
+            SparsityModel::Dense => context as f64,
+            SparsityModel::Anchor { stripe_keep, anchor_tokens } => {
+                let anchored = context.min(anchor_tokens) as f64;
+                let rest = context.saturating_sub(anchor_tokens) as f64;
+                anchored + stripe_keep * rest
+            }
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Cost budget per iteration, in normalized token-cost units.
+    pub iter_budget: f64,
+    /// Prefill chunk size (must equal the artifact chunk).
+    pub chunk: usize,
+    /// Max concurrent running requests (decode batch width).
+    pub max_running: usize,
+    pub sparsity: SparsityModel,
+    /// Per-token cost of a decode step relative to a prefill token.
+    pub decode_token_cost: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            iter_budget: 1024.0,
+            chunk: 256,
+            max_running: 8,
+            sparsity: SparsityModel::Dense,
+            decode_token_cost: 4.0,
+        }
+    }
+}
+
+/// One engine iteration's work.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IterationPlan {
+    /// (request id, chunk token count) prefill chunks this iteration.
+    pub prefill: Vec<(u64, usize)>,
+    /// Request ids taking one decode step.
+    pub decode: Vec<u64>,
+    /// Request ids newly admitted (pages granted) this iteration.
+    pub admitted: Vec<u64>,
+}
+
+impl IterationPlan {
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_empty() && self.decode.is_empty()
+    }
+}
+
+/// Chunk cost: attention over the effective context plus linear MLP work.
+fn chunk_cost(cfg: &SchedulerConfig, context_after: usize, chunk: usize) -> f64 {
+    let eff = cfg.sparsity.effective_context(context_after);
+    // Attention ~ chunk × eff/context_after share + MLP ~ chunk.
+    chunk as f64 * (0.5 + 0.5 * eff / context_after.max(1) as f64)
+}
+
+/// Build the next iteration plan. Mutates request phases for admissions.
+pub fn plan_iteration(
+    cfg: &SchedulerConfig,
+    states: &mut [RequestState],
+    pool: &mut PagePool,
+) -> IterationPlan {
+    let mut plan = IterationPlan::default();
+    let mut budget = cfg.iter_budget;
+
+    // 1. Decode steps first (latency-critical); every decoding request
+    //    advances one token per iteration.
+    for st in states.iter_mut() {
+        if st.phase == Phase::Decode && !st.decode_done() {
+            let cost = cfg.decode_token_cost;
+            if budget < cost {
+                break;
+            }
+            budget -= cost;
+            plan.decode.push(st.request.id);
+        }
+    }
+
+    // 2. Admissions: FIFO while pages are available and running slots open.
+    let running = states
+        .iter()
+        .filter(|s| matches!(s.phase, Phase::Prefill | Phase::Decode))
+        .count();
+    let mut slots = cfg.max_running.saturating_sub(running);
+    for st in states.iter_mut() {
+        if slots == 0 {
+            break;
+        }
+        if st.phase == Phase::Queued && pool.can_admit(st.request.total_tokens()) {
+            pool.admit(st.request.id, st.request.total_tokens())
+                .expect("can_admit checked");
+            st.phase = Phase::Prefill;
+            plan.admitted.push(st.request.id);
+            slots -= 1;
+        }
+    }
+
+    // 3. Prefill chunks, longest-remaining-first (maximizes the sparse
+    //    method's advantage: long contexts shrink the most).
+    let mut prefill_idx: Vec<usize> = states
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.phase == Phase::Prefill && s.remaining_prefill() > 0)
+        .map(|(i, _)| i)
+        .collect();
+    prefill_idx.sort_by_key(|&i| std::cmp::Reverse(states[i].remaining_prefill()));
+
+    for i in prefill_idx {
+        let st = &states[i];
+        let take = st.remaining_prefill().min(cfg.chunk);
+        let ctx_after = st.prefilled + take;
+        let cost = chunk_cost(cfg, ctx_after, take);
+        if budget < cost {
+            continue; // try a shorter-context request instead
+        }
+        budget -= cost;
+        plan.prefill.push((st.request.id, take));
+    }
+
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+
+    fn mk_states(specs: &[(u64, usize, usize)]) -> Vec<RequestState> {
+        specs
+            .iter()
+            .map(|&(id, prompt, new)| RequestState::new(Request::new(id, vec![1; prompt], new, 0.0)))
+            .collect()
+    }
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig {
+            iter_budget: 600.0,
+            chunk: 256,
+            max_running: 4,
+            sparsity: SparsityModel::Dense,
+            decode_token_cost: 4.0,
+        }
+    }
+
+    #[test]
+    fn admits_until_pool_full() {
+        let mut pool = PagePool::new(8, 256); // 2048 tokens capacity
+        let mut states = mk_states(&[(1, 1024, 16), (2, 512, 16), (3, 1024, 16)]);
+        let plan = plan_iteration(&cfg(), &mut states, &mut pool);
+        // 1 (5 pages incl. decode) + 2 (3 pages) fit; 3 does not.
+        assert_eq!(plan.admitted, vec![1, 2]);
+        assert_eq!(states[0].phase, Phase::Prefill);
+        assert_eq!(states[2].phase, Phase::Queued);
+    }
+
+    #[test]
+    fn decode_scheduled_before_prefill() {
+        let mut pool = PagePool::new(32, 256);
+        let mut states = mk_states(&[(1, 512, 4), (2, 512, 4)]);
+        states[0].phase = Phase::Decode;
+        states[0].prefilled = 512;
+        let plan = plan_iteration(&cfg(), &mut states, &mut pool);
+        assert_eq!(plan.decode, vec![1]);
+        assert!(plan.prefill.iter().any(|&(id, _)| id == 2));
+    }
+
+    #[test]
+    fn budget_caps_prefill_chunks() {
+        let mut pool = PagePool::new(64, 256);
+        // Many long requests; budget 600 allows at most 2 full dense chunks.
+        let mut states = mk_states(&[(1, 2048, 0), (2, 2048, 0), (3, 2048, 0), (4, 2048, 0)]);
+        let mut c = cfg();
+        c.max_running = 8;
+        let plan = plan_iteration(&c, &mut states, &mut pool);
+        assert!(plan.prefill.len() <= 2, "{:?}", plan.prefill);
+    }
+
+    #[test]
+    fn anchor_sparsity_fits_more_prefill_at_long_context() {
+        let mut pool = PagePool::new(64, 256);
+        let mk = || {
+            let mut s = mk_states(&[(1, 2048, 0), (2, 2048, 0), (3, 2048, 0), (4, 2048, 0)]);
+            for st in &mut s {
+                st.phase = Phase::Prefill;
+                st.prefilled = 1792; // deep into long prompts
+            }
+            s
+        };
+        let mut dense_states = mk();
+        for st in &dense_states {
+            pool.admit(st.request.id, st.request.total_tokens()).unwrap();
+        }
+        let mut c = cfg();
+        c.max_running = 8;
+        let dense = plan_iteration(&c, &mut dense_states, &mut pool);
+
+        let mut sparse_states = mk();
+        c.sparsity = SparsityModel::Anchor { stripe_keep: 0.08, anchor_tokens: 256 };
+        let sparse = plan_iteration(&c, &mut sparse_states, &mut pool);
+        assert!(
+            sparse.prefill.len() > dense.prefill.len(),
+            "sparse {:?} vs dense {:?}",
+            sparse.prefill,
+            dense.prefill
+        );
+    }
+
+    #[test]
+    fn longest_remaining_first() {
+        let mut pool = PagePool::new(64, 256);
+        let mut states = mk_states(&[(1, 256, 0), (2, 2048, 0)]);
+        for st in &mut states {
+            st.phase = Phase::Prefill;
+            pool.admit(st.request.id, st.request.total_tokens()).unwrap();
+        }
+        let mut c = cfg();
+        c.iter_budget = 260.0; // room for ~1 chunk
+        let plan = plan_iteration(&c, &mut states, &mut pool);
+        assert_eq!(plan.prefill.len(), 1);
+        assert_eq!(plan.prefill[0].0, 2, "long request first");
+    }
+
+    #[test]
+    fn effective_context_model() {
+        let dense = SparsityModel::Dense;
+        assert_eq!(dense.effective_context(1000), 1000.0);
+        let anchor = SparsityModel::Anchor { stripe_keep: 0.1, anchor_tokens: 200 };
+        let eff = anchor.effective_context(1000);
+        assert!((eff - (200.0 + 0.1 * 800.0)).abs() < 1e-9);
+        // Short context: everything anchored.
+        assert_eq!(anchor.effective_context(100), 100.0);
+    }
+
+    #[test]
+    fn finished_requests_ignored() {
+        let mut pool = PagePool::new(8, 256);
+        let mut states = mk_states(&[(1, 256, 1)]);
+        states[0].phase = Phase::Finished;
+        let plan = plan_iteration(&cfg(), &mut states, &mut pool);
+        assert!(plan.is_empty());
+        assert!(plan.admitted.is_empty());
+    }
+}

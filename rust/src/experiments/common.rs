@@ -1,0 +1,243 @@
+//! Shared experiment plumbing: scaled method construction, evaluation of
+//! one (head, method) pair, and report formatting.
+
+use std::time::Instant;
+
+use crate::attention::anchor::AnchorConfig;
+use crate::attention::baselines::block_topk::BlockTopKConfig;
+use crate::attention::baselines::flexprefill::FlexPrefillConfig;
+use crate::attention::baselines::streaming::StreamingConfig;
+use crate::attention::baselines::vertical_slash::VerticalSlashConfig;
+use crate::attention::{metrics, HeadInput, Method, TileConfig};
+use crate::workload::WorkloadProfile;
+
+/// Quick (CI/test) vs full (bench) experiment scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpScale {
+    Quick,
+    Full,
+}
+
+impl ExpScale {
+    pub fn from_quick_flag(quick: bool) -> Self {
+        if quick {
+            ExpScale::Quick
+        } else {
+            ExpScale::Full
+        }
+    }
+
+    /// Primary evaluation length.
+    pub fn main_n(self) -> usize {
+        match self {
+            ExpScale::Quick => 4096,
+            ExpScale::Full => 16384,
+        }
+    }
+
+    /// Length sweep for Fig. 2 / 6c / Table 3.
+    pub fn lengths(self) -> Vec<usize> {
+        match self {
+            ExpScale::Quick => vec![2048, 4096, 8192],
+            ExpScale::Full => vec![4096, 8192, 16384],
+        }
+    }
+
+    /// Tile used throughout (paper: 128; quick shrinks with N).
+    pub fn tile(self) -> TileConfig {
+        TileConfig::new(128, 128)
+    }
+}
+
+/// Identification step scaled to keep ≥8 groups at short lengths (the
+/// paper's step=16 assumes 128k ⇒ 1024 query blocks; at CI lengths it
+/// would collapse to a single group and anchor would equal full).
+pub fn scaled_step(n: usize, tile: TileConfig) -> usize {
+    let blocks = n / tile.b_q;
+    if blocks >= 128 {
+        16
+    } else {
+        (blocks / 8).max(2)
+    }
+}
+
+/// The paper's method set at parameters scaled to length `n`
+/// (paper values are tuned for 128k; DESIGN.md §6 scaling policy keeps the
+/// *fractions* of context constant).
+pub fn paper_methods(n: usize, tile: TileConfig, theta: f32) -> Vec<Method> {
+    let frac = |tokens_at_128k: usize| -> usize {
+        ((tokens_at_128k as f64) * (n as f64) / 131072.0).round().max(tile.b_kv as f64) as usize
+    };
+    vec![
+        Method::Full(tile),
+        Method::Streaming(StreamingConfig {
+            tile,
+            global_tokens: frac(1024),
+            local_tokens: frac(8192),
+        }),
+        Method::VerticalSlash(VerticalSlashConfig {
+            tile,
+            vertical_tokens: frac(1024),
+            slash_tokens: frac(8192),
+            last_q: 64.min(n),
+        }),
+        Method::FlexPrefill(FlexPrefillConfig {
+            tile,
+            gamma: 0.95,
+            min_budget_tokens: frac(1024),
+        }),
+        Method::Anchor(AnchorConfig {
+            tile,
+            theta,
+            step: scaled_step(n, tile),
+            init_blocks: 1,
+            use_anchor: true,
+        }),
+    ]
+}
+
+/// Analysis-only extra baseline (Table 1).
+pub fn block_topk_method(n: usize, tile: TileConfig) -> Method {
+    let k_blocks = ((256.0 * n as f64 / 131072.0).round() as usize).max(2);
+    Method::BlockTopK(BlockTopKConfig { tile, k: k_blocks, force_sink_local: true })
+}
+
+/// One evaluated (head, method) data point.
+#[derive(Clone, Debug)]
+pub struct EvalRow {
+    pub method: String,
+    pub n: usize,
+    pub recall: f64,
+    pub min_recall: f64,
+    pub sparsity: f64,
+    pub latency_s: f64,
+    pub flops: u64,
+    pub output_rel_err: f64,
+}
+
+/// Run a method on a head, measuring latency, recall, sparsity and output
+/// fidelity against dense attention.
+pub fn evaluate(head: &HeadInput, method: &Method, tile: TileConfig) -> EvalRow {
+    let full = crate::attention::full::full_attention(head, tile);
+
+    let t0 = Instant::now();
+    let out = method.run(head);
+    let latency_s = t0.elapsed().as_secs_f64();
+
+    let rec = metrics::recall(head, &out.coverage, tile);
+    EvalRow {
+        method: method.name().to_string(),
+        n: head.n(),
+        recall: rec.mean_recall,
+        min_recall: rec.min_recall,
+        sparsity: out.coverage.sparsity(),
+        latency_s,
+        flops: out.cost.flops,
+        output_rel_err: out.out.rel_err(&full.out),
+    }
+}
+
+/// Latency-only measurement (no metric overhead) with `iters` repeats,
+/// reporting the minimum (steady-state) time.
+pub fn measure_latency(head: &HeadInput, method: &Method, iters: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let out = method.run(head);
+        let dt = t0.elapsed().as_secs_f64();
+        crate::util::timer::black_box(out.out.data[0]);
+        best = best.min(dt);
+    }
+    best
+}
+
+/// Default workload for experiments.
+pub fn default_profile() -> WorkloadProfile {
+    WorkloadProfile::llama_like()
+}
+
+/// Fixed-width table printing.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+    println!("{}", "─".repeat(total));
+    for row in rows {
+        line(row);
+    }
+}
+
+/// CSV emission: header + rows.
+pub fn to_csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = headers.join(",");
+    s.push('\n');
+    for row in rows {
+        s.push_str(&row.join(","));
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::tensor::Mat;
+
+    #[test]
+    fn paper_methods_scale_with_length() {
+        let tile = TileConfig::new(128, 128);
+        let m = paper_methods(131072, tile, 12.0);
+        assert_eq!(m.len(), 5);
+        match &m[1] {
+            Method::Streaming(c) => {
+                assert_eq!(c.global_tokens, 1024);
+                assert_eq!(c.local_tokens, 8192);
+            }
+            _ => panic!(),
+        }
+        let m4k = paper_methods(4096, tile, 12.0);
+        match &m4k[1] {
+            Method::Streaming(c) => {
+                assert_eq!(c.global_tokens, 128, "floored at one block");
+                assert_eq!(c.local_tokens, 256);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn evaluate_full_has_recall_one() {
+        let mut rng = Pcg64::seeded(1);
+        let d = 32;
+        let n = 256;
+        let h = HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        );
+        let tile = TileConfig::new(64, 64);
+        let row = evaluate(&h, &Method::Full(tile), tile);
+        assert!((row.recall - 1.0).abs() < 1e-9);
+        assert_eq!(row.sparsity, 0.0);
+        assert!(row.output_rel_err < 1e-5);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = to_csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(csv, "a,b\n1,2\n");
+    }
+}

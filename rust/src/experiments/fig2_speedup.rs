@@ -1,0 +1,125 @@
+//! Figure 2 — attention speedup vs FlashAttention across context lengths,
+//! plus the A100 cost-model projection to the paper's 128k regime.
+//!
+//! Paper headline: ≈4.6× over Full-attn and ≈1.44× over FlexPrefill at
+//! 128k. The CPU engine measures relative wallclock at N ≤ 32k; the cost
+//! model translates the measured sparsity to A100-time at 64k/128k.
+
+use super::common::{self, ExpScale};
+use crate::simulator::a100::A100Model;
+use crate::util::{fmt_len, write_report};
+use crate::workload::qkv::generate;
+
+pub fn run(scale: ExpScale, seed: u64) -> Vec<Vec<String>> {
+    let tile = scale.tile();
+    let profile = common::default_profile();
+    let a100 = A100Model::default();
+    let iters = if scale == ExpScale::Quick { 1 } else { 2 };
+
+    println!("\n=== Fig. 2: speedup over FlashAttention (measured wallclock) ===");
+    let mut rows = Vec::new();
+    for n in scale.lengths() {
+        let wl = generate(&profile, n, seed);
+        let methods = common::paper_methods(n, tile, 12.0);
+        let t_full = common::measure_latency(&wl.head, &methods[0], iters);
+        for m in &methods[1..] {
+            let t = common::measure_latency(&wl.head, m, iters);
+            rows.push(vec![
+                fmt_len(n),
+                m.name().to_string(),
+                format!("{:.2}", t * 1e3),
+                format!("{:.2}x", t_full / t),
+            ]);
+        }
+        rows.push(vec![fmt_len(n), "full-attn".into(), format!("{:.2}", t_full * 1e3), "1.00x".into()]);
+    }
+    common::print_table(&["length", "method", "latency_ms", "speedup"], &rows);
+
+    // Cost-model projection at the paper's lengths. Raw sparsity does NOT
+    // extrapolate (the always-computed anchor window is a large fraction
+    // of short contexts and a vanishing one of 128k), so we measure the
+    // *candidate-region keep rate* at the reference length and rebuild
+    // coverage at the target length: covered(n) = anchor(n) + keep·rest(n).
+    println!("\n--- A100 cost-model projection (paper regime) ---");
+    let n_ref = *scale.lengths().last().unwrap();
+    let wl = generate(&profile, n_ref, seed);
+    let mut proj_rows = Vec::new();
+    let methods = common::paper_methods(n_ref, tile, 12.0);
+    // Anchor-region fraction at block granularity: init block + mean
+    // window of (step/2 + 1) query blocks over an average causal span n/2.
+    let anchor_frac = |n: usize| -> f64 {
+        let step = common::scaled_step(n, tile) as f64;
+        let anchor_tokens = (step / 2.0 + 1.0) * tile.b_q as f64 + tile.b_kv as f64;
+        (anchor_tokens / (n as f64 / 2.0)).min(1.0)
+    };
+    for n in [65536usize, 131072] {
+        let d = 128;
+        let t_full = a100.full_attention_time(n, d);
+        for m in &methods[1..] {
+            let out = m.run(&wl.head);
+            let measured_keep = 1.0 - out.coverage.sparsity();
+            // Separate the anchored share from the identified share at the
+            // reference length, then recompose at the target length.
+            let af_ref = anchor_frac(n_ref);
+            let cand_keep = ((measured_keep - af_ref) / (1.0 - af_ref)).clamp(0.0, 1.0);
+            let af = anchor_frac(n);
+            let keep = match m {
+                crate::attention::Method::Anchor(_) => af + cand_keep * (1.0 - af),
+                // Fixed-budget baselines keep a length-scaled token budget,
+                // i.e. a constant fraction: reuse measured keep directly.
+                _ => measured_keep,
+            };
+            let sparsity = 1.0 - keep;
+            let ident = crate::attention::CostTally {
+                flops: 2 * ((n / tile.b_q) * n * d) as u64,
+                kv_bytes: (n * d * 2) as u64,
+                ident_scores: ((n / tile.b_q) * n) as u64,
+            };
+            let entries = ((n as f64) * (n as f64) / 2.0 * keep) as u64;
+            let sparse = crate::attention::CostTally {
+                flops: 4 * entries * d as u64,
+                kv_bytes: (2.0 * keep * (n * d * 2) as f64) as u64,
+                ident_scores: 0,
+            };
+            let t = match m {
+                crate::attention::Method::Anchor(_) => {
+                    a100.phase_time(&ident) + a100.gather_phase_time(&sparse)
+                }
+                crate::attention::Method::Streaming(_) => a100.phase_time(&sparse),
+                _ => a100.phase_time(&ident) + a100.phase_time(&sparse),
+            };
+            proj_rows.push(vec![
+                fmt_len(n),
+                m.name().to_string(),
+                format!("{:.2}", t * 1e3),
+                format!("{:.2}x", t_full / t),
+                crate::util::pct(sparsity),
+            ]);
+        }
+        proj_rows.push(vec![fmt_len(n), "full-attn".into(), format!("{:.2}", t_full * 1e3), "1.00x".into(), "0.0%".into()]);
+    }
+    common::print_table(
+        &["length", "method", "a100_ms", "speedup", "proj_sparsity"],
+        &proj_rows,
+    );
+
+    let mut all = rows.clone();
+    all.extend(proj_rows);
+    let csv = common::to_csv(&["length", "method", "latency_ms", "speedup"], &rows);
+    let _ = write_report("fig2_speedup.csv", &csv);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_produces_all_methods() {
+        let rows = run(ExpScale::Quick, 7);
+        // 3 lengths × 5 methods + 2 projection lengths × 5 methods.
+        assert!(rows.len() >= 3 * 5);
+        assert!(rows.iter().any(|r| r[1] == "anchor"));
+        assert!(rows.iter().any(|r| r[1] == "full-attn"));
+    }
+}

@@ -1,0 +1,75 @@
+//! Figure 7 — Needle-in-a-Haystack heatmap: retrieval accuracy over a
+//! (context length × needle depth) grid for Vertical_Slash, FlexPrefill,
+//! AnchorAttention (and Full as a reference row). Shape to reproduce:
+//! dynamic methods (ours, FlexPrefill) stay uniformly high; static
+//! Vertical_Slash degrades as length grows.
+
+use super::common::{self, ExpScale};
+use super::tab3_ruler::niah_accuracy;
+use crate::util::{fmt_len, write_report};
+use crate::workload::qkv::generate_with_needle;
+
+pub fn run(scale: ExpScale, seed: u64) -> Vec<Vec<String>> {
+    let tile = scale.tile();
+    let profile = common::default_profile();
+    let depths = [0.1, 0.3, 0.5, 0.7, 0.9];
+    let lengths = scale.lengths();
+
+    println!("\n=== Fig. 7: needle-in-a-haystack (length × depth) ===");
+    let mut rows = Vec::new();
+    let mut csv = String::from("method,length,depth,accuracy\n");
+
+    for n in &lengths {
+        let n = *n;
+        let methods = common::paper_methods(n, tile, 12.0);
+        for m in &methods {
+            // Skip full (always 100) except as reference at the first length.
+            if m.name() == "full-attn" && n != lengths[0] {
+                continue;
+            }
+            let mut row = vec![m.name().to_string(), fmt_len(n)];
+            for (di, &depth) in depths.iter().enumerate() {
+                let wl =
+                    generate_with_needle(&profile, n, seed ^ ((di as u64) << 24), Some(depth));
+                let pos = wl.meta.needle.as_ref().unwrap().position;
+                let full = crate::attention::full::full_attention(&wl.head, tile);
+                let out = m.run(&wl.head);
+                let acc = niah_accuracy(&wl.head, &out.coverage, &out.out, &full.out, pos, tile);
+                row.push(format!("{acc:.0}"));
+                csv.push_str(&format!("{},{},{},{:.1}\n", m.name(), n, depth, acc));
+            }
+            rows.push(row);
+        }
+    }
+
+    let mut headers: Vec<String> = vec!["method".into(), "length".into()];
+    headers.extend(depths.iter().map(|d| format!("depth {:.0}%", d * 100.0)));
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    common::print_table(&header_refs, &rows);
+
+    let _ = write_report("fig7_needle.csv", &csv);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynamic_methods_retrieve_across_depths() {
+        let rows = run(ExpScale::Quick, 55);
+        // Anchor rows must stay high at all depths for the longest length.
+        let anchor_rows: Vec<_> = rows.iter().filter(|r| r[0] == "anchor").collect();
+        assert!(!anchor_rows.is_empty());
+        let last = anchor_rows.last().unwrap();
+        for cell in &last[2..] {
+            let acc: f64 = cell.parse().unwrap();
+            assert!(acc > 70.0, "anchor accuracy {acc} at some depth");
+        }
+        // Streaming must fail at shallow depths (needle outside window) for
+        // the longest length.
+        let streaming_last = rows.iter().filter(|r| r[0] == "streaming-llm").last().unwrap();
+        let shallow: f64 = streaming_last[2].parse().unwrap();
+        assert!(shallow < 50.0, "streaming should miss a 10%-depth needle, got {shallow}");
+    }
+}

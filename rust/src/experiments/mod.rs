@@ -1,0 +1,19 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (DESIGN.md §3 maps each to its bench target). Every driver prints the
+//! paper's rows/series and writes a CSV under `reports/`.
+//!
+//! All drivers accept quick/full scale (CPU testbed; DESIGN.md §6): quick
+//! keeps CI fast, full is what `cargo bench` runs.
+
+pub mod common;
+pub mod fig2_speedup;
+pub mod fig4_strategies;
+pub mod fig5_dominance;
+pub mod fig6_tradeoffs;
+pub mod fig7_needle;
+pub mod tab1_granularity;
+pub mod tab2_longbench;
+pub mod tab3_ruler;
+pub mod tab4_ablation;
+
+pub use common::ExpScale;

@@ -1,0 +1,69 @@
+//! Table 1 — block vs stripe granularity at matched top-k budgets.
+//!
+//! Paper (128k RULER, LLaMA): block (128,128) top-k=256 → recall 88.5 %,
+//! sparsity 56.3 %; stripe (128,1) top-k=16384 → recall 91.2 %, sparsity
+//! 76.6 %. The claim to reproduce: **stripe achieves higher sparsity at
+//! equal-or-higher recall** for the same selection budget class.
+
+use super::common::{self, ExpScale};
+use crate::attention::strategy::{pooled_scores, select, Granularity, Strategy};
+use crate::attention::metrics;
+use crate::util::write_report;
+use crate::workload::qkv::generate;
+
+pub fn run(scale: ExpScale, seed: u64) -> Vec<Vec<String>> {
+    let n = scale.main_n();
+    let tile = scale.tile();
+    // Budgets scaled from the paper's 128k numbers.
+    let k_block = ((256.0 * n as f64 / 131072.0).round() as usize).max(2);
+    let k_stripe = ((16384.0 * n as f64 / 131072.0).round() as usize).max(16);
+
+    println!("\n=== Table 1: identification granularity (n = {}) ===", crate::util::fmt_len(n));
+    let profile = common::default_profile();
+    let wl = generate(&profile, n, seed);
+    let ps = pooled_scores(&wl.head, tile);
+
+    let block_cov = select(&ps, Strategy::TopK { k: k_block }, Granularity::Block);
+    let stripe_cov = select(&ps, Strategy::TopK { k: k_stripe }, Granularity::Stripe);
+    let r_block = metrics::recall(&wl.head, &block_cov, tile);
+    let r_stripe = metrics::recall(&wl.head, &stripe_cov, tile);
+
+    let rows = vec![
+        vec![
+            format!("Block (Top-K={k_block})"),
+            crate::util::pct(r_block.mean_recall),
+            crate::util::pct(block_cov.sparsity()),
+        ],
+        vec![
+            format!("Stripe (Top-K={k_stripe})"),
+            crate::util::pct(r_stripe.mean_recall),
+            crate::util::pct(stripe_cov.sparsity()),
+        ],
+    ];
+    common::print_table(&["Method", "Recall Rate", "Sparsity Rate"], &rows);
+    println!(
+        "paper @128k: Block 88.5% / 56.3%   Stripe 91.2% / 76.6%  (shape target: stripe wins both)"
+    );
+
+    let csv = common::to_csv(&["method", "recall", "sparsity"], &rows);
+    let _ = write_report("tab1_granularity.csv", &csv);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripe_dominates_block_on_structured_workload() {
+        let rows = run(ExpScale::Quick, 11);
+        let parse = |s: &str| s.trim_end_matches('%').parse::<f64>().unwrap();
+        let block_recall = parse(&rows[0][1]);
+        let stripe_recall = parse(&rows[1][1]);
+        let block_sparsity = parse(&rows[0][2]);
+        let stripe_sparsity = parse(&rows[1][2]);
+        // The paper's Table 1 shape: stripe >= block on both axes.
+        assert!(stripe_recall >= block_recall - 2.0, "{stripe_recall} vs {block_recall}");
+        assert!(stripe_sparsity > block_sparsity, "{stripe_sparsity} vs {block_sparsity}");
+    }
+}

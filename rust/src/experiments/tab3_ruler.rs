@@ -1,0 +1,131 @@
+//! Table 3 — RULER-style accuracy across context lengths.
+//!
+//! Proxy (DESIGN.md §1): a needle key is planted at a random depth; a
+//! method's accuracy combines (a) whether its coverage retains the needle
+//! for the query blocks after it and (b) output fidelity of the final
+//! block (where the "answer" is produced). Shape to reproduce: Full ≈
+//! Anchor ≥ FlexPrefill ≈ Vertical_Slash ≫ StreamingLLM, with the gap
+//! widening as context grows (paper Table 3).
+
+use super::common::{self, ExpScale};
+use crate::attention::{metrics, HeadInput, TileConfig};
+use crate::attention::mask::Coverage;
+use crate::util::{fmt_len, write_report};
+use crate::workload::qkv::generate_with_needle;
+use crate::workload::WorkloadProfile;
+
+/// Needle-retrieval accuracy (0-100) of a coverage+output pair.
+pub fn niah_accuracy(
+    head: &HeadInput,
+    cov: &Coverage,
+    out: &crate::tensor::Mat,
+    full_out: &crate::tensor::Mat,
+    needle_pos: usize,
+    tile: TileConfig,
+) -> f64 {
+    let n = head.n();
+    let needle_block = needle_pos / tile.b_q;
+    let q_blocks = cov.q_blocks();
+    // Coverage component: fraction of post-needle query blocks seeing it.
+    let post: Vec<usize> = (needle_block + 1..q_blocks).collect();
+    let cov_frac = if post.is_empty() {
+        1.0
+    } else {
+        post.iter().filter(|&&qb| cov.covered(qb, needle_pos)).count() as f64 / post.len() as f64
+    };
+    // Fidelity component: final block's output must match dense attention
+    // (that is where the retrieval answer is read off).
+    let last_rows = tile.b_q.min(n);
+    let sparse_tail = out.rows_mat(n - last_rows, last_rows);
+    let full_tail = full_out.rows_mat(n - last_rows, last_rows);
+    let fid = metrics::fidelity_score(&sparse_tail, &full_tail, 0.25) / 100.0;
+    100.0 * cov_frac * fid
+}
+
+pub fn run_for_profile(
+    scale: ExpScale,
+    profile: &WorkloadProfile,
+    label: &str,
+    seed: u64,
+) -> Vec<Vec<String>> {
+    let tile = scale.tile();
+    let depths = [0.15, 0.5, 0.85];
+
+    println!("\n=== Table 3 (RULER proxy, {label}) ===");
+    let mut rows = Vec::new();
+    let mut per_method: std::collections::BTreeMap<String, Vec<f64>> = Default::default();
+    for n in scale.lengths() {
+        let methods = common::paper_methods(n, tile, 12.0);
+        for m in &methods {
+            let mut scores = Vec::new();
+            for (di, &depth) in depths.iter().enumerate() {
+                let wl = generate_with_needle(profile, n, seed ^ ((di as u64) << 20), Some(depth));
+                let needle = wl.meta.needle.as_ref().unwrap().position;
+                let full = crate::attention::full::full_attention(&wl.head, tile);
+                let out = m.run(&wl.head);
+                scores.push(niah_accuracy(&wl.head, &out.coverage, &out.out, &full.out, needle, tile));
+            }
+            let avg = crate::util::stats::mean(&scores);
+            rows.push(vec![fmt_len(n), m.name().to_string(), format!("{avg:.1}")]);
+            per_method.entry(m.name().to_string()).or_default().push(avg);
+        }
+    }
+    common::print_table(&["length", "method", "accuracy"], &rows);
+
+    println!("\n--- per-method average across lengths ---");
+    let avg_rows: Vec<Vec<String>> = per_method
+        .iter()
+        .map(|(m, xs)| vec![m.clone(), format!("{:.1}", crate::util::stats::mean(xs))])
+        .collect();
+    common::print_table(&["method", "avg accuracy"], &avg_rows);
+    rows
+}
+
+pub fn run(scale: ExpScale, seed: u64) -> Vec<Vec<String>> {
+    let mut all = run_for_profile(scale, &WorkloadProfile::llama_like(), "llama-like", seed);
+    if scale == ExpScale::Full {
+        all.extend(run_for_profile(scale, &WorkloadProfile::qwen_like(), "qwen-like", seed ^ 1));
+    }
+    let csv = common::to_csv(&["length", "method", "accuracy"], &all);
+    let _ = write_report("tab3_ruler.csv", &csv);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_attention_scores_perfect() {
+        let scale = ExpScale::Quick;
+        let profile = WorkloadProfile::llama_like();
+        let tile = scale.tile();
+        let wl = generate_with_needle(&profile, 2048, 5, Some(0.5));
+        let needle = wl.meta.needle.as_ref().unwrap().position;
+        let full = crate::attention::full::full_attention(&wl.head, tile);
+        let acc = niah_accuracy(&wl.head, &full.coverage, &full.out, &full.out, needle, tile);
+        assert!((acc - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn streaming_misses_mid_needle() {
+        // The paper's core Table 3 finding: StreamingLLM cannot retrieve
+        // mid-context needles; anchor can.
+        let profile = WorkloadProfile::llama_like();
+        let tile = TileConfig::new(128, 128);
+        let n = 4096;
+        let wl = generate_with_needle(&profile, n, 17, Some(0.5));
+        let needle = wl.meta.needle.as_ref().unwrap().position;
+        let full = crate::attention::full::full_attention(&wl.head, tile);
+
+        let methods = common::paper_methods(n, tile, 12.0);
+        let streaming = &methods[1];
+        let anchor = &methods[4];
+        let s_out = streaming.run(&wl.head);
+        let a_out = anchor.run(&wl.head);
+        let s_acc = niah_accuracy(&wl.head, &s_out.coverage, &s_out.out, &full.out, needle, tile);
+        let a_acc = niah_accuracy(&wl.head, &a_out.coverage, &a_out.out, &full.out, needle, tile);
+        assert!(a_acc > 90.0, "anchor accuracy {a_acc}");
+        assert!(s_acc < a_acc - 20.0, "streaming {s_acc} vs anchor {a_acc}");
+    }
+}

@@ -1,0 +1,27 @@
+//! # AnchorAttention
+//!
+//! Reproduction of *“Anchor Attention: Difference-Aware Sparse Attention
+//! with Stripe Granularity”* (EMNLP 2025) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **L3 (this crate)** — serving coordinator (router, dynamic batcher,
+//!   paged KV cache, chunked-prefill scheduler) plus the full experiment
+//!   substrate: a multithreaded blocked attention engine implementing the
+//!   paper's three algorithms and all evaluated baselines.
+//! * **L2/L1 (`python/compile/`)** — JAX model and Pallas kernels, AOT
+//!   lowered to HLO text and executed from Rust via the PJRT C API
+//!   ([`runtime`]).
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod attention;
+pub mod config;
+pub mod experiments;
+pub mod coordinator;
+pub mod model;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+pub mod util;
+pub mod workload;

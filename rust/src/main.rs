@@ -1,0 +1,191 @@
+//! `anchor-attn` — launcher CLI for the AnchorAttention reproduction.
+//!
+//! Subcommands:
+//!   selftest                      PJRT + artifact sanity checks
+//!   serve       [--config F]      serve a synthetic trace over PJRT
+//!   bench <exp> [--quick]         run one experiment driver
+//!                                 (fig2|tab1|fig4|fig5|fig6|fig7|tab2|tab3|tab4|all)
+//!   dominance   [--n N]           Fig. 5 measurement at arbitrary length
+//!   tpu-estimate                  L1 VMEM/MXU block-shape table
+//!   gen-trace   [--rate R]        print a synthetic serving trace
+
+use anchor_attention::config::AppConfig;
+use anchor_attention::coordinator::engine::PjrtEngine;
+use anchor_attention::coordinator::request::Request;
+use anchor_attention::coordinator::scheduler::SparsityModel;
+use anchor_attention::coordinator::server::serve;
+use anchor_attention::experiments::{self, ExpScale};
+use anchor_attention::util::cli::Args;
+use anchor_attention::workload::trace::generate_trace;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("selftest") => selftest(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("dominance") => cmd_dominance(&args),
+        Some("tpu-estimate") => cmd_tpu(),
+        Some("gen-trace") => cmd_gen_trace(&args),
+        _ => {
+            eprintln!(
+                "usage: anchor-attn <selftest|serve|bench|dominance|tpu-estimate|gen-trace> [flags]"
+            );
+            eprintln!("  bench experiments: fig2 tab1 fig4 fig5 fig6 fig7 tab2 tab3 tab4 all");
+            Ok(())
+        }
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<AppConfig> {
+    match args.get("config") {
+        Some(path) => AppConfig::load(path),
+        None => Ok(AppConfig::default()),
+    }
+}
+
+fn selftest(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    println!("[1/3] PJRT CPU client…");
+    let rt = anchor_attention::runtime::Runtime::open(&cfg.artifact_dir)?;
+    println!("      platform = {}", rt.platform());
+    println!("[2/3] manifest…");
+    rt.manifest().validate()?;
+    println!(
+        "      {} artifacts, {} params",
+        rt.manifest().artifacts.len(),
+        rt.manifest().weights.params.len()
+    );
+    println!("[3/3] compile + run attn_full_256…");
+    let q = vec![0.1f32; 256 * 64];
+    let out = rt.execute(
+        "attn_full_256",
+        &[
+            anchor_attention::runtime::literal_f32(&[256, 64], &q)?,
+            anchor_attention::runtime::literal_f32(&[256, 64], &q)?,
+            anchor_attention::runtime::literal_f32(&[256, 64], &q)?,
+        ],
+    )?;
+    anyhow::ensure!(out.len() == 1);
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = load_config(args)?;
+    cfg.trace.rate = args.f64_or("rate", cfg.trace.rate)?;
+    cfg.trace.num_requests = args.usize_or("requests", cfg.trace.num_requests)?;
+    if args.has("anchor-sched") {
+        cfg.server.scheduler.sparsity =
+            SparsityModel::Anchor { stripe_keep: 0.1, anchor_tokens: 256 };
+    }
+
+    println!("loading engine from {} …", cfg.artifact_dir);
+    let mut engine = PjrtEngine::new(&cfg.artifact_dir)?;
+    let vocab = engine.vocab() as i32;
+
+    let trace = generate_trace(&cfg.trace);
+    let max_prompt = cfg.server.max_seq.saturating_sub(cfg.trace.decode_max);
+    let requests: Vec<Request> = trace
+        .iter()
+        .map(|t| {
+            let len = t.prompt_tokens.min(max_prompt);
+            let prompt: Vec<i32> = (0..len)
+                .map(|i| ((t.id as usize * 131 + i * 7) % vocab as usize) as i32)
+                .collect();
+            Request::new(t.id, prompt, t.decode_tokens, t.arrival_s)
+        })
+        .collect();
+    println!("serving {} requests (rate {}/s)…", requests.len(), cfg.trace.rate);
+
+    let report = serve(&cfg.server, requests, &mut engine, |e, r| {
+        e.register(r.id, r.prompt.clone());
+    })?;
+    report.print_summary();
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let scale = ExpScale::from_quick_flag(args.bool_or("quick", false)?);
+    let seed = args.u64_or("seed", 42)?;
+    let which = args.positional().get(1).map(|s| s.as_str()).unwrap_or("all");
+    let run_one = |name: &str| match name {
+        "fig2" => drop(experiments::fig2_speedup::run(scale, seed)),
+        "tab1" => drop(experiments::tab1_granularity::run(scale, seed)),
+        "fig4" => drop(experiments::fig4_strategies::run(scale, seed)),
+        "fig5" => drop(experiments::fig5_dominance::run(scale, seed)),
+        "fig6" => drop(experiments::fig6_tradeoffs::run(scale, seed)),
+        "fig7" => drop(experiments::fig7_needle::run(scale, seed)),
+        "tab2" => drop(experiments::tab2_longbench::run(scale, seed)),
+        "tab3" => drop(experiments::tab3_ruler::run(scale, seed)),
+        "tab4" => drop(experiments::tab4_ablation::run(scale, seed)),
+        other => eprintln!("unknown experiment '{other}'"),
+    };
+    if which == "all" {
+        for name in ["fig2", "tab1", "fig4", "fig5", "fig6", "fig7", "tab2", "tab3", "tab4"] {
+            run_one(name);
+        }
+    } else {
+        run_one(which);
+    }
+    Ok(())
+}
+
+fn cmd_dominance(args: &Args) -> anyhow::Result<()> {
+    let n = args.usize_or("n", 8192)?;
+    let seed = args.u64_or("seed", 42)?;
+    for (name, p) in [
+        ("llama-like", anchor_attention::workload::WorkloadProfile::llama_like()),
+        ("qwen-like", anchor_attention::workload::WorkloadProfile::qwen_like()),
+    ] {
+        let wl = anchor_attention::workload::qkv::generate(&p, n, seed);
+        let (init, win, stripe, other) =
+            anchor_attention::workload::qkv::dominance_breakdown(&wl, p.sink_tokens, 128);
+        println!(
+            "{name:>12}: {:.2}% anchor (init {:.1}%, window {:.1}%) | stripes {:.1}% | other {:.1}%",
+            (init + win) * 100.0, init * 100.0, win * 100.0, stripe * 100.0, other * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tpu() -> anyhow::Result<()> {
+    use anchor_attention::simulator::tpu::{estimate, KernelTiles, TpuCore};
+    let core = TpuCore::default();
+    println!("{:<22} {:>12} {:>10} {:>8}", "tile (b_q,b_kv,d)", "VMEM bytes", "VMEM %", "MXU %");
+    for (bq, bkv, d) in [
+        (128, 128, 128),
+        (128, 128, 64),
+        (256, 128, 128),
+        (128, 256, 128),
+        (256, 256, 128),
+        (512, 128, 128),
+    ] {
+        let e = estimate(
+            &core,
+            &KernelTiles { b_q: bq, b_kv: bkv, d, elem_bytes: 2, double_buffered: true },
+        );
+        println!(
+            "{:<22} {:>12} {:>9.1}% {:>7.1}%{}",
+            format!("({bq},{bkv},{d})"),
+            e.vmem_bytes,
+            e.vmem_frac * 100.0,
+            e.mxu_utilization * 100.0,
+            if e.fits { "" } else { "  OVERFLOW" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen_trace(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = load_config(args)?.trace;
+    cfg.rate = args.f64_or("rate", cfg.rate)?;
+    cfg.num_requests = args.usize_or("requests", cfg.num_requests)?;
+    for r in generate_trace(&cfg) {
+        println!(
+            "{{\"id\": {}, \"arrival_s\": {:.3}, \"prompt_tokens\": {}, \"decode_tokens\": {}}}",
+            r.id, r.arrival_s, r.prompt_tokens, r.decode_tokens
+        );
+    }
+    Ok(())
+}

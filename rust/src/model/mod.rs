@@ -1,0 +1,165 @@
+//! Rust-side LM glue: sessions over the AOT serving artifacts
+//! (`lm_prefill256`, `lm_decode`) with functional KV caches.
+//!
+//! A [`LmModel`] owns the compiled executables + weight literals; a
+//! [`LmSession`] owns one sequence's KV cache state. Prompts are processed
+//! in fixed 256-token chunks (the artifact shape): partial tail chunks are
+//! zero-padded, which is exact because within-chunk causality means valid
+//! queries never attend padded keys, and the session position only
+//! advances by the true token count so later chunks overwrite the padding.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{literal_i32, literal_i32_scalar, Runtime};
+
+pub struct LmModel {
+    runtime: Rc<Runtime>,
+    params: Vec<xla::Literal>,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub prefill_chunk: usize,
+    cache_shape: Vec<usize>,
+}
+
+impl LmModel {
+    pub fn load(runtime: Rc<Runtime>) -> Result<Self> {
+        let m = runtime.manifest().model;
+        runtime.manifest().validate()?;
+        let params = runtime.load_weights()?;
+        let cache_shape = vec![m.n_layers, m.n_kv_heads, m.max_seq, m.d_head];
+        Ok(Self {
+            runtime,
+            params,
+            vocab: m.vocab,
+            max_seq: m.max_seq,
+            prefill_chunk: m.prefill_chunk,
+            cache_shape,
+        })
+    }
+
+    /// Eagerly compile both serving executables (avoids first-request
+    /// latency spikes; used by the engine at startup).
+    pub fn warmup(&self) -> Result<()> {
+        self.runtime.executable("lm_prefill256")?;
+        self.runtime.executable("lm_decode")?;
+        Ok(())
+    }
+
+    pub fn new_session(&self) -> Result<LmSession> {
+        let zeros = vec![0.0f32; self.cache_shape.iter().product()];
+        Ok(LmSession {
+            kcache: crate::runtime::literal_f32(&self.cache_shape, &zeros)?,
+            vcache: crate::runtime::literal_f32(&self.cache_shape, &zeros)?,
+            pos: 0,
+        })
+    }
+
+    fn run_step(
+        &self,
+        artifact: &str,
+        ids: &[i32],
+        session: &mut LmSession,
+        true_count: usize,
+    ) -> Result<Vec<f32>> {
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 4);
+        for p in &self.params {
+            // Literal clone is a host-side copy; acceptable at this model
+            // size (perf pass note: buffer donation would avoid it).
+            inputs.push(clone_literal(p)?);
+        }
+        inputs.push(literal_i32(ids));
+        inputs.push(std::mem::replace(&mut session.kcache, xla::Literal::scalar(0f32)));
+        inputs.push(std::mem::replace(&mut session.vcache, xla::Literal::scalar(0f32)));
+        inputs.push(literal_i32_scalar(session.pos as i32));
+
+        let mut out = self.runtime.execute(artifact, &inputs)?;
+        if out.len() != 3 {
+            return Err(anyhow!("{artifact}: expected 3 outputs, got {}", out.len()));
+        }
+        session.vcache = out.pop().unwrap();
+        session.kcache = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>()?;
+        session.pos += true_count;
+        Ok(logits)
+    }
+
+    /// Prefill the whole prompt; returns the logits row of the last
+    /// *valid* token (`[vocab]`).
+    pub fn prefill(&self, session: &mut LmSession, prompt: &[i32]) -> Result<Vec<f32>> {
+        if prompt.is_empty() {
+            return Err(anyhow!("empty prompt"));
+        }
+        if session.pos + prompt.len() > self.max_seq {
+            return Err(anyhow!(
+                "prompt of {} tokens exceeds max_seq {} (pos {})",
+                prompt.len(),
+                self.max_seq,
+                session.pos
+            ));
+        }
+        let chunk = self.prefill_chunk;
+        let mut last = Vec::new();
+        let mut off = 0;
+        while off < prompt.len() {
+            let take = (prompt.len() - off).min(chunk);
+            let mut ids = vec![0i32; chunk];
+            ids[..take].copy_from_slice(&prompt[off..off + take]);
+            let logits = self.run_step("lm_prefill256", &ids, session, take)?;
+            // Last valid row of this chunk.
+            let row = take - 1;
+            last = logits[row * self.vocab..(row + 1) * self.vocab].to_vec();
+            off += take;
+        }
+        Ok(last)
+    }
+
+    /// One decode step; returns next-token logits (`[vocab]`).
+    pub fn decode(&self, session: &mut LmSession, token: i32) -> Result<Vec<f32>> {
+        if session.pos + 1 > self.max_seq {
+            return Err(anyhow!("sequence exceeds max_seq {}", self.max_seq));
+        }
+        self.run_step("lm_decode", &[token], session, 1)
+    }
+}
+
+/// One sequence's functional KV-cache state.
+pub struct LmSession {
+    kcache: xla::Literal,
+    vcache: xla::Literal,
+    pub pos: usize,
+}
+
+/// Greedy sampling.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0;
+    let mut bestv = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > bestv {
+            bestv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    // The xla crate has no Clone for Literal; round-trip through raw data.
+    let shape = l.array_shape()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    let v = l.to_vec::<f32>()?;
+    Ok(xla::Literal::vec1(&v).reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0, -3.0]), 1);
+    }
+}

@@ -1,0 +1,255 @@
+//! `artifacts/manifest.json` schema — the contract between `aot.py` and
+//! the Rust runtime/model layers.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        let dtype = j.get("dtype").as_str().ok_or_else(|| anyhow!("tensor missing dtype"))?;
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensor missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { dtype: dtype.to_string(), shape })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub count: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightsSpec {
+    pub file: String,
+    pub total_f32: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+/// Mirror of `python/compile/model.py::ModelCfg`.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub max_seq: usize,
+    pub prefill_chunk: usize,
+}
+
+/// Anchor hyperparameters baked into the `attn_anchor_*` artifacts.
+#[derive(Clone, Copy, Debug)]
+pub struct AnchorSpec {
+    pub block: usize,
+    pub theta: f64,
+    pub step: usize,
+    pub init_blocks: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: ModelSpec,
+    pub anchor: AnchorSpec,
+    pub weights: WeightsSpec,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+
+        let m = j.get("model");
+        let req = |node: &Json, key: &str| -> Result<usize> {
+            node.get(key).as_usize().ok_or_else(|| anyhow!("model.{key} missing"))
+        };
+        let model = ModelSpec {
+            vocab: req(m, "vocab")?,
+            d_model: req(m, "d_model")?,
+            n_layers: req(m, "n_layers")?,
+            n_heads: req(m, "n_heads")?,
+            n_kv_heads: req(m, "n_kv_heads")?,
+            d_head: req(m, "d_head")?,
+            d_ffn: req(m, "d_ffn")?,
+            max_seq: req(m, "max_seq")?,
+            prefill_chunk: req(m, "prefill_chunk")?,
+        };
+
+        let a = j.get("anchor");
+        let anchor = AnchorSpec {
+            block: req(a, "block")?,
+            theta: a.get("theta").as_f64().ok_or_else(|| anyhow!("anchor.theta"))?,
+            step: req(a, "step")?,
+            init_blocks: req(a, "init_blocks")?,
+        };
+
+        let w = j.get("weights");
+        let params = w
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("weights.params missing"))?
+            .iter()
+            .map(|p| -> Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p.get("name").as_str().ok_or_else(|| anyhow!("param name"))?.into(),
+                    shape: p
+                        .get("shape")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("param shape"))?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: p.get("offset").as_usize().ok_or_else(|| anyhow!("param offset"))?,
+                    count: p.get("count").as_usize().ok_or_else(|| anyhow!("param count"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let weights = WeightsSpec {
+            file: w.get("file").as_str().unwrap_or("weights.bin").to_string(),
+            total_f32: w.get("total_f32").as_usize().ok_or_else(|| anyhow!("total_f32"))?,
+            params,
+        };
+
+        let artifacts = j
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts missing"))?
+            .iter()
+            .map(|a| -> Result<ArtifactSpec> {
+                Ok(ArtifactSpec {
+                    name: a.get("name").as_str().ok_or_else(|| anyhow!("artifact name"))?.into(),
+                    file: a.get("file").as_str().ok_or_else(|| anyhow!("artifact file"))?.into(),
+                    inputs: a
+                        .get("inputs")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::parse)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: a
+                        .get("outputs")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::parse)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Self { model, anchor, weights, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Sanity checks used by integration tests and `selftest`.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0;
+        for p in &self.weights.params {
+            if p.offset != off {
+                return Err(anyhow!("param {} offset {} != expected {off}", p.name, p.offset));
+            }
+            let count: usize = p.shape.iter().product();
+            if count != p.count {
+                return Err(anyhow!("param {} count mismatch", p.name));
+            }
+            off += p.count;
+        }
+        if off != self.weights.total_f32 {
+            return Err(anyhow!("weights total {} != sum of params {off}", self.weights.total_f32));
+        }
+        if self.model.n_heads % self.model.n_kv_heads != 0 {
+            return Err(anyhow!("GQA head counts inconsistent"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+        "model": {"vocab": 512, "d_model": 256, "n_layers": 4, "n_heads": 8,
+                  "n_kv_heads": 4, "d_head": 32, "d_ffn": 512, "max_seq": 2048,
+                  "prefill_chunk": 256},
+        "anchor": {"block": 32, "theta": 12.0, "step": 4, "init_blocks": 1},
+        "weights": {"file": "weights.bin", "total_f32": 12,
+                    "params": [{"name": "a", "shape": [3, 2], "offset": 0, "count": 6},
+                               {"name": "b", "shape": [6], "offset": 6, "count": 6}]},
+        "artifacts": [{"name": "x", "file": "x.hlo.txt",
+                       "inputs": [{"dtype": "f32", "shape": [4, 4]}],
+                       "outputs": [{"dtype": "f32", "shape": [4]}]}]
+    }"#;
+
+    #[test]
+    fn parse_and_validate_mini() {
+        let m = Manifest::parse(MINI).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.model.vocab, 512);
+        assert_eq!(m.anchor.step, 4);
+        assert_eq!(m.weights.params.len(), 2);
+        let a = m.artifact("x").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 4]);
+        assert_eq!(a.inputs[0].elements(), 16);
+        assert!(m.artifact("nope").is_none());
+    }
+
+    #[test]
+    fn validate_rejects_bad_offsets() {
+        let bad = MINI.replace("\"offset\": 6", "\"offset\": 7");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_total() {
+        let bad = MINI.replace("\"total_f32\": 12", "\"total_f32\": 13");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn parse_rejects_missing_model_field() {
+        let bad = MINI.replace("\"vocab\": 512, ", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

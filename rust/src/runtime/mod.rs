@@ -1,0 +1,135 @@
+//! PJRT runtime: load AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//!
+//! Python never runs on the request path — after `make artifacts` the Rust
+//! binary is self-contained. Interchange is HLO **text** (see
+//! DESIGN.md / aot.py header for the 64-bit-proto-id rationale).
+//!
+//! Thread-model note: `PjRtClient` is `Rc`-based (not `Send`), so a
+//! [`Runtime`] must be owned by a single thread. The coordinator runs one
+//! dedicated engine thread that owns the runtime (`coordinator::engine`).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+
+/// Lazily-compiling artifact registry over a PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    executables: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, dir, executables: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.executables.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact. Inputs must match the manifest spec; outputs
+    /// are the decomposed result tuple (aot.py lowers with
+    /// `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Load the flat f32 weight blob as per-parameter Literals (the
+    /// ordered prefix of every `lm_*` artifact's inputs).
+    pub fn load_weights(&self) -> Result<Vec<xla::Literal>> {
+        let w = &self.manifest.weights;
+        let path = self.dir.join(&w.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading weights {}", path.display()))?;
+        if bytes.len() != w.total_f32 * 4 {
+            return Err(anyhow!(
+                "weights.bin is {} bytes, manifest says {}",
+                bytes.len(),
+                w.total_f32 * 4
+            ));
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let mut out = Vec::with_capacity(w.params.len());
+        for p in &w.params {
+            let slice = &floats[p.offset..p.offset + p.count];
+            let dims: Vec<i64> = p.shape.iter().map(|&x| x as i64).collect();
+            out.push(xla::Literal::vec1(slice).reshape(&dims)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Build an f32 Literal from a shape + data.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let count: usize = shape.iter().product();
+    if count != data.len() {
+        return Err(anyhow!("shape {:?} needs {count} elements, got {}", shape, data.len()));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 Literal (1-D).
+pub fn literal_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Scalar i32 Literal.
+pub fn literal_i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}

@@ -1,0 +1,118 @@
+//! A100-80GB roofline cost model.
+//!
+//! `time = max(flops / (eff · peak_flops), bytes / (eff_bw · hbm_bw)) +
+//! fixed kernel overhead`. Constants follow the public A100 spec sheet and
+//! the efficiency range measured for FlashAttention-2-class kernels
+//! (~0.5–0.7 of peak on fp16/bf16 attention). Used only for Fig. 2 / 6
+//! *latency-regime* translation — crossovers and ratios also come from the
+//! measured CPU engine (DESIGN.md §6).
+
+use crate::attention::CostTally;
+
+#[derive(Clone, Copy, Debug)]
+pub struct A100Model {
+    /// Peak dense bf16/fp16 tensor-core throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// HBM2e bandwidth (bytes/s).
+    pub hbm_bw: f64,
+    /// Achievable fraction of peak for attention matmuls.
+    pub flop_eff: f64,
+    /// Achievable fraction of HBM bandwidth for streaming loads.
+    pub bw_eff: f64,
+    /// Achievable fraction of HBM bandwidth for *gathered* (discrete) loads
+    /// — the paper's kernel coalesces stripe gathers per §3.3, retaining
+    /// most of the streaming rate.
+    pub gather_eff: f64,
+    /// Fixed launch/setup overhead per kernel phase (seconds).
+    pub phase_overhead: f64,
+}
+
+impl Default for A100Model {
+    fn default() -> Self {
+        Self {
+            peak_flops: 312e12,
+            hbm_bw: 2.039e12,
+            flop_eff: 0.55,
+            bw_eff: 0.80,
+            gather_eff: 0.60,
+            phase_overhead: 12e-6,
+        }
+    }
+}
+
+/// Predicted phase time for a cost tally.
+impl A100Model {
+    /// Time for a contiguous-access phase (dense or block-sparse tiles).
+    pub fn phase_time(&self, cost: &CostTally) -> f64 {
+        self.time_inner(cost, self.bw_eff)
+    }
+
+    /// Time for a gather-access phase (discrete stripe loads).
+    pub fn gather_phase_time(&self, cost: &CostTally) -> f64 {
+        self.time_inner(cost, self.gather_eff)
+    }
+
+    fn time_inner(&self, cost: &CostTally, bw_eff: f64) -> f64 {
+        if cost.flops == 0 && cost.kv_bytes == 0 {
+            return 0.0;
+        }
+        let compute = cost.flops as f64 / (self.flop_eff * self.peak_flops);
+        let memory = cost.kv_bytes as f64 / (bw_eff * self.hbm_bw);
+        compute.max(memory) + self.phase_overhead
+    }
+
+    /// Dense causal attention time for one head (the Fig. 2 denominator).
+    pub fn full_attention_time(&self, n: usize, d: usize) -> f64 {
+        // Causal: ~n²/2 score entries; 4 flops each at head dim d.
+        let entries = (n as u64 * n as u64) / 2;
+        let cost = CostTally {
+            flops: 4 * entries * d as u64,
+            kv_bytes: 2 * (n * d * 2) as u64, // K+V streamed once, bf16
+            ident_scores: 0,
+        };
+        self.phase_time(&cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn longer_context_takes_longer() {
+        let m = A100Model::default();
+        let t64 = m.full_attention_time(65536, 128);
+        let t128 = m.full_attention_time(131072, 128);
+        assert!(t128 > 3.0 * t64, "quadratic scaling: {t64} -> {t128}");
+    }
+
+    #[test]
+    fn full_128k_in_plausible_range() {
+        // One head, 128k, d=128: paper-scale kernels land in tens of ms.
+        let m = A100Model::default();
+        let t = m.full_attention_time(131072, 128);
+        assert!(t > 5e-3 && t < 500e-3, "t = {t}s");
+    }
+
+    #[test]
+    fn gather_slower_than_stream_when_memory_bound() {
+        let m = A100Model::default();
+        let cost = CostTally { flops: 1, kv_bytes: 1 << 30, ident_scores: 0 };
+        assert!(m.gather_phase_time(&cost) > m.phase_time(&cost));
+    }
+
+    #[test]
+    fn zero_cost_is_zero_time() {
+        let m = A100Model::default();
+        assert_eq!(m.phase_time(&CostTally::default()), 0.0);
+    }
+
+    #[test]
+    fn compute_bound_vs_memory_bound() {
+        let m = A100Model::default();
+        // Heavy flops, no bytes -> compute-bound.
+        let c = CostTally { flops: 1 << 50, kv_bytes: 0, ident_scores: 0 };
+        let t = m.phase_time(&c);
+        assert!((t - (c.flops as f64 / (m.flop_eff * m.peak_flops) + m.phase_overhead)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Analytic performance models (DESIGN.md §1, §5).
+//!
+//! The CPU engine measures *relative* latencies faithfully, but the paper
+//! reports absolute A100 milliseconds; [`a100`] translates each method's
+//! [`CostTally`](crate::attention::CostTally) into A100-regime time via a
+//! roofline model. [`tpu`] estimates VMEM footprint and MXU utilization of
+//! the Pallas kernels for the L1 perf targets (§Perf).
+
+pub mod a100;
+pub mod tpu;

@@ -1,0 +1,124 @@
+//! TPU-side estimates for the L1 Pallas kernels (DESIGN.md §5).
+//!
+//! Pallas runs under `interpret=True` on the CPU PJRT plugin, so TPU
+//! performance cannot be measured here; instead we model the kernels'
+//! BlockSpec schedules: VMEM footprint per grid step (must fit the ~16 MiB
+//! per-core budget, with double-buffering) and MXU utilization (fraction
+//! of 128×128-systolic-array issue slots doing useful work). These numbers
+//! gate the block-shape choices recorded in EXPERIMENTS.md §Perf.
+
+/// TPU v4-like core parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TpuCore {
+    /// VMEM bytes per core.
+    pub vmem_bytes: usize,
+    /// MXU systolic dimension (128 for v4/v5).
+    pub mxu_dim: usize,
+    /// Peak bf16 MACs per cycle (one 128×128 MXU issue).
+    pub macs_per_cycle: usize,
+}
+
+impl Default for TpuCore {
+    fn default() -> Self {
+        Self { vmem_bytes: 16 << 20, mxu_dim: 128, macs_per_cycle: 128 * 128 }
+    }
+}
+
+/// One kernel's tile schedule (what BlockSpec pins in VMEM per grid step).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelTiles {
+    pub b_q: usize,
+    pub b_kv: usize,
+    pub d: usize,
+    /// Bytes per element (2 = bf16, 4 = f32).
+    pub elem_bytes: usize,
+    /// Buffers resident per step: Q tile, K tile, V tile, acc, m/l.
+    pub double_buffered: bool,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TileEstimate {
+    pub vmem_bytes: usize,
+    pub vmem_frac: f64,
+    /// Utilization of MXU issue slots for the QKᵀ matmul of one tile.
+    pub mxu_utilization: f64,
+    pub fits: bool,
+}
+
+/// Estimate VMEM footprint + MXU utilization for a tile schedule.
+pub fn estimate(core: &TpuCore, t: &KernelTiles) -> TileEstimate {
+    let eb = t.elem_bytes;
+    // Resident per grid step: Q [b_q, d], K [b_kv, d], V [b_kv, d],
+    // acc [b_q, d] (f32), m+l [b_q] (f32), scores [b_q, b_kv] (f32).
+    let stream = (t.b_kv * t.d) * eb * 2; // K + V tiles stream per step
+    let fixed = (t.b_q * t.d) * eb            // Q tile
+        + (t.b_q * t.d) * 4                   // acc (f32)
+        + 2 * t.b_q * 4                       // m, l
+        + (t.b_q * t.b_kv) * 4; // scores scratch
+    let mult = if t.double_buffered { 2 } else { 1 };
+    let vmem = fixed + stream * mult;
+
+    // MXU utilization: a [b_q, d] × [d, b_kv] matmul issues
+    // ceil(b_q/128)·ceil(d/128)·ceil(b_kv/128) passes of the 128×128 array;
+    // utilization = useful MACs / (passes · 128·128·128-cycle volume).
+    let m128 = |x: usize| x.div_ceil(core.mxu_dim);
+    let passes = m128(t.b_q) * m128(t.d) * m128(t.b_kv);
+    let ideal = t.b_q * t.d * t.b_kv;
+    let issued = passes * core.mxu_dim * core.mxu_dim * core.mxu_dim;
+    let mxu_utilization = ideal as f64 / issued as f64;
+
+    TileEstimate {
+        vmem_bytes: vmem,
+        vmem_frac: vmem as f64 / core.vmem_bytes as f64,
+        mxu_utilization,
+        fits: vmem <= core.vmem_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_tile_fits_vmem() {
+        // The paper's (128, 128) tiles at d=128, bf16, double-buffered.
+        let e = estimate(
+            &TpuCore::default(),
+            &KernelTiles { b_q: 128, b_kv: 128, d: 128, elem_bytes: 2, double_buffered: true },
+        );
+        assert!(e.fits, "vmem {} bytes", e.vmem_bytes);
+        assert!(e.vmem_frac < 0.1);
+        assert!((e.mxu_utilization - 1.0).abs() < 1e-9, "aligned tiles use full MXU");
+    }
+
+    #[test]
+    fn misaligned_tiles_waste_mxu() {
+        let e = estimate(
+            &TpuCore::default(),
+            &KernelTiles { b_q: 64, b_kv: 64, d: 64, elem_bytes: 2, double_buffered: false },
+        );
+        // 64³ useful / 128³ issued = 1/8.
+        assert!((e.mxu_utilization - 0.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oversized_tiles_overflow() {
+        let e = estimate(
+            &TpuCore::default(),
+            &KernelTiles { b_q: 4096, b_kv: 4096, d: 128, elem_bytes: 4, double_buffered: true },
+        );
+        assert!(!e.fits);
+    }
+
+    #[test]
+    fn double_buffering_costs_stream_only() {
+        let base = KernelTiles { b_q: 128, b_kv: 128, d: 128, elem_bytes: 2, double_buffered: false };
+        let single = estimate(&TpuCore::default(), &base);
+        let double = estimate(
+            &TpuCore::default(),
+            &KernelTiles { double_buffered: true, ..base },
+        );
+        let stream = 2 * 128 * 128 * 2;
+        assert_eq!(double.vmem_bytes - single.vmem_bytes, stream);
+    }
+}

@@ -1,0 +1,357 @@
+//! Minimal dense f32 tensor substrate.
+//!
+//! The attention engine works per head with row-major matrices
+//! (`[rows, cols]`), so a 2-D [`Mat`] plus a handful of blocked kernels is
+//! all the linear algebra this project needs. The two matmul flavors are
+//! shaped for attention:
+//!
+//! * [`matmul_nt`] — `C = A · Bᵀ` where both operands are `[*, d]` row-major;
+//!   this is exactly `Q · Kᵀ` (rows of K are contiguous, so the inner loop is
+//!   a dot product of contiguous slices — cache-friendly, vectorizable).
+//! * [`matmul_nn`] — `C = A · B`, i.e. `P · V`.
+//!
+//! Kernels are written as straight safe Rust with accumulator unrolling;
+//! the perf pass (EXPERIMENTS.md §Perf) iterates on the micro-kernels.
+
+pub mod ops;
+
+/// Row-major 2-D f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// View of rows `[start, start+len)` as a borrowed sub-matrix slice.
+    pub fn rows_slice(&self, start: usize, len: usize) -> &[f32] {
+        debug_assert!(start + len <= self.rows);
+        &self.data[start * self.cols..(start + len) * self.cols]
+    }
+
+    /// Copy of rows `[start, start+len)` as a new Mat.
+    pub fn rows_mat(&self, start: usize, len: usize) -> Mat {
+        Mat::from_vec(len, self.cols, self.rows_slice(start, len).to_vec())
+    }
+
+    /// Gather the given rows into a new, contiguous matrix (the engine's
+    /// `load_discrete` primitive — Eq. 4 of the paper).
+    pub fn gather_rows(&self, idx: &[u32]) -> Mat {
+        let mut out = Vec::with_capacity(idx.len() * self.cols);
+        for &i in idx {
+            out.extend_from_slice(self.row(i as usize));
+        }
+        Mat::from_vec(idx.len(), self.cols, out)
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Frobenius-norm relative error vs `other` — the output-fidelity
+    /// metric used throughout the experiment harness.
+    pub fn rel_err(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = (*a - *b) as f64;
+            num += d * d;
+            den += (*b as f64) * (*b as f64);
+        }
+        if den == 0.0 {
+            num.sqrt()
+        } else {
+            (num / den).sqrt()
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// `C = A · Bᵀ` with `A: [m, k]`, `B: [n, k]`, `C: [m, n]`.
+/// Row-dot formulation: both inner operands are contiguous rows.
+pub fn matmul_nt(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols, "inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "output shape");
+    let k = a.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..b.rows {
+            crow[j] = dot(arow, b.row(j), k);
+        }
+    }
+}
+
+/// Scaled variant: `C = (A · Bᵀ) * scale` — fuses the 1/√d of attention.
+pub fn matmul_nt_scaled(a: &Mat, b: &Mat, scale: f32, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols, "inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "output shape");
+    let k = a.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        // Process 4 B-rows at a time to amortize A-row loads.
+        let mut j = 0;
+        while j + 4 <= b.rows {
+            let (d0, d1, d2, d3) = dot4(arow, b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3), k);
+            crow[j] = d0 * scale;
+            crow[j + 1] = d1 * scale;
+            crow[j + 2] = d2 * scale;
+            crow[j + 3] = d3 * scale;
+            j += 4;
+        }
+        while j < b.rows {
+            crow[j] = dot(arow, b.row(j), k) * scale;
+            j += 1;
+        }
+    }
+}
+
+/// `C += A · B` with `A: [m, k]`, `B: [k, n]`, `C: [m, n]`.
+pub fn matmul_nn_acc(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "output shape");
+    let n = b.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // sparse P rows skip work
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            axpy(av, brow, crow);
+        }
+    }
+}
+
+/// `y += a * x` over slices.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // 8-wide unroll: LLVM auto-vectorizes this cleanly.
+    let n = x.len();
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        y[i] += a * x[i];
+        y[i + 1] += a * x[i + 1];
+        y[i + 2] += a * x[i + 2];
+        y[i + 3] += a * x[i + 3];
+        y[i + 4] += a * x[i + 4];
+        y[i + 5] += a * x[i + 5];
+        y[i + 6] += a * x[i + 6];
+        y[i + 7] += a * x[i + 7];
+    }
+    for i in chunks * 8..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// Dot product of two contiguous slices with 4 accumulators.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32], k: usize) -> f32 {
+    debug_assert!(a.len() >= k && b.len() >= k);
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = k / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..k {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Four simultaneous dot products sharing one A-row load.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32], k: usize) -> (f32, f32, f32, f32) {
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    for i in 0..k {
+        let av = a[i];
+        s0 += av * b0[i];
+        s1 += av * b1[i];
+        s2 += av * b2[i];
+        s3 += av * b3[i];
+    }
+    (s0, s1, s2, s3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    fn matmul_naive_nt(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.rows);
+        for i in 0..a.rows {
+            for j in 0..b.rows {
+                let mut s = 0.0;
+                for kk in 0..a.cols {
+                    s += a.at(i, kk) * b.at(j, kk);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_nt_matches_naive() {
+        let mut rng = Pcg64::seeded(11);
+        for (m, n, k) in [(1, 1, 1), (3, 5, 7), (16, 16, 64), (33, 17, 63)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, n, k);
+            let mut c = Mat::zeros(m, n);
+            matmul_nt(&a, &b, &mut c);
+            let expect = matmul_naive_nt(&a, &b);
+            assert!(c.max_abs_diff(&expect) < 1e-4, "m={m} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_scaled_matches() {
+        let mut rng = Pcg64::seeded(12);
+        let a = rand_mat(&mut rng, 9, 32);
+        let b = rand_mat(&mut rng, 13, 32);
+        let mut c1 = Mat::zeros(9, 13);
+        let mut c2 = Mat::zeros(9, 13);
+        matmul_nt(&a, &b, &mut c1);
+        matmul_nt_scaled(&a, &b, 0.25, &mut c2);
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert!((x * 0.25 - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_nn_acc_matches_naive() {
+        let mut rng = Pcg64::seeded(13);
+        let a = rand_mat(&mut rng, 7, 11);
+        let b = rand_mat(&mut rng, 11, 5);
+        let mut c = Mat::zeros(7, 5);
+        matmul_nn_acc(&a, &b, &mut c);
+        for i in 0..7 {
+            for j in 0..5 {
+                let mut s = 0.0;
+                for kk in 0..11 {
+                    s += a.at(i, kk) * b.at(kk, j);
+                }
+                assert!((c.at(i, j) - s).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nn_accumulates() {
+        let a = Mat::from_vec(1, 1, vec![2.0]);
+        let b = Mat::from_vec(1, 1, vec![3.0]);
+        let mut c = Mat::from_vec(1, 1, vec![10.0]);
+        matmul_nn_acc(&a, &b, &mut c);
+        assert_eq!(c.at(0, 0), 16.0);
+    }
+
+    #[test]
+    fn gather_rows_matches_manual() {
+        let m = Mat::from_fn(6, 3, |r, c| (r * 10 + c) as f32);
+        let g = m.gather_rows(&[4, 0, 2]);
+        assert_eq!(g.rows, 3);
+        assert_eq!(g.row(0), &[40.0, 41.0, 42.0]);
+        assert_eq!(g.row(1), &[0.0, 1.0, 2.0]);
+        assert_eq!(g.row(2), &[20.0, 21.0, 22.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(14);
+        let m = rand_mat(&mut rng, 5, 8);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let mut rng = Pcg64::seeded(15);
+        let m = rand_mat(&mut rng, 4, 4);
+        assert_eq!(m.rel_err(&m), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Elementwise / reduction ops used by the attention engine.
+
+use super::Mat;
+
+/// In-place numerically-stable softmax over each row.
+pub fn softmax_rows(m: &mut Mat) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        if !mx.is_finite() {
+            // All -inf (fully masked row): define softmax as zeros.
+            row.iter_mut().for_each(|x| *x = 0.0);
+            continue;
+        }
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - mx).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        row.iter_mut().for_each(|x| *x *= inv);
+    }
+}
+
+/// Average-pool rows in groups of `block`: output has `ceil(rows/block)`
+/// rows. This is the paper's `avgpool(Q, b_q)` (Alg. 2 line 1).
+pub fn avgpool_rows(m: &Mat, block: usize) -> Mat {
+    assert!(block >= 1);
+    let out_rows = m.rows.div_ceil(block);
+    let mut out = Mat::zeros(out_rows, m.cols);
+    for g in 0..out_rows {
+        let start = g * block;
+        let end = (start + block).min(m.rows);
+        let inv = 1.0 / (end - start) as f32;
+        let orow = out.row_mut(g);
+        for r in start..end {
+            let irow = &m.data[r * m.cols..(r + 1) * m.cols];
+            for (o, &x) in orow.iter_mut().zip(irow) {
+                *o += x;
+            }
+        }
+        orow.iter_mut().for_each(|x| *x *= inv);
+    }
+    out
+}
+
+/// Average-pool a vector in groups of `block` (used for `avgpool(x_a)`).
+pub fn avgpool_vec(v: &[f32], block: usize) -> Vec<f32> {
+    assert!(block >= 1);
+    let out_len = v.len().div_ceil(block);
+    let mut out = Vec::with_capacity(out_len);
+    for g in 0..out_len {
+        let start = g * block;
+        let end = (start + block).min(v.len());
+        let s: f32 = v[start..end].iter().sum();
+        out.push(s / (end - start) as f32);
+    }
+    out
+}
+
+/// Row-wise maximum.
+pub fn rowmax(m: &Mat) -> Vec<f32> {
+    (0..m.rows)
+        .map(|r| m.row(r).iter().copied().fold(f32::NEG_INFINITY, f32::max))
+        .collect()
+}
+
+/// Apply a causal mask in logit space: positions `j > row_offset + r` get
+/// `-inf`. `row_offset` is the absolute position of row 0.
+pub fn causal_mask_inplace(m: &mut Mat, row_offset: usize, col_offset: usize) {
+    for r in 0..m.rows {
+        let limit = row_offset + r; // keys with absolute pos <= limit are visible
+        let row = m.row_mut(r);
+        for (c, x) in row.iter_mut().enumerate() {
+            if col_offset + c > limit {
+                *x = f32::NEG_INFINITY;
+            }
+        }
+    }
+}
+
+/// RMS norm of a vector (for the rust-side model mirror).
+pub fn rmsnorm(x: &[f32], weight: &[f32], eps: f32, out: &mut [f32]) {
+    assert_eq!(x.len(), weight.len());
+    assert_eq!(x.len(), out.len());
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for ((o, &v), &w) in out.iter_mut().zip(x).zip(weight) {
+        *o = v * inv * w;
+    }
+}
+
+/// SiLU activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        softmax_rows(&mut m);
+        for r in 0..2 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            // Monotone in the logits.
+            assert!(m.at(r, 0) < m.at(r, 1) && m.at(r, 1) < m.at(r, 2));
+        }
+    }
+
+    #[test]
+    fn softmax_handles_fully_masked_row() {
+        let mut m = Mat::from_vec(1, 2, vec![f32::NEG_INFINITY, f32::NEG_INFINITY]);
+        softmax_rows(&mut m);
+        assert_eq!(m.row(0), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_invariant_to_shift() {
+        let mut a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let mut b = Mat::from_vec(1, 3, vec![1001.0, 1002.0, 1003.0]);
+        softmax_rows(&mut a);
+        softmax_rows(&mut b);
+        assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn avgpool_rows_exact_blocks() {
+        let m = Mat::from_vec(4, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let p = avgpool_rows(&m, 2);
+        assert_eq!(p.rows, 2);
+        assert_eq!(p.row(0), &[2.0, 3.0]);
+        assert_eq!(p.row(1), &[6.0, 7.0]);
+    }
+
+    #[test]
+    fn avgpool_rows_ragged_tail() {
+        let m = Mat::from_vec(3, 1, vec![1.0, 2.0, 10.0]);
+        let p = avgpool_rows(&m, 2);
+        assert_eq!(p.rows, 2);
+        assert_eq!(p.at(0, 0), 1.5);
+        assert_eq!(p.at(1, 0), 10.0);
+    }
+
+    #[test]
+    fn avgpool_vec_basic() {
+        assert_eq!(avgpool_vec(&[2.0, 4.0, 6.0], 2), vec![3.0, 6.0]);
+        assert_eq!(avgpool_vec(&[5.0], 4), vec![5.0]);
+    }
+
+    #[test]
+    fn causal_mask_zeroes_future() {
+        let mut m = Mat::from_vec(2, 4, vec![1.0; 8]);
+        causal_mask_inplace(&mut m, 1, 0); // rows are absolute positions 1,2
+        assert_eq!(m.row(0), &[1.0, 1.0, f32::NEG_INFINITY, f32::NEG_INFINITY]);
+        assert_eq!(m.row(1), &[1.0, 1.0, 1.0, f32::NEG_INFINITY]);
+    }
+
+    #[test]
+    fn rowmax_masks() {
+        let m = Mat::from_vec(2, 2, vec![3.0, 1.0, -5.0, -2.0]);
+        assert_eq!(rowmax(&m), vec![3.0, -2.0]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = [3.0f32, 4.0];
+        let w = [1.0f32, 1.0];
+        let mut out = [0.0f32; 2];
+        rmsnorm(&x, &w, 0.0, &mut out);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn silu_known_values() {
+        assert!((silu(0.0) - 0.0).abs() < 1e-7);
+        assert!(silu(10.0) > 9.99);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,164 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Typed getters parse on access and report readable errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args().skip(1)`.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> anyhow::Result<f32> {
+        Ok(self.f64_or(key, default as f64)? as f32)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(anyhow::anyhow!("--{key} expects a bool, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--lengths 4096,8192`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad integer '{p}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // NOTE: a bare `--flag` consumes the next token unless it starts with
+        // `--`, so boolean flags must come last or use `--flag=true`.
+        let a = parse(&["serve", "--port", "8080", "--theta=12.5", "trace.json", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0).unwrap(), 8080);
+        assert_eq!(a.f64_or("theta", 0.0).unwrap(), 12.5);
+        assert!(a.bool_or("verbose", false).unwrap());
+        assert_eq!(a.positional(), &["serve".to_string(), "trace.json".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("n", 42).unwrap(), 42);
+        assert_eq!(a.str_or("mode", "full"), "full");
+        assert!(!a.bool_or("x", false).unwrap());
+        assert_eq!(a.subcommand(), None);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--lengths", "4096, 8192,16384"]);
+        assert_eq!(a.usize_list_or("lengths", &[]).unwrap(), vec![4096, 8192, 16384]);
+        let b = parse(&[]);
+        assert_eq!(b.usize_list_or("lengths", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["--fast"]);
+        assert!(a.bool_or("fast", false).unwrap());
+    }
+}

@@ -1,0 +1,56 @@
+//! Infrastructure substrates for the offline build environment.
+//!
+//! The hermetic build sandbox only ships the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (`rand`, `serde_json`, `clap`,
+//! `criterion`, `rayon`, `proptest`) are re-implemented here at the scale
+//! this project needs. Each submodule is self-contained and unit-tested.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+/// Write a CSV report under `reports/`, creating the directory if needed.
+/// Returns the written path.
+pub fn write_report(name: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("reports");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, contents)?;
+    Ok(path)
+}
+
+/// Format a fraction as a percentage with one decimal, e.g. `0.937 -> "93.7%"`.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Human-readable sequence length, e.g. 131072 -> "128k".
+pub fn fmt_len(n: usize) -> String {
+    if n % 1024 == 0 {
+        format!("{}k", n / 1024)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.937), "93.7%");
+        assert_eq!(pct(1.0), "100.0%");
+    }
+
+    #[test]
+    fn fmt_len_powers() {
+        assert_eq!(fmt_len(131072), "128k");
+        assert_eq!(fmt_len(4096), "4k");
+        assert_eq!(fmt_len(1000), "1000");
+    }
+}

@@ -1,0 +1,179 @@
+//! Miniature property-based testing harness (proptest is unavailable
+//! offline). Generates random cases from a seeded [`Pcg64`], checks a
+//! property, and on failure greedily shrinks via a user-supplied shrinker
+//! before reporting the minimal counterexample.
+//!
+//! Used by the coordinator invariants (routing, batching, KV-cache state)
+//! and the attention-engine metamorphic tests.
+
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xC0FFEE, max_shrink_steps: 200 }
+    }
+}
+
+/// Outcome of a single property check.
+pub type CheckResult = Result<(), String>;
+
+/// Run `prop` over `cfg.cases` random inputs produced by `gen`. On failure,
+/// repeatedly apply `shrink` (which proposes smaller candidates) while the
+/// property still fails, then panic with the minimal failing case.
+pub fn check<T, G, S, P>(cfg: &Config, mut gen: G, shrink: S, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> CheckResult,
+{
+    let mut rng = Pcg64::seeded(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Shrink loop: greedy descent over candidates.
+            let mut best = input.clone();
+            let mut best_msg = first_msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}/{}, seed {:#x}):\n  input: {:?}\n  error: {}",
+                cfg.cases, cfg.seed, best, best_msg
+            );
+        }
+    }
+}
+
+/// Convenience: assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> CheckResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Standard shrinker for a vector: drop halves, drop single elements,
+/// and shrink individual elements with `elem_shrink`.
+pub fn shrink_vec<T: Clone>(xs: &[T], elem_shrink: impl Fn(&T) -> Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n == 0 {
+        return out;
+    }
+    // Halves.
+    out.push(xs[..n / 2].to_vec());
+    out.push(xs[n / 2..].to_vec());
+    // Remove one element (first few positions only, to bound candidates).
+    for i in 0..n.min(8) {
+        let mut v = xs.to_vec();
+        v.remove(i);
+        out.push(v);
+    }
+    // Shrink one element.
+    for i in 0..n.min(8) {
+        for cand in elem_shrink(&xs[i]) {
+            let mut v = xs.to_vec();
+            v[i] = cand;
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Standard shrinker for usize: towards zero by halving.
+pub fn shrink_usize(x: &usize) -> Vec<usize> {
+    let x = *x;
+    if x == 0 {
+        vec![]
+    } else {
+        vec![0, x / 2, x - 1].into_iter().filter(|&y| y != x).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let cfg = Config { cases: 32, ..Default::default() };
+        check(
+            &cfg,
+            |rng| rng.next_below(1000) as usize,
+            |x| shrink_usize(x),
+            |&x| ensure(x < 1000, "in range"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        let cfg = Config { cases: 64, ..Default::default() };
+        check(
+            &cfg,
+            |rng| rng.next_below(10_000) as usize,
+            |x| shrink_usize(x),
+            // Fails for x >= 50; the shrinker should home in near 50.
+            |&x| ensure(x < 50, format!("x={x} >= 50")),
+        );
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller_candidates() {
+        let xs = vec![5usize, 6, 7, 8];
+        let cands = shrink_vec(&xs, shrink_usize);
+        assert!(!cands.is_empty());
+        assert!(cands.iter().any(|c| c.len() < xs.len()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        // Same seed -> same generated sequence -> same (non-)failure.
+        let cfg = Config { cases: 16, seed: 42, ..Default::default() };
+        let mut seen1 = Vec::new();
+        check(
+            &cfg,
+            |rng| {
+                let v = rng.next_u64();
+                seen1.push(v);
+                v
+            },
+            |_| vec![],
+            |_| Ok(()),
+        );
+        let mut seen2 = Vec::new();
+        check(
+            &cfg,
+            |rng| {
+                let v = rng.next_u64();
+                seen2.push(v);
+                v
+            },
+            |_| vec![],
+            |_| Ok(()),
+        );
+        assert_eq!(seen1, seen2);
+    }
+}

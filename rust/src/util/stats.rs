@@ -1,0 +1,194 @@
+//! Small statistics helpers shared by metrics, benches and the scheduler.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile with linear interpolation, `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Simple streaming histogram with fixed buckets for latency tracking in the
+/// serving metrics pipeline. Buckets are [edges[i], edges[i+1]).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    edges: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// Exponential bucket edges from `lo` to `hi` (both > 0), `n` buckets.
+    pub fn exponential(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n >= 1);
+        let ratio = (hi / lo).powf(1.0 / n as f64);
+        let mut edges = Vec::with_capacity(n + 1);
+        let mut e = lo;
+        for _ in 0..=n {
+            edges.push(e);
+            e *= ratio;
+        }
+        let len = edges.len() + 1; // underflow + buckets + overflow share counts vec
+        Self { edges, counts: vec![0; len], total: 0, sum: 0.0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = match self.edges.iter().position(|&e| x < e) {
+            Some(0) => 0,                       // underflow
+            Some(i) => i,                       // bucket i-1 maps to counts[i]
+            None => self.counts.len() - 1,      // overflow
+        };
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += x;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                // counts[0] is underflow -> report lowest edge; last is overflow.
+                return if i == 0 {
+                    self.edges[0]
+                } else if i >= self.edges.len() {
+                    *self.edges.last().unwrap()
+                } else {
+                    self.edges[i - 1]
+                };
+            }
+        }
+        *self.edges.last().unwrap()
+    }
+}
+
+/// Ordinary least squares fit y = a + b·x; returns (a, b).
+pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    let b = if den.abs() < 1e-30 { 0.0 } else { num / den };
+    (my - b * mx, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((std_dev(&xs) - 1.118).abs() < 1e-3);
+        assert_eq!(min(&xs), 1.0);
+        assert_eq!(max(&xs), 4.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(percentile(&xs, 50.0), 25.0);
+    }
+
+    #[test]
+    fn empty_inputs_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(linreg(&[], &[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = Histogram::exponential(0.1, 1000.0, 32);
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 500.5).abs() < 1.0);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 > 100.0 && p50 < 1000.0);
+    }
+
+    #[test]
+    fn histogram_overflow_underflow() {
+        let mut h = Histogram::exponential(1.0, 10.0, 4);
+        h.record(0.01);
+        h.record(1e9);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b) = linreg(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,192 @@
+//! Benchmark timing harness (criterion is unavailable offline).
+//!
+//! [`BenchRunner`] provides warmup + measured iterations with percentile
+//! reporting, used by every target in `rust/benches/` and by the
+//! `anchor-attn bench` subcommand.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub std_s: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>10.4} ms  p50 {:>10.4} ms  p95 {:>10.4} ms  min {:>10.4} ms",
+            self.name,
+            self.iters,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3,
+            self.min_s * 1e3
+        )
+    }
+}
+
+/// Warmup-then-measure runner with a wall-clock budget per benchmark.
+pub struct BenchRunner {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 3,
+            max_iters: 1000,
+        }
+    }
+}
+
+impl BenchRunner {
+    /// Fast-mode runner for CI / tests.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(10),
+            budget: Duration::from_millis(200),
+            min_iters: 2,
+            max_iters: 50,
+        }
+    }
+
+    /// Time `f` repeatedly. The closure's return value is black-boxed to
+    /// keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup phase.
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measured phase.
+        let mut samples = Vec::new();
+        let mstart = Instant::now();
+        while (mstart.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: stats::mean(&samples),
+            p50_s: stats::percentile(&samples, 50.0),
+            p95_s: stats::percentile(&samples, 95.0),
+            min_s: stats::min(&samples),
+            std_s: stats::std_dev(&samples),
+        }
+    }
+
+    /// Time a single invocation (for expensive end-to-end runs).
+    pub fn run_once<T, F: FnOnce() -> T>(&self, name: &str, f: F) -> (BenchResult, T) {
+        let t0 = Instant::now();
+        let out = black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        (
+            BenchResult {
+                name: name.to_string(),
+                iters: 1,
+                mean_s: dt,
+                p50_s: dt,
+                p95_s: dt,
+                min_s: dt,
+                std_s: 0.0,
+            },
+            out,
+        )
+    }
+}
+
+/// Stable `black_box` replacement (avoids nightly-only intrinsics).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // A volatile read of a pointer to x prevents the value from being
+    // optimized away without affecting codegen of the computation itself.
+    unsafe {
+        let ret = std::ptr::read_volatile(&x);
+        std::mem::forget(x);
+        ret
+    }
+}
+
+/// Scope timer for coarse phase logging: prints elapsed time on drop when
+/// `ANCHOR_ATTN_TRACE=1`.
+pub struct ScopeTimer {
+    label: &'static str,
+    start: Instant,
+    enabled: bool,
+}
+
+impl ScopeTimer {
+    pub fn new(label: &'static str) -> Self {
+        let enabled = std::env::var("ANCHOR_ATTN_TRACE").map(|v| v == "1").unwrap_or(false);
+        Self { label, start: Instant::now(), enabled }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for ScopeTimer {
+    fn drop(&mut self) {
+        if self.enabled {
+            eprintln!("[trace] {}: {:.3} ms", self.label, self.elapsed_s() * 1e3);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_produces_sane_stats() {
+        let r = BenchRunner::quick();
+        let res = r.run("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(res.iters >= 2);
+        assert!(res.mean_s > 0.0);
+        assert!(res.min_s <= res.mean_s + 1e-12);
+        assert!(res.p50_s <= res.p95_s + 1e-12);
+    }
+
+    #[test]
+    fn run_once_returns_value() {
+        let r = BenchRunner::quick();
+        let (res, v) = r.run_once("once", || 7 * 6);
+        assert_eq!(v, 42);
+        assert_eq!(res.iters, 1);
+    }
+
+    #[test]
+    fn black_box_identity() {
+        assert_eq!(black_box(123), 123);
+        assert_eq!(black_box(String::from("x")), "x");
+    }
+}

@@ -1,0 +1,104 @@
+//! Serving trace generation for the coordinator benchmarks: Poisson
+//! arrivals with a long-context-skewed prompt-length mixture, matching the
+//! prefill-heavy regime the paper targets.
+
+use crate::util::rng::Pcg64;
+
+/// One synthetic request in a trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    pub prompt_tokens: usize,
+    pub decode_tokens: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Mean request rate (req/s).
+    pub rate: f64,
+    pub num_requests: usize,
+    /// (prompt_len, weight) mixture components.
+    pub length_mix: Vec<(usize, f64)>,
+    pub decode_min: usize,
+    pub decode_max: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            rate: 2.0,
+            num_requests: 64,
+            // Long-context-skewed mixture (the paper's regime).
+            length_mix: vec![(512, 0.25), (2048, 0.35), (8192, 0.3), (32768, 0.1)],
+            decode_min: 8,
+            decode_max: 64,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a trace with Poisson arrivals and mixture-sampled lengths.
+pub fn generate_trace(cfg: &TraceConfig) -> Vec<TraceRequest> {
+    assert!(!cfg.length_mix.is_empty());
+    let total_w: f64 = cfg.length_mix.iter().map(|x| x.1).sum();
+    let mut rng = Pcg64::seeded(cfg.seed ^ 0x7ace);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(cfg.num_requests);
+    for id in 0..cfg.num_requests {
+        t += rng.exponential(cfg.rate);
+        // Sample mixture component.
+        let mut pick = rng.next_f64() * total_w;
+        let mut prompt = cfg.length_mix[0].0;
+        for &(len, w) in &cfg.length_mix {
+            if pick < w {
+                prompt = len;
+                break;
+            }
+            pick -= w;
+        }
+        // Jitter ±25% around the component length.
+        let jitter = 0.75 + 0.5 * rng.next_f64();
+        let prompt_tokens = ((prompt as f64 * jitter) as usize).max(16);
+        let decode_tokens = cfg.decode_min
+            + rng.next_below((cfg.decode_max - cfg.decode_min + 1) as u64) as usize;
+        out.push(TraceRequest { id: id as u64, arrival_s: t, prompt_tokens, decode_tokens });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_ordered() {
+        let cfg = TraceConfig::default();
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert_eq!(a.len(), cfg.num_requests);
+    }
+
+    #[test]
+    fn rate_roughly_respected() {
+        let cfg = TraceConfig { rate: 10.0, num_requests: 2000, ..Default::default() };
+        let t = generate_trace(&cfg);
+        let span = t.last().unwrap().arrival_s;
+        let measured = cfg.num_requests as f64 / span;
+        assert!((measured - 10.0).abs() < 1.5, "measured rate {measured}");
+    }
+
+    #[test]
+    fn lengths_within_mixture_envelope() {
+        let cfg = TraceConfig::default();
+        for r in generate_trace(&cfg) {
+            assert!(r.prompt_tokens >= 16);
+            assert!(r.prompt_tokens <= (32768_f64 * 1.25) as usize);
+            assert!(r.decode_tokens >= cfg.decode_min && r.decode_tokens <= cfg.decode_max);
+        }
+    }
+}

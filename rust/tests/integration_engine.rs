@@ -1,0 +1,109 @@
+//! Cross-layer integration: the Rust engine's method set vs the synthetic
+//! workload's ground truth, plus serving-stack integration over the mock
+//! engine at scale. No artifacts required.
+
+use anchor_attention::attention::TileConfig;
+use anchor_attention::coordinator::engine::MockEngine;
+use anchor_attention::coordinator::request::Request;
+use anchor_attention::coordinator::scheduler::SparsityModel;
+use anchor_attention::coordinator::server::{serve, ServerConfig};
+use anchor_attention::experiments::common::{evaluate, paper_methods};
+use anchor_attention::workload::qkv::{generate, generate_with_needle};
+use anchor_attention::workload::trace::{generate_trace, TraceConfig};
+use anchor_attention::workload::WorkloadProfile;
+
+/// All five paper methods run end-to-end on one structured head and
+/// produce internally-consistent metrics.
+#[test]
+fn method_set_metrics_consistent() {
+    let tile = TileConfig::new(128, 128);
+    let n = 4096;
+    let wl = generate(&WorkloadProfile::llama_like(), n, 123);
+    for m in paper_methods(n, tile, 12.0) {
+        let e = evaluate(&wl.head, &m, tile);
+        assert!((0.0..=1.0 + 1e-9).contains(&e.recall), "{}: recall {}", e.method, e.recall);
+        assert!((0.0..=1.0).contains(&e.sparsity), "{}: sparsity {}", e.method, e.sparsity);
+        assert!(e.output_rel_err.is_finite());
+        if e.method == "full-attn" {
+            assert!(e.recall > 1.0 - 1e-9);
+            assert!(e.output_rel_err < 1e-5);
+        } else {
+            // Sparse methods must actually skip work on a structured head.
+            assert!(e.sparsity > 0.0, "{} has zero sparsity", e.method);
+        }
+        // Output error shrinks as recall grows (coarse consistency).
+        if e.recall > 0.99 {
+            assert!(e.output_rel_err < 0.25, "{}: err {} at recall {}", e.method, e.output_rel_err, e.recall);
+        }
+    }
+}
+
+/// Anchor recall beats every static baseline at matched-or-better
+/// sparsity on the needle workload (the paper's central comparison).
+#[test]
+fn anchor_beats_streaming_on_needle_workload() {
+    let tile = TileConfig::new(128, 128);
+    let n = 4096;
+    let wl = generate_with_needle(&WorkloadProfile::llama_like(), n, 321, Some(0.4));
+    let methods = paper_methods(n, tile, 12.0);
+    let evals: Vec<_> = methods.iter().map(|m| evaluate(&wl.head, m, tile)).collect();
+    let anchor = evals.iter().find(|e| e.method == "anchor").unwrap();
+    let streaming = evals.iter().find(|e| e.method == "streaming-llm").unwrap();
+    assert!(anchor.recall > streaming.recall, "{} vs {}", anchor.recall, streaming.recall);
+    assert!(anchor.recall > 0.9, "anchor recall {}", anchor.recall);
+}
+
+/// A 200-request trace at realistic mixture served through the full
+/// control plane (mock engine): conservation + ordering invariants.
+#[test]
+fn large_trace_serves_to_completion() {
+    let trace_cfg = TraceConfig {
+        rate: 50.0,
+        num_requests: 200,
+        length_mix: vec![(128, 0.5), (512, 0.3), (1024, 0.2)],
+        decode_min: 1,
+        decode_max: 6,
+        seed: 5,
+    };
+    let trace = generate_trace(&trace_cfg);
+    let requests: Vec<Request> = trace
+        .iter()
+        .map(|t| Request::new(t.id, vec![1; t.prompt_tokens.min(1900)], t.decode_tokens, t.arrival_s))
+        .collect();
+    let expect: std::collections::HashMap<u64, usize> =
+        requests.iter().map(|r| (r.id, r.max_new_tokens)).collect();
+
+    let mut engine = MockEngine::new(512);
+    let cfg = ServerConfig { pool_pages: 512, ..Default::default() };
+    let report = serve(&cfg, requests, &mut engine, |_, _| {}).unwrap();
+    assert_eq!(report.records.len(), 200);
+    for r in &report.records {
+        assert_eq!(r.generated_tokens, expect[&r.id], "request {}", r.id);
+    }
+    assert!(report.iterations > 0);
+    assert!(report.decode_throughput() > 0.0);
+}
+
+/// The anchor-aware scheduler serves the same trace in no more iterations
+/// than the dense scheduler (the paper's speedup as scheduler headroom).
+#[test]
+fn anchor_scheduler_no_worse_than_dense() {
+    let mk_requests = || -> Vec<Request> {
+        (0..10).map(|i| Request::new(i, vec![1; 1600], 2, 0.0)).collect()
+    };
+    let run = |sparsity| {
+        let mut engine = MockEngine::new(512);
+        let mut cfg = ServerConfig { pool_pages: 512, ..Default::default() };
+        cfg.scheduler.sparsity = sparsity;
+        cfg.scheduler.iter_budget = 500.0;
+        serve(&cfg, mk_requests(), &mut engine, |_, _| {}).unwrap()
+    };
+    let dense = run(SparsityModel::Dense);
+    let anchor = run(SparsityModel::Anchor { stripe_keep: 0.08, anchor_tokens: 256 });
+    assert!(
+        anchor.iterations <= dense.iterations,
+        "anchor {} vs dense {}",
+        anchor.iterations,
+        dense.iterations
+    );
+}

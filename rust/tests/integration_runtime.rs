@@ -1,0 +1,184 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! Require `make artifacts` to have run; each test skips (with a notice)
+//! when `artifacts/manifest.json` is absent so `cargo test` stays green in
+//! a fresh checkout.
+
+use std::rc::Rc;
+
+use anchor_attention::attention::anchor::AnchorConfig;
+use anchor_attention::attention::{HeadInput, TileConfig};
+use anchor_attention::coordinator::engine::PjrtEngine;
+use anchor_attention::coordinator::request::Request;
+use anchor_attention::coordinator::server::{serve, ServerConfig};
+use anchor_attention::model::LmModel;
+use anchor_attention::runtime::{literal_f32, Runtime};
+use anchor_attention::tensor::Mat;
+use anchor_attention::util::rng::Pcg64;
+
+fn artifact_dir() -> Option<String> {
+    let dir = std::env::var("ANCHOR_ATTN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {dir} (run `make artifacts`)");
+        None
+    }
+}
+
+fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+    let mut rng = Pcg64::seeded(seed);
+    HeadInput::new(
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+    )
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    rt.manifest().validate().unwrap();
+    assert!(rt.manifest().artifact("attn_full_256").is_some());
+    assert!(rt.manifest().artifact("attn_anchor_256").is_some());
+    assert_eq!(rt.platform(), "cpu");
+}
+
+/// The AOT `attn_full_256` HLO must reproduce the Rust engine's dense
+/// attention bit-for-bit (same math, different substrate).
+#[test]
+fn hlo_full_attention_matches_rust_engine() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let n = 256;
+    let d = 64;
+    let h = rand_head(1001, n, d);
+
+    let out = rt
+        .execute(
+            "attn_full_256",
+            &[
+                literal_f32(&[n, d], &h.q.data).unwrap(),
+                literal_f32(&[n, d], &h.k.data).unwrap(),
+                literal_f32(&[n, d], &h.v.data).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    let hlo_out = Mat::from_vec(n, d, out[0].to_vec::<f32>().unwrap());
+
+    let rust_out =
+        anchor_attention::attention::full::full_attention(&h, TileConfig::new(64, 64));
+    let diff = hlo_out.max_abs_diff(&rust_out.out);
+    assert!(diff < 1e-3, "HLO vs engine max diff {diff}");
+}
+
+/// The AOT `attn_anchor_256` (Pallas Alg. 1-3) must match the Rust
+/// engine's anchor pipeline at the manifest's hyperparameters — the
+/// three-layer consistency check of the whole reproduction.
+#[test]
+fn hlo_anchor_attention_matches_rust_engine() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let spec = rt.manifest().anchor;
+    let n = 256;
+    let d = 64;
+    let h = rand_head(1002, n, d);
+
+    let out = rt
+        .execute(
+            "attn_anchor_256",
+            &[
+                literal_f32(&[n, d], &h.q.data).unwrap(),
+                literal_f32(&[n, d], &h.k.data).unwrap(),
+                literal_f32(&[n, d], &h.v.data).unwrap(),
+            ],
+        )
+        .unwrap();
+    let hlo_out = Mat::from_vec(n, d, out[0].to_vec::<f32>().unwrap());
+
+    let cfg = AnchorConfig {
+        tile: TileConfig::new(spec.block, spec.block),
+        theta: spec.theta as f32,
+        step: spec.step,
+        init_blocks: spec.init_blocks,
+        use_anchor: true,
+    };
+    let rust_out = anchor_attention::attention::anchor::anchor_attention(&h, &cfg);
+    let diff = hlo_out.max_abs_diff(&rust_out.out);
+    assert!(diff < 1e-3, "anchor HLO vs engine max diff {diff}");
+}
+
+#[test]
+fn lm_prefill_decode_roundtrip() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Rc::new(Runtime::open(&dir).unwrap());
+    let model = LmModel::load(rt).unwrap();
+    let mut session = model.new_session().unwrap();
+
+    let prompt: Vec<i32> = (0..300).map(|i| (i * 7) % model.vocab as i32).collect();
+    let logits = model.prefill(&mut session, &prompt).unwrap();
+    assert_eq!(logits.len(), model.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    assert_eq!(session.pos, 300);
+
+    let tok = anchor_attention::model::argmax(&logits);
+    let logits2 = model.decode(&mut session, tok).unwrap();
+    assert_eq!(logits2.len(), model.vocab);
+    assert_eq!(session.pos, 301);
+}
+
+/// Chunked prefill must match whole-prompt prefill (KV-cache exactness
+/// across the Rust↔PJRT boundary).
+#[test]
+fn chunked_prefill_consistency() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Rc::new(Runtime::open(&dir).unwrap());
+    let model = LmModel::load(rt).unwrap();
+
+    let prompt: Vec<i32> = (0..272).map(|i| (i * 13 + 5) % model.vocab as i32).collect();
+
+    // One pass (single call handles chunking internally: 256 + 16).
+    let mut s1 = model.new_session().unwrap();
+    let l1 = model.prefill(&mut s1, &prompt).unwrap();
+
+    // Two explicit calls at a different split (128 + 144).
+    let mut s2 = model.new_session().unwrap();
+    let _ = model.prefill(&mut s2, &prompt[..128]).unwrap();
+    let l2 = model.prefill(&mut s2, &prompt[128..]).unwrap();
+
+    let max_diff = l1
+        .iter()
+        .zip(&l2)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "chunk-split changed logits by {max_diff}");
+}
+
+#[test]
+fn end_to_end_serve_small_trace_on_pjrt() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut engine = PjrtEngine::new(&dir).unwrap();
+    let vocab = engine.vocab() as i32;
+
+    let trace: Vec<Request> = (0..3)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..200 + i * 50).map(|t| (t as i32 * 3) % vocab).collect();
+            Request::new(i as u64, prompt, 3, 0.0)
+        })
+        .collect();
+
+    let cfg = ServerConfig::default();
+    let report = serve(&cfg, trace, &mut engine, |e, r| {
+        e.register(r.id, r.prompt.clone());
+    })
+    .unwrap();
+
+    assert_eq!(report.records.len(), 3);
+    for r in &report.records {
+        assert_eq!(r.generated_tokens, 3, "request {} incomplete", r.id);
+        assert!(r.ttft_s.is_finite());
+    }
+    assert!(report.engine_busy_s > 0.0);
+}

@@ -1,0 +1,227 @@
+//! Property-based tests over the coordinator invariants (routing,
+//! batching, KV-pool state) and the attention-engine metamorphic
+//! properties, using the in-crate mini proptest harness.
+
+use anchor_attention::attention::anchor::{anchor_attention, AnchorConfig};
+use anchor_attention::attention::{Method, TileConfig};
+use anchor_attention::coordinator::engine::MockEngine;
+use anchor_attention::coordinator::kv_cache::PagePool;
+use anchor_attention::coordinator::request::Request;
+use anchor_attention::coordinator::request::RequestState;
+use anchor_attention::coordinator::scheduler::{plan_iteration, SchedulerConfig};
+use anchor_attention::coordinator::server::{serve, ServerConfig};
+use anchor_attention::tensor::Mat;
+use anchor_attention::util::proptest::{check, ensure, shrink_vec, Config};
+use anchor_attention::util::rng::Pcg64;
+use anchor_attention::workload::qkv::generate;
+use anchor_attention::workload::WorkloadProfile;
+
+/// A random request mix (prompt length, decode tokens).
+fn gen_mix(rng: &mut Pcg64) -> Vec<(usize, usize)> {
+    let n = 1 + rng.next_below(12) as usize;
+    (0..n)
+        .map(|_| {
+            let prompt = 16 + rng.next_below(1500) as usize;
+            let decode = 1 + rng.next_below(8) as usize;
+            (prompt, decode)
+        })
+        .collect()
+}
+
+fn shrink_mix(xs: &Vec<(usize, usize)>) -> Vec<Vec<(usize, usize)>> {
+    shrink_vec(xs, |&(p, d)| {
+        let mut out = Vec::new();
+        if p > 16 {
+            out.push((p / 2 + 8, d));
+        }
+        if d > 1 {
+            out.push((p, d / 2));
+        }
+        out
+    })
+}
+
+/// Every request in every mix is served to completion with exactly
+/// `max_new_tokens` outputs, and latencies are ordered.
+#[test]
+fn prop_server_completes_every_mix() {
+    let cfg = Config { cases: 40, seed: 0xA11CE, ..Default::default() };
+    check(&cfg, gen_mix, shrink_mix, |mix| {
+        let trace: Vec<Request> = mix
+            .iter()
+            .enumerate()
+            .map(|(i, &(p, d))| Request::new(i as u64, vec![1; p], d, 0.0))
+            .collect();
+        let mut engine = MockEngine::new(512);
+        let server_cfg = ServerConfig { pool_pages: 96, ..Default::default() };
+        let report = serve(&server_cfg, trace, &mut engine, |_, _| {})
+            .map_err(|e| format!("serve failed: {e}"))?;
+        ensure(report.records.len() == mix.len(), "record count mismatch")?;
+        for r in &report.records {
+            let (p, d) = mix[r.id as usize];
+            ensure(r.prompt_tokens == p, format!("req {}: prompt {} != {p}", r.id, r.prompt_tokens))?;
+            ensure(
+                r.generated_tokens == d,
+                format!("req {}: generated {} != {d}", r.id, r.generated_tokens),
+            )?;
+            ensure(r.ttft_s.is_finite() && r.e2e_s >= r.ttft_s - 1e-9, "latency ordering")?;
+        }
+        Ok(())
+    });
+}
+
+/// Scheduler invariants: a plan never double-schedules a request, never
+/// exceeds remaining prefill, and chunk sizes respect the configured cap.
+#[test]
+fn prop_scheduler_plan_well_formed() {
+    let cfg = Config { cases: 60, seed: 0xBEEF, ..Default::default() };
+    check(&cfg, gen_mix, shrink_mix, |mix| {
+        let mut states: Vec<RequestState> = mix
+            .iter()
+            .enumerate()
+            .map(|(i, &(p, d))| RequestState::new(Request::new(i as u64, vec![1; p], d, 0.0)))
+            .collect();
+        let mut pool = PagePool::new(48, 64);
+        let sched = SchedulerConfig::default();
+        for _ in 0..8 {
+            let free_before = pool.free_pages();
+            let plan = plan_iteration(&sched, &mut states, &mut pool);
+            let mut seen = std::collections::HashSet::new();
+            for &(id, take) in &plan.prefill {
+                ensure(seen.insert(id), format!("request {id} planned twice"))?;
+                let st = states.iter().find(|s| s.request.id == id).unwrap();
+                ensure(take >= 1 && take <= st.remaining_prefill(), "chunk bounds")?;
+                ensure(take <= sched.chunk, "chunk size cap")?;
+            }
+            for &id in &plan.decode {
+                ensure(seen.insert(id), format!("request {id} planned twice (decode)"))?;
+            }
+            ensure(pool.free_pages() <= free_before, "pool can only shrink during planning")?;
+            // Apply progress to advance the simulation.
+            for &(id, take) in &plan.prefill {
+                let st = states.iter_mut().find(|s| s.request.id == id).unwrap();
+                st.prefilled += take;
+                if st.remaining_prefill() == 0 {
+                    st.phase = anchor_attention::coordinator::request::Phase::Decode;
+                    st.generated.push(1);
+                }
+            }
+            for &id in &plan.decode {
+                let st = states.iter_mut().find(|s| s.request.id == id).unwrap();
+                st.generated.push(1);
+                if st.decode_done() {
+                    st.phase = anchor_attention::coordinator::request::Phase::Finished;
+                    pool.release(id).map_err(|e| e.to_string())?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Page pool conservation: random admit/release sequences never lose or
+/// duplicate pages.
+#[test]
+fn prop_page_pool_conservation() {
+    let cfg = Config { cases: 60, seed: 0xD00D, ..Default::default() };
+    let gen = |rng: &mut Pcg64| -> Vec<(u8, u64, usize)> {
+        (0..rng.next_below(30) as usize + 1)
+            .map(|_| {
+                (
+                    rng.next_below(2) as u8,
+                    rng.next_below(6),
+                    rng.next_below(600) as usize + 1,
+                )
+            })
+            .collect()
+    };
+    check(&cfg, gen, |xs| shrink_vec(xs, |_| vec![]), |ops| {
+        let total = 32;
+        let mut pool = PagePool::new(total, 64);
+        let mut live = std::collections::HashSet::new();
+        for &(op, seq, tokens) in ops {
+            match op {
+                0 => {
+                    if !live.contains(&seq) && pool.can_admit(tokens) {
+                        pool.admit(seq, tokens).map_err(|e| e.to_string())?;
+                        live.insert(seq);
+                    }
+                }
+                _ => {
+                    if live.remove(&seq) {
+                        pool.release(seq).map_err(|e| e.to_string())?;
+                    }
+                }
+            }
+            ensure(
+                pool.free_pages() + pool.used_pages() == total,
+                format!("page leak: {} + {} != {total}", pool.free_pages(), pool.used_pages()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Metamorphic attention property: recall never decreases when θ grows.
+#[test]
+fn prop_anchor_recall_monotone_in_theta() {
+    let cfg = Config { cases: 8, seed: 0xFEED, ..Default::default() };
+    let gen = |rng: &mut Pcg64| rng.next_u64();
+    check(&cfg, gen, |_| vec![], |&seed| {
+        let tile = TileConfig::new(64, 64);
+        let wl = generate(&WorkloadProfile::llama_like(), 1024, seed);
+        let mut last = -1.0f64;
+        for theta in [0.0f32, 6.0, 12.0, 1e9] {
+            let c = AnchorConfig { tile, theta, step: 4, init_blocks: 1, use_anchor: true };
+            let out = anchor_attention(&wl.head, &c);
+            let rec =
+                anchor_attention::attention::metrics::recall(&wl.head, &out.coverage, tile);
+            ensure(
+                rec.mean_recall >= last - 1e-9,
+                format!("recall fell: {last} -> {} at θ={theta}", rec.mean_recall),
+            )?;
+            last = rec.mean_recall;
+        }
+        Ok(())
+    });
+}
+
+/// Metamorphic: permuting V columns permutes the output identically
+/// (attention is linear over the value space).
+#[test]
+fn prop_value_column_permutation_equivariance() {
+    let cfg = Config { cases: 6, seed: 0xCAFE, ..Default::default() };
+    check(&cfg, |rng| rng.next_u64(), |_| vec![], |&seed| {
+        let tile = TileConfig::new(32, 32);
+        let wl = generate(&WorkloadProfile::llama_like(), 256, seed);
+        let d = wl.head.d();
+        let method = Method::Anchor(AnchorConfig {
+            tile,
+            theta: 8.0,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        });
+        let base = method.run(&wl.head);
+        let mut v2 = Mat::zeros(wl.head.v.rows, d);
+        for r in 0..wl.head.v.rows {
+            for c in 0..d {
+                v2.set(r, c, wl.head.v.at(r, d - 1 - c));
+            }
+        }
+        let head2 = anchor_attention::attention::HeadInput::new(
+            wl.head.q.clone(),
+            wl.head.k.clone(),
+            v2,
+        );
+        let permuted = method.run(&head2);
+        for r in 0..base.out.rows {
+            for c in 0..d {
+                let a = base.out.at(r, d - 1 - c);
+                let b = permuted.out.at(r, c);
+                ensure((a - b).abs() < 1e-5, format!("row {r} col {c}: {a} vs {b}"))?;
+            }
+        }
+        Ok(())
+    });
+}
