@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
 
     for (label, sparsity) in [
         ("dense scheduler", SparsityModel::Dense),
-        ("anchor-aware scheduler", SparsityModel::Anchor { stripe_keep: 0.1, anchor_tokens: 256 }),
+        ("anchor-aware scheduler", SparsityModel::Anchor { stripe_keep: 0.1, anchor_tokens: 256, plan_hit_rate: 0.5 }),
     ] {
         println!("\n════ {label} ══════════════════════════════════════");
         println!("loading engine (compiling artifacts)…");

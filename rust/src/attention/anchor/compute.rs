@@ -1,21 +1,24 @@
-//! Algorithm 1 — Pattern-based Anchor Computation.
+//! Algorithm 1 — Pattern-based Anchor Computation (planning flavor).
 //!
-//! For every query block, run exact blocked attention over the two regions
-//! where row maxima concentrate (paper §2.2.2): the initial key block(s)
-//! (attention sink) and the group-aligned causal local window. The
-//! resulting online-softmax state `(M, L, Acc)` is cached per row; `M` is
-//! the anchor score `x_a` of Eq. 1.
+//! For every query block, score the two regions where row maxima
+//! concentrate (paper §2.2.2) — the initial key block(s) (attention sink)
+//! and the group-aligned causal local window — and keep each row's maximum
+//! `M`: the anchor score `x_a` of Eq. 1. This is the *identification-side*
+//! half of Alg. 1: only scores are computed (no `P·V`), because in the
+//! planner → executor split the anchor regions' attention output is
+//! produced by the shared executor from the plan's anchor spans, not here.
 
-use super::{AnchorConfig, AnchorState};
-use crate::attention::full::{mask_tile_causal, BlockState};
-use crate::attention::mask::Coverage;
+use super::AnchorConfig;
+use crate::attention::full::mask_tile_causal;
 use crate::attention::{CostTally, HeadInput};
 use crate::tensor::{matmul_nt_scaled, Mat};
 use crate::util::threadpool::parallel_map;
 
-/// Run Alg. 1. Returns the cached state plus the coverage of the anchor
-/// regions (init ∪ window per query block).
-pub fn anchor_pass(input: &HeadInput, cfg: &AnchorConfig) -> (AnchorState, Coverage) {
+/// Compute the per-row anchor scores `M` over the anchor regions
+/// (init ∪ window, causally masked). Returns `M` (length `n`, `-∞` only
+/// for rows with no visible anchor key — impossible since the diagonal is
+/// always in the window) plus the scoring cost.
+pub fn anchor_m_pass(input: &HeadInput, cfg: &AnchorConfig) -> (Vec<f32>, CostTally) {
     let n = input.n();
     let d = input.d();
     let scale = input.scale();
@@ -28,14 +31,13 @@ pub fn anchor_pass(input: &HeadInput, cfg: &AnchorConfig) -> (AnchorState, Cover
         let rows = (n - row0).min(tile.b_q);
         let limit = row0 + rows;
         let q_i = input.q.rows_mat(row0, rows);
-        let mut state = BlockState::new(rows, d);
+        let mut m = vec![f32::NEG_INFINITY; rows];
         let mut cost = CostTally::default();
 
         // Region spans: [0, init_cols) ∪ [win_start, limit), merged when
         // they overlap (early blocks).
         let win_start = cfg.window_start(qb).min(limit);
         let spans: [(usize, usize); 2] = if win_start <= init_cols {
-            // Window reaches into the init region: one merged span.
             [(0, limit), (0, 0)]
         } else {
             [(0, init_cols.min(limit)), (win_start, limit)]
@@ -50,7 +52,6 @@ pub fn anchor_pass(input: &HeadInput, cfg: &AnchorConfig) -> (AnchorState, Cover
             while col0 < end {
                 let cols = (end - col0).min(tile.b_kv);
                 let k_j = input.k.rows_mat(col0, cols);
-                let v_j = input.v.rows_mat(col0, cols);
                 if s.cols != cols || s.rows != rows {
                     s = Mat::zeros(rows, cols);
                 }
@@ -58,32 +59,28 @@ pub fn anchor_pass(input: &HeadInput, cfg: &AnchorConfig) -> (AnchorState, Cover
                 if col0 + cols > row0 {
                     mask_tile_causal(&mut s, row0, col0);
                 }
-                state.fold_tile(&mut s, &v_j);
-                cost.add(CostTally::attn_tile(rows, cols, d));
+                for (r, mr) in m.iter_mut().enumerate() {
+                    for &x in s.row(r) {
+                        if x > *mr {
+                            *mr = x;
+                        }
+                    }
+                }
+                cost.add(CostTally::ident_tile(rows, cols, d));
                 col0 += cols;
             }
         }
-        (state, cost, win_start, limit)
+        (m, cost)
     });
 
     let mut m = vec![f32::NEG_INFINITY; n];
-    let mut l = vec![0.0f32; n];
-    let mut acc = Mat::zeros(n, d);
     let mut cost = CostTally::default();
-    let mut coverage = Coverage::new(n, tile.b_q);
-
-    for (qb, (state, c, win_start, limit)) in results.into_iter().enumerate() {
+    for (qb, (block_m, c)) in results.into_iter().enumerate() {
         let row0 = qb * tile.b_q;
-        let rows = state.l.len();
-        m[row0..row0 + rows].copy_from_slice(&state.m);
-        l[row0..row0 + rows].copy_from_slice(&state.l);
-        acc.data[row0 * d..(row0 + rows) * d].copy_from_slice(&state.acc.data);
+        m[row0..row0 + block_m.len()].copy_from_slice(&block_m);
         cost.add(c);
-        coverage.set_range(qb, 0, init_cols.min(limit));
-        coverage.set_range(qb, win_start, limit);
     }
-
-    (AnchorState { m, l, acc, cost }, coverage)
+    (m, cost)
 }
 
 #[cfg(test)]
@@ -113,14 +110,14 @@ mod tests {
     }
 
     /// Reference: per-row max over the anchor regions from the naive score
-    /// matrix must equal the cached M.
+    /// matrix must equal M.
     #[test]
     fn anchor_m_is_region_max() {
         let n = 128;
         let d = 8;
         let h = rand_head(21, n, d);
         let c = cfg(16, 2);
-        let (state, _) = anchor_pass(&h, &c);
+        let (m, _) = anchor_m_pass(&h, &c);
 
         let mut s = Mat::zeros(n, n);
         matmul_nt_scaled(&h.q, &h.k, h.scale(), &mut s);
@@ -135,88 +132,43 @@ mod tests {
                     expect = expect.max(s.at(r, col));
                 }
             }
-            assert!(
-                (state.m[r] - expect).abs() < 1e-5,
-                "row {r}: m={} expect={expect}",
-                state.m[r]
-            );
+            assert!((m[r] - expect).abs() < 1e-5, "row {r}: m={} expect={expect}", m[r]);
         }
     }
 
-    /// The normalized anchor state (Acc/L) must equal softmax attention
-    /// restricted to the anchor regions.
+    /// Scoring cost is identification-shaped: no P·V flops are counted.
     #[test]
-    fn anchor_acc_matches_masked_softmax() {
-        let n = 96;
-        let d = 8;
-        let h = rand_head(22, n, d);
+    fn m_pass_counts_ident_cost_only() {
+        let h = rand_head(22, 128, 8);
         let c = cfg(16, 2);
-        let (state, coverage) = anchor_pass(&h, &c);
-
-        let mut s = Mat::zeros(n, n);
-        matmul_nt_scaled(&h.q, &h.k, h.scale(), &mut s);
-        causal_mask_inplace(&mut s, 0, 0);
-        // Mask out non-anchor region.
-        for r in 0..n {
-            let qb = r / 16;
-            for col in 0..n {
-                if !coverage.covered(qb, col) {
-                    s.set(r, col, f32::NEG_INFINITY);
-                }
-            }
-        }
-        crate::tensor::ops::softmax_rows(&mut s);
-        let mut expect = Mat::zeros(n, d);
-        crate::tensor::matmul_nn_acc(&s, &h.v, &mut expect);
-
-        for r in 0..n {
-            let inv = 1.0 / state.l[r];
-            for col in 0..d {
-                let got = state.acc.at(r, col) * inv;
-                assert!((got - expect.at(r, col)).abs() < 1e-4, "r={r} c={col}");
-            }
-        }
+        let (_, cost) = anchor_m_pass(&h, &c);
+        assert!(cost.ident_scores > 0);
+        // 2 flops per score entry (QKᵀ only).
+        assert_eq!(cost.flops, 2 * cost.ident_scores * 8);
     }
 
     #[test]
-    fn coverage_contains_diag_and_first_block() {
-        let n = 128;
-        let h = rand_head(23, n, 8);
-        let c = cfg(16, 4);
-        let (_, cov) = anchor_pass(&h, &c);
-        for qb in 0..8 {
-            // First init column always covered.
-            assert!(cov.covered(qb, 0));
-            // Diagonal (own block start) always covered.
-            assert!(cov.covered(qb, qb * 16));
-        }
-    }
-
-    #[test]
-    fn first_group_fully_covered_by_window() {
-        // Blocks in group 0 have window starting at 0: full causal coverage.
-        let n = 64;
-        let h = rand_head(24, n, 8);
-        let c = cfg(16, 4); // all 4 blocks in group 0
-        let (state, cov) = anchor_pass(&h, &c);
-        assert_eq!(cov.sparsity(), 0.0);
-        // So Acc/L == full attention.
-        let expect = crate::attention::full::naive_attention(&h);
-        for r in 0..n {
-            let inv = 1.0 / state.l[r];
-            for col in 0..8 {
-                assert!((state.acc.at(r, col) * inv - expect.at(r, col)).abs() < 1e-4);
-            }
-        }
-    }
-
-    #[test]
-    fn ragged_last_block() {
-        let n = 100; // not a multiple of 16
+    fn every_row_sees_its_diagonal() {
+        let n = 100; // ragged last block
         let h = rand_head(25, n, 8);
         let c = cfg(16, 2);
-        let (state, _) = anchor_pass(&h, &c);
-        assert_eq!(state.m.len(), n);
-        assert!(state.l.iter().all(|&l| l > 0.0), "every row saw >=1 key");
+        let (m, _) = anchor_m_pass(&h, &c);
+        assert_eq!(m.len(), n);
+        assert!(m.iter().all(|&x| x > f32::NEG_INFINITY), "every row saw >=1 key");
+    }
+
+    /// Larger init region can only raise the anchor.
+    #[test]
+    fn m_monotone_in_init_blocks() {
+        let h = rand_head(26, 128, 8);
+        let mut c1 = cfg(16, 2);
+        c1.init_blocks = 1;
+        let mut c2 = cfg(16, 2);
+        c2.init_blocks = 4;
+        let (m1, _) = anchor_m_pass(&h, &c1);
+        let (m2, _) = anchor_m_pass(&h, &c2);
+        for r in 0..128 {
+            assert!(m2[r] >= m1[r] - 1e-6, "row {r}: {} < {}", m2[r], m1[r]);
+        }
     }
 }

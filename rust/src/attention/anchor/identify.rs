@@ -18,18 +18,16 @@
 //! No sorting anywhere: selection is a single comparison per score, which
 //! is the paper's complexity win over top-k/top-cdf (§2.1.1).
 
-use super::{AnchorConfig, AnchorState, StripeSet};
+use super::{AnchorConfig, StripeSet};
 use crate::attention::{CostTally, HeadInput};
 use crate::tensor::ops::{avgpool_rows, avgpool_vec};
 use crate::tensor::{matmul_nt_scaled, Mat};
 use crate::util::threadpool::parallel_map;
 
-/// Run Alg. 2 against the cached anchor state.
-pub fn identify_stripes(
-    input: &HeadInput,
-    cfg: &AnchorConfig,
-    state: &AnchorState,
-) -> StripeSet {
+/// Run Alg. 2 against the anchor scores `m` (per-row `M` from
+/// [`super::compute::anchor_m_pass`]; must have length `n` when
+/// `cfg.use_anchor`, ignored otherwise).
+pub fn identify_stripes(input: &HeadInput, cfg: &AnchorConfig, m: &[f32]) -> StripeSet {
     let n = input.n();
     let d = input.d();
     let scale = input.scale();
@@ -40,7 +38,8 @@ pub fn identify_stripes(
     // avgpool(Q, b_q) and avgpool(x_a, b_q): one pooled row per query block.
     let q_pool = avgpool_rows(&input.q, tile.b_q);
     let anchor_pool: Vec<f32> = if cfg.use_anchor {
-        avgpool_vec(&state.m, tile.b_q)
+        assert_eq!(m.len(), n, "anchor scores must cover every row");
+        avgpool_vec(m, tile.b_q)
     } else {
         // Table 4 "Without Anchor": anchor is a zero tensor.
         vec![0.0; q_blocks]
@@ -100,7 +99,7 @@ pub fn identify_stripes(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::anchor::compute::anchor_pass;
+    use crate::attention::anchor::compute::anchor_m_pass;
     use crate::attention::TileConfig;
     use crate::util::rng::Pcg64;
 
@@ -127,8 +126,8 @@ mod tests {
     fn infinite_theta_selects_every_candidate() {
         let h = rand_head(31, 128, 8);
         let c = cfg(f32::INFINITY);
-        let (state, _) = anchor_pass(&h, &c);
-        let stripes = identify_stripes(&h, &c, &state);
+        let (m, _) = anchor_m_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &m);
         for (g, sel) in stripes.groups.iter().enumerate() {
             let (start, end) = c.candidate_range(g, 128);
             assert_eq!(sel.len(), end - start, "group {g}");
@@ -142,8 +141,8 @@ mod tests {
     fn negative_infinite_theta_selects_nothing() {
         let h = rand_head(32, 128, 8);
         let c = cfg(f32::NEG_INFINITY);
-        let (state, _) = anchor_pass(&h, &c);
-        let stripes = identify_stripes(&h, &c, &state);
+        let (m, _) = anchor_m_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &m);
         assert_eq!(stripes.total(), 0);
     }
 
@@ -153,12 +152,12 @@ mod tests {
         let d = 8;
         let h = rand_head(33, n, d);
         let c = cfg(1.0);
-        let (state, _) = anchor_pass(&h, &c);
-        let stripes = identify_stripes(&h, &c, &state);
+        let (m, _) = anchor_m_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &m);
 
         // Brute-force Eq. 2 on pooled matrices.
         let q_pool = avgpool_rows(&h.q, 16);
-        let a_pool = avgpool_vec(&state.m, 16);
+        let a_pool = avgpool_vec(&m, 16);
         let mut s = Mat::zeros(q_pool.rows, n);
         matmul_nt_scaled(&q_pool, &h.k, h.scale(), &mut s);
 
@@ -186,8 +185,8 @@ mod tests {
         let h = rand_head(34, n, 8);
         let mut c = cfg(0.5);
         c.use_anchor = false;
-        let (state, _) = anchor_pass(&h, &c);
-        let stripes = identify_stripes(&h, &c, &state);
+        let (m, _) = anchor_m_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &m);
 
         // Rule becomes: select iff qk >= -θ for any pooled row.
         let q_pool = avgpool_rows(&h.q, 16);
@@ -211,8 +210,8 @@ mod tests {
     fn early_groups_have_no_candidates() {
         let h = rand_head(35, 64, 8);
         let c = cfg(f32::INFINITY);
-        let (state, _) = anchor_pass(&h, &c);
-        let stripes = identify_stripes(&h, &c, &state);
+        let (m, _) = anchor_m_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &m);
         // Group 0: window starts at 0, so no candidate columns at all.
         assert!(stripes.groups[0].is_empty());
     }
@@ -221,8 +220,8 @@ mod tests {
     fn identification_cost_counted() {
         let h = rand_head(36, 256, 8);
         let c = cfg(0.0);
-        let (state, _) = anchor_pass(&h, &c);
-        let stripes = identify_stripes(&h, &c, &state);
+        let (m, _) = anchor_m_pass(&h, &c);
+        let stripes = identify_stripes(&h, &c, &m);
         assert!(stripes.cost.ident_scores > 0);
         assert!(stripes.cost.flops > 0);
     }

@@ -1,27 +1,28 @@
-//! **AnchorAttention** — the paper's contribution (§3, Algorithms 1–3).
+//! **AnchorAttention** — the paper's contribution (§3, Algorithms 1–3),
+//! expressed in the planner → executor pipeline (DESIGN.md §2):
 //!
-//! Pipeline:
-//!
-//! 1. [`compute::anchor_pass`] (*Pattern-based Anchor Computation*, Alg. 1)
-//!    — exact blocked attention over the initial block(s) and the causal
-//!    local window, caching online-softmax state `(M, L, Acc)` per row.
-//!    `M` is the **anchor**: a near-maximum of each row's logits, because
-//!    row maxima concentrate in those regions (paper Fig. 5).
+//! 1. [`compute::anchor_m_pass`] (*Pattern-based Anchor Computation*,
+//!    Alg. 1, scoring half) — blocked scores over the initial block(s) and
+//!    the group-aligned causal local window; each row's max `M` is the
+//!    **anchor**, a near-maximum of the row's logits, because row maxima
+//!    concentrate in those regions (paper Fig. 5).
 //! 2. [`identify::identify_stripes`] (*Difference-aware Stripe Sparsity
 //!    Identification*, Alg. 2) — pooled queries vs all remaining keys; a
 //!    key survives iff `avgpool(anchor) − qk ≤ θ`. No sorting; stripe
 //!    `(b_q·step, 1)` granularity.
-//! 3. [`sparse::sparse_pass`] (*Fine-Grained Sparse Computation*, Alg. 3)
-//!    — gathers the surviving discrete keys/values and **continues** the
-//!    online softmax from the cached `(M, L, Acc)`, so anchor-region work
-//!    is reused, not recomputed (paper §3.4).
+//! 3. The resulting [`SparsePlan`] — anchor spans + stripe coordinates per
+//!    query-block group — is executed by the shared
+//!    [`crate::attention::plan::execute_plan`] (*Fine-Grained Sparse
+//!    Computation*, Alg. 3): discrete keys/values are gathered once per
+//!    group and folded into one online softmax per query block.
 
 pub mod compute;
 pub mod identify;
-pub mod sparse;
 
+use std::time::Instant;
+
+use crate::attention::plan::{run_planner, GroupPlan, Planner, SparsePlan};
 use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
-use crate::tensor::Mat;
 
 /// Hyperparameters of AnchorAttention. Paper defaults: `θ = 12`,
 /// `step = 16`, block size 128, one initial block.
@@ -37,7 +38,8 @@ pub struct AnchorConfig {
     /// Number of initial key blocks always computed (the attention sink).
     pub init_blocks: usize,
     /// Ablation switch (Table 4 "Without Anchor"): when false the anchor
-    /// is a zero tensor, exactly as the paper implements it.
+    /// is a zero tensor, exactly as the paper implements it (and the
+    /// `M` scoring pass is skipped — nothing consumes it).
     pub use_anchor: bool,
 }
 
@@ -79,19 +81,57 @@ impl AnchorConfig {
         let end = (g * self.step * self.tile.b_q).min(n);
         (start, end.max(start))
     }
+
+    /// Build the plan, also returning per-phase wallclock
+    /// `(anchor_s, identify_s)` for Fig. 6-style phase reporting.
+    pub fn plan_timed(&self, input: &HeadInput) -> (SparsePlan, f64, f64) {
+        let n = input.n();
+        let tile = self.tile;
+        let q_blocks = tile.q_blocks(n);
+        let n_groups = q_blocks.div_ceil(self.step);
+        let init_cols = self.init_cols(n);
+
+        let t0 = Instant::now();
+        let (m, m_cost) = if self.use_anchor {
+            compute::anchor_m_pass(input, self)
+        } else {
+            (Vec::new(), CostTally::default())
+        };
+        let t1 = Instant::now();
+        let stripes = identify::identify_stripes(input, self, &m);
+        debug_assert_eq!(stripes.groups.len(), n_groups);
+
+        let mut groups = Vec::with_capacity(n_groups);
+        for (g, sel) in stripes.groups.iter().enumerate() {
+            let win = g * self.step * tile.b_q;
+            let group_end = ((g + 1) * self.step * tile.b_q).min(n);
+            // Anchor spans, merged when the window reaches the init region
+            // (the executor clips each span to every block's causal limit).
+            let mut spans = if win <= init_cols {
+                vec![(0u32, group_end as u32)]
+            } else {
+                vec![(0u32, init_cols as u32), (win as u32, group_end as u32)]
+            };
+            spans.retain(|&(s, e)| s < e); // drop empty init span when init_blocks = 0
+            groups.push(GroupPlan { spans, stripes: sel.clone() });
+        }
+        let mut ident_cost = m_cost;
+        ident_cost.add(stripes.cost);
+        let plan =
+            SparsePlan::new("anchor", n, input.d(), tile, self.step, groups, ident_cost);
+        let t2 = Instant::now();
+        (plan, (t1 - t0).as_secs_f64(), (t2 - t1).as_secs_f64())
+    }
 }
 
-/// Cached Alg. 1 state, reused by Alg. 3 (paper §3.4 "temporarily cache the
-/// intermediate results … and reuse them").
-#[derive(Clone, Debug)]
-pub struct AnchorState {
-    /// Per-row running max `M` — the anchor scores `x_a`.
-    pub m: Vec<f32>,
-    /// Per-row normalizer `L`.
-    pub l: Vec<f32>,
-    /// Unnormalized accumulator `Acc` `[N, d]`.
-    pub acc: Mat,
-    pub cost: CostTally,
+impl Planner for AnchorConfig {
+    fn name(&self) -> &'static str {
+        "anchor"
+    }
+
+    fn plan(&self, input: &HeadInput) -> SparsePlan {
+        self.plan_timed(input).0
+    }
 }
 
 /// Output of Alg. 2: for every query-block *group*, the sorted discrete key
@@ -110,16 +150,10 @@ impl StripeSet {
     }
 }
 
-/// Full three-stage AnchorAttention over one head.
+/// Full three-stage AnchorAttention over one head (thin wrapper over the
+/// planner → executor pipeline).
 pub fn anchor_attention(input: &HeadInput, cfg: &AnchorConfig) -> AttnOutput {
-    let (state, mut coverage) = compute::anchor_pass(input, cfg);
-    let stripes = identify::identify_stripes(input, cfg, &state);
-    let (out, sparse_cost) = sparse::sparse_pass(input, cfg, &state, &stripes, &mut coverage);
-
-    let mut cost = state.cost;
-    cost.add(stripes.cost);
-    cost.add(sparse_cost);
-    AttnOutput { out, coverage, cost }
+    run_planner(input, cfg)
 }
 
 /// Timing breakdown of the three stages (for Fig. 6b/6c style reporting).
@@ -136,30 +170,18 @@ impl PhaseTimings {
     }
 }
 
-/// As [`anchor_attention`] but also returns per-phase wallclock.
+/// As [`anchor_attention`] but also returns per-phase wallclock: anchor
+/// scoring, stripe identification, and plan execution.
 pub fn anchor_attention_timed(
     input: &HeadInput,
     cfg: &AnchorConfig,
 ) -> (AttnOutput, PhaseTimings) {
-    let t0 = std::time::Instant::now();
-    let (state, mut coverage) = compute::anchor_pass(input, cfg);
-    let t1 = std::time::Instant::now();
-    let stripes = identify::identify_stripes(input, cfg, &state);
-    let t2 = std::time::Instant::now();
-    let (out, sparse_cost) = sparse::sparse_pass(input, cfg, &state, &stripes, &mut coverage);
-    let t3 = std::time::Instant::now();
-
-    let mut cost = state.cost;
-    cost.add(stripes.cost);
-    cost.add(sparse_cost);
-    (
-        AttnOutput { out, coverage, cost },
-        PhaseTimings {
-            anchor_s: (t1 - t0).as_secs_f64(),
-            identify_s: (t2 - t1).as_secs_f64(),
-            sparse_s: (t3 - t2).as_secs_f64(),
-        },
-    )
+    let (plan, anchor_s, identify_s) = cfg.plan_timed(input);
+    let t0 = Instant::now();
+    let mut out = crate::attention::plan::execute_plan(input, &plan);
+    let sparse_s = t0.elapsed().as_secs_f64();
+    out.cost.add(plan.ident_cost);
+    (out, PhaseTimings { anchor_s, identify_s, sparse_s })
 }
 
 #[cfg(test)]
@@ -167,6 +189,8 @@ mod tests {
     use super::*;
     use crate::attention::full::naive_attention;
     use crate::attention::mask::Coverage;
+    use crate::attention::plan::masked_reference;
+    use crate::tensor::Mat;
     use crate::util::rng::Pcg64;
 
     fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
@@ -282,6 +306,71 @@ mod tests {
         let a = anchor_attention(&h, &cfg);
         let (b, t) = anchor_attention_timed(&h, &cfg);
         assert!(a.out.max_abs_diff(&b.out) < 1e-6);
+        assert_eq!(a.cost, b.cost);
         assert!(t.total_s() > 0.0);
+    }
+
+    /// The defining property of the pipeline: output equals exact softmax
+    /// restricted to the plan's coverage.
+    #[test]
+    fn output_equals_coverage_masked_softmax() {
+        let h = rand_head(42, 128, 8);
+        let cfg = small_cfg(2.0);
+        let out = anchor_attention(&h, &cfg);
+        let expect = masked_reference(&h, &out.coverage);
+        assert!(
+            out.out.max_abs_diff(&expect) < 1e-4,
+            "max diff {}",
+            out.out.max_abs_diff(&expect)
+        );
+    }
+
+    /// Without-anchor ablation still runs the full pipeline and stays
+    /// consistent with its own coverage.
+    #[test]
+    fn without_anchor_matches_masked_softmax() {
+        let h = rand_head(43, 128, 8);
+        let mut cfg = small_cfg(0.5);
+        cfg.use_anchor = false;
+        let out = anchor_attention(&h, &cfg);
+        let expect = masked_reference(&h, &out.coverage);
+        assert!(out.out.max_abs_diff(&expect) < 1e-4);
+    }
+
+    /// Gather chunking is a pure implementation detail: different kv tile
+    /// widths with matched anchor regions agree.
+    #[test]
+    fn gather_chunking_invariant_to_bkv() {
+        let h = rand_head(45, 128, 8);
+        let mut c1 = small_cfg(3.0);
+        c1.tile = TileConfig::new(16, 8);
+        c1.init_blocks = 8; // init region = 64 columns
+        let mut c2 = small_cfg(3.0);
+        c2.tile = TileConfig::new(16, 64);
+        c2.init_blocks = 1; // init region = 64 columns
+        let o1 = anchor_attention(&h, &c1);
+        let o2 = anchor_attention(&h, &c2);
+        assert!(o1.out.max_abs_diff(&o2.out) < 1e-4);
+    }
+
+    /// Plan structure: group spans are the init region + group window,
+    /// merged for early groups.
+    #[test]
+    fn plan_spans_match_anchor_regions() {
+        let h = rand_head(46, 128, 8);
+        let cfg = small_cfg(1.0);
+        let plan = Planner::plan(&cfg, &h);
+        assert_eq!(plan.step, 2);
+        assert_eq!(plan.groups.len(), 4);
+        // Group 0: window starts at 0 ⇒ merged span.
+        assert_eq!(plan.groups[0].spans, vec![(0, 32)]);
+        assert!(plan.groups[0].stripes.is_empty());
+        // Group 2: init [0,16) + window [64, 96).
+        assert_eq!(plan.groups[2].spans, vec![(0, 16), (64, 96)]);
+        // Stripes live strictly between init and window.
+        assert!(plan.groups[2]
+            .stripes
+            .iter()
+            .all(|&c| (16..64).contains(&(c as usize))));
     }
 }

@@ -2,7 +2,7 @@
 //! (block (128,128) top-k=256 vs stripe (128,1) top-k=16384) and §2.1.1's
 //! "static k" discussion.
 
-use super::block_sparse_attention;
+use crate::attention::plan::{plan_from_block_sets, run_planner, Planner, SparsePlan};
 use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
 use crate::tensor::ops::avgpool_rows;
 use crate::tensor::{matmul_nt_scaled, Mat};
@@ -61,11 +61,19 @@ pub fn select_topk_blocks(input: &HeadInput, cfg: &BlockTopKConfig) -> (Vec<Vec<
     (sets, cost)
 }
 
+impl Planner for BlockTopKConfig {
+    fn name(&self) -> &'static str {
+        "block-topk"
+    }
+
+    fn plan(&self, input: &HeadInput) -> SparsePlan {
+        let (sets, est_cost) = select_topk_blocks(input, self);
+        plan_from_block_sets("block-topk", input, self.tile, &sets, est_cost)
+    }
+}
+
 pub fn block_topk_attention(input: &HeadInput, cfg: &BlockTopKConfig) -> AttnOutput {
-    let (sets, est_cost) = select_topk_blocks(input, cfg);
-    let mut out = block_sparse_attention(input, cfg.tile, &sets);
-    out.cost.add(est_cost);
-    out
+    run_planner(input, cfg)
 }
 
 #[cfg(test)]

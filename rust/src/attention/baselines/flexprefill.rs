@@ -10,7 +10,7 @@
 //! every head, which is the path exercised at the paper's settings
 //! (γ=0.95, τ=0.1) on long inputs. Documented in DESIGN.md §1.
 
-use super::block_sparse_attention;
+use crate::attention::plan::{plan_from_block_sets, run_planner, Planner, SparsePlan};
 use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
 use crate::tensor::ops::avgpool_rows;
 use crate::tensor::{matmul_nt_scaled, Mat};
@@ -86,11 +86,19 @@ pub fn select_blocks(input: &HeadInput, cfg: &FlexPrefillConfig) -> (Vec<Vec<u32
     (sets, cost)
 }
 
+impl Planner for FlexPrefillConfig {
+    fn name(&self) -> &'static str {
+        "flexprefill"
+    }
+
+    fn plan(&self, input: &HeadInput) -> SparsePlan {
+        let (sets, est_cost) = select_blocks(input, self);
+        plan_from_block_sets("flexprefill", input, self.tile, &sets, est_cost)
+    }
+}
+
 pub fn flexprefill_attention(input: &HeadInput, cfg: &FlexPrefillConfig) -> AttnOutput {
-    let (sets, est_cost) = select_blocks(input, cfg);
-    let mut out = block_sparse_attention(input, cfg.tile, &sets);
-    out.cost.add(est_cost);
-    out
+    run_planner(input, cfg)
 }
 
 #[cfg(test)]

@@ -2,151 +2,52 @@
 //! (Table 2/3, Fig. 6/7): StreamingLLM, MInference's Vertical_Slash,
 //! FlexPrefill, and a block-top-k analysis baseline (Table 1).
 //!
-//! All baselines produce a [`Coverage`] and compute *exact* softmax
-//! attention restricted to that coverage, via one of two shared kernels:
+//! Every baseline is a [`crate::attention::plan::Planner`]: its selection
+//! logic emits a [`crate::attention::plan::SparsePlan`] — contiguous block
+//! patterns become anchor spans ([`crate::attention::plan::plan_from_block_sets`]),
+//! discrete patterns become stripes
+//! ([`crate::attention::plan::plan_from_coverage`]) — and the shared
+//! executor computes exact softmax attention restricted to the plan, so
+//! every method's numbers stay apples-to-apples.
 //!
-//! * [`block_sparse_attention`] — contiguous key-block tiles (the fast path
-//!   block-sparse methods get on real hardware);
-//! * [`coverage_attention`] — gather-based, for methods with discrete
-//!   column patterns (Vertical_Slash's verticals).
+//! The two legacy kernels survive as thin wrappers over that pipeline.
 
 pub mod block_topk;
 pub mod flexprefill;
 pub mod streaming;
 pub mod vertical_slash;
 
-use crate::attention::full::{mask_tile_causal, BlockState};
 use crate::attention::mask::Coverage;
+use crate::attention::plan::{execute_plan, plan_from_block_sets, plan_from_coverage};
 use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
-use crate::tensor::{matmul_nt_scaled, Mat};
-use crate::util::threadpool::parallel_map;
 
 /// Exact attention over per-query-block *key block* lists (contiguous
 /// tiles). `block_sets[qb]` holds sorted kv-block indices; blocks past the
-/// causal limit are clipped, diagonal blocks are causally masked.
+/// causal limit are clipped, diagonal blocks are causally masked. Thin
+/// wrapper: the block lists become a span-only plan.
 pub fn block_sparse_attention(
     input: &HeadInput,
     tile: TileConfig,
     block_sets: &[Vec<u32>],
 ) -> AttnOutput {
-    let n = input.n();
-    let d = input.d();
-    let scale = input.scale();
-    let q_blocks = tile.q_blocks(n);
-    assert_eq!(block_sets.len(), q_blocks);
-
-    let results = parallel_map(q_blocks, |qb| {
-        let row0 = qb * tile.b_q;
-        let rows = (n - row0).min(tile.b_q);
-        let limit = row0 + rows;
-        let q_i = input.q.rows_mat(row0, rows);
-        let mut st = BlockState::new(rows, d);
-        let mut cost = CostTally::default();
-        let mut s = Mat::zeros(rows, tile.b_kv);
-        for &jb in &block_sets[qb] {
-            let col0 = jb as usize * tile.b_kv;
-            if col0 >= limit {
-                continue;
-            }
-            let cols = (limit - col0).min(tile.b_kv);
-            let k_j = input.k.rows_mat(col0, cols);
-            let v_j = input.v.rows_mat(col0, cols);
-            if s.cols != cols || s.rows != rows {
-                s = Mat::zeros(rows, cols);
-            }
-            matmul_nt_scaled(&q_i, &k_j, scale, &mut s);
-            if col0 + cols > row0 {
-                mask_tile_causal(&mut s, row0, col0);
-            }
-            st.fold_tile(&mut s, &v_j);
-            cost.add(CostTally::attn_tile(rows, cols, d));
-        }
-        let mut out_rows = vec![0.0f32; rows * d];
-        st.write_output(&mut out_rows, d);
-        (out_rows, cost)
-    });
-
-    let mut out = Mat::zeros(n, d);
-    let mut cost = CostTally::default();
-    let mut coverage = Coverage::new(n, tile.b_q);
-    for (qb, (rows_data, c)) in results.into_iter().enumerate() {
-        let row0 = qb * tile.b_q;
-        out.data[row0 * d..row0 * d + rows_data.len()].copy_from_slice(&rows_data);
-        cost.add(c);
-        let limit = ((qb + 1) * tile.b_q).min(n);
-        for &jb in &block_sets[qb] {
-            let col0 = jb as usize * tile.b_kv;
-            if col0 < limit {
-                coverage.set_range(qb, col0, (col0 + tile.b_kv).min(limit));
-            }
-        }
-    }
-    AttnOutput { out, coverage, cost }
+    let plan =
+        plan_from_block_sets("block-sparse", input, tile, block_sets, CostTally::default());
+    execute_plan(input, &plan)
 }
 
 /// Exact attention over an arbitrary [`Coverage`] (gather path). Columns
 /// beyond each row's causal limit are masked per-row inside the tile.
+/// Thin wrapper: the covered columns become a stripe-only plan.
 pub fn coverage_attention(input: &HeadInput, tile: TileConfig, coverage: &Coverage) -> AttnOutput {
-    let n = input.n();
-    let d = input.d();
-    let scale = input.scale();
-    let q_blocks = tile.q_blocks(n);
-    assert_eq!(coverage.n, n);
-    assert_eq!(coverage.b_q, tile.b_q);
-
-    let results = parallel_map(q_blocks, |qb| {
-        let row0 = qb * tile.b_q;
-        let rows = (n - row0).min(tile.b_q);
-        let limit = row0 + rows;
-        let q_i = input.q.rows_mat(row0, rows);
-        let mut st = BlockState::new(rows, d);
-        let mut cost = CostTally::default();
-
-        let cols: Vec<u32> =
-            coverage.columns(qb).into_iter().filter(|&c| (c as usize) < limit).collect();
-        let mut s = Mat::zeros(rows, tile.b_kv.min(cols.len().max(1)));
-        let mut off = 0;
-        while off < cols.len() {
-            let chunk = &cols[off..(off + tile.b_kv).min(cols.len())];
-            let k_g = input.k.gather_rows(chunk);
-            let v_g = input.v.gather_rows(chunk);
-            if s.cols != chunk.len() || s.rows != rows {
-                s = Mat::zeros(rows, chunk.len());
-            }
-            matmul_nt_scaled(&q_i, &k_g, scale, &mut s);
-            // Per-row causal mask against absolute column ids.
-            for r in 0..rows {
-                let abs_row = row0 + r;
-                let srow = s.row_mut(r);
-                for (ci, &col) in chunk.iter().enumerate() {
-                    if col as usize > abs_row {
-                        srow[ci] = f32::NEG_INFINITY;
-                    }
-                }
-            }
-            st.fold_tile(&mut s, &v_g);
-            cost.add(CostTally::attn_tile(rows, chunk.len(), d));
-            off += chunk.len();
-        }
-        let mut out_rows = vec![0.0f32; rows * d];
-        st.write_output(&mut out_rows, d);
-        (out_rows, cost)
-    });
-
-    let mut out = Mat::zeros(n, d);
-    let mut cost = CostTally::default();
-    for (qb, (rows_data, c)) in results.into_iter().enumerate() {
-        let row0 = qb * tile.b_q;
-        out.data[row0 * d..row0 * d + rows_data.len()].copy_from_slice(&rows_data);
-        cost.add(c);
-    }
-    AttnOutput { out, coverage: coverage.clone(), cost }
+    let plan = plan_from_coverage("coverage", input, tile, coverage, CostTally::default());
+    execute_plan(input, &plan)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::attention::full::naive_attention;
+    use crate::tensor::Mat;
     use crate::util::rng::Pcg64;
 
     fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {

@@ -3,8 +3,8 @@
 //! fast, but misses mid-context information (the failure mode Table 3 and
 //! Fig. 7 show at long lengths).
 
-use super::block_sparse_attention;
-use crate::attention::{AttnOutput, HeadInput, TileConfig};
+use crate::attention::plan::{plan_from_block_sets, run_planner, Planner, SparsePlan};
+use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StreamingConfig {
@@ -50,9 +50,21 @@ pub fn streaming_blocks(cfg: &StreamingConfig, n: usize) -> Vec<Vec<u32>> {
         .collect()
 }
 
+impl Planner for StreamingConfig {
+    fn name(&self) -> &'static str {
+        "streaming-llm"
+    }
+
+    /// Static pattern ⇒ zero identification cost: sink + window blocks
+    /// become anchor spans.
+    fn plan(&self, input: &HeadInput) -> SparsePlan {
+        let sets = streaming_blocks(self, input.n());
+        plan_from_block_sets("streaming-llm", input, self.tile, &sets, CostTally::default())
+    }
+}
+
 pub fn streaming_attention(input: &HeadInput, cfg: &StreamingConfig) -> AttnOutput {
-    let sets = streaming_blocks(cfg, input.n());
-    block_sparse_attention(input, cfg.tile, &sets)
+    run_planner(input, cfg)
 }
 
 #[cfg(test)]

@@ -4,8 +4,8 @@
 //! The pattern is *estimated once from local information* — the precise
 //! weakness AnchorAttention's global identification addresses (paper §1).
 
-use super::coverage_attention;
 use crate::attention::mask::Coverage;
+use crate::attention::plan::{plan_from_coverage, run_planner, Planner, SparsePlan};
 use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
 use crate::tensor::{matmul_nt_scaled, Mat};
 
@@ -113,12 +113,23 @@ pub fn pattern_coverage(pattern: &VsPattern, n: usize, tile: TileConfig) -> Cove
     cov
 }
 
+impl Planner for VerticalSlashConfig {
+    fn name(&self) -> &'static str {
+        "vertical-slash"
+    }
+
+    /// Discrete pattern ⇒ stripe-only plan: verticals and slash bands are
+    /// gathered column-by-column, exactly as MInference's sparse kernel
+    /// loads them.
+    fn plan(&self, input: &HeadInput) -> SparsePlan {
+        let pattern = estimate_pattern(input, self);
+        let cov = pattern_coverage(&pattern, input.n(), self.tile);
+        plan_from_coverage("vertical-slash", input, self.tile, &cov, pattern.cost)
+    }
+}
+
 pub fn vertical_slash_attention(input: &HeadInput, cfg: &VerticalSlashConfig) -> AttnOutput {
-    let pattern = estimate_pattern(input, cfg);
-    let cov = pattern_coverage(&pattern, input.n(), cfg.tile);
-    let mut out = coverage_attention(input, cfg.tile, &cov);
-    out.cost.add(pattern.cost);
-    out
+    run_planner(input, cfg)
 }
 
 #[cfg(test)]

@@ -1,13 +1,16 @@
 //! Dense causal attention in the FlashAttention style: blocked over
-//! (query-block × key-block) tiles with online softmax, parallelized over
-//! query blocks. This is the paper's `Full-attn` baseline (Fig. 2's
-//! denominator) and the numeric reference every sparse method is compared
-//! against.
+//! (query-block × key-block) tiles with online softmax. This is the
+//! paper's `Full-attn` baseline (Fig. 2's denominator) and the numeric
+//! reference every sparse method is compared against.
+//!
+//! [`FullPlanner`] expresses density in the plan IR — one causal span per
+//! query block — so the dense baseline runs through the same
+//! [`crate::attention::plan::execute_plan`] executor as every sparse
+//! method and the measured latencies stay directly comparable.
 
-use crate::attention::mask::Coverage;
+use crate::attention::plan::{run_planner, GroupPlan, Planner, SparsePlan};
 use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
 use crate::tensor::{matmul_nn_acc, matmul_nt_scaled, Mat};
-use crate::util::threadpool::parallel_map;
 
 /// Online-softmax accumulator state for one query block.
 pub(crate) struct BlockState {
@@ -98,51 +101,35 @@ pub(crate) fn mask_tile_causal(s: &mut Mat, row0: usize, col0: usize) {
     }
 }
 
-/// Dense causal attention over one head.
-pub fn full_attention(input: &HeadInput, tile: TileConfig) -> AttnOutput {
-    let n = input.n();
-    let d = input.d();
-    let scale = input.scale();
-    let q_blocks = tile.q_blocks(n);
+/// Planner for the dense baseline: one `[0, causal_limit)` span per query
+/// block, zero identification cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FullPlanner {
+    pub tile: TileConfig,
+}
 
-    let results = parallel_map(q_blocks, |qb| {
-        let row0 = qb * tile.b_q;
-        let rows = (n - row0).min(tile.b_q);
-        let q_i = input.q.rows_mat(row0, rows);
-        let mut state = BlockState::new(rows, d);
-        let mut cost = CostTally::default();
-        let limit = (row0 + rows).min(n); // widest causal extent in block
-        let kv_blocks = limit.div_ceil(tile.b_kv);
-        let mut s = Mat::zeros(rows, tile.b_kv);
-        for jb in 0..kv_blocks {
-            let col0 = jb * tile.b_kv;
-            let cols = (limit - col0).min(tile.b_kv);
-            let k_j = input.k.rows_mat(col0, cols);
-            let v_j = input.v.rows_mat(col0, cols);
-            if s.cols != cols {
-                s = Mat::zeros(rows, cols);
-            }
-            matmul_nt_scaled(&q_i, &k_j, scale, &mut s);
-            if col0 + cols > row0 {
-                mask_tile_causal(&mut s, row0, col0);
-            }
-            state.fold_tile(&mut s, &v_j);
-            cost.add(CostTally::attn_tile(rows, cols, d));
-        }
-        let mut out_rows = vec![0.0f32; rows * d];
-        state.write_output(&mut out_rows, d);
-        (out_rows, cost)
-    });
-
-    let mut out = Mat::zeros(n, d);
-    let mut cost = CostTally::default();
-    for (qb, (rows_data, c)) in results.into_iter().enumerate() {
-        let row0 = qb * tile.b_q;
-        out.data[row0 * d..row0 * d + rows_data.len()].copy_from_slice(&rows_data);
-        cost.add(c);
+impl Planner for FullPlanner {
+    fn name(&self) -> &'static str {
+        "full-attn"
     }
 
-    AttnOutput { out, coverage: Coverage::full(n, tile.b_q), cost }
+    fn plan(&self, input: &HeadInput) -> SparsePlan {
+        let n = input.n();
+        let tile = self.tile;
+        let groups: Vec<GroupPlan> = (0..tile.q_blocks(n))
+            .map(|qb| GroupPlan {
+                spans: vec![(0, (((qb + 1) * tile.b_q).min(n)) as u32)],
+                stripes: Vec::new(),
+            })
+            .collect();
+        SparsePlan::new("full-attn", n, input.d(), tile, 1, groups, CostTally::default())
+    }
+}
+
+/// Dense causal attention over one head (thin wrapper over the planner →
+/// executor pipeline).
+pub fn full_attention(input: &HeadInput, tile: TileConfig) -> AttnOutput {
+    run_planner(input, &FullPlanner { tile })
 }
 
 /// Naive O(N²)-memory reference — materializes the score matrix. Only for

@@ -9,7 +9,13 @@
 //! * **Output fidelity**: relative Frobenius error of the sparse output vs
 //!   dense attention (drives the LongBench/RULER accuracy proxies).
 
+//! With the planner → executor split, coverage comes straight from a
+//! [`SparsePlan`] ([`plan_recall`] / [`plan_sparsity`]): recall and
+//! sparsity are properties of *identification*, so they are measured
+//! without executing any attention.
+
 use crate::attention::mask::Coverage;
+use crate::attention::plan::SparsePlan;
 use crate::attention::{HeadInput, TileConfig};
 use crate::tensor::{matmul_nt_scaled, Mat};
 use crate::util::threadpool::parallel_map;
@@ -150,6 +156,22 @@ pub fn pooled_recall(input: &HeadInput, coverage: &Coverage, tile: TileConfig) -
     RecallStats { mean_recall: if rows > 0 { sum / rows as f64 } else { 0.0 }, min_recall: min, rows }
 }
 
+/// Exact recall of a plan's coverage — no attention executed; the plan IR
+/// alone determines the metric.
+pub fn plan_recall(input: &HeadInput, plan: &SparsePlan) -> RecallStats {
+    recall(input, &plan.coverage(), plan.tile)
+}
+
+/// Pooled-recall variant of [`plan_recall`] for very long contexts.
+pub fn plan_pooled_recall(input: &HeadInput, plan: &SparsePlan) -> RecallStats {
+    pooled_recall(input, &plan.coverage(), plan.tile)
+}
+
+/// Sparsity implied by a plan (fraction of causal pairs skipped).
+pub fn plan_sparsity(plan: &SparsePlan) -> f64 {
+    plan.coverage().sparsity()
+}
+
 /// Output fidelity: relative Frobenius error vs the dense output, mapped to
 /// an accuracy-like score in [0, 100] (`100 · max(0, 1 − err/tol)` — the
 /// LongBench/RULER proxy; see DESIGN.md §1).
@@ -242,6 +264,28 @@ mod tests {
         let cov = Coverage::full(128, 32);
         let r = pooled_recall(&h, &cov, tile);
         assert!((r.mean_recall - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_metrics_match_executed_metrics() {
+        // Recall/sparsity from the plan alone equal the metrics of the
+        // executed output's coverage — identification is the metric.
+        let h = rand_head(7, 128, 8);
+        let m = crate::attention::Method::Anchor(
+            crate::attention::anchor::AnchorConfig {
+                tile: TileConfig::new(16, 16),
+                theta: 3.0,
+                step: 2,
+                init_blocks: 1,
+                use_anchor: true,
+            },
+        );
+        let plan = m.plan(&h);
+        let out = m.run(&h);
+        let from_plan = plan_recall(&h, &plan);
+        let from_exec = recall(&h, &out.coverage, plan.tile);
+        assert!((from_plan.mean_recall - from_exec.mean_recall).abs() < 1e-12);
+        assert_eq!(plan_sparsity(&plan), out.coverage.sparsity());
     }
 
     #[test]

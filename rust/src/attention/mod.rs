@@ -4,17 +4,28 @@
 //! latencies are directly comparable (the paper's A100/Triton testbed is
 //! substituted by this engine — see DESIGN.md §1).
 //!
-//! Layout convention: one head at a time, row-major `[N, d]` matrices for
-//! Q, K, V, causal masking, logits scaled by `1/sqrt(d)`.
+//! Architecture (DESIGN.md §2): every method is a [`plan::Planner`] that
+//! identifies a [`plan::SparsePlan`] (coordinates only); one shared
+//! executor ([`plan::execute_plan`]) computes exact softmax attention
+//! restricted to the plan. [`Method::run`] is the thin per-head wrapper;
+//! [`Method::run_batch`] executes a multi-head [`plan::BatchInput`] at
+//! head granularity with optional plan-cache reuse across head groups.
+//!
+//! Layout convention: row-major `[N, d]` matrices for Q, K, V per head,
+//! causal masking, logits scaled by `1/sqrt(d)`.
 
 pub mod anchor;
 pub mod baselines;
 pub mod full;
 pub mod mask;
 pub mod metrics;
+pub mod plan;
 pub mod strategy;
 
 use crate::tensor::Mat;
+use crate::util::threadpool::parallel_map;
+use plan::{BatchInput, BatchOutput, PlanCache, PlanKey, Planner, SparsePlan};
+use std::sync::Arc;
 
 /// Tiling parameters shared by every method (the paper fixes both to 128).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -152,18 +163,127 @@ impl Method {
         }
     }
 
-    /// Run the method on one head.
-    pub fn run(&self, input: &HeadInput) -> AttnOutput {
+    /// The planner implementing this method's identification stage.
+    pub fn planner(&self) -> Box<dyn Planner> {
         match self {
-            Method::Full(tile) => full::full_attention(input, *tile),
-            Method::Anchor(cfg) => anchor::anchor_attention(input, cfg),
-            Method::Streaming(cfg) => baselines::streaming::streaming_attention(input, cfg),
-            Method::VerticalSlash(cfg) => {
-                baselines::vertical_slash::vertical_slash_attention(input, cfg)
-            }
-            Method::FlexPrefill(cfgg) => baselines::flexprefill::flexprefill_attention(input, cfgg),
-            Method::BlockTopK(cfg) => baselines::block_topk::block_topk_attention(input, cfg),
+            Method::Full(tile) => Box::new(full::FullPlanner { tile: *tile }),
+            Method::Anchor(cfg) => Box::new(*cfg),
+            Method::Streaming(cfg) => Box::new(*cfg),
+            Method::VerticalSlash(cfg) => Box::new(*cfg),
+            Method::FlexPrefill(cfg) => Box::new(*cfg),
+            Method::BlockTopK(cfg) => Box::new(*cfg),
         }
+    }
+
+    /// Identify this method's plan for one head (no attention computed).
+    pub fn plan(&self, input: &HeadInput) -> SparsePlan {
+        self.planner().plan(input)
+    }
+
+    /// Run the method on one head: plan, execute, fold identification cost.
+    pub fn run(&self, input: &HeadInput) -> AttnOutput {
+        plan::run_planner(input, self.planner().as_ref())
+    }
+
+    /// Run the method on a multi-head batch, parallelizing at head
+    /// granularity; each head's plan is built independently.
+    pub fn run_batch(&self, batch: &BatchInput) -> BatchOutput {
+        self.run_batch_inner(batch, None)
+    }
+
+    /// As [`Method::run_batch`] but with a [`PlanCache`]: `keys[h]` names
+    /// head `h`'s `(layer, head_group)` cell, and heads sharing a key reuse
+    /// the first-planned head's identification work (§3.2). Cache hits skip
+    /// the ident cost entirely — that saving is what the scheduler's
+    /// plan-hit-aware cost model accounts for.
+    pub fn run_batch_cached(
+        &self,
+        batch: &BatchInput,
+        cache: &PlanCache,
+        keys: &[PlanKey],
+    ) -> BatchOutput {
+        assert_eq!(keys.len(), batch.h(), "one PlanKey per head");
+        self.run_batch_inner(batch, Some((cache, keys)))
+    }
+
+    /// Two-stage batch execution: first resolve one plan per *distinct*
+    /// key (parallel planning, no duplicate identification within the
+    /// batch), then execute every head in parallel against its resolved
+    /// plan. Hit accounting is deterministic: `hits = heads − fresh keys`.
+    fn run_batch_inner(
+        &self,
+        batch: &BatchInput,
+        cached: Option<(&PlanCache, &[PlanKey])>,
+    ) -> BatchOutput {
+        let planner = self.planner();
+        let planner = planner.as_ref();
+        let h_total = batch.h();
+        let multi = h_total > 1;
+
+        let mut plans: Vec<Option<Arc<SparsePlan>>> = (0..h_total).map(|_| None).collect();
+        // Heads that pay their plan's identification cost (the planning
+        // head of each fresh key; cache/batch hits ride for free).
+        let mut pays_ident = vec![false; h_total];
+        let cache_hits;
+        let cache_misses;
+        match cached {
+            Some((cache, keys)) => {
+                // First head of each distinct key, in first-seen order.
+                let mut firsts: Vec<(PlanKey, usize)> = Vec::new();
+                for (h, &k) in keys.iter().enumerate() {
+                    if !firsts.iter().any(|&(fk, _)| fk == k) {
+                        firsts.push((k, h));
+                    }
+                }
+                let resolved: Vec<(Arc<SparsePlan>, bool)> =
+                    parallel_map(firsts.len(), |i| {
+                        let (key, h) = firsts[i];
+                        cache.get_or_plan(key, || planner.plan(&batch.heads[h]))
+                    });
+                let mut misses = 0u64;
+                for (&(key, h0), (head_plan, hit)) in firsts.iter().zip(&resolved) {
+                    if !hit {
+                        misses += 1;
+                        pays_ident[h0] = true;
+                    }
+                    for (h, &k) in keys.iter().enumerate() {
+                        if k == key {
+                            plans[h] = Some(head_plan.clone());
+                        }
+                    }
+                }
+                cache_misses = misses;
+                cache_hits = h_total as u64 - misses;
+            }
+            None => {
+                let resolved: Vec<Arc<SparsePlan>> =
+                    parallel_map(h_total, |h| Arc::new(planner.plan(&batch.heads[h])));
+                for (h, head_plan) in resolved.into_iter().enumerate() {
+                    plans[h] = Some(head_plan);
+                    pays_ident[h] = true;
+                }
+                cache_hits = 0;
+                cache_misses = h_total as u64;
+            }
+        }
+        let plans: Vec<Arc<SparsePlan>> =
+            plans.into_iter().map(|p| p.expect("plan resolved")).collect();
+
+        let outputs: Vec<AttnOutput> = parallel_map(h_total, |h| {
+            let head = &batch.heads[h];
+            // Parallelism lives at head granularity here; the per-head
+            // executor runs serially to avoid oversubscribing the pool.
+            let mut out = if multi {
+                plan::execute_plan_serial(head, &plans[h])
+            } else {
+                plan::execute_plan(head, &plans[h])
+            };
+            if pays_ident[h] {
+                out.cost.add(plans[h].ident_cost);
+            }
+            out
+        });
+        BatchOutput { outputs, plans, cache_hits, cache_misses }
     }
 }
 
@@ -196,5 +316,124 @@ mod tests {
         let v = Mat::zeros(4, 16);
         let h = HeadInput::new(q, k, v);
         assert!((h.scale() - 0.25).abs() < 1e-7);
+    }
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = crate::util::rng::Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn small_methods() -> Vec<Method> {
+        let tile = TileConfig::new(16, 16);
+        vec![
+            Method::Full(tile),
+            Method::Anchor(anchor::AnchorConfig {
+                tile,
+                theta: 4.0,
+                step: 2,
+                init_blocks: 1,
+                use_anchor: true,
+            }),
+            Method::Streaming(baselines::streaming::StreamingConfig {
+                tile,
+                global_tokens: 16,
+                local_tokens: 32,
+            }),
+            Method::VerticalSlash(baselines::vertical_slash::VerticalSlashConfig {
+                tile,
+                vertical_tokens: 8,
+                slash_tokens: 8,
+                last_q: 16,
+            }),
+            Method::FlexPrefill(baselines::flexprefill::FlexPrefillConfig {
+                tile,
+                gamma: 0.9,
+                min_budget_tokens: 16,
+            }),
+            Method::BlockTopK(baselines::block_topk::BlockTopKConfig {
+                tile,
+                k: 3,
+                force_sink_local: true,
+            }),
+        ]
+    }
+
+    /// Every method routes through Planner::plan + execute_plan, and the
+    /// plan's coverage/cost agree with what the run reports.
+    #[test]
+    fn run_is_plan_plus_execute_for_all_methods() {
+        let h = rand_head(77, 128, 16);
+        for m in small_methods() {
+            let p = m.plan(&h);
+            assert_eq!(p.method, m.name());
+            let out = m.run(&h);
+            assert_eq!(
+                out.coverage.total_covered(),
+                p.coverage().total_covered(),
+                "{}",
+                m.name()
+            );
+            let mut expect_cost = p.predicted_cost;
+            expect_cost.add(p.ident_cost);
+            assert_eq!(out.cost, expect_cost, "{}", m.name());
+        }
+    }
+
+    /// Batched multi-head execution matches per-head runs exactly.
+    #[test]
+    fn run_batch_matches_per_head_runs() {
+        let heads: Vec<HeadInput> = (0..3).map(|i| rand_head(100 + i, 96, 8)).collect();
+        let batch = plan::BatchInput::new(heads.clone());
+        for m in small_methods() {
+            let b = m.run_batch(&batch);
+            assert_eq!(b.cache_hits, 0);
+            assert_eq!(b.cache_misses, 3);
+            for (h, out) in heads.iter().zip(&b.outputs) {
+                let single = m.run(h);
+                assert!(
+                    out.out.max_abs_diff(&single.out) < 1e-6,
+                    "{} diverges in batch",
+                    m.name()
+                );
+                assert_eq!(out.cost, single.cost, "{}", m.name());
+            }
+        }
+    }
+
+    /// Heads sharing a PlanKey reuse the first head's plan; hits skip the
+    /// identification cost.
+    #[test]
+    fn run_batch_cached_shares_plans_within_groups() {
+        let shared = rand_head(200, 96, 8);
+        let batch = plan::BatchInput::new(vec![shared.clone(), shared.clone(), shared]);
+        let keys = vec![
+            plan::PlanKey::new(0, 0),
+            plan::PlanKey::new(0, 0),
+            plan::PlanKey::new(0, 1),
+        ];
+        let m = Method::Anchor(anchor::AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta: 4.0,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        });
+        let cache = plan::PlanCache::new();
+        let b = m.run_batch_cached(&batch, &cache, &keys);
+        // Distinct keys plan exactly once; the other heads hit.
+        assert_eq!((b.cache_hits, b.cache_misses), (1, 2));
+        assert!(b.outputs[0].out.max_abs_diff(&b.outputs[1].out) < 1e-6);
+        assert!(Arc::ptr_eq(&b.plans[0], &b.plans[1]));
+        assert_eq!(cache.stats().entries, 2);
+        // A second batch over a warm cache is all hits.
+        let b2 = m.run_batch_cached(&batch, &cache, &keys);
+        assert_eq!((b2.cache_hits, b2.cache_misses), (3, 0));
+        // Hit heads do not pay identification cost.
+        assert!(b2.outputs[0].cost.flops < b.outputs[0].cost.flops + 1);
+        assert_eq!(b2.outputs[1].cost, b2.outputs[0].cost);
     }
 }

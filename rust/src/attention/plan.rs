@@ -1,0 +1,813 @@
+//! The plan IR: identification (Alg. 2) and sparse computation (Alg. 3) are
+//! separable stages that communicate through *discrete stripe coordinates*,
+//! so the engine splits every method into a [`Planner`] that emits a
+//! [`SparsePlan`] and one shared executor ([`execute_plan`]) that computes
+//! exact softmax attention restricted to the plan (DESIGN.md §2).
+//!
+//! A plan is pure coordinates — per query-block-group anchor **spans**
+//! (contiguous, always-computed regions) plus **stripes** (discrete key
+//! columns, the paper's `(b_q·step, 1)` granularity) — so it can be cached,
+//! shared across heads in a group ([`PlanCache`], the paper's cross-input
+//! commonality, §3.2), analyzed ([`SparsePlan::coverage`] feeds the
+//! recall/sparsity metrics without executing attention), and priced
+//! ([`SparsePlan::predicted_cost`] mirrors the executor's tile walk exactly).
+//!
+//! Multi-head execution ([`BatchInput`], [`Method::run_batch`]) parallelizes
+//! at head granularity over the shared threadpool; the per-head executor
+//! then runs serially so the pool is not oversubscribed.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::attention::full::{mask_tile_causal, BlockState};
+use crate::attention::mask::Coverage;
+use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
+use crate::tensor::{matmul_nt_scaled, Mat};
+use crate::util::threadpool::parallel_map;
+
+/// Plan entries for one query-block *group* (`step` consecutive query
+/// blocks sharing one identification result, §3.4).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GroupPlan {
+    /// Disjoint, sorted, non-adjacent `[start, end)` key ranges always
+    /// computed for every block of the group; the executor clips each span
+    /// to the block's causal limit and masks the diagonal tile.
+    pub spans: Vec<(u32, u32)>,
+    /// Sorted discrete key columns gathered for every block of the group
+    /// (disjoint from `spans`). Columns at or past a block's diagonal are
+    /// masked per row, so planners may share one stripe set group-wide.
+    pub stripes: Vec<u32>,
+}
+
+impl GroupPlan {
+    /// Number of key coordinates this group touches (spans + stripes).
+    pub fn coords(&self) -> usize {
+        let span: usize = self.spans.iter().map(|&(s, e)| (e - s) as usize).sum();
+        span + self.stripes.len()
+    }
+}
+
+/// The plan IR one [`Planner`] emits for one head: coordinates only, no
+/// tensor data, so plans are cheap to cache and share.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparsePlan {
+    /// Planner name (method identifier, for reports).
+    pub method: &'static str,
+    /// Sequence length the plan was built for.
+    pub n: usize,
+    pub tile: TileConfig,
+    /// Query blocks per group (1 for per-block methods).
+    pub step: usize,
+    /// One entry per group, `ceil(q_blocks / step)` total.
+    pub groups: Vec<GroupPlan>,
+    /// Work spent building the plan (anchor scoring + identification).
+    pub ident_cost: CostTally,
+    /// Predicted execution cost — mirrors [`execute_plan`]'s tile walk
+    /// exactly, so `predicted_cost == AttnOutput::cost` for a plan executed
+    /// without its ident cost folded in.
+    pub predicted_cost: CostTally,
+}
+
+impl SparsePlan {
+    /// Assemble a plan and price it against head dim `d`.
+    pub fn new(
+        method: &'static str,
+        n: usize,
+        d: usize,
+        tile: TileConfig,
+        step: usize,
+        groups: Vec<GroupPlan>,
+        ident_cost: CostTally,
+    ) -> SparsePlan {
+        assert!(step >= 1);
+        assert_eq!(groups.len(), tile.q_blocks(n).div_ceil(step), "group count");
+        let mut plan = SparsePlan {
+            method,
+            n,
+            tile,
+            step,
+            groups,
+            ident_cost,
+            predicted_cost: CostTally::default(),
+        };
+        plan.predicted_cost = plan.predict(d);
+        plan
+    }
+
+    pub fn q_blocks(&self) -> usize {
+        self.tile.q_blocks(self.n)
+    }
+
+    /// Group index of a query block.
+    pub fn group_of(&self, qb: usize) -> usize {
+        qb / self.step
+    }
+
+    /// Total stripes across groups (for reporting).
+    pub fn total_stripes(&self) -> usize {
+        self.groups.iter().map(|g| g.stripes.len()).sum()
+    }
+
+    /// The exact (query-block, key) pairs the executor will compute —
+    /// recall/sparsity metrics are computed from this without running
+    /// attention.
+    pub fn coverage(&self) -> Coverage {
+        let mut cov = Coverage::new(self.n, self.tile.b_q);
+        for qb in 0..self.q_blocks() {
+            let limit = ((qb + 1) * self.tile.b_q).min(self.n);
+            let g = &self.groups[self.group_of(qb)];
+            for &(s, e) in &g.spans {
+                cov.set_range(qb, s as usize, (e as usize).min(limit));
+            }
+            cov.set_indices(qb, &g.stripes);
+        }
+        cov
+    }
+
+    /// Sparsity implied by the plan (fraction of causal pairs skipped).
+    pub fn sparsity(&self) -> f64 {
+        self.coverage().sparsity()
+    }
+
+    /// Walk the same tiles [`execute_plan`] will fold and tally their cost.
+    fn predict(&self, d: usize) -> CostTally {
+        let tile = self.tile;
+        let n = self.n;
+        let q_blocks = self.q_blocks();
+        let mut cost = CostTally::default();
+        for (gi, g) in self.groups.iter().enumerate() {
+            let qb_start = gi * self.step;
+            let qb_end = ((gi + 1) * self.step).min(q_blocks);
+            // Stripe gather chunk sizes are fixed per group.
+            let mut chunk_lens = Vec::new();
+            let mut off = 0;
+            while off < g.stripes.len() {
+                let len = (g.stripes.len() - off).min(tile.b_kv);
+                chunk_lens.push(len);
+                off += len;
+            }
+            for qb in qb_start..qb_end {
+                let row0 = qb * tile.b_q;
+                let rows = (n - row0).min(tile.b_q);
+                let limit = row0 + rows;
+                for &(s, e) in &g.spans {
+                    let end = (e as usize).min(limit);
+                    let mut col0 = s as usize;
+                    while col0 < end {
+                        let cols = (end - col0).min(tile.b_kv);
+                        cost.add(CostTally::attn_tile(rows, cols, d));
+                        col0 += cols;
+                    }
+                }
+                for &len in &chunk_lens {
+                    cost.add(CostTally::attn_tile(rows, len, d));
+                }
+            }
+        }
+        cost
+    }
+}
+
+/// A planner maps one head's Q/K (and its config) to a [`SparsePlan`].
+/// Implemented by every method config; [`crate::attention::Method`]
+/// dispatches to the matching planner.
+pub trait Planner: Sync + Send {
+    /// Method identifier (matches `Method::name`).
+    fn name(&self) -> &'static str;
+    /// Identify the plan for `input`.
+    fn plan(&self, input: &HeadInput) -> SparsePlan;
+}
+
+/// Execute a plan on one head, parallelizing over groups. The returned
+/// cost is the *execution* cost only — callers fold `plan.ident_cost` in
+/// when reporting end-to-end method cost.
+pub fn execute_plan(input: &HeadInput, plan: &SparsePlan) -> AttnOutput {
+    execute_plan_inner(input, plan, true)
+}
+
+/// As [`execute_plan`] but single-threaded — used by the batched path,
+/// where parallelism lives at head granularity.
+pub fn execute_plan_serial(input: &HeadInput, plan: &SparsePlan) -> AttnOutput {
+    execute_plan_inner(input, plan, false)
+}
+
+/// Plan + execute + fold the identification cost into the reported tally —
+/// the thin wrapper the old fused per-head entry points reduce to.
+pub fn run_planner(input: &HeadInput, planner: &dyn Planner) -> AttnOutput {
+    let plan = planner.plan(input);
+    let mut out = execute_plan(input, &plan);
+    out.cost.add(plan.ident_cost);
+    out
+}
+
+fn execute_plan_inner(input: &HeadInput, plan: &SparsePlan, parallel: bool) -> AttnOutput {
+    let n = input.n();
+    let d = input.d();
+    assert_eq!(plan.n, n, "plan built for a different sequence length");
+    let tile = plan.tile;
+    let groups = plan.groups.len();
+
+    let run_group = |g: usize| execute_group(input, plan, g);
+    let results: Vec<(Vec<f32>, CostTally)> = if parallel {
+        parallel_map(groups, run_group)
+    } else {
+        (0..groups).map(run_group).collect()
+    };
+
+    let mut out = Mat::zeros(n, d);
+    let mut cost = CostTally::default();
+    for (g, (rows_data, c)) in results.into_iter().enumerate() {
+        let row0 = g * plan.step * tile.b_q;
+        out.data[row0 * d..row0 * d + rows_data.len()].copy_from_slice(&rows_data);
+        cost.add(c);
+    }
+    AttnOutput { out, coverage: plan.coverage(), cost }
+}
+
+/// Compute one group's output rows: fold the group's anchor spans as dense
+/// tiles, then the gathered stripe chunks — one online softmax per query
+/// block, K'/V' gathered **once per group** and reused across its `step`
+/// blocks (§3.4's reuse; this is the fine-grained gather substrate every
+/// method now runs on).
+fn execute_group(input: &HeadInput, plan: &SparsePlan, g: usize) -> (Vec<f32>, CostTally) {
+    let n = input.n();
+    let d = input.d();
+    let scale = input.scale();
+    let tile = plan.tile;
+    let q_blocks = tile.q_blocks(n);
+    let gp = &plan.groups[g];
+    let qb_start = g * plan.step;
+    let qb_end = ((g + 1) * plan.step).min(q_blocks);
+
+    // Gather the group's discrete K/V columns once, chunked to tile width
+    // so the inner matmuls stay dense (Eq. 4 `load_discrete`).
+    let mut gathered: Vec<(&[u32], Mat, Mat)> =
+        Vec::with_capacity(gp.stripes.len().div_ceil(tile.b_kv));
+    let mut off = 0;
+    while off < gp.stripes.len() {
+        let chunk = &gp.stripes[off..(off + tile.b_kv).min(gp.stripes.len())];
+        gathered.push((chunk, input.k.gather_rows(chunk), input.v.gather_rows(chunk)));
+        off += chunk.len();
+    }
+
+    let mut group_out = Vec::with_capacity((qb_end - qb_start) * tile.b_q * d);
+    let mut cost = CostTally::default();
+    let mut s = Mat::zeros(tile.b_q, tile.b_kv);
+    for qb in qb_start..qb_end {
+        let row0 = qb * tile.b_q;
+        let rows = (n - row0).min(tile.b_q);
+        let limit = row0 + rows;
+        let q_i = input.q.rows_mat(row0, rows);
+        let mut st = BlockState::new(rows, d);
+
+        // Anchor spans: contiguous tiles, clipped to the block's causal
+        // limit, diagonal tiles causally masked.
+        for &(span_s, span_e) in &gp.spans {
+            let end = (span_e as usize).min(limit);
+            let mut col0 = span_s as usize;
+            while col0 < end {
+                let cols = (end - col0).min(tile.b_kv);
+                let k_j = input.k.rows_mat(col0, cols);
+                let v_j = input.v.rows_mat(col0, cols);
+                if s.cols != cols || s.rows != rows {
+                    s = Mat::zeros(rows, cols);
+                }
+                matmul_nt_scaled(&q_i, &k_j, scale, &mut s);
+                if col0 + cols > row0 {
+                    mask_tile_causal(&mut s, row0, col0);
+                }
+                st.fold_tile(&mut s, &v_j);
+                cost.add(CostTally::attn_tile(rows, cols, d));
+                col0 += cols;
+            }
+        }
+
+        // Stripe chunks: discrete gathers. Chunks entirely before the
+        // block's first row need no masking (the common case — anchor
+        // stripes precede the group window); otherwise mask per row
+        // against the absolute column ids.
+        for (chunk, k_g, v_g) in &gathered {
+            if s.cols != k_g.rows || s.rows != rows {
+                s = Mat::zeros(rows, k_g.rows);
+            }
+            matmul_nt_scaled(&q_i, k_g, scale, &mut s);
+            if chunk.last().is_some_and(|&c| c as usize >= row0) {
+                for r in 0..rows {
+                    let abs_row = row0 + r;
+                    let srow = s.row_mut(r);
+                    for (ci, &col) in chunk.iter().enumerate() {
+                        if col as usize > abs_row {
+                            srow[ci] = f32::NEG_INFINITY;
+                        }
+                    }
+                }
+            }
+            st.fold_tile(&mut s, v_g);
+            cost.add(CostTally::attn_tile(rows, k_g.rows, d));
+        }
+
+        let base = group_out.len();
+        group_out.resize(base + rows * d, 0.0f32);
+        st.write_output(&mut group_out[base..], d);
+    }
+    (group_out, cost)
+}
+
+/// Build a step-1 plan from per-query-block *key block* lists (the shape
+/// block-sparse baselines produce): adjacent blocks merge into spans,
+/// acausal blocks are clipped.
+pub fn plan_from_block_sets(
+    method: &'static str,
+    input: &HeadInput,
+    tile: TileConfig,
+    block_sets: &[Vec<u32>],
+    ident_cost: CostTally,
+) -> SparsePlan {
+    let n = input.n();
+    let q_blocks = tile.q_blocks(n);
+    assert_eq!(block_sets.len(), q_blocks);
+    let mut groups = Vec::with_capacity(q_blocks);
+    for (qb, set) in block_sets.iter().enumerate() {
+        let limit = ((qb + 1) * tile.b_q).min(n);
+        // Clip, then sort before merging: callers usually pass sorted block
+        // lists, but the contract (inherited from the fused kernel this
+        // wraps) accepts any order and duplicates.
+        let mut clipped: Vec<(u32, u32)> = set
+            .iter()
+            .map(|&jb| jb as usize * tile.b_kv)
+            .filter(|&col0| col0 < limit)
+            .map(|col0| (col0 as u32, ((col0 + tile.b_kv).min(limit)) as u32))
+            .collect();
+        clipped.sort_unstable();
+        let mut spans: Vec<(u32, u32)> = Vec::with_capacity(clipped.len());
+        for (s, e) in clipped {
+            match spans.last_mut() {
+                Some(last) if last.1 >= s => last.1 = last.1.max(e),
+                _ => spans.push((s, e)),
+            }
+        }
+        groups.push(GroupPlan { spans, stripes: Vec::new() });
+    }
+    SparsePlan::new(method, n, input.d(), tile, 1, groups, ident_cost)
+}
+
+/// Build a step-1 plan that gathers exactly the covered columns of an
+/// arbitrary [`Coverage`] (the shape discrete-pattern baselines produce).
+pub fn plan_from_coverage(
+    method: &'static str,
+    input: &HeadInput,
+    tile: TileConfig,
+    coverage: &Coverage,
+    ident_cost: CostTally,
+) -> SparsePlan {
+    let n = input.n();
+    assert_eq!(coverage.n, n);
+    assert_eq!(coverage.b_q, tile.b_q);
+    let q_blocks = tile.q_blocks(n);
+    let mut groups = Vec::with_capacity(q_blocks);
+    for qb in 0..q_blocks {
+        let limit = ((qb + 1) * tile.b_q).min(n);
+        let stripes: Vec<u32> =
+            coverage.columns(qb).into_iter().filter(|&c| (c as usize) < limit).collect();
+        groups.push(GroupPlan { spans: Vec::new(), stripes });
+    }
+    SparsePlan::new(method, n, input.d(), tile, 1, groups, ident_cost)
+}
+
+/// O(N²)-memory reference: exact softmax attention restricted to a
+/// coverage (and causality), rows with no visible key output zero — the
+/// semantics [`execute_plan`] must reproduce. Test/verification use only.
+pub fn masked_reference(input: &HeadInput, coverage: &Coverage) -> Mat {
+    let n = input.n();
+    let d = input.d();
+    let scale = input.scale();
+    let mut s = Mat::zeros(n, n);
+    matmul_nt_scaled(&input.q, &input.k, scale, &mut s);
+    let mut out = Mat::zeros(n, d);
+    for r in 0..n {
+        let qb = r / coverage.b_q;
+        let mut mx = f32::NEG_INFINITY;
+        for c in 0..=r {
+            if coverage.covered(qb, c) {
+                mx = mx.max(s.at(r, c));
+            }
+        }
+        if mx == f32::NEG_INFINITY {
+            continue; // no visible key: zero row
+        }
+        let mut z = 0.0f32;
+        for c in 0..=r {
+            if coverage.covered(qb, c) {
+                z += (s.at(r, c) - mx).exp();
+            }
+        }
+        for c in 0..=r {
+            if !coverage.covered(qb, c) {
+                continue;
+            }
+            let p = (s.at(r, c) - mx).exp() / z;
+            for col in 0..d {
+                out.set(r, col, out.at(r, col) + p * input.v.at(c, col));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Batched multi-head execution
+// ---------------------------------------------------------------------------
+
+/// Multi-head input `[H, N, d]`: every head shares one sequence length and
+/// head dim so plans are interchangeable within a head group (GQA-style).
+#[derive(Clone, Debug)]
+pub struct BatchInput {
+    pub heads: Vec<HeadInput>,
+}
+
+impl BatchInput {
+    pub fn new(heads: Vec<HeadInput>) -> Self {
+        assert!(!heads.is_empty(), "empty batch");
+        let (n, d) = (heads[0].n(), heads[0].d());
+        for h in &heads {
+            assert_eq!((h.n(), h.d()), (n, d), "ragged batch");
+        }
+        Self { heads }
+    }
+
+    pub fn h(&self) -> usize {
+        self.heads.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.heads[0].n()
+    }
+
+    pub fn d(&self) -> usize {
+        self.heads[0].d()
+    }
+}
+
+/// Per-head outputs plus the plan-cache interaction of the batch.
+#[derive(Debug)]
+pub struct BatchOutput {
+    pub outputs: Vec<AttnOutput>,
+    /// Plans used per head (cache-shared heads hold the same `Arc`).
+    pub plans: Vec<Arc<SparsePlan>>,
+    /// Cache hits within this batch (0 when run uncached).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl BatchOutput {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Cache key: heads of one `(layer, head_group)` cell share identification
+/// work — the paper's cross-input commonality (§3.2) surfaced as plan reuse.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub layer: u32,
+    pub head_group: u32,
+}
+
+impl PlanKey {
+    pub fn new(layer: u32, head_group: u32) -> Self {
+        Self { layer, head_group }
+    }
+}
+
+/// Aggregate cache counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl PlanCacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Thread-safe plan cache keyed by [`PlanKey`]. Concurrent misses on the
+/// same key may both plan; the first insert wins and the duplicate is
+/// dropped (plans are value-identical for identical inputs, so this is a
+/// benign race traded for not holding the lock across planning).
+#[derive(Default)]
+pub struct PlanCache {
+    map: Mutex<HashMap<PlanKey, Arc<SparsePlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the plan for `key`, building it with `build` on a miss.
+    /// Returns the plan and whether it was a hit.
+    pub fn get_or_plan(
+        &self,
+        key: PlanKey,
+        build: impl FnOnce() -> SparsePlan,
+    ) -> (Arc<SparsePlan>, bool) {
+        if let Some(plan) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (plan.clone(), true);
+        }
+        let plan = Arc::new(build());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        let entry = map.entry(key).or_insert_with(|| plan.clone());
+        (entry.clone(), false)
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.lock().unwrap().len(),
+        }
+    }
+
+    /// Drop all cached plans (e.g. at a layer boundary when keys are
+    /// reused) without resetting the hit/miss counters.
+    pub fn invalidate(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::anchor::AnchorConfig;
+    use crate::attention::full::naive_attention;
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    /// Hand-built plan: one group of 2 blocks, an init span, a window span
+    /// and mid-context stripes.
+    fn mixed_plan(n: usize, d: usize) -> SparsePlan {
+        let tile = TileConfig::new(16, 16);
+        let q_blocks = tile.q_blocks(n);
+        let step = 2;
+        let groups: Vec<GroupPlan> = (0..q_blocks.div_ceil(step))
+            .map(|g| {
+                let win = (g * step * 16) as u32;
+                let end = ((g + 1) * step * 16).min(n) as u32;
+                if win == 0 {
+                    GroupPlan { spans: vec![(0, end)], stripes: vec![] }
+                } else {
+                    let stripes: Vec<u32> = (16..win).step_by(3).collect();
+                    GroupPlan { spans: vec![(0, 16), (win, end)], stripes }
+                }
+            })
+            .collect();
+        SparsePlan::new("test", n, d, tile, step, groups, CostTally::default())
+    }
+
+    #[test]
+    fn full_span_plan_equals_dense() {
+        let n = 160;
+        let d = 8;
+        let h = rand_head(41, n, d);
+        let tile = TileConfig::new(16, 16);
+        let groups: Vec<GroupPlan> = (0..tile.q_blocks(n))
+            .map(|qb| GroupPlan {
+                spans: vec![(0, (((qb + 1) * 16).min(n)) as u32)],
+                stripes: vec![],
+            })
+            .collect();
+        let plan = SparsePlan::new("full", n, d, tile, 1, groups, CostTally::default());
+        let out = execute_plan(&h, &plan);
+        let expect = naive_attention(&h);
+        assert!(out.out.max_abs_diff(&expect) < 1e-4);
+        assert_eq!(out.coverage.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn executor_matches_coverage_masked_softmax() {
+        let n = 128;
+        let d = 8;
+        let h = rand_head(42, n, d);
+        let plan = mixed_plan(n, d);
+        let out = execute_plan(&h, &plan);
+        let expect = masked_reference(&h, &out.coverage);
+        assert!(
+            out.out.max_abs_diff(&expect) < 1e-4,
+            "max diff {}",
+            out.out.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn serial_and_parallel_executors_agree() {
+        let h = rand_head(43, 160, 8);
+        let plan = mixed_plan(160, 8);
+        let a = execute_plan(&h, &plan);
+        let b = execute_plan_serial(&h, &plan);
+        assert_eq!(a.cost, b.cost);
+        assert!(a.out.max_abs_diff(&b.out) < 1e-6);
+    }
+
+    #[test]
+    fn predicted_cost_equals_executed_cost() {
+        let h = rand_head(44, 200, 8); // ragged tail block
+        let plan = mixed_plan(200, 8);
+        let out = execute_plan(&h, &plan);
+        assert_eq!(plan.predicted_cost, out.cost);
+    }
+
+    #[test]
+    fn anchor_planner_predicts_its_own_execution() {
+        let h = rand_head(45, 256, 16);
+        let cfg = AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta: 2.0,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        };
+        let plan = Planner::plan(&cfg, &h);
+        let out = execute_plan(&h, &plan);
+        assert_eq!(plan.predicted_cost, out.cost);
+        assert!(plan.ident_cost.ident_scores > 0);
+    }
+
+    #[test]
+    fn stripes_at_or_past_diagonal_are_masked_per_row() {
+        // Stripe on the diagonal block: rows before the stripe's position
+        // must not see it.
+        let n = 32;
+        let d = 4;
+        let h = rand_head(46, n, d);
+        let tile = TileConfig::new(16, 16);
+        let groups = vec![
+            GroupPlan { spans: vec![(0, 16)], stripes: vec![] },
+            // Block 1 (rows 16..32): stripe at col 24 (inside the block).
+            GroupPlan { spans: vec![(0, 16)], stripes: vec![24] },
+        ];
+        let plan = SparsePlan::new("test", n, d, tile, 1, groups, CostTally::default());
+        let out = execute_plan(&h, &plan);
+        let expect = masked_reference(&h, &out.coverage);
+        assert!(out.out.max_abs_diff(&expect) < 1e-4);
+    }
+
+    #[test]
+    fn empty_plan_outputs_zero_rows() {
+        let n = 32;
+        let d = 4;
+        let h = rand_head(47, n, d);
+        let tile = TileConfig::new(16, 16);
+        let groups = vec![GroupPlan::default(), GroupPlan::default()];
+        let plan = SparsePlan::new("test", n, d, tile, 1, groups, CostTally::default());
+        let out = execute_plan(&h, &plan);
+        assert_eq!(out.cost.flops, 0);
+        assert!(out.out.data.iter().all(|&x| x == 0.0));
+        assert_eq!(out.coverage.sparsity(), 1.0);
+    }
+
+    #[test]
+    fn chunking_invariant_to_bkv() {
+        // Same coordinates, different kv tile width: outputs must match
+        // (chunking is a pure implementation detail of the online softmax).
+        let n = 128;
+        let d = 8;
+        let h = rand_head(48, n, d);
+        let mk = |b_kv: usize| {
+            let tile = TileConfig::new(16, b_kv);
+            let groups: Vec<GroupPlan> = (0..8)
+                .map(|qb| {
+                    let limit = ((qb + 1) * 16) as u32;
+                    let win = (qb * 16) as u32;
+                    if win <= 8 {
+                        GroupPlan { spans: vec![(0, limit)], stripes: vec![] }
+                    } else {
+                        let stripes: Vec<u32> = (8..win).step_by(5).collect();
+                        GroupPlan { spans: vec![(0, 8), (win, limit)], stripes }
+                    }
+                })
+                .collect();
+            SparsePlan::new("test", n, d, tile, 1, groups, CostTally::default())
+        };
+        let o1 = execute_plan(&h, &mk(8));
+        let o2 = execute_plan(&h, &mk(64));
+        assert!(o1.out.max_abs_diff(&o2.out) < 1e-4);
+        assert_eq!(o1.coverage.total_covered(), o2.coverage.total_covered());
+    }
+
+    #[test]
+    fn plan_from_block_sets_merges_adjacent_blocks() {
+        let h = rand_head(49, 64, 8);
+        let tile = TileConfig::new(16, 16);
+        let sets: Vec<Vec<u32>> = vec![vec![0], vec![0, 1], vec![0, 2], vec![0, 1, 3]];
+        let plan = plan_from_block_sets("test", &h, tile, &sets, CostTally::default());
+        assert_eq!(plan.groups[1].spans, vec![(0, 32)]);
+        assert_eq!(plan.groups[2].spans, vec![(0, 16), (32, 48)]);
+        assert_eq!(plan.groups[3].spans, vec![(0, 32), (48, 64)]);
+        // Acausal block requests are clipped.
+        let sets2: Vec<Vec<u32>> = vec![vec![0, 3], vec![0], vec![0], vec![0]];
+        let plan2 = plan_from_block_sets("test", &h, tile, &sets2, CostTally::default());
+        assert_eq!(plan2.groups[0].spans, vec![(0, 16)]);
+        // Unsorted and duplicated block lists normalize to the same spans.
+        let sets3: Vec<Vec<u32>> = vec![vec![0], vec![1, 0, 1], vec![2, 0], vec![3, 1, 0]];
+        let plan3 = plan_from_block_sets("test", &h, tile, &sets3, CostTally::default());
+        assert_eq!(plan3.groups[1].spans, vec![(0, 32)]);
+        assert_eq!(plan3.groups[2].spans, vec![(0, 16), (32, 48)]);
+        assert_eq!(plan3.groups[3].spans, vec![(0, 32), (48, 64)]);
+    }
+
+    #[test]
+    fn plan_from_coverage_roundtrips_columns() {
+        let h = rand_head(50, 64, 8);
+        let tile = TileConfig::new(16, 16);
+        let mut cov = Coverage::new(64, 16);
+        cov.set_range(2, 0, 8);
+        cov.set(2, 19);
+        cov.set(2, 63); // acausal for qb 2 (limit 48): dropped from the plan
+        let plan = plan_from_coverage("test", &h, tile, &cov, CostTally::default());
+        assert_eq!(plan.groups[2].stripes, vec![0, 1, 2, 3, 4, 5, 6, 7, 19]);
+        let out = execute_plan(&h, &plan);
+        let expect = masked_reference(&h, &out.coverage);
+        assert!(out.out.max_abs_diff(&expect) < 1e-4);
+    }
+
+    #[test]
+    fn plan_cache_hits_and_misses_counted() {
+        let h = rand_head(51, 64, 8);
+        let cfg = AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta: 3.0,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        };
+        let cache = PlanCache::new();
+        let key = PlanKey::new(0, 0);
+        let (p1, hit1) = cache.get_or_plan(key, || Planner::plan(&cfg, &h));
+        let (p2, hit2) = cache.get_or_plan(key, || panic!("must not re-plan"));
+        assert!(!hit1 && hit2);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+
+        let (_, hit3) = cache.get_or_plan(PlanKey::new(0, 1), || Planner::plan(&cfg, &h));
+        assert!(!hit3);
+        assert_eq!(cache.stats().entries, 2);
+        cache.invalidate();
+        assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn batch_input_shape_checked() {
+        let a = rand_head(52, 32, 4);
+        let b = rand_head(53, 32, 4);
+        let batch = BatchInput::new(vec![a, b]);
+        assert_eq!((batch.h(), batch.n(), batch.d()), (2, 32, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged batch")]
+    fn ragged_batch_rejected() {
+        let a = rand_head(54, 32, 4);
+        let b = rand_head(55, 64, 4);
+        BatchInput::new(vec![a, b]);
+    }
+
+    #[test]
+    fn coverage_clips_spans_causally() {
+        let plan = mixed_plan(128, 8);
+        let cov = plan.coverage();
+        // Block 0: the group span (0, 32) is clipped to the causal limit 16.
+        assert_eq!(cov.count(0), 16);
+        assert_eq!(cov.count(1), 32);
+        // Block 2 (group 1): init span, window span and stripes {16,19,…}.
+        assert!(cov.covered(2, 0) && cov.covered(2, 16) && cov.covered(2, 32));
+        assert!(!cov.covered(2, 18)); // 18 ∉ stripes, ∉ spans
+    }
+}

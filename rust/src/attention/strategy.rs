@@ -10,8 +10,14 @@
 //! `(b_q, b_kv)`. The resulting [`Coverage`] feeds the shared recall /
 //! sparsity metrics so the strategies are compared apples-to-apples.
 
+//! Each strategy emits a [`SparsePlan`] ([`select_plan`]): stripes become
+//! plan stripes, block selections become plan spans, and the recall /
+//! sparsity metrics read the plan's coverage directly — no attention is
+//! executed anywhere in the strategy analysis.
+
 use crate::attention::mask::Coverage;
-use crate::attention::{HeadInput, TileConfig};
+use crate::attention::plan::{GroupPlan, SparsePlan};
+use crate::attention::{CostTally, HeadInput, TileConfig};
 use crate::tensor::ops::avgpool_rows;
 use crate::tensor::{matmul_nt_scaled, Mat};
 
@@ -54,6 +60,8 @@ pub struct PooledScores {
     pub anchors: Vec<f32>,
     pub tile: TileConfig,
     pub n: usize,
+    /// Head dim of the scored head (prices the emitted plans).
+    pub d: usize,
 }
 
 /// Build pooled scores for strategy analysis.
@@ -79,26 +87,26 @@ pub fn pooled_scores(input: &HeadInput, tile: TileConfig) -> PooledScores {
         }
         anchors.push(a);
     }
-    PooledScores { scores, anchors, tile, n }
+    PooledScores { scores, anchors, tile, n, d: input.d() }
 }
 
-/// Apply a strategy at a granularity; returns coverage over `(b_q, 1)`
-/// pairs (block selections expand to their member columns).
-pub fn select(ps: &PooledScores, strategy: Strategy, gran: Granularity) -> Coverage {
+/// Apply a strategy at a granularity, emitting a per-query-block
+/// [`SparsePlan`]: stripe selections become plan stripes, block
+/// selections become plan spans. The plan is executable by
+/// [`crate::attention::plan::execute_plan`] and analyzable via
+/// [`SparsePlan::coverage`] without execution.
+pub fn select_plan(ps: &PooledScores, strategy: Strategy, gran: Granularity) -> SparsePlan {
     let tile = ps.tile;
     let n = ps.n;
-    let mut cov = Coverage::new(n, tile.b_q);
+    let mut groups = Vec::with_capacity(ps.scores.rows);
     for qb in 0..ps.scores.rows {
         let limit = ((qb + 1) * tile.b_q).min(n);
         let row = &ps.scores.row(qb)[..limit];
+        let mut gp = GroupPlan::default();
         match gran {
             Granularity::Stripe => {
-                select_units(
-                    row,
-                    strategy,
-                    ps.anchors[qb],
-                    |col| cov.set(qb, col),
-                );
+                select_units(row, strategy, ps.anchors[qb], |col| gp.stripes.push(col as u32));
+                gp.stripes.sort_unstable();
             }
             Granularity::Block => {
                 // Aggregate stripe scores to block scores by mean.
@@ -111,12 +119,38 @@ pub fn select(ps: &PooledScores, strategy: Strategy, gran: Granularity) -> Cover
                 }
                 select_units(&bscores, strategy, ps.anchors[qb], |jb| {
                     let s = jb * tile.b_kv;
-                    cov.set_range(qb, s, (s + tile.b_kv).min(limit));
+                    gp.spans.push((s as u32, ((s + tile.b_kv).min(limit)) as u32));
                 });
+                // Merge adjacent selected blocks into maximal spans.
+                gp.spans.sort_unstable();
+                let mut merged: Vec<(u32, u32)> = Vec::with_capacity(gp.spans.len());
+                for (s, e) in gp.spans.drain(..) {
+                    match merged.last_mut() {
+                        Some(last) if last.1 >= s => last.1 = last.1.max(e),
+                        _ => merged.push((s, e)),
+                    }
+                }
+                gp.spans = merged;
             }
         }
+        groups.push(gp);
     }
-    cov
+    // Identification here scored every causal (pooled-row, key) pair.
+    let total_scores: usize =
+        (0..ps.scores.rows).map(|qb| ((qb + 1) * tile.b_q).min(n)).sum();
+    let ident = CostTally {
+        flops: 2 * (total_scores * ps.d) as u64,
+        kv_bytes: (n * ps.d * 4) as u64,
+        ident_scores: total_scores as u64,
+    };
+    SparsePlan::new(strategy.name(), n, ps.d, tile, 1, groups, ident)
+}
+
+/// Apply a strategy at a granularity; returns coverage over `(b_q, 1)`
+/// pairs (block selections expand to their member columns). Thin wrapper
+/// over [`select_plan`].
+pub fn select(ps: &PooledScores, strategy: Strategy, gran: Granularity) -> Coverage {
+    select_plan(ps, strategy, gran).coverage()
 }
 
 /// Core selection over a score vector; invokes `mark` for chosen units.
@@ -237,6 +271,33 @@ mod tests {
             r_stripe.mean_recall,
             r_block.mean_recall
         );
+    }
+
+    /// Strategy plans are executable: the executor's output matches the
+    /// masked-softmax reference for the plan's coverage.
+    #[test]
+    fn strategy_plans_execute_consistently() {
+        let h = rand_head(107, 96, 8);
+        let tile = TileConfig::new(16, 16);
+        let ps = pooled_scores(&h, tile);
+        for (strategy, gran) in [
+            (Strategy::TopK { k: 8 }, Granularity::Stripe),
+            (Strategy::TopCdf { gamma: 0.8 }, Granularity::Block),
+            (Strategy::DiffAware { theta: 1.5 }, Granularity::Stripe),
+        ] {
+            let plan = select_plan(&ps, strategy, gran);
+            assert_eq!(plan.method, strategy.name());
+            let out = crate::attention::plan::execute_plan(&h, &plan);
+            let expect = crate::attention::plan::masked_reference(&h, &out.coverage);
+            assert!(
+                out.out.max_abs_diff(&expect) < 1e-4,
+                "{:?}/{:?}: {}",
+                strategy,
+                gran,
+                out.out.max_abs_diff(&expect)
+            );
+            assert_eq!(plan.predicted_cost, out.cost);
+        }
     }
 
     #[test]

@@ -73,6 +73,7 @@ impl AppConfig {
                 Some("anchor") => SparsityModel::Anchor {
                     stripe_keep: sched.get("stripe_keep").as_f64().unwrap_or(0.1),
                     anchor_tokens: sched.get("anchor_tokens").as_usize().unwrap_or(256),
+                    plan_hit_rate: sched.get("plan_hit_rate").as_f64().unwrap_or(0.0),
                 },
                 Some(other) => return Err(anyhow!("unknown sparsity model '{other}'")),
             };

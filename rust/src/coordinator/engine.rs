@@ -11,6 +11,7 @@ use std::sync::mpsc;
 use anyhow::{anyhow, Result};
 
 use super::batcher::{EngineBatch, WorkItem};
+use super::scheduler::SparsityModel;
 use crate::model::{argmax, LmModel, LmSession};
 use crate::runtime::Runtime;
 
@@ -123,15 +124,44 @@ impl StepExecutor for PjrtEngine {
 }
 
 /// Deterministic mock for server tests: each prefill chunk or decode step
-/// costs a fixed virtual time and emits `(req * 31 + step) % vocab`.
+/// costs a fixed virtual time and emits `(req * 31 + step) % vocab`. An
+/// optional [`SparsityModel`] prices prefill chunks exactly like the
+/// scheduler's chunk cost — `take · (0.5 + 0.5 · eff(context_after) /
+/// context_after)`, with per-request context tracked across chunks — so
+/// sparsity and plan-cache hit rates propagate into the reported
+/// engine-busy time (batching cost estimate ↔ engine agreement).
 pub struct MockEngine {
     pub vocab: i32,
     pub steps: u64,
+    /// When set, prefill `elapsed_s` follows the scheduler's chunk-cost
+    /// shape at the request's accumulated context (dense time otherwise).
+    pub cost_model: Option<SparsityModel>,
+    /// Tokens prefilled so far per in-flight request.
+    prefilled: HashMap<u64, usize>,
 }
 
 impl MockEngine {
     pub fn new(vocab: i32) -> Self {
-        Self { vocab, steps: 0 }
+        Self { vocab, steps: 0, cost_model: None, prefilled: HashMap::new() }
+    }
+
+    /// Mock whose virtual prefill time follows a sparsity/plan-hit model.
+    pub fn with_cost_model(vocab: i32, model: SparsityModel) -> Self {
+        Self { vocab, steps: 0, cost_model: Some(model), prefilled: HashMap::new() }
+    }
+
+    fn prefill_time(&mut self, req: u64, take: usize) -> f64 {
+        let ctx_after = self.prefilled.entry(req).or_insert(0);
+        *ctx_after += take;
+        let base = 1e-4 * take as f64;
+        match &self.cost_model {
+            None => base,
+            Some(model) => {
+                let ctx = (*ctx_after).max(1);
+                let eff = model.effective_context(ctx);
+                base * (0.5 + 0.5 * eff / ctx as f64)
+            }
+        }
     }
 }
 
@@ -141,15 +171,19 @@ impl StepExecutor for MockEngine {
         for item in &batch.items {
             self.steps += 1;
             match *item {
-                WorkItem::Prefill { req, take } => out.push(StepOutcome::PrefillChunk {
-                    req,
-                    took: take,
-                    // The server tracks progress; the mock can't know, so it
-                    // reports done=false and the server infers from counts.
-                    prompt_done: false,
-                    next_token: ((req * 31 + self.steps) % self.vocab as u64) as i32,
-                    elapsed_s: 1e-4 * take as f64,
-                }),
+                WorkItem::Prefill { req, take } => {
+                    let elapsed_s = self.prefill_time(req, take);
+                    out.push(StepOutcome::PrefillChunk {
+                        req,
+                        took: take,
+                        // The server tracks progress; the mock can't know, so
+                        // it reports done=false and the server infers from
+                        // counts.
+                        prompt_done: false,
+                        next_token: ((req * 31 + self.steps) % self.vocab as u64) as i32,
+                        elapsed_s,
+                    })
+                }
                 WorkItem::Decode { req, .. } => out.push(StepOutcome::Decoded {
                     req,
                     token: ((req * 31 + self.steps) % self.vocab as u64) as i32,
@@ -160,7 +194,9 @@ impl StepExecutor for MockEngine {
         out
     }
 
-    fn finish_request(&mut self, _req: u64) {}
+    fn finish_request(&mut self, req: u64) {
+        self.prefilled.remove(&req);
+    }
 }
 
 /// Commands for a channel-driven engine thread.
@@ -223,6 +259,63 @@ mod tests {
         let mut a = MockEngine::new(512);
         let mut b = MockEngine::new(512);
         assert_eq!(a.execute(&batch), b.execute(&batch));
+    }
+
+    /// Warmer plan caches make mock prefill cheaper, mirroring the
+    /// scheduler's chunk-cost model — and dense time is the ceiling.
+    #[test]
+    fn mock_cost_model_tracks_plan_hits() {
+        let mk = |hit| {
+            MockEngine::with_cost_model(
+                64,
+                SparsityModel::Anchor {
+                    stripe_keep: 0.1,
+                    anchor_tokens: 256,
+                    plan_hit_rate: hit,
+                },
+            )
+        };
+        let batch = EngineBatch {
+            iteration: 0,
+            items: vec![WorkItem::Prefill { req: 1, take: 4096 }],
+        };
+        let elapsed = |mut e: MockEngine| match e.execute(&batch)[0] {
+            StepOutcome::PrefillChunk { elapsed_s, .. } => elapsed_s,
+            _ => panic!(),
+        };
+        let dense = elapsed(MockEngine::new(64));
+        let cold = elapsed(mk(0.0));
+        let warm = elapsed(mk(1.0));
+        assert!(warm < cold, "warm {warm} vs cold {cold}");
+        assert!(cold < dense, "cold {cold} vs dense {dense}");
+
+        // Context accumulates across chunks of one request: later chunks of
+        // a long prompt are cheaper per token (the sparse advantage grows
+        // with context, exactly as the scheduler prices it).
+        let mut e = mk(0.0);
+        let chunk = |req| EngineBatch {
+            iteration: 0,
+            items: vec![WorkItem::Prefill { req, take: 256 }],
+        };
+        let t1 = match e.execute(&chunk(7))[0] {
+            StepOutcome::PrefillChunk { elapsed_s, .. } => elapsed_s,
+            _ => panic!(),
+        };
+        let mut t_last = t1;
+        for _ in 0..7 {
+            t_last = match e.execute(&chunk(7))[0] {
+                StepOutcome::PrefillChunk { elapsed_s, .. } => elapsed_s,
+                _ => panic!(),
+            };
+        }
+        assert!(t_last < t1, "deep chunk {t_last} vs first chunk {t1}");
+        // finish_request clears the context tracking.
+        e.finish_request(7);
+        let t_fresh = match e.execute(&chunk(7))[0] {
+            StepOutcome::PrefillChunk { elapsed_s, .. } => elapsed_s,
+            _ => panic!(),
+        };
+        assert!((t_fresh - t1).abs() < 1e-12);
     }
 
     #[test]

@@ -4,13 +4,20 @@
 //! hot pages (the paper's stated future work, implemented as an extension;
 //! DESIGN.md §7).
 //!
-//! Storage itself lives in each session's functional cache literal; the
-//! pool provides the *admission control* a real serving deployment gets
-//! from GPU memory: a sequence may only run while it holds pages.
+//! PJRT-session storage lives in each session's functional cache literal;
+//! the pool provides the *admission control* a real serving deployment
+//! gets from GPU memory: a sequence may only run while it holds pages.
+//! [`PagedKvStore`] adds engine-side paged K/V storage with
+//! **gather-by-coordinates** access, so a [`SparsePlan`]'s stripe
+//! coordinates can be executed directly against paged memory (Eq. 4
+//! `load_discrete` over pages instead of a flat tensor).
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
+
+use crate::attention::plan::SparsePlan;
+use crate::tensor::Mat;
 
 /// Per-page stripe statistics recorded during prefill identification.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -135,6 +142,132 @@ impl PagePool {
             })
             .unwrap_or_default()
     }
+
+    /// Record per-page stripe statistics straight from a [`SparsePlan`]:
+    /// each page's hot fraction is the share of its tokens selected as a
+    /// stripe by at least one query-block group. This is how prefill
+    /// identification feeds the decode-phase page prioritization without
+    /// the engine re-deriving anything from attention outputs.
+    pub fn record_plan(&mut self, seq: u64, plan: &SparsePlan) -> Result<()> {
+        let alloc =
+            self.seqs.get(&seq).ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
+        let pages = alloc.pages.clone();
+        let covered_tokens = alloc.tokens.min(plan.n);
+        let mut hot_counts = vec![0u32; pages.len()];
+        let mut seen = vec![false; covered_tokens];
+        for group in &plan.groups {
+            for &col in &group.stripes {
+                let col = col as usize;
+                if col < covered_tokens && !seen[col] {
+                    seen[col] = true;
+                    hot_counts[col / self.page_tokens] += 1;
+                }
+            }
+        }
+        for (idx, &page) in pages.iter().enumerate() {
+            let page_start = idx * self.page_tokens;
+            if page_start >= covered_tokens {
+                // Past the plan's range: reset, so a shorter re-plan never
+                // leaves stale heat from an earlier, longer plan.
+                self.stats[page as usize].hot_fraction = 0.0;
+                continue;
+            }
+            let page_len = (covered_tokens - page_start).min(self.page_tokens);
+            self.stats[page as usize].hot_fraction =
+                hot_counts[idx] as f32 / page_len as f32;
+        }
+        Ok(())
+    }
+}
+
+/// Engine-side paged K/V storage for one layer: page-granular rows with
+/// contiguous span reads and **gather-by-coordinates** — the plan
+/// executor's `load_discrete` primitive over paged memory.
+pub struct PagedKvStore {
+    page_tokens: usize,
+    d: usize,
+    /// Per-page `[page_tokens, d]` K/V rows, indexed by page id.
+    k_pages: Vec<Mat>,
+    v_pages: Vec<Mat>,
+}
+
+impl PagedKvStore {
+    pub fn new(total_pages: usize, page_tokens: usize, d: usize) -> Self {
+        assert!(page_tokens >= 1 && d >= 1);
+        Self {
+            page_tokens,
+            d,
+            k_pages: (0..total_pages).map(|_| Mat::zeros(page_tokens, d)).collect(),
+            v_pages: (0..total_pages).map(|_| Mat::zeros(page_tokens, d)).collect(),
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Write one token's K/V rows at sequence position `pos`, translating
+    /// through the sequence's page table.
+    pub fn write(&mut self, pages: &[u32], pos: usize, k_row: &[f32], v_row: &[f32]) -> Result<()> {
+        if k_row.len() != self.d || v_row.len() != self.d {
+            return Err(anyhow!("row dim mismatch: expected {}", self.d));
+        }
+        let (page, off) = self.translate(pages, pos)?;
+        self.k_pages[page].row_mut(off).copy_from_slice(k_row);
+        self.v_pages[page].row_mut(off).copy_from_slice(v_row);
+        Ok(())
+    }
+
+    /// Gather discrete sequence positions (a plan's stripe coordinates)
+    /// into contiguous `[len(coords), d]` K/V matrices.
+    pub fn gather(&self, pages: &[u32], coords: &[u32]) -> Result<(Mat, Mat)> {
+        let mut k = Mat::zeros(coords.len(), self.d);
+        let mut v = Mat::zeros(coords.len(), self.d);
+        for (i, &pos) in coords.iter().enumerate() {
+            let (page, off) = self.translate(pages, pos as usize)?;
+            k.row_mut(i).copy_from_slice(self.k_pages[page].row(off));
+            v.row_mut(i).copy_from_slice(self.v_pages[page].row(off));
+        }
+        Ok((k, v))
+    }
+
+    /// Read a contiguous span `[start, end)` (a plan's anchor span) into
+    /// contiguous K/V matrices — copied one page-aligned run at a time,
+    /// not row by row (this is the hot read path for anchor regions).
+    pub fn span(&self, pages: &[u32], start: usize, end: usize) -> Result<(Mat, Mat)> {
+        if end < start {
+            return Err(anyhow!("bad span [{start}, {end})"));
+        }
+        let len = end - start;
+        let d = self.d;
+        let mut k = Mat::zeros(len, d);
+        let mut v = Mat::zeros(len, d);
+        let mut pos = start;
+        let mut out_row = 0;
+        while pos < end {
+            let (page, off) = self.translate(pages, pos)?;
+            let run = (self.page_tokens - off).min(end - pos);
+            k.data[out_row * d..(out_row + run) * d]
+                .copy_from_slice(&self.k_pages[page].data[off * d..(off + run) * d]);
+            v.data[out_row * d..(out_row + run) * d]
+                .copy_from_slice(&self.v_pages[page].data[off * d..(off + run) * d]);
+            pos += run;
+            out_row += run;
+        }
+        Ok((k, v))
+    }
+
+    fn translate(&self, pages: &[u32], pos: usize) -> Result<(usize, usize)> {
+        let page_idx = pos / self.page_tokens;
+        let page = *pages
+            .get(page_idx)
+            .ok_or_else(|| anyhow!("position {pos} beyond the sequence's page table"))?;
+        let page = page as usize;
+        if page >= self.k_pages.len() {
+            return Err(anyhow!("page {page} out of range"));
+        }
+        Ok((page, pos % self.page_tokens))
+    }
 }
 
 #[cfg(test)]
@@ -204,5 +337,99 @@ mod tests {
         let mut pool = PagePool::new(2, 64);
         pool.admit(1, 0).unwrap();
         assert_eq!(pool.used_pages(), 1);
+    }
+
+    fn test_plan(n: usize, stripes_per_group: &[Vec<u32>]) -> crate::attention::plan::SparsePlan {
+        use crate::attention::plan::{GroupPlan, SparsePlan};
+        use crate::attention::{CostTally, TileConfig};
+        let tile = TileConfig::new(16, 16);
+        let groups = stripes_per_group
+            .iter()
+            .map(|s| GroupPlan { spans: Vec::new(), stripes: s.clone() })
+            .collect();
+        SparsePlan::new("test", n, 8, tile, 1, groups, CostTally::default())
+    }
+
+    #[test]
+    fn record_plan_sets_page_hot_fractions() {
+        let mut pool = PagePool::new(8, 16); // page_tokens == b_q == 16
+        pool.admit(1, 64).unwrap(); // 4 pages
+        // 64-token plan: page 0 fully hot for group 3, page 1 half hot.
+        let plan = test_plan(
+            64,
+            &[
+                vec![],
+                vec![0, 1],
+                vec![2, 3, 16, 17, 18, 19, 20, 21, 22, 23],
+                (0..16u32).collect::<Vec<_>>(),
+            ],
+        );
+        pool.record_plan(1, &plan).unwrap();
+        let pages = pool.pages_of(1).unwrap().to_vec();
+        // Page 0: all 16 tokens selected by some group.
+        assert_eq!(pool.stripe_stats(pages[0]).hot_fraction, 1.0);
+        // Page 1: tokens 16..24 selected → 8/16.
+        assert_eq!(pool.stripe_stats(pages[1]).hot_fraction, 0.5);
+        // Pages 2, 3: untouched.
+        assert_eq!(pool.stripe_stats(pages[2]).hot_fraction, 0.0);
+        assert_eq!(pool.hot_pages(1, 0.6), vec![pages[0]]);
+    }
+
+    #[test]
+    fn record_plan_resets_stale_heat_on_shorter_replan() {
+        let mut pool = PagePool::new(8, 16);
+        pool.admit(1, 64).unwrap();
+        let pages = pool.pages_of(1).unwrap().to_vec();
+        // Long plan heats page 3 fully.
+        let long = test_plan(64, &[vec![], vec![], vec![], (48..64u32).collect()]);
+        pool.record_plan(1, &long).unwrap();
+        assert_eq!(pool.stripe_stats(pages[3]).hot_fraction, 1.0);
+        // Shorter re-plan covers only the first 32 tokens: later pages must
+        // not keep the old heat.
+        let short = test_plan(32, &[vec![0], vec![]]);
+        pool.record_plan(1, &short).unwrap();
+        assert_eq!(pool.stripe_stats(pages[3]).hot_fraction, 0.0);
+        assert_eq!(pool.stripe_stats(pages[2]).hot_fraction, 0.0);
+        assert!(pool.stripe_stats(pages[0]).hot_fraction > 0.0);
+    }
+
+    #[test]
+    fn record_plan_unknown_sequence_rejected() {
+        let mut pool = PagePool::new(2, 16);
+        let plan = test_plan(16, &[vec![0]]);
+        assert!(pool.record_plan(9, &plan).is_err());
+    }
+
+    #[test]
+    fn paged_store_gather_matches_flat_gather() {
+        use crate::tensor::Mat;
+        let d = 8;
+        let n = 48;
+        let flat_k = Mat::from_fn(n, d, |r, c| (r * 100 + c) as f32);
+        let flat_v = Mat::from_fn(n, d, |r, c| (r * 100 + c) as f32 + 0.5);
+        let mut store = PagedKvStore::new(4, 16, d);
+        let pages: Vec<u32> = vec![2, 0, 3]; // deliberately non-identity
+        for pos in 0..n {
+            store.write(&pages, pos, flat_k.row(pos), flat_v.row(pos)).unwrap();
+        }
+        let coords: Vec<u32> = vec![0, 5, 17, 31, 32, 47];
+        let (k, v) = store.gather(&pages, &coords).unwrap();
+        assert_eq!(k, flat_k.gather_rows(&coords));
+        assert_eq!(v, flat_v.gather_rows(&coords));
+        // Contiguous span read crosses page boundaries transparently.
+        let (ks, _) = store.span(&pages, 10, 40).unwrap();
+        let span_coords: Vec<u32> = (10..40).collect();
+        assert_eq!(ks, flat_k.gather_rows(&span_coords));
+    }
+
+    #[test]
+    fn paged_store_bounds_checked() {
+        let mut store = PagedKvStore::new(2, 16, 4);
+        let pages = vec![0u32, 1];
+        assert!(store.write(&pages, 40, &[0.0; 4], &[0.0; 4]).is_err());
+        assert!(store.write(&pages, 0, &[0.0; 3], &[0.0; 4]).is_err());
+        assert!(store.gather(&pages, &[33]).is_err());
+        assert!(store.span(&pages, 5, 3).is_err());
+        assert!(store.gather(&pages, &[31]).is_ok());
     }
 }

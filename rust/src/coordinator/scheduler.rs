@@ -12,32 +12,59 @@
 use super::kv_cache::PagePool;
 use super::request::{Phase, RequestState};
 
+/// Identification overhead as a fraction of context token-cost when a
+/// chunk must (re)plan: the pooled Alg. 2 pass scans every candidate key
+/// once at pooled-row granularity, which the cost model prices at ~1/8 of
+/// an attended token each. A plan-cache hit skips this entirely.
+pub const IDENT_COST_FRAC: f64 = 0.125;
+
 /// How prefill attention cost scales with context for the active method.
 #[derive(Clone, Copy, Debug)]
 pub enum SparsityModel {
     /// Dense attention: cost ∝ context length.
     Dense,
     /// AnchorAttention: anchor regions (window + init) plus a stripe
-    /// fraction of the remaining context survive.
+    /// fraction of the remaining context survive, plus identification
+    /// overhead on plan-cache misses.
     Anchor {
         /// Fraction of non-anchor keys surviving identification
         /// (1 − sparsity; measured by the engine, e.g. ~0.1 at θ=12).
         stripe_keep: f64,
         /// Anchor window + init tokens always computed.
         anchor_tokens: usize,
+        /// Observed plan-cache hit rate in [0, 1] (heads sharing a
+        /// `(layer, head_group)` cell reuse identification work); hits
+        /// drop the identification term from the chunk cost.
+        plan_hit_rate: f64,
     },
 }
 
 impl SparsityModel {
-    /// Effective attended tokens for a chunk at `context` total length.
+    /// Effective attended tokens for a chunk at `context` total length —
+    /// attention work plus the amortized identification work.
     pub fn effective_context(&self, context: usize) -> f64 {
         match *self {
             SparsityModel::Dense => context as f64,
-            SparsityModel::Anchor { stripe_keep, anchor_tokens } => {
+            SparsityModel::Anchor { stripe_keep, anchor_tokens, plan_hit_rate } => {
                 let anchored = context.min(anchor_tokens) as f64;
                 let rest = context.saturating_sub(anchor_tokens) as f64;
-                anchored + stripe_keep * rest
+                let ident =
+                    (1.0 - plan_hit_rate.clamp(0.0, 1.0)) * IDENT_COST_FRAC * context as f64;
+                (anchored + stripe_keep * rest + ident).min(context as f64)
             }
+        }
+    }
+
+    /// Fold a newly observed plan-cache hit rate into the model (no-op for
+    /// dense). Integration point for a serving loop that aggregates
+    /// `BatchOutput::hit_rate()` from the attention engine; nothing calls
+    /// it on the current PJRT path (whose artifacts run fused attention),
+    /// so `plan_hit_rate` stays at its configured value until wired.
+    pub fn observe_plan_hit_rate(&mut self, observed: f64) {
+        if let SparsityModel::Anchor { plan_hit_rate, .. } = self {
+            // Exponential moving average keeps the estimate stable across
+            // bursty traces.
+            *plan_hit_rate = 0.5 * *plan_hit_rate + 0.5 * observed.clamp(0.0, 1.0);
         }
     }
 }
@@ -232,7 +259,7 @@ mod tests {
         let dense = plan_iteration(&c, &mut dense_states, &mut pool);
 
         let mut sparse_states = mk();
-        c.sparsity = SparsityModel::Anchor { stripe_keep: 0.08, anchor_tokens: 256 };
+        c.sparsity = SparsityModel::Anchor { stripe_keep: 0.08, anchor_tokens: 256, plan_hit_rate: 0.0 };
         let sparse = plan_iteration(&c, &mut sparse_states, &mut pool);
         assert!(
             sparse.prefill.len() > dense.prefill.len(),
@@ -261,11 +288,73 @@ mod tests {
     fn effective_context_model() {
         let dense = SparsityModel::Dense;
         assert_eq!(dense.effective_context(1000), 1000.0);
-        let anchor = SparsityModel::Anchor { stripe_keep: 0.1, anchor_tokens: 200 };
+        let anchor = SparsityModel::Anchor { stripe_keep: 0.1, anchor_tokens: 200, plan_hit_rate: 1.0 };
         let eff = anchor.effective_context(1000);
         assert!((eff - (200.0 + 0.1 * 800.0)).abs() < 1e-9);
         // Short context: everything anchored.
         assert_eq!(anchor.effective_context(100), 100.0);
+    }
+
+    /// Plan-cache hits remove the identification term: the same chunk
+    /// costs strictly less at a higher observed hit rate, which buys the
+    /// scheduler extra prefill headroom.
+    #[test]
+    fn plan_hits_reduce_chunk_cost() {
+        let mk = |hit| SparsityModel::Anchor {
+            stripe_keep: 0.08,
+            anchor_tokens: 256,
+            plan_hit_rate: hit,
+        };
+        let cold = mk(0.0).effective_context(4096);
+        let warm = mk(1.0).effective_context(4096);
+        assert!(
+            (cold - warm - IDENT_COST_FRAC * 4096.0).abs() < 1e-9,
+            "cold {cold} vs warm {warm}"
+        );
+
+        // The headroom is visible in the iteration plan: warm cache fits
+        // at least as many chunks, and strictly more at this budget.
+        let run = |hit| {
+            let mut pool = PagePool::new(64, 256);
+            let mut states = mk_states(&[(1, 2048, 0), (2, 2048, 0), (3, 2048, 0), (4, 2048, 0)]);
+            for st in &mut states {
+                st.phase = Phase::Prefill;
+                st.prefilled = 1792;
+                pool.admit(st.request.id, st.request.total_tokens()).unwrap();
+            }
+            let mut c = cfg();
+            c.max_running = 8;
+            c.iter_budget = 480.0;
+            c.sparsity = mk(hit);
+            plan_iteration(&c, &mut states, &mut pool).prefill.len()
+        };
+        assert!(run(1.0) > run(0.0), "warm {} vs cold {}", run(1.0), run(0.0));
+    }
+
+    #[test]
+    fn observe_plan_hit_rate_is_ema_and_dense_noop() {
+        let mut m = SparsityModel::Anchor {
+            stripe_keep: 0.1,
+            anchor_tokens: 256,
+            plan_hit_rate: 0.0,
+        };
+        m.observe_plan_hit_rate(1.0);
+        match m {
+            SparsityModel::Anchor { plan_hit_rate, .. } => {
+                assert!((plan_hit_rate - 0.5).abs() < 1e-12)
+            }
+            _ => panic!(),
+        }
+        m.observe_plan_hit_rate(1.0);
+        match m {
+            SparsityModel::Anchor { plan_hit_rate, .. } => {
+                assert!((plan_hit_rate - 0.75).abs() < 1e-12)
+            }
+            _ => panic!(),
+        }
+        let mut d = SparsityModel::Dense;
+        d.observe_plan_hit_rate(1.0);
+        assert_eq!(d.effective_context(100), 100.0);
     }
 
     #[test]

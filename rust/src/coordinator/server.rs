@@ -248,7 +248,7 @@ mod tests {
             run(trace(6, 1500, 2), &cfg)
         };
         let dense = mk(SparsityModel::Dense);
-        let anchor = mk(SparsityModel::Anchor { stripe_keep: 0.08, anchor_tokens: 256 });
+        let anchor = mk(SparsityModel::Anchor { stripe_keep: 0.08, anchor_tokens: 256, plan_hit_rate: 0.5 });
         assert!(
             anchor.iterations <= dense.iterations,
             "anchor {} vs dense {}",

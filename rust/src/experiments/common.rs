@@ -1,5 +1,6 @@
 //! Shared experiment plumbing: scaled method construction, evaluation of
-//! one (head, method) pair, and report formatting.
+//! one (head, method) pair — metrics read from the [`SparsePlan`], the
+//! executor only runs for latency/output fidelity — and report formatting.
 
 use std::time::Instant;
 
@@ -8,7 +9,9 @@ use crate::attention::baselines::block_topk::BlockTopKConfig;
 use crate::attention::baselines::flexprefill::FlexPrefillConfig;
 use crate::attention::baselines::streaming::StreamingConfig;
 use crate::attention::baselines::vertical_slash::VerticalSlashConfig;
+use crate::attention::plan::{self, BatchInput, PlanCache, PlanKey};
 use crate::attention::{metrics, HeadInput, Method, TileConfig};
+use crate::workload::qkv::generate;
 use crate::workload::WorkloadProfile;
 
 /// Quick (CI/test) vs full (bench) experiment scale.
@@ -110,29 +113,40 @@ pub struct EvalRow {
     pub recall: f64,
     pub min_recall: f64,
     pub sparsity: f64,
+    /// Total method latency (plan + execute).
     pub latency_s: f64,
+    /// Identification share of `latency_s` (what a plan-cache hit saves).
+    pub plan_s: f64,
     pub flops: u64,
     pub output_rel_err: f64,
 }
 
 /// Run a method on a head, measuring latency, recall, sparsity and output
-/// fidelity against dense attention.
+/// fidelity against dense attention. Recall and sparsity come straight
+/// from the plan's coverage; attention only executes for the latency and
+/// fidelity columns.
 pub fn evaluate(head: &HeadInput, method: &Method, tile: TileConfig) -> EvalRow {
     let full = crate::attention::full::full_attention(head, tile);
 
     let t0 = Instant::now();
-    let out = method.run(head);
-    let latency_s = t0.elapsed().as_secs_f64();
+    let head_plan = method.plan(head);
+    let t1 = Instant::now();
+    let out = plan::execute_plan(head, &head_plan);
+    let t2 = Instant::now();
 
-    let rec = metrics::recall(head, &out.coverage, tile);
+    let cov = head_plan.coverage();
+    let rec = metrics::recall(head, &cov, tile);
+    let mut flops = out.cost.flops;
+    flops += head_plan.ident_cost.flops;
     EvalRow {
         method: method.name().to_string(),
         n: head.n(),
         recall: rec.mean_recall,
         min_recall: rec.min_recall,
-        sparsity: out.coverage.sparsity(),
-        latency_s,
-        flops: out.cost.flops,
+        sparsity: cov.sparsity(),
+        latency_s: (t2 - t0).as_secs_f64(),
+        plan_s: (t1 - t0).as_secs_f64(),
+        flops,
         output_rel_err: out.out.rel_err(&full.out),
     }
 }
@@ -149,6 +163,83 @@ pub fn measure_latency(head: &HeadInput, method: &Method, iters: usize) -> f64 {
         best = best.min(dt);
     }
     best
+}
+
+/// GQA-style multi-head batch: `heads` heads in groups of `group_size`;
+/// heads within a group share Q/K (one seed per group — the query-head
+/// group attends one KV pattern) and differ in V, so plan reuse within a
+/// group is exact while outputs stay distinct.
+pub fn gqa_batch(
+    profile: &WorkloadProfile,
+    n: usize,
+    heads: usize,
+    group_size: usize,
+    seed: u64,
+) -> BatchInput {
+    assert!(heads >= 1 && group_size >= 1);
+    let mut out = Vec::with_capacity(heads);
+    for h in 0..heads {
+        let g = h / group_size;
+        let wl = generate(profile, n, seed.wrapping_add(g as u64));
+        let mut head = wl.head;
+        if h % group_size != 0 {
+            // Re-randomize V only: same K/Q ⇒ same plan, different output.
+            let mut rng = crate::util::rng::Pcg64::seeded(
+                seed.wrapping_mul(31).wrapping_add(h as u64),
+            );
+            for x in head.v.data.iter_mut() {
+                *x = rng.normal();
+            }
+        }
+        out.push(head);
+    }
+    BatchInput::new(out)
+}
+
+/// Plan-cache keys matching [`gqa_batch`]'s grouping.
+pub fn gqa_keys(layer: u32, heads: usize, group_size: usize) -> Vec<PlanKey> {
+    (0..heads).map(|h| PlanKey::new(layer, (h / group_size) as u32)).collect()
+}
+
+/// One batched data point: latency for the whole `[H, N, d]` batch through
+/// the head-parallel path plus the batch's plan-cache interaction.
+#[derive(Clone, Debug)]
+pub struct BatchEvalRow {
+    pub method: String,
+    pub n: usize,
+    pub heads: usize,
+    pub latency_s: f64,
+    pub hit_rate: f64,
+    pub sparsity: f64,
+}
+
+/// Run a method over a multi-head batch with a fresh plan cache keyed by
+/// [`gqa_keys`]; reports wallclock, cache hit rate and mean sparsity.
+pub fn evaluate_batch(
+    method: &Method,
+    batch: &BatchInput,
+    layer: u32,
+    group_size: usize,
+) -> BatchEvalRow {
+    let cache = PlanCache::new();
+    let keys = gqa_keys(layer, batch.h(), group_size);
+    let t0 = Instant::now();
+    let out = method.run_batch_cached(batch, &cache, &keys);
+    let latency_s = t0.elapsed().as_secs_f64();
+    let sparsity = out
+        .plans
+        .iter()
+        .map(|p| p.coverage().sparsity())
+        .sum::<f64>()
+        / out.plans.len() as f64;
+    BatchEvalRow {
+        method: method.name().to_string(),
+        n: batch.n(),
+        heads: batch.h(),
+        latency_s,
+        hit_rate: out.hit_rate(),
+        sparsity,
+    }
 }
 
 /// Default workload for experiments.
@@ -239,5 +330,39 @@ mod tests {
     fn csv_shape() {
         let csv = to_csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
         assert_eq!(csv, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn gqa_batch_shares_qk_within_groups() {
+        let p = WorkloadProfile::llama_like();
+        let batch = gqa_batch(&p, 512, 4, 2, 9);
+        // Group 0 = heads 0,1: same Q/K, different V.
+        assert_eq!(batch.heads[0].q.data, batch.heads[1].q.data);
+        assert_eq!(batch.heads[0].k.data, batch.heads[1].k.data);
+        assert_ne!(batch.heads[0].v.data, batch.heads[1].v.data);
+        // Across groups everything differs.
+        assert_ne!(batch.heads[0].q.data, batch.heads[2].q.data);
+    }
+
+    #[test]
+    fn evaluate_batch_reports_hit_rate() {
+        let p = WorkloadProfile::llama_like();
+        let n = 1024;
+        let tile = TileConfig::new(128, 128);
+        let batch = gqa_batch(&p, n, 4, 2, 11);
+        let m = Method::Anchor(AnchorConfig {
+            tile,
+            theta: 12.0,
+            step: scaled_step(n, tile),
+            init_blocks: 1,
+            use_anchor: true,
+        });
+        let row = evaluate_batch(&m, &batch, 0, 2);
+        assert_eq!(row.heads, 4);
+        // 2 groups of 2 identical-Q/K heads ⇒ up to 50% hits (the benign
+        // concurrent-miss race can lower it, never raise it).
+        assert!(row.hit_rate <= 0.5 + 1e-9, "hit rate {}", row.hit_rate);
+        assert!((0.0..=1.0).contains(&row.sparsity));
+        assert!(row.latency_s > 0.0);
     }
 }

@@ -77,7 +77,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.trace.num_requests = args.usize_or("requests", cfg.trace.num_requests)?;
     if args.has("anchor-sched") {
         cfg.server.scheduler.sparsity =
-            SparsityModel::Anchor { stripe_keep: 0.1, anchor_tokens: 256 };
+            SparsityModel::Anchor { stripe_keep: 0.1, anchor_tokens: 256, plan_hit_rate: 0.0 };
     }
 
     println!("loading engine from {} …", cfg.artifact_dir);

@@ -112,6 +112,30 @@ pub fn shrink_usize(x: &usize) -> Vec<usize> {
     }
 }
 
+/// Shrinker for u64 seeds and sizes: towards zero by halving.
+pub fn shrink_u64(x: &u64) -> Vec<u64> {
+    let x = *x;
+    if x == 0 {
+        vec![]
+    } else {
+        vec![0, x / 2, x - 1].into_iter().filter(|&y| y != x).collect()
+    }
+}
+
+/// Pick one element of a non-empty slice uniformly (generator helper).
+pub fn choose<'a, T>(rng: &mut Pcg64, xs: &'a [T]) -> &'a T {
+    assert!(!xs.is_empty());
+    &xs[rng.next_below(xs.len() as u64) as usize]
+}
+
+impl Config {
+    /// A reduced-case configuration for expensive properties (attention
+    /// parity sweeps), keeping tier-1 wallclock bounded.
+    pub fn heavy(cases: usize, seed: u64) -> Self {
+        Self { cases, seed, max_shrink_steps: 40 }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +170,20 @@ mod tests {
         let cands = shrink_vec(&xs, shrink_usize);
         assert!(!cands.is_empty());
         assert!(cands.iter().any(|c| c.len() < xs.len()));
+    }
+
+    #[test]
+    fn shrink_u64_and_choose_helpers() {
+        assert_eq!(shrink_u64(&0), Vec::<u64>::new());
+        let c = shrink_u64(&10);
+        assert!(c.contains(&0) && c.contains(&5) && c.contains(&9));
+        let mut rng = Pcg64::seeded(1);
+        let xs = [3, 5, 7];
+        for _ in 0..20 {
+            assert!(xs.contains(choose(&mut rng, &xs)));
+        }
+        let cfg = Config::heavy(4, 9);
+        assert_eq!((cfg.cases, cfg.seed), (4, 9));
     }
 
     #[test]

@@ -99,7 +99,7 @@ fn anchor_scheduler_no_worse_than_dense() {
         serve(&cfg, mk_requests(), &mut engine, |_, _| {}).unwrap()
     };
     let dense = run(SparsityModel::Dense);
-    let anchor = run(SparsityModel::Anchor { stripe_keep: 0.08, anchor_tokens: 256 });
+    let anchor = run(SparsityModel::Anchor { stripe_keep: 0.08, anchor_tokens: 256, plan_hit_rate: 0.5 });
     assert!(
         anchor.iterations <= dense.iterations,
         "anchor {} vs dense {}",

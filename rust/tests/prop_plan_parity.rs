@@ -1,0 +1,224 @@
+//! Planner → executor parity properties (the refactor's acceptance bar):
+//!
+//! * **Fused parity** — for every method, `execute_plan` on the method's
+//!   plan equals exact softmax attention restricted to the plan's coverage
+//!   within 1e-4 max-abs-diff (the defining semantics of the old fused
+//!   per-head implementations), and the dense plan equals naive attention.
+//! * **θ → ∞** — the anchor planner's coverage degenerates to full causal
+//!   coverage and its output to dense attention.
+//! * **Cost honesty** — `SparsePlan::predicted_cost` equals the executor's
+//!   measured tally.
+//! * **Batch ≡ single** — the head-parallel batched path reproduces the
+//!   per-head path bit-for-bit on outputs.
+
+use anchor_attention::attention::anchor::AnchorConfig;
+use anchor_attention::attention::baselines::block_topk::BlockTopKConfig;
+use anchor_attention::attention::baselines::flexprefill::FlexPrefillConfig;
+use anchor_attention::attention::baselines::streaming::StreamingConfig;
+use anchor_attention::attention::baselines::vertical_slash::VerticalSlashConfig;
+use anchor_attention::attention::full::naive_attention;
+use anchor_attention::attention::plan::{self, masked_reference, BatchInput};
+use anchor_attention::attention::{HeadInput, Method, TileConfig};
+use anchor_attention::tensor::Mat;
+use anchor_attention::util::proptest::{check, choose, ensure, Config};
+use anchor_attention::util::rng::Pcg64;
+use anchor_attention::workload::qkv::generate;
+use anchor_attention::workload::WorkloadProfile;
+
+fn rand_head(rng: &mut Pcg64, n: usize, d: usize) -> HeadInput {
+    HeadInput::new(
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+    )
+}
+
+/// One random (head, method) parity case.
+#[derive(Clone, Debug)]
+struct ParityCase {
+    seed: u64,
+    n: usize,
+    d: usize,
+    method_idx: usize,
+    theta: f32,
+    step: usize,
+}
+
+fn gen_case(rng: &mut Pcg64) -> ParityCase {
+    ParityCase {
+        seed: rng.next_u64(),
+        n: *choose(rng, &[64, 96, 128, 160]),
+        d: *choose(rng, &[8, 16]),
+        method_idx: rng.next_below(6) as usize,
+        theta: *choose(rng, &[-2.0, 0.5, 3.0, 8.0]),
+        step: *choose(rng, &[1, 2, 4]),
+    }
+}
+
+fn shrink_case(c: &ParityCase) -> Vec<ParityCase> {
+    let mut out = Vec::new();
+    if c.n > 64 {
+        out.push(ParityCase { n: 64, ..c.clone() });
+    }
+    if c.step > 1 {
+        out.push(ParityCase { step: 1, ..c.clone() });
+    }
+    if c.d > 8 {
+        out.push(ParityCase { d: 8, ..c.clone() });
+    }
+    out
+}
+
+fn method_for(c: &ParityCase) -> Method {
+    let tile = TileConfig::new(16, 16);
+    match c.method_idx {
+        0 => Method::Full(tile),
+        1 => Method::Anchor(AnchorConfig {
+            tile,
+            theta: c.theta,
+            step: c.step,
+            init_blocks: 1,
+            use_anchor: c.seed % 2 == 0,
+        }),
+        2 => Method::Streaming(StreamingConfig {
+            tile,
+            global_tokens: 16,
+            local_tokens: 32,
+        }),
+        3 => Method::VerticalSlash(VerticalSlashConfig {
+            tile,
+            vertical_tokens: 8,
+            slash_tokens: 8,
+            last_q: 16,
+        }),
+        4 => Method::FlexPrefill(FlexPrefillConfig {
+            tile,
+            gamma: 0.85,
+            min_budget_tokens: 16,
+        }),
+        _ => Method::BlockTopK(BlockTopKConfig { tile, k: 3, force_sink_local: true }),
+    }
+}
+
+/// (a) Every method's executed plan equals the coverage-masked softmax
+/// reference within 1e-4, and predicted cost equals measured cost.
+#[test]
+fn prop_execute_plan_matches_masked_softmax_for_all_methods() {
+    let cfg = Config::heavy(24, 0x9A17);
+    check(&cfg, gen_case, shrink_case, |c| {
+        let mut rng = Pcg64::seeded(c.seed);
+        let h = rand_head(&mut rng, c.n, c.d);
+        let m = method_for(c);
+        let head_plan = m.plan(&h);
+        let out = plan::execute_plan(&h, &head_plan);
+        ensure(
+            head_plan.predicted_cost == out.cost,
+            format!("{}: predicted {:?} != measured {:?}", m.name(), head_plan.predicted_cost, out.cost),
+        )?;
+        let expect = masked_reference(&h, &out.coverage);
+        let diff = out.out.max_abs_diff(&expect);
+        ensure(diff < 1e-4, format!("{}: masked-softmax diff {diff}", m.name()))?;
+        if matches!(m, Method::Full(_)) {
+            let dense = naive_attention(&h);
+            let diff = out.out.max_abs_diff(&dense);
+            ensure(diff < 1e-4, format!("full-attn vs naive diff {diff}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// (b) θ → ∞ anchor plan ≡ full coverage, and the output equals dense
+/// attention within 1e-4.
+#[test]
+fn prop_infinite_theta_anchor_is_full_attention() {
+    let cfg = Config::heavy(12, 0x1DEA);
+    check(
+        &cfg,
+        |rng| (rng.next_u64(), *choose(rng, &[64, 128, 160]), *choose(rng, &[1usize, 2, 4])),
+        |_| vec![],
+        |&(seed, n, step)| {
+            let mut rng = Pcg64::seeded(seed);
+            let h = rand_head(&mut rng, n, 8);
+            let acfg = AnchorConfig {
+                tile: TileConfig::new(16, 16),
+                theta: f32::INFINITY,
+                step,
+                init_blocks: 1,
+                use_anchor: true,
+            };
+            let head_plan = Method::Anchor(acfg).plan(&h);
+            let cov = head_plan.coverage();
+            ensure(
+                cov.sparsity() == 0.0,
+                format!("θ=∞ coverage not full: sparsity {}", cov.sparsity()),
+            )?;
+            let full_cov = anchor_attention::attention::mask::Coverage::full(n, 16);
+            ensure(
+                cov.total_covered() == full_cov.total_covered(),
+                "θ=∞ covered-pair count differs from full causal coverage",
+            )?;
+            let out = plan::execute_plan(&h, &head_plan);
+            let dense = naive_attention(&h);
+            let diff = out.out.max_abs_diff(&dense);
+            ensure(diff < 1e-4, format!("θ=∞ vs dense diff {diff}"))
+        },
+    );
+}
+
+/// Batched head-parallel execution reproduces per-head runs on realistic
+/// structured workloads.
+#[test]
+fn prop_batch_path_matches_single_head_path() {
+    let cfg = Config::heavy(6, 0xBA7C);
+    check(
+        &cfg,
+        |rng| rng.next_u64(),
+        |_| vec![],
+        |&seed| {
+            let n = 512;
+            let tile = TileConfig::new(64, 64);
+            let heads: Vec<HeadInput> = (0..3)
+                .map(|i| generate(&WorkloadProfile::llama_like(), n, seed.wrapping_add(i)).head)
+                .collect();
+            let batch = BatchInput::new(heads.clone());
+            let m = Method::Anchor(AnchorConfig {
+                tile,
+                theta: 6.0,
+                step: 2,
+                init_blocks: 1,
+                use_anchor: true,
+            });
+            let b = m.run_batch(&batch);
+            for (i, h) in heads.iter().enumerate() {
+                let single = m.run(h);
+                let diff = b.outputs[i].out.max_abs_diff(&single.out);
+                ensure(diff < 1e-6, format!("head {i}: batch vs single diff {diff}"))?;
+                ensure(
+                    b.outputs[i].cost == single.cost,
+                    format!("head {i}: cost diverges"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Plan coverage is exactly the executed coverage for every method (the
+/// metrics pipeline may skip execution entirely).
+#[test]
+fn prop_plan_coverage_equals_executed_coverage() {
+    let cfg = Config::heavy(18, 0xC0FE);
+    check(&cfg, gen_case, shrink_case, |c| {
+        let mut rng = Pcg64::seeded(c.seed);
+        let h = rand_head(&mut rng, c.n, c.d);
+        let m = method_for(c);
+        let head_plan = m.plan(&h);
+        let out = m.run(&h);
+        let a = head_plan.coverage();
+        let b = &out.coverage;
+        ensure(
+            a.total_covered() == b.total_covered() && a.sparsity() == b.sparsity(),
+            format!("{}: plan coverage != executed coverage", m.name()),
+        )
+    });
+}

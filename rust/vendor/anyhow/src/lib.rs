@@ -1,0 +1,175 @@
+//! Minimal, offline-buildable stand-in for the `anyhow` crate.
+//!
+//! The hermetic build sandbox has no crates.io access, so the subset of the
+//! anyhow API this workspace actually uses is re-implemented here: a
+//! string-backed dynamic [`Error`], the [`Result`] alias, the `anyhow!` /
+//! `bail!` / `ensure!` macros, and the [`Context`] extension trait for both
+//! `Result` and `Option`. Semantics match anyhow where it matters:
+//! `Error` intentionally does **not** implement `std::error::Error`, so the
+//! blanket `From<E: std::error::Error>` conversion (what makes `?` work on
+//! io/parse/backend errors inside `anyhow::Result` functions) does not
+//! conflict with the reflexive `From<Error>`.
+
+use std::fmt;
+
+/// Dynamic error: a message plus the chain of contexts wrapped around it.
+pub struct Error {
+    msg: String,
+    /// Outermost-first context chain, rendered like anyhow's `{:#}` would.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string(), chain: Vec::new() }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The root cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.first() {
+            Some(outer) => write!(f, "{outer}"),
+            None => write!(f, "{}", self.msg),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in &self.chain {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($msg:expr $(,)?) => { $crate::Error::msg($msg) };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Early-return with an [`Error`] when the condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e)?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(err.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_render_outermost_first() {
+        let err: Error = Error::msg("root").context("outer");
+        assert_eq!(format!("{err}"), "outer");
+        assert_eq!(format!("{err:?}"), "outer: root");
+        assert_eq!(err.root_cause(), "root");
+    }
+
+    #[test]
+    fn macros_compile_and_fire() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert!(f(3).is_ok());
+        assert_eq!(f(0).unwrap_err().to_string(), "zero");
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let err = x.context("missing value").unwrap_err();
+        assert_eq!(err.to_string(), "missing value");
+    }
+}

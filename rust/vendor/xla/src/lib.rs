@@ -1,0 +1,234 @@
+//! Offline stub of the `xla` (PJRT) crate surface used by this workspace.
+//!
+//! The hermetic sandbox cannot build the real PJRT bindings, so this crate
+//! keeps the *types* compiling and the host-side [`Literal`] container fully
+//! functional (construction, reshape, readback), while every operation that
+//! would need a real PJRT backend ([`PjRtClient::cpu`], compilation,
+//! execution) returns a clear "backend unavailable" error at runtime. The
+//! serving stack degrades gracefully: artifact-dependent tests skip, the
+//! `MockEngine` control-plane path is unaffected, and swapping in a real
+//! `xla` checkout at `rust/vendor/xla` (or a registry dependency) restores
+//! the PJRT path without touching any call site. See DESIGN.md §8.
+
+use std::fmt;
+
+/// Backend error; implements `std::error::Error` so it converts into
+/// `anyhow::Error` through `?`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable: built against the offline xla stub \
+         (vendor/xla); install the real PJRT-backed xla crate to enable it"
+    ))
+}
+
+/// Element types a [`Literal`] can hold (the subset this workspace uses).
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Conversion between native element types and [`Data`] storage.
+pub trait NativeType: Copy + Sized {
+    fn into_data(v: Vec<Self>) -> Data;
+    fn from_data(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side tensor literal: dims plus typed storage. Fully functional —
+/// only device transfer/execution requires the real backend.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::into_data(v.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], data: T::into_data(vec![v]) }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count < 0 || count as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape to {:?} needs {count} elements, literal has {}",
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Read the elements back out (type must match storage).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_data(&self.data).ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (that
+    /// requires execution), so a stub literal decomposes to itself.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Ok(vec![self])
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+}
+
+/// Array shape wrapper.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module proto (stubbed).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HLO text parsing"))
+    }
+}
+
+/// XLA computation handle (stubbed).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client (stubbed): construction reports unavailability so callers
+/// fail fast with a actionable message instead of at first execution.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PJRT compilation"))
+    }
+}
+
+/// Device buffer handle (stubbed).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+/// Loaded executable (stubbed).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_type_mismatch_errors() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(l.to_vec::<i32>().is_ok());
+    }
+
+    #[test]
+    fn reshape_count_checked() {
+        let l = Literal::vec1(&[1.0f32; 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_rank0() {
+        let l = Literal::scalar(7i32);
+        assert!(l.array_shape().unwrap().dims().is_empty());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+}
