@@ -35,7 +35,24 @@ fn main() -> anyhow::Result<()> {
 
     for (label, sparsity) in [
         ("dense scheduler", SparsityModel::Dense),
-        ("anchor-aware scheduler", SparsityModel::Anchor { stripe_keep: 0.1, anchor_tokens: 256, plan_hit_rate: 0.5 }),
+        (
+            "anchor-aware scheduler",
+            SparsityModel::Anchor {
+                stripe_keep: 0.1,
+                anchor_tokens: 256,
+                plan_hit_rate: 0.5,
+                pipelined: false,
+            },
+        ),
+        (
+            "anchor-aware scheduler + async plan pipeline",
+            SparsityModel::Anchor {
+                stripe_keep: 0.1,
+                anchor_tokens: 256,
+                plan_hit_rate: 0.5,
+                pipelined: true,
+            },
+        ),
     ] {
         println!("\n════ {label} ══════════════════════════════════════");
         println!("loading engine (compiling artifacts)…");

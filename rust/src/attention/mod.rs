@@ -9,7 +9,10 @@
 //! executor ([`plan::execute_plan`]) computes exact softmax attention
 //! restricted to the plan. [`Method::run`] is the thin per-head wrapper;
 //! [`Method::run_batch`] executes a multi-head [`plan::BatchInput`] at
-//! head granularity with optional plan-cache reuse across head groups.
+//! head granularity with optional plan-cache reuse across head groups;
+//! [`Method::run_batch_pipelined`] overlaps identification with execution
+//! through the bounded plan queue ([`pipeline::PlanPipeline`], DESIGN.md
+//! §9) with bitwise-identical results.
 //!
 //! Layout convention: row-major `[N, d]` matrices for Q, K, V per head,
 //! causal masking, logits scaled by `1/sqrt(d)`.
@@ -19,6 +22,7 @@ pub mod baselines;
 pub mod full;
 pub mod mask;
 pub mod metrics;
+pub mod pipeline;
 pub mod plan;
 pub mod strategy;
 

@@ -1,0 +1,388 @@
+//! The async plan pipeline: overlap identification with sparse execution.
+//!
+//! The paper keeps the GPU busy by making identification cheap relative to
+//! the fine-grained sparse computation (§3.2–§3.3); PR 1's Planner →
+//! [`SparsePlan`] → Executor split made identification a *detachable*
+//! stage, and this module detaches it in time as well: planner workers
+//! identify the plan for head/key *i+1* while [`plan::execute_plan`]
+//! drains head *i*, communicating through a bounded two-slot
+//! [`OrderedBoundedQueue`] (DESIGN.md §9).
+//!
+//! Guarantees:
+//! * **Determinism** — plans land in submission order regardless of worker
+//!   timing, every head executes against the same plan the sequential path
+//!   would resolve, and the executed arithmetic is identical, so pipelined
+//!   output is **bitwise-equal** to [`Method::run_batch`] /
+//!   [`Method::run_batch_cached`] (property-tested for all six methods).
+//! * **No deadlock on failure** — a panicked planner worker poisons the
+//!   queue; the executor surfaces its message as an `Err` instead of
+//!   blocking forever, and a panicking executor poisons the queue on
+//!   unwind so planner workers never block forever either.
+//! * **Accounting parity** — cache hits/misses and per-head ident-cost
+//!   attribution match the sequential batched path exactly
+//!   (`hits = heads − fresh keys`; the first head of each fresh key pays).
+//!
+//! [`PipelineStats`] reports how much identification wall time the
+//! overlap actually hid (`overlap_efficiency`), which is what the
+//! scheduler's `max(ident, exec)` pricing (`SparsityModel::Anchor` with
+//! `pipelined: true`) assumes and what the CI bench gate tracks.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::attention::plan::{
+    self, BatchInput, BatchOutput, PlanCache, PlanKey, Planner, SparsePlan,
+};
+use crate::attention::{AttnOutput, Method};
+use crate::util::threadpool::{num_threads, panic_message, OrderedBoundedQueue, PoisonOnDrop};
+
+/// Pipeline shape: how far planners may run ahead of the executor and how
+/// many worker threads identify concurrently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanPipeline {
+    /// Bounded plan-queue depth: at most this many plans are in flight
+    /// (identifying or queued) ahead of the executor. The default of 2
+    /// means one plan executing, one identifying — the classic double
+    /// buffer.
+    pub depth: usize,
+    /// Planner worker threads. Claims are lookahead-bounded by `depth`,
+    /// so workers beyond `depth` would only idle; the default caps them
+    /// there (and at one below the pool size), bounding executor
+    /// oversubscription to at most `depth` transient planner threads
+    /// while plans are in flight.
+    pub workers: usize,
+}
+
+impl Default for PlanPipeline {
+    fn default() -> Self {
+        let depth = 2;
+        Self { depth, workers: num_threads().saturating_sub(1).clamp(1, depth) }
+    }
+}
+
+/// Timing breakdown of one pipelined batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PipelineStats {
+    /// Wall time workers spent identifying (planning), summed over items.
+    pub ident_total_s: f64,
+    /// Identification time hidden behind execution: `ident_total − stall`.
+    pub ident_hidden_s: f64,
+    /// Executor busy time, summed over heads.
+    pub exec_total_s: f64,
+    /// Time the executor spent blocked on the plan queue (unhidden
+    /// identification: the first plan is always paid here).
+    pub stall_s: f64,
+    /// End-to-end batch wall time.
+    pub wall_s: f64,
+    /// Plan items that flowed through the queue (distinct keys, or heads
+    /// when uncached).
+    pub items: usize,
+}
+
+impl PipelineStats {
+    /// Fraction of identification wall time hidden behind execution
+    /// (`ident hidden / ident total`, in `[0, 1]`) — the pipeline's
+    /// headline number: 1.0 means identification was entirely off the
+    /// critical path.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.ident_total_s <= 0.0 {
+            0.0
+        } else {
+            (self.ident_hidden_s / self.ident_total_s).clamp(0.0, 1.0)
+        }
+    }
+}
+
+/// A pipelined batch run: the sequential-identical [`BatchOutput`] plus
+/// the overlap accounting.
+#[derive(Debug)]
+pub struct PipelinedBatchOutput {
+    pub batch: BatchOutput,
+    pub stats: PipelineStats,
+}
+
+impl Method {
+    /// As [`Method::run_batch`] with identification overlapped: planners
+    /// for head *i+1* run on spare workers while the executor drains head
+    /// *i*. Output is bitwise-equal to the sequential path; `Err` carries
+    /// the panic message of a failed planner worker.
+    pub fn run_batch_pipelined(
+        &self,
+        batch: &BatchInput,
+        pipe: &PlanPipeline,
+    ) -> Result<PipelinedBatchOutput, String> {
+        run_planner_batch_pipelined(self.planner().as_ref(), batch, None, pipe)
+    }
+
+    /// As [`Method::run_batch_cached`] with identification overlapped;
+    /// plan-cache semantics and hit accounting are identical.
+    pub fn run_batch_cached_pipelined(
+        &self,
+        batch: &BatchInput,
+        cache: &PlanCache,
+        keys: &[PlanKey],
+        pipe: &PlanPipeline,
+    ) -> Result<PipelinedBatchOutput, String> {
+        run_planner_batch_pipelined(self.planner().as_ref(), batch, Some((cache, keys)), pipe)
+    }
+}
+
+/// Pipelined batch execution against an explicit planner (the
+/// [`Method`] wrappers above are the common entry points; tests inject
+/// failing planners here).
+///
+/// Identification work items are one per *distinct* key in first-seen
+/// order (cached) or one per head (uncached) — exactly the work the
+/// sequential `run_batch_inner` resolves, so plans, outputs, and
+/// hit/ident accounting match it bit-for-bit.
+pub fn run_planner_batch_pipelined(
+    planner: &dyn Planner,
+    batch: &BatchInput,
+    cached: Option<(&PlanCache, &[PlanKey])>,
+    pipe: &PlanPipeline,
+) -> Result<PipelinedBatchOutput, String> {
+    let h_total = batch.h();
+
+    // Plan items and the item index each head waits on.
+    let mut firsts: Vec<(Option<PlanKey>, usize)> = Vec::new();
+    let mut item_of_head: Vec<usize> = Vec::with_capacity(h_total);
+    match cached {
+        Some((_, keys)) => {
+            assert_eq!(keys.len(), h_total, "one PlanKey per head");
+            for (h, &k) in keys.iter().enumerate() {
+                match firsts.iter().position(|&(fk, _)| fk == Some(k)) {
+                    Some(j) => item_of_head.push(j),
+                    None => {
+                        item_of_head.push(firsts.len());
+                        firsts.push((Some(k), h));
+                    }
+                }
+            }
+        }
+        None => {
+            for h in 0..h_total {
+                item_of_head.push(h);
+                firsts.push((None, h));
+            }
+        }
+    }
+    let n_items = firsts.len();
+    let workers = pipe.workers.max(1).min(n_items);
+
+    // Item payload: the resolved plan, whether it was a cache hit, and the
+    // wall time the worker spent resolving it.
+    type Item = (Arc<SparsePlan>, bool, f64);
+    let queue: OrderedBoundedQueue<Item> = OrderedBoundedQueue::new(n_items, pipe.depth);
+
+    let plan_item = |j: usize| -> Result<Item, String> {
+        let (key, h0) = firsts[j];
+        let t0 = Instant::now();
+        let planned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            match (cached, key) {
+                (Some((cache, _)), Some(k)) => {
+                    cache.get_or_plan(k, || planner.plan(&batch.heads[h0]))
+                }
+                _ => (Arc::new(planner.plan(&batch.heads[h0])), false),
+            }
+        }));
+        match planned {
+            Ok((head_plan, hit)) => Ok((head_plan, hit, t0.elapsed().as_secs_f64())),
+            Err(e) => Err(panic_message(&*e)),
+        }
+    };
+
+    let mut resolved: Vec<Option<(Arc<SparsePlan>, bool)>> = vec![None; n_items];
+    let mut outputs: Vec<AttnOutput> = Vec::with_capacity(h_total);
+    let mut stats = PipelineStats { items: n_items, ..Default::default() };
+    let mut failure: Option<String> = None;
+    let t_start = Instant::now();
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                while let Some(j) = queue.claim() {
+                    match plan_item(j) {
+                        Ok(item) => queue.push(j, item),
+                        Err(msg) => {
+                            queue.poison(msg);
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+
+        // Executor (this thread): drain heads in order, popping plans in
+        // submission order as they are needed. The guard poisons the queue
+        // if execution unwinds, so planner workers never deadlock.
+        let mut guard = PoisonOnDrop { queue: &queue, armed: true };
+        let mut popped = 0usize;
+        'heads: for h in 0..h_total {
+            let j = item_of_head[h];
+            while popped <= j {
+                let t_wait = Instant::now();
+                match queue.pop() {
+                    Ok(Some((i, (head_plan, hit, plan_s)))) => {
+                        stats.stall_s += t_wait.elapsed().as_secs_f64();
+                        stats.ident_total_s += plan_s;
+                        resolved[i] = Some((head_plan, hit));
+                        popped = i + 1;
+                    }
+                    Ok(None) => break 'heads, // unreachable: popped < n_items
+                    Err(msg) => {
+                        failure = Some(msg);
+                        break 'heads;
+                    }
+                }
+            }
+            let (head_plan, hit) = resolved[j].as_ref().expect("plans pop in order");
+            let t_exec = Instant::now();
+            let mut out = plan::execute_plan(&batch.heads[h], head_plan);
+            stats.exec_total_s += t_exec.elapsed().as_secs_f64();
+            // The planning head of each fresh key pays its identification
+            // cost — identical attribution to the sequential batched path.
+            if !*hit && firsts[j].1 == h {
+                out.cost.add(head_plan.ident_cost);
+            }
+            outputs.push(out);
+        }
+        // On failure the queue is already poisoned by the failing worker,
+        // so the remaining workers exit through `claim` and the scope
+        // joins cleanly.
+        guard.armed = false;
+    });
+
+    stats.wall_s = t_start.elapsed().as_secs_f64();
+    stats.ident_hidden_s = (stats.ident_total_s - stats.stall_s).max(0.0);
+    if let Some(msg) = failure {
+        return Err(msg);
+    }
+
+    let misses = resolved.iter().filter(|r| matches!(r, Some((_, false)))).count() as u64;
+    let (cache_hits, cache_misses) = match cached {
+        Some(_) => (h_total as u64 - misses, misses),
+        None => (0, h_total as u64),
+    };
+    let plans: Vec<Arc<SparsePlan>> = item_of_head
+        .iter()
+        .map(|&j| resolved[j].as_ref().expect("all items resolved").0.clone())
+        .collect();
+
+    Ok(PipelinedBatchOutput {
+        batch: BatchOutput { outputs, plans, cache_hits, cache_misses },
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::anchor::AnchorConfig;
+    use crate::attention::{HeadInput, TileConfig};
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn anchor_method() -> Method {
+        Method::Anchor(AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta: 4.0,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        })
+    }
+
+    #[test]
+    fn pipelined_uncached_is_bitwise_sequential() {
+        let heads: Vec<HeadInput> = (0..4).map(|i| rand_head(400 + i, 96, 8)).collect();
+        let batch = BatchInput::new(heads);
+        let m = anchor_method();
+        let seq = m.run_batch(&batch);
+        let piped = m.run_batch_pipelined(&batch, &PlanPipeline::default()).unwrap();
+        assert_eq!((piped.batch.cache_hits, piped.batch.cache_misses), (0, 4));
+        for (h, (a, b)) in seq.outputs.iter().zip(&piped.batch.outputs).enumerate() {
+            assert_eq!(a.out.data, b.out.data, "head {h} output differs bitwise");
+            assert_eq!(a.cost, b.cost, "head {h} cost differs");
+        }
+        assert_eq!(piped.stats.items, 4);
+        assert!(piped.stats.ident_total_s > 0.0);
+        assert!(piped.stats.wall_s > 0.0);
+        let oe = piped.stats.overlap_efficiency();
+        assert!((0.0..=1.0).contains(&oe), "overlap efficiency {oe}");
+    }
+
+    #[test]
+    fn pipelined_cached_matches_sequential_plans_and_accounting() {
+        let shared = rand_head(500, 96, 8);
+        let batch = BatchInput::new(vec![shared.clone(), shared.clone(), shared]);
+        let keys =
+            vec![PlanKey::new(0, 0), PlanKey::new(0, 0), PlanKey::new(0, 1)];
+        let m = anchor_method();
+        let cache_seq = PlanCache::new();
+        let cache_pipe = PlanCache::new();
+        let seq = m.run_batch_cached(&batch, &cache_seq, &keys);
+        let piped = m
+            .run_batch_cached_pipelined(&batch, &cache_pipe, &keys, &PlanPipeline::default())
+            .unwrap();
+        assert_eq!(
+            (seq.cache_hits, seq.cache_misses),
+            (piped.batch.cache_hits, piped.batch.cache_misses)
+        );
+        // Heads of one key share a plan Arc, as in the sequential path.
+        assert!(Arc::ptr_eq(&piped.batch.plans[0], &piped.batch.plans[1]));
+        for (h, (a, b)) in seq.outputs.iter().zip(&piped.batch.outputs).enumerate() {
+            assert_eq!(a.out.data, b.out.data, "head {h} output differs bitwise");
+            assert_eq!(a.cost, b.cost, "head {h} cost differs");
+        }
+        // Two distinct keys → two plan items through the queue.
+        assert_eq!(piped.stats.items, 2);
+        // A second pipelined batch over the warm cache is all hits.
+        let warm = m
+            .run_batch_cached_pipelined(&batch, &cache_pipe, &keys, &PlanPipeline::default())
+            .unwrap();
+        assert_eq!((warm.batch.cache_hits, warm.batch.cache_misses), (3, 0));
+    }
+
+    #[test]
+    fn single_head_batch_flows_through_the_pipeline() {
+        let batch = BatchInput::new(vec![rand_head(600, 64, 8)]);
+        let m = anchor_method();
+        let seq = m.run_batch(&batch);
+        let piped = m
+            .run_batch_pipelined(&batch, &PlanPipeline { depth: 1, workers: 1 })
+            .unwrap();
+        assert_eq!(seq.outputs[0].out.data, piped.batch.outputs[0].out.data);
+        assert_eq!(seq.outputs[0].cost, piped.batch.outputs[0].cost);
+    }
+
+    struct PanicPlanner;
+    impl Planner for PanicPlanner {
+        fn name(&self) -> &'static str {
+            "panic-planner"
+        }
+        fn plan(&self, _input: &HeadInput) -> SparsePlan {
+            panic!("identification exploded");
+        }
+    }
+
+    #[test]
+    fn panicked_planner_worker_surfaces_error_instead_of_deadlocking() {
+        let heads: Vec<HeadInput> = (0..4).map(|i| rand_head(700 + i, 64, 8)).collect();
+        let batch = BatchInput::new(heads);
+        for workers in [1, 2] {
+            let pipe = PlanPipeline { depth: 2, workers };
+            let err = run_planner_batch_pipelined(&PanicPlanner, &batch, None, &pipe)
+                .expect_err("panicking planner must surface an error");
+            assert!(err.contains("identification exploded"), "workers={workers}: {err}");
+        }
+    }
+}

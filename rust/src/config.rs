@@ -74,6 +74,9 @@ impl AppConfig {
                     stripe_keep: sched.get("stripe_keep").as_f64().unwrap_or(0.1),
                     anchor_tokens: sched.get("anchor_tokens").as_usize().unwrap_or(256),
                     plan_hit_rate: sched.get("plan_hit_rate").as_f64().unwrap_or(0.0),
+                    // Async plan pipeline: price identification as
+                    // overlapped with execution (DESIGN.md §9).
+                    pipelined: sched.get("pipelined").as_bool().unwrap_or(false),
                 },
                 Some(other) => return Err(anyhow!("unknown sparsity model '{other}'")),
             };
@@ -152,11 +155,23 @@ mod tests {
         assert_eq!(cfg.anchor.init_blocks, 1, "untouched default");
         assert_eq!(cfg.server.pool_pages, 16);
         match cfg.server.scheduler.sparsity {
-            SparsityModel::Anchor { stripe_keep, .. } => assert_eq!(stripe_keep, 0.05),
+            SparsityModel::Anchor { stripe_keep, pipelined, .. } => {
+                assert_eq!(stripe_keep, 0.05);
+                assert!(!pipelined, "pipelined defaults off");
+            }
             _ => panic!("expected anchor sparsity"),
         }
         assert_eq!(cfg.trace.rate, 7.5);
         assert_eq!(cfg.trace.length_mix, vec![(128, 1.0)]);
+    }
+
+    #[test]
+    fn pipelined_sparsity_parses() {
+        let cfg = AppConfig::parse(
+            r#"{"server": {"scheduler": {"sparsity": "anchor", "pipelined": true}}}"#,
+        )
+        .unwrap();
+        assert!(cfg.server.scheduler.sparsity.is_pipelined());
     }
 
     #[test]

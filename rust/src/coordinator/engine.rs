@@ -32,6 +32,9 @@ pub trait StepExecutor {
     fn execute(&mut self, batch: &EngineBatch) -> Vec<StepOutcome>;
     /// Free any per-request state (called when a request finishes).
     fn finish_request(&mut self, req: u64);
+    /// Register a request's prompt ahead of its first prefill chunk
+    /// (no-op for executors that track progress externally).
+    fn register(&mut self, _req: u64, _prompt: Vec<i32>) {}
 }
 
 /// The real PJRT-backed engine. Owns one [`LmModel`] and per-request
@@ -121,6 +124,10 @@ impl StepExecutor for PjrtEngine {
         self.sessions.remove(&req);
         self.prompts.remove(&req);
     }
+
+    fn register(&mut self, req: u64, prompt: Vec<i32>) {
+        PjrtEngine::register(self, req, prompt);
+    }
 }
 
 /// Deterministic mock for server tests: each prefill chunk or decode step
@@ -128,8 +135,9 @@ impl StepExecutor for PjrtEngine {
 /// optional [`SparsityModel`] prices prefill chunks exactly like the
 /// scheduler's chunk cost — `take · (0.5 + 0.5 · eff(context_after) /
 /// context_after)`, with per-request context tracked across chunks — so
-/// sparsity and plan-cache hit rates propagate into the reported
-/// engine-busy time (batching cost estimate ↔ engine agreement).
+/// sparsity, plan-cache hit rates, and pipelined (overlapped) ident
+/// pricing propagate into the reported engine-busy time (batching cost
+/// estimate ↔ engine agreement).
 pub struct MockEngine {
     pub vocab: i32,
     pub steps: u64,
@@ -207,16 +215,44 @@ pub enum EngineCmd {
     Shutdown,
 }
 
+/// Channel handles to a spawned engine thread: command sender plus
+/// outcome receiver.
+pub type EngineChannels =
+    (mpsc::Sender<EngineCmd>, mpsc::Receiver<Result<Vec<StepOutcome>, String>>);
+
+/// Engine-thread main loop, shared by every channel-driven executor
+/// backend ([`spawn_engine`], [`spawn_mock_engine`]). The channel
+/// decouples the coordinator from the executor, which is what lets the
+/// coordinator submit batch *k+1* while batch *k*'s results are still in
+/// flight — the step-level face of the plan pipeline (DESIGN.md §9).
+fn run_engine_loop<E: StepExecutor>(
+    mut engine: E,
+    cmd_rx: &mpsc::Receiver<EngineCmd>,
+    res_tx: &mpsc::Sender<Result<Vec<StepOutcome>, String>>,
+) {
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            EngineCmd::Register { req, prompt } => engine.register(req, prompt),
+            EngineCmd::Run(batch) => {
+                let outcomes = engine.execute(&batch);
+                if res_tx.send(Ok(outcomes)).is_err() {
+                    break;
+                }
+            }
+            EngineCmd::Finish { req } => engine.finish_request(req),
+            EngineCmd::Shutdown => break,
+        }
+    }
+}
+
 /// Spawn the PJRT engine on its own thread. Returns command sender and
 /// outcome receiver. The engine compiles artifacts at startup (blocking
 /// until ready; an `Err` is reported through the result channel).
-pub fn spawn_engine(
-    artifact_dir: String,
-) -> (mpsc::Sender<EngineCmd>, mpsc::Receiver<Result<Vec<StepOutcome>, String>>) {
+pub fn spawn_engine(artifact_dir: String) -> EngineChannels {
     let (cmd_tx, cmd_rx) = mpsc::channel::<EngineCmd>();
     let (res_tx, res_rx) = mpsc::channel::<Result<Vec<StepOutcome>, String>>();
     std::thread::spawn(move || {
-        let mut engine = match PjrtEngine::new(&artifact_dir) {
+        let engine = match PjrtEngine::new(&artifact_dir) {
             Ok(e) => {
                 let _ = res_tx.send(Ok(Vec::new())); // ready signal
                 e
@@ -226,19 +262,28 @@ pub fn spawn_engine(
                 return;
             }
         };
-        while let Ok(cmd) = cmd_rx.recv() {
-            match cmd {
-                EngineCmd::Register { req, prompt } => engine.register(req, prompt),
-                EngineCmd::Run(batch) => {
-                    let outcomes = engine.execute(&batch);
-                    if res_tx.send(Ok(outcomes)).is_err() {
-                        break;
-                    }
-                }
-                EngineCmd::Finish { req } => engine.finish_request(req),
-                EngineCmd::Shutdown => break,
-            }
-        }
+        run_engine_loop(engine, &cmd_rx, &res_tx);
+    });
+    (cmd_tx, res_rx)
+}
+
+/// Spawn a [`MockEngine`] behind the same channel protocol as
+/// [`spawn_engine`] (including the ready signal), so coordinator code and
+/// benches exercise the threaded step path without artifacts. Pair it
+/// with a [`SparsityModel`] whose `pipelined` flag is on to model the
+/// async plan pipeline: prefill chunks are then priced at
+/// `max(ident, exec)` — identification off the critical path — exactly as
+/// the scheduler budgets them.
+pub fn spawn_mock_engine(vocab: i32, cost_model: Option<SparsityModel>) -> EngineChannels {
+    let (cmd_tx, cmd_rx) = mpsc::channel::<EngineCmd>();
+    let (res_tx, res_rx) = mpsc::channel::<Result<Vec<StepOutcome>, String>>();
+    std::thread::spawn(move || {
+        let engine = match cost_model {
+            Some(model) => MockEngine::with_cost_model(vocab, model),
+            None => MockEngine::new(vocab),
+        };
+        let _ = res_tx.send(Ok(Vec::new())); // ready signal
+        run_engine_loop(engine, &cmd_rx, &res_tx);
     });
     (cmd_tx, res_rx)
 }
@@ -272,6 +317,7 @@ mod tests {
                     stripe_keep: 0.1,
                     anchor_tokens: 256,
                     plan_hit_rate: hit,
+                    pipelined: false,
                 },
             )
         };
@@ -316,6 +362,69 @@ mod tests {
             _ => panic!(),
         };
         assert!((t_fresh - t1).abs() < 1e-12);
+    }
+
+    /// The pipelined cost model makes mock prefill no slower than the
+    /// sequential one (identification hides behind execution) and never
+    /// cheaper than a fully warm cache (which has no ident work to hide).
+    #[test]
+    fn mock_pipelined_prefill_hides_identification() {
+        let mk = |hit, pipelined| {
+            MockEngine::with_cost_model(
+                64,
+                SparsityModel::Anchor {
+                    stripe_keep: 0.1,
+                    anchor_tokens: 256,
+                    plan_hit_rate: hit,
+                    pipelined,
+                },
+            )
+        };
+        let batch = EngineBatch {
+            iteration: 0,
+            items: vec![WorkItem::Prefill { req: 1, take: 4096 }],
+        };
+        let elapsed = |mut e: MockEngine| match e.execute(&batch)[0] {
+            StepOutcome::PrefillChunk { elapsed_s, .. } => elapsed_s,
+            _ => panic!(),
+        };
+        let seq_cold = elapsed(mk(0.0, false));
+        let pipe_cold = elapsed(mk(0.0, true));
+        let warm = elapsed(mk(1.0, false));
+        assert!(pipe_cold < seq_cold, "pipelined {pipe_cold} vs sequential {seq_cold}");
+        assert!(warm <= pipe_cold + 1e-12, "warm {warm} vs pipelined-cold {pipe_cold}");
+    }
+
+    /// The mock engine speaks the same channel protocol as the PJRT
+    /// engine thread: ready signal, register/run/finish/shutdown.
+    #[test]
+    fn spawn_mock_engine_serves_the_channel_protocol() {
+        let model = SparsityModel::Anchor {
+            stripe_keep: 0.1,
+            anchor_tokens: 256,
+            plan_hit_rate: 0.0,
+            pipelined: true,
+        };
+        let (cmd_tx, res_rx) = spawn_mock_engine(64, Some(model));
+        // Ready signal first.
+        assert!(res_rx.recv().unwrap().unwrap().is_empty());
+        cmd_tx.send(EngineCmd::Register { req: 1, prompt: vec![0; 512] }).unwrap();
+        let batch = EngineBatch {
+            iteration: 0,
+            items: vec![
+                WorkItem::Prefill { req: 1, take: 256 },
+                WorkItem::Decode { req: 2, token: 3 },
+            ],
+        };
+        cmd_tx.send(EngineCmd::Run(batch)).unwrap();
+        let outcomes = res_rx.recv().unwrap().unwrap();
+        assert_eq!(outcomes.len(), 2);
+        assert!(matches!(outcomes[0], StepOutcome::PrefillChunk { req: 1, took: 256, .. }));
+        assert!(matches!(outcomes[1], StepOutcome::Decoded { req: 2, .. }));
+        cmd_tx.send(EngineCmd::Finish { req: 1 }).unwrap();
+        cmd_tx.send(EngineCmd::Shutdown).unwrap();
+        // The engine thread exits: the result channel hangs up.
+        assert!(res_rx.recv().is_err());
     }
 
     #[test]

@@ -36,6 +36,12 @@ pub enum SparsityModel {
         /// `(layer, head_group)` cell reuse identification work); hits
         /// drop the identification term from the chunk cost.
         plan_hit_rate: f64,
+        /// Whether the engine runs the async plan pipeline (DESIGN.md §9).
+        /// When on, identification of chunk *i+1* overlaps execution of
+        /// chunk *i*, so a chunk costs `max(ident, exec)` effective tokens
+        /// instead of `ident + exec`: only the slower stage is on the
+        /// critical path.
+        pipelined: bool,
     },
 }
 
@@ -45,14 +51,24 @@ impl SparsityModel {
     pub fn effective_context(&self, context: usize) -> f64 {
         match *self {
             SparsityModel::Dense => context as f64,
-            SparsityModel::Anchor { stripe_keep, anchor_tokens, plan_hit_rate } => {
+            SparsityModel::Anchor { stripe_keep, anchor_tokens, plan_hit_rate, pipelined } => {
                 let anchored = context.min(anchor_tokens) as f64;
                 let rest = context.saturating_sub(anchor_tokens) as f64;
+                let attn = anchored + stripe_keep * rest;
                 let ident =
                     (1.0 - plan_hit_rate.clamp(0.0, 1.0)) * IDENT_COST_FRAC * context as f64;
-                (anchored + stripe_keep * rest + ident).min(context as f64)
+                // Pipelined: identification overlaps execution, so only the
+                // slower stage sits on the critical path. Sequential: the
+                // stages serialize.
+                let eff = if pipelined { attn.max(ident) } else { attn + ident };
+                eff.min(context as f64)
             }
         }
+    }
+
+    /// Whether the model prices overlapped (pipelined) identification.
+    pub fn is_pipelined(&self) -> bool {
+        matches!(self, SparsityModel::Anchor { pipelined: true, .. })
     }
 
     /// Fold a newly observed plan-cache hit rate into the model (no-op for
@@ -259,7 +275,12 @@ mod tests {
         let dense = plan_iteration(&c, &mut dense_states, &mut pool);
 
         let mut sparse_states = mk();
-        c.sparsity = SparsityModel::Anchor { stripe_keep: 0.08, anchor_tokens: 256, plan_hit_rate: 0.0 };
+        c.sparsity = SparsityModel::Anchor {
+            stripe_keep: 0.08,
+            anchor_tokens: 256,
+            plan_hit_rate: 0.0,
+            pipelined: false,
+        };
         let sparse = plan_iteration(&c, &mut sparse_states, &mut pool);
         assert!(
             sparse.prefill.len() > dense.prefill.len(),
@@ -288,7 +309,12 @@ mod tests {
     fn effective_context_model() {
         let dense = SparsityModel::Dense;
         assert_eq!(dense.effective_context(1000), 1000.0);
-        let anchor = SparsityModel::Anchor { stripe_keep: 0.1, anchor_tokens: 200, plan_hit_rate: 1.0 };
+        let anchor = SparsityModel::Anchor {
+            stripe_keep: 0.1,
+            anchor_tokens: 200,
+            plan_hit_rate: 1.0,
+            pipelined: false,
+        };
         let eff = anchor.effective_context(1000);
         assert!((eff - (200.0 + 0.1 * 800.0)).abs() < 1e-9);
         // Short context: everything anchored.
@@ -304,6 +330,7 @@ mod tests {
             stripe_keep: 0.08,
             anchor_tokens: 256,
             plan_hit_rate: hit,
+            pipelined: false,
         };
         let cold = mk(0.0).effective_context(4096);
         let warm = mk(1.0).effective_context(4096);
@@ -331,12 +358,60 @@ mod tests {
         assert!(run(1.0) > run(0.0), "warm {} vs cold {}", run(1.0), run(0.0));
     }
 
+    /// With the plan pipeline on, identification is priced `max(ident,
+    /// exec)` — overlapped — instead of `ident + exec`, so the same chunk
+    /// is never more expensive pipelined and the scheduler fits at least
+    /// as much prefill per iteration.
+    #[test]
+    fn pipelined_ident_priced_as_max_not_sum() {
+        let mk = |pipelined| SparsityModel::Anchor {
+            stripe_keep: 0.1,
+            anchor_tokens: 256,
+            plan_hit_rate: 0.0,
+            pipelined,
+        };
+        let n = 4096;
+        // attn = 256 + 0.1·3840 = 640; ident = 0.125·4096 = 512.
+        let seq = mk(false).effective_context(n);
+        let pipe = mk(true).effective_context(n);
+        assert!((seq - 1152.0).abs() < 1e-9, "sequential {seq}");
+        assert!((pipe - 640.0).abs() < 1e-9, "pipelined {pipe}");
+
+        // Ident-dominated regime: the overlapped cost is the ident term.
+        let lean = SparsityModel::Anchor {
+            stripe_keep: 0.0,
+            anchor_tokens: 0,
+            plan_hit_rate: 0.0,
+            pipelined: true,
+        };
+        assert!((lean.effective_context(n) - 512.0).abs() < 1e-9);
+
+        // Pipelined cost never exceeds sequential across contexts/hit rates.
+        for ctx in [1usize, 64, 256, 1024, 4096, 65536] {
+            for hit in [0.0, 0.3, 1.0] {
+                let with = |pipelined| SparsityModel::Anchor {
+                    stripe_keep: 0.1,
+                    anchor_tokens: 256,
+                    plan_hit_rate: hit,
+                    pipelined,
+                };
+                assert!(
+                    with(true).effective_context(ctx) <= with(false).effective_context(ctx) + 1e-12,
+                    "ctx {ctx} hit {hit}"
+                );
+            }
+        }
+        assert!(mk(true).is_pipelined() && !mk(false).is_pipelined());
+        assert!(!SparsityModel::Dense.is_pipelined());
+    }
+
     #[test]
     fn observe_plan_hit_rate_is_ema_and_dense_noop() {
         let mut m = SparsityModel::Anchor {
             stripe_keep: 0.1,
             anchor_tokens: 256,
             plan_hit_rate: 0.0,
+            pipelined: false,
         };
         m.observe_plan_hit_rate(1.0);
         match m {

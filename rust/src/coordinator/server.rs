@@ -248,12 +248,48 @@ mod tests {
             run(trace(6, 1500, 2), &cfg)
         };
         let dense = mk(SparsityModel::Dense);
-        let anchor = mk(SparsityModel::Anchor { stripe_keep: 0.08, anchor_tokens: 256, plan_hit_rate: 0.5 });
+        let anchor = mk(SparsityModel::Anchor {
+            stripe_keep: 0.08,
+            anchor_tokens: 256,
+            plan_hit_rate: 0.5,
+            pipelined: false,
+        });
         assert!(
             anchor.iterations <= dense.iterations,
             "anchor {} vs dense {}",
             anchor.iterations,
             dense.iterations
         );
+    }
+
+    /// The pipelined cost model buys headroom: the same trace completes in
+    /// no more iterations than the sequential anchor model (overlapped
+    /// identification frees iteration budget for extra prefill chunks).
+    #[test]
+    fn pipelined_scheduler_no_worse_than_sequential_anchor() {
+        use crate::coordinator::scheduler::SparsityModel;
+        let mk = |pipelined| {
+            let mut cfg = ServerConfig::default();
+            cfg.scheduler.sparsity = SparsityModel::Anchor {
+                stripe_keep: 0.08,
+                anchor_tokens: 256,
+                plan_hit_rate: 0.0,
+                pipelined,
+            };
+            cfg.scheduler.iter_budget = 400.0;
+            cfg.pool_pages = 256;
+            run(trace(6, 1500, 2), &cfg)
+        };
+        let sequential = mk(false);
+        let piped = mk(true);
+        assert!(
+            piped.iterations <= sequential.iterations,
+            "pipelined {} vs sequential {}",
+            piped.iterations,
+            sequential.iterations
+        );
+        // The mock engine's busy time reflects the cheaper pipelined
+        // chunks too (cost model ↔ engine agreement).
+        assert!(piped.engine_busy_s <= sequential.engine_busy_s + 1e-9);
     }
 }

@@ -11,6 +11,7 @@ use crate::attention::baselines::streaming::StreamingConfig;
 use crate::attention::baselines::vertical_slash::VerticalSlashConfig;
 use crate::attention::plan::{self, BatchInput, PlanCache, PlanKey};
 use crate::attention::{metrics, HeadInput, Method, TileConfig};
+use crate::util::json::Json;
 use crate::workload::qkv::generate;
 use crate::workload::WorkloadProfile;
 
@@ -281,6 +282,36 @@ pub fn to_csv(headers: &[&str], rows: &[Vec<String>]) -> String {
     s
 }
 
+/// Machine-readable bench report: run metadata + per-measurement rows +
+/// run-level summary fields. CI bench gates diff these across modes
+/// (e.g. sequential vs pipelined `fig2_speedup`), so keys must stay
+/// stable and latency/overlap fields must be numbers, not formatted
+/// strings.
+pub fn bench_report_json(
+    experiment: &str,
+    mode: &str,
+    seed: u64,
+    rows: Vec<Json>,
+    summary: Vec<(&str, Json)>,
+) -> Json {
+    let mut pairs = vec![
+        ("experiment", Json::str(experiment)),
+        ("mode", Json::str(mode)),
+        ("seed", Json::num(seed as f64)),
+        ("threads", Json::num(crate::util::threadpool::num_threads() as f64)),
+        ("rows", Json::Arr(rows)),
+    ];
+    pairs.extend(summary);
+    Json::obj(pairs)
+}
+
+/// Write a pretty-printed JSON report under `reports/`.
+pub fn write_json_report(name: &str, report: &Json) -> std::io::Result<std::path::PathBuf> {
+    let mut contents = report.to_string_pretty();
+    contents.push('\n');
+    crate::util::write_report(name, &contents)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -330,6 +361,34 @@ mod tests {
     fn csv_shape() {
         let csv = to_csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
         assert_eq!(csv, "a,b\n1,2\n");
+    }
+
+    /// The bench JSON keys the CI gate reads must round-trip as numbers.
+    #[test]
+    fn bench_report_json_shape() {
+        let row = Json::obj(vec![
+            ("method", Json::str("anchor")),
+            ("latency_ms", Json::num(1.5)),
+            ("overlap_efficiency", Json::num(0.5)),
+        ]);
+        let rep = bench_report_json(
+            "fig2_speedup",
+            "pipelined",
+            42,
+            vec![row],
+            vec![
+                ("total_latency_ms", Json::num(1.5)),
+                ("max_overlap_efficiency", Json::num(0.5)),
+            ],
+        );
+        let parsed = Json::parse(&rep.to_string()).unwrap();
+        assert_eq!(parsed.get("experiment").as_str(), Some("fig2_speedup"));
+        assert_eq!(parsed.get("mode").as_str(), Some("pipelined"));
+        assert_eq!(parsed.get("seed").as_usize(), Some(42));
+        assert!(parsed.get("threads").as_usize().unwrap() >= 1);
+        assert_eq!(parsed.get("rows").idx(0).get("method").as_str(), Some("anchor"));
+        assert_eq!(parsed.get("total_latency_ms").as_f64(), Some(1.5));
+        assert_eq!(parsed.get("max_overlap_efficiency").as_f64(), Some(0.5));
     }
 
     #[test]

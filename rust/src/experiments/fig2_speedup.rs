@@ -5,13 +5,21 @@
 //! 128k. The engine measures relative wallclock at N ≤ 32k over a
 //! **multi-head GQA batch** executed head-parallel through the plan
 //! pipeline, reporting the plan-cache hit rate alongside latency (heads of
-//! one group share Q/K, so identification work is reused — §3.2). The cost
-//! model translates plan-coverage sparsity to A100-time at 64k/128k; no
-//! attention is executed for the projection.
+//! one group share Q/K, so identification work is reused — §3.2). With
+//! [`Fig2Options::pipeline`] the batch runs through the async plan
+//! pipeline instead — identification of head *i+1* overlaps execution of
+//! head *i* — and each row additionally reports **overlap efficiency**
+//! (identification wall time hidden behind execution / total). Both modes
+//! emit `reports/fig2_speedup_<mode>.json`, which the CI bench gate diffs
+//! (pipelined latency must not regress vs sequential, overlap must be
+//! nonzero). The cost model translates plan-coverage sparsity to
+//! A100-time at 64k/128k; no attention is executed for the projection.
 
 use super::common::{self, ExpScale};
+use crate::attention::pipeline::{PipelineStats, PlanPipeline};
 use crate::attention::plan::PlanCache;
 use crate::simulator::a100::A100Model;
+use crate::util::json::Json;
 use crate::util::{fmt_len, write_report};
 use crate::workload::qkv::generate;
 
@@ -19,56 +27,115 @@ use crate::workload::qkv::generate;
 const BATCH_HEADS: usize = 4;
 const GROUP_SIZE: usize = 2;
 
+/// Measurement-mode knobs (CLI: `--pipeline`, `--iters`, `--lengths`).
+#[derive(Clone, Debug, Default)]
+pub struct Fig2Options {
+    /// Run the batch through the async plan pipeline instead of the
+    /// sequential plan-then-execute path.
+    pub pipeline: bool,
+    /// Override the per-point repeat count (best-of-N; default 1 quick /
+    /// 2 full). CI uses 3 to stabilize the regression gate.
+    pub iters: Option<usize>,
+    /// Override the length grid (default [`ExpScale::lengths`]).
+    pub lengths: Option<Vec<usize>>,
+}
+
 pub fn run(scale: ExpScale, seed: u64) -> Vec<Vec<String>> {
+    run_with(scale, seed, &Fig2Options::default())
+}
+
+pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<String>> {
     let tile = scale.tile();
     let profile = common::default_profile();
     let a100 = A100Model::default();
-    let iters = if scale == ExpScale::Quick { 1 } else { 2 };
+    let iters = opts.iters.unwrap_or(if scale == ExpScale::Quick { 1 } else { 2 });
+    let lengths = opts.lengths.clone().unwrap_or_else(|| scale.lengths());
+    let mode = if opts.pipeline { "pipelined" } else { "sequential" };
+    let pipe = PlanPipeline::default();
 
     println!(
         "\n=== Fig. 2: speedup over FlashAttention \
-         (batched [{BATCH_HEADS}, N, d] wallclock, head-parallel) ==="
+         (batched [{BATCH_HEADS}, N, d] wallclock, head-parallel, {mode}) ==="
     );
     let mut rows = Vec::new();
-    for n in scale.lengths() {
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut total_latency_ms = 0.0f64;
+    let mut max_overlap = 0.0f64;
+    for &n in &lengths {
         let batch = common::gqa_batch(&profile, n, BATCH_HEADS, GROUP_SIZE, seed);
         let keys = common::gqa_keys(0, BATCH_HEADS, GROUP_SIZE);
         let methods = common::paper_methods(n, tile, 12.0);
-        let measure = |m: &crate::attention::Method| -> (f64, f64) {
+        // Best-of-`iters` wallclock for one method over the whole batch;
+        // hit rate and overlap stats come from the fastest repeat.
+        let measure = |m: &crate::attention::Method| -> (f64, f64, PipelineStats) {
             let mut best = f64::INFINITY;
             let mut hit_rate = 0.0;
+            let mut stats = PipelineStats::default();
             for _ in 0..iters.max(1) {
                 let cache = PlanCache::new();
                 let t0 = std::time::Instant::now();
-                let out = m.run_batch_cached(&batch, &cache, &keys);
-                let dt = t0.elapsed().as_secs_f64();
-                crate::util::timer::black_box(out.outputs[0].out.data[0]);
-                best = best.min(dt);
-                hit_rate = out.hit_rate();
+                let (hr, st) = if opts.pipeline {
+                    let out = m
+                        .run_batch_cached_pipelined(&batch, &cache, &keys, &pipe)
+                        .expect("pipelined batch failed");
+                    let dt = t0.elapsed().as_secs_f64();
+                    crate::util::timer::black_box(out.batch.outputs[0].out.data[0]);
+                    if dt < best {
+                        best = dt;
+                    } else {
+                        continue;
+                    }
+                    (out.batch.hit_rate(), out.stats)
+                } else {
+                    let out = m.run_batch_cached(&batch, &cache, &keys);
+                    let dt = t0.elapsed().as_secs_f64();
+                    crate::util::timer::black_box(out.outputs[0].out.data[0]);
+                    if dt < best {
+                        best = dt;
+                    } else {
+                        continue;
+                    }
+                    (out.hit_rate(), PipelineStats::default())
+                };
+                hit_rate = hr;
+                stats = st;
             }
-            (best, hit_rate)
+            (best, hit_rate, stats)
         };
-        let (t_full, _) = measure(&methods[0]);
+        let (t_full, full_hits, full_stats) = measure(&methods[0]);
+        let mut record =
+            |name: &str, t: f64, hit_rate: f64, stats: &PipelineStats, speedup: f64| {
+                let overlap = stats.overlap_efficiency();
+                total_latency_ms += t * 1e3;
+                max_overlap = max_overlap.max(overlap);
+                rows.push(vec![
+                    fmt_len(n),
+                    name.to_string(),
+                    format!("{:.2}", t * 1e3),
+                    format!("{speedup:.2}x"),
+                    crate::util::pct(hit_rate),
+                    crate::util::pct(overlap),
+                ]);
+                json_rows.push(Json::obj(vec![
+                    ("length", Json::num(n as f64)),
+                    ("method", Json::str(name)),
+                    ("latency_ms", Json::num(t * 1e3)),
+                    ("speedup", Json::num(speedup)),
+                    ("plan_hit_rate", Json::num(hit_rate)),
+                    ("overlap_efficiency", Json::num(overlap)),
+                    ("ident_total_ms", Json::num(stats.ident_total_s * 1e3)),
+                    ("ident_hidden_ms", Json::num(stats.ident_hidden_s * 1e3)),
+                    ("stall_ms", Json::num(stats.stall_s * 1e3)),
+                ]));
+            };
         for m in &methods[1..] {
-            let (t, hit_rate) = measure(m);
-            rows.push(vec![
-                fmt_len(n),
-                m.name().to_string(),
-                format!("{:.2}", t * 1e3),
-                format!("{:.2}x", t_full / t),
-                crate::util::pct(hit_rate),
-            ]);
+            let (t, hit_rate, stats) = measure(m);
+            record(m.name(), t, hit_rate, &stats, t_full / t);
         }
-        rows.push(vec![
-            fmt_len(n),
-            "full-attn".into(),
-            format!("{:.2}", t_full * 1e3),
-            "1.00x".into(),
-            crate::util::pct(0.0),
-        ]);
+        record("full-attn", t_full, full_hits, &full_stats, 1.0);
     }
     common::print_table(
-        &["length", "method", "latency_ms", "speedup", "plan_hits"],
+        &["length", "method", "latency_ms", "speedup", "plan_hits", "overlap"],
         &rows,
     );
 
@@ -80,7 +147,7 @@ pub fn run(scale: ExpScale, seed: u64) -> Vec<Vec<String>> {
     // Sparsity is read from each method's SparsePlan — identification only,
     // no attention executed.
     println!("\n--- A100 cost-model projection (paper regime) ---");
-    let n_ref = *scale.lengths().last().unwrap();
+    let n_ref = *lengths.last().unwrap();
     let wl = generate(&profile, n_ref, seed);
     let mut proj_rows = Vec::new();
     let methods = common::paper_methods(n_ref, tile, 12.0);
@@ -142,13 +209,33 @@ pub fn run(scale: ExpScale, seed: u64) -> Vec<Vec<String>> {
         &proj_rows,
     );
 
+    let report = common::bench_report_json(
+        "fig2_speedup",
+        mode,
+        seed,
+        json_rows,
+        vec![
+            ("heads", Json::num(BATCH_HEADS as f64)),
+            ("group_size", Json::num(GROUP_SIZE as f64)),
+            ("lengths", Json::arr(lengths.iter().map(|&n| Json::num(n as f64)))),
+            ("iters", Json::num(iters as f64)),
+            ("total_latency_ms", Json::num(total_latency_ms)),
+            ("max_overlap_efficiency", Json::num(max_overlap)),
+        ],
+    );
+    // Mode-specific filename: the CI bench job runs both modes in one
+    // checkout and diffs the two files.
+    let _ = common::write_json_report(&format!("fig2_speedup_{mode}.json"), &report);
+
     let mut all = rows.clone();
     all.extend(proj_rows);
     let csv = common::to_csv(
-        &["length", "method", "latency_ms", "speedup", "plan_hits"],
+        &["length", "method", "latency_ms", "speedup", "plan_hits", "overlap"],
         &rows,
     );
-    let _ = write_report("fig2_speedup.csv", &csv);
+    // Mode-suffixed like the JSON so a sequential-then-pipelined run in
+    // one checkout keeps both measurement sets.
+    let _ = write_report(&format!("fig2_speedup_{mode}.csv"), &csv);
     all
 }
 
@@ -167,8 +254,31 @@ mod tests {
         // GROUP_SIZE = 2 the sparse methods replan once per group, so some
         // row must report a nonzero hit rate.
         assert!(
-            rows.iter().any(|r| r.len() == 5 && r[4] != "0.0%" && r[4].ends_with('%')),
+            rows.iter().any(|r| r.len() == 6 && r[4] != "0.0%" && r[4].ends_with('%')),
             "no plan-cache hits reported"
         );
+    }
+
+    /// Pipelined mode produces the full method set, reports an overlap
+    /// column, and emits the JSON keys the CI gate reads.
+    #[test]
+    fn pipelined_mode_reports_overlap() {
+        let opts = Fig2Options {
+            pipeline: true,
+            iters: Some(1),
+            lengths: Some(vec![1024, 2048]),
+        };
+        let rows = run_with(ExpScale::Quick, 7, &opts);
+        assert!(rows.iter().any(|r| r[1] == "anchor"));
+        // Measured rows have an overlap column formatted as a percentage.
+        assert!(rows.iter().any(|r| r.len() == 6 && r[5].ends_with('%')));
+        let report = std::fs::read_to_string("reports/fig2_speedup_pipelined.json").unwrap();
+        let j = Json::parse(&report).unwrap();
+        assert_eq!(j.get("mode").as_str(), Some("pipelined"));
+        assert!(j.get("total_latency_ms").as_f64().unwrap() > 0.0);
+        let oe = j.get("max_overlap_efficiency").as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&oe), "overlap efficiency {oe}");
+        assert!(j.get("rows").idx(0).get("latency_ms").as_f64().is_some());
+        assert!(j.get("rows").idx(0).get("overlap_efficiency").as_f64().is_some());
     }
 }

@@ -5,6 +5,8 @@
 //!   serve       [--config F]      serve a synthetic trace over PJRT
 //!   bench <exp> [--quick]         run one experiment driver
 //!                                 (fig2|tab1|fig4|fig5|fig6|fig7|tab2|tab3|tab4|all)
+//!                                 fig2 extras: --pipeline (overlap ident with
+//!                                 execution), --iters N, --lengths a,b,c
 //!   dominance   [--n N]           Fig. 5 measurement at arbitrary length
 //!   tpu-estimate                  L1 VMEM/MXU block-shape table
 //!   gen-trace   [--rate R]        print a synthetic serving trace
@@ -76,8 +78,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.trace.rate = args.f64_or("rate", cfg.trace.rate)?;
     cfg.trace.num_requests = args.usize_or("requests", cfg.trace.num_requests)?;
     if args.has("anchor-sched") {
-        cfg.server.scheduler.sparsity =
-            SparsityModel::Anchor { stripe_keep: 0.1, anchor_tokens: 256, plan_hit_rate: 0.0 };
+        cfg.server.scheduler.sparsity = SparsityModel::Anchor {
+            stripe_keep: 0.1,
+            anchor_tokens: 256,
+            plan_hit_rate: 0.0,
+            // `--pipeline` prices identification as overlapped with
+            // execution (the async plan pipeline, DESIGN.md §9).
+            pipelined: args.bool_or("pipeline", false)?,
+        };
     }
 
     println!("loading engine from {} …", cfg.artifact_dir);
@@ -109,8 +117,19 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let scale = ExpScale::from_quick_flag(args.bool_or("quick", false)?);
     let seed = args.u64_or("seed", 42)?;
     let which = args.positional().get(1).map(|s| s.as_str()).unwrap_or("all");
+    // fig2-only knobs: `--pipeline` overlaps identification with execution,
+    // `--iters N` / `--lengths a,b,c` pin the measurement grid (CI bench).
+    let lengths = args.usize_list_or("lengths", &[])?;
+    let fig2_opts = experiments::fig2_speedup::Fig2Options {
+        pipeline: args.bool_or("pipeline", false)?,
+        iters: match args.get("iters") {
+            Some(_) => Some(args.usize_or("iters", 1)?),
+            None => None,
+        },
+        lengths: if lengths.is_empty() { None } else { Some(lengths) },
+    };
     let run_one = |name: &str| match name {
-        "fig2" => drop(experiments::fig2_speedup::run(scale, seed)),
+        "fig2" => drop(experiments::fig2_speedup::run_with(scale, seed, &fig2_opts)),
         "tab1" => drop(experiments::tab1_granularity::run(scale, seed)),
         "fig4" => drop(experiments::fig4_strategies::run(scale, seed)),
         "fig5" => drop(experiments::fig5_dominance::run(scale, seed)),

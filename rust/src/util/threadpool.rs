@@ -4,8 +4,17 @@
 //! these helpers give a simple `parallel_for` with static chunking plus an
 //! atomic work-stealing variant for irregular workloads (sparse attention
 //! rows have very different costs).
+//!
+//! [`OrderedBoundedQueue`] is the substrate of the plan pipeline
+//! (DESIGN.md §9): producer workers compute items ahead of a single
+//! consumer through a bounded reorder buffer, results delivered in
+//! submission order regardless of worker timing, with a poison protocol
+//! ([`PoisonOnDrop`]) so a dead worker surfaces an error instead of
+//! deadlocking the consumer.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 
 /// Number of worker threads to use: `ANCHOR_ATTN_THREADS` env override, else
 /// available parallelism, else 4.
@@ -95,6 +104,147 @@ struct SendPtr<T>(*mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
+/// Human-readable message from a caught worker panic payload.
+pub fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        format!("worker panicked: {s}")
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        format!("worker panicked: {s}")
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// Bounded, order-preserving hand-off between producer workers and one
+/// consumer over `n` indexed items.
+///
+/// Invariants:
+/// * **Lookahead bound** — [`OrderedBoundedQueue::claim`] hands out item
+///   `i` only once `i < popped + depth`, so at most `depth` items are
+///   in flight (computing or queued) ahead of the consumer.
+/// * **Deterministic ordering** — [`OrderedBoundedQueue::pop`] yields items
+///   strictly in submission (index) order regardless of which worker
+///   finishes first.
+/// * **No deadlock on failure** — [`OrderedBoundedQueue::poison`] wakes
+///   every blocked producer and the consumer; `pop` then reports the error.
+pub struct OrderedBoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    /// Producers wait here for lookahead space; poisoning also signals it.
+    space: Condvar,
+    /// The consumer waits here for the next in-order item.
+    ready: Condvar,
+    n: usize,
+    depth: usize,
+}
+
+struct QueueState<T> {
+    /// Next item index a producer will claim.
+    next_claim: usize,
+    /// Next item index the consumer will pop.
+    next_pop: usize,
+    /// Out-of-order landed results awaiting their turn (≤ depth entries).
+    slots: HashMap<usize, T>,
+    poisoned: Option<String>,
+}
+
+impl<T> OrderedBoundedQueue<T> {
+    pub fn new(n: usize, depth: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                next_claim: 0,
+                next_pop: 0,
+                slots: HashMap::new(),
+                poisoned: None,
+            }),
+            space: Condvar::new(),
+            ready: Condvar::new(),
+            n,
+            depth: depth.max(1),
+        }
+    }
+
+    /// Claim the next work index, blocking while the pipeline is `depth`
+    /// items ahead of the consumer. `None` once all work is claimed or the
+    /// queue is poisoned.
+    pub fn claim(&self) -> Option<usize> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.poisoned.is_some() || st.next_claim >= self.n {
+                return None;
+            }
+            if st.next_claim < st.next_pop + self.depth {
+                let i = st.next_claim;
+                st.next_claim += 1;
+                return Some(i);
+            }
+            st = self.space.wait(st).unwrap();
+        }
+    }
+
+    /// Deliver the result for a claimed index. Never blocks: claims are
+    /// already lookahead-bounded, so there is always a slot.
+    pub fn push(&self, i: usize, value: T) {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned.is_some() {
+            return;
+        }
+        debug_assert!(i >= st.next_pop && i < st.next_pop + self.depth, "unclaimed index {i}");
+        st.slots.insert(i, value);
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    /// Take the next result in submission order, blocking until it lands.
+    /// `Ok(None)` once every item has been popped; `Err` if poisoned.
+    pub fn pop(&self) -> Result<Option<(usize, T)>, String> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(msg) = &st.poisoned {
+                return Err(msg.clone());
+            }
+            if st.next_pop >= self.n {
+                return Ok(None);
+            }
+            let i = st.next_pop;
+            if let Some(v) = st.slots.remove(&i) {
+                st.next_pop += 1;
+                drop(st);
+                self.space.notify_all();
+                return Ok(Some((i, v)));
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Mark the queue failed (first message wins): blocked producers and
+    /// the consumer wake and bail instead of deadlocking.
+    pub fn poison(&self, msg: String) {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned.is_none() {
+            st.poisoned = Some(msg);
+        }
+        drop(st);
+        self.space.notify_all();
+        self.ready.notify_all();
+    }
+}
+
+/// Guard that poisons `queue` on drop unless disarmed — keeps producer
+/// workers from deadlocking in [`OrderedBoundedQueue::claim`] when the
+/// consumer unwinds mid-pipeline.
+pub struct PoisonOnDrop<'a, T> {
+    pub queue: &'a OrderedBoundedQueue<T>,
+    pub armed: bool,
+}
+
+impl<T> Drop for PoisonOnDrop<'_, T> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.queue.poison("pipeline consumer aborted".to_string());
+        }
+    }
+}
+
 /// Split a mutable slice into `n` disjoint equal-ish pieces and process them
 /// in parallel — the common "each thread owns an output shard" pattern.
 pub fn parallel_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
@@ -177,5 +327,141 @@ mod tests {
         ran |= true;
         assert!(ran);
         assert_eq!(parallel_map(0, |i| i), Vec::<usize>::new());
+    }
+
+    /// `BatchInput` execution and the plan pipeline rely on
+    /// `parallel_map` slotting every result at its own index. Items here
+    /// deliberately finish out of submission order (early indices sleep),
+    /// so any hand-out/ordering bug would scramble the slots.
+    #[test]
+    fn parallel_map_index_stable_under_contention() {
+        let n = 96;
+        let v = parallel_map(n, |i| {
+            if i % 16 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            } else if i % 3 == 0 {
+                std::thread::yield_now();
+            }
+            i * 31 + 7
+        });
+        assert_eq!(v.len(), n);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * 31 + 7, "slot {i} holds another item's result");
+        }
+    }
+
+    /// Results pop in submission order even when producers deliberately
+    /// finish out of order.
+    #[test]
+    fn ordered_queue_delivers_in_submission_order_under_jitter() {
+        let queue: OrderedBoundedQueue<usize> = OrderedBoundedQueue::new(33, 2);
+        let mut out = Vec::new();
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    while let Some(i) = queue.claim() {
+                        if i % 5 == 0 {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        queue.push(i, i * 2);
+                    }
+                });
+            }
+            while let Ok(Some((i, v))) = queue.pop() {
+                out.push((i, v));
+            }
+        });
+        assert_eq!(out.len(), 33);
+        for (k, &(i, v)) in out.iter().enumerate() {
+            assert_eq!(k, i, "popped out of submission order");
+            assert_eq!(v, i * 2);
+        }
+    }
+
+    /// Producers never claim more than `depth` items ahead of the
+    /// consumer (the two-slot bound the plan pipeline advertises).
+    /// Violations poison the queue (panicking in a worker would deadlock
+    /// the blocked consumer instead of failing the test).
+    #[test]
+    fn ordered_queue_bounds_lookahead() {
+        let depth = 2;
+        let queue: OrderedBoundedQueue<usize> = OrderedBoundedQueue::new(64, depth);
+        let consumed = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    while let Some(i) = queue.claim() {
+                        // `next_pop` is at most consumed+1 (the item being
+                        // handed over), so a claim obeys i <= consumed + depth.
+                        let c = consumed.load(Ordering::SeqCst);
+                        if i > c + depth {
+                            queue.poison(format!("item {i} claimed at {c} consumed"));
+                            break;
+                        }
+                        queue.push(i, i);
+                    }
+                });
+            }
+            loop {
+                match queue.pop() {
+                    Ok(Some(_)) => {
+                        consumed.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Ok(None) => break,
+                    Err(msg) => panic!("lookahead bound violated: {msg}"),
+                }
+            }
+        });
+        assert_eq!(consumed.load(Ordering::SeqCst), 64);
+    }
+
+    /// Poisoning wakes both sides: the consumer gets the message instead
+    /// of blocking forever, and blocked producers drain out via `claim`.
+    #[test]
+    fn poisoned_queue_unblocks_consumer_and_producers() {
+        let queue: OrderedBoundedQueue<usize> = OrderedBoundedQueue::new(8, 2);
+        let mut popped = 0usize;
+        let mut err = None;
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    while let Some(i) = queue.claim() {
+                        if i == 3 {
+                            queue.poison(format!("producer exploded on item {i}"));
+                            break;
+                        }
+                        queue.push(i, i);
+                    }
+                });
+            }
+            loop {
+                match queue.pop() {
+                    Ok(Some(_)) => popped += 1,
+                    Ok(None) => break,
+                    Err(msg) => {
+                        err = Some(msg);
+                        break;
+                    }
+                }
+            }
+        });
+        let msg = err.expect("consumer must observe the poison");
+        assert!(msg.contains("producer exploded"), "{msg}");
+        assert!(popped <= 3, "popped {popped} items past the failure");
+    }
+
+    #[test]
+    fn empty_queue_finishes_immediately() {
+        let queue: OrderedBoundedQueue<usize> = OrderedBoundedQueue::new(0, 2);
+        assert_eq!(queue.claim(), None);
+        assert!(matches!(queue.pop(), Ok(None)));
+    }
+
+    #[test]
+    fn panic_message_extracts_payload() {
+        let e = std::panic::catch_unwind(|| panic!("boom {}", 7)).unwrap_err();
+        assert_eq!(panic_message(&*e), "worker panicked: boom 7");
+        let e = std::panic::catch_unwind(|| panic!("static boom")).unwrap_err();
+        assert_eq!(panic_message(&*e), "worker panicked: static boom");
     }
 }

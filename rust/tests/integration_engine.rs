@@ -99,11 +99,28 @@ fn anchor_scheduler_no_worse_than_dense() {
         serve(&cfg, mk_requests(), &mut engine, |_, _| {}).unwrap()
     };
     let dense = run(SparsityModel::Dense);
-    let anchor = run(SparsityModel::Anchor { stripe_keep: 0.08, anchor_tokens: 256, plan_hit_rate: 0.5 });
+    let anchor = run(SparsityModel::Anchor {
+        stripe_keep: 0.08,
+        anchor_tokens: 256,
+        plan_hit_rate: 0.5,
+        pipelined: false,
+    });
+    let piped = run(SparsityModel::Anchor {
+        stripe_keep: 0.08,
+        anchor_tokens: 256,
+        plan_hit_rate: 0.5,
+        pipelined: true,
+    });
     assert!(
         anchor.iterations <= dense.iterations,
         "anchor {} vs dense {}",
         anchor.iterations,
         dense.iterations
+    );
+    assert!(
+        piped.iterations <= anchor.iterations,
+        "pipelined {} vs sequential {}",
+        piped.iterations,
+        anchor.iterations
     );
 }

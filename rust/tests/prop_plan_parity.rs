@@ -10,8 +10,15 @@
 //!   measured tally.
 //! * **Batch ≡ single** — the head-parallel batched path reproduces the
 //!   per-head path bit-for-bit on outputs.
+//! * **Pipelined ≡ sequential** — the async plan pipeline (planners for
+//!   head *i+1* overlapped with execution of head *i* through the bounded
+//!   plan queue) is bitwise-identical to the sequential planner→executor
+//!   path for every method, including cache-hit accounting, and a
+//!   panicked planner worker surfaces an error instead of deadlocking.
 
 use anchor_attention::attention::anchor::AnchorConfig;
+use anchor_attention::attention::pipeline::{run_planner_batch_pipelined, PlanPipeline};
+use anchor_attention::attention::plan::{PlanCache, PlanKey, Planner, SparsePlan};
 use anchor_attention::attention::baselines::block_topk::BlockTopKConfig;
 use anchor_attention::attention::baselines::flexprefill::FlexPrefillConfig;
 use anchor_attention::attention::baselines::streaming::StreamingConfig;
@@ -201,6 +208,126 @@ fn prop_batch_path_matches_single_head_path() {
             Ok(())
         },
     );
+}
+
+/// Pipelined execution is bitwise-identical to the sequential
+/// planner→executor path — outputs, costs, and hit accounting — for every
+/// method, uncached and cached (deterministic sweep over all six, then a
+/// randomized property over shapes/params).
+#[test]
+fn pipelined_execution_bitwise_equals_sequential_for_all_six_methods() {
+    let mut rng = Pcg64::seeded(0xA57C);
+    let heads: Vec<HeadInput> = (0..4).map(|_| rand_head(&mut rng, 128, 8)).collect();
+    let batch = BatchInput::new(heads);
+    let keys = vec![
+        PlanKey::new(0, 0),
+        PlanKey::new(0, 0),
+        PlanKey::new(0, 1),
+        PlanKey::new(0, 1),
+    ];
+    let pipe = PlanPipeline::default();
+    for method_idx in 0..6 {
+        let c = ParityCase { seed: 2, n: 128, d: 8, method_idx, theta: 3.0, step: 2 };
+        let m = method_for(&c);
+
+        let seq = m.run_batch(&batch);
+        let piped = m.run_batch_pipelined(&batch, &pipe).unwrap_or_else(|e| {
+            panic!("{}: pipelined run failed: {e}", m.name());
+        });
+        assert_eq!(
+            (seq.cache_hits, seq.cache_misses),
+            (piped.batch.cache_hits, piped.batch.cache_misses),
+            "{}: uncached accounting",
+            m.name()
+        );
+        for (h, (a, b)) in seq.outputs.iter().zip(&piped.batch.outputs).enumerate() {
+            assert_eq!(a.out.data, b.out.data, "{} head {h}: output not bitwise-equal", m.name());
+            assert_eq!(a.cost, b.cost, "{} head {h}: cost differs", m.name());
+            assert_eq!(
+                a.coverage.total_covered(),
+                b.coverage.total_covered(),
+                "{} head {h}: coverage differs",
+                m.name()
+            );
+        }
+
+        let cache_seq = PlanCache::new();
+        let cache_pipe = PlanCache::new();
+        let seq_c = m.run_batch_cached(&batch, &cache_seq, &keys);
+        let piped_c = m
+            .run_batch_cached_pipelined(&batch, &cache_pipe, &keys, &pipe)
+            .unwrap_or_else(|e| panic!("{}: cached pipelined run failed: {e}", m.name()));
+        assert_eq!(
+            (seq_c.cache_hits, seq_c.cache_misses),
+            (piped_c.batch.cache_hits, piped_c.batch.cache_misses),
+            "{}: cached accounting",
+            m.name()
+        );
+        for (h, (a, b)) in seq_c.outputs.iter().zip(&piped_c.batch.outputs).enumerate() {
+            assert_eq!(
+                a.out.data, b.out.data,
+                "{} head {h}: cached output not bitwise-equal",
+                m.name()
+            );
+            assert_eq!(a.cost, b.cost, "{} head {h}: cached cost differs", m.name());
+        }
+    }
+}
+
+/// Randomized pipelined-vs-sequential parity across shapes, params, and
+/// pipeline depths (reuses the parity-case generator).
+#[test]
+fn prop_pipelined_batch_bitwise_equals_sequential() {
+    let cfg = Config::heavy(10, 0x0F1F);
+    check(&cfg, gen_case, shrink_case, |c| {
+        let mut rng = Pcg64::seeded(c.seed);
+        let heads: Vec<HeadInput> = (0..3).map(|_| rand_head(&mut rng, c.n, c.d)).collect();
+        let batch = BatchInput::new(heads);
+        let m = method_for(c);
+        let pipe = PlanPipeline { depth: 1 + (c.seed % 3) as usize, workers: 1 + (c.step % 3) };
+        let seq = m.run_batch(&batch);
+        let piped = m
+            .run_batch_pipelined(&batch, &pipe)
+            .map_err(|e| format!("{}: pipelined run failed: {e}", m.name()))?;
+        for (h, (a, b)) in seq.outputs.iter().zip(&piped.batch.outputs).enumerate() {
+            ensure(
+                a.out.data == b.out.data,
+                format!("{} head {h}: pipelined output not bitwise-equal", m.name()),
+            )?;
+            ensure(a.cost == b.cost, format!("{} head {h}: cost differs", m.name()))?;
+        }
+        ensure(
+            piped.stats.items == batch.h(),
+            format!("{}: expected one plan item per head", m.name()),
+        )
+    });
+}
+
+/// A planner worker that panics must surface its message as an error
+/// instead of deadlocking the bounded plan queue.
+#[test]
+fn poisoned_planner_worker_errors_instead_of_deadlocking() {
+    struct PanicPlanner;
+    impl Planner for PanicPlanner {
+        fn name(&self) -> &'static str {
+            "panic-planner"
+        }
+        fn plan(&self, _input: &HeadInput) -> SparsePlan {
+            panic!("identification worker died");
+        }
+    }
+    let mut rng = Pcg64::seeded(0xDEAD);
+    let heads: Vec<HeadInput> = (0..6).map(|_| rand_head(&mut rng, 64, 8)).collect();
+    let batch = BatchInput::new(heads);
+    for (depth, workers) in [(1, 1), (2, 2), (2, 4)] {
+        let pipe = PlanPipeline { depth, workers };
+        let err = run_planner_batch_pipelined(&PanicPlanner, &batch, None, &pipe)
+            .expect_err("panicking planner must surface an error");
+        assert!(
+            err.contains("identification worker died"),
+            "depth {depth} workers {workers}: {err}"
+        );
+    }
 }
 
 /// Plan coverage is exactly the executed coverage for every method (the
