@@ -11,6 +11,7 @@
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
+use anchor_attention::attention::exec::ExecutorKind;
 use anchor_attention::coordinator::engine::PjrtEngine;
 use anchor_attention::coordinator::request::Request;
 use anchor_attention::coordinator::scheduler::SparsityModel;
@@ -42,6 +43,7 @@ fn main() -> anyhow::Result<()> {
                 anchor_tokens: 256,
                 plan_hit_rate: 0.5,
                 pipelined: false,
+                executor: ExecutorKind::Cpu,
             },
         ),
         (
@@ -51,6 +53,7 @@ fn main() -> anyhow::Result<()> {
                 anchor_tokens: 256,
                 plan_hit_rate: 0.5,
                 pipelined: true,
+                executor: ExecutorKind::Cpu,
             },
         ),
     ] {

@@ -1,0 +1,232 @@
+//! [`CpuTileExecutor`] — the blocked online-softmax tile walk (Alg. 3),
+//! moved here from `attention::plan` when execution was lifted behind the
+//! [`Executor`] trait. This is the reference backend: every other backend
+//! must be bitwise-equal to it.
+//!
+//! Per group the walk gathers the group's discrete K/V columns **once**
+//! (chunked to the kv tile width — §3.4's reuse across the group's `step`
+//! query blocks), then runs one online softmax per query block: anchor
+//! spans as dense tiles clipped to the block's causal limit, then the
+//! gathered stripe chunks with per-row masking at or past the diagonal.
+
+use crate::attention::exec::{Executor, KvSource, PlanLowering};
+use crate::attention::full::{mask_tile_causal, BlockState};
+use crate::attention::plan::SparsePlan;
+use crate::attention::{AttnOutput, CostTally};
+use crate::tensor::{matmul_nt_scaled, Mat};
+use crate::util::threadpool::parallel_map;
+
+/// The multithreaded CPU tile walk.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CpuTileExecutor {
+    /// Run groups on the calling thread only (the former
+    /// `execute_plan_serial`): set by paths whose parallelism already
+    /// lives at a coarser granularity, e.g. head-parallel batching.
+    pub serial: bool,
+}
+
+impl Executor for CpuTileExecutor {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn execute_source(
+        &self,
+        q: &Mat,
+        kv: &dyn KvSource,
+        plan: &SparsePlan,
+        parallel: bool,
+    ) -> AttnOutput {
+        let lowering = PlanLowering::lower(plan);
+        execute_lowered(q, kv, plan, &lowering, parallel && !self.serial)
+    }
+}
+
+/// Execute a lowered plan: the shared host tile kernel. Both backends end
+/// here (the PJRT backend after lowering/validation and, under the offline
+/// stub, in place of the artifact call), which is what makes cross-backend
+/// bitwise parity hold by construction.
+pub(crate) fn execute_lowered(
+    q: &Mat,
+    kv: &dyn KvSource,
+    plan: &SparsePlan,
+    lowering: &PlanLowering<'_>,
+    parallel: bool,
+) -> AttnOutput {
+    let n = q.rows;
+    let d = q.cols;
+    assert_eq!(plan.n, n, "plan built for a different sequence length");
+    assert_eq!(kv.d(), d, "q/kv head dim mismatch");
+    let tile = plan.tile;
+    let groups = plan.groups.len();
+
+    let run_group = |g: usize| fold_group(q, kv, plan, &lowering.stripe_chunks[g], g);
+    let results: Vec<(Vec<f32>, CostTally)> = if parallel {
+        parallel_map(groups, run_group)
+    } else {
+        (0..groups).map(run_group).collect()
+    };
+
+    let mut out = Mat::zeros(n, d);
+    let mut cost = CostTally::default();
+    for (g, (rows_data, c)) in results.into_iter().enumerate() {
+        let row0 = g * plan.step * tile.b_q;
+        out.data[row0 * d..row0 * d + rows_data.len()].copy_from_slice(&rows_data);
+        cost.add(c);
+    }
+    AttnOutput { out, coverage: plan.coverage(), cost }
+}
+
+/// Compute one group's output rows: fold the group's anchor spans as dense
+/// tiles, then the gathered stripe chunks — one online softmax per query
+/// block, K'/V' gathered **once per group** and reused across its `step`
+/// blocks (§3.4's reuse; this is the fine-grained gather substrate every
+/// method runs on).
+fn fold_group(
+    q: &Mat,
+    kv: &dyn KvSource,
+    plan: &SparsePlan,
+    chunks: &[&[u32]],
+    g: usize,
+) -> (Vec<f32>, CostTally) {
+    let n = q.rows;
+    let d = q.cols;
+    let scale = 1.0 / (d as f32).sqrt();
+    let tile = plan.tile;
+    let q_blocks = tile.q_blocks(n);
+    let gp = &plan.groups[g];
+    let qb_start = g * plan.step;
+    let qb_end = ((g + 1) * plan.step).min(q_blocks);
+
+    // Gather the group's discrete K/V columns once, chunked to tile width
+    // so the inner matmuls stay dense (Eq. 4 `load_discrete`).
+    let gathered: Vec<(&[u32], Mat, Mat)> = chunks
+        .iter()
+        .map(|&chunk| {
+            let (k_g, v_g) = kv.gather(chunk);
+            (chunk, k_g, v_g)
+        })
+        .collect();
+
+    let mut group_out = Vec::with_capacity((qb_end - qb_start) * tile.b_q * d);
+    let mut cost = CostTally::default();
+    let mut s = Mat::zeros(tile.b_q, tile.b_kv);
+    for qb in qb_start..qb_end {
+        let row0 = qb * tile.b_q;
+        let rows = (n - row0).min(tile.b_q);
+        let limit = row0 + rows;
+        let q_i = q.rows_mat(row0, rows);
+        let mut st = BlockState::new(rows, d);
+
+        // Anchor spans: contiguous tiles, clipped to the block's causal
+        // limit, diagonal tiles causally masked.
+        for &(span_s, span_e) in &gp.spans {
+            let end = (span_e as usize).min(limit);
+            let mut col0 = span_s as usize;
+            while col0 < end {
+                let cols = (end - col0).min(tile.b_kv);
+                let (k_j, v_j) = kv.span(col0, col0 + cols);
+                if s.cols != cols || s.rows != rows {
+                    s = Mat::zeros(rows, cols);
+                }
+                matmul_nt_scaled(&q_i, &k_j, scale, &mut s);
+                if col0 + cols > row0 {
+                    mask_tile_causal(&mut s, row0, col0);
+                }
+                st.fold_tile(&mut s, &v_j);
+                cost.add(CostTally::attn_tile(rows, cols, d));
+                col0 += cols;
+            }
+        }
+
+        // Stripe chunks: discrete gathers. Chunks entirely before the
+        // block's first row need no masking (the common case — anchor
+        // stripes precede the group window); otherwise mask per row
+        // against the absolute column ids.
+        for (chunk, k_g, v_g) in &gathered {
+            if s.cols != k_g.rows || s.rows != rows {
+                s = Mat::zeros(rows, k_g.rows);
+            }
+            matmul_nt_scaled(&q_i, k_g, scale, &mut s);
+            if chunk.last().is_some_and(|&c| c as usize >= row0) {
+                for r in 0..rows {
+                    let abs_row = row0 + r;
+                    let srow = s.row_mut(r);
+                    for (ci, &col) in chunk.iter().enumerate() {
+                        if col as usize > abs_row {
+                            srow[ci] = f32::NEG_INFINITY;
+                        }
+                    }
+                }
+            }
+            st.fold_tile(&mut s, v_g);
+            cost.add(CostTally::attn_tile(rows, k_g.rows, d));
+        }
+
+        let base = group_out.len();
+        group_out.resize(base + rows * d, 0.0f32);
+        st.write_output(&mut group_out[base..], d);
+    }
+    (group_out, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::plan::{execute_plan, GroupPlan};
+    use crate::attention::{HeadInput, TileConfig};
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn mixed_plan(n: usize, d: usize) -> SparsePlan {
+        let tile = TileConfig::new(16, 16);
+        let q_blocks = tile.q_blocks(n);
+        let step = 2;
+        let groups: Vec<GroupPlan> = (0..q_blocks.div_ceil(step))
+            .map(|g| {
+                let win = (g * step * 16) as u32;
+                let end = ((g + 1) * step * 16).min(n) as u32;
+                if win == 0 {
+                    GroupPlan { spans: vec![(0, end)], stripes: vec![] }
+                } else {
+                    let stripes: Vec<u32> = (16..win).step_by(3).collect();
+                    GroupPlan { spans: vec![(0, 16), (win, end)], stripes }
+                }
+            })
+            .collect();
+        SparsePlan::new("test", n, d, tile, step, groups, CostTally::default())
+    }
+
+    /// The serial knob changes scheduling only: outputs and costs are
+    /// identical to the parallel walk (and to the `execute_plan` wrapper).
+    #[test]
+    fn serial_knob_is_bitwise_identical() {
+        let h = rand_head(91, 160, 8);
+        let plan = mixed_plan(160, 8);
+        let par = CpuTileExecutor::default().execute(&h, &plan);
+        let ser = CpuTileExecutor { serial: true }.execute(&h, &plan);
+        let wrapper = execute_plan(&h, &plan);
+        assert_eq!(par.out.data, ser.out.data);
+        assert_eq!(par.cost, ser.cost);
+        assert_eq!(par.out.data, wrapper.out.data);
+        assert_eq!(par.cost, wrapper.cost);
+    }
+
+    /// Execution cost equals the plan's prediction — cost accounting lives
+    /// in the plan, the backend merely confirms it.
+    #[test]
+    fn cost_matches_plan_prediction() {
+        let h = rand_head(92, 200, 8);
+        let plan = mixed_plan(200, 8);
+        let out = CpuTileExecutor::default().execute(&h, &plan);
+        assert_eq!(out.cost, plan.predicted_cost);
+    }
+}

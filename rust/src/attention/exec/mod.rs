@@ -1,0 +1,253 @@
+//! Executor backends: the compute side of the Planner → [`SparsePlan`] →
+//! Executor pipeline, lifted behind a trait (DESIGN.md §10).
+//!
+//! A plan is pure coordinates, so *what executes it* is a swappable
+//! backend decision — exactly the seam the paper's Fine-grained Sparse
+//! Computation (§3.3, Alg. 3) is shaped around: load the plan's discrete
+//! KV positions simultaneously on whatever hardware is available.
+//! Two backends implement [`Executor`]:
+//!
+//! * [`CpuTileExecutor`] — the multithreaded online-softmax tile walk
+//!   (previously `plan::execute_plan`), the reference semantics.
+//! * [`PjrtGatherExecutor`] — lowers a plan to gather indices plus an
+//!   `attn_sparse` artifact call through the vendored `xla` stub, with
+//!   spec validation against the runtime manifest; under the offline stub
+//!   the lowered program is interpreted on host with arithmetic
+//!   bitwise-identical to the CPU walk.
+//!
+//! Executors read K/V through [`KvSource`] — the paper's Eq. 4 load
+//! primitives (contiguous `span`, discrete `gather`) over whatever memory
+//! holds the keys. [`FlatKv`] serves per-head tensors; the coordinator's
+//! `PagedExecutor` (`coordinator::kv_cache`) serves paged KV memory, so
+//! paged serving executes plans without flattening the cache first.
+//!
+//! Cost accounting deliberately stays in the plan
+//! ([`SparsePlan::predicted_cost`]), not the backend: every backend must
+//! fold exactly the plan's tiles, so the tally is a property of the
+//! coordinates, and the scheduler can price work without asking a backend.
+
+pub mod cpu;
+pub mod pjrt;
+
+use std::sync::Arc;
+
+use crate::attention::plan::{BatchInput, SparsePlan};
+use crate::attention::{AttnOutput, HeadInput};
+use crate::tensor::Mat;
+use crate::util::threadpool::parallel_map;
+
+pub use cpu::CpuTileExecutor;
+pub use pjrt::{validate_sparse_spec, PjrtGatherExecutor, SPARSE_ARTIFACT};
+
+/// K/V read interface for executors: the paper's Eq. 4 load primitives
+/// over whatever memory holds the keys. Implementations must return the
+/// exact stored rows (pure copies) so every backend sees bitwise-identical
+/// operands regardless of the memory layout behind the source.
+pub trait KvSource: Sync {
+    /// Head dim of the stored rows.
+    fn d(&self) -> usize;
+    /// Contiguous rows `[start, end)` as `(K, V)` — an anchor-span read.
+    fn span(&self, start: usize, end: usize) -> (Mat, Mat);
+    /// Discrete rows at `coords` as `(K, V)` — a stripe gather
+    /// (`load_discrete`).
+    fn gather(&self, coords: &[u32]) -> (Mat, Mat);
+}
+
+/// [`KvSource`] over flat per-head `[N, d]` tensors.
+pub struct FlatKv<'a> {
+    pub k: &'a Mat,
+    pub v: &'a Mat,
+}
+
+impl<'a> FlatKv<'a> {
+    pub fn new(k: &'a Mat, v: &'a Mat) -> Self {
+        assert_eq!(k.rows, v.rows, "k/v length");
+        assert_eq!(k.cols, v.cols, "k/v head dim");
+        Self { k, v }
+    }
+}
+
+impl KvSource for FlatKv<'_> {
+    fn d(&self) -> usize {
+        self.k.cols
+    }
+
+    fn span(&self, start: usize, end: usize) -> (Mat, Mat) {
+        (self.k.rows_mat(start, end - start), self.v.rows_mat(start, end - start))
+    }
+
+    fn gather(&self, coords: &[u32]) -> (Mat, Mat) {
+        (self.k.gather_rows(coords), self.v.gather_rows(coords))
+    }
+}
+
+/// A backend that executes [`SparsePlan`]s: exact softmax attention
+/// restricted to the plan's coordinates. Every implementation must be
+/// bitwise-equal to [`CpuTileExecutor`] (the parity property in
+/// `tests/prop_plan_parity.rs`) and must report the execution-only cost
+/// (`plan.predicted_cost`); identification cost is folded in by callers.
+pub trait Executor: Sync + Send {
+    /// Backend identifier (config value, report column).
+    fn name(&self) -> &'static str;
+
+    /// Execute one head's plan with K/V read through `kv`. `parallel`
+    /// lets the backend use spare threadpool workers; the batched entry
+    /// passes `false` because parallelism already lives at head
+    /// granularity there.
+    fn execute_source(
+        &self,
+        q: &Mat,
+        kv: &dyn KvSource,
+        plan: &SparsePlan,
+        parallel: bool,
+    ) -> AttnOutput;
+
+    /// Execute one head's plan against its own flat K/V.
+    fn execute(&self, input: &HeadInput, plan: &SparsePlan) -> AttnOutput {
+        self.execute_source(&input.q, &FlatKv::new(&input.k, &input.v), plan, true)
+    }
+
+    /// Batched entry: execute every head of `batch` against its resolved
+    /// plan. The default parallelizes at head granularity and runs each
+    /// head serially so the pool is not oversubscribed (single-head
+    /// batches keep intra-head parallelism).
+    fn execute_batch(&self, batch: &BatchInput, plans: &[Arc<SparsePlan>]) -> Vec<AttnOutput> {
+        assert_eq!(plans.len(), batch.h(), "one plan per head");
+        let parallel_within = batch.h() == 1;
+        parallel_map(batch.h(), |h| {
+            let head = &batch.heads[h];
+            self.execute_source(
+                &head.q,
+                &FlatKv::new(&head.k, &head.v),
+                &plans[h],
+                parallel_within,
+            )
+        })
+    }
+}
+
+/// Configured executor backend (`"executor": "cpu" | "pjrt"` in config,
+/// `--executor` on the CLI).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecutorKind {
+    #[default]
+    Cpu,
+    Pjrt,
+}
+
+impl ExecutorKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "cpu" => Ok(ExecutorKind::Cpu),
+            "pjrt" => Ok(ExecutorKind::Pjrt),
+            other => Err(anyhow::anyhow!("unknown executor '{other}' (expected cpu|pjrt)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecutorKind::Cpu => "cpu",
+            ExecutorKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Build the backend this kind names.
+    pub fn build(self) -> Box<dyn Executor> {
+        match self {
+            ExecutorKind::Cpu => Box::new(CpuTileExecutor::default()),
+            ExecutorKind::Pjrt => Box::new(PjrtGatherExecutor::new()),
+        }
+    }
+}
+
+/// A [`SparsePlan`] lowered to its gather program: per group, the stripe
+/// coordinates chunked to the kv tile width — the exact tile schedule both
+/// backends fold after the anchor spans, and the indices a gather-based
+/// kernel (`attn_sparse`) loads simultaneously. Chunks borrow the plan's
+/// stripe storage (lowering is slice bookkeeping, not a copy — plans are
+/// `Arc`-shared across a batch's heads, so this runs per execute). Spans
+/// need no lowering; they are read straight from the plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanLowering<'p> {
+    /// `stripe_chunks[g]` = group `g`'s gather chunks, each ≤ `tile.b_kv`
+    /// coordinates, in plan (sorted) order.
+    pub stripe_chunks: Vec<Vec<&'p [u32]>>,
+    /// Total gathered coordinates across groups.
+    pub total_coords: usize,
+}
+
+impl<'p> PlanLowering<'p> {
+    pub fn lower(plan: &'p SparsePlan) -> Self {
+        let b_kv = plan.tile.b_kv;
+        let mut total_coords = 0;
+        let stripe_chunks = plan
+            .groups
+            .iter()
+            .map(|g| {
+                total_coords += g.stripes.len();
+                g.stripes.chunks(b_kv).collect()
+            })
+            .collect();
+        Self { stripe_chunks, total_coords }
+    }
+
+    /// Group `g`'s flat gather indices as the i32 vector an `attn_sparse`
+    /// artifact call takes.
+    pub fn gather_indices(&self, g: usize) -> Vec<i32> {
+        self.stripe_chunks[g].iter().flat_map(|c| c.iter()).map(|&c| c as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::plan::GroupPlan;
+    use crate::attention::{CostTally, TileConfig};
+
+    fn plan_with_stripes(stripes: Vec<u32>) -> SparsePlan {
+        let tile = TileConfig::new(16, 4);
+        let n = 32;
+        let groups = vec![
+            GroupPlan { spans: vec![(0, 16)], stripes: vec![] },
+            GroupPlan { spans: vec![(16, 32)], stripes },
+        ];
+        SparsePlan::new("test", n, 8, tile, 1, groups, CostTally::default())
+    }
+
+    #[test]
+    fn lowering_chunks_to_kv_tile_width() {
+        let plan = plan_with_stripes(vec![0, 1, 2, 3, 4, 5]);
+        let low = PlanLowering::lower(&plan);
+        assert_eq!(low.total_coords, 6);
+        assert!(low.stripe_chunks[0].is_empty());
+        assert_eq!(low.stripe_chunks[1], vec![&[0u32, 1, 2, 3][..], &[4u32, 5][..]]);
+        assert_eq!(low.gather_indices(1), vec![0, 1, 2, 3, 4, 5]);
+        assert!(low.gather_indices(0).is_empty());
+    }
+
+    #[test]
+    fn executor_kind_parses_and_names() {
+        assert_eq!(ExecutorKind::parse("cpu").unwrap(), ExecutorKind::Cpu);
+        assert_eq!(ExecutorKind::parse("pjrt").unwrap(), ExecutorKind::Pjrt);
+        assert!(ExecutorKind::parse("tpu").is_err());
+        assert_eq!(ExecutorKind::Cpu.name(), "cpu");
+        assert_eq!(ExecutorKind::Pjrt.name(), "pjrt");
+        assert_eq!(ExecutorKind::default(), ExecutorKind::Cpu);
+        assert_eq!(ExecutorKind::Cpu.build().name(), "cpu");
+        assert_eq!(ExecutorKind::Pjrt.build().name(), "pjrt");
+    }
+
+    #[test]
+    fn flat_kv_reads_match_tensor_primitives() {
+        let k = Mat::from_fn(8, 4, |r, c| (r * 10 + c) as f32);
+        let v = Mat::from_fn(8, 4, |r, c| (r * 10 + c) as f32 + 0.5);
+        let kv = FlatKv::new(&k, &v);
+        assert_eq!(kv.d(), 4);
+        let (ks, vs) = kv.span(2, 5);
+        assert_eq!(ks, k.rows_mat(2, 3));
+        assert_eq!(vs, v.rows_mat(2, 3));
+        let (kg, vg) = kv.gather(&[1, 6]);
+        assert_eq!(kg, k.gather_rows(&[1, 6]));
+        assert_eq!(vg, v.gather_rows(&[1, 6]));
+    }
+}

@@ -4,21 +4,23 @@
 //! latencies are directly comparable (the paper's A100/Triton testbed is
 //! substituted by this engine — see DESIGN.md §1).
 //!
-//! Architecture (DESIGN.md §2): every method is a [`plan::Planner`] that
-//! identifies a [`plan::SparsePlan`] (coordinates only); one shared
-//! executor ([`plan::execute_plan`]) computes exact softmax attention
-//! restricted to the plan. [`Method::run`] is the thin per-head wrapper;
-//! [`Method::run_batch`] executes a multi-head [`plan::BatchInput`] at
-//! head granularity with optional plan-cache reuse across head groups;
-//! [`Method::run_batch_pipelined`] overlaps identification with execution
-//! through the bounded plan queue ([`pipeline::PlanPipeline`], DESIGN.md
-//! §9) with bitwise-identical results.
+//! Architecture (DESIGN.md §2/§10): every method is a [`plan::Planner`]
+//! that identifies a [`plan::SparsePlan`] (coordinates only); a swappable
+//! executor backend ([`exec::Executor`] — CPU tile walk or PJRT gather)
+//! computes exact softmax attention restricted to the plan. [`Method::run`]
+//! is the thin per-head wrapper; [`Method::run_batch`] executes a
+//! multi-head [`plan::BatchInput`] at head granularity with optional
+//! plan-cache reuse across head groups (`_with` variants take an explicit
+//! backend); [`Method::run_batch_pipelined`] overlaps identification with
+//! execution through the bounded plan queue ([`pipeline::PlanPipeline`],
+//! DESIGN.md §9) with bitwise-identical results.
 //!
 //! Layout convention: row-major `[N, d]` matrices for Q, K, V per head,
 //! causal masking, logits scaled by `1/sqrt(d)`.
 
 pub mod anchor;
 pub mod baselines;
+pub mod exec;
 pub mod full;
 pub mod mask;
 pub mod metrics;
@@ -28,6 +30,7 @@ pub mod strategy;
 
 use crate::tensor::Mat;
 use crate::util::threadpool::parallel_map;
+use exec::{CpuTileExecutor, Executor};
 use plan::{BatchInput, BatchOutput, PlanCache, PlanKey, Planner, SparsePlan};
 use std::sync::Arc;
 
@@ -189,10 +192,20 @@ impl Method {
         plan::run_planner(input, self.planner().as_ref())
     }
 
+    /// As [`Method::run`] on an explicit executor backend.
+    pub fn run_with(&self, input: &HeadInput, executor: &dyn Executor) -> AttnOutput {
+        plan::run_planner_with(input, self.planner().as_ref(), executor)
+    }
+
     /// Run the method on a multi-head batch, parallelizing at head
     /// granularity; each head's plan is built independently.
     pub fn run_batch(&self, batch: &BatchInput) -> BatchOutput {
-        self.run_batch_inner(batch, None)
+        self.run_batch_inner(batch, None, &CpuTileExecutor::default())
+    }
+
+    /// As [`Method::run_batch`] on an explicit executor backend.
+    pub fn run_batch_with(&self, batch: &BatchInput, executor: &dyn Executor) -> BatchOutput {
+        self.run_batch_inner(batch, None, executor)
     }
 
     /// As [`Method::run_batch`] but with a [`PlanCache`]: `keys[h]` names
@@ -206,23 +219,34 @@ impl Method {
         cache: &PlanCache,
         keys: &[PlanKey],
     ) -> BatchOutput {
+        self.run_batch_cached_with(batch, cache, keys, &CpuTileExecutor::default())
+    }
+
+    /// As [`Method::run_batch_cached`] on an explicit executor backend.
+    pub fn run_batch_cached_with(
+        &self,
+        batch: &BatchInput,
+        cache: &PlanCache,
+        keys: &[PlanKey],
+        executor: &dyn Executor,
+    ) -> BatchOutput {
         assert_eq!(keys.len(), batch.h(), "one PlanKey per head");
-        self.run_batch_inner(batch, Some((cache, keys)))
+        self.run_batch_inner(batch, Some((cache, keys)), executor)
     }
 
     /// Two-stage batch execution: first resolve one plan per *distinct*
     /// key (parallel planning, no duplicate identification within the
-    /// batch), then execute every head in parallel against its resolved
-    /// plan. Hit accounting is deterministic: `hits = heads − fresh keys`.
+    /// batch), then hand every head to the executor backend's batched
+    /// entry. Hit accounting is deterministic: `hits = heads − fresh keys`.
     fn run_batch_inner(
         &self,
         batch: &BatchInput,
         cached: Option<(&PlanCache, &[PlanKey])>,
+        executor: &dyn Executor,
     ) -> BatchOutput {
         let planner = self.planner();
         let planner = planner.as_ref();
         let h_total = batch.h();
-        let multi = h_total > 1;
 
         let mut plans: Vec<Option<Arc<SparsePlan>>> = (0..h_total).map(|_| None).collect();
         // Heads that pay their plan's identification cost (the planning
@@ -273,20 +297,16 @@ impl Method {
         let plans: Vec<Arc<SparsePlan>> =
             plans.into_iter().map(|p| p.expect("plan resolved")).collect();
 
-        let outputs: Vec<AttnOutput> = parallel_map(h_total, |h| {
-            let head = &batch.heads[h];
-            // Parallelism lives at head granularity here; the per-head
-            // executor runs serially to avoid oversubscribing the pool.
-            let mut out = if multi {
-                plan::execute_plan_serial(head, &plans[h])
-            } else {
-                plan::execute_plan(head, &plans[h])
-            };
+        // The backend's batched entry parallelizes at head granularity
+        // (per-head execution runs serially to avoid oversubscribing the
+        // pool); the planning head of each fresh key then pays its
+        // identification cost.
+        let mut outputs = executor.execute_batch(batch, &plans);
+        for (h, out) in outputs.iter_mut().enumerate() {
             if pays_ident[h] {
                 out.cost.add(plans[h].ident_cost);
             }
-            out
-        });
+        }
         BatchOutput { outputs, plans, cache_hits, cache_misses }
     }
 }

@@ -4,9 +4,10 @@
 //! the fine-grained sparse computation (§3.2–§3.3); PR 1's Planner →
 //! [`SparsePlan`] → Executor split made identification a *detachable*
 //! stage, and this module detaches it in time as well: planner workers
-//! identify the plan for head/key *i+1* while [`plan::execute_plan`]
-//! drains head *i*, communicating through a bounded two-slot
-//! [`OrderedBoundedQueue`] (DESIGN.md §9).
+//! identify the plan for head/key *i+1* while the drain stage's
+//! [`Executor`] backend (CPU tile walk by default, any backend via the
+//! `_with` entry points) drains head *i*, communicating through a bounded
+//! two-slot [`OrderedBoundedQueue`] (DESIGN.md §9).
 //!
 //! Guarantees:
 //! * **Determinism** — plans land in submission order regardless of worker
@@ -30,9 +31,8 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::attention::plan::{
-    self, BatchInput, BatchOutput, PlanCache, PlanKey, Planner, SparsePlan,
-};
+use crate::attention::exec::{CpuTileExecutor, Executor};
+use crate::attention::plan::{BatchInput, BatchOutput, PlanCache, PlanKey, Planner, SparsePlan};
 use crate::attention::{AttnOutput, Method};
 use crate::util::threadpool::{num_threads, panic_message, OrderedBoundedQueue, PoisonOnDrop};
 
@@ -111,7 +111,17 @@ impl Method {
         batch: &BatchInput,
         pipe: &PlanPipeline,
     ) -> Result<PipelinedBatchOutput, String> {
-        run_planner_batch_pipelined(self.planner().as_ref(), batch, None, pipe)
+        self.run_batch_pipelined_with(batch, pipe, &CpuTileExecutor::default())
+    }
+
+    /// As [`Method::run_batch_pipelined`] on an explicit executor backend.
+    pub fn run_batch_pipelined_with(
+        &self,
+        batch: &BatchInput,
+        pipe: &PlanPipeline,
+        executor: &dyn Executor,
+    ) -> Result<PipelinedBatchOutput, String> {
+        run_planner_batch_pipelined(self.planner().as_ref(), batch, None, pipe, executor)
     }
 
     /// As [`Method::run_batch_cached`] with identification overlapped;
@@ -123,13 +133,35 @@ impl Method {
         keys: &[PlanKey],
         pipe: &PlanPipeline,
     ) -> Result<PipelinedBatchOutput, String> {
-        run_planner_batch_pipelined(self.planner().as_ref(), batch, Some((cache, keys)), pipe)
+        self.run_batch_cached_pipelined_with(batch, cache, keys, pipe, &CpuTileExecutor::default())
+    }
+
+    /// As [`Method::run_batch_cached_pipelined`] on an explicit executor
+    /// backend.
+    pub fn run_batch_cached_pipelined_with(
+        &self,
+        batch: &BatchInput,
+        cache: &PlanCache,
+        keys: &[PlanKey],
+        pipe: &PlanPipeline,
+        executor: &dyn Executor,
+    ) -> Result<PipelinedBatchOutput, String> {
+        run_planner_batch_pipelined(
+            self.planner().as_ref(),
+            batch,
+            Some((cache, keys)),
+            pipe,
+            executor,
+        )
     }
 }
 
-/// Pipelined batch execution against an explicit planner (the
-/// [`Method`] wrappers above are the common entry points; tests inject
-/// failing planners here).
+/// Pipelined batch execution against an explicit planner and executor
+/// backend (the [`Method`] wrappers above are the common entry points;
+/// tests inject failing planners here). The drain stage runs on the
+/// calling thread against `executor`, so any [`Executor`] backend —
+/// CPU tile walk, PJRT gather, paged wrapper — slots under the pipeline
+/// unchanged.
 ///
 /// Identification work items are one per *distinct* key in first-seen
 /// order (cached) or one per head (uncached) — exactly the work the
@@ -140,6 +172,7 @@ pub fn run_planner_batch_pipelined(
     batch: &BatchInput,
     cached: Option<(&PlanCache, &[PlanKey])>,
     pipe: &PlanPipeline,
+    executor: &dyn Executor,
 ) -> Result<PipelinedBatchOutput, String> {
     let h_total = batch.h();
 
@@ -237,7 +270,7 @@ pub fn run_planner_batch_pipelined(
             }
             let (head_plan, hit) = resolved[j].as_ref().expect("plans pop in order");
             let t_exec = Instant::now();
-            let mut out = plan::execute_plan(&batch.heads[h], head_plan);
+            let mut out = executor.execute(&batch.heads[h], head_plan);
             stats.exec_total_s += t_exec.elapsed().as_secs_f64();
             // The planning head of each fresh key pays its identification
             // cost — identical attribution to the sequential batched path.
@@ -380,8 +413,14 @@ mod tests {
         let batch = BatchInput::new(heads);
         for workers in [1, 2] {
             let pipe = PlanPipeline { depth: 2, workers };
-            let err = run_planner_batch_pipelined(&PanicPlanner, &batch, None, &pipe)
-                .expect_err("panicking planner must surface an error");
+            let err = run_planner_batch_pipelined(
+                &PanicPlanner,
+                &batch,
+                None,
+                &pipe,
+                &CpuTileExecutor::default(),
+            )
+            .expect_err("panicking planner must surface an error");
             assert!(err.contains("identification exploded"), "workers={workers}: {err}");
         }
     }

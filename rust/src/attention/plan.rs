@@ -1,8 +1,10 @@
 //! The plan IR: identification (Alg. 2) and sparse computation (Alg. 3) are
 //! separable stages that communicate through *discrete stripe coordinates*,
 //! so the engine splits every method into a [`Planner`] that emits a
-//! [`SparsePlan`] and one shared executor ([`execute_plan`]) that computes
-//! exact softmax attention restricted to the plan (DESIGN.md §2).
+//! [`SparsePlan`] and a swappable executor backend
+//! ([`crate::attention::exec::Executor`], DESIGN.md §2/§10) that computes
+//! exact softmax attention restricted to the plan. [`execute_plan`] is the
+//! convenience entry bound to the default CPU backend.
 //!
 //! A plan is pure coordinates — per query-block-group anchor **spans**
 //! (contiguous, always-computed regions) plus **stripes** (discrete key
@@ -10,7 +12,8 @@
 //! shared across heads in a group ([`PlanCache`], the paper's cross-input
 //! commonality, §3.2), analyzed ([`SparsePlan::coverage`] feeds the
 //! recall/sparsity metrics without executing attention), and priced
-//! ([`SparsePlan::predicted_cost`] mirrors the executor's tile walk exactly).
+//! ([`SparsePlan::predicted_cost`] mirrors the executors' tile walk
+//! exactly — cost is a property of the coordinates, not of the backend).
 //!
 //! Multi-head execution ([`BatchInput`], [`Method::run_batch`]) parallelizes
 //! at head granularity over the shared threadpool; the per-head executor
@@ -20,11 +23,10 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::attention::full::{mask_tile_causal, BlockState};
+use crate::attention::exec::{CpuTileExecutor, Executor};
 use crate::attention::mask::Coverage;
 use crate::attention::{AttnOutput, CostTally, HeadInput, TileConfig};
 use crate::tensor::{matmul_nt_scaled, Mat};
-use crate::util::threadpool::parallel_map;
 
 /// Plan entries for one query-block *group* (`step` consecutive query
 /// blocks sharing one identification result, §3.4).
@@ -179,139 +181,31 @@ pub trait Planner: Sync + Send {
     fn plan(&self, input: &HeadInput) -> SparsePlan;
 }
 
-/// Execute a plan on one head, parallelizing over groups. The returned
-/// cost is the *execution* cost only — callers fold `plan.ident_cost` in
-/// when reporting end-to-end method cost.
+/// Execute a plan on one head with the default CPU backend, parallelizing
+/// over groups. The returned cost is the *execution* cost only — callers
+/// fold `plan.ident_cost` in when reporting end-to-end method cost.
+/// (The tile walk itself lives in [`CpuTileExecutor`]; pass a different
+/// [`Executor`] to the `_with` entry points to swap backends.)
 pub fn execute_plan(input: &HeadInput, plan: &SparsePlan) -> AttnOutput {
-    execute_plan_inner(input, plan, true)
-}
-
-/// As [`execute_plan`] but single-threaded — used by the batched path,
-/// where parallelism lives at head granularity.
-pub fn execute_plan_serial(input: &HeadInput, plan: &SparsePlan) -> AttnOutput {
-    execute_plan_inner(input, plan, false)
+    CpuTileExecutor::default().execute(input, plan)
 }
 
 /// Plan + execute + fold the identification cost into the reported tally —
 /// the thin wrapper the old fused per-head entry points reduce to.
 pub fn run_planner(input: &HeadInput, planner: &dyn Planner) -> AttnOutput {
+    run_planner_with(input, planner, &CpuTileExecutor::default())
+}
+
+/// As [`run_planner`] on an explicit executor backend.
+pub fn run_planner_with(
+    input: &HeadInput,
+    planner: &dyn Planner,
+    executor: &dyn Executor,
+) -> AttnOutput {
     let plan = planner.plan(input);
-    let mut out = execute_plan(input, &plan);
+    let mut out = executor.execute(input, &plan);
     out.cost.add(plan.ident_cost);
     out
-}
-
-fn execute_plan_inner(input: &HeadInput, plan: &SparsePlan, parallel: bool) -> AttnOutput {
-    let n = input.n();
-    let d = input.d();
-    assert_eq!(plan.n, n, "plan built for a different sequence length");
-    let tile = plan.tile;
-    let groups = plan.groups.len();
-
-    let run_group = |g: usize| execute_group(input, plan, g);
-    let results: Vec<(Vec<f32>, CostTally)> = if parallel {
-        parallel_map(groups, run_group)
-    } else {
-        (0..groups).map(run_group).collect()
-    };
-
-    let mut out = Mat::zeros(n, d);
-    let mut cost = CostTally::default();
-    for (g, (rows_data, c)) in results.into_iter().enumerate() {
-        let row0 = g * plan.step * tile.b_q;
-        out.data[row0 * d..row0 * d + rows_data.len()].copy_from_slice(&rows_data);
-        cost.add(c);
-    }
-    AttnOutput { out, coverage: plan.coverage(), cost }
-}
-
-/// Compute one group's output rows: fold the group's anchor spans as dense
-/// tiles, then the gathered stripe chunks — one online softmax per query
-/// block, K'/V' gathered **once per group** and reused across its `step`
-/// blocks (§3.4's reuse; this is the fine-grained gather substrate every
-/// method now runs on).
-fn execute_group(input: &HeadInput, plan: &SparsePlan, g: usize) -> (Vec<f32>, CostTally) {
-    let n = input.n();
-    let d = input.d();
-    let scale = input.scale();
-    let tile = plan.tile;
-    let q_blocks = tile.q_blocks(n);
-    let gp = &plan.groups[g];
-    let qb_start = g * plan.step;
-    let qb_end = ((g + 1) * plan.step).min(q_blocks);
-
-    // Gather the group's discrete K/V columns once, chunked to tile width
-    // so the inner matmuls stay dense (Eq. 4 `load_discrete`).
-    let mut gathered: Vec<(&[u32], Mat, Mat)> =
-        Vec::with_capacity(gp.stripes.len().div_ceil(tile.b_kv));
-    let mut off = 0;
-    while off < gp.stripes.len() {
-        let chunk = &gp.stripes[off..(off + tile.b_kv).min(gp.stripes.len())];
-        gathered.push((chunk, input.k.gather_rows(chunk), input.v.gather_rows(chunk)));
-        off += chunk.len();
-    }
-
-    let mut group_out = Vec::with_capacity((qb_end - qb_start) * tile.b_q * d);
-    let mut cost = CostTally::default();
-    let mut s = Mat::zeros(tile.b_q, tile.b_kv);
-    for qb in qb_start..qb_end {
-        let row0 = qb * tile.b_q;
-        let rows = (n - row0).min(tile.b_q);
-        let limit = row0 + rows;
-        let q_i = input.q.rows_mat(row0, rows);
-        let mut st = BlockState::new(rows, d);
-
-        // Anchor spans: contiguous tiles, clipped to the block's causal
-        // limit, diagonal tiles causally masked.
-        for &(span_s, span_e) in &gp.spans {
-            let end = (span_e as usize).min(limit);
-            let mut col0 = span_s as usize;
-            while col0 < end {
-                let cols = (end - col0).min(tile.b_kv);
-                let k_j = input.k.rows_mat(col0, cols);
-                let v_j = input.v.rows_mat(col0, cols);
-                if s.cols != cols || s.rows != rows {
-                    s = Mat::zeros(rows, cols);
-                }
-                matmul_nt_scaled(&q_i, &k_j, scale, &mut s);
-                if col0 + cols > row0 {
-                    mask_tile_causal(&mut s, row0, col0);
-                }
-                st.fold_tile(&mut s, &v_j);
-                cost.add(CostTally::attn_tile(rows, cols, d));
-                col0 += cols;
-            }
-        }
-
-        // Stripe chunks: discrete gathers. Chunks entirely before the
-        // block's first row need no masking (the common case — anchor
-        // stripes precede the group window); otherwise mask per row
-        // against the absolute column ids.
-        for (chunk, k_g, v_g) in &gathered {
-            if s.cols != k_g.rows || s.rows != rows {
-                s = Mat::zeros(rows, k_g.rows);
-            }
-            matmul_nt_scaled(&q_i, k_g, scale, &mut s);
-            if chunk.last().is_some_and(|&c| c as usize >= row0) {
-                for r in 0..rows {
-                    let abs_row = row0 + r;
-                    let srow = s.row_mut(r);
-                    for (ci, &col) in chunk.iter().enumerate() {
-                        if col as usize > abs_row {
-                            srow[ci] = f32::NEG_INFINITY;
-                        }
-                    }
-                }
-            }
-            st.fold_tile(&mut s, v_g);
-            cost.add(CostTally::attn_tile(rows, k_g.rows, d));
-        }
-
-        let base = group_out.len();
-        group_out.resize(base + rows * d, 0.0f32);
-        st.write_output(&mut group_out[base..], d);
-    }
-    (group_out, cost)
 }
 
 /// Build a step-1 plan from per-query-block *key block* lists (the shape
@@ -629,7 +523,7 @@ mod tests {
         let h = rand_head(43, 160, 8);
         let plan = mixed_plan(160, 8);
         let a = execute_plan(&h, &plan);
-        let b = execute_plan_serial(&h, &plan);
+        let b = CpuTileExecutor { serial: true }.execute(&h, &plan);
         assert_eq!(a.cost, b.cost);
         assert!(a.out.max_abs_diff(&b.out) < 1e-6);
     }

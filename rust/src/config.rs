@@ -8,6 +8,7 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use crate::attention::anchor::AnchorConfig;
+use crate::attention::exec::ExecutorKind;
 use crate::attention::TileConfig;
 use crate::coordinator::scheduler::{SchedulerConfig, SparsityModel};
 use crate::coordinator::server::ServerConfig;
@@ -77,6 +78,12 @@ impl AppConfig {
                     // Async plan pipeline: price identification as
                     // overlapped with execution (DESIGN.md §9).
                     pipelined: sched.get("pipelined").as_bool().unwrap_or(false),
+                    // Executor backend the estimates are attributed to
+                    // (DESIGN.md §10): "cpu" (default) or "pjrt".
+                    executor: match sched.get("executor").as_str() {
+                        None => ExecutorKind::default(),
+                        Some(s) => ExecutorKind::parse(s)?,
+                    },
                 },
                 Some(other) => return Err(anyhow!("unknown sparsity model '{other}'")),
             };
@@ -172,6 +179,25 @@ mod tests {
         )
         .unwrap();
         assert!(cfg.server.scheduler.sparsity.is_pipelined());
+    }
+
+    #[test]
+    fn executor_backend_parses_and_defaults() {
+        let cfg = AppConfig::parse(
+            r#"{"server": {"scheduler": {"sparsity": "anchor", "executor": "pjrt"}}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.server.scheduler.sparsity.executor_kind(), ExecutorKind::Pjrt);
+        let cfg = AppConfig::parse(r#"{"server": {"scheduler": {"sparsity": "anchor"}}}"#).unwrap();
+        assert_eq!(cfg.server.scheduler.sparsity.executor_kind(), ExecutorKind::Cpu);
+        // Dense attributes to the default CPU walk.
+        let cfg = AppConfig::parse("{}").unwrap();
+        assert_eq!(cfg.server.scheduler.sparsity.executor_kind(), ExecutorKind::Cpu);
+        // Unknown backends are rejected.
+        let res = AppConfig::parse(
+            r#"{"server": {"scheduler": {"sparsity": "anchor", "executor": "tpu"}}}"#,
+        );
+        assert!(res.is_err());
     }
 
     #[test]

@@ -291,6 +291,7 @@ pub fn spawn_mock_engine(vocab: i32, cost_model: Option<SparsityModel>) -> Engin
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::exec::ExecutorKind;
 
     #[test]
     fn mock_engine_is_deterministic() {
@@ -318,6 +319,7 @@ mod tests {
                     anchor_tokens: 256,
                     plan_hit_rate: hit,
                     pipelined: false,
+                    executor: ExecutorKind::Cpu,
                 },
             )
         };
@@ -377,6 +379,7 @@ mod tests {
                     anchor_tokens: 256,
                     plan_hit_rate: hit,
                     pipelined,
+                    executor: ExecutorKind::Cpu,
                 },
             )
         };
@@ -404,6 +407,7 @@ mod tests {
             anchor_tokens: 256,
             plan_hit_rate: 0.0,
             pipelined: true,
+            executor: ExecutorKind::Cpu,
         };
         let (cmd_tx, res_rx) = spawn_mock_engine(64, Some(model));
         // Ready signal first.

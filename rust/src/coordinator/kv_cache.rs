@@ -10,13 +10,18 @@
 //! [`PagedKvStore`] adds engine-side paged K/V storage with
 //! **gather-by-coordinates** access, so a [`SparsePlan`]'s stripe
 //! coordinates can be executed directly against paged memory (Eq. 4
-//! `load_discrete` over pages instead of a flat tensor).
+//! `load_discrete` over pages instead of a flat tensor). [`PagedExecutor`]
+//! closes the loop: it plugs the store in as the [`KvSource`] of any
+//! [`Executor`] backend, so paged serving executes plans without
+//! flattening the cache first (DESIGN.md §10).
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
+use crate::attention::exec::{Executor, KvSource};
 use crate::attention::plan::SparsePlan;
+use crate::attention::AttnOutput;
 use crate::tensor::Mat;
 
 /// Per-page stripe statistics recorded during prefill identification.
@@ -148,6 +153,11 @@ impl PagePool {
     /// stripe by at least one query-block group. This is how prefill
     /// identification feeds the decode-phase page prioritization without
     /// the engine re-deriving anything from attention outputs.
+    ///
+    /// Errors (never panics) on an unadmitted `seq` and on any stripe at
+    /// or past the admitted-token boundary — a coordinate the sequence's
+    /// pages cannot hold means the plan and the allocation disagree, which
+    /// must surface, not be silently absorbed into the heat map.
     pub fn record_plan(&mut self, seq: u64, plan: &SparsePlan) -> Result<()> {
         let alloc =
             self.seqs.get(&seq).ok_or_else(|| anyhow!("unknown sequence {seq}"))?;
@@ -158,6 +168,12 @@ impl PagePool {
         for group in &plan.groups {
             for &col in &group.stripes {
                 let col = col as usize;
+                if col >= alloc.tokens {
+                    return Err(anyhow!(
+                        "plan stripe {col} out of range: sequence {seq} admitted {} tokens",
+                        alloc.tokens
+                    ));
+                }
                 if col < covered_tokens && !seen[col] {
                     seen[col] = true;
                     hot_counts[col / self.page_tokens] += 1;
@@ -267,6 +283,125 @@ impl PagedKvStore {
             return Err(anyhow!("page {page} out of range"));
         }
         Ok((page, pos % self.page_tokens))
+    }
+
+    /// Check that every coordinate `plan` touches resolves through
+    /// `pages`: plan length, span ends and stripe columns must land inside
+    /// the page table, and every page id must exist in this store. Run
+    /// before executing a plan against paged memory so bad coordinates
+    /// surface as an error, not a panic inside the tile walk.
+    pub fn validate_plan(&self, pages: &[u32], plan: &SparsePlan) -> Result<()> {
+        let capacity = pages.len() * self.page_tokens;
+        if plan.n > capacity {
+            return Err(anyhow!("plan length {} exceeds paged capacity {capacity}", plan.n));
+        }
+        for &p in pages {
+            if (p as usize) >= self.k_pages.len() {
+                return Err(anyhow!("page {p} out of range"));
+            }
+        }
+        for g in &plan.groups {
+            for &(s, e) in &g.spans {
+                if s > e || e as usize > capacity {
+                    return Err(anyhow!("span [{s}, {e}) outside paged capacity {capacity}"));
+                }
+            }
+            // Stripes are sorted: checking the last bounds them all.
+            if let Some(&c) = g.stripes.last() {
+                if c as usize >= capacity {
+                    return Err(anyhow!("stripe {c} outside paged capacity {capacity}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// [`KvSource`] over a [`PagedKvStore`] plus one sequence's page table:
+/// span and gather reads translate through the table, so an executor's
+/// tile walk runs directly on paged memory. Reads are pure copies of the
+/// stored rows, so paged execution is bitwise-identical to flat execution
+/// over the same values (property-tested in `tests/prop_plan_parity.rs`).
+pub struct PagedKv<'a> {
+    store: &'a PagedKvStore,
+    pages: &'a [u32],
+}
+
+impl<'a> PagedKv<'a> {
+    pub fn new(store: &'a PagedKvStore, pages: &'a [u32]) -> Self {
+        Self { store, pages }
+    }
+}
+
+impl KvSource for PagedKv<'_> {
+    fn d(&self) -> usize {
+        self.store.d
+    }
+
+    fn span(&self, start: usize, end: usize) -> (Mat, Mat) {
+        self.store.span(self.pages, start, end).expect("paged span (validate_plan first)")
+    }
+
+    fn gather(&self, coords: &[u32]) -> (Mat, Mat) {
+        self.store.gather(self.pages, coords).expect("paged gather (validate_plan first)")
+    }
+}
+
+/// Executor wrapper routing any backend's K/V reads through paged serving
+/// memory: [`PagedKvStore::gather`] / [`PagedKvStore::span`] become the
+/// backend's [`KvSource`], so paged serving executes a [`SparsePlan`]
+/// without flattening the cache. Q still arrives per head; the flat K/V
+/// of a [`crate::attention::HeadInput`] handed to [`Executor::execute`]
+/// are ignored — the store is authoritative.
+///
+/// Plan/page-table mismatches: [`PagedExecutor::try_execute`] surfaces
+/// them as an `Err` (the serving entry). The infallible [`Executor`]
+/// trait entries instead validate up front and panic with the validation
+/// message — an assertion against caller bugs, never a mid-walk index
+/// panic deep inside worker threads.
+pub struct PagedExecutor<'a> {
+    store: &'a PagedKvStore,
+    pages: &'a [u32],
+    inner: &'a dyn Executor,
+}
+
+impl<'a> PagedExecutor<'a> {
+    pub fn new(store: &'a PagedKvStore, pages: &'a [u32], inner: &'a dyn Executor) -> Self {
+        Self { store, pages, inner }
+    }
+
+    /// Serving entry: validate the plan against the page table, then
+    /// execute it on the wrapped backend. Invalid coordinates surface as
+    /// an `Err`, never a panic inside the walk.
+    pub fn try_execute(&self, q: &Mat, plan: &SparsePlan) -> Result<AttnOutput> {
+        self.store.validate_plan(self.pages, plan)?;
+        Ok(self.inner.execute_source(q, &PagedKv::new(self.store, self.pages), plan, true))
+    }
+}
+
+impl Executor for PagedExecutor<'_> {
+    /// Reports the wrapped backend's identity — the paged route is a
+    /// memory-layout detail, not a different compute backend.
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn execute_source(
+        &self,
+        q: &Mat,
+        _kv: &dyn KvSource,
+        plan: &SparsePlan,
+        parallel: bool,
+    ) -> AttnOutput {
+        // The trait entry is infallible: assert plan/page-table agreement
+        // up front (one clear message) instead of unwrapping mid-walk.
+        // Callers that need an Err use `try_execute`.
+        self.store
+            .validate_plan(self.pages, plan)
+            .expect("plan does not resolve through the page table (use try_execute for an Err)");
+        // Every read goes through the paged source, whatever K/V the
+        // caller supplied.
+        self.inner.execute_source(q, &PagedKv::new(self.store, self.pages), plan, parallel)
     }
 }
 
@@ -400,6 +535,29 @@ mod tests {
         assert!(pool.record_plan(9, &plan).is_err());
     }
 
+    /// Edge cases must error, never panic: a stripe at exactly the
+    /// admitted-token boundary (one past the last valid position) and an
+    /// unadmitted sequence.
+    #[test]
+    fn record_plan_boundary_coordinate_errors_not_panics() {
+        let mut pool = PagePool::new(8, 16);
+        pool.admit(1, 32).unwrap(); // positions 0..32 valid
+        // Stripe at exactly 32 — the admitted boundary — must error.
+        let boundary = test_plan(48, &[vec![0], vec![31, 32], vec![]]);
+        let err = pool.record_plan(1, &boundary).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // Well past the boundary errors too.
+        let far = test_plan(48, &[vec![], vec![], vec![47]]);
+        assert!(pool.record_plan(1, &far).is_err());
+        // The last valid position is fine, and heat still lands.
+        let ok = test_plan(32, &[vec![0], vec![31]]);
+        pool.record_plan(1, &ok).unwrap();
+        let pages = pool.pages_of(1).unwrap().to_vec();
+        assert!(pool.stripe_stats(pages[1]).hot_fraction > 0.0);
+        // Unadmitted sequence: error, not panic, and pool state untouched.
+        assert!(pool.record_plan(7, &ok).is_err());
+    }
+
     #[test]
     fn paged_store_gather_matches_flat_gather() {
         use crate::tensor::Mat;
@@ -431,5 +589,74 @@ mod tests {
         assert!(store.gather(&pages, &[33]).is_err());
         assert!(store.span(&pages, 5, 3).is_err());
         assert!(store.gather(&pages, &[31]).is_ok());
+    }
+
+    /// Executing a plan through the paged route (store as KvSource) is
+    /// bitwise-identical to flat execution, for both executor backends.
+    #[test]
+    fn paged_executor_matches_flat_execution_bitwise() {
+        use crate::attention::exec::{CpuTileExecutor, PjrtGatherExecutor};
+        use crate::attention::{anchor::AnchorConfig, HeadInput, Method, TileConfig};
+        use crate::util::rng::Pcg64;
+
+        let n = 96;
+        let d = 8;
+        let mut rng = Pcg64::seeded(33);
+        let head = HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        );
+        let m = Method::Anchor(AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta: 3.0,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        });
+        let plan = m.plan(&head);
+
+        // Page the K/V rows in through a deliberately non-identity table.
+        let mut store = PagedKvStore::new(8, 16, d);
+        let pages: Vec<u32> = vec![5, 0, 7, 2, 4, 1];
+        for pos in 0..n {
+            store.write(&pages, pos, head.k.row(pos), head.v.row(pos)).unwrap();
+        }
+
+        let cpu = CpuTileExecutor::default();
+        let pjrt = PjrtGatherExecutor::new();
+        let flat = cpu.execute(&head, &plan);
+        let paged_cpu =
+            PagedExecutor::new(&store, &pages, &cpu).try_execute(&head.q, &plan).unwrap();
+        let paged_pjrt =
+            PagedExecutor::new(&store, &pages, &pjrt).try_execute(&head.q, &plan).unwrap();
+        assert_eq!(flat.out.data, paged_cpu.out.data, "paged cpu diverges");
+        assert_eq!(flat.out.data, paged_pjrt.out.data, "paged pjrt diverges");
+        assert_eq!(flat.cost, paged_cpu.cost);
+        assert_eq!(flat.cost, paged_pjrt.cost);
+        // The wrapper reports the backend identity it routes to.
+        assert_eq!(PagedExecutor::new(&store, &pages, &cpu).name(), "cpu");
+        assert_eq!(PagedExecutor::new(&store, &pages, &pjrt).name(), "pjrt");
+    }
+
+    /// A plan whose coordinates outrun the page table errors up front.
+    #[test]
+    fn paged_executor_rejects_out_of_table_plans() {
+        use crate::attention::exec::CpuTileExecutor;
+
+        let d = 4;
+        let store = PagedKvStore::new(2, 16, d);
+        let pages = vec![0u32]; // capacity: 16 tokens
+        let plan = test_plan(32, &[vec![0], vec![17]]);
+        let cpu = CpuTileExecutor::default();
+        let q = Mat::zeros(32, d);
+        let err = PagedExecutor::new(&store, &pages, &cpu).try_execute(&q, &plan).unwrap_err();
+        assert!(err.to_string().contains("capacity"), "{err}");
+        // Same store, table that covers the plan: executes cleanly.
+        let pages_ok = vec![0u32, 1];
+        let ok_plan = test_plan(32, &[vec![0], vec![3, 17]]);
+        let out =
+            PagedExecutor::new(&store, &pages_ok, &cpu).try_execute(&q, &ok_plan).unwrap();
+        assert_eq!(out.out.rows, 32);
     }
 }

@@ -11,6 +11,7 @@
 
 use super::kv_cache::PagePool;
 use super::request::{Phase, RequestState};
+use crate::attention::exec::ExecutorKind;
 
 /// Identification overhead as a fraction of context token-cost when a
 /// chunk must (re)plan: the pooled Alg. 2 pass scans every candidate key
@@ -42,6 +43,13 @@ pub enum SparsityModel {
         /// instead of `ident + exec`: only the slower stage is on the
         /// critical path.
         pipelined: bool,
+        /// Which executor backend drains plans (DESIGN.md §10). Both
+        /// backends fold exactly the plan's tiles — cost is a property of
+        /// the coordinates, so the arithmetic above is backend-invariant —
+        /// but the kind is carried here so every cost estimate, report and
+        /// bench row names the backend it was priced for, and backend
+        /// regressions stay attributable.
+        executor: ExecutorKind,
     },
 }
 
@@ -51,7 +59,9 @@ impl SparsityModel {
     pub fn effective_context(&self, context: usize) -> f64 {
         match *self {
             SparsityModel::Dense => context as f64,
-            SparsityModel::Anchor { stripe_keep, anchor_tokens, plan_hit_rate, pipelined } => {
+            SparsityModel::Anchor {
+                stripe_keep, anchor_tokens, plan_hit_rate, pipelined, ..
+            } => {
                 let anchored = context.min(anchor_tokens) as f64;
                 let rest = context.saturating_sub(anchor_tokens) as f64;
                 let attn = anchored + stripe_keep * rest;
@@ -69,6 +79,16 @@ impl SparsityModel {
     /// Whether the model prices overlapped (pipelined) identification.
     pub fn is_pipelined(&self) -> bool {
         matches!(self, SparsityModel::Anchor { pipelined: true, .. })
+    }
+
+    /// The executor backend this model's estimates are attributed to
+    /// (dense attention has no plan executor; report it as the default
+    /// CPU walk).
+    pub fn executor_kind(&self) -> ExecutorKind {
+        match *self {
+            SparsityModel::Dense => ExecutorKind::Cpu,
+            SparsityModel::Anchor { executor, .. } => executor,
+        }
     }
 
     /// Fold a newly observed plan-cache hit rate into the model (no-op for
@@ -280,6 +300,7 @@ mod tests {
             anchor_tokens: 256,
             plan_hit_rate: 0.0,
             pipelined: false,
+            executor: ExecutorKind::Cpu,
         };
         let sparse = plan_iteration(&c, &mut sparse_states, &mut pool);
         assert!(
@@ -314,6 +335,7 @@ mod tests {
             anchor_tokens: 200,
             plan_hit_rate: 1.0,
             pipelined: false,
+            executor: ExecutorKind::Cpu,
         };
         let eff = anchor.effective_context(1000);
         assert!((eff - (200.0 + 0.1 * 800.0)).abs() < 1e-9);
@@ -331,6 +353,7 @@ mod tests {
             anchor_tokens: 256,
             plan_hit_rate: hit,
             pipelined: false,
+            executor: ExecutorKind::Cpu,
         };
         let cold = mk(0.0).effective_context(4096);
         let warm = mk(1.0).effective_context(4096);
@@ -369,6 +392,7 @@ mod tests {
             anchor_tokens: 256,
             plan_hit_rate: 0.0,
             pipelined,
+            executor: ExecutorKind::Cpu,
         };
         let n = 4096;
         // attn = 256 + 0.1·3840 = 640; ident = 0.125·4096 = 512.
@@ -383,6 +407,7 @@ mod tests {
             anchor_tokens: 0,
             plan_hit_rate: 0.0,
             pipelined: true,
+            executor: ExecutorKind::Cpu,
         };
         assert!((lean.effective_context(n) - 512.0).abs() < 1e-9);
 
@@ -394,6 +419,7 @@ mod tests {
                     anchor_tokens: 256,
                     plan_hit_rate: hit,
                     pipelined,
+                    executor: ExecutorKind::Cpu,
                 };
                 assert!(
                     with(true).effective_context(ctx) <= with(false).effective_context(ctx) + 1e-12,
@@ -412,6 +438,7 @@ mod tests {
             anchor_tokens: 256,
             plan_hit_rate: 0.0,
             pipelined: false,
+            executor: ExecutorKind::Cpu,
         };
         m.observe_plan_hit_rate(1.0);
         match m {

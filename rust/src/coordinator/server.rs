@@ -170,6 +170,7 @@ fn finish<E: StepExecutor>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::exec::ExecutorKind;
     use crate::coordinator::engine::MockEngine;
 
     fn trace(n: usize, prompt: usize, new_tokens: usize) -> Vec<Request> {
@@ -253,6 +254,7 @@ mod tests {
             anchor_tokens: 256,
             plan_hit_rate: 0.5,
             pipelined: false,
+            executor: ExecutorKind::Cpu,
         });
         assert!(
             anchor.iterations <= dense.iterations,
@@ -275,6 +277,7 @@ mod tests {
                 anchor_tokens: 256,
                 plan_hit_rate: 0.0,
                 pipelined,
+                executor: ExecutorKind::Cpu,
             };
             cfg.scheduler.iter_budget = 400.0;
             cfg.pool_pages = 256;

@@ -16,6 +16,7 @@
 //! A100-time at 64k/128k; no attention is executed for the projection.
 
 use super::common::{self, ExpScale};
+use crate::attention::exec::ExecutorKind;
 use crate::attention::pipeline::{PipelineStats, PlanPipeline};
 use crate::attention::plan::PlanCache;
 use crate::simulator::a100::A100Model;
@@ -27,8 +28,9 @@ use crate::workload::qkv::generate;
 const BATCH_HEADS: usize = 4;
 const GROUP_SIZE: usize = 2;
 
-/// Measurement-mode knobs (CLI: `--pipeline`, `--iters`, `--lengths`).
-#[derive(Clone, Debug, Default)]
+/// Measurement-mode knobs (CLI: `--pipeline`, `--iters`, `--lengths`,
+/// `--executor`).
+#[derive(Clone, Debug)]
 pub struct Fig2Options {
     /// Run the batch through the async plan pipeline instead of the
     /// sequential plan-then-execute path.
@@ -38,6 +40,20 @@ pub struct Fig2Options {
     pub iters: Option<usize>,
     /// Override the length grid (default [`ExpScale::lengths`]).
     pub lengths: Option<Vec<usize>>,
+    /// Executor backends to measure; every row names its backend so
+    /// backend regressions are attributable (CI runs `--executor both`).
+    pub executors: Vec<ExecutorKind>,
+}
+
+impl Default for Fig2Options {
+    fn default() -> Self {
+        Self {
+            pipeline: false,
+            iters: None,
+            lengths: None,
+            executors: vec![ExecutorKind::Cpu],
+        }
+    }
 }
 
 pub fn run(scale: ExpScale, seed: u64) -> Vec<Vec<String>> {
@@ -50,6 +66,11 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
     let a100 = A100Model::default();
     let iters = opts.iters.unwrap_or(if scale == ExpScale::Quick { 1 } else { 2 });
     let lengths = opts.lengths.clone().unwrap_or_else(|| scale.lengths());
+    let executors = if opts.executors.is_empty() {
+        vec![ExecutorKind::Cpu]
+    } else {
+        opts.executors.clone()
+    };
     let mode = if opts.pipeline { "pipelined" } else { "sequential" };
     let pipe = PlanPipeline::default();
 
@@ -65,77 +86,90 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
         let batch = common::gqa_batch(&profile, n, BATCH_HEADS, GROUP_SIZE, seed);
         let keys = common::gqa_keys(0, BATCH_HEADS, GROUP_SIZE);
         let methods = common::paper_methods(n, tile, 12.0);
-        // Best-of-`iters` wallclock for one method over the whole batch;
-        // hit rate and overlap stats come from the fastest repeat.
-        let measure = |m: &crate::attention::Method| -> (f64, f64, PipelineStats) {
-            let mut best = f64::INFINITY;
-            let mut hit_rate = 0.0;
-            let mut stats = PipelineStats::default();
-            for _ in 0..iters.max(1) {
-                let cache = PlanCache::new();
-                let t0 = std::time::Instant::now();
-                let (hr, st) = if opts.pipeline {
-                    let out = m
-                        .run_batch_cached_pipelined(&batch, &cache, &keys, &pipe)
-                        .expect("pipelined batch failed");
-                    let dt = t0.elapsed().as_secs_f64();
-                    crate::util::timer::black_box(out.batch.outputs[0].out.data[0]);
-                    if dt < best {
-                        best = dt;
+        for &kind in &executors {
+            let backend = kind.build();
+            // Best-of-`iters` wallclock for one method over the whole
+            // batch on this backend; hit rate and overlap stats come from
+            // the fastest repeat.
+            let measure = |m: &crate::attention::Method| -> (f64, f64, PipelineStats) {
+                let mut best = f64::INFINITY;
+                let mut hit_rate = 0.0;
+                let mut stats = PipelineStats::default();
+                for _ in 0..iters.max(1) {
+                    let cache = PlanCache::new();
+                    let t0 = std::time::Instant::now();
+                    let (hr, st) = if opts.pipeline {
+                        let out = m
+                            .run_batch_cached_pipelined_with(
+                                &batch,
+                                &cache,
+                                &keys,
+                                &pipe,
+                                backend.as_ref(),
+                            )
+                            .expect("pipelined batch failed");
+                        let dt = t0.elapsed().as_secs_f64();
+                        crate::util::timer::black_box(out.batch.outputs[0].out.data[0]);
+                        if dt < best {
+                            best = dt;
+                        } else {
+                            continue;
+                        }
+                        (out.batch.hit_rate(), out.stats)
                     } else {
-                        continue;
-                    }
-                    (out.batch.hit_rate(), out.stats)
-                } else {
-                    let out = m.run_batch_cached(&batch, &cache, &keys);
-                    let dt = t0.elapsed().as_secs_f64();
-                    crate::util::timer::black_box(out.outputs[0].out.data[0]);
-                    if dt < best {
-                        best = dt;
-                    } else {
-                        continue;
-                    }
-                    (out.hit_rate(), PipelineStats::default())
-                };
-                hit_rate = hr;
-                stats = st;
-            }
-            (best, hit_rate, stats)
-        };
-        let (t_full, full_hits, full_stats) = measure(&methods[0]);
-        let mut record =
-            |name: &str, t: f64, hit_rate: f64, stats: &PipelineStats, speedup: f64| {
-                let overlap = stats.overlap_efficiency();
-                total_latency_ms += t * 1e3;
-                max_overlap = max_overlap.max(overlap);
-                rows.push(vec![
-                    fmt_len(n),
-                    name.to_string(),
-                    format!("{:.2}", t * 1e3),
-                    format!("{speedup:.2}x"),
-                    crate::util::pct(hit_rate),
-                    crate::util::pct(overlap),
-                ]);
-                json_rows.push(Json::obj(vec![
-                    ("length", Json::num(n as f64)),
-                    ("method", Json::str(name)),
-                    ("latency_ms", Json::num(t * 1e3)),
-                    ("speedup", Json::num(speedup)),
-                    ("plan_hit_rate", Json::num(hit_rate)),
-                    ("overlap_efficiency", Json::num(overlap)),
-                    ("ident_total_ms", Json::num(stats.ident_total_s * 1e3)),
-                    ("ident_hidden_ms", Json::num(stats.ident_hidden_s * 1e3)),
-                    ("stall_ms", Json::num(stats.stall_s * 1e3)),
-                ]));
+                        let out =
+                            m.run_batch_cached_with(&batch, &cache, &keys, backend.as_ref());
+                        let dt = t0.elapsed().as_secs_f64();
+                        crate::util::timer::black_box(out.outputs[0].out.data[0]);
+                        if dt < best {
+                            best = dt;
+                        } else {
+                            continue;
+                        }
+                        (out.hit_rate(), PipelineStats::default())
+                    };
+                    hit_rate = hr;
+                    stats = st;
+                }
+                (best, hit_rate, stats)
             };
-        for m in &methods[1..] {
-            let (t, hit_rate, stats) = measure(m);
-            record(m.name(), t, hit_rate, &stats, t_full / t);
+            let (t_full, full_hits, full_stats) = measure(&methods[0]);
+            let mut record =
+                |name: &str, t: f64, hit_rate: f64, stats: &PipelineStats, speedup: f64| {
+                    let overlap = stats.overlap_efficiency();
+                    total_latency_ms += t * 1e3;
+                    max_overlap = max_overlap.max(overlap);
+                    rows.push(vec![
+                        fmt_len(n),
+                        name.to_string(),
+                        kind.name().to_string(),
+                        format!("{:.2}", t * 1e3),
+                        format!("{speedup:.2}x"),
+                        crate::util::pct(hit_rate),
+                        crate::util::pct(overlap),
+                    ]);
+                    json_rows.push(Json::obj(vec![
+                        ("length", Json::num(n as f64)),
+                        ("method", Json::str(name)),
+                        ("executor", Json::str(kind.name())),
+                        ("latency_ms", Json::num(t * 1e3)),
+                        ("speedup", Json::num(speedup)),
+                        ("plan_hit_rate", Json::num(hit_rate)),
+                        ("overlap_efficiency", Json::num(overlap)),
+                        ("ident_total_ms", Json::num(stats.ident_total_s * 1e3)),
+                        ("ident_hidden_ms", Json::num(stats.ident_hidden_s * 1e3)),
+                        ("stall_ms", Json::num(stats.stall_s * 1e3)),
+                    ]));
+                };
+            for m in &methods[1..] {
+                let (t, hit_rate, stats) = measure(m);
+                record(m.name(), t, hit_rate, &stats, t_full / t);
+            }
+            record("full-attn", t_full, full_hits, &full_stats, 1.0);
         }
-        record("full-attn", t_full, full_hits, &full_stats, 1.0);
     }
     common::print_table(
-        &["length", "method", "latency_ms", "speedup", "plan_hits", "overlap"],
+        &["length", "method", "executor", "latency_ms", "speedup", "plan_hits", "overlap"],
         &rows,
     );
 
@@ -219,6 +253,7 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
             ("group_size", Json::num(GROUP_SIZE as f64)),
             ("lengths", Json::arr(lengths.iter().map(|&n| Json::num(n as f64)))),
             ("iters", Json::num(iters as f64)),
+            ("executors", Json::arr(executors.iter().map(|k| Json::str(k.name())))),
             ("total_latency_ms", Json::num(total_latency_ms)),
             ("max_overlap_efficiency", Json::num(max_overlap)),
         ],
@@ -230,7 +265,7 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
     let mut all = rows.clone();
     all.extend(proj_rows);
     let csv = common::to_csv(
-        &["length", "method", "latency_ms", "speedup", "plan_hits", "overlap"],
+        &["length", "method", "executor", "latency_ms", "speedup", "plan_hits", "overlap"],
         &rows,
     );
     // Mode-suffixed like the JSON so a sequential-then-pipelined run in
@@ -242,19 +277,28 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
+
+    /// The tests below write (and some read back) the shared
+    /// `reports/fig2_speedup_<mode>.json` files; serialize them so a
+    /// concurrent run never reads another test's report.
+    static REPORT_LOCK: Mutex<()> = Mutex::new(());
 
     #[test]
     fn quick_run_produces_all_methods() {
+        let _g = REPORT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let rows = run(ExpScale::Quick, 7);
         // 3 lengths × 5 methods + 2 projection lengths × 5 methods.
         assert!(rows.len() >= 3 * 5);
         assert!(rows.iter().any(|r| r[1] == "anchor"));
         assert!(rows.iter().any(|r| r[1] == "full-attn"));
+        // Measured rows name their executor backend (default grid: cpu).
+        assert!(rows.iter().any(|r| r.len() == 7 && r[2] == "cpu"));
         // The measured rows carry a plan-cache hit-rate column; with
         // GROUP_SIZE = 2 the sparse methods replan once per group, so some
         // row must report a nonzero hit rate.
         assert!(
-            rows.iter().any(|r| r.len() == 6 && r[4] != "0.0%" && r[4].ends_with('%')),
+            rows.iter().any(|r| r.len() == 7 && r[5] != "0.0%" && r[5].ends_with('%')),
             "no plan-cache hits reported"
         );
     }
@@ -263,15 +307,17 @@ mod tests {
     /// column, and emits the JSON keys the CI gate reads.
     #[test]
     fn pipelined_mode_reports_overlap() {
+        let _g = REPORT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let opts = Fig2Options {
             pipeline: true,
             iters: Some(1),
             lengths: Some(vec![1024, 2048]),
+            ..Fig2Options::default()
         };
         let rows = run_with(ExpScale::Quick, 7, &opts);
         assert!(rows.iter().any(|r| r[1] == "anchor"));
         // Measured rows have an overlap column formatted as a percentage.
-        assert!(rows.iter().any(|r| r.len() == 6 && r[5].ends_with('%')));
+        assert!(rows.iter().any(|r| r.len() == 7 && r[6].ends_with('%')));
         let report = std::fs::read_to_string("reports/fig2_speedup_pipelined.json").unwrap();
         let j = Json::parse(&report).unwrap();
         assert_eq!(j.get("mode").as_str(), Some("pipelined"));
@@ -280,5 +326,42 @@ mod tests {
         assert!((0.0..=1.0).contains(&oe), "overlap efficiency {oe}");
         assert!(j.get("rows").idx(0).get("latency_ms").as_f64().is_some());
         assert!(j.get("rows").idx(0).get("overlap_efficiency").as_f64().is_some());
+        assert!(j.get("rows").idx(0).get("executor").as_str().is_some());
+    }
+
+    /// `--executor both` measures every method on both backends and the
+    /// JSON report names each row's backend plus the run's backend grid.
+    #[test]
+    fn executor_grid_reports_both_backends() {
+        let _g = REPORT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let opts = Fig2Options {
+            pipeline: false,
+            iters: Some(1),
+            lengths: Some(vec![1024]),
+            executors: vec![ExecutorKind::Cpu, ExecutorKind::Pjrt],
+        };
+        let rows = run_with(ExpScale::Quick, 11, &opts);
+        let cpu_rows = rows.iter().filter(|r| r.len() == 7 && r[2] == "cpu").count();
+        let pjrt_rows = rows.iter().filter(|r| r.len() == 7 && r[2] == "pjrt").count();
+        assert_eq!(cpu_rows, 5, "one cpu row per method");
+        assert_eq!(pjrt_rows, 5, "one pjrt row per method");
+        let report = std::fs::read_to_string("reports/fig2_speedup_sequential.json").unwrap();
+        let j = Json::parse(&report).unwrap();
+        let execs: Vec<&str> = j
+            .get("executors")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|e| e.as_str())
+            .collect();
+        assert_eq!(execs, vec!["cpu", "pjrt"]);
+        let row_execs: Vec<&str> = j
+            .get("rows")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|r| r.get("executor").as_str())
+            .collect();
+        assert!(row_execs.contains(&"cpu") && row_execs.contains(&"pjrt"));
     }
 }

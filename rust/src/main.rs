@@ -3,14 +3,19 @@
 //! Subcommands:
 //!   selftest                      PJRT + artifact sanity checks
 //!   serve       [--config F]      serve a synthetic trace over PJRT
+//!                                 (--executor cpu|pjrt names the plan
+//!                                 executor backend in the scheduler's
+//!                                 cost attribution)
 //!   bench <exp> [--quick]         run one experiment driver
 //!                                 (fig2|tab1|fig4|fig5|fig6|fig7|tab2|tab3|tab4|all)
 //!                                 fig2 extras: --pipeline (overlap ident with
-//!                                 execution), --iters N, --lengths a,b,c
+//!                                 execution), --iters N, --lengths a,b,c,
+//!                                 --executor cpu|pjrt|both (backend grid)
 //!   dominance   [--n N]           Fig. 5 measurement at arbitrary length
 //!   tpu-estimate                  L1 VMEM/MXU block-shape table
 //!   gen-trace   [--rate R]        print a synthetic serving trace
 
+use anchor_attention::attention::exec::ExecutorKind;
 use anchor_attention::config::AppConfig;
 use anchor_attention::coordinator::engine::PjrtEngine;
 use anchor_attention::coordinator::request::Request;
@@ -85,7 +90,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             // `--pipeline` prices identification as overlapped with
             // execution (the async plan pipeline, DESIGN.md §9).
             pipelined: args.bool_or("pipeline", false)?,
+            executor: ExecutorKind::default(),
         };
+    }
+    // `--executor cpu|pjrt` names the plan executor backend in the
+    // scheduler's cost attribution (config: scheduler.executor).
+    if let Some(s) = args.get("executor") {
+        let kind = ExecutorKind::parse(s)?;
+        if let SparsityModel::Anchor { ref mut executor, .. } = cfg.server.scheduler.sparsity {
+            *executor = kind;
+        }
     }
 
     println!("loading engine from {} …", cfg.artifact_dir);
@@ -118,8 +132,15 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let seed = args.u64_or("seed", 42)?;
     let which = args.positional().get(1).map(|s| s.as_str()).unwrap_or("all");
     // fig2-only knobs: `--pipeline` overlaps identification with execution,
-    // `--iters N` / `--lengths a,b,c` pin the measurement grid (CI bench).
+    // `--iters N` / `--lengths a,b,c` pin the measurement grid (CI bench),
+    // `--executor cpu|pjrt|both` picks the backend grid.
     let lengths = args.usize_list_or("lengths", &[])?;
+    let executors = match args.get("executor") {
+        None => vec![ExecutorKind::default()],
+        Some("both") => vec![ExecutorKind::Cpu, ExecutorKind::Pjrt],
+        Some(s) => vec![ExecutorKind::parse(s)
+            .map_err(|_| anyhow::anyhow!("--executor expects cpu|pjrt|both, got '{s}'"))?],
+    };
     let fig2_opts = experiments::fig2_speedup::Fig2Options {
         pipeline: args.bool_or("pipeline", false)?,
         iters: match args.get("iters") {
@@ -127,6 +148,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             None => None,
         },
         lengths: if lengths.is_empty() { None } else { Some(lengths) },
+        executors,
     };
     let run_one = |name: &str| match name {
         "fig2" => drop(experiments::fig2_speedup::run_with(scale, seed, &fig2_opts)),

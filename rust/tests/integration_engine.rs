@@ -2,6 +2,7 @@
 //! workload's ground truth, plus serving-stack integration over the mock
 //! engine at scale. No artifacts required.
 
+use anchor_attention::attention::exec::ExecutorKind;
 use anchor_attention::attention::TileConfig;
 use anchor_attention::coordinator::engine::MockEngine;
 use anchor_attention::coordinator::request::Request;
@@ -104,12 +105,14 @@ fn anchor_scheduler_no_worse_than_dense() {
         anchor_tokens: 256,
         plan_hit_rate: 0.5,
         pipelined: false,
+        executor: ExecutorKind::Cpu,
     });
     let piped = run(SparsityModel::Anchor {
         stripe_keep: 0.08,
         anchor_tokens: 256,
         plan_hit_rate: 0.5,
         pipelined: true,
+        executor: ExecutorKind::Cpu,
     });
     assert!(
         anchor.iterations <= dense.iterations,

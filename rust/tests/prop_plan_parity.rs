@@ -15,8 +15,14 @@
 //!   plan queue) is bitwise-identical to the sequential planner→executor
 //!   path for every method, including cache-hit accounting, and a
 //!   panicked planner worker surfaces an error instead of deadlocking.
+//! * **Backend parity** — the PJRT gather backend (stub dispatch) is
+//!   bitwise-equal to the CPU tile walk for every planner, per head and
+//!   batched, sequential and pipelined, over flat K/V and through the
+//!   paged-KV route (`PagedKvStore::gather` as the executor's KvSource).
 
 use anchor_attention::attention::anchor::AnchorConfig;
+use anchor_attention::attention::exec::{CpuTileExecutor, Executor, PjrtGatherExecutor};
+use anchor_attention::coordinator::kv_cache::{PagedExecutor, PagedKvStore};
 use anchor_attention::attention::pipeline::{run_planner_batch_pipelined, PlanPipeline};
 use anchor_attention::attention::plan::{PlanCache, PlanKey, Planner, SparsePlan};
 use anchor_attention::attention::baselines::block_topk::BlockTopKConfig;
@@ -321,12 +327,130 @@ fn poisoned_planner_worker_errors_instead_of_deadlocking() {
     let batch = BatchInput::new(heads);
     for (depth, workers) in [(1, 1), (2, 2), (2, 4)] {
         let pipe = PlanPipeline { depth, workers };
-        let err = run_planner_batch_pipelined(&PanicPlanner, &batch, None, &pipe)
-            .expect_err("panicking planner must surface an error");
+        let err = run_planner_batch_pipelined(
+            &PanicPlanner,
+            &batch,
+            None,
+            &pipe,
+            &CpuTileExecutor::default(),
+        )
+        .expect_err("panicking planner must surface an error");
         assert!(
             err.contains("identification worker died"),
             "depth {depth} workers {workers}: {err}"
         );
+    }
+}
+
+/// Backend parity, per head: for every method's plan the PJRT gather
+/// backend (lowering + stub dispatch + host interpretation) is
+/// bitwise-equal to the CPU tile walk, over flat K/V and through the
+/// paged-KV route with a non-identity page table.
+#[test]
+fn prop_executor_backends_bitwise_equal_for_all_planners() {
+    let cfg = Config::heavy(12, 0xE7EC);
+    check(&cfg, gen_case, shrink_case, |c| {
+        let mut rng = Pcg64::seeded(c.seed);
+        let h = rand_head(&mut rng, c.n, c.d);
+        let m = method_for(c);
+        let head_plan = m.plan(&h);
+        let cpu = CpuTileExecutor::default();
+        let pjrt = PjrtGatherExecutor::new();
+        let a = cpu.execute(&h, &head_plan);
+        let b = pjrt.execute(&h, &head_plan);
+        ensure(
+            a.out.data == b.out.data,
+            format!("{}: pjrt backend not bitwise-equal on flat K/V", m.name()),
+        )?;
+        ensure(a.cost == b.cost, format!("{}: pjrt cost differs", m.name()))?;
+
+        // Paged route: same rows behind a reversed page table.
+        let page_tokens = 16;
+        let n_pages = c.n.div_ceil(page_tokens);
+        let mut store = PagedKvStore::new(n_pages, page_tokens, c.d);
+        let pages: Vec<u32> = (0..n_pages as u32).rev().collect();
+        for pos in 0..c.n {
+            store
+                .write(&pages, pos, h.k.row(pos), h.v.row(pos))
+                .map_err(|e| e.to_string())?;
+        }
+        for backend in [&cpu as &dyn Executor, &pjrt as &dyn Executor] {
+            let paged = PagedExecutor::new(&store, &pages, backend)
+                .try_execute(&h.q, &head_plan)
+                .map_err(|e| e.to_string())?;
+            ensure(
+                a.out.data == paged.out.data,
+                format!("{}: {} paged route not bitwise-equal", m.name(), backend.name()),
+            )?;
+            ensure(
+                a.cost == paged.cost,
+                format!("{}: {} paged cost differs", m.name(), backend.name()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Backend parity, batched: for all six methods the PJRT backend matches
+/// the CPU backend bitwise on the sequential batched path, the cached
+/// path, and the pipelined path (hit accounting included).
+#[test]
+fn pjrt_backend_matches_cpu_sequential_and_pipelined_for_all_six_methods() {
+    let mut rng = Pcg64::seeded(0xB4C7);
+    let heads: Vec<HeadInput> = (0..4).map(|_| rand_head(&mut rng, 128, 8)).collect();
+    let batch = BatchInput::new(heads);
+    let keys = vec![
+        PlanKey::new(0, 0),
+        PlanKey::new(0, 0),
+        PlanKey::new(0, 1),
+        PlanKey::new(0, 1),
+    ];
+    let pipe = PlanPipeline::default();
+    let pjrt = PjrtGatherExecutor::new();
+    for method_idx in 0..6 {
+        let c = ParityCase { seed: 5, n: 128, d: 8, method_idx, theta: 3.0, step: 2 };
+        let m = method_for(&c);
+
+        let seq_cpu = m.run_batch(&batch);
+        let seq_pjrt = m.run_batch_with(&batch, &pjrt);
+        let piped_pjrt = m
+            .run_batch_pipelined_with(&batch, &pipe, &pjrt)
+            .unwrap_or_else(|e| panic!("{}: pjrt pipelined run failed: {e}", m.name()));
+        for (h, a) in seq_cpu.outputs.iter().enumerate() {
+            assert_eq!(
+                a.out.data, seq_pjrt.outputs[h].out.data,
+                "{} head {h}: pjrt sequential differs from cpu",
+                m.name()
+            );
+            assert_eq!(a.cost, seq_pjrt.outputs[h].cost, "{} head {h}: cost", m.name());
+            assert_eq!(
+                a.out.data, piped_pjrt.batch.outputs[h].out.data,
+                "{} head {h}: pjrt pipelined differs from cpu sequential",
+                m.name()
+            );
+            assert_eq!(a.cost, piped_pjrt.batch.outputs[h].cost, "{} head {h}", m.name());
+        }
+
+        let cache_cpu = PlanCache::new();
+        let cache_pjrt = PlanCache::new();
+        let cached_cpu = m.run_batch_cached(&batch, &cache_cpu, &keys);
+        let cached_pjrt = m
+            .run_batch_cached_pipelined_with(&batch, &cache_pjrt, &keys, &pipe, &pjrt)
+            .unwrap_or_else(|e| panic!("{}: cached pjrt pipelined failed: {e}", m.name()));
+        assert_eq!(
+            (cached_cpu.cache_hits, cached_cpu.cache_misses),
+            (cached_pjrt.batch.cache_hits, cached_pjrt.batch.cache_misses),
+            "{}: hit accounting differs across backends",
+            m.name()
+        );
+        for (h, a) in cached_cpu.outputs.iter().enumerate() {
+            assert_eq!(
+                a.out.data, cached_pjrt.batch.outputs[h].out.data,
+                "{} head {h}: cached pjrt pipelined differs",
+                m.name()
+            );
+            assert_eq!(a.cost, cached_pjrt.batch.outputs[h].cost, "{} head {h}", m.name());
+        }
     }
 }
 
