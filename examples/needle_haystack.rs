@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     println!("{}", "─".repeat(58));
     for m in paper_methods(n, tile, 12.0) {
         let e = evaluate(&wl.head, &m, tile);
-        let out = m.run(&wl.head);
+        let out = m.session().no_cache().build()?.run(&wl.head)?.into_single();
         let last_qb = out.coverage.q_blocks() - 1;
         let covered = out.coverage.covered(last_qb, needle.position);
         let acc = niah_accuracy(&wl.head, &out.coverage, &out.out, &full.out, needle.position, tile);

@@ -281,7 +281,7 @@ mod tests {
             },
         );
         let plan = m.plan(&h);
-        let out = m.run(&h);
+        let out = m.session().no_cache().build().unwrap().run(&h).unwrap().into_single();
         let from_plan = plan_recall(&h, &plan);
         let from_exec = recall(&h, &out.coverage, plan.tile);
         assert!((from_plan.mean_recall - from_exec.mean_recall).abs() < 1e-12);

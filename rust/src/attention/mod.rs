@@ -4,16 +4,21 @@
 //! latencies are directly comparable (the paper's A100/Triton testbed is
 //! substituted by this engine — see DESIGN.md §1).
 //!
-//! Architecture (DESIGN.md §2/§10): every method is a [`plan::Planner`]
+//! Architecture (DESIGN.md §2/§10/§11): every method is a [`plan::Planner`]
 //! that identifies a [`plan::SparsePlan`] (coordinates only); a swappable
 //! executor backend ([`exec::Executor`] — CPU tile walk or PJRT gather)
-//! computes exact softmax attention restricted to the plan. [`Method::run`]
-//! is the thin per-head wrapper; [`Method::run_batch`] executes a
-//! multi-head [`plan::BatchInput`] at head granularity with optional
-//! plan-cache reuse across head groups (`_with` variants take an explicit
-//! backend); [`Method::run_batch_pipelined`] overlaps identification with
-//! execution through the bounded plan queue ([`pipeline::PlanPipeline`],
-//! DESIGN.md §9) with bitwise-identical results.
+//! computes exact softmax attention restricted to the plan. The single
+//! entry point is [`session::AttentionSession`]: a builder fixes the
+//! backend, plan cache, pipelining and persistence once, and
+//! `session.run(&HeadInput)` / `session.run_batch(&BatchInput)` dispatch
+//! the right variant internally — sequential or overlapped through the
+//! bounded plan queue ([`pipeline::PlanPipeline`], DESIGN.md §9) with
+//! bitwise-identical results.
+//!
+//! The pre-session entry points ([`Method::run`], [`Method::run_batch`],
+//! [`Method::run_batch_cached`], `Method::run_batch_pipelined`) survive
+//! one release as `#[deprecated]` shims over the session dispatch path;
+//! their six `*_with` explicit-backend duplicates are gone.
 //!
 //! Layout convention: row-major `[N, d]` matrices for Q, K, V per head,
 //! causal masking, logits scaled by `1/sqrt(d)`.
@@ -26,6 +31,7 @@ pub mod mask;
 pub mod metrics;
 pub mod pipeline;
 pub mod plan;
+pub mod session;
 pub mod strategy;
 
 use crate::tensor::Mat;
@@ -187,25 +193,59 @@ impl Method {
         self.planner().plan(input)
     }
 
-    /// Run the method on one head: plan, execute, fold identification cost.
-    pub fn run(&self, input: &HeadInput) -> AttnOutput {
-        plan::run_planner(input, self.planner().as_ref())
+    /// The `(tile, step)` geometry this method's planner emits (anchor
+    /// plans carry the config's `step`; every other planner emits step-1
+    /// plans). Sessions use it to reject persisted plans whose geometry
+    /// disagrees with the method configuration — a store model tag names
+    /// a config cell by convention, but geometry mismatches are cheap to
+    /// catch structurally (DESIGN.md §11).
+    pub(crate) fn plan_geometry(&self) -> (TileConfig, usize) {
+        match self {
+            Method::Full(tile) => (*tile, 1),
+            Method::Anchor(cfg) => (cfg.tile, cfg.step),
+            Method::Streaming(cfg) => (cfg.tile, 1),
+            Method::VerticalSlash(cfg) => (cfg.tile, 1),
+            Method::FlexPrefill(cfg) => (cfg.tile, 1),
+            Method::BlockTopK(cfg) => (cfg.tile, 1),
+        }
     }
 
-    /// As [`Method::run`] on an explicit executor backend.
-    pub fn run_with(&self, input: &HeadInput, executor: &dyn Executor) -> AttnOutput {
-        plan::run_planner_with(input, self.planner().as_ref(), executor)
+    /// Run the method on one head: plan, execute, fold identification cost.
+    ///
+    /// Deprecated shim over the session dispatch path — an uncached
+    /// [`session::AttentionSession`] built per call, so behavior (and
+    /// bits) match the historical fused entry exactly.
+    #[deprecated(
+        since = "0.3.0",
+        note = "build an AttentionSession (Method::session()) and call run — DESIGN.md §11"
+    )]
+    pub fn run(&self, input: &HeadInput) -> AttnOutput {
+        self.session()
+            .no_cache()
+            .build()
+            .expect("default session config is infallible")
+            .run(input)
+            .expect("uncached single-head run cannot fail")
+            .into_single()
     }
 
     /// Run the method on a multi-head batch, parallelizing at head
     /// granularity; each head's plan is built independently.
+    ///
+    /// Deprecated shim over the session dispatch path (uncached,
+    /// sequential, CPU backend).
+    #[deprecated(
+        since = "0.3.0",
+        note = "build an AttentionSession (Method::session()) and call run_batch — DESIGN.md §11"
+    )]
     pub fn run_batch(&self, batch: &BatchInput) -> BatchOutput {
-        self.run_batch_inner(batch, None, &CpuTileExecutor::default())
-    }
-
-    /// As [`Method::run_batch`] on an explicit executor backend.
-    pub fn run_batch_with(&self, batch: &BatchInput, executor: &dyn Executor) -> BatchOutput {
-        self.run_batch_inner(batch, None, executor)
+        self.session()
+            .no_cache()
+            .build()
+            .expect("default session config is infallible")
+            .run_batch(batch)
+            .expect("uncached sequential batch cannot fail")
+            .into_batch()
     }
 
     /// As [`Method::run_batch`] but with a [`PlanCache`]: `keys[h]` names
@@ -213,32 +253,32 @@ impl Method {
     /// the first-planned head's identification work (§3.2). Cache hits skip
     /// the ident cost entirely — that saving is what the scheduler's
     /// plan-hit-aware cost model accounts for.
+    ///
+    /// Deprecated shim: sessions *own* their cache (and can persist it);
+    /// borrow-style caching is exactly why this entry is deprecated. The
+    /// dispatch below is the same internal path
+    /// `AttentionSession::run_batch` takes.
+    #[deprecated(
+        since = "0.3.0",
+        note = "build an AttentionSession with .cache()/.keys(); see DESIGN.md §11"
+    )]
     pub fn run_batch_cached(
         &self,
         batch: &BatchInput,
         cache: &PlanCache,
         keys: &[PlanKey],
     ) -> BatchOutput {
-        self.run_batch_cached_with(batch, cache, keys, &CpuTileExecutor::default())
-    }
-
-    /// As [`Method::run_batch_cached`] on an explicit executor backend.
-    pub fn run_batch_cached_with(
-        &self,
-        batch: &BatchInput,
-        cache: &PlanCache,
-        keys: &[PlanKey],
-        executor: &dyn Executor,
-    ) -> BatchOutput {
         assert_eq!(keys.len(), batch.h(), "one PlanKey per head");
-        self.run_batch_inner(batch, Some((cache, keys)), executor)
+        self.run_batch_inner(batch, Some((cache, keys)), &CpuTileExecutor::default())
     }
 
     /// Two-stage batch execution: first resolve one plan per *distinct*
     /// key (parallel planning, no duplicate identification within the
     /// batch), then hand every head to the executor backend's batched
     /// entry. Hit accounting is deterministic: `hits = heads − fresh keys`.
-    fn run_batch_inner(
+    /// This is the sequential half of the session dispatch
+    /// ([`session::AttentionSession::run_batch`]).
+    pub(crate) fn run_batch_inner(
         &self,
         batch: &BatchInput,
         cached: Option<(&PlanCache, &[PlanKey])>,
@@ -386,15 +426,15 @@ mod tests {
         ]
     }
 
-    /// Every method routes through Planner::plan + execute_plan, and the
-    /// plan's coverage/cost agree with what the run reports.
+    /// Every method routes through Planner::plan + the session's executor,
+    /// and the plan's coverage/cost agree with what the run reports.
     #[test]
     fn run_is_plan_plus_execute_for_all_methods() {
         let h = rand_head(77, 128, 16);
         for m in small_methods() {
             let p = m.plan(&h);
             assert_eq!(p.method, m.name());
-            let out = m.run(&h);
+            let out = m.session().no_cache().build().unwrap().run(&h).unwrap().into_single();
             assert_eq!(
                 out.coverage.total_covered(),
                 p.coverage().total_covered(),
@@ -413,11 +453,11 @@ mod tests {
         let heads: Vec<HeadInput> = (0..3).map(|i| rand_head(100 + i, 96, 8)).collect();
         let batch = plan::BatchInput::new(heads.clone());
         for m in small_methods() {
-            let b = m.run_batch(&batch);
+            let b = m.session().no_cache().build().unwrap().run_batch(&batch).unwrap();
             assert_eq!(b.cache_hits, 0);
             assert_eq!(b.cache_misses, 3);
             for (h, out) in heads.iter().zip(&b.outputs) {
-                let single = m.run(h);
+                let single = m.session().no_cache().build().unwrap().run(h).unwrap().into_single();
                 assert!(
                     out.out.max_abs_diff(&single.out) < 1e-6,
                     "{} diverges in batch",
@@ -429,7 +469,8 @@ mod tests {
     }
 
     /// Heads sharing a PlanKey reuse the first head's plan; hits skip the
-    /// identification cost.
+    /// identification cost. The session owns the cache, so a second batch
+    /// on the same session runs warm.
     #[test]
     fn run_batch_cached_shares_plans_within_groups() {
         let shared = rand_head(200, 96, 8);
@@ -446,18 +487,56 @@ mod tests {
             init_blocks: 1,
             use_anchor: true,
         });
-        let cache = plan::PlanCache::new();
-        let b = m.run_batch_cached(&batch, &cache, &keys);
+        let mut session = m.session().keys(keys).build().unwrap();
+        let b = session.run_batch(&batch).unwrap();
         // Distinct keys plan exactly once; the other heads hit.
         assert_eq!((b.cache_hits, b.cache_misses), (1, 2));
         assert!(b.outputs[0].out.max_abs_diff(&b.outputs[1].out) < 1e-6);
         assert!(Arc::ptr_eq(&b.plans[0], &b.plans[1]));
-        assert_eq!(cache.stats().entries, 2);
-        // A second batch over a warm cache is all hits.
-        let b2 = m.run_batch_cached(&batch, &cache, &keys);
+        assert_eq!(session.cache_stats().unwrap().entries, 2);
+        // A second batch over the session's warm cache is all hits.
+        let b2 = session.run_batch(&batch).unwrap();
         assert_eq!((b2.cache_hits, b2.cache_misses), (3, 0));
         // Hit heads do not pay identification cost.
         assert!(b2.outputs[0].cost.flops < b.outputs[0].cost.flops + 1);
         assert_eq!(b2.outputs[1].cost, b2.outputs[0].cost);
+        assert_eq!(b2.ident_cost_paid, CostTally::default());
+    }
+
+    /// The deprecated shims are bitwise-identical to the session API they
+    /// wrap (the one-release compatibility contract, DESIGN.md §11).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_the_session_api() {
+        let heads: Vec<HeadInput> = (0..2).map(|i| rand_head(300 + i, 96, 8)).collect();
+        let batch = plan::BatchInput::new(heads.clone());
+        let keys = vec![plan::PlanKey::new(0, 0), plan::PlanKey::new(0, 0)];
+        for m in small_methods() {
+            let legacy = m.run(&heads[0]);
+            let s = m.session().no_cache().build().unwrap().run(&heads[0]).unwrap();
+            assert_eq!(legacy.out.data, s.outputs[0].out.data, "{}", m.name());
+            assert_eq!(legacy.cost, s.outputs[0].cost, "{}", m.name());
+
+            let legacy_b = m.run_batch(&batch);
+            let s_b = m.session().no_cache().build().unwrap().run_batch(&batch).unwrap();
+            for (a, b) in legacy_b.outputs.iter().zip(&s_b.outputs) {
+                assert_eq!(a.out.data, b.out.data, "{}", m.name());
+                assert_eq!(a.cost, b.cost, "{}", m.name());
+            }
+
+            let cache = plan::PlanCache::new();
+            let legacy_c = m.run_batch_cached(&batch, &cache, &keys);
+            let s_c = m.session().keys(keys.clone()).build().unwrap().run_batch(&batch).unwrap();
+            assert_eq!(
+                (legacy_c.cache_hits, legacy_c.cache_misses),
+                (s_c.cache_hits, s_c.cache_misses),
+                "{}",
+                m.name()
+            );
+            for (a, b) in legacy_c.outputs.iter().zip(&s_c.outputs) {
+                assert_eq!(a.out.data, b.out.data, "{}", m.name());
+                assert_eq!(a.cost, b.cost, "{}", m.name());
+            }
+        }
     }
 }

@@ -5,16 +5,18 @@
 //! [`SparsePlan`] → Executor split made identification a *detachable*
 //! stage, and this module detaches it in time as well: planner workers
 //! identify the plan for head/key *i+1* while the drain stage's
-//! [`Executor`] backend (CPU tile walk by default, any backend via the
-//! `_with` entry points) drains head *i*, communicating through a bounded
-//! two-slot [`OrderedBoundedQueue`] (DESIGN.md §9).
+//! [`Executor`] backend (whichever the session was built with) drains head
+//! *i*, communicating through a bounded two-slot [`OrderedBoundedQueue`]
+//! (DESIGN.md §9). Sessions opt in with `SessionBuilder::pipelined(true)`;
+//! [`run_planner_batch_pipelined`] is the engine the session dispatches
+//! to.
 //!
 //! Guarantees:
 //! * **Determinism** — plans land in submission order regardless of worker
 //!   timing, every head executes against the same plan the sequential path
 //!   would resolve, and the executed arithmetic is identical, so pipelined
-//!   output is **bitwise-equal** to [`Method::run_batch`] /
-//!   [`Method::run_batch_cached`] (property-tested for all six methods).
+//!   output is **bitwise-equal** to the sequential session dispatch
+//!   (property-tested for all six methods).
 //! * **No deadlock on failure** — a panicked planner worker poisons the
 //!   queue; the executor surfaces its message as an `Err` instead of
 //!   blocking forever, and a panicking executor poisons the queue on
@@ -31,7 +33,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::attention::exec::{CpuTileExecutor, Executor};
+use crate::attention::exec::Executor;
 use crate::attention::plan::{BatchInput, BatchOutput, PlanCache, PlanKey, Planner, SparsePlan};
 use crate::attention::{AttnOutput, Method};
 use crate::util::threadpool::{num_threads, panic_message, OrderedBoundedQueue, PoisonOnDrop};
@@ -106,60 +108,35 @@ impl Method {
     /// for head *i+1* run on spare workers while the executor drains head
     /// *i*. Output is bitwise-equal to the sequential path; `Err` carries
     /// the panic message of a failed planner worker.
+    ///
+    /// Deprecated shim over a pipelined uncached session; the cached
+    /// pipelined variants are gone — sessions own the cache.
+    #[deprecated(
+        since = "0.3.0",
+        note = "build an AttentionSession with .pipelined(true); see DESIGN.md §11"
+    )]
     pub fn run_batch_pipelined(
         &self,
         batch: &BatchInput,
         pipe: &PlanPipeline,
     ) -> Result<PipelinedBatchOutput, String> {
-        self.run_batch_pipelined_with(batch, pipe, &CpuTileExecutor::default())
-    }
-
-    /// As [`Method::run_batch_pipelined`] on an explicit executor backend.
-    pub fn run_batch_pipelined_with(
-        &self,
-        batch: &BatchInput,
-        pipe: &PlanPipeline,
-        executor: &dyn Executor,
-    ) -> Result<PipelinedBatchOutput, String> {
-        run_planner_batch_pipelined(self.planner().as_ref(), batch, None, pipe, executor)
-    }
-
-    /// As [`Method::run_batch_cached`] with identification overlapped;
-    /// plan-cache semantics and hit accounting are identical.
-    pub fn run_batch_cached_pipelined(
-        &self,
-        batch: &BatchInput,
-        cache: &PlanCache,
-        keys: &[PlanKey],
-        pipe: &PlanPipeline,
-    ) -> Result<PipelinedBatchOutput, String> {
-        self.run_batch_cached_pipelined_with(batch, cache, keys, pipe, &CpuTileExecutor::default())
-    }
-
-    /// As [`Method::run_batch_cached_pipelined`] on an explicit executor
-    /// backend.
-    pub fn run_batch_cached_pipelined_with(
-        &self,
-        batch: &BatchInput,
-        cache: &PlanCache,
-        keys: &[PlanKey],
-        pipe: &PlanPipeline,
-        executor: &dyn Executor,
-    ) -> Result<PipelinedBatchOutput, String> {
-        run_planner_batch_pipelined(
-            self.planner().as_ref(),
-            batch,
-            Some((cache, keys)),
-            pipe,
-            executor,
-        )
+        let mut session = self
+            .session()
+            .no_cache()
+            .pipeline(*pipe)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let out = session.run_batch(batch).map_err(|e| e.to_string())?;
+        let stats = out.pipeline.unwrap_or_default();
+        Ok(PipelinedBatchOutput { batch: out.into_batch(), stats })
     }
 }
 
 /// Pipelined batch execution against an explicit planner and executor
-/// backend (the [`Method`] wrappers above are the common entry points;
-/// tests inject failing planners here). The drain stage runs on the
-/// calling thread against `executor`, so any [`Executor`] backend —
+/// backend (the common entry point is a pipelined
+/// [`crate::attention::session::AttentionSession`], which dispatches
+/// here; tests inject failing planners directly). The drain stage runs on
+/// the calling thread against `executor`, so any [`Executor`] backend —
 /// CPU tile walk, PJRT gather, paged wrapper — slots under the pipeline
 /// unchanged.
 ///
@@ -311,6 +288,7 @@ pub fn run_planner_batch_pipelined(
 mod tests {
     use super::*;
     use crate::attention::anchor::AnchorConfig;
+    use crate::attention::exec::CpuTileExecutor;
     use crate::attention::{HeadInput, TileConfig};
     use crate::tensor::Mat;
     use crate::util::rng::Pcg64;
@@ -339,17 +317,25 @@ mod tests {
         let heads: Vec<HeadInput> = (0..4).map(|i| rand_head(400 + i, 96, 8)).collect();
         let batch = BatchInput::new(heads);
         let m = anchor_method();
-        let seq = m.run_batch(&batch);
-        let piped = m.run_batch_pipelined(&batch, &PlanPipeline::default()).unwrap();
-        assert_eq!((piped.batch.cache_hits, piped.batch.cache_misses), (0, 4));
-        for (h, (a, b)) in seq.outputs.iter().zip(&piped.batch.outputs).enumerate() {
+        let seq = m.session().no_cache().build().unwrap().run_batch(&batch).unwrap();
+        let piped = m
+            .session()
+            .no_cache()
+            .pipelined(true)
+            .build()
+            .unwrap()
+            .run_batch(&batch)
+            .unwrap();
+        assert_eq!((piped.cache_hits, piped.cache_misses), (0, 4));
+        for (h, (a, b)) in seq.outputs.iter().zip(&piped.outputs).enumerate() {
             assert_eq!(a.out.data, b.out.data, "head {h} output differs bitwise");
             assert_eq!(a.cost, b.cost, "head {h} cost differs");
         }
-        assert_eq!(piped.stats.items, 4);
-        assert!(piped.stats.ident_total_s > 0.0);
-        assert!(piped.stats.wall_s > 0.0);
-        let oe = piped.stats.overlap_efficiency();
+        let stats = piped.pipeline.expect("pipelined session reports stats");
+        assert_eq!(stats.items, 4);
+        assert!(stats.ident_total_s > 0.0);
+        assert!(stats.wall_s > 0.0);
+        let oe = stats.overlap_efficiency();
         assert!((0.0..=1.0).contains(&oe), "overlap efficiency {oe}");
     }
 
@@ -360,41 +346,59 @@ mod tests {
         let keys =
             vec![PlanKey::new(0, 0), PlanKey::new(0, 0), PlanKey::new(0, 1)];
         let m = anchor_method();
-        let cache_seq = PlanCache::new();
-        let cache_pipe = PlanCache::new();
-        let seq = m.run_batch_cached(&batch, &cache_seq, &keys);
-        let piped = m
-            .run_batch_cached_pipelined(&batch, &cache_pipe, &keys, &PlanPipeline::default())
-            .unwrap();
+        let mut seq_session = m.session().keys(keys.clone()).build().unwrap();
+        let mut pipe_session = m.session().keys(keys).pipelined(true).build().unwrap();
+        let seq = seq_session.run_batch(&batch).unwrap();
+        let piped = pipe_session.run_batch(&batch).unwrap();
         assert_eq!(
             (seq.cache_hits, seq.cache_misses),
-            (piped.batch.cache_hits, piped.batch.cache_misses)
+            (piped.cache_hits, piped.cache_misses)
         );
         // Heads of one key share a plan Arc, as in the sequential path.
-        assert!(Arc::ptr_eq(&piped.batch.plans[0], &piped.batch.plans[1]));
-        for (h, (a, b)) in seq.outputs.iter().zip(&piped.batch.outputs).enumerate() {
+        assert!(Arc::ptr_eq(&piped.plans[0], &piped.plans[1]));
+        for (h, (a, b)) in seq.outputs.iter().zip(&piped.outputs).enumerate() {
             assert_eq!(a.out.data, b.out.data, "head {h} output differs bitwise");
             assert_eq!(a.cost, b.cost, "head {h} cost differs");
         }
         // Two distinct keys → two plan items through the queue.
-        assert_eq!(piped.stats.items, 2);
-        // A second pipelined batch over the warm cache is all hits.
-        let warm = m
-            .run_batch_cached_pipelined(&batch, &cache_pipe, &keys, &PlanPipeline::default())
-            .unwrap();
-        assert_eq!((warm.batch.cache_hits, warm.batch.cache_misses), (3, 0));
+        assert_eq!(piped.pipeline.unwrap().items, 2);
+        // A second pipelined batch over the session's warm cache is all
+        // hits and pays no identification.
+        let warm = pipe_session.run_batch(&batch).unwrap();
+        assert_eq!((warm.cache_hits, warm.cache_misses), (3, 0));
+        assert_eq!(warm.ident_cost_paid.ident_scores, 0);
     }
 
     #[test]
     fn single_head_batch_flows_through_the_pipeline() {
         let batch = BatchInput::new(vec![rand_head(600, 64, 8)]);
         let m = anchor_method();
-        let seq = m.run_batch(&batch);
+        let seq = m.session().no_cache().build().unwrap().run_batch(&batch).unwrap();
         let piped = m
-            .run_batch_pipelined(&batch, &PlanPipeline { depth: 1, workers: 1 })
+            .session()
+            .no_cache()
+            .pipeline(PlanPipeline { depth: 1, workers: 1 })
+            .build()
+            .unwrap()
+            .run_batch(&batch)
             .unwrap();
-        assert_eq!(seq.outputs[0].out.data, piped.batch.outputs[0].out.data);
-        assert_eq!(seq.outputs[0].cost, piped.batch.outputs[0].cost);
+        assert_eq!(seq.outputs[0].out.data, piped.outputs[0].out.data);
+        assert_eq!(seq.outputs[0].cost, piped.outputs[0].cost);
+    }
+
+    /// The deprecated pipelined shim wraps the same session dispatch.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_pipelined_shim_matches_session() {
+        let heads: Vec<HeadInput> = (0..3).map(|i| rand_head(650 + i, 64, 8)).collect();
+        let batch = BatchInput::new(heads);
+        let m = anchor_method();
+        let legacy = m.run_batch_pipelined(&batch, &PlanPipeline::default()).unwrap();
+        let s = m.session().no_cache().pipelined(true).build().unwrap().run_batch(&batch).unwrap();
+        for (a, b) in legacy.batch.outputs.iter().zip(&s.outputs) {
+            assert_eq!(a.out.data, b.out.data);
+            assert_eq!(a.cost, b.cost);
+        }
     }
 
     struct PanicPlanner;

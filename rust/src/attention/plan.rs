@@ -15,7 +15,8 @@
 //! ([`SparsePlan::predicted_cost`] mirrors the executors' tile walk
 //! exactly — cost is a property of the coordinates, not of the backend).
 //!
-//! Multi-head execution ([`BatchInput`], [`Method::run_batch`]) parallelizes
+//! Multi-head execution ([`BatchInput`], driven through
+//! [`crate::attention::session::AttentionSession::run_batch`]) parallelizes
 //! at head granularity over the shared threadpool; the per-head executor
 //! then runs serially so the pool is not oversubscribed.
 
@@ -184,14 +185,15 @@ pub trait Planner: Sync + Send {
 /// Execute a plan on one head with the default CPU backend, parallelizing
 /// over groups. The returned cost is the *execution* cost only — callers
 /// fold `plan.ident_cost` in when reporting end-to-end method cost.
-/// (The tile walk itself lives in [`CpuTileExecutor`]; pass a different
-/// [`Executor`] to the `_with` entry points to swap backends.)
+/// (The tile walk itself lives in [`CpuTileExecutor`]; sessions swap
+/// backends via `SessionBuilder::executor`, DESIGN.md §11.)
 pub fn execute_plan(input: &HeadInput, plan: &SparsePlan) -> AttnOutput {
     CpuTileExecutor::default().execute(input, plan)
 }
 
 /// Plan + execute + fold the identification cost into the reported tally —
-/// the thin wrapper the old fused per-head entry points reduce to.
+/// the per-head primitive `AttentionSession::run` and the fused method
+/// wrappers (`anchor_attention`, …) reduce to.
 pub fn run_planner(input: &HeadInput, planner: &dyn Planner) -> AttnOutput {
     run_planner_with(input, planner, &CpuTileExecutor::default())
 }
@@ -412,6 +414,24 @@ pub struct PlanCache {
 impl PlanCache {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Insert a pre-built plan (e.g. warmed from a
+    /// [`crate::runtime::manifest::PlanStore`]) without touching the
+    /// hit/miss counters; an existing entry wins. The next `get_or_plan`
+    /// on `key` is a hit that never re-identifies.
+    pub fn seed(&self, key: PlanKey, plan: Arc<SparsePlan>) {
+        self.map.lock().unwrap().entry(key).or_insert(plan);
+    }
+
+    /// Current entries as `(key, plan)` pairs in deterministic key order —
+    /// the shape a persisting session syncs its plan store from after a
+    /// run.
+    pub fn snapshot(&self) -> Vec<(PlanKey, Arc<SparsePlan>)> {
+        let mut out: Vec<(PlanKey, Arc<SparsePlan>)> =
+            self.map.lock().unwrap().iter().map(|(k, p)| (*k, p.clone())).collect();
+        out.sort_by_key(|(k, _)| (k.layer, k.head_group));
+        out
     }
 
     /// Fetch the plan for `key`, building it with `build` on a miss.

@@ -1,0 +1,902 @@
+//! [`AttentionSession`] — the single entry point to the attention engine.
+//!
+//! Three PRs of growth (Planner → [`SparsePlan`] → Executor split, the
+//! async plan pipeline, pluggable backends) each added an orthogonal knob
+//! to [`Method`], leaving a ten-function `run_*` matrix that every new
+//! axis would double again. The session collapses that matrix: a
+//! [`SessionBuilder`] fixes the knobs once —
+//!
+//! ```ignore
+//! let mut session = AttentionSession::builder(method)
+//!     .executor(ExecutorKind::Pjrt)
+//!     .cache(PlanCache::default())
+//!     .pipelined(true)
+//!     .persist("artifacts/manifest.json")
+//!     .build()?;
+//! let out = session.run_batch(&batch)?;
+//! ```
+//!
+//! — and exactly two run methods ([`AttentionSession::run`],
+//! [`AttentionSession::run_batch`]) dispatch the cached / pipelined /
+//! backend variants internally, returning a [`SessionOutput`] that unifies
+//! the per-head and batched results with hit-rate, identification-cost and
+//! [`PipelineStats`] accounting.
+//!
+//! The session also *owns* plan persistence: built with `persist(path)`,
+//! it warms its [`PlanCache`] from the runtime manifest's
+//! [`PlanStore`] at first use (per sequence length) and files fresh plans
+//! back, so the paper's identification amortization (§3.2 cross-input
+//! commonality) extends across process restarts — a restarted process
+//! reports a plan-cache hit on the first batch for a previously seen
+//! `(model, layer, head_group, n)` key. `flush` (or drop) writes the
+//! store back. Lifecycle: **build → warm-from-store → run → flush**
+//! (DESIGN.md §11).
+//!
+//! Misconfiguration fails at `build()`, never at run time: a pipelined
+//! session on the serial CPU walk, a persistence path without a runtime
+//! manifest, and persistence with the cache disabled are all rejected
+//! with descriptive errors.
+//!
+//! Caveat on cache keys: the [`PlanCache`] is keyed by `(layer,
+//! head_group)` — reusing one session across *unrelated* inputs that
+//! collide on a key would serve stale plans. Sessions running arbitrary
+//! per-head inputs (experiments, latency probes) should `no_cache()`;
+//! cached sessions are for serving-shaped workloads where a key names a
+//! stable GQA cell.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::attention::exec::{CpuTileExecutor, Executor, ExecutorKind, PjrtGatherExecutor};
+use crate::attention::pipeline::{run_planner_batch_pipelined, PipelineStats, PlanPipeline};
+use crate::attention::plan::{
+    BatchInput, BatchOutput, PlanCache, PlanCacheStats, PlanKey, SparsePlan,
+};
+use crate::attention::{AttnOutput, CostTally, HeadInput, Method};
+use crate::runtime::manifest::{PlanStore, PlanStoreKey};
+
+/// How a session assigns [`PlanKey`]s to the heads of a batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KeyPolicy {
+    /// `keys[h] = (layer, h / group_size)` — GQA-style grouping; the
+    /// default (`layer = 0, group_size = 1`) gives every head its own key.
+    Gqa { layer: u32, group_size: usize },
+    /// Explicit per-head keys; `run_batch` rejects batches whose head
+    /// count disagrees.
+    Explicit(Vec<PlanKey>),
+}
+
+impl KeyPolicy {
+    fn keys_for(&self, heads: usize) -> Result<Vec<PlanKey>> {
+        match self {
+            KeyPolicy::Gqa { layer, group_size } => Ok((0..heads)
+                .map(|h| PlanKey::new(*layer, (h / group_size) as u32))
+                .collect()),
+            KeyPolicy::Explicit(keys) => {
+                if keys.len() != heads {
+                    return Err(anyhow!(
+                        "session has {} explicit plan keys but the batch has {heads} heads",
+                        keys.len()
+                    ));
+                }
+                Ok(keys.clone())
+            }
+        }
+    }
+
+    fn key_of(&self, h: usize) -> Result<PlanKey> {
+        match self {
+            KeyPolicy::Gqa { layer, group_size } => {
+                Ok(PlanKey::new(*layer, (h / group_size) as u32))
+            }
+            KeyPolicy::Explicit(keys) => keys.get(h).copied().ok_or_else(|| {
+                anyhow!("head {h} has no explicit plan key ({} configured)", keys.len())
+            }),
+        }
+    }
+}
+
+/// Declarative session settings — the config file's `"session"` block and
+/// the CLI flags behind it. [`SessionConfig::builder`] turns them into a
+/// [`SessionBuilder`] for a concrete method.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionConfig {
+    pub executor: ExecutorKind,
+    pub pipelined: bool,
+    /// Enable the session-owned [`PlanCache`] (on by default; persistence
+    /// requires it).
+    pub cache: bool,
+    /// Runtime-manifest path plans persist into (`--plan-store`).
+    pub plan_store: Option<String>,
+    /// Model identifier plans are keyed under in the store.
+    pub model: String,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            executor: ExecutorKind::Cpu,
+            pipelined: false,
+            cache: true,
+            plan_store: None,
+            model: "default".to_string(),
+        }
+    }
+}
+
+impl SessionConfig {
+    /// A builder for `method` with this config applied.
+    pub fn builder(&self, method: Method) -> SessionBuilder {
+        let mut b = AttentionSession::builder(method)
+            .executor(self.executor)
+            .pipelined(self.pipelined)
+            .model(&self.model);
+        if !self.cache {
+            b = b.no_cache();
+        }
+        if let Some(p) = &self.plan_store {
+            b = b.persist(p);
+        }
+        b
+    }
+}
+
+/// Builder for [`AttentionSession`]; every knob of the old `run_*` matrix
+/// is set here exactly once. Misconfiguration fails at
+/// [`SessionBuilder::build`] with a descriptive error, never at run time.
+pub struct SessionBuilder {
+    method: Method,
+    executor: ExecutorKind,
+    serial_cpu: bool,
+    cache: Option<PlanCache>,
+    keys: KeyPolicy,
+    pipelined: bool,
+    pipeline: PlanPipeline,
+    persist: Option<PathBuf>,
+    model: String,
+}
+
+impl SessionBuilder {
+    fn new(method: Method) -> Self {
+        Self {
+            method,
+            executor: ExecutorKind::Cpu,
+            serial_cpu: false,
+            cache: Some(PlanCache::new()),
+            keys: KeyPolicy::Gqa { layer: 0, group_size: 1 },
+            pipelined: false,
+            pipeline: PlanPipeline::default(),
+            persist: None,
+            model: "default".to_string(),
+        }
+    }
+
+    /// Executor backend (`cpu` | `pjrt`).
+    pub fn executor(mut self, kind: ExecutorKind) -> Self {
+        self.executor = kind;
+        self
+    }
+
+    /// Run the CPU tile walk serially (debug/determinism aid). Only valid
+    /// with the CPU executor and a non-pipelined session.
+    pub fn serial_cpu(mut self, serial: bool) -> Self {
+        self.serial_cpu = serial;
+        self
+    }
+
+    /// Use the given plan cache — e.g. one pre-warmed elsewhere — instead
+    /// of the default fresh cache. Pre-warmed entries must hold plans for
+    /// the first run's sequence length (the executor rejects wrong-length
+    /// plans); later length changes invalidate and re-warm as usual.
+    pub fn cache(mut self, cache: PlanCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Disable plan caching: every run re-identifies. Incompatible with
+    /// `persist` (a store has nothing to warm).
+    pub fn no_cache(mut self) -> Self {
+        self.cache = None;
+        self
+    }
+
+    /// Explicit per-head plan keys for `run_batch`.
+    pub fn keys(mut self, keys: Vec<PlanKey>) -> Self {
+        self.keys = KeyPolicy::Explicit(keys);
+        self
+    }
+
+    /// GQA-style key assignment: `keys[h] = (layer, h / group_size)`.
+    pub fn gqa_keys(mut self, layer: u32, group_size: usize) -> Self {
+        self.keys = KeyPolicy::Gqa { layer, group_size };
+        self
+    }
+
+    /// Overlap identification with execution through the bounded plan
+    /// queue (DESIGN.md §9); output stays bitwise-equal to sequential.
+    pub fn pipelined(mut self, pipelined: bool) -> Self {
+        self.pipelined = pipelined;
+        self
+    }
+
+    /// Pipeline shape (queue depth / planner workers); implies
+    /// `pipelined(true)`.
+    pub fn pipeline(mut self, pipe: PlanPipeline) -> Self {
+        self.pipeline = pipe;
+        self.pipelined = true;
+        self
+    }
+
+    /// Persist plans into the runtime manifest at `path` (warm on build,
+    /// flush on [`AttentionSession::flush`] / drop). The manifest must
+    /// already exist; requires the cache.
+    pub fn persist(mut self, path: impl Into<PathBuf>) -> Self {
+        self.persist = Some(path.into());
+        self
+    }
+
+    /// Model identifier plans are keyed under in the store.
+    pub fn model(mut self, model: &str) -> Self {
+        self.model = model.to_string();
+        self
+    }
+
+    /// Validate the configuration and assemble the session.
+    pub fn build(self) -> Result<AttentionSession> {
+        if let KeyPolicy::Gqa { group_size, .. } = self.keys {
+            if group_size == 0 {
+                return Err(anyhow!("session key policy: group_size must be >= 1"));
+            }
+        }
+        if self.serial_cpu && self.executor != ExecutorKind::Cpu {
+            return Err(anyhow!(
+                "serial_cpu applies to the cpu executor; the session names '{}'",
+                self.executor.name()
+            ));
+        }
+        if self.pipelined && self.serial_cpu {
+            return Err(anyhow!(
+                "pipelined session on the serial CPU executor: the drain stage would run \
+                 single-threaded with nothing to overlap against — drop serial_cpu(true) \
+                 or pipelined(true)"
+            ));
+        }
+        if self.persist.is_some() && self.cache.is_none() {
+            return Err(anyhow!(
+                "plan persistence requires the plan cache: a session built with \
+                 persist()/--plan-store but no_cache() has nothing to warm or flush — \
+                 re-enable the cache or drop the persistence path"
+            ));
+        }
+        // No context wrap: the store's own error already names the path and
+        // the fix, and the vendored `anyhow` displays only the outermost
+        // message.
+        let store = match &self.persist {
+            Some(path) => Some(PlanStore::open(path)?),
+            None => None,
+        };
+        let executor: Box<dyn Executor> = match self.executor {
+            ExecutorKind::Cpu => Box::new(CpuTileExecutor { serial: self.serial_cpu }),
+            ExecutorKind::Pjrt => Box::new(PjrtGatherExecutor::new()),
+        };
+        Ok(AttentionSession {
+            method: self.method,
+            executor,
+            executor_kind: self.executor,
+            cache: self.cache,
+            keys: self.keys,
+            pipelined: self.pipelined,
+            pipeline: self.pipeline,
+            store,
+            model: self.model,
+            current_n: None,
+            store_seeded: 0,
+        })
+    }
+}
+
+/// Unified result of [`AttentionSession::run`] / `run_batch`: per-head
+/// outputs and plans plus the cache, identification-cost and pipeline
+/// accounting the old `AttnOutput`/`BatchOutput`/`PipelinedBatchOutput`
+/// trio split across three shapes.
+#[derive(Debug)]
+pub struct SessionOutput {
+    pub outputs: Vec<AttnOutput>,
+    /// Plans used per head (cache-shared heads hold the same `Arc`).
+    pub plans: Vec<Arc<SparsePlan>>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Identification cost actually paid this run (fresh keys only; a
+    /// fully warm run reports zero — the fig2 cold-vs-warm column).
+    pub ident_cost_paid: CostTally,
+    /// Overlap accounting when the session pipelines batches.
+    pub pipeline: Option<PipelineStats>,
+}
+
+impl SessionOutput {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// The single head's output (panics on a multi-head result).
+    pub fn single(&self) -> &AttnOutput {
+        assert_eq!(self.outputs.len(), 1, "single() on a multi-head output");
+        &self.outputs[0]
+    }
+
+    /// Consume into the single head's output (panics on a multi-head
+    /// result).
+    pub fn into_single(self) -> AttnOutput {
+        assert_eq!(self.outputs.len(), 1, "into_single() on a multi-head output");
+        self.outputs.into_iter().next().expect("one output")
+    }
+
+    /// Consume into the legacy batched shape (used by the deprecated
+    /// shims).
+    pub fn into_batch(self) -> BatchOutput {
+        BatchOutput {
+            outputs: self.outputs,
+            plans: self.plans,
+            cache_hits: self.cache_hits,
+            cache_misses: self.cache_misses,
+        }
+    }
+}
+
+/// A configured attention session: one method, one executor backend, one
+/// plan cache (optionally manifest-persisted), two run methods.
+pub struct AttentionSession {
+    method: Method,
+    executor: Box<dyn Executor>,
+    executor_kind: ExecutorKind,
+    cache: Option<PlanCache>,
+    keys: KeyPolicy,
+    pipelined: bool,
+    pipeline: PlanPipeline,
+    store: Option<PlanStore>,
+    model: String,
+    /// Sequence length the cache is currently warmed for; a different `n`
+    /// invalidates and re-warms (plan keys carry no length).
+    current_n: Option<usize>,
+    store_seeded: u64,
+}
+
+impl AttentionSession {
+    pub fn builder(method: Method) -> SessionBuilder {
+        SessionBuilder::new(method)
+    }
+
+    pub fn method(&self) -> &Method {
+        &self.method
+    }
+
+    pub fn executor_kind(&self) -> ExecutorKind {
+        self.executor_kind
+    }
+
+    pub fn is_pipelined(&self) -> bool {
+        self.pipelined
+    }
+
+    /// Cache counters, when the session caches plans.
+    pub fn cache_stats(&self) -> Option<PlanCacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Persisted-plan count, when the session persists.
+    pub fn store_len(&self) -> Option<usize> {
+        self.store.as_ref().map(|s| s.len())
+    }
+
+    /// Persisted-plan count under this session's model tag, when the
+    /// session persists — entries other cells filed can never seed this
+    /// session, so warm-start expectations should read this, not
+    /// [`AttentionSession::store_len`].
+    pub fn store_len_for_model(&self) -> Option<usize> {
+        self.store.as_ref().map(|s| s.len_for_model(&self.model))
+    }
+
+    /// Persisted-plan count this session could actually seed from
+    /// (model tag + method + plan geometry, any length) — the honest
+    /// input to warm-start expectations like the serve plan-hit prior.
+    pub fn store_len_compatible(&self) -> Option<usize> {
+        let store = self.store.as_ref()?;
+        let (tile, step) = self.method.plan_geometry();
+        Some(store.len_compatible(&self.model, self.method.name(), tile, step))
+    }
+
+    /// Store-to-cache seeding events so far (warm-start observability).
+    /// Counts every seed, so a session alternating sequence lengths
+    /// re-counts entries on each re-warm — a rate of re-warming, not a
+    /// distinct-plan count.
+    pub fn store_seeded(&self) -> u64 {
+        self.store_seeded
+    }
+
+    /// Warm the cache for sequence length `n` at head dim `d`: on a
+    /// length change the cache is invalidated (keys carry no length) and
+    /// re-seeded from the store's `(model, *, *, n)` entries whose method,
+    /// plan geometry (tile, step) *and* priced head dim all match — a
+    /// persisted plan from a differently-configured method (another
+    /// anchor `step`, a different `d`) must re-identify, never serve
+    /// stale coordinates or mispriced costs, even when the caller reused
+    /// a model tag.
+    fn prepare_cache(&mut self, n: usize, d: usize) {
+        let Some(cache) = &self.cache else { return };
+        if self.current_n == Some(n) {
+            return;
+        }
+        // Invalidate only on an actual length change: the first run must
+        // not wipe a cache the caller pre-warmed via `.cache()`.
+        if self.current_n.is_some() {
+            cache.invalidate();
+        }
+        if let Some(store) = &self.store {
+            let (tile, step) = self.method.plan_geometry();
+            let name = self.method.name();
+            for (key, entry_d, plan) in store.plans_for(&self.model, n) {
+                if plan.method == name && plan.tile == tile && plan.step == step && entry_d == d {
+                    cache.seed(key, plan);
+                    self.store_seeded += 1;
+                }
+            }
+        }
+        self.current_n = Some(n);
+    }
+
+    /// File every cached plan for length `n` into the store (no-op when
+    /// the session does not persist). Store-seeded and previously filed
+    /// entries hold the same `Arc`, so the steady-state sync is a pointer
+    /// compare per entry — no deep work, no dirtying.
+    fn sync_store(&mut self, n: usize, d: usize) {
+        if self.store.is_none() {
+            return;
+        }
+        let Some(cache) = &self.cache else { return };
+        let snapshot = cache.snapshot();
+        let store = self.store.as_mut().expect("store checked above");
+        for (key, plan) in snapshot {
+            // A caller-warmed cache may hold other-length plans the batch
+            // never touched; never file those under this length's key.
+            if plan.n != n {
+                continue;
+            }
+            store.insert(
+                PlanStoreKey {
+                    model: self.model.clone(),
+                    layer: key.layer,
+                    head_group: key.head_group,
+                    n,
+                },
+                d,
+                plan,
+            );
+        }
+    }
+
+    /// Run the method on one head. Sequential (per-head work has nothing
+    /// to overlap); consults the cache via the head-0 key when caching is
+    /// enabled, otherwise identifies fresh like the legacy `Method::run`.
+    pub fn run(&mut self, input: &HeadInput) -> Result<SessionOutput> {
+        let n = input.n();
+        self.prepare_cache(n, input.d());
+        let planner = self.method.planner();
+        let (plan, hit) = match &self.cache {
+            Some(cache) => {
+                let key = self.keys.key_of(0)?;
+                cache.get_or_plan(key, || planner.plan(input))
+            }
+            None => (Arc::new(planner.plan(input)), false),
+        };
+        let mut out = self.executor.execute(input, &plan);
+        let mut ident_paid = CostTally::default();
+        if !hit {
+            out.cost.add(plan.ident_cost);
+            ident_paid.add(plan.ident_cost);
+        }
+        self.sync_store(n, input.d());
+        Ok(SessionOutput {
+            outputs: vec![out],
+            plans: vec![plan],
+            cache_hits: u64::from(hit),
+            cache_misses: u64::from(!hit),
+            ident_cost_paid: ident_paid,
+            pipeline: None,
+        })
+    }
+
+    /// Run the method on a multi-head batch, dispatching the sequential or
+    /// pipelined path on the configured backend, with cache semantics and
+    /// hit accounting identical to the legacy cached entry points —
+    /// bitwise-equal outputs in every configuration.
+    pub fn run_batch(&mut self, batch: &BatchInput) -> Result<SessionOutput> {
+        let n = batch.n();
+        self.prepare_cache(n, batch.d());
+        let keys = match &self.cache {
+            Some(_) => Some(self.keys.keys_for(batch.h())?),
+            None => None,
+        };
+        let (out, stats) = {
+            let cached = match (&self.cache, &keys) {
+                (Some(c), Some(k)) => Some((c, k.as_slice())),
+                _ => None,
+            };
+            if self.pipelined {
+                let planner = self.method.planner();
+                let piped = run_planner_batch_pipelined(
+                    planner.as_ref(),
+                    batch,
+                    cached,
+                    &self.pipeline,
+                    self.executor.as_ref(),
+                )
+                .map_err(|e| anyhow!("pipelined batch failed: {e}"))?;
+                (piped.batch, Some(piped.stats))
+            } else {
+                (self.method.run_batch_inner(batch, cached, self.executor.as_ref()), None)
+            }
+        };
+        let BatchOutput { outputs, plans, cache_hits, cache_misses } = out;
+        // A head pays identification iff its reported cost exceeds the
+        // plan's pure execution cost (executors tally exactly
+        // `predicted_cost` — a tested invariant), which recovers the
+        // fresh-key attribution without re-deriving it here.
+        let mut ident_paid = CostTally::default();
+        for (o, p) in outputs.iter().zip(&plans) {
+            if o.cost != p.predicted_cost {
+                ident_paid.add(p.ident_cost);
+            }
+        }
+        // Persistence syncs from the cache, not from the payer set, so
+        // fresh plans with zero identification cost (full-attn,
+        // streaming-llm) are filed too and the restart warm-start
+        // guarantee holds for every method.
+        self.sync_store(n, batch.d());
+        Ok(SessionOutput {
+            outputs,
+            plans,
+            cache_hits,
+            cache_misses,
+            ident_cost_paid: ident_paid,
+            pipeline: stats,
+        })
+    }
+
+    /// Write filed plans back to the runtime manifest (no-op when the
+    /// session does not persist or nothing changed). Also runs on drop,
+    /// best-effort.
+    pub fn flush(&mut self) -> Result<()> {
+        match self.store.as_mut() {
+            Some(store) => store.flush(),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for AttentionSession {
+    fn drop(&mut self) {
+        if let Some(store) = self.store.as_mut() {
+            let _ = store.flush();
+        }
+    }
+}
+
+impl Method {
+    /// Session builder for this method — the replacement for the
+    /// deprecated `run_*` entry-point matrix (DESIGN.md §11).
+    pub fn session(&self) -> SessionBuilder {
+        AttentionSession::builder(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::anchor::AnchorConfig;
+    use crate::attention::plan::run_planner;
+    use crate::attention::TileConfig;
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn anchor_method() -> Method {
+        Method::Anchor(AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta: 4.0,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        })
+    }
+
+    fn tmp_manifest(tag: &str) -> PathBuf {
+        let path = std::env::temp_dir()
+            .join(format!("anchor_session_{}_{tag}.json", std::process::id()));
+        std::fs::write(&path, "{}\n").unwrap();
+        path
+    }
+
+    #[test]
+    fn session_run_matches_run_planner() {
+        let h = rand_head(11, 96, 8);
+        let m = anchor_method();
+        let legacy = run_planner(&h, m.planner().as_ref());
+        let mut session = m.session().no_cache().build().unwrap();
+        let out = session.run(&h).unwrap();
+        assert_eq!(out.outputs[0].out.data, legacy.out.data);
+        assert_eq!(out.outputs[0].cost, legacy.cost);
+        assert_eq!((out.cache_hits, out.cache_misses), (0, 1));
+        assert_eq!(out.ident_cost_paid, out.plans[0].ident_cost);
+    }
+
+    #[test]
+    fn cached_session_amortizes_identification_across_runs() {
+        let h = rand_head(12, 96, 8);
+        let m = anchor_method();
+        let mut session = m.session().build().unwrap();
+        let cold = session.run(&h).unwrap();
+        let warm = session.run(&h).unwrap();
+        assert_eq!((cold.cache_hits, cold.cache_misses), (0, 1));
+        assert_eq!((warm.cache_hits, warm.cache_misses), (1, 0));
+        assert_eq!(warm.ident_cost_paid, CostTally::default());
+        assert_eq!(warm.outputs[0].cost, warm.plans[0].predicted_cost);
+        assert!(Arc::ptr_eq(&cold.plans[0], &warm.plans[0]));
+        let stats = session.cache_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+    }
+
+    #[test]
+    fn length_change_invalidates_the_cache() {
+        let m = anchor_method();
+        let mut session = m.session().build().unwrap();
+        let a = session.run(&rand_head(13, 96, 8)).unwrap();
+        // Same key, new length: must re-identify, not serve the 96-plan.
+        let b = session.run(&rand_head(14, 64, 8)).unwrap();
+        assert_eq!(a.plans[0].n, 96);
+        assert_eq!(b.plans[0].n, 64);
+        assert_eq!((b.cache_hits, b.cache_misses), (0, 1));
+    }
+
+    #[test]
+    fn explicit_keys_must_match_batch_heads() {
+        let m = anchor_method();
+        let mut session = m.session().keys(vec![PlanKey::new(0, 0)]).build().unwrap();
+        let batch = BatchInput::new(vec![rand_head(15, 64, 8), rand_head(16, 64, 8)]);
+        let err = session.run_batch(&batch).unwrap_err().to_string();
+        assert!(err.contains("2 heads"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_pipelined_serial_cpu() {
+        let err = anchor_method()
+            .session()
+            .serial_cpu(true)
+            .pipelined(true)
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("serial CPU"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_serial_knob_on_pjrt() {
+        let err = anchor_method()
+            .session()
+            .executor(ExecutorKind::Pjrt)
+            .serial_cpu(true)
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("serial_cpu"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_persistence_without_a_manifest() {
+        let missing = std::env::temp_dir().join("anchor_session_no_manifest.json");
+        let _ = std::fs::remove_file(&missing);
+        let err = anchor_method()
+            .session()
+            .persist(&missing)
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_persistence_with_cache_disabled() {
+        let path = tmp_manifest("nocache");
+        let err = anchor_method()
+            .session()
+            .no_cache()
+            .persist(&path)
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cache"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn build_rejects_zero_group_size() {
+        let err = anchor_method()
+            .session()
+            .gqa_keys(0, 0)
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("group_size"), "{err}");
+    }
+
+    #[test]
+    fn persisted_plans_warm_a_restarted_session() {
+        let path = tmp_manifest("restart");
+        let heads: Vec<HeadInput> = {
+            let shared = rand_head(17, 96, 8);
+            vec![shared.clone(), shared]
+        };
+        let batch = BatchInput::new(heads);
+        let keys = vec![PlanKey::new(0, 0), PlanKey::new(0, 0)];
+        let m = anchor_method();
+
+        let cold_out;
+        {
+            let mut cold = m
+                .session()
+                .keys(keys.clone())
+                .persist(&path)
+                .model("llama-like/anchor")
+                .build()
+                .unwrap();
+            cold_out = cold.run_batch(&batch).unwrap();
+            assert_eq!((cold_out.cache_hits, cold_out.cache_misses), (1, 1));
+            assert!(cold_out.ident_cost_paid.ident_scores > 0);
+            cold.flush().unwrap();
+            assert_eq!(cold.store_len(), Some(1));
+        } // drop = restart boundary
+
+        let mut warm = m
+            .session()
+            .keys(keys)
+            .persist(&path)
+            .model("llama-like/anchor")
+            .build()
+            .unwrap();
+        let warm_out = warm.run_batch(&batch).unwrap();
+        // First batch after "restart": the previously seen key hits.
+        assert_eq!((warm_out.cache_hits, warm_out.cache_misses), (2, 0));
+        assert_eq!(warm_out.ident_cost_paid, CostTally::default());
+        assert_eq!(warm.store_seeded(), 1);
+        for (a, b) in cold_out.outputs.iter().zip(&warm_out.outputs) {
+            assert_eq!(a.out.data, b.out.data, "warm output must be bitwise-identical");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn store_plans_of_other_methods_or_models_do_not_seed() {
+        let path = tmp_manifest("filter");
+        let h = rand_head(18, 96, 8);
+        let m = anchor_method();
+        {
+            let mut s = m.session().persist(&path).model("cell-a").build().unwrap();
+            s.run(&h).unwrap();
+            s.flush().unwrap();
+        }
+        // Different model tag: nothing seeds.
+        let mut other_model = m.session().persist(&path).model("cell-b").build().unwrap();
+        let out = other_model.run(&h).unwrap();
+        assert_eq!(other_model.store_seeded(), 0);
+        assert_eq!((out.cache_hits, out.cache_misses), (0, 1));
+        // Same model tag, different method: the anchor plan must not serve
+        // a full-attn session.
+        let mut other_method = Method::Full(TileConfig::new(16, 16))
+            .session()
+            .persist(&path)
+            .model("cell-a")
+            .build()
+            .unwrap();
+        let out = other_method.run(&h).unwrap();
+        assert_eq!(other_method.store_seeded(), 0);
+        assert_eq!(out.plans[0].method, "full-attn");
+        // Same model tag and method, different identification step: the
+        // stored step-2 plan has the wrong geometry for a step-4 session,
+        // so it must re-identify rather than serve stale coordinates.
+        let mut other_step = Method::Anchor(AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta: 4.0,
+            step: 4,
+            init_blocks: 1,
+            use_anchor: true,
+        })
+        .session()
+        .persist(&path)
+        .model("cell-a")
+        .build()
+        .unwrap();
+        let out = other_step.run(&h).unwrap();
+        assert_eq!(other_step.store_seeded(), 0);
+        assert_eq!((out.cache_hits, out.cache_misses), (0, 1));
+        assert_eq!(out.plans[0].step, 4);
+        // Drop (and so flush) every session before removing the file, or a
+        // late drop would recreate it.
+        drop(other_model);
+        drop(other_method);
+        drop(other_step);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn pre_warmed_cache_survives_the_first_run() {
+        let h = rand_head(19, 96, 8);
+        let m = anchor_method();
+        let cache = PlanCache::new();
+        cache.seed(PlanKey::new(0, 0), Arc::new(m.plan(&h)));
+        let mut session = m.session().cache(cache).build().unwrap();
+        let out = session.run(&h).unwrap();
+        assert_eq!((out.cache_hits, out.cache_misses), (1, 0));
+        assert_eq!(out.ident_cost_paid, CostTally::default());
+        // A length change still invalidates as usual.
+        let other = session.run(&rand_head(21, 64, 8)).unwrap();
+        assert_eq!((other.cache_hits, other.cache_misses), (0, 1));
+    }
+
+    /// Methods whose identification is free (zero ident cost) still
+    /// persist and warm-start: the store syncs from the cache, not from
+    /// the set of ident-paying heads.
+    #[test]
+    fn zero_ident_methods_persist_through_run_batch() {
+        let path = tmp_manifest("zeroident");
+        let m = Method::Full(TileConfig::new(16, 16));
+        let batch = BatchInput::new(vec![rand_head(20, 64, 8)]);
+        {
+            let mut s = m.session().persist(&path).model("z").build().unwrap();
+            let out = s.run_batch(&batch).unwrap();
+            assert_eq!((out.cache_hits, out.cache_misses), (0, 1));
+            s.flush().unwrap();
+            assert_eq!(s.store_len(), Some(1));
+            assert_eq!(s.store_len_for_model(), Some(1));
+        }
+        let mut warm = m.session().persist(&path).model("z").build().unwrap();
+        let out = warm.run_batch(&batch).unwrap();
+        assert_eq!((out.cache_hits, out.cache_misses), (1, 0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn session_config_builder_applies_fields() {
+        let cfg = SessionConfig {
+            executor: ExecutorKind::Pjrt,
+            pipelined: true,
+            cache: true,
+            plan_store: None,
+            model: "m7".to_string(),
+        };
+        let session = cfg.builder(anchor_method()).build().unwrap();
+        assert_eq!(session.executor_kind(), ExecutorKind::Pjrt);
+        assert!(session.is_pipelined());
+        let cfg = SessionConfig { cache: false, ..SessionConfig::default() };
+        let session = cfg.builder(anchor_method()).build().unwrap();
+        assert!(session.cache_stats().is_none());
+    }
+}

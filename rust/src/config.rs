@@ -9,6 +9,7 @@ use anyhow::{anyhow, Result};
 
 use crate::attention::anchor::AnchorConfig;
 use crate::attention::exec::ExecutorKind;
+use crate::attention::session::SessionConfig;
 use crate::attention::TileConfig;
 use crate::coordinator::scheduler::{SchedulerConfig, SparsityModel};
 use crate::coordinator::server::ServerConfig;
@@ -22,6 +23,10 @@ pub struct AppConfig {
     pub anchor: AnchorConfig,
     pub server: ServerConfig,
     pub trace: TraceConfig,
+    /// Attention-session settings (`"session"` block): executor backend,
+    /// pipelining, plan cache and manifest-backed plan persistence
+    /// (DESIGN.md §11).
+    pub session: SessionConfig,
 }
 
 impl Default for AppConfig {
@@ -31,6 +36,7 @@ impl Default for AppConfig {
             anchor: AnchorConfig::default(),
             server: ServerConfig::default(),
             trace: TraceConfig::default(),
+            session: SessionConfig::default(),
         }
     }
 }
@@ -102,6 +108,21 @@ impl AppConfig {
                 page_tokens: s.get("page_tokens").as_usize().unwrap_or(d.page_tokens),
                 max_seq: s.get("max_seq").as_usize().unwrap_or(d.max_seq),
                 realtime: s.get("realtime").as_bool().unwrap_or(d.realtime),
+            };
+        }
+
+        let se = j.get("session");
+        if !se.is_null() {
+            let d = SessionConfig::default();
+            cfg.session = SessionConfig {
+                executor: match se.get("executor").as_str() {
+                    None => d.executor,
+                    Some(s) => ExecutorKind::parse(s)?,
+                },
+                pipelined: se.get("pipelined").as_bool().unwrap_or(d.pipelined),
+                cache: se.get("cache").as_bool().unwrap_or(d.cache),
+                plan_store: se.get("plan_store").as_str().map(|s| s.to_string()),
+                model: se.get("model").as_str().unwrap_or(&d.model).to_string(),
             };
         }
 
@@ -198,6 +219,23 @@ mod tests {
             r#"{"server": {"scheduler": {"sparsity": "anchor", "executor": "tpu"}}}"#,
         );
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn session_block_parses_and_defaults() {
+        let cfg = AppConfig::parse("{}").unwrap();
+        assert_eq!(cfg.session, SessionConfig::default());
+        let cfg = AppConfig::parse(
+            r#"{"session": {"executor": "pjrt", "pipelined": true, "cache": true,
+                            "plan_store": "artifacts/manifest.json", "model": "llama-like"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.session.executor, ExecutorKind::Pjrt);
+        assert!(cfg.session.pipelined);
+        assert_eq!(cfg.session.plan_store.as_deref(), Some("artifacts/manifest.json"));
+        assert_eq!(cfg.session.model, "llama-like");
+        // Unknown executor in the session block is rejected.
+        assert!(AppConfig::parse(r#"{"session": {"executor": "tpu"}}"#).is_err());
     }
 
     #[test]

@@ -92,10 +92,11 @@ impl SparsityModel {
     }
 
     /// Fold a newly observed plan-cache hit rate into the model (no-op for
-    /// dense). Integration point for a serving loop that aggregates
-    /// `BatchOutput::hit_rate()` from the attention engine; nothing calls
-    /// it on the current PJRT path (whose artifacts run fused attention),
-    /// so `plan_hit_rate` stays at its configured value until wired.
+    /// dense). Wired from two sides: a serving loop can aggregate
+    /// `SessionOutput::hit_rate()` from the attention engine, and
+    /// `serve --plan-store` feeds 1.0 when a populated manifest plan store
+    /// guarantees first-touch hits for previously seen keys (DESIGN.md
+    /// §11).
     pub fn observe_plan_hit_rate(&mut self, observed: f64) {
         if let SparsityModel::Anchor { plan_hit_rate, .. } = self {
             // Exponential moving average keeps the estimate stable across

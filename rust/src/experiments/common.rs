@@ -9,7 +9,7 @@ use crate::attention::baselines::block_topk::BlockTopKConfig;
 use crate::attention::baselines::flexprefill::FlexPrefillConfig;
 use crate::attention::baselines::streaming::StreamingConfig;
 use crate::attention::baselines::vertical_slash::VerticalSlashConfig;
-use crate::attention::plan::{self, BatchInput, PlanCache, PlanKey};
+use crate::attention::plan::{self, BatchInput, PlanKey};
 use crate::attention::{metrics, HeadInput, Method, TileConfig};
 use crate::util::json::Json;
 use crate::workload::qkv::generate;
@@ -100,6 +100,26 @@ pub fn paper_methods(n: usize, tile: TileConfig, theta: f32) -> Vec<Method> {
     ]
 }
 
+/// As [`paper_methods`] with the anchor identification step pinned to
+/// `step` when given (the fig2 `--step` re-measure grid); `None` keeps
+/// the length-scaled default.
+pub fn paper_methods_with_step(
+    n: usize,
+    tile: TileConfig,
+    theta: f32,
+    step: Option<usize>,
+) -> Vec<Method> {
+    let mut methods = paper_methods(n, tile, theta);
+    if let Some(step) = step {
+        for m in &mut methods {
+            if let Method::Anchor(cfg) = m {
+                cfg.step = step.max(1);
+            }
+        }
+    }
+    methods
+}
+
 /// Analysis-only extra baseline (Table 1).
 pub fn block_topk_method(n: usize, tile: TileConfig) -> Method {
     let k_blocks = ((256.0 * n as f64 / 131072.0).round() as usize).max(2);
@@ -153,14 +173,21 @@ pub fn evaluate(head: &HeadInput, method: &Method, tile: TileConfig) -> EvalRow 
 }
 
 /// Latency-only measurement (no metric overhead) with `iters` repeats,
-/// reporting the minimum (steady-state) time.
+/// reporting the minimum (steady-state) time. Runs through an uncached
+/// session so every repeat pays full identification (full-method latency,
+/// not the amortized serving case).
 pub fn measure_latency(head: &HeadInput, method: &Method, iters: usize) -> f64 {
+    let mut session = method
+        .session()
+        .no_cache()
+        .build()
+        .expect("default session config is infallible");
     let mut best = f64::INFINITY;
     for _ in 0..iters.max(1) {
         let t0 = Instant::now();
-        let out = method.run(head);
+        let out = session.run(head).expect("uncached run cannot fail");
         let dt = t0.elapsed().as_secs_f64();
-        crate::util::timer::black_box(out.out.data[0]);
+        crate::util::timer::black_box(out.outputs[0].out.data[0]);
         best = best.min(dt);
     }
     best
@@ -214,18 +241,23 @@ pub struct BatchEvalRow {
     pub sparsity: f64,
 }
 
-/// Run a method over a multi-head batch with a fresh plan cache keyed by
-/// [`gqa_keys`]; reports wallclock, cache hit rate and mean sparsity.
+/// Run a method over a multi-head batch through a fresh session whose
+/// plan cache is keyed by [`gqa_keys`]; reports wallclock, cache hit rate
+/// and mean sparsity.
 pub fn evaluate_batch(
     method: &Method,
     batch: &BatchInput,
     layer: u32,
     group_size: usize,
 ) -> BatchEvalRow {
-    let cache = PlanCache::new();
     let keys = gqa_keys(layer, batch.h(), group_size);
+    let mut session = method
+        .session()
+        .keys(keys)
+        .build()
+        .expect("default session config is infallible");
     let t0 = Instant::now();
-    let out = method.run_batch_cached(batch, &cache, &keys);
+    let out = session.run_batch(batch).expect("cached batch cannot fail");
     let latency_s = t0.elapsed().as_secs_f64();
     let sparsity = out
         .plans

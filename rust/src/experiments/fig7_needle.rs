@@ -27,13 +27,16 @@ pub fn run(scale: ExpScale, seed: u64) -> Vec<Vec<String>> {
             if m.name() == "full-attn" && n != lengths[0] {
                 continue;
             }
+            // Uncached session: each depth is an unrelated input, so plan
+            // reuse across the loop would be incorrect.
+            let mut session = m.session().no_cache().build().expect("session");
             let mut row = vec![m.name().to_string(), fmt_len(n)];
             for (di, &depth) in depths.iter().enumerate() {
                 let wl =
                     generate_with_needle(&profile, n, seed ^ ((di as u64) << 24), Some(depth));
                 let pos = wl.meta.needle.as_ref().unwrap().position;
                 let full = crate::attention::full::full_attention(&wl.head, tile);
-                let out = m.run(&wl.head);
+                let out = session.run(&wl.head).expect("run").into_single();
                 let acc = niah_accuracy(&wl.head, &out.coverage, &out.out, &full.out, pos, tile);
                 row.push(format!("{acc:.0}"));
                 csv.push_str(&format!("{},{},{},{:.1}\n", m.name(), n, depth, acc));

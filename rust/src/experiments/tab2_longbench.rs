@@ -77,7 +77,8 @@ pub fn run_for_profile(
 
         let mut row = vec![task.name.to_string()];
         for m in common::paper_methods(n, tile, 12.0) {
-            let out = m.run(&wl.head);
+            let mut session = m.session().no_cache().build().expect("session");
+            let out = session.run(&wl.head).expect("run").into_single();
             let score = match needle {
                 Some(pos) => niah_accuracy(&wl.head, &out.coverage, &out.out, &full.out, pos, tile),
                 None => metrics::fidelity_score(&out.out, &full.out, 0.25),

@@ -57,12 +57,14 @@ pub fn run_for_profile(
     for n in scale.lengths() {
         let methods = common::paper_methods(n, tile, 12.0);
         for m in &methods {
+            // Uncached: each depth is an unrelated input (no plan reuse).
+            let mut session = m.session().no_cache().build().expect("session");
             let mut scores = Vec::new();
             for (di, &depth) in depths.iter().enumerate() {
                 let wl = generate_with_needle(profile, n, seed ^ ((di as u64) << 20), Some(depth));
                 let needle = wl.meta.needle.as_ref().unwrap().position;
                 let full = crate::attention::full::full_attention(&wl.head, tile);
-                let out = m.run(&wl.head);
+                let out = session.run(&wl.head).expect("run").into_single();
                 scores.push(niah_accuracy(&wl.head, &out.coverage, &out.out, &full.out, needle, tile));
             }
             let avg = crate::util::stats::mean(&scores);
@@ -121,8 +123,10 @@ mod tests {
         let methods = common::paper_methods(n, tile, 12.0);
         let streaming = &methods[1];
         let anchor = &methods[4];
-        let s_out = streaming.run(&wl.head);
-        let a_out = anchor.run(&wl.head);
+        let s_out =
+            streaming.session().no_cache().build().unwrap().run(&wl.head).unwrap().into_single();
+        let a_out =
+            anchor.session().no_cache().build().unwrap().run(&wl.head).unwrap().into_single();
         let s_acc = niah_accuracy(&wl.head, &s_out.coverage, &s_out.out, &full.out, needle, tile);
         let a_acc = niah_accuracy(&wl.head, &a_out.coverage, &a_out.out, &full.out, needle, tile);
         assert!(a_acc > 90.0, "anchor accuracy {a_acc}");

@@ -5,17 +5,23 @@
 //!   serve       [--config F]      serve a synthetic trace over PJRT
 //!                                 (--executor cpu|pjrt names the plan
 //!                                 executor backend in the scheduler's
-//!                                 cost attribution)
+//!                                 cost attribution; --plan-store F warms
+//!                                 the plan-hit prior from a populated
+//!                                 manifest plan store)
 //!   bench <exp> [--quick]         run one experiment driver
 //!                                 (fig2|tab1|fig4|fig5|fig6|fig7|tab2|tab3|tab4|all)
 //!                                 fig2 extras: --pipeline (overlap ident with
 //!                                 execution), --iters N, --lengths a,b,c,
-//!                                 --executor cpu|pjrt|both (backend grid)
+//!                                 --executor cpu|pjrt|both (backend grid),
+//!                                 --plan-store F (manifest-backed plan
+//!                                 persistence: cold vs warm identification),
+//!                                 --step S (anchor identification step)
 //!   dominance   [--n N]           Fig. 5 measurement at arbitrary length
 //!   tpu-estimate                  L1 VMEM/MXU block-shape table
 //!   gen-trace   [--rate R]        print a synthetic serving trace
 
 use anchor_attention::attention::exec::ExecutorKind;
+use anchor_attention::attention::Method;
 use anchor_attention::config::AppConfig;
 use anchor_attention::coordinator::engine::PjrtEngine;
 use anchor_attention::coordinator::request::Request;
@@ -101,6 +107,30 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             *executor = kind;
         }
     }
+    // `--plan-store F` (config: session.plan_store) points the session
+    // block at a manifest-backed plan store. The probe session below
+    // validates the whole block at startup — a bad path or a disabled
+    // cache fails fast with the builder's error — and a populated store
+    // guarantees first-touch plan-cache hits for previously seen keys, so
+    // it warms the scheduler's amortization prior (DESIGN.md §11).
+    if let Some(p) = args.get("plan-store") {
+        cfg.session.plan_store = Some(p.to_string());
+    }
+    let probe = cfg.session.builder(Method::Anchor(cfg.anchor)).build()?;
+    if let (Some(total), Some(compatible)) = (probe.store_len(), probe.store_len_compatible()) {
+        println!(
+            "plan store: {total} persisted plan(s), {compatible} seedable by model '{}'",
+            cfg.session.model
+        );
+        // Only plans this session could actually seed from (model tag +
+        // method + geometry) justify the amortization prior — a store
+        // populated by some other cell, or by a differently-configured
+        // anchor, must not fake hits.
+        if compatible > 0 {
+            cfg.server.scheduler.sparsity.observe_plan_hit_rate(1.0);
+        }
+    }
+    drop(probe);
 
     println!("loading engine from {} …", cfg.artifact_dir);
     let mut engine = PjrtEngine::new(&cfg.artifact_dir)?;
@@ -133,7 +163,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let which = args.positional().get(1).map(|s| s.as_str()).unwrap_or("all");
     // fig2-only knobs: `--pipeline` overlaps identification with execution,
     // `--iters N` / `--lengths a,b,c` pin the measurement grid (CI bench),
-    // `--executor cpu|pjrt|both` picks the backend grid.
+    // `--executor cpu|pjrt|both` picks the backend grid, `--plan-store F`
+    // persists plans through the manifest (cold vs warm identification),
+    // `--step S` overrides the anchor identification step (re-measure
+    // grid).
     let lengths = args.usize_list_or("lengths", &[])?;
     let executors = match args.get("executor") {
         None => vec![ExecutorKind::default()],
@@ -141,6 +174,12 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         Some(s) => vec![ExecutorKind::parse(s)
             .map_err(|_| anyhow::anyhow!("--executor expects cpu|pjrt|both, got '{s}'"))?],
     };
+    let plan_store = args.get("plan-store").map(|s| s.to_string());
+    if let Some(p) = &plan_store {
+        // Fail fast with the store's descriptive error instead of
+        // panicking mid-measurement; fig2's sessions re-open it per run.
+        anchor_attention::runtime::manifest::PlanStore::open(p)?;
+    }
     let fig2_opts = experiments::fig2_speedup::Fig2Options {
         pipeline: args.bool_or("pipeline", false)?,
         iters: match args.get("iters") {
@@ -149,6 +188,15 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         },
         lengths: if lengths.is_empty() { None } else { Some(lengths) },
         executors,
+        plan_store,
+        step: match args.get("step") {
+            Some(_) => {
+                let s = args.usize_or("step", 16)?;
+                anyhow::ensure!(s >= 1, "--step must be >= 1 (got {s})");
+                Some(s)
+            }
+            None => None,
+        },
     };
     let run_one = |name: &str| match name {
         "fig2" => drop(experiments::fig2_speedup::run_with(scale, seed, &fig2_opts)),

@@ -1,10 +1,18 @@
 //! `artifacts/manifest.json` schema — the contract between `aot.py` and
-//! the Rust runtime/model layers.
+//! the Rust runtime/model layers — plus [`PlanStore`], the manifest-backed
+//! persistence layer for [`SparsePlan`] coordinates (DESIGN.md §11):
+//! sessions warm their plan cache from the manifest's `plan_store` key and
+//! flush fresh plans back, so identification amortizes across process
+//! restarts, not just within one.
 
-use std::path::Path;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::attention::plan::{GroupPlan, PlanKey, SparsePlan};
+use crate::attention::{CostTally, TileConfig};
 use crate::util::json::Json;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -203,6 +211,376 @@ impl Manifest {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Plan persistence: SparsePlan coordinates in the runtime manifest
+// ---------------------------------------------------------------------------
+
+/// `plan_store` schema version; bump on incompatible layout changes.
+/// Stores written by a different version are rejected, never reinterpreted.
+pub const PLAN_STORE_VERSION: usize = 1;
+
+/// Key a persisted plan is filed under — ROADMAP's `(model, layer,
+/// head_group, n)`: the session's in-memory `PlanCache` key widened by a
+/// caller-chosen model identifier and the sequence length the coordinates
+/// were built for.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanStoreKey {
+    pub model: String,
+    pub layer: u32,
+    pub head_group: u32,
+    pub n: usize,
+}
+
+/// Manifest-backed persistence for [`SparsePlan`] coordinates.
+///
+/// Plans live under a `plan_store` key *inside* an existing runtime
+/// manifest JSON (the store never creates the manifest — a persistence
+/// path without one is a configuration error surfaced at session build).
+/// Only coordinates and identification provenance are stored;
+/// `predicted_cost` is re-derived from the coordinates on load, and any
+/// corrupted or truncated entry fails `open` with a descriptive error —
+/// never a silent empty plan (DESIGN.md §11).
+///
+/// Single-writer: `flush` rewrites the document captured at `open` with
+/// the `plan_store` key replaced, preserving every other manifest key.
+pub struct PlanStore {
+    path: PathBuf,
+    doc: Json,
+    entries: HashMap<PlanStoreKey, (usize, Arc<SparsePlan>)>,
+    dirty: bool,
+}
+
+impl PlanStore {
+    /// Open the store inside the runtime manifest at `path`. The file must
+    /// exist and hold a JSON object; a `plan_store` key, when present, is
+    /// parsed strictly.
+    pub fn open(path: impl Into<PathBuf>) -> Result<Self> {
+        let path = path.into();
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow!(
+                "plan store {}: persistence path has no runtime manifest ({e}); \
+                 plans persist into an existing manifest JSON, e.g. artifacts/manifest.json",
+                path.display()
+            )
+        })?;
+        let doc = Json::parse(&text).map_err(|e| {
+            anyhow!("plan store {}: manifest is not valid JSON: {e}", path.display())
+        })?;
+        if doc.as_obj().is_none() {
+            return Err(anyhow!("plan store {}: manifest must be a JSON object", path.display()));
+        }
+        let mut entries = HashMap::new();
+        let ps = doc.get("plan_store");
+        if !ps.is_null() {
+            let version = ps
+                .get("version")
+                .as_usize()
+                .ok_or_else(|| anyhow!("plan store {}: missing version", path.display()))?;
+            if version != PLAN_STORE_VERSION {
+                return Err(anyhow!(
+                    "plan store {}: unsupported version {version} (expected {PLAN_STORE_VERSION})",
+                    path.display()
+                ));
+            }
+            let arr = ps.get("entries").as_arr().ok_or_else(|| {
+                anyhow!("plan store {}: entries must be an array", path.display())
+            })?;
+            for (i, e) in arr.iter().enumerate() {
+                let (key, d, plan) = entry_from_json(e)
+                    .with_context(|| format!("plan store {} entry {i}", path.display()))?;
+                if entries.insert(key, (d, Arc::new(plan))).is_some() {
+                    return Err(anyhow!("plan store {} entry {i}: duplicate key", path.display()));
+                }
+            }
+        }
+        Ok(Self { path, doc, entries, dirty: false })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up one persisted plan.
+    pub fn get(&self, key: &PlanStoreKey) -> Option<Arc<SparsePlan>> {
+        self.entries.get(key).map(|(_, p)| p.clone())
+    }
+
+    /// All plans stored for `(model, n)` as `(PlanKey, priced head dim,
+    /// plan)` triples — the shape a session seeds its `PlanCache` from,
+    /// in deterministic `(layer, head_group)` order. The head dim rides
+    /// along because `predicted_cost` was derived with it; a session must
+    /// reject entries priced for a different `d`.
+    pub fn plans_for(&self, model: &str, n: usize) -> Vec<(PlanKey, usize, Arc<SparsePlan>)> {
+        let mut out: Vec<(PlanKey, usize, Arc<SparsePlan>)> = self
+            .entries
+            .iter()
+            .filter(|(k, _)| k.model == model && k.n == n)
+            .map(|(k, (d, p))| (PlanKey::new(k.layer, k.head_group), *d, p.clone()))
+            .collect();
+        out.sort_by_key(|(k, _, _)| (k.layer, k.head_group));
+        out
+    }
+
+    /// Entries filed under `model` (any layer/head_group/length).
+    pub fn len_for_model(&self, model: &str) -> usize {
+        self.entries.keys().filter(|k| k.model == model).count()
+    }
+
+    /// Entries under `model` whose plan a `(method, tile, step)` session
+    /// configuration could actually seed from (any length) — the same
+    /// compatibility filter sessions apply when warming, so warm-start
+    /// expectations (e.g. the serve plan-hit prior) read this, not a raw
+    /// count.
+    pub fn len_compatible(
+        &self,
+        model: &str,
+        method: &str,
+        tile: TileConfig,
+        step: usize,
+    ) -> usize {
+        self.entries
+            .iter()
+            .filter(|(k, (_, p))| {
+                k.model == model && p.method == method && p.tile == tile && p.step == step
+            })
+            .count()
+    }
+
+    /// Insert or overwrite a plan (priced at head dim `d`); returns whether
+    /// the store changed. Re-inserting the same plan is a no-op, detected
+    /// by `Arc` identity first (the steady-state path: a session syncs the
+    /// same cached `Arc`s every run) and deep equality otherwise, so
+    /// steady-state serving never dirties the store.
+    pub fn insert(&mut self, key: PlanStoreKey, d: usize, plan: Arc<SparsePlan>) -> bool {
+        if let Some((d0, p0)) = self.entries.get(&key) {
+            if *d0 == d && (Arc::ptr_eq(p0, &plan) || **p0 == *plan) {
+                return false;
+            }
+        }
+        self.entries.insert(key, (d, plan));
+        self.dirty = true;
+        true
+    }
+
+    /// Serialize the entries back into the manifest document and write it.
+    /// A clean store is a no-op.
+    pub fn flush(&mut self) -> Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        let mut keys: Vec<&PlanStoreKey> = self.entries.keys().collect();
+        keys.sort_by(|a, b| {
+            (&a.model, a.layer, a.head_group, a.n).cmp(&(&b.model, b.layer, b.head_group, b.n))
+        });
+        let entries: Vec<Json> = keys
+            .iter()
+            .map(|&k| {
+                let (d, plan) = &self.entries[k];
+                entry_to_json(k, *d, plan)
+            })
+            .collect();
+        let ps = Json::obj(vec![
+            ("version", Json::num(PLAN_STORE_VERSION as f64)),
+            ("entries", Json::Arr(entries)),
+        ]);
+        if let Json::Obj(m) = &mut self.doc {
+            m.insert("plan_store".to_string(), ps);
+        }
+        let mut text = self.doc.to_string_pretty();
+        text.push('\n');
+        // Write-then-rename: flush also runs best-effort from session
+        // drop, and a crash mid-write must never destroy the manifest
+        // (it holds the aot.py artifact contract, not just plans).
+        let mut tmp_name = self.path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        let tmp = PathBuf::from(tmp_name);
+        std::fs::write(&tmp, &text)
+            .with_context(|| format!("writing plan store {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("committing plan store {}", self.path.display()))?;
+        self.dirty = false;
+        Ok(())
+    }
+}
+
+/// Method-name interning: `SparsePlan::method` is a `&'static str`, so a
+/// deserialized plan must map onto a known method identifier — an unknown
+/// name is a corruption signal, never silently accepted.
+fn method_static(name: &str) -> Result<&'static str> {
+    const KNOWN: [&str; 7] = [
+        "full-attn",
+        "anchor",
+        "streaming-llm",
+        "vertical-slash",
+        "flexprefill",
+        "block-topk",
+        "test",
+    ];
+    KNOWN
+        .iter()
+        .find(|&&k| k == name)
+        .copied()
+        .ok_or_else(|| anyhow!("unknown method '{name}' in plan store"))
+}
+
+fn cost_to_json(c: &CostTally) -> Json {
+    Json::obj(vec![
+        ("flops", Json::num(c.flops as f64)),
+        ("kv_bytes", Json::num(c.kv_bytes as f64)),
+        ("ident_scores", Json::num(c.ident_scores as f64)),
+    ])
+}
+
+fn cost_from_json(j: &Json) -> Result<CostTally> {
+    let field = |k: &str| -> Result<u64> {
+        let x = j.get(k).as_f64().ok_or_else(|| anyhow!("cost missing {k}"))?;
+        if x < 0.0 || x.fract() != 0.0 {
+            return Err(anyhow!("cost {k} is not a non-negative integer"));
+        }
+        Ok(x as u64)
+    };
+    Ok(CostTally {
+        flops: field("flops")?,
+        kv_bytes: field("kv_bytes")?,
+        ident_scores: field("ident_scores")?,
+    })
+}
+
+/// Serialize a plan's coordinates plus its identification provenance.
+/// `d` is the head dim the plan was priced for; `predicted_cost` is *not*
+/// persisted — it is re-derived from the coordinates on load, so the
+/// stored unit stays pure coordinates (DESIGN.md §11).
+pub fn plan_to_json(plan: &SparsePlan, d: usize) -> Json {
+    Json::obj(vec![
+        ("method", Json::str(plan.method)),
+        ("n", Json::num(plan.n as f64)),
+        ("d", Json::num(d as f64)),
+        ("b_q", Json::num(plan.tile.b_q as f64)),
+        ("b_kv", Json::num(plan.tile.b_kv as f64)),
+        ("step", Json::num(plan.step as f64)),
+        ("ident_cost", cost_to_json(&plan.ident_cost)),
+        (
+            "groups",
+            Json::arr(plan.groups.iter().map(|g| {
+                Json::obj(vec![
+                    (
+                        "spans",
+                        Json::arr(g.spans.iter().map(|&(s, e)| {
+                            Json::arr([Json::num(s as f64), Json::num(e as f64)])
+                        })),
+                    ),
+                    ("stripes", Json::arr(g.stripes.iter().map(|&c| Json::num(c as f64)))),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// Deserialize a plan, validating every coordinate: sizes nonzero, group
+/// count matching `(n, b_q, step)`, spans sorted/in-range/non-overlapping,
+/// stripes strictly ascending and `< n`. Returns the plan and the head dim
+/// it was priced for; `predicted_cost` is recomputed, not trusted.
+pub fn plan_from_json(j: &Json) -> Result<(SparsePlan, usize)> {
+    let method = method_static(
+        j.get("method").as_str().ok_or_else(|| anyhow!("plan missing method"))?,
+    )?;
+    let req = |k: &str| -> Result<usize> {
+        j.get(k).as_usize().ok_or_else(|| anyhow!("plan missing {k}"))
+    };
+    let n = req("n")?;
+    let d = req("d")?;
+    let b_q = req("b_q")?;
+    let b_kv = req("b_kv")?;
+    let step = req("step")?;
+    if n == 0 || d == 0 || b_q == 0 || b_kv == 0 || step == 0 {
+        return Err(anyhow!("plan has a zero-sized dimension"));
+    }
+    if n > u32::MAX as usize {
+        return Err(anyhow!("plan n={n} exceeds the u32 coordinate range"));
+    }
+    let tile = TileConfig::new(b_q, b_kv);
+    let ident_cost = cost_from_json(j.get("ident_cost"))?;
+    let garr = j.get("groups").as_arr().ok_or_else(|| anyhow!("plan missing groups"))?;
+    let expect_groups = tile.q_blocks(n).div_ceil(step);
+    if garr.len() != expect_groups {
+        return Err(anyhow!(
+            "plan has {} groups, expected {expect_groups} for n={n}, b_q={b_q}, step={step}",
+            garr.len()
+        ));
+    }
+    let mut groups = Vec::with_capacity(garr.len());
+    for (gi, g) in garr.iter().enumerate() {
+        let spans_arr =
+            g.get("spans").as_arr().ok_or_else(|| anyhow!("group {gi}: missing spans"))?;
+        let mut spans = Vec::with_capacity(spans_arr.len());
+        let mut prev_end = 0usize;
+        for (si, pair) in spans_arr.iter().enumerate() {
+            let s =
+                pair.idx(0).as_usize().ok_or_else(|| anyhow!("group {gi} span {si}: bad start"))?;
+            let e =
+                pair.idx(1).as_usize().ok_or_else(|| anyhow!("group {gi} span {si}: bad end"))?;
+            if s >= e || e > n {
+                return Err(anyhow!("group {gi} span {si}: [{s}, {e}) out of range for n={n}"));
+            }
+            if si > 0 && s < prev_end {
+                return Err(anyhow!("group {gi} span {si}: overlapping or unsorted spans"));
+            }
+            prev_end = e;
+            spans.push((s as u32, e as u32));
+        }
+        let stripes_arr =
+            g.get("stripes").as_arr().ok_or_else(|| anyhow!("group {gi}: missing stripes"))?;
+        let mut stripes: Vec<u32> = Vec::with_capacity(stripes_arr.len());
+        for (ci, c) in stripes_arr.iter().enumerate() {
+            let col = c.as_usize().ok_or_else(|| anyhow!("group {gi} stripe {ci}: bad column"))?;
+            if col >= n {
+                return Err(anyhow!("group {gi} stripe {ci}: column {col} >= n={n}"));
+            }
+            if let Some(&last) = stripes.last() {
+                if col as u32 <= last {
+                    return Err(anyhow!(
+                        "group {gi} stripe {ci}: unsorted or duplicate column {col}"
+                    ));
+                }
+            }
+            stripes.push(col as u32);
+        }
+        groups.push(GroupPlan { spans, stripes });
+    }
+    Ok((SparsePlan::new(method, n, d, tile, step, groups, ident_cost), d))
+}
+
+fn entry_to_json(key: &PlanStoreKey, d: usize, plan: &SparsePlan) -> Json {
+    Json::obj(vec![
+        ("model", Json::str(&key.model)),
+        ("layer", Json::num(key.layer as f64)),
+        ("head_group", Json::num(key.head_group as f64)),
+        ("n", Json::num(key.n as f64)),
+        ("plan", plan_to_json(plan, d)),
+    ])
+}
+
+fn entry_from_json(j: &Json) -> Result<(PlanStoreKey, usize, SparsePlan)> {
+    let model = j.get("model").as_str().ok_or_else(|| anyhow!("entry missing model"))?.to_string();
+    let layer = j.get("layer").as_usize().ok_or_else(|| anyhow!("entry missing layer"))? as u32;
+    let head_group =
+        j.get("head_group").as_usize().ok_or_else(|| anyhow!("entry missing head_group"))? as u32;
+    let n = j.get("n").as_usize().ok_or_else(|| anyhow!("entry missing n"))?;
+    let (plan, d) = plan_from_json(j.get("plan"))?;
+    if plan.n != n {
+        return Err(anyhow!("entry n={n} disagrees with plan n={}", plan.n));
+    }
+    Ok((PlanStoreKey { model, layer, head_group, n }, d, plan))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -251,5 +629,121 @@ mod tests {
     fn parse_rejects_missing_model_field() {
         let bad = MINI.replace("\"vocab\": 512, ", "");
         assert!(Manifest::parse(&bad).is_err());
+    }
+
+    // ---- plan store -------------------------------------------------------
+
+    fn tmp_manifest(tag: &str, contents: &str) -> PathBuf {
+        let path = std::env::temp_dir()
+            .join(format!("anchor_manifest_{}_{tag}.json", std::process::id()));
+        std::fs::write(&path, contents).unwrap();
+        path
+    }
+
+    fn sample_plan(n: usize, d: usize) -> SparsePlan {
+        let tile = TileConfig::new(16, 16);
+        let groups: Vec<GroupPlan> = (0..tile.q_blocks(n).div_ceil(2))
+            .map(|g| {
+                let win = (g * 2 * 16) as u32;
+                let end = ((g + 1) * 2 * 16).min(n) as u32;
+                if win == 0 {
+                    GroupPlan { spans: vec![(0, end)], stripes: vec![] }
+                } else {
+                    GroupPlan {
+                        spans: vec![(0, 16), (win, end)],
+                        stripes: (16..win).step_by(5).collect(),
+                    }
+                }
+            })
+            .collect();
+        let ident = CostTally { flops: 640, kv_bytes: 128, ident_scores: 32 };
+        SparsePlan::new("anchor", n, d, tile, 2, groups, ident)
+    }
+
+    #[test]
+    fn plan_json_round_trips_identically() {
+        let plan = sample_plan(96, 8);
+        let j = plan_to_json(&plan, 8);
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        let (back, d) = plan_from_json(&reparsed).unwrap();
+        assert_eq!(d, 8);
+        assert_eq!(back, plan, "round trip must be identity, predicted cost included");
+    }
+
+    #[test]
+    fn plan_store_round_trips_through_the_manifest_file() {
+        let path = tmp_manifest("roundtrip", "{\"other_key\": 7}\n");
+        let plan = Arc::new(sample_plan(96, 8));
+        let key = PlanStoreKey { model: "m".into(), layer: 0, head_group: 1, n: 96 };
+        let mut store = PlanStore::open(&path).unwrap();
+        assert!(store.is_empty());
+        assert!(store.insert(key.clone(), 8, plan.clone()));
+        // Re-inserting the identical plan does not dirty the store.
+        assert!(!store.insert(key.clone(), 8, plan.clone()));
+        store.flush().unwrap();
+
+        let reopened = PlanStore::open(&path).unwrap();
+        assert_eq!(reopened.len(), 1);
+        assert_eq!(*reopened.get(&key).unwrap(), *plan);
+        let seeds = reopened.plans_for("m", 96);
+        assert_eq!(seeds.len(), 1);
+        assert_eq!(seeds[0].0, PlanKey::new(0, 1));
+        assert_eq!(seeds[0].1, 8, "priced head dim rides along");
+        assert!(reopened.plans_for("m", 128).is_empty());
+        assert!(reopened.plans_for("other", 96).is_empty());
+        assert_eq!(reopened.len_for_model("m"), 1);
+        assert_eq!(reopened.len_compatible("m", "anchor", TileConfig::new(16, 16), 2), 1);
+        assert_eq!(reopened.len_compatible("m", "anchor", TileConfig::new(16, 16), 4), 0);
+        assert_eq!(reopened.len_compatible("m", "full-attn", TileConfig::new(16, 16), 2), 0);
+        // Other manifest keys survive the rewrite.
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("other_key").as_usize(), Some(7));
+        assert_eq!(doc.get("plan_store").get("version").as_usize(), Some(1));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn plan_store_requires_an_existing_manifest() {
+        let missing = std::env::temp_dir().join("anchor_manifest_does_not_exist.json");
+        let err = PlanStore::open(&missing).unwrap_err().to_string();
+        assert!(err.contains("no runtime manifest"), "{err}");
+        let not_obj = tmp_manifest("not_obj", "[1, 2]\n");
+        assert!(PlanStore::open(&not_obj).is_err());
+        let _ = std::fs::remove_file(&not_obj);
+    }
+
+    #[test]
+    fn corrupted_store_entries_are_rejected_not_emptied() {
+        let path = tmp_manifest("corrupt", "{}\n");
+        let mut store = PlanStore::open(&path).unwrap();
+        store.insert(
+            PlanStoreKey { model: "m".into(), layer: 0, head_group: 0, n: 96 },
+            8,
+            Arc::new(sample_plan(96, 8)),
+        );
+        store.flush().unwrap();
+        let good = std::fs::read_to_string(&path).unwrap();
+
+        // Truncated file: not JSON at all.
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(PlanStore::open(&path).is_err());
+
+        // Structurally valid JSON, corrupted plan fields: each must error.
+        for (from, to) in [
+            ("\"step\": 2", "\"step\": 0"),
+            ("\"method\": \"anchor\"", "\"method\": \"mystery\""),
+            ("\"n\": 96", "\"n\": 95"),
+            ("\"version\": 1", "\"version\": 99"),
+        ] {
+            assert!(good.contains(from), "fixture drifted: {from}");
+            std::fs::write(&path, good.replace(from, to)).unwrap();
+            let err = PlanStore::open(&path).unwrap_err().to_string();
+            assert!(!err.is_empty(), "{from} -> {to} must be rejected");
+        }
+
+        // The pristine store still reopens after the corruption sweep.
+        std::fs::write(&path, &good).unwrap();
+        assert!(PlanStore::open(&path).is_ok(), "pristine store must reopen");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -202,7 +202,8 @@ fn prop_value_column_permutation_equivariance() {
             init_blocks: 1,
             use_anchor: true,
         });
-        let base = method.run(&wl.head);
+        let mut session = method.session().no_cache().build().unwrap();
+        let base = session.run(&wl.head).unwrap().into_single();
         let mut v2 = Mat::zeros(wl.head.v.rows, d);
         for r in 0..wl.head.v.rows {
             for c in 0..d {
@@ -214,7 +215,7 @@ fn prop_value_column_permutation_equivariance() {
             wl.head.k.clone(),
             v2,
         );
-        let permuted = method.run(&head2);
+        let permuted = session.run(&head2).unwrap().into_single();
         for r in 0..base.out.rows {
             for c in 0..d {
                 let a = base.out.at(r, d - 1 - c);

@@ -21,10 +21,13 @@
 //!   paged-KV route (`PagedKvStore::gather` as the executor's KvSource).
 
 use anchor_attention::attention::anchor::AnchorConfig;
-use anchor_attention::attention::exec::{CpuTileExecutor, Executor, PjrtGatherExecutor};
+use anchor_attention::attention::exec::{
+    CpuTileExecutor, Executor, ExecutorKind, PjrtGatherExecutor,
+};
 use anchor_attention::coordinator::kv_cache::{PagedExecutor, PagedKvStore};
 use anchor_attention::attention::pipeline::{run_planner_batch_pipelined, PlanPipeline};
 use anchor_attention::attention::plan::{PlanCache, PlanKey, Planner, SparsePlan};
+use anchor_attention::attention::session::AttentionSession;
 use anchor_attention::attention::baselines::block_topk::BlockTopKConfig;
 use anchor_attention::attention::baselines::flexprefill::FlexPrefillConfig;
 use anchor_attention::attention::baselines::streaming::StreamingConfig;
@@ -44,6 +47,16 @@ fn rand_head(rng: &mut Pcg64, n: usize, d: usize) -> HeadInput {
         Mat::from_fn(n, d, |_, _| rng.normal()),
         Mat::from_fn(n, d, |_, _| rng.normal()),
     )
+}
+
+/// Fresh uncached session on the given backend — the session-API
+/// equivalent of the old per-call `run`/`run_batch` entry points.
+fn uncached_session(m: &Method, kind: ExecutorKind, pipelined: bool) -> AttentionSession {
+    let mut b = m.session().no_cache().executor(kind);
+    if pipelined {
+        b = b.pipelined(true);
+    }
+    b.build().expect("session build")
 }
 
 /// One random (head, method) parity case.
@@ -201,9 +214,14 @@ fn prop_batch_path_matches_single_head_path() {
                 init_blocks: 1,
                 use_anchor: true,
             });
-            let b = m.run_batch(&batch);
+            let b = uncached_session(&m, ExecutorKind::Cpu, false)
+                .run_batch(&batch)
+                .map_err(|e| e.to_string())?;
             for (i, h) in heads.iter().enumerate() {
-                let single = m.run(h);
+                let single = uncached_session(&m, ExecutorKind::Cpu, false)
+                    .run(h)
+                    .map_err(|e| e.to_string())?
+                    .into_single();
                 let diff = b.outputs[i].out.max_abs_diff(&single.out);
                 ensure(diff < 1e-6, format!("head {i}: batch vs single diff {diff}"))?;
                 ensure(
@@ -231,22 +249,21 @@ fn pipelined_execution_bitwise_equals_sequential_for_all_six_methods() {
         PlanKey::new(0, 1),
         PlanKey::new(0, 1),
     ];
-    let pipe = PlanPipeline::default();
     for method_idx in 0..6 {
         let c = ParityCase { seed: 2, n: 128, d: 8, method_idx, theta: 3.0, step: 2 };
         let m = method_for(&c);
 
-        let seq = m.run_batch(&batch);
-        let piped = m.run_batch_pipelined(&batch, &pipe).unwrap_or_else(|e| {
-            panic!("{}: pipelined run failed: {e}", m.name());
-        });
+        let seq = uncached_session(&m, ExecutorKind::Cpu, false).run_batch(&batch).unwrap();
+        let piped = uncached_session(&m, ExecutorKind::Cpu, true)
+            .run_batch(&batch)
+            .unwrap_or_else(|e| panic!("{}: pipelined run failed: {e}", m.name()));
         assert_eq!(
             (seq.cache_hits, seq.cache_misses),
-            (piped.batch.cache_hits, piped.batch.cache_misses),
+            (piped.cache_hits, piped.cache_misses),
             "{}: uncached accounting",
             m.name()
         );
-        for (h, (a, b)) in seq.outputs.iter().zip(&piped.batch.outputs).enumerate() {
+        for (h, (a, b)) in seq.outputs.iter().zip(&piped.outputs).enumerate() {
             assert_eq!(a.out.data, b.out.data, "{} head {h}: output not bitwise-equal", m.name());
             assert_eq!(a.cost, b.cost, "{} head {h}: cost differs", m.name());
             assert_eq!(
@@ -257,19 +274,25 @@ fn pipelined_execution_bitwise_equals_sequential_for_all_six_methods() {
             );
         }
 
-        let cache_seq = PlanCache::new();
-        let cache_pipe = PlanCache::new();
-        let seq_c = m.run_batch_cached(&batch, &cache_seq, &keys);
-        let piped_c = m
-            .run_batch_cached_pipelined(&batch, &cache_pipe, &keys, &pipe)
+        let mut seq_session = m.session().keys(keys.clone()).build().unwrap();
+        let mut pipe_session = m.session().keys(keys.clone()).pipelined(true).build().unwrap();
+        let seq_c = seq_session.run_batch(&batch).unwrap();
+        let piped_c = pipe_session
+            .run_batch(&batch)
             .unwrap_or_else(|e| panic!("{}: cached pipelined run failed: {e}", m.name()));
         assert_eq!(
             (seq_c.cache_hits, seq_c.cache_misses),
-            (piped_c.batch.cache_hits, piped_c.batch.cache_misses),
+            (piped_c.cache_hits, piped_c.cache_misses),
             "{}: cached accounting",
             m.name()
         );
-        for (h, (a, b)) in seq_c.outputs.iter().zip(&piped_c.batch.outputs).enumerate() {
+        assert_eq!(
+            seq_c.ident_cost_paid,
+            piped_c.ident_cost_paid,
+            "{}: ident attribution differs",
+            m.name()
+        );
+        for (h, (a, b)) in seq_c.outputs.iter().zip(&piped_c.outputs).enumerate() {
             assert_eq!(
                 a.out.data, b.out.data,
                 "{} head {h}: cached output not bitwise-equal",
@@ -291,11 +314,18 @@ fn prop_pipelined_batch_bitwise_equals_sequential() {
         let batch = BatchInput::new(heads);
         let m = method_for(c);
         let pipe = PlanPipeline { depth: 1 + (c.seed % 3) as usize, workers: 1 + (c.step % 3) };
-        let seq = m.run_batch(&batch);
+        let seq = uncached_session(&m, ExecutorKind::Cpu, false)
+            .run_batch(&batch)
+            .map_err(|e| e.to_string())?;
         let piped = m
-            .run_batch_pipelined(&batch, &pipe)
+            .session()
+            .no_cache()
+            .pipeline(pipe)
+            .build()
+            .map_err(|e| e.to_string())?
+            .run_batch(&batch)
             .map_err(|e| format!("{}: pipelined run failed: {e}", m.name()))?;
-        for (h, (a, b)) in seq.outputs.iter().zip(&piped.batch.outputs).enumerate() {
+        for (h, (a, b)) in seq.outputs.iter().zip(&piped.outputs).enumerate() {
             ensure(
                 a.out.data == b.out.data,
                 format!("{} head {h}: pipelined output not bitwise-equal", m.name()),
@@ -303,7 +333,7 @@ fn prop_pipelined_batch_bitwise_equals_sequential() {
             ensure(a.cost == b.cost, format!("{} head {h}: cost differs", m.name()))?;
         }
         ensure(
-            piped.stats.items == batch.h(),
+            piped.pipeline.expect("pipelined stats").items == batch.h(),
             format!("{}: expected one plan item per head", m.name()),
         )
     });
@@ -405,16 +435,14 @@ fn pjrt_backend_matches_cpu_sequential_and_pipelined_for_all_six_methods() {
         PlanKey::new(0, 1),
         PlanKey::new(0, 1),
     ];
-    let pipe = PlanPipeline::default();
-    let pjrt = PjrtGatherExecutor::new();
     for method_idx in 0..6 {
         let c = ParityCase { seed: 5, n: 128, d: 8, method_idx, theta: 3.0, step: 2 };
         let m = method_for(&c);
 
-        let seq_cpu = m.run_batch(&batch);
-        let seq_pjrt = m.run_batch_with(&batch, &pjrt);
-        let piped_pjrt = m
-            .run_batch_pipelined_with(&batch, &pipe, &pjrt)
+        let seq_cpu = uncached_session(&m, ExecutorKind::Cpu, false).run_batch(&batch).unwrap();
+        let seq_pjrt = uncached_session(&m, ExecutorKind::Pjrt, false).run_batch(&batch).unwrap();
+        let piped_pjrt = uncached_session(&m, ExecutorKind::Pjrt, true)
+            .run_batch(&batch)
             .unwrap_or_else(|e| panic!("{}: pjrt pipelined run failed: {e}", m.name()));
         for (h, a) in seq_cpu.outputs.iter().enumerate() {
             assert_eq!(
@@ -424,32 +452,38 @@ fn pjrt_backend_matches_cpu_sequential_and_pipelined_for_all_six_methods() {
             );
             assert_eq!(a.cost, seq_pjrt.outputs[h].cost, "{} head {h}: cost", m.name());
             assert_eq!(
-                a.out.data, piped_pjrt.batch.outputs[h].out.data,
+                a.out.data, piped_pjrt.outputs[h].out.data,
                 "{} head {h}: pjrt pipelined differs from cpu sequential",
                 m.name()
             );
-            assert_eq!(a.cost, piped_pjrt.batch.outputs[h].cost, "{} head {h}", m.name());
+            assert_eq!(a.cost, piped_pjrt.outputs[h].cost, "{} head {h}", m.name());
         }
 
-        let cache_cpu = PlanCache::new();
-        let cache_pjrt = PlanCache::new();
-        let cached_cpu = m.run_batch_cached(&batch, &cache_cpu, &keys);
-        let cached_pjrt = m
-            .run_batch_cached_pipelined_with(&batch, &cache_pjrt, &keys, &pipe, &pjrt)
+        let mut cpu_session = m.session().keys(keys.clone()).build().unwrap();
+        let mut pjrt_session = m
+            .session()
+            .keys(keys.clone())
+            .executor(ExecutorKind::Pjrt)
+            .pipelined(true)
+            .build()
+            .unwrap();
+        let cached_cpu = cpu_session.run_batch(&batch).unwrap();
+        let cached_pjrt = pjrt_session
+            .run_batch(&batch)
             .unwrap_or_else(|e| panic!("{}: cached pjrt pipelined failed: {e}", m.name()));
         assert_eq!(
             (cached_cpu.cache_hits, cached_cpu.cache_misses),
-            (cached_pjrt.batch.cache_hits, cached_pjrt.batch.cache_misses),
+            (cached_pjrt.cache_hits, cached_pjrt.cache_misses),
             "{}: hit accounting differs across backends",
             m.name()
         );
         for (h, a) in cached_cpu.outputs.iter().enumerate() {
             assert_eq!(
-                a.out.data, cached_pjrt.batch.outputs[h].out.data,
+                a.out.data, cached_pjrt.outputs[h].out.data,
                 "{} head {h}: cached pjrt pipelined differs",
                 m.name()
             );
-            assert_eq!(a.cost, cached_pjrt.batch.outputs[h].cost, "{} head {h}", m.name());
+            assert_eq!(a.cost, cached_pjrt.outputs[h].cost, "{} head {h}", m.name());
         }
     }
 }
@@ -464,7 +498,10 @@ fn prop_plan_coverage_equals_executed_coverage() {
         let h = rand_head(&mut rng, c.n, c.d);
         let m = method_for(c);
         let head_plan = m.plan(&h);
-        let out = m.run(&h);
+        let out = uncached_session(&m, ExecutorKind::Cpu, false)
+            .run(&h)
+            .map_err(|e| e.to_string())?
+            .into_single();
         let a = head_plan.coverage();
         let b = &out.coverage;
         ensure(
@@ -472,4 +509,98 @@ fn prop_plan_coverage_equals_executed_coverage() {
             format!("{}: plan coverage != executed coverage", m.name()),
         )
     });
+}
+
+/// The redesign's acceptance bar: every method runs through
+/// `AttentionSession` with output bitwise-identical to the pre-redesign
+/// entry points, across sequential/pipelined × cpu/pjrt, and the session's
+/// per-head output matches the paged-KV route.
+#[test]
+#[allow(deprecated)]
+fn session_matches_legacy_entry_points_for_all_six_methods() {
+    let mut rng = Pcg64::seeded(0x5E55);
+    let heads: Vec<HeadInput> = (0..4).map(|_| rand_head(&mut rng, 128, 8)).collect();
+    let batch = BatchInput::new(heads.clone());
+    let keys = vec![
+        PlanKey::new(0, 0),
+        PlanKey::new(0, 0),
+        PlanKey::new(0, 1),
+        PlanKey::new(0, 1),
+    ];
+    for method_idx in 0..6 {
+        let c = ParityCase { seed: 9, n: 128, d: 8, method_idx, theta: 3.0, step: 2 };
+        let m = method_for(&c);
+
+        // Per-head: legacy fused entry vs session, plus the paged route.
+        let legacy_single = m.run(&heads[0]);
+        for kind in [ExecutorKind::Cpu, ExecutorKind::Pjrt] {
+            let s = uncached_session(&m, kind, false).run(&heads[0]).unwrap();
+            assert_eq!(
+                legacy_single.out.data,
+                s.outputs[0].out.data,
+                "{} ({}): session.run differs from legacy run",
+                m.name(),
+                kind.name()
+            );
+            assert_eq!(legacy_single.cost, s.outputs[0].cost, "{}", m.name());
+        }
+        let head_plan = m.plan(&heads[0]);
+        let page_tokens = 16;
+        let n_pages = 128usize.div_ceil(page_tokens);
+        let mut store = PagedKvStore::new(n_pages, page_tokens, 8);
+        let pages: Vec<u32> = (0..n_pages as u32).rev().collect();
+        for pos in 0..128 {
+            store.write(&pages, pos, heads[0].k.row(pos), heads[0].v.row(pos)).unwrap();
+        }
+        let cpu = CpuTileExecutor::default();
+        let paged = PagedExecutor::new(&store, &pages, &cpu)
+            .try_execute(&heads[0].q, &head_plan)
+            .unwrap();
+        assert_eq!(
+            legacy_single.out.data, paged.out.data,
+            "{}: paged route differs from legacy run",
+            m.name()
+        );
+
+        // Batched: legacy uncached/cached/pipelined vs session dispatch.
+        let legacy_batch = m.run_batch(&batch);
+        let cache = PlanCache::new();
+        let legacy_cached = m.run_batch_cached(&batch, &cache, &keys);
+        let legacy_piped = m.run_batch_pipelined(&batch, &PlanPipeline::default()).unwrap();
+        for kind in [ExecutorKind::Cpu, ExecutorKind::Pjrt] {
+            for pipelined in [false, true] {
+                let s = uncached_session(&m, kind, pipelined).run_batch(&batch).unwrap();
+                for (h, a) in legacy_batch.outputs.iter().enumerate() {
+                    assert_eq!(
+                        a.out.data,
+                        s.outputs[h].out.data,
+                        "{} ({}, pipelined={pipelined}) head {h}: batch differs",
+                        m.name(),
+                        kind.name()
+                    );
+                    assert_eq!(a.cost, s.outputs[h].cost, "{} head {h}", m.name());
+                }
+            }
+            let mut cached = m.session().keys(keys.clone()).executor(kind).build().unwrap();
+            let s = cached.run_batch(&batch).unwrap();
+            assert_eq!(
+                (legacy_cached.cache_hits, legacy_cached.cache_misses),
+                (s.cache_hits, s.cache_misses),
+                "{} ({}): cached accounting differs",
+                m.name(),
+                kind.name()
+            );
+            for (h, a) in legacy_cached.outputs.iter().enumerate() {
+                assert_eq!(a.out.data, s.outputs[h].out.data, "{} head {h}", m.name());
+                assert_eq!(a.cost, s.outputs[h].cost, "{} head {h}", m.name());
+            }
+        }
+        for (h, a) in legacy_batch.outputs.iter().enumerate() {
+            assert_eq!(
+                a.out.data, legacy_piped.batch.outputs[h].out.data,
+                "{} head {h}: legacy pipelined shim differs",
+                m.name()
+            );
+        }
+    }
 }

@@ -1,0 +1,213 @@
+//! Plan-persistence properties (DESIGN.md §11):
+//!
+//! * **Round trip** — arbitrary valid `SparsePlan` → manifest JSON →
+//!   `SparsePlan` is the identity, `predicted_cost` included (it is
+//!   re-derived from the coordinates, and the derivation is
+//!   deterministic).
+//! * **Corruption is loud** — a corrupted or truncated store entry is
+//!   rejected with an error at `PlanStore::open`, never a silent empty
+//!   plan.
+//! * **Restart warm-start** — a process "restarted" against a populated
+//!   store (fresh session, same manifest path) reports a plan-cache hit
+//!   on the first `run_batch` for a previously seen
+//!   `(model, layer, head_group, n)` key, pays zero identification, and
+//!   produces bitwise-identical output.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anchor_attention::attention::anchor::AnchorConfig;
+use anchor_attention::attention::plan::{BatchInput, GroupPlan, PlanKey, SparsePlan};
+use anchor_attention::attention::{CostTally, HeadInput, Method, TileConfig};
+use anchor_attention::runtime::manifest::{plan_from_json, plan_to_json, PlanStore, PlanStoreKey};
+use anchor_attention::util::json::Json;
+use anchor_attention::util::proptest::{check, choose, ensure, Config};
+use anchor_attention::util::rng::Pcg64;
+
+fn tmp_manifest(tag: &str) -> PathBuf {
+    let path = std::env::temp_dir()
+        .join(format!("anchor_plan_store_{}_{tag}.json", std::process::id()));
+    std::fs::write(&path, "{}\n").unwrap();
+    path
+}
+
+/// An arbitrary structurally-valid plan: random shape, random sorted
+/// disjoint spans, random ascending stripes, random ident provenance.
+fn rand_plan(rng: &mut Pcg64) -> (SparsePlan, usize) {
+    let b_q = *choose(rng, &[8usize, 16, 32]);
+    let b_kv = *choose(rng, &[8usize, 16]);
+    let n = *choose(rng, &[64usize, 100, 128, 160]);
+    let d = *choose(rng, &[4usize, 8, 16]);
+    let step = *choose(rng, &[1usize, 2, 3]);
+    let tile = TileConfig::new(b_q, b_kv);
+    let n_groups = tile.q_blocks(n).div_ceil(step);
+    let mut groups = Vec::with_capacity(n_groups);
+    for _ in 0..n_groups {
+        let mut spans = Vec::new();
+        let mut cursor = 0usize;
+        while cursor + 2 < n && rng.next_below(2) == 0 {
+            let s = cursor + rng.next_below((n - cursor - 2) as u64) as usize;
+            let e = (s + 1 + rng.next_below(16) as usize).min(n);
+            spans.push((s as u32, e as u32));
+            cursor = e + 1;
+        }
+        let mut stripes = Vec::new();
+        let mut col = rng.next_below(8) as usize;
+        while col < n && stripes.len() < 24 {
+            stripes.push(col as u32);
+            col += 1 + rng.next_below(9) as usize;
+        }
+        groups.push(GroupPlan { spans, stripes });
+    }
+    let ident = CostTally {
+        flops: rng.next_below(1_000_000),
+        kv_bytes: rng.next_below(1_000_000),
+        ident_scores: rng.next_below(1_000_000),
+    };
+    let method = *choose(
+        rng,
+        &["full-attn", "anchor", "streaming-llm", "vertical-slash", "flexprefill", "block-topk"],
+    );
+    (SparsePlan::new(method, n, d, tile, step, groups, ident), d)
+}
+
+#[test]
+fn prop_plan_json_round_trip_is_identity() {
+    let cfg = Config::heavy(32, 0x51073);
+    check(
+        &cfg,
+        |rng| rng.next_u64(),
+        |_| vec![],
+        |&seed| {
+            let mut rng = Pcg64::seeded(seed);
+            let (plan, d) = rand_plan(&mut rng);
+            let text = plan_to_json(&plan, d).to_string();
+            let reparsed = Json::parse(&text).map_err(|e| e.to_string())?;
+            let (back, d_back) = plan_from_json(&reparsed).map_err(|e| e.to_string())?;
+            ensure(d_back == d, "head dim changed in round trip")?;
+            ensure(back == plan, "plan -> json -> plan is not the identity")
+        },
+    );
+}
+
+#[test]
+fn prop_store_file_round_trip_is_identity() {
+    let cfg = Config::heavy(8, 0x51074);
+    check(
+        &cfg,
+        |rng| rng.next_u64(),
+        |_| vec![],
+        |&seed| {
+            let mut rng = Pcg64::seeded(seed);
+            let path = tmp_manifest(&format!("prop_{seed:x}"));
+            let (plan, d) = rand_plan(&mut rng);
+            let key = PlanStoreKey {
+                model: format!("m{}", rng.next_below(3)),
+                layer: rng.next_below(4) as u32,
+                head_group: rng.next_below(4) as u32,
+                n: plan.n,
+            };
+            let mut store = PlanStore::open(&path).map_err(|e| e.to_string())?;
+            store.insert(key.clone(), d, Arc::new(plan.clone()));
+            store.flush().map_err(|e| e.to_string())?;
+            let reopened = PlanStore::open(&path).map_err(|e| e.to_string())?;
+            let got = reopened.get(&key).ok_or("stored plan vanished")?;
+            let _ = std::fs::remove_file(&path);
+            ensure(*got == plan, "store file round trip is not the identity")
+        },
+    );
+}
+
+#[test]
+fn prop_corrupted_store_is_rejected() {
+    // Write one good entry, then corrupt the serialized text at an
+    // arbitrary structural point: open must fail, never succeed with a
+    // silently empty (or altered) store.
+    let path = tmp_manifest("corruption_sweep");
+    let mut rng = Pcg64::seeded(0xC0881);
+    let (plan, d) = rand_plan(&mut rng);
+    let key = PlanStoreKey { model: "m".into(), layer: 1, head_group: 2, n: plan.n };
+    let mut store = PlanStore::open(&path).unwrap();
+    store.insert(key, d, Arc::new(plan));
+    store.flush().unwrap();
+    let good = std::fs::read_to_string(&path).unwrap();
+
+    // Truncations at many byte offsets: every prefix must be rejected
+    // (either invalid JSON or a structurally incomplete store).
+    let ps_start = good.find("\"plan_store\"").unwrap();
+    for frac in [0.2, 0.5, 0.8, 0.95] {
+        let cut = ps_start + ((good.len() - ps_start) as f64 * frac) as usize;
+        std::fs::write(&path, &good[..cut]).unwrap();
+        assert!(PlanStore::open(&path).is_err(), "truncation at byte {cut} must be rejected");
+    }
+
+    // Field-level corruption.
+    for (from, to) in [
+        ("\"version\": 1", "\"version\": 2"),
+        ("\"entries\": [", "\"entries\": 3, \"x\": ["),
+        ("\"groups\": [", "\"groups\": [{\"spans\": [], \"stripes\": []}, "),
+    ] {
+        assert!(good.contains(from), "fixture drifted: {from}");
+        std::fs::write(&path, good.replace(from, to)).unwrap();
+        assert!(PlanStore::open(&path).is_err(), "corruption {from} -> {to} accepted");
+    }
+
+    std::fs::write(&path, &good).unwrap();
+    assert_eq!(PlanStore::open(&path).unwrap().len(), 1, "pristine store must reopen");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn restarted_process_warm_starts_from_the_store() {
+    let path = tmp_manifest("restart_process");
+    let mut rng = Pcg64::seeded(0xAB5E);
+    let shared = HeadInput::new(
+        anchor_attention::tensor::Mat::from_fn(96, 8, |_, _| rng.normal()),
+        anchor_attention::tensor::Mat::from_fn(96, 8, |_, _| rng.normal()),
+        anchor_attention::tensor::Mat::from_fn(96, 8, |_, _| rng.normal()),
+    );
+    let batch = BatchInput::new(vec![shared.clone(), shared]);
+    let keys = vec![PlanKey::new(3, 7), PlanKey::new(3, 7)];
+    let m = Method::Anchor(AnchorConfig {
+        tile: TileConfig::new(16, 16),
+        theta: 4.0,
+        step: 2,
+        init_blocks: 1,
+        use_anchor: true,
+    });
+
+    let cold_out = {
+        let mut cold = m
+            .session()
+            .keys(keys.clone())
+            .persist(&path)
+            .model("restart-model")
+            .build()
+            .unwrap();
+        let out = cold.run_batch(&batch).unwrap();
+        assert!(out.ident_cost_paid.ident_scores > 0, "cold run must identify");
+        cold.flush().unwrap();
+        out
+    };
+
+    // "Restart": a fresh session against the same manifest path.
+    let mut warm = m
+        .session()
+        .keys(keys)
+        .persist(&path)
+        .model("restart-model")
+        .build()
+        .unwrap();
+    let warm_out = warm.run_batch(&batch).unwrap();
+    assert_eq!(
+        (warm_out.cache_hits, warm_out.cache_misses),
+        (2, 0),
+        "previously seen (model, layer, head_group, n) key must hit on the first batch"
+    );
+    assert_eq!(warm_out.ident_cost_paid, CostTally::default());
+    assert!(warm.store_seeded() > 0);
+    for (a, b) in cold_out.outputs.iter().zip(&warm_out.outputs) {
+        assert_eq!(a.out.data, b.out.data, "warm output must be bitwise-identical");
+    }
+    let _ = std::fs::remove_file(&path);
+}
