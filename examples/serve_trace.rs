@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
                 plan_hit_rate: 0.5,
                 pipelined: false,
                 executor: ExecutorKind::Cpu,
+                shards: 1,
             },
         ),
         (
@@ -54,6 +55,7 @@ fn main() -> anyhow::Result<()> {
                 plan_hit_rate: 0.5,
                 pipelined: true,
                 executor: ExecutorKind::Cpu,
+                shards: 1,
             },
         ),
     ] {

@@ -13,7 +13,9 @@
 //! `session.run(&HeadInput)` / `session.run_batch(&BatchInput)` dispatch
 //! the right variant internally — sequential or overlapped through the
 //! bounded plan queue ([`pipeline::PlanPipeline`], DESIGN.md §9) with
-//! bitwise-identical results.
+//! bitwise-identical results. [`shard::ShardedSession`] scales the same
+//! front end across head-group shard workers that exchange only plan
+//! coordinates (DESIGN.md §12).
 //!
 //! The pre-session entry points ([`Method::run`], [`Method::run_batch`],
 //! [`Method::run_batch_cached`], `Method::run_batch_pipelined`) survive
@@ -32,6 +34,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod plan;
 pub mod session;
+pub mod shard;
 pub mod strategy;
 
 use crate::tensor::Mat;

@@ -69,7 +69,7 @@ pub enum KeyPolicy {
 }
 
 impl KeyPolicy {
-    fn keys_for(&self, heads: usize) -> Result<Vec<PlanKey>> {
+    pub(crate) fn keys_for(&self, heads: usize) -> Result<Vec<PlanKey>> {
         match self {
             KeyPolicy::Gqa { layer, group_size } => Ok((0..heads)
                 .map(|h| PlanKey::new(*layer, (h / group_size) as u32))
@@ -112,6 +112,12 @@ pub struct SessionConfig {
     pub plan_store: Option<String>,
     /// Model identifier plans are keyed under in the store.
     pub model: String,
+    /// Head-group shard workers (`--shards`, DESIGN.md §12); 1 = the
+    /// unsharded session.
+    pub shards: usize,
+    /// Optional cap on persisted plans (`"store_max_entries"`): the plan
+    /// store evicts LRU-ish past it, loudly.
+    pub store_max_entries: Option<usize>,
 }
 
 impl Default for SessionConfig {
@@ -122,12 +128,16 @@ impl Default for SessionConfig {
             cache: true,
             plan_store: None,
             model: "default".to_string(),
+            shards: 1,
+            store_max_entries: None,
         }
     }
 }
 
 impl SessionConfig {
-    /// A builder for `method` with this config applied.
+    /// A builder for `method` with this config applied (`shards` is not
+    /// consumed here — a single `AttentionSession` is the shard worker;
+    /// use [`SessionConfig::sharded_builder`] for the sharded front end).
     pub fn builder(&self, method: Method) -> SessionBuilder {
         let mut b = AttentionSession::builder(method)
             .executor(self.executor)
@@ -138,6 +148,31 @@ impl SessionConfig {
         }
         if let Some(p) = &self.plan_store {
             b = b.persist(p);
+        }
+        if let Some(cap) = self.store_max_entries {
+            b = b.store_max_entries(cap);
+        }
+        b
+    }
+
+    /// A sharded-session builder for `method` with this config applied,
+    /// including the `shards` count (DESIGN.md §12).
+    pub fn sharded_builder(
+        &self,
+        method: Method,
+    ) -> crate::attention::shard::ShardedSessionBuilder {
+        let mut b = crate::attention::shard::ShardedSession::builder(method, self.shards)
+            .executor(self.executor)
+            .pipelined(self.pipelined)
+            .model(&self.model);
+        if !self.cache {
+            b = b.no_cache();
+        }
+        if let Some(p) = &self.plan_store {
+            b = b.persist(p);
+        }
+        if let Some(cap) = self.store_max_entries {
+            b = b.store_max_entries(cap);
         }
         b
     }
@@ -150,12 +185,14 @@ pub struct SessionBuilder {
     method: Method,
     executor: ExecutorKind,
     serial_cpu: bool,
-    cache: Option<PlanCache>,
+    cache: Option<Arc<PlanCache>>,
     keys: KeyPolicy,
     pipelined: bool,
     pipeline: PlanPipeline,
     persist: Option<PathBuf>,
     model: String,
+    store_cap: Option<usize>,
+    shard_worker: bool,
 }
 
 impl SessionBuilder {
@@ -164,12 +201,14 @@ impl SessionBuilder {
             method,
             executor: ExecutorKind::Cpu,
             serial_cpu: false,
-            cache: Some(PlanCache::new()),
+            cache: Some(Arc::new(PlanCache::new())),
             keys: KeyPolicy::Gqa { layer: 0, group_size: 1 },
             pipelined: false,
             pipeline: PlanPipeline::default(),
             persist: None,
             model: "default".to_string(),
+            store_cap: None,
+            shard_worker: false,
         }
     }
 
@@ -191,7 +230,24 @@ impl SessionBuilder {
     /// the first run's sequence length (the executor rejects wrong-length
     /// plans); later length changes invalidate and re-warm as usual.
     pub fn cache(mut self, cache: PlanCache) -> Self {
+        self.cache = Some(Arc::new(cache));
+        self
+    }
+
+    /// Share a plan cache with other sessions — the shard-worker wiring
+    /// (DESIGN.md §12): shards of one [`crate::attention::shard::ShardedSession`]
+    /// exchange plan coordinates exclusively through this shared cache.
+    pub fn shared_cache(mut self, cache: Arc<PlanCache>) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Mark this session a shard worker: the coordinating
+    /// `ShardedSession` owns cache warm/invalidate and store sync, so the
+    /// worker must never invalidate the shared cache or touch a store
+    /// itself (incompatible with `persist`).
+    pub(crate) fn shard_worker(mut self) -> Self {
+        self.shard_worker = true;
         self
     }
 
@@ -243,6 +299,13 @@ impl SessionBuilder {
         self
     }
 
+    /// Cap the plan store's resident entries (LRU-ish eviction, loudly
+    /// logged); requires `persist`.
+    pub fn store_max_entries(mut self, cap: usize) -> Self {
+        self.store_cap = Some(cap);
+        self
+    }
+
     /// Validate the configuration and assemble the session.
     pub fn build(self) -> Result<AttentionSession> {
         if let KeyPolicy::Gqa { group_size, .. } = self.keys {
@@ -263,20 +326,13 @@ impl SessionBuilder {
                  or pipelined(true)"
             ));
         }
-        if self.persist.is_some() && self.cache.is_none() {
+        if self.shard_worker && self.persist.is_some() {
             return Err(anyhow!(
-                "plan persistence requires the plan cache: a session built with \
-                 persist()/--plan-store but no_cache() has nothing to warm or flush — \
-                 re-enable the cache or drop the persistence path"
+                "a shard worker must not persist: the coordinating ShardedSession \
+                 owns the plan store (DESIGN.md §12)"
             ));
         }
-        // No context wrap: the store's own error already names the path and
-        // the fix, and the vendored `anyhow` displays only the outermost
-        // message.
-        let store = match &self.persist {
-            Some(path) => Some(PlanStore::open(path)?),
-            None => None,
-        };
+        let store = open_plan_store(&self.persist, self.cache.is_some(), self.store_cap)?;
         let executor: Box<dyn Executor> = match self.executor {
             ExecutorKind::Cpu => Box::new(CpuTileExecutor { serial: self.serial_cpu }),
             ExecutorKind::Pjrt => Box::new(PjrtGatherExecutor::new()),
@@ -293,6 +349,7 @@ impl SessionBuilder {
             model: self.model,
             current_n: None,
             store_seeded: 0,
+            shard_worker: self.shard_worker,
         })
     }
 }
@@ -356,7 +413,7 @@ pub struct AttentionSession {
     method: Method,
     executor: Box<dyn Executor>,
     executor_kind: ExecutorKind,
-    cache: Option<PlanCache>,
+    cache: Option<Arc<PlanCache>>,
     keys: KeyPolicy,
     pipelined: bool,
     pipeline: PlanPipeline,
@@ -366,6 +423,107 @@ pub struct AttentionSession {
     /// invalidates and re-warms (plan keys carry no length).
     current_n: Option<usize>,
     store_seeded: u64,
+    /// Shard-worker mode: cache lifecycle is owned by the coordinating
+    /// `ShardedSession`, so prepare/invalidate/sync are no-ops here.
+    shard_worker: bool,
+}
+
+/// Shared persistence validation + store opening for the session and
+/// sharded-session builders: a persistence path requires the cache, a
+/// store cap requires a path and must be nonzero. Keeping one copy means
+/// the two builders cannot drift on store semantics (DESIGN.md §12).
+pub(crate) fn open_plan_store(
+    persist: &Option<PathBuf>,
+    cache_present: bool,
+    store_cap: Option<usize>,
+) -> Result<Option<PlanStore>> {
+    if persist.is_some() && !cache_present {
+        return Err(anyhow!(
+            "plan persistence requires the plan cache: a session built with \
+             persist()/--plan-store but no_cache() has nothing to warm or flush — \
+             re-enable the cache or drop the persistence path"
+        ));
+    }
+    if store_cap.is_some() && persist.is_none() {
+        return Err(anyhow!(
+            "store_max_entries caps the persisted plan store — there is none \
+             without persist()/--plan-store"
+        ));
+    }
+    if store_cap == Some(0) {
+        return Err(anyhow!(
+            "store_max_entries must be >= 1 — a zero-entry store could never \
+             warm-start anything"
+        ));
+    }
+    // No context wrap: the store's own error already names the path and
+    // the fix, and the vendored `anyhow` displays only the outermost
+    // message.
+    match persist {
+        Some(path) => {
+            let mut s = PlanStore::open(path)?;
+            if let Some(cap) = store_cap {
+                s.set_max_entries(Some(cap));
+            }
+            Ok(Some(s))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Seed `cache` from `store`'s `(model, *, *, n)` entries whose method,
+/// plan geometry (tile, step) *and* priced head dim all match — a
+/// persisted plan from a differently-configured method must re-identify,
+/// never serve stale coordinates or mispriced costs. Returns the seeded
+/// count. Shared by the session's warm path and the `ShardedSession`
+/// coordinator (DESIGN.md §12).
+pub(crate) fn seed_cache_from_store(
+    cache: &PlanCache,
+    store: &mut PlanStore,
+    model: &str,
+    method: &Method,
+    n: usize,
+    d: usize,
+) -> u64 {
+    let (tile, step) = method.plan_geometry();
+    let name = method.name();
+    let mut seeded = 0;
+    for (key, entry_d, plan) in store.plans_for(model, n) {
+        if plan.method == name && plan.tile == tile && plan.step == step && entry_d == d {
+            cache.seed(key, plan);
+            seeded += 1;
+        }
+    }
+    seeded
+}
+
+/// File every cached plan for length `n` into the store. Store-seeded and
+/// previously filed entries hold the same `Arc`, so the steady-state sync
+/// is a pointer compare per entry — no deep work, no dirtying. A
+/// caller-warmed cache may hold other-length plans the batch never
+/// touched; those are never filed under this length's key.
+pub(crate) fn sync_cache_to_store(
+    store: &mut PlanStore,
+    cache: &PlanCache,
+    model: &str,
+    n: usize,
+    d: usize,
+) {
+    for (key, plan) in cache.snapshot() {
+        if plan.n != n {
+            continue;
+        }
+        store.insert(
+            PlanStoreKey {
+                model: model.to_string(),
+                layer: key.layer,
+                head_group: key.head_group,
+                n,
+            },
+            d,
+            plan,
+        );
+    }
 }
 
 impl AttentionSession {
@@ -420,16 +578,23 @@ impl AttentionSession {
         self.store_seeded
     }
 
+    /// Replace the per-head plan keys (the `ShardedSession` coordinator
+    /// routes each shard's sub-batch keys through this before dispatch).
+    pub(crate) fn set_keys(&mut self, keys: Vec<PlanKey>) {
+        self.keys = KeyPolicy::Explicit(keys);
+    }
+
     /// Warm the cache for sequence length `n` at head dim `d`: on a
     /// length change the cache is invalidated (keys carry no length) and
-    /// re-seeded from the store's `(model, *, *, n)` entries whose method,
-    /// plan geometry (tile, step) *and* priced head dim all match — a
-    /// persisted plan from a differently-configured method (another
-    /// anchor `step`, a different `d`) must re-identify, never serve
-    /// stale coordinates or mispriced costs, even when the caller reused
-    /// a model tag.
+    /// re-seeded from the store via [`seed_cache_from_store`]'s
+    /// compatibility filter. A shard worker skips this entirely — the
+    /// coordinating `ShardedSession` owns warm/invalidate, and a worker
+    /// invalidating the *shared* cache would wipe its siblings' plans.
     fn prepare_cache(&mut self, n: usize, d: usize) {
-        let Some(cache) = &self.cache else { return };
+        if self.shard_worker {
+            return;
+        }
+        let Some(cache) = self.cache.clone() else { return };
         if self.current_n == Some(n) {
             return;
         }
@@ -438,46 +603,18 @@ impl AttentionSession {
         if self.current_n.is_some() {
             cache.invalidate();
         }
-        if let Some(store) = &self.store {
-            let (tile, step) = self.method.plan_geometry();
-            let name = self.method.name();
-            for (key, entry_d, plan) in store.plans_for(&self.model, n) {
-                if plan.method == name && plan.tile == tile && plan.step == step && entry_d == d {
-                    cache.seed(key, plan);
-                    self.store_seeded += 1;
-                }
-            }
+        if let Some(store) = self.store.as_mut() {
+            self.store_seeded += seed_cache_from_store(&cache, store, &self.model, &self.method, n, d);
         }
         self.current_n = Some(n);
     }
 
     /// File every cached plan for length `n` into the store (no-op when
-    /// the session does not persist). Store-seeded and previously filed
-    /// entries hold the same `Arc`, so the steady-state sync is a pointer
-    /// compare per entry — no deep work, no dirtying.
+    /// the session does not persist).
     fn sync_store(&mut self, n: usize, d: usize) {
-        if self.store.is_none() {
-            return;
-        }
-        let Some(cache) = &self.cache else { return };
-        let snapshot = cache.snapshot();
-        let store = self.store.as_mut().expect("store checked above");
-        for (key, plan) in snapshot {
-            // A caller-warmed cache may hold other-length plans the batch
-            // never touched; never file those under this length's key.
-            if plan.n != n {
-                continue;
-            }
-            store.insert(
-                PlanStoreKey {
-                    model: self.model.clone(),
-                    layer: key.layer,
-                    head_group: key.head_group,
-                    n,
-                },
-                d,
-                plan,
-            );
+        let Some(cache) = self.cache.clone() else { return };
+        if let Some(store) = self.store.as_mut() {
+            sync_cache_to_store(store, &cache, &self.model, n, d);
         }
     }
 
@@ -525,7 +662,7 @@ impl AttentionSession {
         };
         let (out, stats) = {
             let cached = match (&self.cache, &keys) {
-                (Some(c), Some(k)) => Some((c, k.as_slice())),
+                (Some(c), Some(k)) => Some((c.as_ref(), k.as_slice())),
                 _ => None,
             };
             if self.pipelined {
@@ -891,6 +1028,8 @@ mod tests {
             cache: true,
             plan_store: None,
             model: "m7".to_string(),
+            shards: 1,
+            store_max_entries: None,
         };
         let session = cfg.builder(anchor_method()).build().unwrap();
         assert_eq!(session.executor_kind(), ExecutorKind::Pjrt);

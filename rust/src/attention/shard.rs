@@ -1,0 +1,582 @@
+//! Head-group sharding: distribute a [`BatchInput`]'s head groups across
+//! shard workers that exchange **only plan coordinates** (DESIGN.md §12).
+//!
+//! The paper's stripe plans are discrete coordinates, tiny relative to the
+//! K/V they index (§3.2–§3.3) — which is what makes sharding cheap at the
+//! head-group granularity: a [`ShardedSession`] partitions the batch's
+//! [`PlanKey`]s across `S` shard workers (deterministic round-robin over
+//! the sorted distinct keys), each shard owning a full
+//! [`AttentionSession`] with its own executor backend and pipeline, while
+//! every shard reads and writes one shared [`PlanCache`] and the
+//! coordinator alone warms/flushes the manifest [`PlanStore`]. K/V never
+//! crosses a shard boundary: each head's Q/K/V is handed to exactly one
+//! shard, and what shards exchange — through the cache and the store — is
+//! [`SparsePlan`] coordinates.
+//!
+//! Invariants (property-tested in `tests/prop_shard_parity.rs`):
+//! * **Bitwise parity** — the merged [`SessionOutput`] is bitwise-equal to
+//!   the unsharded session for every planner, across shard counts
+//!   (including ones that do not divide the head count), sequential and
+//!   pipelined, on every executor backend. All heads of one `PlanKey`
+//!   land on one shard and sub-batches preserve the original head order,
+//!   so each key's plan is identified from the same head the unsharded
+//!   path would pick.
+//! * **Accounting parity** — merged `cache_hits + cache_misses` equals the
+//!   unsharded run head count, hit/ident attribution sums across shards to
+//!   the unsharded totals, and the merged hit rate is what a serving loop
+//!   feeds into the scheduler's `plan_hit_rate` EWMA
+//!   (`SparsityModel::observe_plan_hit_rate`).
+//! * **Failure is loud** — a shard worker that errors or panics surfaces
+//!   as an `Err` naming the shard; the remaining shards are joined first,
+//!   never leaked.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::attention::exec::ExecutorKind;
+use crate::attention::pipeline::PipelineStats;
+use crate::attention::plan::{BatchInput, PlanCache, PlanCacheStats, PlanKey, SparsePlan};
+use crate::attention::session::{
+    open_plan_store, seed_cache_from_store, sync_cache_to_store, AttentionSession, KeyPolicy,
+    SessionOutput,
+};
+use crate::attention::{AttnOutput, CostTally, Method};
+use crate::runtime::manifest::PlanStore;
+use crate::util::threadpool::panic_message;
+
+/// Builder for [`ShardedSession`] — the sharded front end to the session
+/// API; every knob mirrors [`crate::attention::session::SessionBuilder`].
+pub struct ShardedSessionBuilder {
+    method: Method,
+    shards: usize,
+    executor: ExecutorKind,
+    pipelined: bool,
+    cache: Option<Arc<PlanCache>>,
+    keys: KeyPolicy,
+    persist: Option<PathBuf>,
+    model: String,
+    store_cap: Option<usize>,
+}
+
+impl ShardedSessionBuilder {
+    fn new(method: Method, shards: usize) -> Self {
+        Self {
+            method,
+            shards,
+            executor: ExecutorKind::Cpu,
+            pipelined: false,
+            cache: Some(Arc::new(PlanCache::new())),
+            keys: KeyPolicy::Gqa { layer: 0, group_size: 1 },
+            persist: None,
+            model: "default".to_string(),
+            store_cap: None,
+        }
+    }
+
+    /// Executor backend every shard worker runs (`cpu` | `pjrt`).
+    pub fn executor(mut self, kind: ExecutorKind) -> Self {
+        self.executor = kind;
+        self
+    }
+
+    /// Run each shard's batch through the async plan pipeline.
+    pub fn pipelined(mut self, pipelined: bool) -> Self {
+        self.pipelined = pipelined;
+        self
+    }
+
+    /// Share a pre-warmed plan cache instead of a fresh one.
+    pub fn shared_cache(mut self, cache: Arc<PlanCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Disable plan caching: every shard re-identifies its keys each run.
+    /// Incompatible with `persist`.
+    pub fn no_cache(mut self) -> Self {
+        self.cache = None;
+        self
+    }
+
+    /// Explicit per-head plan keys for `run_batch`.
+    pub fn keys(mut self, keys: Vec<PlanKey>) -> Self {
+        self.keys = KeyPolicy::Explicit(keys);
+        self
+    }
+
+    /// GQA-style key assignment: `keys[h] = (layer, h / group_size)`.
+    pub fn gqa_keys(mut self, layer: u32, group_size: usize) -> Self {
+        self.keys = KeyPolicy::Gqa { layer, group_size };
+        self
+    }
+
+    /// Persist plans into the runtime manifest at `path`. The coordinator
+    /// owns the store: shards only see coordinates through the shared
+    /// cache.
+    pub fn persist(mut self, path: impl Into<PathBuf>) -> Self {
+        self.persist = Some(path.into());
+        self
+    }
+
+    /// Model identifier plans are keyed under in the store.
+    pub fn model(mut self, model: &str) -> Self {
+        self.model = model.to_string();
+        self
+    }
+
+    /// Cap the plan store's resident entries; requires `persist`.
+    pub fn store_max_entries(mut self, cap: usize) -> Self {
+        self.store_cap = Some(cap);
+        self
+    }
+
+    /// Validate the configuration and assemble the sharded session.
+    pub fn build(self) -> Result<ShardedSession> {
+        if self.shards == 0 {
+            return Err(anyhow!("sharded session: shards must be >= 1"));
+        }
+        if let KeyPolicy::Gqa { group_size, .. } = self.keys {
+            if group_size == 0 {
+                return Err(anyhow!("sharded session key policy: group_size must be >= 1"));
+            }
+        }
+        let store = open_plan_store(&self.persist, self.cache.is_some(), self.store_cap)?;
+        let mut workers = Vec::with_capacity(self.shards);
+        for _ in 0..self.shards {
+            let mut b = AttentionSession::builder(self.method.clone())
+                .executor(self.executor)
+                .shard_worker();
+            b = match &self.cache {
+                Some(c) => b.shared_cache(c.clone()),
+                None => b.no_cache(),
+            };
+            if self.pipelined {
+                b = b.pipelined(true);
+            }
+            workers.push(b.build()?);
+        }
+        Ok(ShardedSession {
+            method: self.method,
+            workers,
+            cache: self.cache,
+            keys: self.keys,
+            store,
+            model: self.model,
+            current_n: None,
+            store_seeded: 0,
+        })
+    }
+}
+
+/// `S` shard workers behind one session-shaped front: `run_batch`
+/// partitions the batch's head groups, dispatches each shard's sub-batch
+/// on its own thread, and merges the per-shard [`SessionOutput`]s back
+/// into one (original head order, summed accounting). See the module docs
+/// for the replication story: plans, never K/V.
+pub struct ShardedSession {
+    method: Method,
+    workers: Vec<AttentionSession>,
+    cache: Option<Arc<PlanCache>>,
+    keys: KeyPolicy,
+    store: Option<PlanStore>,
+    model: String,
+    /// Sequence length the shared cache is currently warmed for.
+    current_n: Option<usize>,
+    store_seeded: u64,
+}
+
+impl ShardedSession {
+    pub fn builder(method: Method, shards: usize) -> ShardedSessionBuilder {
+        ShardedSessionBuilder::new(method, shards)
+    }
+
+    pub fn method(&self) -> &Method {
+        &self.method
+    }
+
+    /// Shard worker count.
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Shared-cache counters (summed across shards by construction).
+    pub fn cache_stats(&self) -> Option<PlanCacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Persisted-plan count, when the session persists.
+    pub fn store_len(&self) -> Option<usize> {
+        self.store.as_ref().map(|s| s.len())
+    }
+
+    /// Persisted-plan count this session could actually seed from
+    /// (model tag + method + plan geometry, any length) — the honest
+    /// input to warm-start expectations like the serve plan-hit prior
+    /// (mirrors `AttentionSession::store_len_compatible`).
+    pub fn store_len_compatible(&self) -> Option<usize> {
+        let store = self.store.as_ref()?;
+        let (tile, step) = self.method.plan_geometry();
+        Some(store.len_compatible(&self.model, self.method.name(), tile, step))
+    }
+
+    /// Store-to-cache seeding events so far (coordinator-side; shard
+    /// workers never seed).
+    pub fn store_seeded(&self) -> u64 {
+        self.store_seeded
+    }
+
+    /// Warm the shared cache for `(n, d)` exactly once per length change —
+    /// the coordinator-side half of the worker `shard_worker` contract: a
+    /// single invalidate+seed here, instead of one racing per shard.
+    fn prepare(&mut self, n: usize, d: usize) {
+        let Some(cache) = self.cache.clone() else {
+            self.current_n = Some(n);
+            return;
+        };
+        if self.current_n == Some(n) {
+            return;
+        }
+        if self.current_n.is_some() {
+            cache.invalidate();
+        }
+        if let Some(store) = self.store.as_mut() {
+            self.store_seeded +=
+                seed_cache_from_store(&cache, store, &self.model, &self.method, n, d);
+        }
+        self.current_n = Some(n);
+    }
+
+    fn sync_store(&mut self, n: usize, d: usize) {
+        let Some(cache) = self.cache.clone() else { return };
+        if let Some(store) = self.store.as_mut() {
+            sync_cache_to_store(store, &cache, &self.model, n, d);
+        }
+    }
+
+    /// Run the method on a multi-head batch across the shard workers.
+    /// Output, plans, and cache/ident accounting are bitwise-identical to
+    /// the unsharded [`AttentionSession::run_batch`] in every
+    /// configuration; a failed or panicked shard surfaces as an `Err`
+    /// naming it.
+    pub fn run_batch(&mut self, batch: &BatchInput) -> Result<SessionOutput> {
+        let n = batch.n();
+        let d = batch.d();
+        self.prepare(n, d);
+        let keys = self.keys.keys_for(batch.h())?;
+        let shards = self.workers.len();
+
+        // Deterministic round-robin by PlanKey: the batch's distinct keys
+        // in (layer, head_group) order, key j -> shard j % S. Sorting (not
+        // first-seen order) keeps the assignment stable across batches
+        // with different head compositions, so a warm key re-routes to the
+        // shard-independent shared cache either way. All heads of one key
+        // land on one shard, preserving the unsharded path's
+        // one-identification-per-fresh-key accounting.
+        let mut distinct: Vec<PlanKey> = keys.clone();
+        distinct.sort_by_key(|k| (k.layer, k.head_group));
+        distinct.dedup();
+        let shard_of: HashMap<PlanKey, usize> =
+            distinct.iter().enumerate().map(|(j, &k)| (k, j % shards)).collect();
+
+        // Partition heads, preserving original order within each shard.
+        let mut head_idx: Vec<Vec<usize>> = vec![Vec::new(); shards];
+        for (h, k) in keys.iter().enumerate() {
+            head_idx[shard_of[k]].push(h);
+        }
+
+        // Fast path: every head routed to one shard (shards == 1, or few
+        // distinct keys). Run the whole batch on that worker in place —
+        // no sub-batch copies, no thread spawn — so the unsharded grid
+        // pays zero dispatch overhead over a plain session. Panics are
+        // still caught (the same loud-failure contract as the threaded
+        // path).
+        let occupied: Vec<usize> = (0..shards).filter(|&s| !head_idx[s].is_empty()).collect();
+        if occupied.len() == 1 {
+            let s = occupied[0];
+            let worker = &mut self.workers[s];
+            worker.set_keys(keys);
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                worker.run_batch(batch)
+            }));
+            let out = match run {
+                Ok(r) => r.map_err(|e| anyhow!("shard {s} failed: {e}"))?,
+                Err(e) => return Err(anyhow!("shard {s} failed: {}", panic_message(&*e))),
+            };
+            self.sync_store(n, d);
+            return Ok(out);
+        }
+
+        // One job per non-empty shard: the shard's sub-batch plus the
+        // matching per-head keys. Each head's Q/K/V is copied to exactly
+        // ONE worker — a stand-in for the one-time placement transfer of
+        // a multi-device deployment — never replicated across shards;
+        // only plan coordinates are shared. The copy is the multi-shard
+        // dispatch cost (the single-shard path above pays none), bounded
+        // by one batch, not by shard count.
+        struct ShardJob<'w> {
+            shard: usize,
+            worker: &'w mut AttentionSession,
+            heads: Vec<usize>,
+            sub: BatchInput,
+            keys: Vec<PlanKey>,
+        }
+        let mut jobs: Vec<ShardJob<'_>> = Vec::new();
+        for (s, worker) in self.workers.iter_mut().enumerate() {
+            let hs = std::mem::take(&mut head_idx[s]);
+            if hs.is_empty() {
+                continue;
+            }
+            let sub = BatchInput::new(hs.iter().map(|&h| batch.heads[h].clone()).collect());
+            let sub_keys: Vec<PlanKey> = hs.iter().map(|&h| keys[h]).collect();
+            jobs.push(ShardJob { shard: s, worker, heads: hs, sub, keys: sub_keys });
+        }
+
+        // Dispatch: one thread per shard job (the workers' own executors
+        // parallelize within each shard over the shared pool). Joining
+        // every handle before merging keeps a failing shard from leaking
+        // its siblings.
+        type ShardResult = (usize, Vec<usize>, Result<SessionOutput, String>);
+        let mut results: Vec<ShardResult> = Vec::with_capacity(jobs.len());
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(jobs.len());
+            for job in jobs {
+                let ShardJob { shard, worker, heads, sub, keys } = job;
+                let handle = scope.spawn(move || {
+                    worker.set_keys(keys);
+                    worker.run_batch(&sub).map_err(|e| e.to_string())
+                });
+                handles.push((shard, heads, handle));
+            }
+            for (shard, heads, handle) in handles {
+                let r = match handle.join() {
+                    Ok(r) => r,
+                    Err(e) => Err(panic_message(&*e)),
+                };
+                results.push((shard, heads, r));
+            }
+        });
+
+        // Merge: outputs and plans return to original head positions;
+        // hit/miss/ident accounting sums; pipeline stats aggregate with
+        // concurrent wall time (max) and summed stage times.
+        let mut outputs: Vec<Option<AttnOutput>> = (0..batch.h()).map(|_| None).collect();
+        let mut plans: Vec<Option<Arc<SparsePlan>>> = (0..batch.h()).map(|_| None).collect();
+        let mut cache_hits = 0u64;
+        let mut cache_misses = 0u64;
+        let mut ident_paid = CostTally::default();
+        let mut pipeline: Option<PipelineStats> = None;
+        for (s, hs, r) in results {
+            let out = r.map_err(|msg| anyhow!("shard {s} failed: {msg}"))?;
+            cache_hits += out.cache_hits;
+            cache_misses += out.cache_misses;
+            ident_paid.add(out.ident_cost_paid);
+            if let Some(st) = out.pipeline {
+                let agg = pipeline.get_or_insert_with(PipelineStats::default);
+                agg.ident_total_s += st.ident_total_s;
+                agg.ident_hidden_s += st.ident_hidden_s;
+                agg.exec_total_s += st.exec_total_s;
+                agg.stall_s += st.stall_s;
+                agg.wall_s = agg.wall_s.max(st.wall_s);
+                agg.items += st.items;
+            }
+            for ((&h, o), p) in hs.iter().zip(out.outputs).zip(out.plans) {
+                outputs[h] = Some(o);
+                plans[h] = Some(p);
+            }
+        }
+        self.sync_store(n, d);
+        Ok(SessionOutput {
+            outputs: outputs
+                .into_iter()
+                .map(|o| o.expect("every head owned by exactly one shard"))
+                .collect(),
+            plans: plans
+                .into_iter()
+                .map(|p| p.expect("every head's plan owned by exactly one shard"))
+                .collect(),
+            cache_hits,
+            cache_misses,
+            ident_cost_paid: ident_paid,
+            pipeline,
+        })
+    }
+
+    /// Write filed plans back to the runtime manifest (no-op when the
+    /// session does not persist). Also runs on drop, best-effort.
+    pub fn flush(&mut self) -> Result<()> {
+        match self.store.as_mut() {
+            Some(store) => store.flush(),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ShardedSession {
+    fn drop(&mut self) {
+        if let Some(store) = self.store.as_mut() {
+            let _ = store.flush();
+        }
+    }
+}
+
+impl Method {
+    /// Sharded-session builder for this method: `shards` head-group
+    /// workers behind one `run_batch` (DESIGN.md §12). `shards == 1` is
+    /// the unsharded session with identical bits.
+    pub fn sharded_session(&self, shards: usize) -> ShardedSessionBuilder {
+        ShardedSession::builder(self.clone(), shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::anchor::AnchorConfig;
+    use crate::attention::{HeadInput, TileConfig};
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn anchor_method() -> Method {
+        Method::Anchor(AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta: 4.0,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        })
+    }
+
+    #[test]
+    fn build_rejects_zero_shards() {
+        let err = anchor_method().sharded_session(0).build().map(|_| ()).unwrap_err().to_string();
+        assert!(err.contains("shards"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_persist_without_cache() {
+        let err = anchor_method()
+            .sharded_session(2)
+            .no_cache()
+            .persist("/nonexistent/manifest.json")
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cache"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_store_cap_without_persist() {
+        let err = anchor_method()
+            .sharded_session(2)
+            .store_max_entries(8)
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("persist"), "{err}");
+    }
+
+    /// More shards than distinct keys: the extra workers idle, every head
+    /// still executes exactly once.
+    #[test]
+    fn more_shards_than_keys_still_covers_every_head() {
+        let heads: Vec<HeadInput> = (0..3).map(|i| rand_head(60 + i, 64, 8)).collect();
+        let batch = BatchInput::new(heads);
+        let m = anchor_method();
+        let mut sharded = m.sharded_session(8).build().unwrap();
+        let out = sharded.run_batch(&batch).unwrap();
+        assert_eq!(out.outputs.len(), 3);
+        assert_eq!(out.cache_hits + out.cache_misses, 3);
+        let mut unsharded = m.session().build().unwrap();
+        let base = unsharded.run_batch(&batch).unwrap();
+        for (a, b) in base.outputs.iter().zip(&out.outputs) {
+            assert_eq!(a.out.data, b.out.data);
+            assert_eq!(a.cost, b.cost);
+        }
+    }
+
+    /// Heads of one key land on one shard: plan `Arc`s are shared exactly
+    /// as in the unsharded cached path, and a second batch runs warm
+    /// through the shared cache.
+    #[test]
+    fn key_groups_stay_shard_local_and_warm_across_batches() {
+        let shared = rand_head(71, 96, 8);
+        let batch = BatchInput::new(vec![shared.clone(), shared.clone(), shared]);
+        let keys = vec![PlanKey::new(0, 0), PlanKey::new(0, 0), PlanKey::new(0, 1)];
+        let m = anchor_method();
+        let mut sharded = m.sharded_session(2).keys(keys).build().unwrap();
+        let cold = sharded.run_batch(&batch).unwrap();
+        assert_eq!((cold.cache_hits, cold.cache_misses), (1, 2));
+        assert!(Arc::ptr_eq(&cold.plans[0], &cold.plans[1]));
+        let warm = sharded.run_batch(&batch).unwrap();
+        assert_eq!((warm.cache_hits, warm.cache_misses), (3, 0));
+        assert_eq!(warm.ident_cost_paid, CostTally::default());
+        assert!((warm.hit_rate() - 1.0).abs() < 1e-12);
+    }
+
+    /// A length change invalidates the shared cache exactly once at the
+    /// coordinator, not once per shard.
+    #[test]
+    fn length_change_invalidates_shared_cache_once() {
+        let m = anchor_method();
+        let mut sharded = m.sharded_session(2).build().unwrap();
+        let a = sharded.run_batch(&BatchInput::new(vec![rand_head(80, 96, 8)])).unwrap();
+        assert_eq!(a.plans[0].n, 96);
+        let b = sharded.run_batch(&BatchInput::new(vec![rand_head(81, 64, 8)])).unwrap();
+        assert_eq!(b.plans[0].n, 64);
+        assert_eq!((b.cache_hits, b.cache_misses), (0, 1));
+    }
+
+    /// Sharded persistence warm-starts a restarted sharded session, same
+    /// contract as the unsharded session (DESIGN.md §11/§12).
+    #[test]
+    fn sharded_session_warm_starts_from_the_store() {
+        let path = std::env::temp_dir()
+            .join(format!("anchor_shard_store_{}.json", std::process::id()));
+        std::fs::write(&path, "{}\n").unwrap();
+        let heads: Vec<HeadInput> = (0..4).map(|i| rand_head(90 + i, 96, 8)).collect();
+        let batch = BatchInput::new(heads);
+        let m = anchor_method();
+        let cold_out = {
+            let mut cold = m
+                .sharded_session(2)
+                .persist(&path)
+                .model("shard-restart")
+                .build()
+                .unwrap();
+            let out = cold.run_batch(&batch).unwrap();
+            assert!(out.ident_cost_paid.ident_scores > 0, "cold run must identify");
+            cold.flush().unwrap();
+            assert_eq!(cold.store_len(), Some(4));
+            out
+        };
+        let mut warm = m
+            .sharded_session(3)
+            .persist(&path)
+            .model("shard-restart")
+            .build()
+            .unwrap();
+        let out = warm.run_batch(&batch).unwrap();
+        assert_eq!((out.cache_hits, out.cache_misses), (4, 0));
+        assert_eq!(out.ident_cost_paid, CostTally::default());
+        assert_eq!(warm.store_seeded(), 4);
+        for (a, b) in cold_out.outputs.iter().zip(&out.outputs) {
+            assert_eq!(a.out.data, b.out.data, "warm output must be bitwise-identical");
+        }
+        drop(warm);
+        let _ = std::fs::remove_file(&path);
+    }
+}

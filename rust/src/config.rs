@@ -90,6 +90,14 @@ impl AppConfig {
                         None => ExecutorKind::default(),
                         Some(s) => ExecutorKind::parse(s)?,
                     },
+                    // Head-group shard workers priced by the cost model
+                    // (DESIGN.md §12): near-linear exec scaling plus a
+                    // plan-broadcast term; 1 = unsharded.
+                    shards: match sched.get("shards").as_usize() {
+                        None => 1,
+                        Some(0) => return Err(anyhow!("scheduler shards must be >= 1")),
+                        Some(s) => s,
+                    },
                 },
                 Some(other) => return Err(anyhow!("unknown sparsity model '{other}'")),
             };
@@ -123,6 +131,17 @@ impl AppConfig {
                 cache: se.get("cache").as_bool().unwrap_or(d.cache),
                 plan_store: se.get("plan_store").as_str().map(|s| s.to_string()),
                 model: se.get("model").as_str().unwrap_or(&d.model).to_string(),
+                shards: match se.get("shards").as_usize() {
+                    None => d.shards,
+                    Some(0) => return Err(anyhow!("session shards must be >= 1")),
+                    Some(s) => s,
+                },
+                store_max_entries: match se.get("store_max_entries").as_usize() {
+                    Some(0) => {
+                        return Err(anyhow!("session store_max_entries must be >= 1"))
+                    }
+                    cap => cap,
+                },
             };
         }
 
@@ -236,6 +255,33 @@ mod tests {
         assert_eq!(cfg.session.model, "llama-like");
         // Unknown executor in the session block is rejected.
         assert!(AppConfig::parse(r#"{"session": {"executor": "tpu"}}"#).is_err());
+    }
+
+    #[test]
+    fn shards_parse_in_scheduler_and_session_blocks() {
+        let cfg = AppConfig::parse(
+            r#"{"server": {"scheduler": {"sparsity": "anchor", "shards": 4}},
+                "session": {"shards": 4, "store_max_entries": 64}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.server.scheduler.sparsity.shards(), 4);
+        assert_eq!(cfg.session.shards, 4);
+        assert_eq!(cfg.session.store_max_entries, Some(64));
+        // Defaults: unsharded, uncapped.
+        let cfg = AppConfig::parse(r#"{"server": {"scheduler": {"sparsity": "anchor"}}}"#).unwrap();
+        assert_eq!(cfg.server.scheduler.sparsity.shards(), 1);
+        assert_eq!(cfg.session.shards, 1);
+        assert_eq!(cfg.session.store_max_entries, None);
+        // Zero shards is a configuration error, not a silent clamp.
+        assert!(AppConfig::parse(
+            r#"{"server": {"scheduler": {"sparsity": "anchor", "shards": 0}}}"#
+        )
+        .is_err());
+        assert!(AppConfig::parse(r#"{"session": {"shards": 0}}"#).is_err());
+        assert!(
+            AppConfig::parse(r#"{"session": {"store_max_entries": 0}}"#).is_err(),
+            "zero store cap is rejected, not silently clamped"
+        );
     }
 
     #[test]

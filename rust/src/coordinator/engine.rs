@@ -35,6 +35,15 @@ pub trait StepExecutor {
     /// Register a request's prompt ahead of its first prefill chunk
     /// (no-op for executors that track progress externally).
     fn register(&mut self, _req: u64, _prompt: Vec<i32>) {}
+    /// Plan-cache hit rate the engine observed since the last poll — e.g.
+    /// a merged `SessionOutput::hit_rate()` from the attention sessions
+    /// (sharded or not) behind the steps. The serve loop drains this after
+    /// every iteration and folds it into the scheduler's `plan_hit_rate`
+    /// EWMA (`SparsityModel::observe_plan_hit_rate`), closing the live
+    /// feedback loop DESIGN.md §11 left open. Default: no observation.
+    fn observed_plan_hit_rate(&mut self) -> Option<f64> {
+        None
+    }
 }
 
 /// The real PJRT-backed engine. Owns one [`LmModel`] and per-request
@@ -320,6 +329,7 @@ mod tests {
                     plan_hit_rate: hit,
                     pipelined: false,
                     executor: ExecutorKind::Cpu,
+                    shards: 1,
                 },
             )
         };
@@ -380,6 +390,7 @@ mod tests {
                     plan_hit_rate: hit,
                     pipelined,
                     executor: ExecutorKind::Cpu,
+                    shards: 1,
                 },
             )
         };
@@ -408,6 +419,7 @@ mod tests {
             plan_hit_rate: 0.0,
             pipelined: true,
             executor: ExecutorKind::Cpu,
+            shards: 1,
         };
         let (cmd_tx, res_rx) = spawn_mock_engine(64, Some(model));
         // Ready signal first.

@@ -22,6 +22,13 @@ pub struct ServeReport {
     pub wall_s: f64,
     pub iterations: u64,
     pub engine_busy_s: f64,
+    /// Iterations whose engine reported a merged plan-cache hit rate that
+    /// was folded into the scheduler's `plan_hit_rate` EWMA live
+    /// (DESIGN.md §12).
+    pub plan_hit_observations: u64,
+    /// Scheduler's plan-hit EWMA at the end of the run (`None` for the
+    /// dense model, which carries no amortization state).
+    pub final_plan_hit_rate: Option<f64>,
 }
 
 impl ServeReport {
@@ -93,6 +100,12 @@ impl ServeReport {
             self.e2e_percentile(50.0),
             self.e2e_percentile(95.0)
         );
+        if let Some(rate) = self.final_plan_hit_rate {
+            println!(
+                "plan-hit EWMA     {:>10.2}   ({} live observation(s))",
+                rate, self.plan_hit_observations
+            );
+        }
     }
 }
 
@@ -118,6 +131,7 @@ mod tests {
             wall_s: 4.0,
             iterations: 10,
             engine_busy_s: 2.0,
+            ..ServeReport::default()
         };
         assert_eq!(rep.total_prompt_tokens(), 200);
         assert_eq!(rep.total_generated_tokens(), 20);

@@ -19,6 +19,16 @@ use crate::attention::exec::ExecutorKind;
 /// an attended token each. A plan-cache hit skips this entirely.
 pub const IDENT_COST_FRAC: f64 = 0.125;
 
+/// Plan-broadcast overhead per *extra* shard, as a fraction of context
+/// token-cost: head-group sharding replicates only `SparsePlan`
+/// coordinates (a few bytes per tile) where K/V would be `2·d·4` bytes
+/// per token, so distributing a plan to one more shard costs orders of
+/// magnitude less than the execution it unlocks (DESIGN.md §12). The
+/// 0.2%/shard constant keeps scaling near-linear at practical shard
+/// counts while still pricing a floor — past `attn / broadcast` shards,
+/// adding workers stops paying.
+pub const PLAN_BROADCAST_FRAC: f64 = 0.002;
+
 /// How prefill attention cost scales with context for the active method.
 #[derive(Clone, Copy, Debug)]
 pub enum SparsityModel {
@@ -50,6 +60,13 @@ pub enum SparsityModel {
         /// bench row names the backend it was priced for, and backend
         /// regressions stay attributable.
         executor: ExecutorKind,
+        /// Head-group shard workers executing the plan (DESIGN.md §12).
+        /// Execution scales near-linearly (`attn / shards`) because
+        /// shards exchange only plan coordinates, never K/V; each extra
+        /// shard adds a [`PLAN_BROADCAST_FRAC`] coordination term.
+        /// Identification is not divided — a fresh key identifies once
+        /// and the plan broadcasts. `1` (or `0`, clamped) is unsharded.
+        shards: usize,
     },
 }
 
@@ -60,11 +77,18 @@ impl SparsityModel {
         match *self {
             SparsityModel::Dense => context as f64,
             SparsityModel::Anchor {
-                stripe_keep, anchor_tokens, plan_hit_rate, pipelined, ..
+                stripe_keep, anchor_tokens, plan_hit_rate, pipelined, shards, ..
             } => {
                 let anchored = context.min(anchor_tokens) as f64;
                 let rest = context.saturating_sub(anchor_tokens) as f64;
-                let attn = anchored + stripe_keep * rest;
+                let s = shards.max(1) as f64;
+                // Near-linear exec scaling: shards split the attention
+                // work by head group; the per-extra-shard broadcast term
+                // prices replicating plan coordinates (never K/V) to each
+                // worker. Identification is not divided — a fresh key
+                // plans once, then the coordinates fan out.
+                let attn = (anchored + stripe_keep * rest) / s
+                    + PLAN_BROADCAST_FRAC * (s - 1.0) * context as f64;
                 let ident =
                     (1.0 - plan_hit_rate.clamp(0.0, 1.0)) * IDENT_COST_FRAC * context as f64;
                 // Pipelined: identification overlaps execution, so only the
@@ -88,6 +112,23 @@ impl SparsityModel {
         match *self {
             SparsityModel::Dense => ExecutorKind::Cpu,
             SparsityModel::Anchor { executor, .. } => executor,
+        }
+    }
+
+    /// Shard workers the estimates assume (dense serving is unsharded).
+    pub fn shards(&self) -> usize {
+        match *self {
+            SparsityModel::Dense => 1,
+            SparsityModel::Anchor { shards, .. } => shards.max(1),
+        }
+    }
+
+    /// Current plan-cache hit-rate estimate (the EWMA state), when the
+    /// model amortizes identification.
+    pub fn plan_hit_rate(&self) -> Option<f64> {
+        match *self {
+            SparsityModel::Dense => None,
+            SparsityModel::Anchor { plan_hit_rate, .. } => Some(plan_hit_rate),
         }
     }
 
@@ -302,6 +343,7 @@ mod tests {
             plan_hit_rate: 0.0,
             pipelined: false,
             executor: ExecutorKind::Cpu,
+            shards: 1,
         };
         let sparse = plan_iteration(&c, &mut sparse_states, &mut pool);
         assert!(
@@ -337,6 +379,7 @@ mod tests {
             plan_hit_rate: 1.0,
             pipelined: false,
             executor: ExecutorKind::Cpu,
+            shards: 1,
         };
         let eff = anchor.effective_context(1000);
         assert!((eff - (200.0 + 0.1 * 800.0)).abs() < 1e-9);
@@ -355,6 +398,7 @@ mod tests {
             plan_hit_rate: hit,
             pipelined: false,
             executor: ExecutorKind::Cpu,
+            shards: 1,
         };
         let cold = mk(0.0).effective_context(4096);
         let warm = mk(1.0).effective_context(4096);
@@ -394,6 +438,7 @@ mod tests {
             plan_hit_rate: 0.0,
             pipelined,
             executor: ExecutorKind::Cpu,
+            shards: 1,
         };
         let n = 4096;
         // attn = 256 + 0.1·3840 = 640; ident = 0.125·4096 = 512.
@@ -409,6 +454,7 @@ mod tests {
             plan_hit_rate: 0.0,
             pipelined: true,
             executor: ExecutorKind::Cpu,
+            shards: 1,
         };
         assert!((lean.effective_context(n) - 512.0).abs() < 1e-9);
 
@@ -421,6 +467,7 @@ mod tests {
                     plan_hit_rate: hit,
                     pipelined,
                     executor: ExecutorKind::Cpu,
+                    shards: 1,
                 };
                 assert!(
                     with(true).effective_context(ctx) <= with(false).effective_context(ctx) + 1e-12,
@@ -432,6 +479,63 @@ mod tests {
         assert!(!SparsityModel::Dense.is_pipelined());
     }
 
+    /// Shard pricing: near-linear execution scaling with a plan-broadcast
+    /// floor (DESIGN.md §12). Two shards roughly halve the attention term,
+    /// never increase cost; the broadcast term makes scaling sub-linear
+    /// and eventually caps useful shard counts.
+    #[test]
+    fn shard_pricing_scales_near_linearly_with_broadcast_floor() {
+        let mk = |shards| SparsityModel::Anchor {
+            stripe_keep: 0.1,
+            anchor_tokens: 256,
+            plan_hit_rate: 1.0, // isolate the exec term
+            pipelined: false,
+            executor: ExecutorKind::Cpu,
+            shards,
+        };
+        let n = 65536;
+        let one = mk(1).effective_context(n);
+        let two = mk(2).effective_context(n);
+        let four = mk(4).effective_context(n);
+        // attn(1) = 256 + 0.1·65280 = 6784.
+        assert!((one - 6784.0).abs() < 1e-9, "unsharded {one}");
+        // attn(2) = 6784/2 + 0.002·1·65536 = 3523.072.
+        assert!((two - (6784.0 / 2.0 + PLAN_BROADCAST_FRAC * 65536.0)).abs() < 1e-9);
+        // Near-linear: 2 shards cut cost by >1.9x at this length.
+        assert!(one / two > 1.9, "2-shard speedup {}", one / two);
+        assert!(two > one / 2.0, "broadcast term must price a floor");
+        assert!(four < two, "4 shards still cheaper than 2 at 64k");
+        // Diminishing returns: the broadcast floor eventually dominates —
+        // an absurd shard count is priced worse than a moderate one.
+        assert!(mk(256).effective_context(n) > mk(8).effective_context(n));
+        // More shards never exceed the dense ceiling.
+        for s in [1, 2, 4, 8, 64] {
+            assert!(mk(s).effective_context(n) <= n as f64);
+        }
+        // shards: 0 clamps to unsharded rather than dividing by zero.
+        assert_eq!(mk(0).effective_context(n), one);
+        assert_eq!(mk(0).shards(), 1);
+        assert_eq!(mk(4).shards(), 4);
+        assert_eq!(SparsityModel::Dense.shards(), 1);
+        // Sharding composes with the scheduler: a sharded model fits at
+        // least as many prefill chunks per iteration.
+        let run = |sparsity| {
+            let mut pool = PagePool::new(64, 256);
+            let mut states = mk_states(&[(1, 2048, 0), (2, 2048, 0), (3, 2048, 0), (4, 2048, 0)]);
+            for st in &mut states {
+                st.phase = Phase::Prefill;
+                st.prefilled = 1792;
+                pool.admit(st.request.id, st.request.total_tokens()).unwrap();
+            }
+            let mut c = cfg();
+            c.max_running = 8;
+            c.iter_budget = 450.0;
+            c.sparsity = sparsity;
+            plan_iteration(&c, &mut states, &mut pool).prefill.len()
+        };
+        assert!(run(mk(4)) >= run(mk(1)), "sharded {} vs unsharded {}", run(mk(4)), run(mk(1)));
+    }
+
     #[test]
     fn observe_plan_hit_rate_is_ema_and_dense_noop() {
         let mut m = SparsityModel::Anchor {
@@ -440,6 +544,7 @@ mod tests {
             plan_hit_rate: 0.0,
             pipelined: false,
             executor: ExecutorKind::Cpu,
+            shards: 1,
         };
         m.observe_plan_hit_rate(1.0);
         match m {

@@ -39,6 +39,14 @@ impl Default for ServerConfig {
 }
 
 /// Serve `trace` to completion on `executor`.
+///
+/// The scheduler config is copied into a mutable local so the sparsity
+/// model's `plan_hit_rate` EWMA can move *during* the run: after every
+/// engine iteration the loop drains
+/// [`StepExecutor::observed_plan_hit_rate`] — the merged hit rate of the
+/// attention sessions behind the steps — and folds it in, so later
+/// iterations are priced with the amortization actually being observed
+/// (DESIGN.md §12).
 pub fn serve<E: StepExecutor>(
     cfg: &ServerConfig,
     trace: Vec<Request>,
@@ -49,6 +57,7 @@ pub fn serve<E: StepExecutor>(
     pending.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
     pending.reverse(); // pop from the back = earliest first
 
+    let mut sched = cfg.scheduler;
     let mut states: Vec<RequestState> = Vec::new();
     let mut pool = PagePool::new(cfg.pool_pages, cfg.page_tokens);
     let mut report = ServeReport::default();
@@ -82,7 +91,7 @@ pub fn serve<E: StepExecutor>(
             break;
         }
 
-        let plan = plan_iteration(&cfg.scheduler, &mut states, &mut pool);
+        let plan = plan_iteration(&sched, &mut states, &mut pool);
         if plan.is_empty() {
             if let Some(next) = pending.last() {
                 // Idle until the next arrival.
@@ -99,6 +108,12 @@ pub fn serve<E: StepExecutor>(
         let batch = build_batch(iteration, &plan, &states)?;
         iteration += 1;
         let outcomes = executor.execute(&batch);
+        // Live amortization feedback: the engine's merged plan-cache hit
+        // rate moves the scheduler's EWMA for the *next* iterations.
+        if let Some(observed) = executor.observed_plan_hit_rate() {
+            sched.sparsity.observe_plan_hit_rate(observed);
+            report.plan_hit_observations += 1;
+        }
         let now = t0.elapsed().as_secs_f64();
 
         for outcome in outcomes {
@@ -126,7 +141,7 @@ pub fn serve<E: StepExecutor>(
                     }
                 }
                 StepOutcome::Failed { req, error } => {
-                    log::error!("request {req} failed: {error}");
+                    eprintln!("request {req} failed: {error}");
                     let st = states.iter_mut().find(|s| s.request.id == req).unwrap();
                     if matches!(st.phase, Phase::Prefill | Phase::Decode) {
                         pool.release(req)?;
@@ -141,6 +156,7 @@ pub fn serve<E: StepExecutor>(
 
     report.wall_s = t0.elapsed().as_secs_f64();
     report.iterations = iteration;
+    report.final_plan_hit_rate = sched.sparsity.plan_hit_rate();
     for st in &states {
         report.records.push(RequestRecord {
             id: st.request.id,
@@ -255,6 +271,7 @@ mod tests {
             plan_hit_rate: 0.5,
             pipelined: false,
             executor: ExecutorKind::Cpu,
+            shards: 1,
         });
         assert!(
             anchor.iterations <= dense.iterations,
@@ -278,6 +295,7 @@ mod tests {
                 plan_hit_rate: 0.0,
                 pipelined,
                 executor: ExecutorKind::Cpu,
+                shards: 1,
             };
             cfg.scheduler.iter_budget = 400.0;
             cfg.pool_pages = 256;

@@ -12,13 +12,16 @@
 //! (identification wall time hidden behind execution / total). Both modes
 //! emit `reports/fig2_speedup_<mode>.json`, which the CI bench gate diffs
 //! (pipelined latency must not regress vs sequential, overlap must be
-//! nonzero). The cost model translates plan-coverage sparsity to
+//! nonzero). [`Fig2Options::shards`] measures the same grid through
+//! head-group shard workers (`ShardedSession`, DESIGN.md §12) — every row
+//! names its shard count and CI gates the 2-shard vs 1-shard total under
+//! `shard_grid`. The cost model translates plan-coverage sparsity to
 //! A100-time at 64k/128k; no attention is executed for the projection.
 
 use super::common::{self, ExpScale};
 use crate::attention::exec::ExecutorKind;
 use crate::attention::pipeline::PipelineStats;
-use crate::attention::session::AttentionSession;
+use crate::attention::shard::ShardedSession;
 use crate::attention::Method;
 use crate::simulator::a100::A100Model;
 use crate::util::json::Json;
@@ -51,6 +54,12 @@ pub struct Fig2Options {
     /// Pin the anchor identification step (re-measure grid: 8, 16);
     /// `None` keeps the length-scaled default.
     pub step: Option<usize>,
+    /// Head-group shard-worker counts to measure (`--shards 1,2,4`,
+    /// DESIGN.md §12). Every row names its shard count; `[1]` is the
+    /// unsharded session (bitwise-identical output). CI records the grid
+    /// under `shard_grid` in `BENCH_fig2.json` and gates the 2-shard vs
+    /// 1-shard total latency.
+    pub shards: Vec<usize>,
 }
 
 impl Default for Fig2Options {
@@ -62,6 +71,7 @@ impl Default for Fig2Options {
             executors: vec![ExecutorKind::Cpu],
             plan_store: None,
             step: None,
+            shards: vec![1],
         }
     }
 }
@@ -81,15 +91,23 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
     } else {
         opts.executors.clone()
     };
+    // Shard grid, zeros clamped (the CLI rejects them up front).
+    let shard_counts: Vec<usize> = if opts.shards.is_empty() {
+        vec![1]
+    } else {
+        opts.shards.iter().map(|&s| s.max(1)).collect()
+    };
     let mode = if opts.pipeline { "pipelined" } else { "sequential" };
     // Step 0 cannot be measured; normalize once so the report's
     // `step_override` and the file tag name the step actually run (the
     // CLI rejects 0 up front).
     let step = opts.step.map(|s| s.max(1));
     // Report filenames carry every grid-changing knob so the CI bench can
-    // run the base grid, the warm-start pair and the step grid in one
-    // checkout without clobbering (`fig2_speedup_sequential_step8.json`,
-    // `fig2_speedup_sequential_store.json`, ...).
+    // run the base grid, the warm-start pair, the step grid and the shard
+    // grid in one checkout without clobbering
+    // (`fig2_speedup_sequential_step8.json`,
+    // `fig2_speedup_sequential_store.json`,
+    // `fig2_speedup_sequential_shards.json`, ...).
     let file_tag = {
         let mut t = mode.to_string();
         if let Some(s) = step {
@@ -97,6 +115,9 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
         }
         if opts.plan_store.is_some() {
             t.push_str("_store");
+        }
+        if shard_counts != [1] {
+            t.push_str("_shards");
         }
         t
     };
@@ -123,105 +144,111 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
         let keys = common::gqa_keys(0, BATCH_HEADS, GROUP_SIZE);
         let methods = common::paper_methods_with_step(n, tile, 12.0, step);
         for &kind in &executors {
-            // One session per repeat, configured once through the builder;
-            // with a plan store every session warms from disk, so a cold
-            // process pays identification exactly once per (method, n) and
-            // a warmed process pays none (the CI cold/warm column).
-            let mk_session = |m: &Method| -> AttentionSession {
-                let mut b = m.session().executor(kind).keys(keys.clone());
-                if opts.pipeline {
-                    b = b.pipelined(true);
-                }
-                if let Some(p) = &opts.plan_store {
-                    b = b.persist(p).model(&format!("llama-like/{}", m.name()));
-                }
-                b.build().expect("fig2 session configuration rejected")
-            };
-            // Best-of-`iters` wallclock for one method over the whole
-            // batch on this backend; hit rate / overlap / ident accounting
-            // come from the fastest repeat.
-            let measure = |m: &Method| -> Measured {
-                let mut best = Measured {
-                    t: f64::INFINITY,
-                    hit_rate: 0.0,
-                    stats: PipelineStats::default(),
-                    ident_scores: 0,
-                    seeded: 0,
+            for &shards in &shard_counts {
+                // One sharded session per repeat (shards = 1 is the
+                // unsharded session, bitwise-identical), configured once
+                // through the builder; with a plan store every session
+                // warms from disk, so a cold process pays identification
+                // exactly once per (method, n) and a warmed process pays
+                // none (the CI cold/warm column).
+                let mk_session = |m: &Method| -> ShardedSession {
+                    let mut b = m.sharded_session(shards).executor(kind).keys(keys.clone());
+                    if opts.pipeline {
+                        b = b.pipelined(true);
+                    }
+                    if let Some(p) = &opts.plan_store {
+                        b = b.persist(p).model(&format!("llama-like/{}", m.name()));
+                    }
+                    b.build().expect("fig2 session configuration rejected")
                 };
-                // Sessions stay alive until all repeats finish: dropping
-                // one mid-loop would flush its plans to the store file and
-                // self-warm the later "cold" repeats.
-                let mut sessions: Vec<AttentionSession> = Vec::new();
-                for _ in 0..iters.max(1) {
-                    let mut session = mk_session(m);
-                    let t0 = std::time::Instant::now();
-                    let out = session.run_batch(&batch).expect("fig2 batch failed");
-                    let dt = t0.elapsed().as_secs_f64();
-                    crate::util::timer::black_box(out.outputs[0].out.data[0]);
-                    if dt < best.t {
-                        best = Measured {
-                            t: dt,
-                            hit_rate: out.hit_rate(),
-                            stats: out.pipeline.unwrap_or_default(),
-                            ident_scores: out.ident_cost_paid.ident_scores,
-                            seeded: session.store_seeded(),
-                        };
+                // Best-of-`iters` wallclock for one method over the whole
+                // batch on this backend; hit rate / overlap / ident
+                // accounting come from the fastest repeat.
+                let measure = |m: &Method| -> Measured {
+                    let mut best = Measured {
+                        t: f64::INFINITY,
+                        hit_rate: 0.0,
+                        stats: PipelineStats::default(),
+                        ident_scores: 0,
+                        seeded: 0,
+                    };
+                    // Sessions stay alive until all repeats finish:
+                    // dropping one mid-loop would flush its plans to the
+                    // store file and self-warm the later "cold" repeats.
+                    let mut sessions: Vec<ShardedSession> = Vec::new();
+                    for _ in 0..iters.max(1) {
+                        let mut session = mk_session(m);
+                        let t0 = std::time::Instant::now();
+                        let out = session.run_batch(&batch).expect("fig2 batch failed");
+                        let dt = t0.elapsed().as_secs_f64();
+                        crate::util::timer::black_box(out.outputs[0].out.data[0]);
+                        if dt < best.t {
+                            best = Measured {
+                                t: dt,
+                                hit_rate: out.hit_rate(),
+                                stats: out.pipeline.unwrap_or_default(),
+                                ident_scores: out.ident_cost_paid.ident_scores,
+                                seeded: session.store_seeded(),
+                            };
+                        }
+                        sessions.push(session);
                     }
-                    sessions.push(session);
-                }
-                // Populate the store for the next process only after every
-                // repeat measured (drop would flush too; explicit so flush
-                // errors surface here).
-                if opts.plan_store.is_some() {
-                    if let Some(s) = sessions.last_mut() {
-                        s.flush().expect("plan store flush failed");
+                    // Populate the store for the next process only after
+                    // every repeat measured (drop would flush too;
+                    // explicit so flush errors surface here).
+                    if opts.plan_store.is_some() {
+                        if let Some(s) = sessions.last_mut() {
+                            s.flush().expect("plan store flush failed");
+                        }
                     }
+                    best
+                };
+                let full_m = measure(&methods[0]);
+                let mut record = |name: &str, m: &Measured, speedup: f64| {
+                    let overlap = m.stats.overlap_efficiency();
+                    total_latency_ms += m.t * 1e3;
+                    max_overlap = max_overlap.max(overlap);
+                    total_ident_paid += m.ident_scores;
+                    total_seeded += m.seeded;
+                    rows.push(vec![
+                        fmt_len(n),
+                        name.to_string(),
+                        kind.name().to_string(),
+                        shards.to_string(),
+                        format!("{:.2}", m.t * 1e3),
+                        format!("{speedup:.2}x"),
+                        crate::util::pct(m.hit_rate),
+                        crate::util::pct(overlap),
+                        m.ident_scores.to_string(),
+                    ]);
+                    json_rows.push(Json::obj(vec![
+                        ("length", Json::num(n as f64)),
+                        ("method", Json::str(name)),
+                        ("executor", Json::str(kind.name())),
+                        ("shards", Json::num(shards as f64)),
+                        ("latency_ms", Json::num(m.t * 1e3)),
+                        ("speedup", Json::num(speedup)),
+                        ("plan_hit_rate", Json::num(m.hit_rate)),
+                        ("overlap_efficiency", Json::num(overlap)),
+                        ("ident_total_ms", Json::num(m.stats.ident_total_s * 1e3)),
+                        ("ident_hidden_ms", Json::num(m.stats.ident_hidden_s * 1e3)),
+                        ("stall_ms", Json::num(m.stats.stall_s * 1e3)),
+                        ("ident_paid_scores", Json::num(m.ident_scores as f64)),
+                    ]));
+                };
+                for m in &methods[1..] {
+                    let measured = measure(m);
+                    let speedup = full_m.t / measured.t;
+                    record(m.name(), &measured, speedup);
                 }
-                best
-            };
-            let full_m = measure(&methods[0]);
-            let mut record = |name: &str, m: &Measured, speedup: f64| {
-                let overlap = m.stats.overlap_efficiency();
-                total_latency_ms += m.t * 1e3;
-                max_overlap = max_overlap.max(overlap);
-                total_ident_paid += m.ident_scores;
-                total_seeded += m.seeded;
-                rows.push(vec![
-                    fmt_len(n),
-                    name.to_string(),
-                    kind.name().to_string(),
-                    format!("{:.2}", m.t * 1e3),
-                    format!("{speedup:.2}x"),
-                    crate::util::pct(m.hit_rate),
-                    crate::util::pct(overlap),
-                    m.ident_scores.to_string(),
-                ]);
-                json_rows.push(Json::obj(vec![
-                    ("length", Json::num(n as f64)),
-                    ("method", Json::str(name)),
-                    ("executor", Json::str(kind.name())),
-                    ("latency_ms", Json::num(m.t * 1e3)),
-                    ("speedup", Json::num(speedup)),
-                    ("plan_hit_rate", Json::num(m.hit_rate)),
-                    ("overlap_efficiency", Json::num(overlap)),
-                    ("ident_total_ms", Json::num(m.stats.ident_total_s * 1e3)),
-                    ("ident_hidden_ms", Json::num(m.stats.ident_hidden_s * 1e3)),
-                    ("stall_ms", Json::num(m.stats.stall_s * 1e3)),
-                    ("ident_paid_scores", Json::num(m.ident_scores as f64)),
-                ]));
-            };
-            for m in &methods[1..] {
-                let measured = measure(m);
-                let speedup = full_m.t / measured.t;
-                record(m.name(), &measured, speedup);
+                record("full-attn", &full_m, 1.0);
             }
-            record("full-attn", &full_m, 1.0);
         }
     }
     common::print_table(
         &[
-            "length", "method", "executor", "latency_ms", "speedup", "plan_hits", "overlap",
-            "ident",
+            "length", "method", "executor", "shards", "latency_ms", "speedup", "plan_hits",
+            "overlap", "ident",
         ],
         &rows,
     );
@@ -307,6 +334,7 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
             ("lengths", Json::arr(lengths.iter().map(|&n| Json::num(n as f64)))),
             ("iters", Json::num(iters as f64)),
             ("executors", Json::arr(executors.iter().map(|k| Json::str(k.name())))),
+            ("shard_counts", Json::arr(shard_counts.iter().map(|&s| Json::num(s as f64)))),
             ("total_latency_ms", Json::num(total_latency_ms)),
             ("max_overlap_efficiency", Json::num(max_overlap)),
             (
@@ -337,8 +365,8 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
     all.extend(proj_rows);
     let csv = common::to_csv(
         &[
-            "length", "method", "executor", "latency_ms", "speedup", "plan_hits", "overlap",
-            "ident",
+            "length", "method", "executor", "shards", "latency_ms", "speedup", "plan_hits",
+            "overlap", "ident",
         ],
         &rows,
     );
@@ -366,18 +394,19 @@ mod tests {
         assert!(rows.len() >= 3 * 5);
         assert!(rows.iter().any(|r| r[1] == "anchor"));
         assert!(rows.iter().any(|r| r[1] == "full-attn"));
-        // Measured rows name their executor backend (default grid: cpu).
-        assert!(rows.iter().any(|r| r.len() == 8 && r[2] == "cpu"));
+        // Measured rows name their executor backend (default grid: cpu)
+        // and shard count (default grid: unsharded).
+        assert!(rows.iter().any(|r| r.len() == 9 && r[2] == "cpu" && r[3] == "1"));
         // The measured rows carry a plan-cache hit-rate column; with
         // GROUP_SIZE = 2 the sparse methods replan once per group, so some
         // row must report a nonzero hit rate.
         assert!(
-            rows.iter().any(|r| r.len() == 8 && r[5] != "0.0%" && r[5].ends_with('%')),
+            rows.iter().any(|r| r.len() == 9 && r[6] != "0.0%" && r[6].ends_with('%')),
             "no plan-cache hits reported"
         );
         // Without a plan store every anchor row pays identification.
         assert!(
-            rows.iter().any(|r| r.len() == 8 && r[1] == "anchor" && r[7] != "0"),
+            rows.iter().any(|r| r.len() == 9 && r[1] == "anchor" && r[8] != "0"),
             "anchor rows must pay identification when no store warms them"
         );
     }
@@ -396,7 +425,7 @@ mod tests {
         let rows = run_with(ExpScale::Quick, 7, &opts);
         assert!(rows.iter().any(|r| r[1] == "anchor"));
         // Measured rows have an overlap column formatted as a percentage.
-        assert!(rows.iter().any(|r| r.len() == 8 && r[6].ends_with('%')));
+        assert!(rows.iter().any(|r| r.len() == 9 && r[7].ends_with('%')));
         let report = std::fs::read_to_string("reports/fig2_speedup_pipelined.json").unwrap();
         let j = Json::parse(&report).unwrap();
         assert_eq!(j.get("mode").as_str(), Some("pipelined"));
@@ -421,8 +450,8 @@ mod tests {
             ..Fig2Options::default()
         };
         let rows = run_with(ExpScale::Quick, 11, &opts);
-        let cpu_rows = rows.iter().filter(|r| r.len() == 8 && r[2] == "cpu").count();
-        let pjrt_rows = rows.iter().filter(|r| r.len() == 8 && r[2] == "pjrt").count();
+        let cpu_rows = rows.iter().filter(|r| r.len() == 9 && r[2] == "cpu").count();
+        let pjrt_rows = rows.iter().filter(|r| r.len() == 9 && r[2] == "pjrt").count();
         assert_eq!(cpu_rows, 5, "one cpu row per method");
         assert_eq!(pjrt_rows, 5, "one pjrt row per method");
         let report = std::fs::read_to_string("reports/fig2_speedup_sequential.json").unwrap();
@@ -460,6 +489,7 @@ mod tests {
             executors: vec![ExecutorKind::Cpu],
             plan_store: Some(store.to_string_lossy().into_owned()),
             step: None,
+            shards: vec![1],
         };
         run_with(ExpScale::Quick, 7, &opts);
         let cold = std::fs::read_to_string("reports/fig2_speedup_sequential_store.json").unwrap();
@@ -493,6 +523,7 @@ mod tests {
             executors: vec![ExecutorKind::Cpu],
             plan_store: None,
             step: Some(8),
+            shards: vec![1],
         };
         let rows = run_with(ExpScale::Quick, 7, &opts);
         assert!(rows.iter().any(|r| r[1] == "anchor"));
@@ -501,5 +532,47 @@ mod tests {
         let j = Json::parse(&report).unwrap();
         assert_eq!(j.get("step_override").as_usize(), Some(8));
         assert_eq!(j.get("mode").as_str(), Some("sequential"));
+    }
+
+    /// `--shards 1,2` measures every method per shard count, rows name
+    /// their shard count, and the `_shards`-tagged report carries the
+    /// per-row `shards` key plus the run's `shard_counts` grid — the
+    /// schema the CI `shard_grid` gate aggregates
+    /// (reports/fig2_shard_grid.md).
+    #[test]
+    fn shard_grid_reports_per_shard_count_rows() {
+        let _g = REPORT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let opts = Fig2Options {
+            iters: Some(1),
+            lengths: Some(vec![1024]),
+            shards: vec![1, 2],
+            ..Fig2Options::default()
+        };
+        let rows = run_with(ExpScale::Quick, 7, &opts);
+        let one = rows.iter().filter(|r| r.len() == 9 && r[3] == "1").count();
+        let two = rows.iter().filter(|r| r.len() == 9 && r[3] == "2").count();
+        assert_eq!(one, 5, "one unsharded row per method");
+        assert_eq!(two, 5, "one 2-shard row per method");
+        let report =
+            std::fs::read_to_string("reports/fig2_speedup_sequential_shards.json").unwrap();
+        let j = Json::parse(&report).unwrap();
+        let counts: Vec<usize> = j
+            .get("shard_counts")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|s| s.as_usize())
+            .collect();
+        assert_eq!(counts, vec![1, 2]);
+        let row_shards: Vec<usize> = j
+            .get("rows")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|r| r.get("shards").as_usize())
+            .collect();
+        assert!(row_shards.contains(&1) && row_shards.contains(&2));
+        // Latency stays a number per shard count (the CI gate sums them).
+        assert!(j.get("rows").idx(0).get("latency_ms").as_f64().is_some());
     }
 }

@@ -7,7 +7,8 @@
 //!                                 executor backend in the scheduler's
 //!                                 cost attribution; --plan-store F warms
 //!                                 the plan-hit prior from a populated
-//!                                 manifest plan store)
+//!                                 manifest plan store; --shards N prices
+//!                                 head-group sharding, DESIGN.md §12)
 //!   bench <exp> [--quick]         run one experiment driver
 //!                                 (fig2|tab1|fig4|fig5|fig6|fig7|tab2|tab3|tab4|all)
 //!                                 fig2 extras: --pipeline (overlap ident with
@@ -15,7 +16,8 @@
 //!                                 --executor cpu|pjrt|both (backend grid),
 //!                                 --plan-store F (manifest-backed plan
 //!                                 persistence: cold vs warm identification),
-//!                                 --step S (anchor identification step)
+//!                                 --step S (anchor identification step),
+//!                                 --shards 1,2,4 (head-group shard grid)
 //!   dominance   [--n N]           Fig. 5 measurement at arbitrary length
 //!   tpu-estimate                  L1 VMEM/MXU block-shape table
 //!   gen-trace   [--rate R]        print a synthetic serving trace
@@ -97,6 +99,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             // execution (the async plan pipeline, DESIGN.md §9).
             pipelined: args.bool_or("pipeline", false)?,
             executor: ExecutorKind::default(),
+            shards: 1,
         };
     }
     // `--executor cpu|pjrt` names the plan executor backend in the
@@ -107,16 +110,39 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             *executor = kind;
         }
     }
+    // `--shards N` (config: scheduler.shards / session.shards): head-group
+    // shard workers — the cost model prices near-linear exec scaling with
+    // a plan-broadcast term (DESIGN.md §12).
+    if args.has("shards") {
+        let n = args.usize_or("shards", 1)?;
+        anyhow::ensure!(n >= 1, "--shards must be >= 1 (got {n})");
+        cfg.session.shards = n;
+        if let SparsityModel::Anchor { ref mut shards, .. } = cfg.server.scheduler.sparsity {
+            *shards = n;
+        }
+    }
+    // Report the shard pricing actually in effect: the dense model never
+    // prices shards, and a config file may set scheduler.shards
+    // independently of session.shards — print the scheduler's own value.
+    if let SparsityModel::Anchor { shards, .. } = cfg.server.scheduler.sparsity {
+        if shards > 1 {
+            println!(
+                "sharding: scheduler cost model priced for {shards} head-group shard \
+                 workers (near-linear exec scaling + plan-broadcast term, DESIGN.md §12)"
+            );
+        }
+    }
     // `--plan-store F` (config: session.plan_store) points the session
-    // block at a manifest-backed plan store. The probe session below
-    // validates the whole block at startup — a bad path or a disabled
-    // cache fails fast with the builder's error — and a populated store
-    // guarantees first-touch plan-cache hits for previously seen keys, so
-    // it warms the scheduler's amortization prior (DESIGN.md §11).
+    // block at a manifest-backed plan store. The probe below validates
+    // the whole session block — shard count included — at startup: a bad
+    // path, a disabled cache, or a zero shard count fails fast with the
+    // builder's error; a populated store guarantees first-touch
+    // plan-cache hits for previously seen keys, so it warms the
+    // scheduler's amortization prior (DESIGN.md §11/§12).
     if let Some(p) = args.get("plan-store") {
         cfg.session.plan_store = Some(p.to_string());
     }
-    let probe = cfg.session.builder(Method::Anchor(cfg.anchor)).build()?;
+    let probe = cfg.session.sharded_builder(Method::Anchor(cfg.anchor)).build()?;
     if let (Some(total), Some(compatible)) = (probe.store_len(), probe.store_len_compatible()) {
         println!(
             "plan store: {total} persisted plan(s), {compatible} seedable by model '{}'",
@@ -166,8 +192,14 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     // `--executor cpu|pjrt|both` picks the backend grid, `--plan-store F`
     // persists plans through the manifest (cold vs warm identification),
     // `--step S` overrides the anchor identification step (re-measure
-    // grid).
+    // grid), `--shards 1,2,4` measures the head-group shard grid
+    // (DESIGN.md §12; rows land under `shard_grid` in `BENCH_fig2.json`).
     let lengths = args.usize_list_or("lengths", &[])?;
+    let shard_counts = args.usize_list_or("shards", &[])?;
+    anyhow::ensure!(
+        shard_counts.iter().all(|&s| s >= 1),
+        "--shards entries must be >= 1 (got {shard_counts:?})"
+    );
     let executors = match args.get("executor") {
         None => vec![ExecutorKind::default()],
         Some("both") => vec![ExecutorKind::Cpu, ExecutorKind::Pjrt],
@@ -197,6 +229,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             }
             None => None,
         },
+        shards: if shard_counts.is_empty() { vec![1] } else { shard_counts },
     };
     let run_one = |name: &str| match name {
         "fig2" => drop(experiments::fig2_speedup::run_with(scale, seed, &fig2_opts)),

@@ -5,9 +5,10 @@
 //! flush fresh plans back, so identification amortizes across process
 //! restarts, not just within one.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -231,6 +232,32 @@ pub struct PlanStoreKey {
     pub n: usize,
 }
 
+/// One resident plan plus its LRU bookkeeping.
+struct StoreEntry {
+    /// Head dim the plan's `predicted_cost` was priced for.
+    d: usize,
+    plan: Arc<SparsePlan>,
+    /// Logical timestamp of the last warm (`plans_for`) or `insert` touch;
+    /// the eviction cap removes the lowest-stamped entry first.
+    touched: u64,
+}
+
+/// Process-wide flush serialization, one lock per store path: concurrent
+/// `PlanStore` instances on one manifest (shard coordinators, parallel
+/// test sessions) must not interleave the read-merge-write in `flush`, or
+/// the last writer would erase the others' entries. The key is the
+/// canonicalized path, so `reports/m.json`, `./reports/m.json` and a
+/// symlink to either all share one lock (the file exists — `open`
+/// required it — so canonicalization only fails on races, where the raw
+/// path is the best remaining key).
+fn flush_lock(path: &Path) -> Arc<Mutex<()>> {
+    static LOCKS: OnceLock<Mutex<HashMap<PathBuf, Arc<Mutex<()>>>>> = OnceLock::new();
+    let key = std::fs::canonicalize(path).unwrap_or_else(|_| path.to_path_buf());
+    let registry = LOCKS.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = registry.lock().unwrap_or_else(|e| e.into_inner());
+    map.entry(key).or_default().clone()
+}
+
 /// Manifest-backed persistence for [`SparsePlan`] coordinates.
 ///
 /// Plans live under a `plan_store` key *inside* an existing runtime
@@ -241,13 +268,32 @@ pub struct PlanStoreKey {
 /// corrupted or truncated entry fails `open` with a descriptive error —
 /// never a silent empty plan (DESIGN.md §11).
 ///
-/// Single-writer: `flush` rewrites the document captured at `open` with
-/// the `plan_store` key replaced, preserving every other manifest key.
+/// `flush` rewrites the document captured at `open` with the `plan_store`
+/// key replaced, preserving every other manifest key. The write is a
+/// *union*, built under a process-wide per-path lock: this store's
+/// resident entries win per key, and on-disk entries another store
+/// instance flushed since `open` are written through untouched — so
+/// concurrent sessions persisting to one manifest never erase each
+/// other's plans (DESIGN.md §12). Disk entries never enter this
+/// instance's resident set, and keys this instance *evicted* are
+/// tombstoned out of the union (an eviction is a real deletion, not a
+/// suggestion the next flush resurrects).
+///
+/// An optional `max_entries` cap bounds the resident set LRU-ish: every
+/// eviction is logged loudly, `plans_for` (the warm path) refreshes the
+/// entries it serves, and `insert` never evicts the entry it just wrote.
 pub struct PlanStore {
     path: PathBuf,
     doc: Json,
-    entries: HashMap<PlanStoreKey, (usize, Arc<SparsePlan>)>,
+    entries: HashMap<PlanStoreKey, StoreEntry>,
     dirty: bool,
+    /// LRU clock; bumped by `insert` and per `plans_for` warm pass.
+    clock: u64,
+    max_entries: Option<usize>,
+    evictions: u64,
+    /// Keys the cap evicted; excluded from the flush union so they stay
+    /// deleted on disk (a later `insert` of the key clears the tombstone).
+    evicted: HashSet<PlanStoreKey>,
 }
 
 impl PlanStore {
@@ -288,12 +334,75 @@ impl PlanStore {
             for (i, e) in arr.iter().enumerate() {
                 let (key, d, plan) = entry_from_json(e)
                     .with_context(|| format!("plan store {} entry {i}", path.display()))?;
-                if entries.insert(key, (d, Arc::new(plan))).is_some() {
+                let entry = StoreEntry { d, plan: Arc::new(plan), touched: 0 };
+                if entries.insert(key, entry).is_some() {
                     return Err(anyhow!("plan store {} entry {i}: duplicate key", path.display()));
                 }
             }
         }
-        Ok(Self { path, doc, entries, dirty: false })
+        Ok(Self {
+            path,
+            doc,
+            entries,
+            dirty: false,
+            clock: 0,
+            max_entries: None,
+            evictions: 0,
+            evicted: HashSet::new(),
+        })
+    }
+
+    /// Cap the resident entry set (LRU-ish eviction, logged loudly).
+    /// `None` removes the cap. A cap below the current size evicts
+    /// immediately.
+    pub fn set_max_entries(&mut self, cap: Option<usize>) {
+        self.max_entries = cap;
+        self.enforce_cap(None);
+    }
+
+    pub fn max_entries(&self) -> Option<usize> {
+        self.max_entries
+    }
+
+    /// Entries evicted by the `max_entries` cap over this store's lifetime.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Evict lowest-touch entries until the cap holds, never removing
+    /// `protect` (the entry an `insert` just wrote). Every eviction is
+    /// loud: a silently shrinking store would masquerade as a cold cache.
+    fn enforce_cap(&mut self, protect: Option<&PlanStoreKey>) {
+        let Some(cap) = self.max_entries else { return };
+        let cap = cap.max(1);
+        while self.entries.len() > cap {
+            let victim: Option<PlanStoreKey> = self
+                .entries
+                .iter()
+                .filter(|&(k, _)| match protect {
+                    Some(p) => p != k,
+                    None => true,
+                })
+                .min_by(|a, b| {
+                    (a.1.touched, &a.0.model, a.0.layer, a.0.head_group, a.0.n)
+                        .cmp(&(b.1.touched, &b.0.model, b.0.layer, b.0.head_group, b.0.n))
+                })
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            eprintln!(
+                "plan store {}: max_entries={cap} exceeded, evicting \
+                 (model={}, layer={}, head_group={}, n={})",
+                self.path.display(),
+                victim.model,
+                victim.layer,
+                victim.head_group,
+                victim.n
+            );
+            self.entries.remove(&victim);
+            self.evicted.insert(victim);
+            self.evictions += 1;
+            self.dirty = true;
+        }
     }
 
     pub fn path(&self) -> &Path {
@@ -308,23 +417,29 @@ impl PlanStore {
         self.entries.is_empty()
     }
 
-    /// Look up one persisted plan.
+    /// Look up one persisted plan (read-only peek; does not refresh the
+    /// entry's eviction stamp — warming goes through [`PlanStore::plans_for`]).
     pub fn get(&self, key: &PlanStoreKey) -> Option<Arc<SparsePlan>> {
-        self.entries.get(key).map(|(_, p)| p.clone())
+        self.entries.get(key).map(|e| e.plan.clone())
     }
 
     /// All plans stored for `(model, n)` as `(PlanKey, priced head dim,
     /// plan)` triples — the shape a session seeds its `PlanCache` from,
     /// in deterministic `(layer, head_group)` order. The head dim rides
     /// along because `predicted_cost` was derived with it; a session must
-    /// reject entries priced for a different `d`.
-    pub fn plans_for(&self, model: &str, n: usize) -> Vec<(PlanKey, usize, Arc<SparsePlan>)> {
-        let mut out: Vec<(PlanKey, usize, Arc<SparsePlan>)> = self
-            .entries
-            .iter()
-            .filter(|(k, _)| k.model == model && k.n == n)
-            .map(|(k, (d, p))| (PlanKey::new(k.layer, k.head_group), *d, p.clone()))
-            .collect();
+    /// reject entries priced for a different `d`. Served entries are
+    /// touched (one shared stamp per warm pass), so the eviction cap
+    /// removes cold entries before the ones a session just warmed from.
+    pub fn plans_for(&mut self, model: &str, n: usize) -> Vec<(PlanKey, usize, Arc<SparsePlan>)> {
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut out: Vec<(PlanKey, usize, Arc<SparsePlan>)> = Vec::new();
+        for (k, e) in self.entries.iter_mut() {
+            if k.model == model && k.n == n {
+                e.touched = stamp;
+                out.push((PlanKey::new(k.layer, k.head_group), e.d, e.plan.clone()));
+            }
+        }
         out.sort_by_key(|(k, _, _)| (k.layer, k.head_group));
         out
     }
@@ -348,8 +463,11 @@ impl PlanStore {
     ) -> usize {
         self.entries
             .iter()
-            .filter(|(k, (_, p))| {
-                k.model == model && p.method == method && p.tile == tile && p.step == step
+            .filter(|(k, e)| {
+                k.model == model
+                    && e.plan.method == method
+                    && e.plan.tile == tile
+                    && e.plan.step == step
             })
             .count()
     }
@@ -360,33 +478,69 @@ impl PlanStore {
     /// same cached `Arc`s every run) and deep equality otherwise, so
     /// steady-state serving never dirties the store.
     pub fn insert(&mut self, key: PlanStoreKey, d: usize, plan: Arc<SparsePlan>) -> bool {
-        if let Some((d0, p0)) = self.entries.get(&key) {
-            if *d0 == d && (Arc::ptr_eq(p0, &plan) || **p0 == *plan) {
+        if let Some(e) = self.entries.get(&key) {
+            if e.d == d && (Arc::ptr_eq(&e.plan, &plan) || *e.plan == *plan) {
                 return false;
             }
         }
-        self.entries.insert(key, (d, plan));
+        self.clock += 1;
+        let touched = self.clock;
+        self.evicted.remove(&key);
+        self.entries.insert(key.clone(), StoreEntry { d, plan, touched });
         self.dirty = true;
+        self.enforce_cap(Some(&key));
         true
     }
 
+    /// On-disk entries another store instance flushed since this one
+    /// opened, minus keys resident here (ours win) or tombstoned by the
+    /// cap (evictions stay deleted). Callers hold the per-path flush
+    /// lock. Unparseable disk state yields nothing — the rewrite about to
+    /// happen restores a valid store either way.
+    fn disk_only_entries(&self) -> Vec<(PlanStoreKey, usize, Arc<SparsePlan>)> {
+        let mut out = Vec::new();
+        let Ok(text) = std::fs::read_to_string(&self.path) else { return out };
+        let Ok(doc) = Json::parse(&text) else { return out };
+        let ps = doc.get("plan_store");
+        if ps.is_null() || ps.get("version").as_usize() != Some(PLAN_STORE_VERSION) {
+            return out;
+        }
+        let Some(arr) = ps.get("entries").as_arr() else { return out };
+        for e in arr {
+            if let Ok((key, d, plan)) = entry_from_json(e) {
+                if !self.entries.contains_key(&key) && !self.evicted.contains(&key) {
+                    out.push((key, d, Arc::new(plan)));
+                }
+            }
+        }
+        out
+    }
+
     /// Serialize the entries back into the manifest document and write it.
-    /// A clean store is a no-op.
+    /// A clean store is a no-op. Concurrent flushes to one path are
+    /// serialized process-wide and the written set is the union of this
+    /// store's residents with the disk-only entries of other instances
+    /// (see the type docs), so a flush never erases entries another store
+    /// instance committed first — and the cap never evicts them either
+    /// (it bounds only this instance's resident set).
     pub fn flush(&mut self) -> Result<()> {
         if !self.dirty {
             return Ok(());
         }
-        let mut keys: Vec<&PlanStoreKey> = self.entries.keys().collect();
-        keys.sort_by(|a, b| {
-            (&a.model, a.layer, a.head_group, a.n).cmp(&(&b.model, b.layer, b.head_group, b.n))
-        });
-        let entries: Vec<Json> = keys
+        let lock = flush_lock(&self.path);
+        let _guard = lock.lock().unwrap_or_else(|e| e.into_inner());
+        let mut all: Vec<(PlanStoreKey, usize, Arc<SparsePlan>)> = self
+            .entries
             .iter()
-            .map(|&k| {
-                let (d, plan) = &self.entries[k];
-                entry_to_json(k, *d, plan)
-            })
+            .map(|(k, e)| (k.clone(), e.d, e.plan.clone()))
             .collect();
+        all.extend(self.disk_only_entries());
+        all.sort_by(|a, b| {
+            (&a.0.model, a.0.layer, a.0.head_group, a.0.n)
+                .cmp(&(&b.0.model, b.0.layer, b.0.head_group, b.0.n))
+        });
+        let entries: Vec<Json> =
+            all.iter().map(|(k, d, plan)| entry_to_json(k, *d, plan)).collect();
         let ps = Json::obj(vec![
             ("version", Json::num(PLAN_STORE_VERSION as f64)),
             ("entries", Json::Arr(entries)),
@@ -398,15 +552,25 @@ impl PlanStore {
         text.push('\n');
         // Write-then-rename: flush also runs best-effort from session
         // drop, and a crash mid-write must never destroy the manifest
-        // (it holds the aot.py artifact contract, not just plans).
+        // (it holds the aot.py artifact contract, not just plans). The
+        // temp name is unique per flush so two stores flushing one path
+        // never clobber each other's in-flight write.
+        static FLUSH_SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = FLUSH_SEQ.fetch_add(1, Ordering::Relaxed);
         let mut tmp_name = self.path.as_os_str().to_os_string();
-        tmp_name.push(".tmp");
+        tmp_name.push(format!(".tmp.{}.{seq}", std::process::id()));
         let tmp = PathBuf::from(tmp_name);
         std::fs::write(&tmp, &text)
             .with_context(|| format!("writing plan store {}", tmp.display()))?;
         std::fs::rename(&tmp, &self.path)
             .with_context(|| format!("committing plan store {}", self.path.display()))?;
         self.dirty = false;
+        // The committed file now reflects the deletions, so the
+        // tombstones have done their one job. Keeping them would turn an
+        // eviction into a permanent ban: another instance legitimately
+        // re-writing the key later would be silently erased by this
+        // instance's next flush.
+        self.evicted.clear();
         Ok(())
     }
 }
@@ -682,7 +846,7 @@ mod tests {
         assert!(!store.insert(key.clone(), 8, plan.clone()));
         store.flush().unwrap();
 
-        let reopened = PlanStore::open(&path).unwrap();
+        let mut reopened = PlanStore::open(&path).unwrap();
         assert_eq!(reopened.len(), 1);
         assert_eq!(*reopened.get(&key).unwrap(), *plan);
         let seeds = reopened.plans_for("m", 96);
@@ -744,6 +908,77 @@ mod tests {
         // The pristine store still reopens after the corruption sweep.
         std::fs::write(&path, &good).unwrap();
         assert!(PlanStore::open(&path).is_ok(), "pristine store must reopen");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    fn key(model: &str, group: u32, n: usize) -> PlanStoreKey {
+        PlanStoreKey { model: model.into(), layer: 0, head_group: group, n }
+    }
+
+    #[test]
+    fn max_entries_cap_evicts_lru_and_counts() {
+        let path = tmp_manifest("cap_lru", "{}\n");
+        let mut store = PlanStore::open(&path).unwrap();
+        store.set_max_entries(Some(2));
+        assert_eq!(store.max_entries(), Some(2));
+        let plan = Arc::new(sample_plan(96, 8));
+        store.insert(key("m", 0, 96), 8, plan.clone());
+        store.insert(key("m", 1, 96), 8, plan.clone());
+        assert_eq!((store.len(), store.evictions()), (2, 0));
+        // Third insert overflows: the oldest-touched entry (group 0) goes,
+        // never the entry just written.
+        store.insert(key("m", 2, 96), 8, plan.clone());
+        assert_eq!((store.len(), store.evictions()), (2, 1));
+        assert!(store.get(&key("m", 0, 96)).is_none(), "LRU entry must evict");
+        assert!(store.get(&key("m", 2, 96)).is_some(), "just-inserted entry survives");
+        // Re-inserting an identical resident plan is a no-op, no eviction.
+        assert!(!store.insert(key("m", 2, 96), 8, plan.clone()));
+        assert_eq!(store.evictions(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn warm_pass_protects_seeded_entries_from_eviction() {
+        let path = tmp_manifest("cap_warm", "{}\n");
+        let plan96 = Arc::new(sample_plan(96, 8));
+        let plan128 = Arc::new(sample_plan(128, 8));
+        let mut store = PlanStore::open(&path).unwrap();
+        // Cold entry at n=128, then the n=96 entry a session will warm from.
+        store.insert(key("m", 0, 128), 8, plan128);
+        store.insert(key("m", 0, 96), 8, plan96.clone());
+        store.set_max_entries(Some(2));
+        // Warm pass: seeding touches the n=96 entry...
+        let seeds = store.plans_for("m", 96);
+        assert_eq!(seeds.len(), 1);
+        // ...so the next insert evicts the cold n=128 entry, never the one
+        // the session just warmed from.
+        store.insert(key("m", 1, 96), 8, plan96);
+        assert_eq!(store.len(), 2);
+        assert!(store.get(&key("m", 0, 96)).is_some(), "warmed entry must survive");
+        assert!(store.get(&key("m", 0, 128)).is_none(), "cold entry evicts instead");
+        assert_eq!(store.evictions(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cap_below_current_size_evicts_immediately_and_flushes() {
+        let path = tmp_manifest("cap_shrink", "{}\n");
+        let plan = Arc::new(sample_plan(96, 8));
+        let mut store = PlanStore::open(&path).unwrap();
+        for g in 0..4 {
+            store.insert(key("m", g, 96), 8, plan.clone());
+        }
+        store.flush().unwrap();
+        store.set_max_entries(Some(2));
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.evictions(), 2);
+        store.flush().unwrap();
+        // The capped set persists: evicted keys are tombstoned out of the
+        // flush union, so the stale on-disk copies are really deleted —
+        // never resurrected past the bound — and evictions() stays 2.
+        assert_eq!(store.evictions(), 2, "flush must not re-evict");
+        let reopened = PlanStore::open(&path).unwrap();
+        assert_eq!(reopened.len(), 2, "flush after eviction persists the capped set");
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -2,13 +2,17 @@
 //! workload's ground truth, plus serving-stack integration over the mock
 //! engine at scale. No artifacts required.
 
+use anchor_attention::attention::anchor::AnchorConfig;
 use anchor_attention::attention::exec::ExecutorKind;
-use anchor_attention::attention::TileConfig;
-use anchor_attention::coordinator::engine::MockEngine;
+use anchor_attention::attention::plan::BatchInput;
+use anchor_attention::attention::shard::ShardedSession;
+use anchor_attention::attention::{Method, TileConfig};
+use anchor_attention::coordinator::batcher::EngineBatch;
+use anchor_attention::coordinator::engine::{MockEngine, StepExecutor, StepOutcome};
 use anchor_attention::coordinator::request::Request;
 use anchor_attention::coordinator::scheduler::SparsityModel;
 use anchor_attention::coordinator::server::{serve, ServerConfig};
-use anchor_attention::experiments::common::{evaluate, paper_methods};
+use anchor_attention::experiments::common::{evaluate, gqa_batch, gqa_keys, paper_methods};
 use anchor_attention::workload::qkv::{generate, generate_with_needle};
 use anchor_attention::workload::trace::{generate_trace, TraceConfig};
 use anchor_attention::workload::WorkloadProfile;
@@ -85,6 +89,101 @@ fn large_trace_serves_to_completion() {
     assert!(report.decode_throughput() > 0.0);
 }
 
+/// An engine that actually runs attention: every executed iteration
+/// drives a sharded session over a fixed GQA batch and reports the merged
+/// `SessionOutput::hit_rate()` through
+/// `StepExecutor::observed_plan_hit_rate` — the live side of the
+/// scheduler's amortization prior (DESIGN.md §12).
+struct SessionBackedEngine {
+    inner: MockEngine,
+    session: ShardedSession,
+    batch: BatchInput,
+    last_hit_rate: Option<f64>,
+}
+
+impl StepExecutor for SessionBackedEngine {
+    fn execute(&mut self, batch: &EngineBatch) -> Vec<StepOutcome> {
+        let out = self.session.run_batch(&self.batch).expect("session batch");
+        self.last_hit_rate = Some(out.hit_rate());
+        self.inner.execute(batch)
+    }
+
+    fn finish_request(&mut self, req: u64) {
+        self.inner.finish_request(req);
+    }
+
+    fn observed_plan_hit_rate(&mut self) -> Option<f64> {
+        self.last_hit_rate.take()
+    }
+}
+
+/// The serve loop's merged `SessionOutput::hit_rate()` moves the
+/// scheduler's `plan_hit_rate` EWMA live: before this wiring only the
+/// store-populated 1.0 prior was ever fed. The first engine batch misses
+/// half its keys (GQA groups of 2) and every later batch is all hits, so
+/// the EWMA must climb from its cold 0.0 toward 1.0 during the run.
+#[test]
+fn serve_loop_feeds_live_hit_rate_into_the_scheduler_ewma() {
+    let profile = WorkloadProfile::llama_like();
+    let batch = gqa_batch(&profile, 256, 4, 2, 9);
+    let keys = gqa_keys(0, 4, 2);
+    let method = Method::Anchor(AnchorConfig {
+        tile: TileConfig::new(16, 16),
+        theta: 4.0,
+        step: 2,
+        init_blocks: 1,
+        use_anchor: true,
+    });
+    let session = method.sharded_session(2).keys(keys).build().unwrap();
+    let mut engine = SessionBackedEngine {
+        inner: MockEngine::new(512),
+        session,
+        batch,
+        last_hit_rate: None,
+    };
+    let mut cfg = ServerConfig { pool_pages: 128, ..Default::default() };
+    cfg.scheduler.sparsity = SparsityModel::Anchor {
+        stripe_keep: 0.1,
+        anchor_tokens: 256,
+        plan_hit_rate: 0.0,
+        pipelined: false,
+        executor: ExecutorKind::Cpu,
+        shards: 2,
+    };
+    let requests: Vec<Request> =
+        (0..4).map(|i| Request::new(i, vec![1; 600], 3, 0.0)).collect();
+    let report = serve(&cfg, requests, &mut engine, |_, _| {}).unwrap();
+    assert_eq!(report.records.len(), 4);
+    assert!(
+        report.plan_hit_observations >= 2,
+        "several iterations must observe a merged hit rate (got {})",
+        report.plan_hit_observations
+    );
+    let final_rate = report.final_plan_hit_rate.expect("anchor model carries the EWMA");
+    assert!(
+        final_rate > 0.2,
+        "live observations must move the EWMA off its cold prior (got {final_rate})"
+    );
+    // The warm steady state dominates: with every post-first batch at
+    // hit rate 1.0 and EWMA weight 0.5, three observations already put
+    // the estimate above the single-observation floor.
+    if report.plan_hit_observations >= 3 {
+        assert!(final_rate > 0.5, "EWMA should approach the warm rate (got {final_rate})");
+    }
+    // A dense scheduler ignores observations and reports no EWMA.
+    let mut dense_engine = MockEngine::new(512);
+    let dense_cfg = ServerConfig { pool_pages: 128, ..Default::default() };
+    let dense_report = serve(
+        &dense_cfg,
+        (0..2).map(|i| Request::new(i, vec![1; 300], 2, 0.0)).collect(),
+        &mut dense_engine,
+        |_, _| {},
+    )
+    .unwrap();
+    assert_eq!(dense_report.final_plan_hit_rate, None);
+    assert_eq!(dense_report.plan_hit_observations, 0);
+}
+
 /// The anchor-aware scheduler serves the same trace in no more iterations
 /// than the dense scheduler (the paper's speedup as scheduler headroom).
 #[test]
@@ -106,6 +205,7 @@ fn anchor_scheduler_no_worse_than_dense() {
         plan_hit_rate: 0.5,
         pipelined: false,
         executor: ExecutorKind::Cpu,
+        shards: 1,
     });
     let piped = run(SparsityModel::Anchor {
         stripe_keep: 0.08,
@@ -113,6 +213,7 @@ fn anchor_scheduler_no_worse_than_dense() {
         plan_hit_rate: 0.5,
         pipelined: true,
         executor: ExecutorKind::Cpu,
+        shards: 1,
     });
     assert!(
         anchor.iterations <= dense.iterations,

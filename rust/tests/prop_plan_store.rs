@@ -12,6 +12,11 @@
 //!   on the first `run_batch` for a previously seen
 //!   `(model, layer, head_group, n)` key, pays zero identification, and
 //!   produces bitwise-identical output.
+//! * **Concurrent stores never lose entries** — shard coordinators and
+//!   parallel sessions each open their own `PlanStore` on one manifest;
+//!   interleaved insert/flush/warm across threads must end with every
+//!   thread's entries on disk (flush merges under the per-path lock,
+//!   DESIGN.md §12) and the manifest intact.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -154,6 +159,151 @@ fn prop_corrupted_store_is_rejected() {
 
     std::fs::write(&path, &good).unwrap();
     assert_eq!(PlanStore::open(&path).unwrap().len(), 1, "pristine store must reopen");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The contention wall: K writer threads each open their own store on one
+/// manifest and interleave inserts with flushes (multiple flushes per
+/// thread, so later flushes race earlier ones from other threads), while
+/// reader threads concurrently open and warm (`plans_for`). Every entry
+/// from every writer must survive on disk — the merge-on-flush under the
+/// per-path lock is what prevents last-writer-wins loss — and the
+/// manifest's other keys stay intact.
+#[test]
+fn concurrent_stores_on_one_manifest_never_lose_entries() {
+    let path = tmp_manifest("contention");
+    std::fs::write(&path, "{\"other_key\": 7}\n").unwrap();
+    const WRITERS: usize = 4;
+    const ENTRIES_PER_WRITER: usize = 6;
+    let mut rng = Pcg64::seeded(0xC0117);
+    // One shared plan (contents don't matter; keys carry the identity).
+    let plan = {
+        let (p, _) = rand_plan(&mut rng);
+        Arc::new(p)
+    };
+    let n = plan.n;
+    let d = 8;
+
+    std::thread::scope(|scope| {
+        for w in 0..WRITERS {
+            let path = path.clone();
+            let plan = plan.clone();
+            scope.spawn(move || {
+                let mut store = PlanStore::open(&path).unwrap();
+                for i in 0..ENTRIES_PER_WRITER {
+                    store.insert(
+                        PlanStoreKey {
+                            model: format!("writer-{w}"),
+                            layer: 0,
+                            head_group: i as u32,
+                            n,
+                        },
+                        d,
+                        plan.clone(),
+                    );
+                    // Flush mid-stream: later flushes from other writers
+                    // must merge, not erase, what this one committed.
+                    if i % 2 == 1 {
+                        store.flush().unwrap();
+                    }
+                }
+                store.flush().unwrap();
+            });
+        }
+        // Readers interleave opens + warm passes; they must only ever see
+        // a valid store (rename is atomic) and never poison the writers.
+        for r in 0..2 {
+            let path = path.clone();
+            scope.spawn(move || {
+                for _ in 0..8 {
+                    let mut store = PlanStore::open(&path).unwrap();
+                    let _ = store.plans_for(&format!("writer-{r}"), n);
+                    std::thread::yield_now();
+                }
+            });
+        }
+    });
+
+    let final_store = PlanStore::open(&path).unwrap();
+    assert_eq!(
+        final_store.len(),
+        WRITERS * ENTRIES_PER_WRITER,
+        "interleaved flushes lost entries"
+    );
+    for w in 0..WRITERS {
+        for i in 0..ENTRIES_PER_WRITER {
+            let key = PlanStoreKey {
+                model: format!("writer-{w}"),
+                layer: 0,
+                head_group: i as u32,
+                n,
+            };
+            assert!(final_store.get(&key).is_some(), "writer {w} entry {i} vanished");
+        }
+    }
+    // The manifest document outside plan_store survives every rewrite.
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("other_key").as_usize(), Some(7));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Concurrent sharded sessions persisting to one manifest: the end-to-end
+/// form of the contention property. Two sessions with distinct model tags
+/// run and drop (flush) in parallel; both tags' plans must be on disk and
+/// a restarted session under either tag warm-starts.
+#[test]
+fn concurrent_sessions_flush_to_one_store_without_loss() {
+    let path = tmp_manifest("contention_sessions");
+    let m = Method::Anchor(AnchorConfig {
+        tile: TileConfig::new(16, 16),
+        theta: 4.0,
+        step: 2,
+        init_blocks: 1,
+        use_anchor: true,
+    });
+    let mk_batch = |seed: u64| {
+        let mut rng = Pcg64::seeded(seed);
+        BatchInput::new(
+            (0..3)
+                .map(|_| {
+                    HeadInput::new(
+                        anchor_attention::tensor::Mat::from_fn(96, 8, |_, _| rng.normal()),
+                        anchor_attention::tensor::Mat::from_fn(96, 8, |_, _| rng.normal()),
+                        anchor_attention::tensor::Mat::from_fn(96, 8, |_, _| rng.normal()),
+                    )
+                })
+                .collect(),
+        )
+    };
+    std::thread::scope(|scope| {
+        for (tag, seed) in [("cell-a", 11u64), ("cell-b", 12u64)] {
+            let path = path.clone();
+            let m = m.clone();
+            scope.spawn(move || {
+                let mut session = m
+                    .sharded_session(2)
+                    .persist(&path)
+                    .model(tag)
+                    .build()
+                    .unwrap();
+                session.run_batch(&mk_batch(seed)).unwrap();
+                session.flush().unwrap();
+            });
+        }
+    });
+    let store = PlanStore::open(&path).unwrap();
+    assert_eq!(store.len(), 6, "both sessions' plans must survive");
+    // Either tag warm-starts a restarted sharded session.
+    let mut warm = m
+        .sharded_session(3)
+        .persist(&path)
+        .model("cell-a")
+        .build()
+        .unwrap();
+    let out = warm.run_batch(&mk_batch(11)).unwrap();
+    assert_eq!((out.cache_hits, out.cache_misses), (3, 0));
+    assert_eq!(out.ident_cost_paid, CostTally::default());
+    drop(warm);
     let _ = std::fs::remove_file(&path);
 }
 

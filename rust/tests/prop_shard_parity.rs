@@ -1,0 +1,315 @@
+//! Sharded ≡ unsharded parity wall (DESIGN.md §12):
+//!
+//! * **Bitwise parity** — for all six planners, a `ShardedSession`'s
+//!   merged output is bitwise-equal to the unsharded `AttentionSession` —
+//!   outputs, per-head costs, plans, hit/miss accounting, and ident-cost
+//!   attribution — across `shards ∈ {1, 2, 3, 8}` (including counts that
+//!   do not divide the head or key count), sequential and pipelined
+//!   dispatch, and both executor backends.
+//! * **Warm parity** — a second batch over the same sessions stays
+//!   bitwise-equal with all-hit accounting: the shared plan cache makes
+//!   shard routing invisible to amortization.
+//! * **Property form** — randomized shapes/params/shard counts via the
+//!   same generator style as `prop_plan_parity.rs`.
+//! * **Failure is loud** — a shard whose worker panics (here: poisoned by
+//!   a wrong-length plan seeded into the shared cache) surfaces as an
+//!   `Err` naming the shard instead of crashing or deadlocking the
+//!   coordinator.
+
+use std::sync::Arc;
+
+use anchor_attention::attention::anchor::AnchorConfig;
+use anchor_attention::attention::baselines::block_topk::BlockTopKConfig;
+use anchor_attention::attention::baselines::flexprefill::FlexPrefillConfig;
+use anchor_attention::attention::baselines::streaming::StreamingConfig;
+use anchor_attention::attention::baselines::vertical_slash::VerticalSlashConfig;
+use anchor_attention::attention::exec::ExecutorKind;
+use anchor_attention::attention::plan::{BatchInput, PlanCache, PlanKey};
+use anchor_attention::attention::session::{AttentionSession, SessionOutput};
+use anchor_attention::attention::shard::ShardedSession;
+use anchor_attention::attention::{HeadInput, Method, TileConfig};
+use anchor_attention::tensor::Mat;
+use anchor_attention::util::proptest::{check, choose, ensure, Config};
+use anchor_attention::util::rng::Pcg64;
+
+fn rand_head(rng: &mut Pcg64, n: usize, d: usize) -> HeadInput {
+    HeadInput::new(
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+    )
+}
+
+fn method_for(idx: usize, theta: f32, step: usize) -> Method {
+    let tile = TileConfig::new(16, 16);
+    match idx {
+        0 => Method::Full(tile),
+        1 => Method::Anchor(AnchorConfig {
+            tile,
+            theta,
+            step,
+            init_blocks: 1,
+            use_anchor: true,
+        }),
+        2 => Method::Streaming(StreamingConfig { tile, global_tokens: 16, local_tokens: 32 }),
+        3 => Method::VerticalSlash(VerticalSlashConfig {
+            tile,
+            vertical_tokens: 8,
+            slash_tokens: 8,
+            last_q: 16,
+        }),
+        4 => Method::FlexPrefill(FlexPrefillConfig { tile, gamma: 0.85, min_budget_tokens: 16 }),
+        _ => Method::BlockTopK(BlockTopKConfig { tile, k: 3, force_sink_local: true }),
+    }
+}
+
+/// Five heads over three GQA groups — a key count none of {2, 3, 8}
+/// divides, so every shard count exercises uneven partitions (and 8
+/// exercises idle shards).
+fn five_head_batch(seed: u64, n: usize, d: usize) -> (BatchInput, Vec<PlanKey>) {
+    let mut rng = Pcg64::seeded(seed);
+    let heads: Vec<HeadInput> = (0..5).map(|_| rand_head(&mut rng, n, d)).collect();
+    let keys = vec![
+        PlanKey::new(0, 0),
+        PlanKey::new(0, 0),
+        PlanKey::new(0, 1),
+        PlanKey::new(0, 1),
+        PlanKey::new(0, 2),
+    ];
+    (BatchInput::new(heads), keys)
+}
+
+fn unsharded(m: &Method, keys: &[PlanKey], kind: ExecutorKind, pipelined: bool) -> AttentionSession {
+    let mut b = m.session().keys(keys.to_vec()).executor(kind);
+    if pipelined {
+        b = b.pipelined(true);
+    }
+    b.build().expect("unsharded session build")
+}
+
+fn sharded(
+    m: &Method,
+    shards: usize,
+    keys: &[PlanKey],
+    kind: ExecutorKind,
+    pipelined: bool,
+) -> ShardedSession {
+    let mut b = m.sharded_session(shards).keys(keys.to_vec()).executor(kind);
+    if pipelined {
+        b = b.pipelined(true);
+    }
+    b.build().expect("sharded session build")
+}
+
+fn assert_outputs_bitwise(tag: &str, a: &SessionOutput, b: &SessionOutput) {
+    assert_eq!(a.outputs.len(), b.outputs.len(), "{tag}: head count");
+    for (h, (x, y)) in a.outputs.iter().zip(&b.outputs).enumerate() {
+        assert_eq!(x.out.data, y.out.data, "{tag} head {h}: output not bitwise-equal");
+        assert_eq!(x.cost, y.cost, "{tag} head {h}: cost differs");
+        assert_eq!(
+            x.coverage.total_covered(),
+            y.coverage.total_covered(),
+            "{tag} head {h}: coverage differs"
+        );
+    }
+    for (h, (p, q)) in a.plans.iter().zip(&b.plans).enumerate() {
+        assert_eq!(**p, **q, "{tag} head {h}: plan differs");
+    }
+    assert_eq!(
+        (a.cache_hits, a.cache_misses),
+        (b.cache_hits, b.cache_misses),
+        "{tag}: hit accounting differs"
+    );
+    assert_eq!(a.ident_cost_paid, b.ident_cost_paid, "{tag}: ident attribution differs");
+}
+
+/// The wall: all six planners × shards {1, 2, 3, 8} × sequential/pipelined
+/// × cpu/pjrt, cold batch and warm repeat, against the unsharded session.
+#[test]
+fn sharded_bitwise_equals_unsharded_for_all_six_methods() {
+    let (batch, keys) = five_head_batch(0x5AAD, 96, 8);
+    for method_idx in 0..6 {
+        let m = method_for(method_idx, 3.0, 2);
+        for kind in [ExecutorKind::Cpu, ExecutorKind::Pjrt] {
+            for pipelined in [false, true] {
+                let tag =
+                    format!("{} ({}, pipelined={pipelined})", m.name(), kind.name());
+                let mut base_session = unsharded(&m, &keys, kind, pipelined);
+                let base = base_session.run_batch(&batch).unwrap();
+                let base_warm = base_session.run_batch(&batch).unwrap();
+                assert_eq!(
+                    (base_warm.cache_hits, base_warm.cache_misses),
+                    (5, 0),
+                    "{tag}: unsharded warm repeat must be all hits"
+                );
+                for shards in [1usize, 2, 3, 8] {
+                    let stag = format!("{tag} shards={shards}");
+                    let mut sh = sharded(&m, shards, &keys, kind, pipelined);
+                    let cold = sh
+                        .run_batch(&batch)
+                        .unwrap_or_else(|e| panic!("{stag}: sharded run failed: {e}"));
+                    assert_outputs_bitwise(&stag, &base, &cold);
+                    // Warm repeat through the shared cache: routing is
+                    // invisible to amortization.
+                    let warm = sh.run_batch(&batch).unwrap();
+                    assert_outputs_bitwise(&format!("{stag} warm"), &base_warm, &warm);
+                    assert!((warm.hit_rate() - 1.0).abs() < 1e-12, "{stag}: warm hit rate");
+                }
+            }
+        }
+    }
+}
+
+/// Randomized shapes, params, shard counts and group sizes (property
+/// form of the wall, CPU sequential + pipelined to bound runtime).
+#[test]
+fn prop_sharded_batch_bitwise_equals_unsharded() {
+    #[derive(Clone, Debug)]
+    struct Case {
+        seed: u64,
+        n: usize,
+        d: usize,
+        method_idx: usize,
+        theta: f32,
+        step: usize,
+        shards: usize,
+        heads: usize,
+        group: usize,
+        pipelined: bool,
+    }
+    let cfg = Config::heavy(12, 0x58D5);
+    check(
+        &cfg,
+        |rng| Case {
+            seed: rng.next_u64(),
+            n: *choose(rng, &[64, 96, 128]),
+            d: *choose(rng, &[8, 16]),
+            method_idx: rng.next_below(6) as usize,
+            theta: *choose(rng, &[-2.0, 0.5, 3.0, 8.0]),
+            step: *choose(rng, &[1, 2, 4]),
+            shards: *choose(rng, &[1, 2, 3, 5, 8]),
+            heads: *choose(rng, &[1, 3, 4, 6]),
+            group: *choose(rng, &[1, 2, 3]),
+            pipelined: rng.next_below(2) == 0,
+        },
+        |c| {
+            let mut out = Vec::new();
+            if c.shards > 1 {
+                out.push(Case { shards: 1, ..c.clone() });
+            }
+            if c.heads > 1 {
+                out.push(Case { heads: 1, ..c.clone() });
+            }
+            if c.pipelined {
+                out.push(Case { pipelined: false, ..c.clone() });
+            }
+            out
+        },
+        |c| {
+            let mut rng = Pcg64::seeded(c.seed);
+            let heads: Vec<HeadInput> =
+                (0..c.heads).map(|_| rand_head(&mut rng, c.n, c.d)).collect();
+            let batch = BatchInput::new(heads);
+            let keys: Vec<PlanKey> =
+                (0..c.heads).map(|h| PlanKey::new(0, (h / c.group) as u32)).collect();
+            let m = method_for(c.method_idx, c.theta, c.step);
+            let base = unsharded(&m, &keys, ExecutorKind::Cpu, c.pipelined)
+                .run_batch(&batch)
+                .map_err(|e| e.to_string())?;
+            let merged = sharded(&m, c.shards, &keys, ExecutorKind::Cpu, c.pipelined)
+                .run_batch(&batch)
+                .map_err(|e| format!("{}: sharded run failed: {e}", m.name()))?;
+            for (h, (a, b)) in base.outputs.iter().zip(&merged.outputs).enumerate() {
+                ensure(
+                    a.out.data == b.out.data,
+                    format!("{} head {h}: sharded output not bitwise-equal", m.name()),
+                )?;
+                ensure(a.cost == b.cost, format!("{} head {h}: cost differs", m.name()))?;
+            }
+            ensure(
+                (base.cache_hits, base.cache_misses)
+                    == (merged.cache_hits, merged.cache_misses),
+                format!("{}: hit accounting differs", m.name()),
+            )?;
+            ensure(
+                base.ident_cost_paid == merged.ident_cost_paid,
+                format!("{}: ident attribution differs", m.name()),
+            )
+        },
+    );
+}
+
+/// A pre-warmed shared cache (the public `shared_cache` seam) behaves
+/// identically to a pre-warmed unsharded session: seeded keys hit, pay no
+/// identification, and outputs stay bitwise-equal.
+#[test]
+fn pre_warmed_shared_cache_hits_across_shards() {
+    let (batch, keys) = five_head_batch(0x7A3E, 96, 8);
+    let m = method_for(1, 3.0, 2);
+    // Warm a cache with every key's plan (identified from the head the
+    // cached path would pick: the first head of each key).
+    let warm_cache = |firsts: &[usize]| {
+        let cache = Arc::new(PlanCache::new());
+        for (key, &h) in [PlanKey::new(0, 0), PlanKey::new(0, 1), PlanKey::new(0, 2)]
+            .iter()
+            .zip(firsts)
+        {
+            cache.seed(*key, Arc::new(m.plan(&batch.heads[h])));
+        }
+        cache
+    };
+    let mut base = m
+        .session()
+        .keys(keys.clone())
+        .cache(PlanCache::new())
+        .build()
+        .unwrap();
+    let base_out = base.run_batch(&batch).unwrap();
+    for shards in [2usize, 3] {
+        let mut sh = m
+            .sharded_session(shards)
+            .keys(keys.clone())
+            .shared_cache(warm_cache(&[0, 2, 4]))
+            .build()
+            .unwrap();
+        let out = sh.run_batch(&batch).unwrap();
+        assert_eq!((out.cache_hits, out.cache_misses), (5, 0), "shards={shards}");
+        assert_eq!(out.ident_cost_paid.ident_scores, 0, "shards={shards}");
+        for (h, (a, b)) in base_out.outputs.iter().zip(&out.outputs).enumerate() {
+            assert_eq!(a.out.data, b.out.data, "shards={shards} head {h}");
+        }
+    }
+}
+
+/// A panicked shard worker surfaces as an error naming the shard — never
+/// a coordinator crash, never a deadlock, never silent partial output.
+/// The panic is induced through the public seam: a wrong-length plan
+/// seeded into the shared cache trips the executor's length assertion on
+/// whichever shard owns that key.
+#[test]
+fn panicked_shard_surfaces_error() {
+    let (batch, keys) = five_head_batch(0xDEAD, 96, 8);
+    let m = method_for(1, 3.0, 2);
+    // Plan built for n=64 seeded under a key the n=96 batch will hit.
+    let mut rng = Pcg64::seeded(1);
+    let wrong = Arc::new(m.plan(&rand_head(&mut rng, 64, 8)));
+    for shards in [1usize, 2, 3, 8] {
+        let cache = Arc::new(PlanCache::new());
+        cache.seed(PlanKey::new(0, 1), wrong.clone());
+        let mut sh = m
+            .sharded_session(shards)
+            .keys(keys.clone())
+            .shared_cache(cache)
+            .build()
+            .unwrap();
+        let err = sh
+            .run_batch(&batch)
+            .expect_err("a poisoned shard must surface an error")
+            .to_string();
+        assert!(err.contains("shard"), "shards={shards}: error must name the shard: {err}");
+        // The coordinator survives: a clean cache on the same session
+        // layout still runs (fresh sharded session, same config).
+        let mut ok = m.sharded_session(shards).keys(keys.clone()).build().unwrap();
+        assert!(ok.run_batch(&batch).is_ok(), "shards={shards}: clean rerun");
+    }
+}
