@@ -3,13 +3,29 @@
 //! [`Executor`] trait. This is the reference backend: every other backend
 //! must be bitwise-equal to it.
 //!
-//! Per group the walk gathers the group's discrete K/V columns **once**
+//! Per group the walk assembles the group's discrete K/V columns **once**
 //! (chunked to the kv tile width — §3.4's reuse across the group's `step`
 //! query blocks), then runs one online softmax per query block: anchor
 //! spans as dense tiles clipped to the block's causal limit, then the
 //! gathered stripe chunks with per-row masking at or past the diagonal.
+//!
+//! Two raw-speed mechanisms live here (DESIGN.md §13):
+//!
+//! * **Run-serving assembly** — each chunk's contiguous coordinate runs
+//!   (see [`LoweringMode`]) are read as `span_into` memcpys; only the
+//!   stretches of true singletons fall back to a discrete `gather_into`.
+//!   Both writes are pure row copies into the same destination rows, so
+//!   the folded tile is bitwise-identical either way.
+//! * **Per-worker scratch** — score buffer, gathered K'/V' tiles, the
+//!   query tile and the online-softmax state are thread-local and resized
+//!   in place, so the steady-state walk allocates nothing per tile. The
+//!   scratch is per *worker thread*, not per call: a group runs wholly on
+//!   one `parallel_map` worker, and the handful of workers bound the
+//!   resident scratch regardless of how many groups a plan has.
 
-use crate::attention::exec::{Executor, KvSource, PlanLowering};
+use std::cell::RefCell;
+
+use crate::attention::exec::{Executor, KvSource, LoweredChunk, LoweringMode, PlanLowering};
 use crate::attention::full::{mask_tile_causal, BlockState};
 use crate::attention::plan::SparsePlan;
 use crate::attention::{AttnOutput, CostTally};
@@ -23,6 +39,11 @@ pub struct CpuTileExecutor {
     /// `execute_plan_serial`): set by paths whose parallelism already
     /// lives at a coarser granularity, e.g. head-parallel batching.
     pub serial: bool,
+    /// How stripe coordinates are lowered before the walk: contiguous
+    /// runs (default) or plain per-coordinate gathers. The discrete mode
+    /// exists as the parity reference — outputs are bitwise identical in
+    /// both modes.
+    pub lowering: LoweringMode,
 }
 
 impl Executor for CpuTileExecutor {
@@ -37,7 +58,7 @@ impl Executor for CpuTileExecutor {
         plan: &SparsePlan,
         parallel: bool,
     ) -> AttnOutput {
-        let lowering = PlanLowering::lower(plan);
+        let lowering = PlanLowering::lower_with(plan, self.lowering);
         execute_lowered(q, kv, plan, &lowering, parallel && !self.serial)
     }
 }
@@ -77,17 +98,77 @@ pub(crate) fn execute_lowered(
     AttnOutput { out, coverage: plan.coverage(), cost }
 }
 
+/// Per-worker scratch for the tile walk: every buffer the inner loops
+/// touch, resized in place so the steady state allocates nothing. Owned by
+/// a thread-local (one instance per threadpool worker), not created per
+/// call: a group runs wholly on one worker, so no sharing is possible, and
+/// the pool's worker count bounds the total resident scratch.
+struct Scratch {
+    /// Score buffer `s` (`matmul_nt_scaled` writes every element, so
+    /// stale data from a previous tile shape is harmless).
+    s: Mat,
+    /// Gathered K'/V' tiles, one pair per stripe chunk.
+    tiles: Vec<(Mat, Mat)>,
+    /// The query block rows (copied once per block).
+    q_tile: Mat,
+    /// Anchor-span K/V tile.
+    k_span: Mat,
+    /// Anchor-span V tile.
+    v_span: Mat,
+    /// Online-softmax state, reset per query block.
+    state: BlockState,
+}
+
+impl Scratch {
+    fn new() -> Self {
+        Self {
+            s: Mat::zeros(0, 0),
+            tiles: Vec::new(),
+            q_tile: Mat::zeros(0, 0),
+            k_span: Mat::zeros(0, 0),
+            v_span: Mat::zeros(0, 0),
+            state: BlockState::new(0, 0),
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+/// Resize a scratch matrix in place without zeroing retained storage —
+/// callers overwrite every element of the region they read.
+#[inline]
+fn resize_mat(m: &mut Mat, rows: usize, cols: usize) {
+    m.data.resize(rows * cols, 0.0);
+    m.rows = rows;
+    m.cols = cols;
+}
+
 /// Compute one group's output rows: fold the group's anchor spans as dense
 /// tiles, then the gathered stripe chunks — one online softmax per query
-/// block, K'/V' gathered **once per group** and reused across its `step`
+/// block, K'/V' assembled **once per group** and reused across its `step`
 /// blocks (§3.4's reuse; this is the fine-grained gather substrate every
 /// method runs on).
 fn fold_group(
     q: &Mat,
     kv: &dyn KvSource,
     plan: &SparsePlan,
-    chunks: &[&[u32]],
+    chunks: &[LoweredChunk<'_>],
     g: usize,
+) -> (Vec<f32>, CostTally) {
+    // The walk never re-enters itself on one thread (KV sources don't call
+    // back into executors), so the borrow is exclusive for the whole group.
+    SCRATCH.with(|cell| fold_group_scratch(q, kv, plan, chunks, g, &mut cell.borrow_mut()))
+}
+
+fn fold_group_scratch(
+    q: &Mat,
+    kv: &dyn KvSource,
+    plan: &SparsePlan,
+    chunks: &[LoweredChunk<'_>],
+    g: usize,
+    scratch: &mut Scratch,
 ) -> (Vec<f32>, CostTally) {
     let n = q.rows;
     let d = q.cols;
@@ -97,26 +178,48 @@ fn fold_group(
     let gp = &plan.groups[g];
     let qb_start = g * plan.step;
     let qb_end = ((g + 1) * plan.step).min(q_blocks);
+    let Scratch { s, tiles, q_tile, k_span, v_span, state } = scratch;
 
-    // Gather the group's discrete K/V columns once, chunked to tile width
-    // so the inner matmuls stay dense (Eq. 4 `load_discrete`).
-    let gathered: Vec<(&[u32], Mat, Mat)> = chunks
-        .iter()
-        .map(|&chunk| {
-            let (k_g, v_g) = kv.gather(chunk);
-            (chunk, k_g, v_g)
-        })
-        .collect();
+    // Assemble the group's discrete K/V columns once, chunked to tile
+    // width so the inner matmuls stay dense. Contiguous runs are read at
+    // span (memcpy) width; stretches of singletons batch into one gather
+    // (Eq. 4's two load primitives, picked per run).
+    if tiles.len() < chunks.len() {
+        tiles.resize_with(chunks.len(), || (Mat::zeros(0, 0), Mat::zeros(0, 0)));
+    }
+    for (chunk, (k_t, v_t)) in chunks.iter().zip(tiles.iter_mut()) {
+        let coords = chunk.coords;
+        resize_mat(k_t, coords.len(), d);
+        resize_mat(v_t, coords.len(), d);
+        let mut idx = 0; // next destination row == index into `coords`
+        let mut pend = 0; // start of the pending singleton stretch
+        for &(run_s, run_e) in &chunk.runs {
+            let len = (run_e - run_s) as usize;
+            if len >= 2 {
+                if pend < idx {
+                    kv.gather_into(&coords[pend..idx], pend, k_t, v_t);
+                }
+                kv.span_into(run_s as usize, run_e as usize, idx, k_t, v_t);
+                idx += len;
+                pend = idx;
+            } else {
+                idx += 1;
+            }
+        }
+        if pend < idx {
+            kv.gather_into(&coords[pend..idx], pend, k_t, v_t);
+        }
+    }
 
     let mut group_out = Vec::with_capacity((qb_end - qb_start) * tile.b_q * d);
     let mut cost = CostTally::default();
-    let mut s = Mat::zeros(tile.b_q, tile.b_kv);
     for qb in qb_start..qb_end {
         let row0 = qb * tile.b_q;
         let rows = (n - row0).min(tile.b_q);
         let limit = row0 + rows;
-        let q_i = q.rows_mat(row0, rows);
-        let mut st = BlockState::new(rows, d);
+        resize_mat(q_tile, rows, d);
+        q_tile.data.copy_from_slice(q.rows_slice(row0, rows));
+        state.reset(rows, d);
 
         // Anchor spans: contiguous tiles, clipped to the block's causal
         // limit, diagonal tiles causally masked.
@@ -125,47 +228,45 @@ fn fold_group(
             let mut col0 = span_s as usize;
             while col0 < end {
                 let cols = (end - col0).min(tile.b_kv);
-                let (k_j, v_j) = kv.span(col0, col0 + cols);
-                if s.cols != cols || s.rows != rows {
-                    s = Mat::zeros(rows, cols);
-                }
-                matmul_nt_scaled(&q_i, &k_j, scale, &mut s);
+                resize_mat(k_span, cols, d);
+                resize_mat(v_span, cols, d);
+                kv.span_into(col0, col0 + cols, 0, k_span, v_span);
+                resize_mat(s, rows, cols);
+                matmul_nt_scaled(q_tile, k_span, scale, s);
                 if col0 + cols > row0 {
-                    mask_tile_causal(&mut s, row0, col0);
+                    mask_tile_causal(s, row0, col0);
                 }
-                st.fold_tile(&mut s, &v_j);
+                state.fold_tile(s, v_span);
                 cost.add(CostTally::attn_tile(rows, cols, d));
                 col0 += cols;
             }
         }
 
-        // Stripe chunks: discrete gathers. Chunks entirely before the
-        // block's first row need no masking (the common case — anchor
-        // stripes precede the group window); otherwise mask per row
-        // against the absolute column ids.
-        for (chunk, k_g, v_g) in &gathered {
-            if s.cols != k_g.rows || s.rows != rows {
-                s = Mat::zeros(rows, k_g.rows);
-            }
-            matmul_nt_scaled(&q_i, k_g, scale, &mut s);
-            if chunk.last().is_some_and(|&c| c as usize >= row0) {
+        // Stripe chunks: the pre-assembled tiles. Chunks entirely before
+        // the block's first row need no masking (the common case — anchor
+        // stripes precede the group window); otherwise binary-search each
+        // row's first out-of-diagonal coordinate (coords are sorted) and
+        // mask the suffix.
+        for (chunk, (k_g, v_g)) in chunks.iter().zip(tiles.iter()) {
+            let coords = chunk.coords;
+            resize_mat(s, rows, coords.len());
+            matmul_nt_scaled(q_tile, k_g, scale, s);
+            if coords.last().is_some_and(|&c| c as usize >= row0) {
                 for r in 0..rows {
                     let abs_row = row0 + r;
-                    let srow = s.row_mut(r);
-                    for (ci, &col) in chunk.iter().enumerate() {
-                        if col as usize > abs_row {
-                            srow[ci] = f32::NEG_INFINITY;
-                        }
+                    let first_masked = coords.partition_point(|&c| c as usize <= abs_row);
+                    for x in &mut s.row_mut(r)[first_masked..] {
+                        *x = f32::NEG_INFINITY;
                     }
                 }
             }
-            st.fold_tile(&mut s, v_g);
-            cost.add(CostTally::attn_tile(rows, k_g.rows, d));
+            state.fold_tile(s, v_g);
+            cost.add(CostTally::attn_tile(rows, coords.len(), d));
         }
 
         let base = group_out.len();
         group_out.resize(base + rows * d, 0.0f32);
-        st.write_output(&mut group_out[base..], d);
+        state.write_output(&mut group_out[base..], d);
     }
     (group_out, cost)
 }
@@ -212,7 +313,7 @@ mod tests {
         let h = rand_head(91, 160, 8);
         let plan = mixed_plan(160, 8);
         let par = CpuTileExecutor::default().execute(&h, &plan);
-        let ser = CpuTileExecutor { serial: true }.execute(&h, &plan);
+        let ser = CpuTileExecutor { serial: true, ..Default::default() }.execute(&h, &plan);
         let wrapper = execute_plan(&h, &plan);
         assert_eq!(par.out.data, ser.out.data);
         assert_eq!(par.cost, ser.cost);
@@ -228,5 +329,45 @@ mod tests {
         let plan = mixed_plan(200, 8);
         let out = CpuTileExecutor::default().execute(&h, &plan);
         assert_eq!(out.cost, plan.predicted_cost);
+    }
+
+    /// Run-serving lowering is bitwise-identical to plain per-coordinate
+    /// gathers: runs only change the read width, never the folded values.
+    /// Covered for strided (all-singleton), contiguous (all-run), and
+    /// mixed stripe patterns.
+    #[test]
+    fn run_lowering_is_bitwise_equal_to_discrete() {
+        let runs_exec = CpuTileExecutor { lowering: LoweringMode::Runs, ..Default::default() };
+        let disc_exec =
+            CpuTileExecutor { lowering: LoweringMode::Discrete, ..Default::default() };
+        let n = 160;
+        let h = rand_head(93, n, 8);
+        let tile = TileConfig::new(16, 16);
+        let step = 2;
+        let patterns: [&dyn Fn(u32) -> Vec<u32>; 3] = [
+            &|win| (16..win).step_by(3).collect(),         // singletons
+            &|win| (16..win.min(48)).collect(),            // one long run
+            &|win| (16..win).filter(|c| c % 7 != 0).collect(), // mixed
+        ];
+        for mk in patterns {
+            let q_blocks = tile.q_blocks(n);
+            let groups: Vec<GroupPlan> = (0..q_blocks.div_ceil(step))
+                .map(|g| {
+                    let win = (g * step * 16) as u32;
+                    let end = ((g + 1) * step * 16).min(n) as u32;
+                    if win == 0 {
+                        GroupPlan { spans: vec![(0, end)], stripes: vec![] }
+                    } else {
+                        GroupPlan { spans: vec![(0, 16), (win, end)], stripes: mk(win) }
+                    }
+                })
+                .collect();
+            let plan =
+                SparsePlan::new("test", n, 8, tile, step, groups, CostTally::default());
+            let a = runs_exec.execute(&h, &plan);
+            let b = disc_exec.execute(&h, &plan);
+            assert_eq!(a.out.data, b.out.data);
+            assert_eq!(a.cost, b.cost);
+        }
     }
 }

@@ -51,6 +51,31 @@ pub trait KvSource: Sync {
     /// Discrete rows at `coords` as `(K, V)` — a stripe gather
     /// (`load_discrete`).
     fn gather(&self, coords: &[u32]) -> (Mat, Mat);
+
+    /// Copy contiguous rows `[start, end)` into `k_dst`/`v_dst` starting at
+    /// destination row `row0` — the allocation-free form of [`Self::span`]
+    /// used by the run-serving tile walk. The default materializes `span`
+    /// and copies; sources with contiguous backing override it with direct
+    /// `memcpy`-width slice copies. Must write exactly the same bytes
+    /// `span` would return (the bitwise-parity contract).
+    fn span_into(&self, start: usize, end: usize, row0: usize, k_dst: &mut Mat, v_dst: &mut Mat) {
+        let d = self.d();
+        let (k, v) = self.span(start, end);
+        let rows = end - start;
+        k_dst.data[row0 * d..(row0 + rows) * d].copy_from_slice(&k.data);
+        v_dst.data[row0 * d..(row0 + rows) * d].copy_from_slice(&v.data);
+    }
+
+    /// Copy discrete rows at `coords` into `k_dst`/`v_dst` starting at
+    /// destination row `row0` — the allocation-free form of
+    /// [`Self::gather`]. Same bitwise contract as [`Self::span_into`].
+    fn gather_into(&self, coords: &[u32], row0: usize, k_dst: &mut Mat, v_dst: &mut Mat) {
+        let d = self.d();
+        let (k, v) = self.gather(coords);
+        let rows = coords.len();
+        k_dst.data[row0 * d..(row0 + rows) * d].copy_from_slice(&k.data);
+        v_dst.data[row0 * d..(row0 + rows) * d].copy_from_slice(&v.data);
+    }
 }
 
 /// [`KvSource`] over flat per-head `[N, d]` tensors.
@@ -78,6 +103,24 @@ impl KvSource for FlatKv<'_> {
 
     fn gather(&self, coords: &[u32]) -> (Mat, Mat) {
         (self.k.gather_rows(coords), self.v.gather_rows(coords))
+    }
+
+    fn span_into(&self, start: usize, end: usize, row0: usize, k_dst: &mut Mat, v_dst: &mut Mat) {
+        let d = self.k.cols;
+        k_dst.data[row0 * d..(row0 + (end - start)) * d]
+            .copy_from_slice(&self.k.data[start * d..end * d]);
+        v_dst.data[row0 * d..(row0 + (end - start)) * d]
+            .copy_from_slice(&self.v.data[start * d..end * d]);
+    }
+
+    fn gather_into(&self, coords: &[u32], row0: usize, k_dst: &mut Mat, v_dst: &mut Mat) {
+        let d = self.k.cols;
+        for (i, &c) in coords.iter().enumerate() {
+            let src = c as usize * d;
+            let dst = (row0 + i) * d;
+            k_dst.data[dst..dst + d].copy_from_slice(&self.k.data[src..src + d]);
+            v_dst.data[dst..dst + d].copy_from_slice(&self.v.data[src..src + d]);
+        }
     }
 }
 
@@ -160,24 +203,77 @@ impl ExecutorKind {
     }
 }
 
+/// How [`PlanLowering`] serves a chunk's coordinates to the KV source.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LoweringMode {
+    /// Segment each chunk into maximal contiguous runs so consecutive
+    /// coordinates are read as one `span` (the default; §3.4's insight
+    /// that stripes are near-arithmetic, so most "gathers" are spans).
+    #[default]
+    Runs,
+    /// Serve every coordinate as its own single-row gather — the plain
+    /// per-coordinate lowering, kept as the parity reference.
+    Discrete,
+}
+
+/// One lowered stripe chunk: the chunk's coordinates (≤ `tile.b_kv`, plan
+/// order) plus the `[start, end)` key runs that cover them in order. Runs
+/// are maximal under [`LoweringMode::Runs`] and all singletons under
+/// [`LoweringMode::Discrete`]; either way they enumerate exactly `coords`,
+/// so the folded tile is identical — only the read width changes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoweredChunk<'p> {
+    pub coords: &'p [u32],
+    pub runs: Vec<(u32, u32)>,
+}
+
+impl LoweredChunk<'_> {
+    /// Coordinates served by a multi-row run (a span read, not a gather).
+    pub fn spanned_coords(&self) -> usize {
+        self.runs.iter().map(|&(a, b)| (b - a) as usize).filter(|&l| l >= 2).sum()
+    }
+}
+
+/// Segment sorted coordinates into maximal contiguous `[start, end)` runs.
+fn segment_runs(coords: &[u32]) -> Vec<(u32, u32)> {
+    let mut runs = Vec::new();
+    let mut i = 0;
+    while i < coords.len() {
+        let mut j = i + 1;
+        while j < coords.len() && coords[j] == coords[j - 1] + 1 {
+            j += 1;
+        }
+        runs.push((coords[i], coords[j - 1] + 1));
+        i = j;
+    }
+    runs
+}
+
 /// A [`SparsePlan`] lowered to its gather program: per group, the stripe
 /// coordinates chunked to the kv tile width — the exact tile schedule both
 /// backends fold after the anchor spans, and the indices a gather-based
-/// kernel (`attn_sparse`) loads simultaneously. Chunks borrow the plan's
-/// stripe storage (lowering is slice bookkeeping, not a copy — plans are
-/// `Arc`-shared across a batch's heads, so this runs per execute). Spans
-/// need no lowering; they are read straight from the plan.
+/// kernel (`attn_sparse`) loads simultaneously. Within each chunk the
+/// coordinates are further segmented into contiguous runs (see
+/// [`LoweringMode`]); chunk boundaries — which pin the fold order and the
+/// plan's predicted cost — never move. Chunks borrow the plan's stripe
+/// storage (lowering is slice bookkeeping plus run boundaries, not a row
+/// copy — plans are `Arc`-shared across a batch's heads, so this runs per
+/// execute). Spans need no lowering; they are read straight from the plan.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PlanLowering<'p> {
     /// `stripe_chunks[g]` = group `g`'s gather chunks, each ≤ `tile.b_kv`
     /// coordinates, in plan (sorted) order.
-    pub stripe_chunks: Vec<Vec<&'p [u32]>>,
+    pub stripe_chunks: Vec<Vec<LoweredChunk<'p>>>,
     /// Total gathered coordinates across groups.
     pub total_coords: usize,
 }
 
 impl<'p> PlanLowering<'p> {
     pub fn lower(plan: &'p SparsePlan) -> Self {
+        Self::lower_with(plan, LoweringMode::Runs)
+    }
+
+    pub fn lower_with(plan: &'p SparsePlan, mode: LoweringMode) -> Self {
         let b_kv = plan.tile.b_kv;
         let mut total_coords = 0;
         let stripe_chunks = plan
@@ -185,7 +281,18 @@ impl<'p> PlanLowering<'p> {
             .iter()
             .map(|g| {
                 total_coords += g.stripes.len();
-                g.stripes.chunks(b_kv).collect()
+                g.stripes
+                    .chunks(b_kv)
+                    .map(|coords| {
+                        let runs = match mode {
+                            LoweringMode::Runs => segment_runs(coords),
+                            LoweringMode::Discrete => {
+                                coords.iter().map(|&c| (c, c + 1)).collect()
+                            }
+                        };
+                        LoweredChunk { coords, runs }
+                    })
+                    .collect()
             })
             .collect();
         Self { stripe_chunks, total_coords }
@@ -194,7 +301,23 @@ impl<'p> PlanLowering<'p> {
     /// Group `g`'s flat gather indices as the i32 vector an `attn_sparse`
     /// artifact call takes.
     pub fn gather_indices(&self, g: usize) -> Vec<i32> {
-        self.stripe_chunks[g].iter().flat_map(|c| c.iter()).map(|&c| c as i32).collect()
+        self.stripe_chunks[g]
+            .iter()
+            .flat_map(|c| c.coords.iter())
+            .map(|&c| c as i32)
+            .collect()
+    }
+
+    /// Coordinates served as span reads vs. total, across all groups —
+    /// the quantity `bench micro` reports as the span-lowering win.
+    pub fn span_stats(&self) -> (usize, usize) {
+        let spanned = self
+            .stripe_chunks
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(|c| c.spanned_coords())
+            .sum();
+        (spanned, self.total_coords)
     }
 }
 
@@ -220,9 +343,72 @@ mod tests {
         let low = PlanLowering::lower(&plan);
         assert_eq!(low.total_coords, 6);
         assert!(low.stripe_chunks[0].is_empty());
-        assert_eq!(low.stripe_chunks[1], vec![&[0u32, 1, 2, 3][..], &[4u32, 5][..]]);
+        let chunks: Vec<&[u32]> = low.stripe_chunks[1].iter().map(|c| c.coords).collect();
+        assert_eq!(chunks, vec![&[0u32, 1, 2, 3][..], &[4u32, 5][..]]);
+        // A fully contiguous chunk is one maximal run.
+        assert_eq!(low.stripe_chunks[1][0].runs, vec![(0, 4)]);
+        assert_eq!(low.stripe_chunks[1][1].runs, vec![(4, 6)]);
         assert_eq!(low.gather_indices(1), vec![0, 1, 2, 3, 4, 5]);
         assert!(low.gather_indices(0).is_empty());
+        assert_eq!(low.span_stats(), (6, 6));
+    }
+
+    #[test]
+    fn run_segmentation_splits_at_gaps_and_respects_chunks() {
+        // Mixed: run of 3, singleton, run of 2 — and runs never cross the
+        // b_kv=4 chunk boundary even when coordinates are contiguous
+        // across it.
+        let plan = plan_with_stripes(vec![0, 1, 2, 7, 9, 10]);
+        let low = PlanLowering::lower(&plan);
+        assert_eq!(low.stripe_chunks[1][0].runs, vec![(0, 3), (7, 8)]);
+        assert_eq!(low.stripe_chunks[1][1].runs, vec![(9, 11)]);
+        assert_eq!(low.stripe_chunks[1][0].spanned_coords(), 3);
+        assert_eq!(low.span_stats(), (5, 6));
+
+        let contiguous = plan_with_stripes(vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        let low = PlanLowering::lower(&contiguous);
+        // Chunked first, then segmented: two runs, one per chunk.
+        assert_eq!(low.stripe_chunks[1][0].runs, vec![(0, 4)]);
+        assert_eq!(low.stripe_chunks[1][1].runs, vec![(4, 8)]);
+    }
+
+    #[test]
+    fn discrete_lowering_is_all_singletons_over_the_same_coords() {
+        let plan = plan_with_stripes(vec![0, 1, 2, 7, 9, 10]);
+        let runs = PlanLowering::lower(&plan);
+        let discrete = PlanLowering::lower_with(&plan, LoweringMode::Discrete);
+        assert_eq!(discrete.total_coords, runs.total_coords);
+        for (gr, gd) in runs.stripe_chunks.iter().zip(&discrete.stripe_chunks) {
+            assert_eq!(gr.len(), gd.len());
+            for (cr, cd) in gr.iter().zip(gd) {
+                assert_eq!(cr.coords, cd.coords);
+                let singles: Vec<(u32, u32)> =
+                    cd.coords.iter().map(|&c| (c, c + 1)).collect();
+                assert_eq!(cd.runs, singles);
+                // Both modes enumerate exactly the chunk's coordinates.
+                let enumerated: Vec<u32> =
+                    cr.runs.iter().flat_map(|&(a, b)| a..b).collect();
+                assert_eq!(enumerated, cr.coords);
+            }
+        }
+        assert_eq!(discrete.span_stats().0, 0);
+    }
+
+    #[test]
+    fn span_into_and_gather_into_match_allocating_reads() {
+        let k = Mat::from_fn(10, 4, |r, c| (r * 10 + c) as f32);
+        let v = Mat::from_fn(10, 4, |r, c| (r * 10 + c) as f32 + 0.5);
+        let kv = FlatKv::new(&k, &v);
+        let mut kd = Mat::zeros(6, 4);
+        let mut vd = Mat::zeros(6, 4);
+        kv.span_into(3, 6, 1, &mut kd, &mut vd);
+        let (ks, vs) = kv.span(3, 6);
+        assert_eq!(&kd.data[4..16], &ks.data[..]);
+        assert_eq!(&vd.data[4..16], &vs.data[..]);
+        kv.gather_into(&[0, 7, 9], 3, &mut kd, &mut vd);
+        let (kg, vg) = kv.gather(&[0, 7, 9]);
+        assert_eq!(&kd.data[12..24], &kg.data[..]);
+        assert_eq!(&vd.data[12..24], &vg.data[..]);
     }
 
     #[test]

@@ -27,6 +27,20 @@ impl BlockState {
         Self { m: vec![f32::NEG_INFINITY; rows], l: vec![0.0; rows], acc: Mat::zeros(rows, d) }
     }
 
+    /// Reinitialize in place to the state `new(rows, d)` builds, reusing
+    /// the backing allocations — the scratch-buffer form used by the
+    /// executor's per-worker tile walk.
+    pub fn reset(&mut self, rows: usize, d: usize) {
+        self.m.clear();
+        self.m.resize(rows, f32::NEG_INFINITY);
+        self.l.clear();
+        self.l.resize(rows, 0.0);
+        self.acc.data.clear();
+        self.acc.data.resize(rows * d, 0.0);
+        self.acc.rows = rows;
+        self.acc.cols = d;
+    }
+
     /// Fold one scored tile into the state. `s` holds scaled logits
     /// `[rows, tile_cols]` (already causally masked where needed); `v`
     /// holds the matching value rows `[tile_cols, d]`.

@@ -17,10 +17,10 @@
 //! front end across head-group shard workers that exchange only plan
 //! coordinates (DESIGN.md §12).
 //!
-//! The pre-session entry points ([`Method::run`], [`Method::run_batch`],
-//! [`Method::run_batch_cached`], `Method::run_batch_pipelined`) survive
-//! one release as `#[deprecated]` shims over the session dispatch path;
-//! their six `*_with` explicit-backend duplicates are gone.
+//! The pre-session `run_*` entry points are gone: they survived one
+//! release (0.3.x) as `#[deprecated]` shims over the session dispatch and
+//! were removed in the raw-speed executor pass. Build an
+//! [`session::AttentionSession`] instead (DESIGN.md §11).
 //!
 //! Layout convention: row-major `[N, d]` matrices for Q, K, V per head,
 //! causal masking, logits scaled by `1/sqrt(d)`.
@@ -39,7 +39,7 @@ pub mod strategy;
 
 use crate::tensor::Mat;
 use crate::util::threadpool::parallel_map;
-use exec::{CpuTileExecutor, Executor};
+use exec::Executor;
 use plan::{BatchInput, BatchOutput, PlanCache, PlanKey, Planner, SparsePlan};
 use std::sync::Arc;
 
@@ -211,68 +211,6 @@ impl Method {
             Method::FlexPrefill(cfg) => (cfg.tile, 1),
             Method::BlockTopK(cfg) => (cfg.tile, 1),
         }
-    }
-
-    /// Run the method on one head: plan, execute, fold identification cost.
-    ///
-    /// Deprecated shim over the session dispatch path — an uncached
-    /// [`session::AttentionSession`] built per call, so behavior (and
-    /// bits) match the historical fused entry exactly.
-    #[deprecated(
-        since = "0.3.0",
-        note = "build an AttentionSession (Method::session()) and call run — DESIGN.md §11"
-    )]
-    pub fn run(&self, input: &HeadInput) -> AttnOutput {
-        self.session()
-            .no_cache()
-            .build()
-            .expect("default session config is infallible")
-            .run(input)
-            .expect("uncached single-head run cannot fail")
-            .into_single()
-    }
-
-    /// Run the method on a multi-head batch, parallelizing at head
-    /// granularity; each head's plan is built independently.
-    ///
-    /// Deprecated shim over the session dispatch path (uncached,
-    /// sequential, CPU backend).
-    #[deprecated(
-        since = "0.3.0",
-        note = "build an AttentionSession (Method::session()) and call run_batch — DESIGN.md §11"
-    )]
-    pub fn run_batch(&self, batch: &BatchInput) -> BatchOutput {
-        self.session()
-            .no_cache()
-            .build()
-            .expect("default session config is infallible")
-            .run_batch(batch)
-            .expect("uncached sequential batch cannot fail")
-            .into_batch()
-    }
-
-    /// As [`Method::run_batch`] but with a [`PlanCache`]: `keys[h]` names
-    /// head `h`'s `(layer, head_group)` cell, and heads sharing a key reuse
-    /// the first-planned head's identification work (§3.2). Cache hits skip
-    /// the ident cost entirely — that saving is what the scheduler's
-    /// plan-hit-aware cost model accounts for.
-    ///
-    /// Deprecated shim: sessions *own* their cache (and can persist it);
-    /// borrow-style caching is exactly why this entry is deprecated. The
-    /// dispatch below is the same internal path
-    /// `AttentionSession::run_batch` takes.
-    #[deprecated(
-        since = "0.3.0",
-        note = "build an AttentionSession with .cache()/.keys(); see DESIGN.md §11"
-    )]
-    pub fn run_batch_cached(
-        &self,
-        batch: &BatchInput,
-        cache: &PlanCache,
-        keys: &[PlanKey],
-    ) -> BatchOutput {
-        assert_eq!(keys.len(), batch.h(), "one PlanKey per head");
-        self.run_batch_inner(batch, Some((cache, keys)), &CpuTileExecutor::default())
     }
 
     /// Two-stage batch execution: first resolve one plan per *distinct*
@@ -506,40 +444,4 @@ mod tests {
         assert_eq!(b2.ident_cost_paid, CostTally::default());
     }
 
-    /// The deprecated shims are bitwise-identical to the session API they
-    /// wrap (the one-release compatibility contract, DESIGN.md §11).
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_match_the_session_api() {
-        let heads: Vec<HeadInput> = (0..2).map(|i| rand_head(300 + i, 96, 8)).collect();
-        let batch = plan::BatchInput::new(heads.clone());
-        let keys = vec![plan::PlanKey::new(0, 0), plan::PlanKey::new(0, 0)];
-        for m in small_methods() {
-            let legacy = m.run(&heads[0]);
-            let s = m.session().no_cache().build().unwrap().run(&heads[0]).unwrap();
-            assert_eq!(legacy.out.data, s.outputs[0].out.data, "{}", m.name());
-            assert_eq!(legacy.cost, s.outputs[0].cost, "{}", m.name());
-
-            let legacy_b = m.run_batch(&batch);
-            let s_b = m.session().no_cache().build().unwrap().run_batch(&batch).unwrap();
-            for (a, b) in legacy_b.outputs.iter().zip(&s_b.outputs) {
-                assert_eq!(a.out.data, b.out.data, "{}", m.name());
-                assert_eq!(a.cost, b.cost, "{}", m.name());
-            }
-
-            let cache = plan::PlanCache::new();
-            let legacy_c = m.run_batch_cached(&batch, &cache, &keys);
-            let s_c = m.session().keys(keys.clone()).build().unwrap().run_batch(&batch).unwrap();
-            assert_eq!(
-                (legacy_c.cache_hits, legacy_c.cache_misses),
-                (s_c.cache_hits, s_c.cache_misses),
-                "{}",
-                m.name()
-            );
-            for (a, b) in legacy_c.outputs.iter().zip(&s_c.outputs) {
-                assert_eq!(a.out.data, b.out.data, "{}", m.name());
-                assert_eq!(a.cost, b.cost, "{}", m.name());
-            }
-        }
-    }
 }

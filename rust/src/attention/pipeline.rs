@@ -35,7 +35,7 @@ use std::time::Instant;
 
 use crate::attention::exec::Executor;
 use crate::attention::plan::{BatchInput, BatchOutput, PlanCache, PlanKey, Planner, SparsePlan};
-use crate::attention::{AttnOutput, Method};
+use crate::attention::AttnOutput;
 use crate::util::threadpool::{num_threads, panic_message, OrderedBoundedQueue, PoisonOnDrop};
 
 /// Pipeline shape: how far planners may run ahead of the executor and how
@@ -101,35 +101,6 @@ impl PipelineStats {
 pub struct PipelinedBatchOutput {
     pub batch: BatchOutput,
     pub stats: PipelineStats,
-}
-
-impl Method {
-    /// As [`Method::run_batch`] with identification overlapped: planners
-    /// for head *i+1* run on spare workers while the executor drains head
-    /// *i*. Output is bitwise-equal to the sequential path; `Err` carries
-    /// the panic message of a failed planner worker.
-    ///
-    /// Deprecated shim over a pipelined uncached session; the cached
-    /// pipelined variants are gone — sessions own the cache.
-    #[deprecated(
-        since = "0.3.0",
-        note = "build an AttentionSession with .pipelined(true); see DESIGN.md §11"
-    )]
-    pub fn run_batch_pipelined(
-        &self,
-        batch: &BatchInput,
-        pipe: &PlanPipeline,
-    ) -> Result<PipelinedBatchOutput, String> {
-        let mut session = self
-            .session()
-            .no_cache()
-            .pipeline(*pipe)
-            .build()
-            .map_err(|e| e.to_string())?;
-        let out = session.run_batch(batch).map_err(|e| e.to_string())?;
-        let stats = out.pipeline.unwrap_or_default();
-        Ok(PipelinedBatchOutput { batch: out.into_batch(), stats })
-    }
 }
 
 /// Pipelined batch execution against an explicit planner and executor
@@ -289,7 +260,7 @@ mod tests {
     use super::*;
     use crate::attention::anchor::AnchorConfig;
     use crate::attention::exec::CpuTileExecutor;
-    use crate::attention::{HeadInput, TileConfig};
+    use crate::attention::{HeadInput, Method, TileConfig};
     use crate::tensor::Mat;
     use crate::util::rng::Pcg64;
 
@@ -384,21 +355,6 @@ mod tests {
             .unwrap();
         assert_eq!(seq.outputs[0].out.data, piped.outputs[0].out.data);
         assert_eq!(seq.outputs[0].cost, piped.outputs[0].cost);
-    }
-
-    /// The deprecated pipelined shim wraps the same session dispatch.
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_pipelined_shim_matches_session() {
-        let heads: Vec<HeadInput> = (0..3).map(|i| rand_head(650 + i, 64, 8)).collect();
-        let batch = BatchInput::new(heads);
-        let m = anchor_method();
-        let legacy = m.run_batch_pipelined(&batch, &PlanPipeline::default()).unwrap();
-        let s = m.session().no_cache().pipelined(true).build().unwrap().run_batch(&batch).unwrap();
-        for (a, b) in legacy.batch.outputs.iter().zip(&s.outputs) {
-            assert_eq!(a.out.data, b.out.data);
-            assert_eq!(a.cost, b.cost);
-        }
     }
 
     struct PanicPlanner;

@@ -543,7 +543,7 @@ mod tests {
         let h = rand_head(43, 160, 8);
         let plan = mixed_plan(160, 8);
         let a = execute_plan(&h, &plan);
-        let b = CpuTileExecutor { serial: true }.execute(&h, &plan);
+        let b = CpuTileExecutor { serial: true, ..Default::default() }.execute(&h, &plan);
         assert_eq!(a.cost, b.cost);
         assert!(a.out.max_abs_diff(&b.out) < 1e-6);
     }

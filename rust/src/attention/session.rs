@@ -334,7 +334,9 @@ impl SessionBuilder {
         }
         let store = open_plan_store(&self.persist, self.cache.is_some(), self.store_cap)?;
         let executor: Box<dyn Executor> = match self.executor {
-            ExecutorKind::Cpu => Box::new(CpuTileExecutor { serial: self.serial_cpu }),
+            ExecutorKind::Cpu => {
+                Box::new(CpuTileExecutor { serial: self.serial_cpu, ..Default::default() })
+            }
             ExecutorKind::Pjrt => Box::new(PjrtGatherExecutor::new()),
         };
         Ok(AttentionSession {

@@ -11,7 +11,7 @@ use crate::attention::anchor::AnchorConfig;
 use crate::attention::exec::ExecutorKind;
 use crate::attention::session::SessionConfig;
 use crate::attention::TileConfig;
-use crate::coordinator::scheduler::{SchedulerConfig, SparsityModel};
+use crate::coordinator::scheduler::{CostConstants, SchedulerConfig, SparsityModel};
 use crate::coordinator::server::ServerConfig;
 use crate::util::json::Json;
 use crate::workload::trace::TraceConfig;
@@ -98,6 +98,9 @@ impl AppConfig {
                         Some(0) => return Err(anyhow!("scheduler shards must be >= 1")),
                         Some(s) => s,
                     },
+                    // Modeled defaults; `serve --calibration F` swaps in a
+                    // measured set from the manifest (DESIGN.md §13).
+                    constants: CostConstants::modeled(),
                 },
                 Some(other) => return Err(anyhow!("unknown sparsity model '{other}'")),
             };

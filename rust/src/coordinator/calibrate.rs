@@ -1,0 +1,234 @@
+//! Machine calibration of the scheduler's cost constants (DESIGN.md §13).
+//!
+//! The modeled constants in [`scheduler`](super::scheduler) —
+//! [`IDENT_COST_FRAC`](super::scheduler::IDENT_COST_FRAC) and
+//! [`PLAN_BROADCAST_FRAC`](super::scheduler::PLAN_BROADCAST_FRAC) — are
+//! paper-derived guesses. `anchor-attn calibrate` replaces them with
+//! numbers measured on the machine actually serving:
+//!
+//! * **span read** — contiguous K/V rows through [`KvSource::span_into`]
+//!   (ns per row), the run-serving fast path;
+//! * **discrete gather** — strided rows through [`KvSource::gather_into`]
+//!   (ns per row), the singleton-stripe path;
+//! * **tile fold** — one online-softmax `BlockState::fold_tile` over a
+//!   `b_q × b_kv` score tile (ns per score element);
+//! * **identification** — a full anchor re-plan of the context, timed
+//!   against **dense execution** of the same context on the chosen
+//!   executor backend. Their ratio is `ident_cost_frac`: what a
+//!   plan-cache miss costs as a fraction of densely attending the
+//!   context, the exact shape the scheduler's chunk pricing consumes;
+//! * **plan broadcast** — cloning the plan's coordinate vectors (what
+//!   head-group shards actually exchange, DESIGN.md §12), again relative
+//!   to dense execution, giving `plan_broadcast_frac`.
+//!
+//! The derived fractions are clamped to sane ranges so a freak timer
+//! reading can never wedge the scheduler (e.g. a zero-cost ident would
+//! admit unbounded prefill). Raw ns rates ride along in the
+//! [`CostConstants`] for provenance and for the micro-bench
+//! gather-vs-span crossover report.
+
+use crate::attention::anchor::AnchorConfig;
+use crate::attention::exec::{ExecutorKind, FlatKv, KvSource};
+use crate::attention::full::BlockState;
+use crate::attention::{HeadInput, Method, TileConfig};
+use crate::tensor::Mat;
+use crate::util::rng::Pcg64;
+use crate::util::timer::{BenchResult, BenchRunner};
+
+/// Clamp range for the identification fraction: a miss always costs
+/// something, and can never be priced above one dense pass.
+const IDENT_FRAC_RANGE: (f64, f64) = (0.001, 1.0);
+/// Clamp range for the per-shard broadcast fraction: coordinates are
+/// orders of magnitude lighter than K/V, so anything above 10% of a dense
+/// pass is a measurement artifact.
+const BROADCAST_FRAC_RANGE: (f64, f64) = (1e-6, 0.1);
+
+/// One executor's measured calibration: the derived [`CostConstants`]
+/// plus the raw timings they came from.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub kind: ExecutorKind,
+    pub constants: crate::coordinator::scheduler::CostConstants,
+    /// Full-context anchor identification wall time (seconds).
+    pub ident_s: f64,
+    /// Full-context dense execution wall time on `kind` (seconds).
+    pub dense_exec_s: f64,
+    /// Plan coordinate clone wall time (seconds) — the shard broadcast.
+    pub broadcast_s: f64,
+    /// Raw per-primitive bench rows, for reporting.
+    pub rows: Vec<BenchResult>,
+}
+
+/// Sequence length / head dim the calibration workload uses. `d = 64`
+/// exercises the specialized fold kernels serving actually hits.
+fn workload_shape(quick: bool) -> (usize, usize) {
+    if quick {
+        (1024, 64)
+    } else {
+        (4096, 64)
+    }
+}
+
+/// Identification step mirroring the experiments' scaling policy
+/// (DESIGN.md §6): keep ≥8 groups so anchor does not collapse to full.
+fn scaled_step(n: usize, tile: TileConfig) -> usize {
+    let blocks = n / tile.b_q;
+    if blocks >= 128 {
+        16
+    } else {
+        (blocks / 8).max(2)
+    }
+}
+
+/// Measure the cost-model primitives for `kind` on this machine.
+/// `quick` trades precision for wall time (CI smoke runs).
+pub fn calibrate(kind: ExecutorKind, quick: bool) -> Calibration {
+    let runner = if quick { BenchRunner::quick() } else { BenchRunner::default() };
+    let (n, d) = workload_shape(quick);
+    let tile = TileConfig::new(128, 128);
+    let mut rng = Pcg64::seeded(0xCA11B);
+    let head = HeadInput::new(
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+    );
+    let kv = FlatKv::new(&head.k, &head.v);
+    let mut rows = Vec::new();
+
+    // Span vs gather: same row count, contiguous vs stride-3 coordinates,
+    // through the executors' allocation-free read entries.
+    let read_rows = (n / 4).min(1024);
+    let mut k_dst = Mat::zeros(read_rows, d);
+    let mut v_dst = Mat::zeros(read_rows, d);
+    let span = runner.run("span_into/contiguous", || {
+        kv.span_into(0, read_rows, 0, &mut k_dst, &mut v_dst);
+        k_dst.data[0]
+    });
+    let span_ns_per_row = span.mean_s * 1e9 / read_rows as f64;
+    rows.push(span);
+    let coords: Vec<u32> = (0..read_rows as u32).map(|i| i * 3).collect();
+    assert!((*coords.last().unwrap() as usize) < n);
+    let gather = runner.run("gather_into/stride3", || {
+        kv.gather_into(&coords, 0, &mut k_dst, &mut v_dst);
+        k_dst.data[0]
+    });
+    let gather_ns_per_row = gather.mean_s * 1e9 / read_rows as f64;
+    rows.push(gather);
+
+    // Tile fold: one online-softmax fold of a b_q × b_kv score tile.
+    // fold_tile rewrites the scores in place, so each iteration restores
+    // them first; the 64 KiB copy is noise next to the exp-heavy fold.
+    let scores = Mat::from_fn(tile.b_q, tile.b_kv, |_, _| rng.normal());
+    let mut s_work = scores.clone();
+    let v_tile = Mat::from_fn(tile.b_kv, d, |_, _| rng.normal());
+    let mut state = BlockState::new(tile.b_q, d);
+    let fold = runner.run("fold_tile/128x128", || {
+        s_work.data.copy_from_slice(&scores.data);
+        state.reset(tile.b_q, d);
+        state.fold_tile(&mut s_work, &v_tile);
+        state.l[0]
+    });
+    let fold_ns_per_score = fold.mean_s * 1e9 / (tile.b_q * tile.b_kv) as f64;
+    rows.push(fold);
+
+    // Identification vs dense execution: the two wall times whose ratio
+    // the scheduler's miss pricing is.
+    let anchor = Method::Anchor(AnchorConfig {
+        tile,
+        theta: 12.0,
+        step: scaled_step(n, tile),
+        init_blocks: 1,
+        use_anchor: true,
+    });
+    let ident = runner.run("ident/anchor-plan", || anchor.plan(&head).ident_cost.ident_scores);
+    rows.push(ident.clone());
+    let dense_plan = Method::Full(tile).plan(&head);
+    let executor = kind.build();
+    let dense = runner.run("exec/dense-full-head", || {
+        executor.execute(&head, &dense_plan).out.data[0]
+    });
+    rows.push(dense.clone());
+
+    // Plan broadcast: cloning coordinate vectors, the only payload shard
+    // workers exchange.
+    let anchor_plan = anchor.plan(&head);
+    let bcast = runner.run("broadcast/coord-clone", || {
+        anchor_plan
+            .groups
+            .iter()
+            .map(|g| (g.spans.clone(), g.stripes.clone()))
+            .collect::<Vec<_>>()
+            .len()
+    });
+    rows.push(bcast.clone());
+
+    let ident_cost_frac =
+        (ident.mean_s / dense.mean_s).clamp(IDENT_FRAC_RANGE.0, IDENT_FRAC_RANGE.1);
+    let plan_broadcast_frac =
+        (bcast.mean_s / dense.mean_s).clamp(BROADCAST_FRAC_RANGE.0, BROADCAST_FRAC_RANGE.1);
+    Calibration {
+        kind,
+        constants: crate::coordinator::scheduler::CostConstants {
+            ident_cost_frac,
+            plan_broadcast_frac,
+            span_ns_per_row,
+            gather_ns_per_row,
+            fold_ns_per_score,
+        },
+        ident_s: ident.mean_s,
+        dense_exec_s: dense.mean_s,
+        broadcast_s: bcast.mean_s,
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A quick calibration produces finite, clamped, measured constants
+    /// that the sparsity model accepts.
+    #[test]
+    fn quick_calibration_yields_sane_measured_constants() {
+        let cal = calibrate(ExecutorKind::Cpu, true);
+        let c = cal.constants;
+        assert!(c.is_measured());
+        assert!(
+            (IDENT_FRAC_RANGE.0..=IDENT_FRAC_RANGE.1).contains(&c.ident_cost_frac),
+            "ident frac {}",
+            c.ident_cost_frac
+        );
+        assert!(
+            (BROADCAST_FRAC_RANGE.0..=BROADCAST_FRAC_RANGE.1).contains(&c.plan_broadcast_frac),
+            "broadcast frac {}",
+            c.plan_broadcast_frac
+        );
+        for (name, v) in [
+            ("span", c.span_ns_per_row),
+            ("gather", c.gather_ns_per_row),
+            ("fold", c.fold_ns_per_score),
+        ] {
+            assert!(v.is_finite() && v > 0.0, "{name} rate {v}");
+        }
+        // Gathering strided rows is never cheaper than the straight copy.
+        assert!(
+            c.gather_ns_per_row >= c.span_ns_per_row * 0.5,
+            "gather {} vs span {}",
+            c.gather_ns_per_row,
+            c.span_ns_per_row
+        );
+        let mut m = crate::coordinator::scheduler::SparsityModel::Anchor {
+            stripe_keep: 0.1,
+            anchor_tokens: 256,
+            plan_hit_rate: 0.0,
+            pipelined: false,
+            executor: ExecutorKind::Cpu,
+            shards: 1,
+            constants: Default::default(),
+        };
+        m.set_constants(c);
+        let eff = m.effective_context(4096);
+        assert!(eff.is_finite() && eff > 0.0 && eff <= 4096.0, "eff {eff}");
+        assert_eq!(cal.rows.len(), 6);
+    }
+}

@@ -301,6 +301,7 @@ pub fn spawn_mock_engine(vocab: i32, cost_model: Option<SparsityModel>) -> Engin
 mod tests {
     use super::*;
     use crate::attention::exec::ExecutorKind;
+    use crate::coordinator::scheduler::CostConstants;
 
     #[test]
     fn mock_engine_is_deterministic() {
@@ -330,6 +331,7 @@ mod tests {
                     pipelined: false,
                     executor: ExecutorKind::Cpu,
                     shards: 1,
+                    constants: CostConstants::modeled(),
                 },
             )
         };
@@ -391,6 +393,7 @@ mod tests {
                     pipelined,
                     executor: ExecutorKind::Cpu,
                     shards: 1,
+                    constants: CostConstants::modeled(),
                 },
             )
         };
@@ -420,6 +423,7 @@ mod tests {
             pipelined: true,
             executor: ExecutorKind::Cpu,
             shards: 1,
+            constants: CostConstants::modeled(),
         };
         let (cmd_tx, res_rx) = spawn_mock_engine(64, Some(model));
         // Ready signal first.

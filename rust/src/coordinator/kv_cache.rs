@@ -345,6 +345,39 @@ impl KvSource for PagedKv<'_> {
     fn gather(&self, coords: &[u32]) -> (Mat, Mat) {
         self.store.gather(self.pages, coords).expect("paged gather (validate_plan first)")
     }
+
+    fn span_into(&self, start: usize, end: usize, row0: usize, k_dst: &mut Mat, v_dst: &mut Mat) {
+        // Page-run memcpy straight into the destination tile — no
+        // intermediate Mat. Same traversal as `PagedKvStore::span`.
+        let store = self.store;
+        let d = store.d;
+        let mut pos = start;
+        let mut out_row = row0;
+        while pos < end {
+            let (page, off) =
+                store.translate(self.pages, pos).expect("paged span (validate_plan first)");
+            let run = (store.page_tokens - off).min(end - pos);
+            k_dst.data[out_row * d..(out_row + run) * d]
+                .copy_from_slice(&store.k_pages[page].data[off * d..(off + run) * d]);
+            v_dst.data[out_row * d..(out_row + run) * d]
+                .copy_from_slice(&store.v_pages[page].data[off * d..(off + run) * d]);
+            pos += run;
+            out_row += run;
+        }
+    }
+
+    fn gather_into(&self, coords: &[u32], row0: usize, k_dst: &mut Mat, v_dst: &mut Mat) {
+        let store = self.store;
+        let d = store.d;
+        for (i, &pos) in coords.iter().enumerate() {
+            let (page, off) = store
+                .translate(self.pages, pos as usize)
+                .expect("paged gather (validate_plan first)");
+            let dst = (row0 + i) * d;
+            k_dst.data[dst..dst + d].copy_from_slice(store.k_pages[page].row(off));
+            v_dst.data[dst..dst + d].copy_from_slice(store.v_pages[page].row(off));
+        }
+    }
 }
 
 /// Executor wrapper routing any backend's K/V reads through paged serving

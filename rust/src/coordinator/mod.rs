@@ -9,6 +9,10 @@
 //! ```
 //!
 //! * [`queue`] — admission with arrival timestamps.
+//! * [`calibrate`] — measures the scheduler's cost constants (span read,
+//!   discrete gather, tile fold, ident-vs-dense) on the serving machine;
+//!   `anchor-attn calibrate` persists them via the runtime manifest
+//!   (DESIGN.md §13).
 //! * [`kv_cache`] — paged KV accounting (fixed-size pages, per-page stripe
 //!   statistics for the decode-reuse extension, DESIGN.md §7).
 //! * [`scheduler`] — iteration-level planning: chunked prefill + decode
@@ -20,6 +24,7 @@
 //! * [`server`] — trace-driven driver producing a [`metrics::ServeReport`].
 
 pub mod batcher;
+pub mod calibrate;
 pub mod engine;
 pub mod kv_cache;
 pub mod metrics;

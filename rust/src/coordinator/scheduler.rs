@@ -29,6 +29,58 @@ pub const IDENT_COST_FRAC: f64 = 0.125;
 /// adding workers stops paying.
 pub const PLAN_BROADCAST_FRAC: f64 = 0.002;
 
+/// The constants the Anchor cost estimates are built from: either the
+/// modeled defaults above or machine-measured replacements produced by
+/// `anchor-attn calibrate` and persisted under the runtime manifest's
+/// `calibration` key (DESIGN.md §13). The two fractions are the
+/// dimensionless knobs [`SparsityModel::effective_context`] actually
+/// consumes; the ns-rate fields carry the raw primitive measurements the
+/// fractions were derived from, so a calibrated scheduler can always name
+/// its provenance (`0.0` = modeled, nothing was measured).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostConstants {
+    /// Identification overhead as a fraction of context token-cost on a
+    /// plan-cache miss (modeled default: [`IDENT_COST_FRAC`]).
+    pub ident_cost_frac: f64,
+    /// Plan-broadcast overhead per extra shard as a fraction of context
+    /// token-cost (modeled default: [`PLAN_BROADCAST_FRAC`]).
+    pub plan_broadcast_frac: f64,
+    /// Measured contiguous span read rate, ns per K/V row.
+    pub span_ns_per_row: f64,
+    /// Measured discrete (per-coordinate) gather rate, ns per K/V row.
+    pub gather_ns_per_row: f64,
+    /// Measured online-softmax tile fold rate, ns per score element.
+    pub fold_ns_per_score: f64,
+}
+
+impl CostConstants {
+    /// The modeled defaults — bit-identical to the historical global
+    /// constants, so an uncalibrated scheduler prices exactly as before.
+    pub fn modeled() -> Self {
+        Self {
+            ident_cost_frac: IDENT_COST_FRAC,
+            plan_broadcast_frac: PLAN_BROADCAST_FRAC,
+            span_ns_per_row: 0.0,
+            gather_ns_per_row: 0.0,
+            fold_ns_per_score: 0.0,
+        }
+    }
+
+    /// Whether these constants came from a calibration run (any primitive
+    /// rate measured) rather than the modeled defaults.
+    pub fn is_measured(&self) -> bool {
+        self.span_ns_per_row > 0.0
+            || self.gather_ns_per_row > 0.0
+            || self.fold_ns_per_score > 0.0
+    }
+}
+
+impl Default for CostConstants {
+    fn default() -> Self {
+        Self::modeled()
+    }
+}
+
 /// How prefill attention cost scales with context for the active method.
 #[derive(Clone, Copy, Debug)]
 pub enum SparsityModel {
@@ -67,6 +119,10 @@ pub enum SparsityModel {
         /// Identification is not divided — a fresh key identifies once
         /// and the plan broadcasts. `1` (or `0`, clamped) is unsharded.
         shards: usize,
+        /// Cost constants the estimate arithmetic reads:
+        /// [`CostConstants::modeled`] by default, or a measured set loaded
+        /// from the manifest's `calibration` key (`serve --calibration`).
+        constants: CostConstants,
     },
 }
 
@@ -77,7 +133,7 @@ impl SparsityModel {
         match *self {
             SparsityModel::Dense => context as f64,
             SparsityModel::Anchor {
-                stripe_keep, anchor_tokens, plan_hit_rate, pipelined, shards, ..
+                stripe_keep, anchor_tokens, plan_hit_rate, pipelined, shards, constants, ..
             } => {
                 let anchored = context.min(anchor_tokens) as f64;
                 let rest = context.saturating_sub(anchor_tokens) as f64;
@@ -88,9 +144,10 @@ impl SparsityModel {
                 // worker. Identification is not divided — a fresh key
                 // plans once, then the coordinates fan out.
                 let attn = (anchored + stripe_keep * rest) / s
-                    + PLAN_BROADCAST_FRAC * (s - 1.0) * context as f64;
-                let ident =
-                    (1.0 - plan_hit_rate.clamp(0.0, 1.0)) * IDENT_COST_FRAC * context as f64;
+                    + constants.plan_broadcast_frac * (s - 1.0) * context as f64;
+                let ident = (1.0 - plan_hit_rate.clamp(0.0, 1.0))
+                    * constants.ident_cost_frac
+                    * context as f64;
                 // Pipelined: identification overlaps execution, so only the
                 // slower stage sits on the critical path. Sequential: the
                 // stages serialize.
@@ -120,6 +177,24 @@ impl SparsityModel {
         match *self {
             SparsityModel::Dense => 1,
             SparsityModel::Anchor { shards, .. } => shards.max(1),
+        }
+    }
+
+    /// The cost constants the estimates are built from (dense pricing has
+    /// no tunable constants).
+    pub fn constants(&self) -> Option<CostConstants> {
+        match *self {
+            SparsityModel::Dense => None,
+            SparsityModel::Anchor { constants, .. } => Some(constants),
+        }
+    }
+
+    /// Install a measured constant set — a calibration artifact loaded
+    /// from the runtime manifest — in place of the modeled defaults.
+    /// No-op for dense, which has no constants to replace.
+    pub fn set_constants(&mut self, c: CostConstants) {
+        if let SparsityModel::Anchor { constants, .. } = self {
+            *constants = c;
         }
     }
 
@@ -344,6 +419,7 @@ mod tests {
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards: 1,
+            constants: CostConstants::modeled(),
         };
         let sparse = plan_iteration(&c, &mut sparse_states, &mut pool);
         assert!(
@@ -380,6 +456,7 @@ mod tests {
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards: 1,
+            constants: CostConstants::modeled(),
         };
         let eff = anchor.effective_context(1000);
         assert!((eff - (200.0 + 0.1 * 800.0)).abs() < 1e-9);
@@ -399,6 +476,7 @@ mod tests {
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards: 1,
+            constants: CostConstants::modeled(),
         };
         let cold = mk(0.0).effective_context(4096);
         let warm = mk(1.0).effective_context(4096);
@@ -439,6 +517,7 @@ mod tests {
             pipelined,
             executor: ExecutorKind::Cpu,
             shards: 1,
+            constants: CostConstants::modeled(),
         };
         let n = 4096;
         // attn = 256 + 0.1·3840 = 640; ident = 0.125·4096 = 512.
@@ -455,6 +534,7 @@ mod tests {
             pipelined: true,
             executor: ExecutorKind::Cpu,
             shards: 1,
+            constants: CostConstants::modeled(),
         };
         assert!((lean.effective_context(n) - 512.0).abs() < 1e-9);
 
@@ -468,6 +548,7 @@ mod tests {
                     pipelined,
                     executor: ExecutorKind::Cpu,
                     shards: 1,
+                    constants: CostConstants::modeled(),
                 };
                 assert!(
                     with(true).effective_context(ctx) <= with(false).effective_context(ctx) + 1e-12,
@@ -492,6 +573,7 @@ mod tests {
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards,
+            constants: CostConstants::modeled(),
         };
         let n = 65536;
         let one = mk(1).effective_context(n);
@@ -545,6 +627,7 @@ mod tests {
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards: 1,
+            constants: CostConstants::modeled(),
         };
         m.observe_plan_hit_rate(1.0);
         match m {
@@ -562,6 +645,49 @@ mod tests {
         }
         let mut d = SparsityModel::Dense;
         d.observe_plan_hit_rate(1.0);
+        assert_eq!(d.effective_context(100), 100.0);
+    }
+
+    /// Measured constants displace the modeled defaults in the estimate
+    /// arithmetic: the same model prices differently once calibrated, and
+    /// the modeled set is bit-identical to the historical globals so an
+    /// uncalibrated scheduler is unchanged.
+    #[test]
+    fn calibrated_constants_displace_modeled_defaults() {
+        assert_eq!(CostConstants::modeled().ident_cost_frac, IDENT_COST_FRAC);
+        assert_eq!(CostConstants::modeled().plan_broadcast_frac, PLAN_BROADCAST_FRAC);
+        assert_eq!(CostConstants::default(), CostConstants::modeled());
+        assert!(!CostConstants::modeled().is_measured());
+
+        let measured = CostConstants {
+            ident_cost_frac: 0.25,
+            plan_broadcast_frac: 0.004,
+            span_ns_per_row: 1.5,
+            gather_ns_per_row: 6.0,
+            fold_ns_per_score: 0.8,
+        };
+        assert!(measured.is_measured());
+        let mut m = SparsityModel::Anchor {
+            stripe_keep: 0.1,
+            anchor_tokens: 256,
+            plan_hit_rate: 0.0,
+            pipelined: false,
+            executor: ExecutorKind::Cpu,
+            shards: 2,
+            constants: CostConstants::modeled(),
+        };
+        let modeled_eff = m.effective_context(4096);
+        m.set_constants(measured);
+        assert_eq!(m.constants(), Some(measured));
+        // attn = (256 + 0.1·3840)/2 + 0.004·1·4096; ident = 0.25·4096.
+        let expect = (256.0 + 0.1 * 3840.0) / 2.0 + 0.004 * 4096.0 + 0.25 * 4096.0;
+        let eff = m.effective_context(4096);
+        assert!((eff - expect).abs() < 1e-9, "calibrated {eff} vs {expect}");
+        assert!(eff != modeled_eff, "calibration must actually change pricing");
+        // Dense has no constants to replace.
+        let mut d = SparsityModel::Dense;
+        d.set_constants(measured);
+        assert_eq!(d.constants(), None);
         assert_eq!(d.effective_context(100), 100.0);
     }
 

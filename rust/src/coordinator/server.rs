@@ -256,7 +256,7 @@ mod tests {
 
     #[test]
     fn anchor_scheduler_lowers_iterations_for_long_prompts() {
-        use crate::coordinator::scheduler::SparsityModel;
+        use crate::coordinator::scheduler::{CostConstants, SparsityModel};
         let mk = |sparsity| {
             let mut cfg = ServerConfig::default();
             cfg.scheduler.sparsity = sparsity;
@@ -272,6 +272,7 @@ mod tests {
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards: 1,
+            constants: CostConstants::modeled(),
         });
         assert!(
             anchor.iterations <= dense.iterations,
@@ -286,7 +287,7 @@ mod tests {
     /// identification frees iteration budget for extra prefill chunks).
     #[test]
     fn pipelined_scheduler_no_worse_than_sequential_anchor() {
-        use crate::coordinator::scheduler::SparsityModel;
+        use crate::coordinator::scheduler::{CostConstants, SparsityModel};
         let mk = |pipelined| {
             let mut cfg = ServerConfig::default();
             cfg.scheduler.sparsity = SparsityModel::Anchor {
@@ -296,6 +297,7 @@ mod tests {
                 pipelined,
                 executor: ExecutorKind::Cpu,
                 shards: 1,
+                constants: CostConstants::modeled(),
             };
             cfg.scheduler.iter_budget = 400.0;
             cfg.pool_pages = 256;

@@ -1,0 +1,371 @@
+//! `bench micro` — the gated micro-benchmark suite for the raw-speed
+//! executor pass (DESIGN.md §13). Not a paper figure: it times the
+//! executor's primitives so the optimizations that do not change any
+//! output bit (run-length span serving, d-specialized fold kernels,
+//! thread-local scratch) stay measurably faster than the paths they
+//! replaced.
+//!
+//! Four groups:
+//!
+//! * **gather-vs-span crossover** — the same row multiset served through
+//!   [`KvSource::span_into`] (one read per run) vs [`KvSource::gather_into`]
+//!   (one read per coordinate), over a grid of run lengths, on both the
+//!   flat and the paged KV source. Quantifies the span win and the run
+//!   length where it starts.
+//! * **specialized-vs-generic folds** — the `d ∈ {64, 128}` const-generic
+//!   matmul kernels against the runtime-`k` generic loops they shadow.
+//! * **cold-vs-scratch allocation** — one tile step (span read, Q·Kᵀ,
+//!   online-softmax fold) with per-iteration buffer allocation vs the
+//!   executor's reuse discipline.
+//! * **runs-vs-discrete end-to-end** — [`CpuTileExecutor`] in
+//!   [`LoweringMode::Runs`] vs [`LoweringMode::Discrete`] on a structured
+//!   anchor plan (identical bits out, different read schedule).
+//!
+//! Every group reduces to dimensionless ratios (higher = the optimization
+//! is winning) written under `ratios` in `reports/bench_micro.json`; CI
+//! republishes that file as the `BENCH_micro.json` artifact. With
+//! `--baseline F`, each ratio named in the committed baseline must stay
+//! within [`GATE_TOLERANCE`] of its floor or the run exits nonzero.
+
+use anyhow::Context;
+
+use crate::attention::anchor::AnchorConfig;
+use crate::attention::exec::{CpuTileExecutor, Executor, FlatKv, KvSource, LoweringMode};
+use crate::attention::full::BlockState;
+use crate::attention::{Method, TileConfig};
+use crate::coordinator::kv_cache::{PagedKv, PagedKvStore};
+use crate::tensor::{self, Mat};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::timer::{BenchResult, BenchRunner};
+use crate::workload::{qkv, WorkloadProfile};
+
+use super::common::{bench_report_json, print_table, scaled_step, write_json_report, ExpScale};
+
+/// Allowed fractional slack below a baseline ratio before the gate fails
+/// (>15% regression on any gated ratio is an error).
+pub const GATE_TOLERANCE: f64 = 0.15;
+
+/// CLI-surface options for the suite.
+#[derive(Debug, Default, Clone)]
+pub struct MicroOptions {
+    /// Path to a committed baseline JSON (`{"ratios": {...}}`); when set,
+    /// every ratio it names is gated against its floor.
+    pub baseline: Option<String>,
+}
+
+/// Run the suite, print the table + ratios, write
+/// `reports/bench_micro.json`, and apply the baseline gate if configured.
+pub fn run_with(scale: ExpScale, seed: u64, opts: &MicroOptions) -> anyhow::Result<Json> {
+    let quick = matches!(scale, ExpScale::Quick);
+    let mode = if quick { "quick" } else { "full" };
+    let runner = if quick { BenchRunner::quick() } else { BenchRunner::default() };
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut ratios: Vec<(String, f64)> = Vec::new();
+
+    // ---- group 1: gather-vs-span crossover ------------------------------
+    let d = 64;
+    let n = 4096;
+    let mut rng = Pcg64::seeded(seed ^ 0x0515C0);
+    let k = Mat::from_fn(n, d, |_, _| rng.normal());
+    let v = Mat::from_fn(n, d, |_, _| rng.normal());
+    let flat = FlatKv::new(&k, &v);
+    // Mirror the rows into a paged store so both read paths see identical
+    // bytes; an identity page table keeps translation in the picture
+    // without a pool in the loop.
+    let page_tokens = 16;
+    let mut store = PagedKvStore::new(n / page_tokens, page_tokens, d);
+    let pages: Vec<u32> = (0..(n / page_tokens) as u32).collect();
+    for pos in 0..n {
+        store.write(&pages, pos, k.row(pos), v.row(pos))?;
+    }
+    let paged = PagedKv::new(&store, &pages);
+
+    let run_lens: &[usize] = if quick { &[1, 4, 16, 64] } else { &[1, 2, 4, 8, 16, 32, 64] };
+    let read_rows = 512;
+    let mut k_dst = Mat::zeros(read_rows, d);
+    let mut v_dst = Mat::zeros(read_rows, d);
+    let mut crossover: Vec<(String, Json)> = Vec::new();
+    for (src_name, src) in [("flat", &flat as &dyn KvSource), ("paged", &paged as &dyn KvSource)] {
+        let mut span_wins_at: Option<usize> = None;
+        for &len in run_lens {
+            // `read_rows` rows arranged as runs of `len` with a one-row
+            // gap, served as spans vs per-coordinate gathers of the same
+            // multiset (exactly what the Runs lowering changes).
+            let n_runs = read_rows / len;
+            let starts: Vec<usize> = (0..n_runs).map(|r| r * (len + 1)).collect();
+            assert!(starts.last().unwrap() + len <= n, "workload exceeds KV length");
+            let coords: Vec<u32> =
+                starts.iter().flat_map(|&s| (s..s + len).map(|x| x as u32)).collect();
+            let span = runner.run(&format!("read/{src_name}/span/run{len}"), || {
+                let mut row0 = 0;
+                for &s in &starts {
+                    src.span_into(s, s + len, row0, &mut k_dst, &mut v_dst);
+                    row0 += len;
+                }
+                k_dst.data[0]
+            });
+            let gather = runner.run(&format!("read/{src_name}/gather/run{len}"), || {
+                src.gather_into(&coords, 0, &mut k_dst, &mut v_dst);
+                k_dst.data[0]
+            });
+            let ratio = gather.mean_s / span.mean_s;
+            if ratio > 1.0 && span_wins_at.is_none() {
+                span_wins_at = Some(len);
+            }
+            ratios.push((format!("read_{src_name}_gather_over_span_run{len}"), ratio));
+            results.push(span);
+            results.push(gather);
+        }
+        crossover.push((
+            format!("{src_name}_span_wins_at_run_len"),
+            span_wins_at.map(|l| Json::num(l as f64)).unwrap_or(Json::Null),
+        ));
+    }
+
+    // ---- group 2: d-specialized vs generic fold kernels ------------------
+    let (b_q, b_kv) = (128, 128);
+    for dk in [64usize, 128] {
+        let q_t = Mat::from_fn(b_q, dk, |_, _| rng.normal());
+        let k_t = Mat::from_fn(b_kv, dk, |_, _| rng.normal());
+        let p = Mat::from_fn(b_q, b_kv, |_, _| rng.normal().abs());
+        let v_t = Mat::from_fn(b_kv, dk, |_, _| rng.normal());
+        let mut s = Mat::zeros(b_q, b_kv);
+        let mut acc = Mat::zeros(b_q, dk);
+        let inv = 1.0 / (dk as f32).sqrt();
+        let spec_qk = runner.run(&format!("fold/qk-spec/d{dk}"), || {
+            tensor::matmul_nt_scaled(&q_t, &k_t, inv, &mut s);
+            s.data[0]
+        });
+        let gen_qk = runner.run(&format!("fold/qk-generic/d{dk}"), || {
+            tensor::matmul_nt_scaled_generic(&q_t, &k_t, inv, &mut s);
+            s.data[0]
+        });
+        // The accumulate form grows unboundedly across iterations; zero it
+        // each pass (same memset on both sides) to keep values finite.
+        let spec_av = runner.run(&format!("fold/av-spec/d{dk}"), || {
+            acc.data.fill(0.0);
+            tensor::matmul_nn_acc(&p, &v_t, &mut acc);
+            acc.data[0]
+        });
+        let gen_av = runner.run(&format!("fold/av-generic/d{dk}"), || {
+            acc.data.fill(0.0);
+            tensor::matmul_nn_acc_generic(&p, &v_t, &mut acc);
+            acc.data[0]
+        });
+        ratios.push((
+            format!("spec_fold_speedup_d{dk}"),
+            (gen_qk.mean_s + gen_av.mean_s) / (spec_qk.mean_s + spec_av.mean_s),
+        ));
+        results.extend([spec_qk, gen_qk, spec_av, gen_av]);
+    }
+
+    // ---- group 3: cold allocation vs executor scratch --------------------
+    // One tile step — span read, Q·Kᵀ, online-softmax fold — with buffers
+    // allocated per iteration (the pre-scratch walk) vs reused the way
+    // `fold_group_scratch`'s thread-local scratch does.
+    let q_tile = Mat::from_fn(b_q, d, |_, _| rng.normal());
+    let inv = 1.0 / (d as f32).sqrt();
+    let cold = runner.run("alloc/cold", || {
+        let mut k_t = Mat::zeros(b_kv, d);
+        let mut v_t = Mat::zeros(b_kv, d);
+        let mut s = Mat::zeros(b_q, b_kv);
+        let mut state = BlockState::new(b_q, d);
+        flat.span_into(0, b_kv, 0, &mut k_t, &mut v_t);
+        tensor::matmul_nt_scaled(&q_tile, &k_t, inv, &mut s);
+        state.fold_tile(&mut s, &v_t);
+        state.l[0]
+    });
+    let mut k_t = Mat::zeros(b_kv, d);
+    let mut v_t = Mat::zeros(b_kv, d);
+    let mut s = Mat::zeros(b_q, b_kv);
+    let mut state = BlockState::new(b_q, d);
+    let scratch = runner.run("alloc/scratch", || {
+        state.reset(b_q, d);
+        flat.span_into(0, b_kv, 0, &mut k_t, &mut v_t);
+        tensor::matmul_nt_scaled(&q_tile, &k_t, inv, &mut s);
+        state.fold_tile(&mut s, &v_t);
+        state.l[0]
+    });
+    ratios.push(("cold_over_scratch".to_string(), cold.mean_s / scratch.mean_s));
+    results.extend([cold, scratch]);
+
+    // ---- group 4: runs-vs-discrete end-to-end ----------------------------
+    let n2 = if quick { 2048 } else { 4096 };
+    let tile = TileConfig::new(128, 128);
+    let wl = qkv::generate(&WorkloadProfile::llama_like(), n2, seed);
+    let plan = Method::Anchor(AnchorConfig {
+        tile,
+        theta: 12.0,
+        step: scaled_step(n2, tile),
+        init_blocks: 1,
+        use_anchor: true,
+    })
+    .plan(&wl.head);
+    let runs_exec = CpuTileExecutor { serial: true, lowering: LoweringMode::Runs };
+    let disc_exec = CpuTileExecutor { serial: true, lowering: LoweringMode::Discrete };
+    let runs = runner.run(&format!("exec/anchor-runs/n{n2}"), || {
+        runs_exec.execute(&wl.head, &plan).out.data[0]
+    });
+    let disc = runner.run(&format!("exec/anchor-discrete/n{n2}"), || {
+        disc_exec.execute(&wl.head, &plan).out.data[0]
+    });
+    ratios.push(("discrete_over_runs".to_string(), disc.mean_s / runs.mean_s));
+    results.extend([runs, disc]);
+
+    // ---- report ----------------------------------------------------------
+    print_table(
+        &["bench", "iters", "mean ms", "p50 ms", "min ms"],
+        &results
+            .iter()
+            .map(|r| {
+                vec![
+                    r.name.clone(),
+                    r.iters.to_string(),
+                    format!("{:.4}", r.mean_s * 1e3),
+                    format!("{:.4}", r.p50_s * 1e3),
+                    format!("{:.4}", r.min_s * 1e3),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    println!("ratios (higher = optimization winning):");
+    for (name, val) in &ratios {
+        println!("  {name:<44} {val:.3}");
+    }
+
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(&r.name)),
+                ("iters", Json::num(r.iters as f64)),
+                ("mean_ms", Json::num(r.mean_s * 1e3)),
+                ("p50_ms", Json::num(r.p50_s * 1e3)),
+                ("p95_ms", Json::num(r.p95_s * 1e3)),
+                ("min_ms", Json::num(r.min_s * 1e3)),
+            ])
+        })
+        .collect();
+    let ratios_json =
+        Json::Obj(ratios.iter().map(|(k2, v2)| (k2.clone(), Json::num(*v2))).collect());
+    let crossover_json = Json::Obj(crossover.into_iter().collect());
+    let report = bench_report_json(
+        "bench_micro",
+        mode,
+        seed,
+        rows,
+        vec![
+            ("ratios", ratios_json),
+            ("crossover", crossover_json),
+            ("gate_tolerance", Json::num(GATE_TOLERANCE)),
+            ("baseline", opts.baseline.as_deref().map(Json::str).unwrap_or(Json::Null)),
+        ],
+    );
+    let path = write_json_report("bench_micro.json", &report)?;
+    println!("wrote {}", path.display());
+
+    // ---- gate ------------------------------------------------------------
+    if let Some(baseline_path) = &opts.baseline {
+        let text = std::fs::read_to_string(baseline_path)
+            .with_context(|| format!("reading baseline '{baseline_path}'"))?;
+        let baseline = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("baseline '{baseline_path}': {e}"))?;
+        let lines = check_ratios(&baseline, &ratios, GATE_TOLERANCE)
+            .with_context(|| format!("micro-bench gate vs '{baseline_path}'"))?;
+        println!("gate vs {baseline_path} (tolerance {:.0}%):", GATE_TOLERANCE * 100.0);
+        for line in lines {
+            println!("  {line}");
+        }
+    }
+    Ok(report)
+}
+
+/// Compare this run's ratios against the floors a baseline names. Every
+/// baseline key must exist in `current` and stay ≥ `floor * (1 - tol)`;
+/// returns per-key report lines, or an error listing every regression.
+pub fn check_ratios(
+    baseline: &Json,
+    current: &[(String, f64)],
+    tol: f64,
+) -> anyhow::Result<Vec<String>> {
+    let floors = baseline
+        .get("ratios")
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("baseline has no 'ratios' object"))?;
+    let now: std::collections::BTreeMap<&str, f64> =
+        current.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    let mut lines = Vec::new();
+    let mut failures = Vec::new();
+    for (key, floor) in floors {
+        let floor = floor
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("baseline ratio '{key}' is not a number"))?;
+        let cur = *now
+            .get(key.as_str())
+            .ok_or_else(|| anyhow::anyhow!("baseline ratio '{key}' missing from this run"))?;
+        let ok = cur >= floor * (1.0 - tol);
+        lines.push(format!(
+            "{key:<44} {cur:.3} vs floor {floor:.3} [{}]",
+            if ok { "ok" } else { "REGRESSED" }
+        ));
+        if !ok {
+            failures.push(format!("{key}: {cur:.3} < {floor:.3} * (1 - {tol})"));
+        }
+    }
+    anyhow::ensure!(
+        failures.is_empty(),
+        "micro-bench ratios regressed >{:.0}%:\n  {}",
+        tol * 100.0,
+        failures.join("\n  ")
+    );
+    Ok(lines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baseline(pairs: &[(&str, f64)]) -> Json {
+        Json::obj(vec![(
+            "ratios",
+            Json::Obj(pairs.iter().map(|(k, v)| (k.to_string(), Json::num(*v))).collect()),
+        )])
+    }
+
+    /// The gate passes ratios at or slightly below their floors (within
+    /// tolerance), fails a real regression naming the key, and rejects
+    /// baselines referencing ratios this run never produced.
+    #[test]
+    fn gate_applies_tolerance_and_names_regressions() {
+        let current = vec![
+            ("discrete_over_runs".to_string(), 1.4),
+            ("cold_over_scratch".to_string(), 0.9),
+            ("spec_fold_speedup_d64".to_string(), 1.02),
+        ];
+        // 0.9 >= 1.0 * 0.85: within the 15% band.
+        let ok = check_ratios(
+            &baseline(&[
+                ("discrete_over_runs", 1.0),
+                ("cold_over_scratch", 1.0),
+                ("spec_fold_speedup_d64", 1.0),
+            ]),
+            &current,
+            GATE_TOLERANCE,
+        )
+        .unwrap();
+        assert_eq!(ok.len(), 3);
+        assert!(ok.iter().all(|l| l.contains("[ok]")), "{ok:?}");
+        // A floor the run undercuts by >15% fails and names the key.
+        let err = check_ratios(&baseline(&[("cold_over_scratch", 1.2)]), &current, GATE_TOLERANCE)
+            .unwrap_err();
+        assert!(err.to_string().contains("cold_over_scratch"), "{err}");
+        // Unknown baseline keys are an error, not silently skipped — a
+        // renamed ratio must force a baseline update.
+        let err = check_ratios(&baseline(&[("no_such_ratio", 1.0)]), &current, GATE_TOLERANCE)
+            .unwrap_err();
+        assert!(err.to_string().contains("no_such_ratio"), "{err}");
+        // Malformed baselines fail loudly.
+        assert!(check_ratios(&Json::obj(vec![]), &current, GATE_TOLERANCE).is_err());
+    }
+}

@@ -8,9 +8,22 @@
 //!                                 cost attribution; --plan-store F warms
 //!                                 the plan-hit prior from a populated
 //!                                 manifest plan store; --shards N prices
-//!                                 head-group sharding, DESIGN.md §12)
+//!                                 head-group sharding, DESIGN.md §12;
+//!                                 --calibration F loads machine-measured
+//!                                 cost constants persisted by `calibrate`,
+//!                                 DESIGN.md §13)
+//!   calibrate   [--manifest F]    measure the scheduler's cost constants
+//!                                 (span read, discrete gather, tile fold,
+//!                                 ident-vs-dense) on this machine and
+//!                                 persist them into the runtime manifest
+//!                                 (--executor cpu|pjrt|both, --quick,
+//!                                 --show reloads + prices a 64k context)
 //!   bench <exp> [--quick]         run one experiment driver
-//!                                 (fig2|tab1|fig4|fig5|fig6|fig7|tab2|tab3|tab4|all)
+//!                                 (fig2|tab1|fig4|fig5|fig6|fig7|tab2|tab3|tab4|all,
+//!                                 plus micro — the gated micro-bench suite,
+//!                                 standalone, not part of `all`;
+//!                                 micro extras: --baseline F gates ratios
+//!                                 against a committed baseline, >15% fails)
 //!                                 fig2 extras: --pipeline (overlap ident with
 //!                                 execution), --iters N, --lengths a,b,c,
 //!                                 --executor cpu|pjrt|both (backend grid),
@@ -27,7 +40,7 @@ use anchor_attention::attention::Method;
 use anchor_attention::config::AppConfig;
 use anchor_attention::coordinator::engine::PjrtEngine;
 use anchor_attention::coordinator::request::Request;
-use anchor_attention::coordinator::scheduler::SparsityModel;
+use anchor_attention::coordinator::scheduler::{CostConstants, SparsityModel};
 use anchor_attention::coordinator::server::serve;
 use anchor_attention::experiments::{self, ExpScale};
 use anchor_attention::util::cli::Args;
@@ -38,15 +51,16 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand() {
         Some("selftest") => selftest(&args),
         Some("serve") => cmd_serve(&args),
+        Some("calibrate") => cmd_calibrate(&args),
         Some("bench") => cmd_bench(&args),
         Some("dominance") => cmd_dominance(&args),
         Some("tpu-estimate") => cmd_tpu(),
         Some("gen-trace") => cmd_gen_trace(&args),
         _ => {
             eprintln!(
-                "usage: anchor-attn <selftest|serve|bench|dominance|tpu-estimate|gen-trace> [flags]"
+                "usage: anchor-attn <selftest|serve|calibrate|bench|dominance|tpu-estimate|gen-trace> [flags]"
             );
-            eprintln!("  bench experiments: fig2 tab1 fig4 fig5 fig6 fig7 tab2 tab3 tab4 all");
+            eprintln!("  bench experiments: fig2 tab1 fig4 fig5 fig6 fig7 tab2 tab3 tab4 all micro");
             Ok(())
         }
     }
@@ -100,6 +114,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             pipelined: args.bool_or("pipeline", false)?,
             executor: ExecutorKind::default(),
             shards: 1,
+            constants: CostConstants::modeled(),
         };
     }
     // `--executor cpu|pjrt` names the plan executor backend in the
@@ -120,6 +135,39 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         if let SparsityModel::Anchor { ref mut shards, .. } = cfg.server.scheduler.sparsity {
             *shards = n;
         }
+    }
+    // `--calibration F` swaps the scheduler's modeled cost constants for
+    // the machine-measured set `anchor-attn calibrate` persisted into the
+    // runtime manifest (DESIGN.md §13). The lookup keys on the executor
+    // backend actually priced, so it runs after --executor is applied.
+    if let Some(path) = args.get("calibration") {
+        let kind = match cfg.server.scheduler.sparsity {
+            SparsityModel::Anchor { executor, .. } => executor,
+            _ => anyhow::bail!(
+                "--calibration needs the anchor scheduler (pass --anchor-sched \
+                 or set scheduler.sparsity in the config)"
+            ),
+        };
+        let c = anchor_attention::runtime::manifest::load_calibration(path, kind)?
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "manifest '{path}' holds no calibration for executor '{}' — run \
+                     `anchor-attn calibrate --manifest {path} --executor {}` first",
+                    kind.name(),
+                    kind.name()
+                )
+            })?;
+        cfg.server.scheduler.sparsity.set_constants(c);
+        println!(
+            "calibration: '{}' constants from {path} (ident {:.4}, broadcast {:.6}, \
+             span {:.2} ns/row, gather {:.2} ns/row, fold {:.3} ns/score)",
+            kind.name(),
+            c.ident_cost_frac,
+            c.plan_broadcast_frac,
+            c.span_ns_per_row,
+            c.gather_ns_per_row,
+            c.fold_ns_per_score
+        );
     }
     // Report the shard pricing actually in effect: the dense model never
     // prices shards, and a config file may set scheduler.shards
@@ -183,6 +231,109 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `calibrate` — measure the scheduler's cost constants on this machine
+/// (DESIGN.md §13) and persist them under the runtime manifest's
+/// `calibration` key; `serve --calibration F` loads them back. `--show`
+/// skips measurement and reloads the stored set through the exact loader
+/// serve uses, pricing a 64k context to prove the scheduler consumes it.
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    use anchor_attention::coordinator::calibrate::calibrate;
+    use anchor_attention::runtime::manifest::{load_calibration, save_calibration};
+    let manifest = args.get("manifest");
+    let quick = args.bool_or("quick", false)?;
+    let kinds = match args.get("executor") {
+        None => vec![ExecutorKind::default()],
+        Some("both") => vec![ExecutorKind::Cpu, ExecutorKind::Pjrt],
+        Some(s) => vec![ExecutorKind::parse(s)
+            .map_err(|_| anyhow::anyhow!("--executor expects cpu|pjrt|both, got '{s}'"))?],
+    };
+    // One anchor model per report line: what the constants do to pricing.
+    let price_64k = |constants: CostConstants| {
+        let model = SparsityModel::Anchor {
+            stripe_keep: 0.1,
+            anchor_tokens: 256,
+            plan_hit_rate: 0.5,
+            pipelined: false,
+            executor: ExecutorKind::default(),
+            shards: 1,
+            constants,
+        };
+        model.effective_context(65536)
+    };
+    if args.bool_or("show", false)? {
+        let path = manifest
+            .ok_or_else(|| anyhow::anyhow!("calibrate --show requires --manifest F"))?;
+        for kind in kinds {
+            match load_calibration(path, kind)? {
+                Some(c) => {
+                    println!(
+                        "{}: ident_cost_frac {:.4}  plan_broadcast_frac {:.6}  \
+                         span {:.2} ns/row  gather {:.2} ns/row  fold {:.3} ns/score",
+                        kind.name(),
+                        c.ident_cost_frac,
+                        c.plan_broadcast_frac,
+                        c.span_ns_per_row,
+                        c.gather_ns_per_row,
+                        c.fold_ns_per_score
+                    );
+                    println!(
+                        "    effective_context(65536): modeled {:.0} -> calibrated {:.0}",
+                        price_64k(CostConstants::modeled()),
+                        price_64k(c)
+                    );
+                }
+                None => println!("{}: no calibration stored in {path}", kind.name()),
+            }
+        }
+        return Ok(());
+    }
+    for kind in kinds {
+        println!(
+            "calibrating executor '{}' ({} mode)…",
+            kind.name(),
+            if quick { "quick" } else { "full" }
+        );
+        let cal = calibrate(kind, quick);
+        for r in &cal.rows {
+            println!("  {}", r.report_line());
+        }
+        let c = cal.constants;
+        println!(
+            "  derived: ident_cost_frac {:.4} (ident {:.3} ms / dense {:.3} ms)",
+            c.ident_cost_frac,
+            cal.ident_s * 1e3,
+            cal.dense_exec_s * 1e3
+        );
+        println!(
+            "           plan_broadcast_frac {:.6} (broadcast {:.4} ms)",
+            c.plan_broadcast_frac,
+            cal.broadcast_s * 1e3
+        );
+        println!(
+            "           span {:.2} ns/row  gather {:.2} ns/row  fold {:.3} ns/score",
+            c.span_ns_per_row, c.gather_ns_per_row, c.fold_ns_per_score
+        );
+        println!(
+            "  effective_context(65536): modeled {:.0} -> calibrated {:.0}",
+            price_64k(CostConstants::modeled()),
+            price_64k(c)
+        );
+        match manifest {
+            Some(path) => {
+                save_calibration(path, kind, &c)?;
+                let back = load_calibration(path, kind)?;
+                anyhow::ensure!(
+                    back == Some(c),
+                    "calibration did not round-trip through '{path}'"
+                );
+                println!("  persisted to {path} (calibration.executors.{})", kind.name());
+            }
+            None => println!("  (dry run — pass --manifest F to persist)"),
+        }
+    }
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let scale = ExpScale::from_quick_flag(args.bool_or("quick", false)?);
     let seed = args.u64_or("seed", 42)?;
@@ -231,24 +382,36 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         },
         shards: if shard_counts.is_empty() { vec![1] } else { shard_counts },
     };
-    let run_one = |name: &str| match name {
-        "fig2" => drop(experiments::fig2_speedup::run_with(scale, seed, &fig2_opts)),
-        "tab1" => drop(experiments::tab1_granularity::run(scale, seed)),
-        "fig4" => drop(experiments::fig4_strategies::run(scale, seed)),
-        "fig5" => drop(experiments::fig5_dominance::run(scale, seed)),
-        "fig6" => drop(experiments::fig6_tradeoffs::run(scale, seed)),
-        "fig7" => drop(experiments::fig7_needle::run(scale, seed)),
-        "tab2" => drop(experiments::tab2_longbench::run(scale, seed)),
-        "tab3" => drop(experiments::tab3_ruler::run(scale, seed)),
-        "tab4" => drop(experiments::tab4_ablation::run(scale, seed)),
-        other => eprintln!("unknown experiment '{other}'"),
+    // micro-only knob: `--baseline F` gates the suite's dimensionless
+    // ratios against a committed baseline — a >15% regression on any
+    // gated ratio is an error (nonzero exit; the CI raw-speed gate).
+    let micro_opts = experiments::micro::MicroOptions {
+        baseline: args.get("baseline").map(|s| s.to_string()),
+    };
+    let run_one = |name: &str| -> anyhow::Result<()> {
+        match name {
+            "fig2" => drop(experiments::fig2_speedup::run_with(scale, seed, &fig2_opts)),
+            "tab1" => drop(experiments::tab1_granularity::run(scale, seed)),
+            "fig4" => drop(experiments::fig4_strategies::run(scale, seed)),
+            "fig5" => drop(experiments::fig5_dominance::run(scale, seed)),
+            "fig6" => drop(experiments::fig6_tradeoffs::run(scale, seed)),
+            "fig7" => drop(experiments::fig7_needle::run(scale, seed)),
+            "tab2" => drop(experiments::tab2_longbench::run(scale, seed)),
+            "tab3" => drop(experiments::tab3_ruler::run(scale, seed)),
+            "tab4" => drop(experiments::tab4_ablation::run(scale, seed)),
+            // Standalone: the micro suite times executor primitives, not a
+            // paper figure, so `all` (the paper sweep) does not include it.
+            "micro" => drop(experiments::micro::run_with(scale, seed, &micro_opts)?),
+            other => eprintln!("unknown experiment '{other}'"),
+        }
+        Ok(())
     };
     if which == "all" {
         for name in ["fig2", "tab1", "fig4", "fig5", "fig6", "fig7", "tab2", "tab3", "tab4"] {
-            run_one(name);
+            run_one(name)?;
         }
     } else {
-        run_one(which);
+        run_one(which)?;
     }
     Ok(())
 }

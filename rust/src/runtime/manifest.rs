@@ -12,8 +12,10 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::attention::exec::ExecutorKind;
 use crate::attention::plan::{GroupPlan, PlanKey, SparsePlan};
 use crate::attention::{CostTally, TileConfig};
+use crate::coordinator::scheduler::CostConstants;
 use crate::util::json::Json;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -722,6 +724,134 @@ pub fn plan_from_json(j: &Json) -> Result<(SparsePlan, usize)> {
     Ok((SparsePlan::new(method, n, d, tile, step, groups, ident_cost), d))
 }
 
+// ---------------------------------------------------------------------------
+// Calibration: measured cost constants in the runtime manifest
+// ---------------------------------------------------------------------------
+
+/// `calibration` schema version; bump on incompatible layout changes.
+/// Entries written by a different version are rejected, never
+/// reinterpreted.
+pub const CALIBRATION_VERSION: usize = 1;
+
+fn constants_to_json(c: &CostConstants) -> Json {
+    Json::obj(vec![
+        ("ident_cost_frac", Json::num(c.ident_cost_frac)),
+        ("plan_broadcast_frac", Json::num(c.plan_broadcast_frac)),
+        ("span_ns_per_row", Json::num(c.span_ns_per_row)),
+        ("gather_ns_per_row", Json::num(c.gather_ns_per_row)),
+        ("fold_ns_per_score", Json::num(c.fold_ns_per_score)),
+    ])
+}
+
+fn constants_from_json(j: &Json) -> Result<CostConstants> {
+    let field = |k: &str| -> Result<f64> {
+        let x = j.get(k).as_f64().ok_or_else(|| anyhow!("calibration missing {k}"))?;
+        if !x.is_finite() || x < 0.0 {
+            return Err(anyhow!("calibration {k} must be a finite non-negative number"));
+        }
+        Ok(x)
+    };
+    Ok(CostConstants {
+        ident_cost_frac: field("ident_cost_frac")?,
+        plan_broadcast_frac: field("plan_broadcast_frac")?,
+        span_ns_per_row: field("span_ns_per_row")?,
+        gather_ns_per_row: field("gather_ns_per_row")?,
+        fold_ns_per_score: field("fold_ns_per_score")?,
+    })
+}
+
+/// Persist one executor's measured [`CostConstants`] under the manifest's
+/// `calibration` key, preserving every other key — including other
+/// executors' entries — with the plan store's write-then-rename
+/// discipline. The file must already exist and hold a JSON object:
+/// calibration rides in a runtime manifest, it never creates one.
+pub fn save_calibration(
+    path: impl AsRef<Path>,
+    kind: ExecutorKind,
+    c: &CostConstants,
+) -> Result<()> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        anyhow!(
+            "calibration {}: persistence path has no runtime manifest ({e}); \
+             constants persist into an existing manifest JSON, e.g. artifacts/manifest.json",
+            path.display()
+        )
+    })?;
+    let mut doc = Json::parse(&text)
+        .map_err(|e| anyhow!("calibration {}: manifest is not valid JSON: {e}", path.display()))?;
+    if doc.as_obj().is_none() {
+        return Err(anyhow!("calibration {}: manifest must be a JSON object", path.display()));
+    }
+    // Merge into the existing executors map so calibrating one backend
+    // never drops the other's constants.
+    let mut executors: Vec<(String, Json)> = Vec::new();
+    let existing = doc.get("calibration");
+    if !existing.is_null() && existing.get("version").as_usize() == Some(CALIBRATION_VERSION) {
+        if let Some(map) = existing.get("executors").as_obj() {
+            for (k, v) in map {
+                if k != kind.name() {
+                    executors.push((k.clone(), v.clone()));
+                }
+            }
+        }
+    }
+    executors.push((kind.name().to_string(), constants_to_json(c)));
+    let cal = Json::obj(vec![
+        ("version", Json::num(CALIBRATION_VERSION as f64)),
+        ("executors", Json::Obj(executors.into_iter().collect())),
+    ]);
+    if let Json::Obj(m) = &mut doc {
+        m.insert("calibration".to_string(), cal);
+    }
+    let mut out = doc.to_string_pretty();
+    out.push('\n');
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(format!(".cal.tmp.{}", std::process::id()));
+    let tmp = PathBuf::from(tmp_name);
+    std::fs::write(&tmp, &out)
+        .with_context(|| format!("writing calibration {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("committing calibration {}", path.display()))?;
+    Ok(())
+}
+
+/// Load the constants calibrated for `kind`, if the manifest carries any.
+/// `Ok(None)` means "never calibrated" (no `calibration` key, or no entry
+/// for this executor); a malformed or version-mismatched key is an `Err`,
+/// never silently the modeled defaults.
+pub fn load_calibration(
+    path: impl AsRef<Path>,
+    kind: ExecutorKind,
+) -> Result<Option<CostConstants>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("calibration {}: {e}", path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow!("calibration {}: manifest is not valid JSON: {e}", path.display()))?;
+    let cal = doc.get("calibration");
+    if cal.is_null() {
+        return Ok(None);
+    }
+    let version = cal
+        .get("version")
+        .as_usize()
+        .ok_or_else(|| anyhow!("calibration {}: missing version", path.display()))?;
+    if version != CALIBRATION_VERSION {
+        return Err(anyhow!(
+            "calibration {}: unsupported version {version} (expected {CALIBRATION_VERSION})",
+            path.display()
+        ));
+    }
+    let entry = cal.get("executors").get(kind.name());
+    if entry.is_null() {
+        return Ok(None);
+    }
+    constants_from_json(entry)
+        .with_context(|| format!("calibration {} executor {}", path.display(), kind.name()))
+        .map(Some)
+}
+
 fn entry_to_json(key: &PlanStoreKey, d: usize, plan: &SparsePlan) -> Json {
     Json::obj(vec![
         ("model", Json::str(&key.model)),
@@ -913,6 +1043,53 @@ mod tests {
 
     fn key(model: &str, group: u32, n: usize) -> PlanStoreKey {
         PlanStoreKey { model: model.into(), layer: 0, head_group: group, n }
+    }
+
+    /// Calibration constants round-trip per executor through the manifest:
+    /// saving one backend preserves the other's entry and every unrelated
+    /// manifest key, and corruption is an error, never silent defaults.
+    #[test]
+    fn calibration_round_trips_per_executor_and_preserves_keys() {
+        let path = tmp_manifest("calibration", "{\"other_key\": 7}\n");
+        assert_eq!(load_calibration(&path, ExecutorKind::Cpu).unwrap(), None);
+
+        let cpu = CostConstants {
+            ident_cost_frac: 0.2,
+            plan_broadcast_frac: 0.003,
+            span_ns_per_row: 1.5,
+            gather_ns_per_row: 6.25,
+            fold_ns_per_score: 0.75,
+        };
+        let pjrt = CostConstants { ident_cost_frac: 0.3, ..cpu };
+        save_calibration(&path, ExecutorKind::Cpu, &cpu).unwrap();
+        save_calibration(&path, ExecutorKind::Pjrt, &pjrt).unwrap();
+        assert_eq!(load_calibration(&path, ExecutorKind::Cpu).unwrap(), Some(cpu));
+        assert_eq!(load_calibration(&path, ExecutorKind::Pjrt).unwrap(), Some(pjrt));
+
+        // Re-saving one backend keeps the other and the unrelated keys.
+        let cpu2 = CostConstants { fold_ns_per_score: 0.5, ..cpu };
+        save_calibration(&path, ExecutorKind::Cpu, &cpu2).unwrap();
+        assert_eq!(load_calibration(&path, ExecutorKind::Cpu).unwrap(), Some(cpu2));
+        assert_eq!(load_calibration(&path, ExecutorKind::Pjrt).unwrap(), Some(pjrt));
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("other_key").as_usize(), Some(7));
+        assert_eq!(doc.get("calibration").get("version").as_usize(), Some(1));
+
+        // Corrupted entries and version drift are rejected loudly.
+        let good = std::fs::read_to_string(&path).unwrap();
+        for (from, to) in [
+            ("\"version\": 1", "\"version\": 99"),
+            ("\"ident_cost_frac\": 0.2", "\"ident_cost_frac\": \"fast\""),
+        ] {
+            assert!(good.contains(from), "fixture drifted: {from}");
+            std::fs::write(&path, good.replace(from, to)).unwrap();
+            assert!(load_calibration(&path, ExecutorKind::Cpu).is_err(), "{from} -> {to}");
+        }
+        // Saving never creates a manifest from nothing.
+        let missing = std::env::temp_dir().join("anchor_manifest_cal_missing.json");
+        let _ = std::fs::remove_file(&missing);
+        assert!(save_calibration(&missing, ExecutorKind::Cpu, &cpu).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

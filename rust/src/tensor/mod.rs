@@ -142,7 +142,22 @@ pub fn matmul_nt(a: &Mat, b: &Mat, c: &mut Mat) {
 }
 
 /// Scaled variant: `C = (A · Bᵀ) * scale` — fuses the 1/√d of attention.
+/// Dispatches to a const-width kernel for the attention head dims the
+/// engine actually runs (d ∈ {64, 128}) so the inner loops unroll with
+/// compile-time trip counts and auto-vectorize; the generic path is the
+/// fallback and is bitwise-equal (identical accumulator order, only the
+/// loop bound becomes a constant).
 pub fn matmul_nt_scaled(a: &Mat, b: &Mat, scale: f32, c: &mut Mat) {
+    match a.cols {
+        64 => matmul_nt_scaled_k::<64>(a, b, scale, c),
+        128 => matmul_nt_scaled_k::<128>(a, b, scale, c),
+        _ => matmul_nt_scaled_generic(a, b, scale, c),
+    }
+}
+
+/// Generic-width `C = (A · Bᵀ) * scale` — the reference the specialized
+/// kernels are tested bitwise-equal against.
+pub fn matmul_nt_scaled_generic(a: &Mat, b: &Mat, scale: f32, c: &mut Mat) {
     assert_eq!(a.cols, b.cols, "inner dims");
     assert_eq!((c.rows, c.cols), (a.rows, b.rows), "output shape");
     let k = a.cols;
@@ -166,8 +181,48 @@ pub fn matmul_nt_scaled(a: &Mat, b: &Mat, scale: f32, c: &mut Mat) {
     }
 }
 
-/// `C += A · B` with `A: [m, k]`, `B: [k, n]`, `C: [m, n]`.
+/// Const-width `C = (A · Bᵀ) * scale`: same walk as the generic kernel
+/// with the inner dim pinned to `K`, so `dot`/`dot4` see constant trip
+/// counts (and, with K % 4 == 0, empty tails).
+fn matmul_nt_scaled_k<const K: usize>(a: &Mat, b: &Mat, scale: f32, c: &mut Mat) {
+    assert_eq!(a.cols, K, "inner dims");
+    assert_eq!(b.cols, K, "inner dims");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "output shape");
+    for i in 0..a.rows {
+        let arow = &a.row(i)[..K];
+        let crow = c.row_mut(i);
+        let mut j = 0;
+        while j + 4 <= b.rows {
+            let (d0, d1, d2, d3) =
+                dot4_k::<K>(arow, b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+            crow[j] = d0 * scale;
+            crow[j + 1] = d1 * scale;
+            crow[j + 2] = d2 * scale;
+            crow[j + 3] = d3 * scale;
+            j += 4;
+        }
+        while j < b.rows {
+            crow[j] = dot_k::<K>(arow, b.row(j)) * scale;
+            j += 1;
+        }
+    }
+}
+
+/// `C += A · B` with `A: [m, k]`, `B: [k, n]`, `C: [m, n]`. Dispatches on
+/// the row width `n` (the attention head dim in the `P · V` accumulate)
+/// to a const-width kernel for d ∈ {64, 128}; generic fallback is
+/// bitwise-equal.
 pub fn matmul_nn_acc(a: &Mat, b: &Mat, c: &mut Mat) {
+    match b.cols {
+        64 => matmul_nn_acc_k::<64>(a, b, c),
+        128 => matmul_nn_acc_k::<128>(a, b, c),
+        _ => matmul_nn_acc_generic(a, b, c),
+    }
+}
+
+/// Generic-width `C += A · B` — the reference the specialized kernels are
+/// tested bitwise-equal against.
+pub fn matmul_nn_acc_generic(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows, "inner dims");
     assert_eq!((c.rows, c.cols), (a.rows, b.cols), "output shape");
     let n = b.cols;
@@ -180,6 +235,25 @@ pub fn matmul_nn_acc(a: &Mat, b: &Mat, c: &mut Mat) {
             }
             let brow = &b.data[kk * n..(kk + 1) * n];
             axpy(av, brow, crow);
+        }
+    }
+}
+
+/// Const-width `C += A · B`: the `axpy` rows are pinned to `N` elements,
+/// so with N % 8 == 0 the 8-wide unroll has no tail and a constant count.
+fn matmul_nn_acc_k<const N: usize>(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "inner dims");
+    assert_eq!(b.cols, N, "row width");
+    assert_eq!((c.rows, c.cols), (a.rows, N), "output shape");
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * N..(i + 1) * N];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // sparse P rows skip work
+            }
+            let brow = &b.data[kk * N..(kk + 1) * N];
+            axpy_k::<N>(av, brow, crow);
         }
     }
 }
@@ -246,6 +320,81 @@ fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32], k: usize) -> 
         s3 += av * b3[i];
     }
     (s0, s1, s2, s3)
+}
+
+// Const-width forms of the three primitives above. Each body is the same
+// accumulator pattern with the loop bound a compile-time constant and the
+// operand slices pinned to `[..K]`, which is what lets LLVM drop the
+// bounds checks and emit full-width vector code — the arithmetic (values,
+// order, associativity) is unchanged, so results are bitwise-equal to the
+// generic forms.
+
+/// `dot` with a const trip count (K % 4 == 0 ⇒ no scalar tail).
+#[inline]
+fn dot_k<const K: usize>(a: &[f32], b: &[f32]) -> f32 {
+    let a = &a[..K];
+    let b = &b[..K];
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = K / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..K {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `dot4` with a const trip count.
+#[inline]
+fn dot4_k<const K: usize>(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> (f32, f32, f32, f32) {
+    let a = &a[..K];
+    let b0 = &b0[..K];
+    let b1 = &b1[..K];
+    let b2 = &b2[..K];
+    let b3 = &b3[..K];
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    for i in 0..K {
+        let av = a[i];
+        s0 += av * b0[i];
+        s1 += av * b1[i];
+        s2 += av * b2[i];
+        s3 += av * b3[i];
+    }
+    (s0, s1, s2, s3)
+}
+
+/// `axpy` with a const element count (N % 8 == 0 ⇒ no tail).
+#[inline]
+fn axpy_k<const N: usize>(a: f32, x: &[f32], y: &mut [f32]) {
+    let x = &x[..N];
+    let y = &mut y[..N];
+    let chunks = N / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        y[i] += a * x[i];
+        y[i + 1] += a * x[i + 1];
+        y[i + 2] += a * x[i + 2];
+        y[i + 3] += a * x[i + 3];
+        y[i + 4] += a * x[i + 4];
+        y[i + 5] += a * x[i + 5];
+        y[i + 6] += a * x[i + 6];
+        y[i + 7] += a * x[i + 7];
+    }
+    for i in chunks * 8..N {
+        y[i] += a * x[i];
+    }
 }
 
 #[cfg(test)]
@@ -323,6 +472,39 @@ mod tests {
         let mut c = Mat::from_vec(1, 1, vec![10.0]);
         matmul_nn_acc(&a, &b, &mut c);
         assert_eq!(c.at(0, 0), 16.0);
+    }
+
+    /// The d-specialized kernels must be bitwise-equal to the generic
+    /// walk — same accumulator order, only constant trip counts.
+    #[test]
+    fn specialized_matmuls_bitwise_equal_generic_at_64_and_128() {
+        let mut rng = Pcg64::seeded(21);
+        for d in [64usize, 128] {
+            // Ragged row counts exercise the dot4 remainder path.
+            for (m, n) in [(1, 1), (5, 7), (16, 16), (13, 19)] {
+                let a = rand_mat(&mut rng, m, d);
+                let b = rand_mat(&mut rng, n, d);
+                let mut c_spec = Mat::zeros(m, n);
+                let mut c_gen = Mat::zeros(m, n);
+                matmul_nt_scaled(&a, &b, 0.125, &mut c_spec);
+                matmul_nt_scaled_generic(&a, &b, 0.125, &mut c_gen);
+                assert_eq!(c_spec.data, c_gen.data, "nt d={d} m={m} n={n}");
+
+                // P · V accumulate with some exact zeros (the sparse skip).
+                let mut p = rand_mat(&mut rng, m, n);
+                for (i, x) in p.data.iter_mut().enumerate() {
+                    if i % 3 == 0 {
+                        *x = 0.0;
+                    }
+                }
+                let v = rand_mat(&mut rng, n, d);
+                let mut acc_spec = rand_mat(&mut rng, m, d);
+                let mut acc_gen = acc_spec.clone();
+                matmul_nn_acc(&p, &v, &mut acc_spec);
+                matmul_nn_acc_generic(&p, &v, &mut acc_gen);
+                assert_eq!(acc_spec.data, acc_gen.data, "nn d={d} m={m} n={n}");
+            }
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@ use anchor_attention::attention::{Method, TileConfig};
 use anchor_attention::coordinator::batcher::EngineBatch;
 use anchor_attention::coordinator::engine::{MockEngine, StepExecutor, StepOutcome};
 use anchor_attention::coordinator::request::Request;
-use anchor_attention::coordinator::scheduler::SparsityModel;
+use anchor_attention::coordinator::scheduler::{CostConstants, SparsityModel};
 use anchor_attention::coordinator::server::{serve, ServerConfig};
 use anchor_attention::experiments::common::{evaluate, gqa_batch, gqa_keys, paper_methods};
 use anchor_attention::workload::qkv::{generate, generate_with_needle};
@@ -149,6 +149,7 @@ fn serve_loop_feeds_live_hit_rate_into_the_scheduler_ewma() {
         pipelined: false,
         executor: ExecutorKind::Cpu,
         shards: 2,
+        constants: CostConstants::modeled(),
     };
     let requests: Vec<Request> =
         (0..4).map(|i| Request::new(i, vec![1; 600], 3, 0.0)).collect();
@@ -206,6 +207,7 @@ fn anchor_scheduler_no_worse_than_dense() {
         pipelined: false,
         executor: ExecutorKind::Cpu,
         shards: 1,
+        constants: CostConstants::modeled(),
     });
     let piped = run(SparsityModel::Anchor {
         stripe_keep: 0.08,
@@ -214,6 +216,7 @@ fn anchor_scheduler_no_worse_than_dense() {
         pipelined: true,
         executor: ExecutorKind::Cpu,
         shards: 1,
+        constants: CostConstants::modeled(),
     });
     assert!(
         anchor.iterations <= dense.iterations,

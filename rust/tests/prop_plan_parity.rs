@@ -22,11 +22,11 @@
 
 use anchor_attention::attention::anchor::AnchorConfig;
 use anchor_attention::attention::exec::{
-    CpuTileExecutor, Executor, ExecutorKind, PjrtGatherExecutor,
+    CpuTileExecutor, Executor, ExecutorKind, LoweringMode, PjrtGatherExecutor,
 };
 use anchor_attention::coordinator::kv_cache::{PagedExecutor, PagedKvStore};
 use anchor_attention::attention::pipeline::{run_planner_batch_pipelined, PlanPipeline};
-use anchor_attention::attention::plan::{PlanCache, PlanKey, Planner, SparsePlan};
+use anchor_attention::attention::plan::{PlanKey, Planner, SparsePlan};
 use anchor_attention::attention::session::AttentionSession;
 use anchor_attention::attention::baselines::block_topk::BlockTopKConfig;
 use anchor_attention::attention::baselines::flexprefill::FlexPrefillConfig;
@@ -511,13 +511,88 @@ fn prop_plan_coverage_equals_executed_coverage() {
     });
 }
 
-/// The redesign's acceptance bar: every method runs through
-/// `AttentionSession` with output bitwise-identical to the pre-redesign
-/// entry points, across sequential/pipelined × cpu/pjrt, and the session's
-/// per-head output matches the paged-KV route.
+/// Run-length span lowering is bitwise-equal to plain per-coordinate
+/// lowering for every planner, across every execution route: direct
+/// cpu/pjrt executors, sequential and pipelined sessions, flat and paged
+/// K/V. Runs only change the read width of the K'/V' assembly, never the
+/// folded values.
 #[test]
-#[allow(deprecated)]
-fn session_matches_legacy_entry_points_for_all_six_methods() {
+fn prop_run_lowering_matches_discrete_everywhere() {
+    let cfg = Config::heavy(16, 0x57121BE5);
+    check(&cfg, gen_case, shrink_case, |c| {
+        let mut rng = Pcg64::seeded(c.seed);
+        let h = rand_head(&mut rng, c.n, c.d);
+        let m = method_for(c);
+        let plan = m.plan(&h);
+
+        let discrete =
+            CpuTileExecutor { lowering: LoweringMode::Discrete, ..Default::default() };
+        let runs = CpuTileExecutor::default();
+        let reference = discrete.execute(&h, &plan);
+        let fast = runs.execute(&h, &plan);
+        ensure(
+            reference.out.data == fast.out.data,
+            format!("{}: runs differ from discrete (flat cpu)", m.name()),
+        )?;
+        ensure(
+            reference.cost == fast.cost,
+            format!("{}: cost differs between lowering modes", m.name()),
+        )?;
+
+        let pjrt = PjrtGatherExecutor::new().execute(&h, &plan);
+        ensure(
+            reference.out.data == pjrt.out.data,
+            format!("{}: pjrt differs from the discrete reference", m.name()),
+        )?;
+
+        // Paged route: both lowering modes over paged memory.
+        let page_tokens = 16;
+        let n_pages = c.n.div_ceil(page_tokens);
+        let mut store = PagedKvStore::new(n_pages, page_tokens, c.d);
+        let pages: Vec<u32> = (0..n_pages as u32).rev().collect();
+        for pos in 0..c.n {
+            store
+                .write(&pages, pos, h.k.row(pos), h.v.row(pos))
+                .map_err(|e| e.to_string())?;
+        }
+        for inner in [&runs, &discrete] {
+            let paged = PagedExecutor::new(&store, &pages, inner)
+                .try_execute(&h.q, &plan)
+                .map_err(|e| e.to_string())?;
+            ensure(
+                reference.out.data == paged.out.data,
+                format!("{}: paged route differs from the discrete reference", m.name()),
+            )?;
+        }
+
+        // Session dispatch (runs lowering internally): sequential and
+        // pipelined on both backends.
+        for kind in [ExecutorKind::Cpu, ExecutorKind::Pjrt] {
+            for pipelined in [false, true] {
+                let s = uncached_session(&m, kind, pipelined)
+                    .run(&h)
+                    .map_err(|e| e.to_string())?;
+                ensure(
+                    reference.out.data == s.outputs[0].out.data,
+                    format!(
+                        "{} ({}, pipelined={pipelined}): session differs from the \
+                         discrete reference",
+                        m.name(),
+                        kind.name()
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The redesign's acceptance bar, kept after the shims' removal: every
+/// session path — sequential/pipelined × cpu/pjrt, uncached and cached —
+/// is bitwise-identical to the sequential CPU reference for every method,
+/// and the per-head output matches the paged-KV route.
+#[test]
+fn session_paths_agree_for_all_six_methods() {
     let mut rng = Pcg64::seeded(0x5E55);
     let heads: Vec<HeadInput> = (0..4).map(|_| rand_head(&mut rng, 128, 8)).collect();
     let batch = BatchInput::new(heads.clone());
@@ -531,18 +606,20 @@ fn session_matches_legacy_entry_points_for_all_six_methods() {
         let c = ParityCase { seed: 9, n: 128, d: 8, method_idx, theta: 3.0, step: 2 };
         let m = method_for(&c);
 
-        // Per-head: legacy fused entry vs session, plus the paged route.
-        let legacy_single = m.run(&heads[0]);
+        // Per-head reference: the sequential CPU session, compared across
+        // backends and against the paged route.
+        let ref_single =
+            uncached_session(&m, ExecutorKind::Cpu, false).run(&heads[0]).unwrap();
         for kind in [ExecutorKind::Cpu, ExecutorKind::Pjrt] {
             let s = uncached_session(&m, kind, false).run(&heads[0]).unwrap();
             assert_eq!(
-                legacy_single.out.data,
+                ref_single.outputs[0].out.data,
                 s.outputs[0].out.data,
-                "{} ({}): session.run differs from legacy run",
+                "{} ({}): session.run differs from the CPU reference",
                 m.name(),
                 kind.name()
             );
-            assert_eq!(legacy_single.cost, s.outputs[0].cost, "{}", m.name());
+            assert_eq!(ref_single.outputs[0].cost, s.outputs[0].cost, "{}", m.name());
         }
         let head_plan = m.plan(&heads[0]);
         let page_tokens = 16;
@@ -557,20 +634,28 @@ fn session_matches_legacy_entry_points_for_all_six_methods() {
             .try_execute(&heads[0].q, &head_plan)
             .unwrap();
         assert_eq!(
-            legacy_single.out.data, paged.out.data,
-            "{}: paged route differs from legacy run",
+            ref_single.outputs[0].out.data,
+            paged.out.data,
+            "{}: paged route differs from the CPU reference",
             m.name()
         );
 
-        // Batched: legacy uncached/cached/pipelined vs session dispatch.
-        let legacy_batch = m.run_batch(&batch);
-        let cache = PlanCache::new();
-        let legacy_cached = m.run_batch_cached(&batch, &cache, &keys);
-        let legacy_piped = m.run_batch_pipelined(&batch, &PlanPipeline::default()).unwrap();
+        // Batched: every dispatch variant vs the sequential CPU batch.
+        let ref_batch =
+            uncached_session(&m, ExecutorKind::Cpu, false).run_batch(&batch).unwrap();
+        let mut ref_cached_session =
+            m.session().keys(keys.clone()).executor(ExecutorKind::Cpu).build().unwrap();
+        let ref_cached = ref_cached_session.run_batch(&batch).unwrap();
+        assert_eq!(
+            (ref_cached.cache_hits, ref_cached.cache_misses),
+            (2, 2),
+            "{}: two distinct keys over four heads",
+            m.name()
+        );
         for kind in [ExecutorKind::Cpu, ExecutorKind::Pjrt] {
             for pipelined in [false, true] {
                 let s = uncached_session(&m, kind, pipelined).run_batch(&batch).unwrap();
-                for (h, a) in legacy_batch.outputs.iter().enumerate() {
+                for (h, a) in ref_batch.outputs.iter().enumerate() {
                     assert_eq!(
                         a.out.data,
                         s.outputs[h].out.data,
@@ -584,23 +669,16 @@ fn session_matches_legacy_entry_points_for_all_six_methods() {
             let mut cached = m.session().keys(keys.clone()).executor(kind).build().unwrap();
             let s = cached.run_batch(&batch).unwrap();
             assert_eq!(
-                (legacy_cached.cache_hits, legacy_cached.cache_misses),
+                (ref_cached.cache_hits, ref_cached.cache_misses),
                 (s.cache_hits, s.cache_misses),
                 "{} ({}): cached accounting differs",
                 m.name(),
                 kind.name()
             );
-            for (h, a) in legacy_cached.outputs.iter().enumerate() {
+            for (h, a) in ref_cached.outputs.iter().enumerate() {
                 assert_eq!(a.out.data, s.outputs[h].out.data, "{} head {h}", m.name());
                 assert_eq!(a.cost, s.outputs[h].cost, "{} head {h}", m.name());
             }
-        }
-        for (h, a) in legacy_batch.outputs.iter().enumerate() {
-            assert_eq!(
-                a.out.data, legacy_piped.batch.outputs[h].out.data,
-                "{} head {h}: legacy pipelined shim differs",
-                m.name()
-            );
         }
     }
 }
