@@ -98,6 +98,37 @@ impl KeyPolicy {
     }
 }
 
+/// How a sharded session reaches its shard workers (DESIGN.md §14):
+/// in-process threads (the default), or spawned worker processes behind
+/// the coordinate-only wire protocol ([`crate::wire`]). Output is
+/// bitwise-identical either way — this is a deployment knob, not a
+/// semantic one.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SessionTransport {
+    #[default]
+    Threads,
+    /// One child worker process per shard (`anchor-attn worker`),
+    /// dispatched over Unix domain sockets.
+    Process,
+}
+
+impl SessionTransport {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "threads" => Ok(SessionTransport::Threads),
+            "process" => Ok(SessionTransport::Process),
+            other => Err(anyhow!("unknown transport '{other}' (expected threads|process)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SessionTransport::Threads => "threads",
+            SessionTransport::Process => "process",
+        }
+    }
+}
+
 /// Declarative session settings — the config file's `"session"` block and
 /// the CLI flags behind it. [`SessionConfig::builder`] turns them into a
 /// [`SessionBuilder`] for a concrete method.
@@ -118,6 +149,10 @@ pub struct SessionConfig {
     /// Optional cap on persisted plans (`"store_max_entries"`): the plan
     /// store evicts LRU-ish past it, loudly.
     pub store_max_entries: Option<usize>,
+    /// Shard-worker transport (`"transport"` / `--transport`, DESIGN.md
+    /// §14): threads in-process, or spawned worker processes over the
+    /// wire.
+    pub transport: SessionTransport,
 }
 
 impl Default for SessionConfig {
@@ -130,6 +165,7 @@ impl Default for SessionConfig {
             model: "default".to_string(),
             shards: 1,
             store_max_entries: None,
+            transport: SessionTransport::Threads,
         }
     }
 }
@@ -156,7 +192,8 @@ impl SessionConfig {
     }
 
     /// A sharded-session builder for `method` with this config applied,
-    /// including the `shards` count (DESIGN.md §12).
+    /// including the `shards` count (DESIGN.md §12) and the worker
+    /// transport (DESIGN.md §14).
     pub fn sharded_builder(
         &self,
         method: Method,
@@ -165,6 +202,9 @@ impl SessionConfig {
             .executor(self.executor)
             .pipelined(self.pipelined)
             .model(&self.model);
+        if self.transport == SessionTransport::Process {
+            b = b.remote(crate::wire::RemoteSpec::Spawn { program: None });
+        }
         if !self.cache {
             b = b.no_cache();
         }
@@ -1032,6 +1072,7 @@ mod tests {
             model: "m7".to_string(),
             shards: 1,
             store_max_entries: None,
+            transport: SessionTransport::Threads,
         };
         let session = cfg.builder(anchor_method()).build().unwrap();
         assert_eq!(session.executor_kind(), ExecutorKind::Pjrt);

@@ -13,22 +13,37 @@
 //! shard, and what shards exchange — through the cache and the store — is
 //! [`SparsePlan`] coordinates.
 //!
-//! Invariants (property-tested in `tests/prop_shard_parity.rs`):
+//! The worker seam is a transport choice (DESIGN.md §14): by default
+//! shards are in-process threads; [`ShardedSessionBuilder::remote`] swaps
+//! them for *processes* behind the coordinate-only wire protocol
+//! ([`crate::wire`]) — spawned children or pre-started TCP/UDS endpoints
+//! — without touching the partition/merge logic. The dispatch payload and
+//! the reply differ only in serialization: sub-batch Q/K/V out once, plan
+//! coordinates and output rows back.
+//!
+//! Invariants (property-tested in `tests/prop_shard_parity.rs` and, for
+//! the wire leg, `tests/wire_parity.rs`):
 //! * **Bitwise parity** — the merged [`SessionOutput`] is bitwise-equal to
 //!   the unsharded session for every planner, across shard counts
 //!   (including ones that do not divide the head count), sequential and
-//!   pipelined, on every executor backend. All heads of one `PlanKey`
-//!   land on one shard and sub-batches preserve the original head order,
-//!   so each key's plan is identified from the same head the unsharded
-//!   path would pick.
+//!   pipelined, on every executor backend, over threads and over the
+//!   wire. All heads of one `PlanKey` land on one shard and sub-batches
+//!   preserve the original head order, so each key's plan is identified
+//!   from the same head the unsharded path would pick. Floats cross the
+//!   wire as raw IEEE-754 bits and `predicted_cost`/`Coverage` are
+//!   re-derived from the decoded coordinates, so remote replies carry no
+//!   rounding.
 //! * **Accounting parity** — merged `cache_hits + cache_misses` equals the
 //!   unsharded run head count, hit/ident attribution sums across shards to
 //!   the unsharded totals, and the merged hit rate is what a serving loop
 //!   feeds into the scheduler's `plan_hit_rate` EWMA
 //!   (`SparsityModel::observe_plan_hit_rate`).
-//! * **Failure is loud** — a shard worker that errors or panics surfaces
-//!   as an `Err` naming the shard; the remaining shards are joined first,
-//!   never leaked.
+//! * **Failure is loud** — a shard worker that errors, panics, dies
+//!   mid-batch, or misses a wire deadline surfaces as an `Err` naming the
+//!   shard; the remaining shards are joined first, never leaked. Remote
+//!   shards reconnect (with backoff, respawning dead children in spawn
+//!   mode) at the *next* batch, so a subsequent batch succeeds without
+//!   caller intervention.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -46,6 +61,10 @@ use crate::attention::session::{
 use crate::attention::{AttnOutput, CostTally, Method};
 use crate::runtime::manifest::PlanStore;
 use crate::util::threadpool::panic_message;
+use crate::wire::codec::{ConfigureMsg, DispatchMsg, ReplyMsg};
+use crate::wire::transport::{
+    spawn_socket_path, Endpoint, RemoteShard, RemoteSpec, ShardEndpoint, WireTimeouts,
+};
 
 /// Builder for [`ShardedSession`] — the sharded front end to the session
 /// API; every knob mirrors [`crate::attention::session::SessionBuilder`].
@@ -59,6 +78,8 @@ pub struct ShardedSessionBuilder {
     persist: Option<PathBuf>,
     model: String,
     store_cap: Option<usize>,
+    remote: Option<RemoteSpec>,
+    timeouts: WireTimeouts,
 }
 
 impl ShardedSessionBuilder {
@@ -73,6 +94,8 @@ impl ShardedSessionBuilder {
             persist: None,
             model: "default".to_string(),
             store_cap: None,
+            remote: None,
+            timeouts: WireTimeouts::default(),
         }
     }
 
@@ -133,6 +156,23 @@ impl ShardedSessionBuilder {
         self
     }
 
+    /// Address shard workers over the wire ([`crate::wire`]) instead of
+    /// in-process threads: spawned child processes or pre-started TCP/UDS
+    /// endpoints. Connections are lazy (first `run_batch`); workers are
+    /// configured with this builder's exact method/executor/pipeline
+    /// shape, so the two transports cannot drift.
+    pub fn remote(mut self, spec: RemoteSpec) -> Self {
+        self.remote = Some(spec);
+        self
+    }
+
+    /// Per-shard connect/read deadlines and reconnect backoff for the
+    /// remote transport.
+    pub fn wire_timeouts(mut self, timeouts: WireTimeouts) -> Self {
+        self.timeouts = timeouts;
+        self
+    }
+
     /// Validate the configuration and assemble the sharded session.
     pub fn build(self) -> Result<ShardedSession> {
         if self.shards == 0 {
@@ -144,23 +184,76 @@ impl ShardedSessionBuilder {
             }
         }
         let store = open_plan_store(&self.persist, self.cache.is_some(), self.store_cap)?;
-        let mut workers = Vec::with_capacity(self.shards);
-        for _ in 0..self.shards {
-            let mut b = AttentionSession::builder(self.method.clone())
-                .executor(self.executor)
-                .shard_worker();
-            b = match &self.cache {
-                Some(c) => b.shared_cache(c.clone()),
-                None => b.no_cache(),
-            };
-            if self.pipelined {
-                b = b.pipelined(true);
+        let backend = match self.remote {
+            None => {
+                let mut workers = Vec::with_capacity(self.shards);
+                for _ in 0..self.shards {
+                    let mut b = AttentionSession::builder(self.method.clone())
+                        .executor(self.executor)
+                        .shard_worker();
+                    b = match &self.cache {
+                        Some(c) => b.shared_cache(c.clone()),
+                        None => b.no_cache(),
+                    };
+                    if self.pipelined {
+                        b = b.pipelined(true);
+                    }
+                    workers.push(b.build()?);
+                }
+                ShardBackend::Threads(workers)
             }
-            workers.push(b.build()?);
-        }
+            Some(spec) => {
+                let endpoints: Vec<Endpoint> = match spec {
+                    RemoteSpec::Spawn { program } => {
+                        let program = match program {
+                            Some(p) => p,
+                            None => std::env::current_exe()
+                                .map_err(|e| anyhow!("sharded session: current_exe: {e}"))?,
+                        };
+                        (0..self.shards)
+                            .map(|s| Endpoint::Spawn {
+                                program: program.clone(),
+                                socket: spawn_socket_path(s),
+                            })
+                            .collect()
+                    }
+                    RemoteSpec::Endpoints(eps) => {
+                        if eps.len() != self.shards {
+                            return Err(anyhow!(
+                                "sharded session: {} endpoint(s) for {} shard(s)",
+                                eps.len(),
+                                self.shards
+                            ));
+                        }
+                        eps.into_iter()
+                            .map(|ep| match ep {
+                                ShardEndpoint::Tcp(addr) => Endpoint::Tcp(addr),
+                                ShardEndpoint::Uds(path) => Endpoint::Uds(path),
+                            })
+                            .collect()
+                    }
+                };
+                let remotes: Vec<RemoteShard> = endpoints
+                    .into_iter()
+                    .enumerate()
+                    .map(|(s, ep)| {
+                        let cfg = ConfigureMsg {
+                            shard_id: s as u32,
+                            method: self.method.clone(),
+                            executor: self.executor,
+                            pipelined: self.pipelined,
+                            cache: self.cache.is_some(),
+                        };
+                        RemoteShard::new(s, ep, self.timeouts, &cfg)
+                    })
+                    .collect();
+                ShardBackend::Remote(remotes)
+            }
+        };
         Ok(ShardedSession {
             method: self.method,
-            workers,
+            shards: self.shards,
+            backend,
             cache: self.cache,
             keys: self.keys,
             store,
@@ -171,14 +264,24 @@ impl ShardedSessionBuilder {
     }
 }
 
+/// The worker transport behind a [`ShardedSession`]: in-process sessions
+/// on scoped threads, or wire-connected worker processes. Partitioning
+/// and merging are transport-independent; only dispatch differs.
+enum ShardBackend {
+    Threads(Vec<AttentionSession>),
+    Remote(Vec<RemoteShard>),
+}
+
 /// `S` shard workers behind one session-shaped front: `run_batch`
 /// partitions the batch's head groups, dispatches each shard's sub-batch
-/// on its own thread, and merges the per-shard [`SessionOutput`]s back
-/// into one (original head order, summed accounting). See the module docs
-/// for the replication story: plans, never K/V.
+/// (on its own thread, or over its own wire connection), and merges the
+/// per-shard results back into one [`SessionOutput`] (original head
+/// order, summed accounting). See the module docs for the replication
+/// story: plans, never K/V.
 pub struct ShardedSession {
     method: Method,
-    workers: Vec<AttentionSession>,
+    shards: usize,
+    backend: ShardBackend,
     cache: Option<Arc<PlanCache>>,
     keys: KeyPolicy,
     store: Option<PlanStore>,
@@ -199,10 +302,19 @@ impl ShardedSession {
 
     /// Shard worker count.
     pub fn shards(&self) -> usize {
-        self.workers.len()
+        self.shards
     }
 
-    /// Shared-cache counters (summed across shards by construction).
+    /// Whether shards are wire-connected processes (vs in-process threads).
+    pub fn is_remote(&self) -> bool {
+        matches!(self.backend, ShardBackend::Remote(_))
+    }
+
+    /// Shared-cache counters. Over threads these sum across shards by
+    /// construction; over the wire the workers keep their own per-dispatch
+    /// caches, so the authoritative hit/miss numbers are the merged
+    /// [`SessionOutput`] fields, and this reflects coordinator-side
+    /// seeding only.
     pub fn cache_stats(&self) -> Option<PlanCacheStats> {
         self.cache.as_ref().map(|c| c.stats())
     }
@@ -259,14 +371,14 @@ impl ShardedSession {
     /// Run the method on a multi-head batch across the shard workers.
     /// Output, plans, and cache/ident accounting are bitwise-identical to
     /// the unsharded [`AttentionSession::run_batch`] in every
-    /// configuration; a failed or panicked shard surfaces as an `Err`
-    /// naming it.
+    /// configuration — including over the wire; a failed, panicked, dead,
+    /// or deadline-missing shard surfaces as an `Err` naming it.
     pub fn run_batch(&mut self, batch: &BatchInput) -> Result<SessionOutput> {
         let n = batch.n();
         let d = batch.d();
         self.prepare(n, d);
         let keys = self.keys.keys_for(batch.h())?;
-        let shards = self.workers.len();
+        let shards = self.shards;
 
         // Deterministic round-robin by PlanKey: the batch's distinct keys
         // in (layer, head_group) order, key j -> shard j % S. Sorting (not
@@ -287,6 +399,27 @@ impl ShardedSession {
             head_idx[shard_of[k]].push(h);
         }
 
+        let out = match &mut self.backend {
+            ShardBackend::Threads(workers) => {
+                Self::run_threads(workers, batch, keys, head_idx)?
+            }
+            ShardBackend::Remote(remotes) => {
+                Self::run_remote(remotes, &self.cache, batch, &keys, head_idx)?
+            }
+        };
+        self.sync_store(n, d);
+        Ok(out)
+    }
+
+    /// In-process transport: shard sessions on scoped threads over the
+    /// shared cache.
+    fn run_threads(
+        workers: &mut [AttentionSession],
+        batch: &BatchInput,
+        keys: Vec<PlanKey>,
+        mut head_idx: Vec<Vec<usize>>,
+    ) -> Result<SessionOutput> {
+        let shards = workers.len();
         // Fast path: every head routed to one shard (shards == 1, or few
         // distinct keys). Run the whole batch on that worker in place —
         // no sub-batch copies, no thread spawn — so the unsharded grid
@@ -296,17 +429,15 @@ impl ShardedSession {
         let occupied: Vec<usize> = (0..shards).filter(|&s| !head_idx[s].is_empty()).collect();
         if occupied.len() == 1 {
             let s = occupied[0];
-            let worker = &mut self.workers[s];
+            let worker = &mut workers[s];
             worker.set_keys(keys);
             let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 worker.run_batch(batch)
             }));
-            let out = match run {
-                Ok(r) => r.map_err(|e| anyhow!("shard {s} failed: {e}"))?,
-                Err(e) => return Err(anyhow!("shard {s} failed: {}", panic_message(&*e))),
+            return match run {
+                Ok(r) => r.map_err(|e| anyhow!("shard {s} failed: {e}")),
+                Err(e) => Err(anyhow!("shard {s} failed: {}", panic_message(&*e))),
             };
-            self.sync_store(n, d);
-            return Ok(out);
         }
 
         // One job per non-empty shard: the shard's sub-batch plus the
@@ -324,7 +455,7 @@ impl ShardedSession {
             keys: Vec<PlanKey>,
         }
         let mut jobs: Vec<ShardJob<'_>> = Vec::new();
-        for (s, worker) in self.workers.iter_mut().enumerate() {
+        for (s, worker) in workers.iter_mut().enumerate() {
             let hs = std::mem::take(&mut head_idx[s]);
             if hs.is_empty() {
                 continue;
@@ -362,46 +493,119 @@ impl ShardedSession {
         // Merge: outputs and plans return to original head positions;
         // hit/miss/ident accounting sums; pipeline stats aggregate with
         // concurrent wall time (max) and summed stage times.
-        let mut outputs: Vec<Option<AttnOutput>> = (0..batch.h()).map(|_| None).collect();
-        let mut plans: Vec<Option<Arc<SparsePlan>>> = (0..batch.h()).map(|_| None).collect();
-        let mut cache_hits = 0u64;
-        let mut cache_misses = 0u64;
-        let mut ident_paid = CostTally::default();
-        let mut pipeline: Option<PipelineStats> = None;
+        let mut merge = Merge::new(batch.h());
         for (s, hs, r) in results {
             let out = r.map_err(|msg| anyhow!("shard {s} failed: {msg}"))?;
-            cache_hits += out.cache_hits;
-            cache_misses += out.cache_misses;
-            ident_paid.add(out.ident_cost_paid);
-            if let Some(st) = out.pipeline {
-                let agg = pipeline.get_or_insert_with(PipelineStats::default);
-                agg.ident_total_s += st.ident_total_s;
-                agg.ident_hidden_s += st.ident_hidden_s;
-                agg.exec_total_s += st.exec_total_s;
-                agg.stall_s += st.stall_s;
-                agg.wall_s = agg.wall_s.max(st.wall_s);
-                agg.items += st.items;
-            }
+            merge.accounting(
+                out.cache_hits,
+                out.cache_misses,
+                out.ident_cost_paid,
+                out.pipeline,
+            );
             for ((&h, o), p) in hs.iter().zip(out.outputs).zip(out.plans) {
-                outputs[h] = Some(o);
-                plans[h] = Some(p);
+                merge.place(h, o, p);
             }
         }
-        self.sync_store(n, d);
-        Ok(SessionOutput {
-            outputs: outputs
-                .into_iter()
-                .map(|o| o.expect("every head owned by exactly one shard"))
-                .collect(),
-            plans: plans
-                .into_iter()
-                .map(|p| p.expect("every head's plan owned by exactly one shard"))
-                .collect(),
-            cache_hits,
-            cache_misses,
-            ident_cost_paid: ident_paid,
-            pipeline,
-        })
+        Ok(merge.finish())
+    }
+
+    /// Wire transport: each occupied shard gets one Dispatch frame
+    /// (sub-batch Q/K/V + keys + cache seeds for those keys) on its own
+    /// thread; replies carry output rows and delta-encoded plan
+    /// coordinates, from which `predicted_cost` and `Coverage` are
+    /// re-derived — bitwise, because the pricing walk is pure integer
+    /// arithmetic and floats crossed as raw bits.
+    fn run_remote(
+        remotes: &mut [RemoteShard],
+        cache: &Option<Arc<PlanCache>>,
+        batch: &BatchInput,
+        keys: &[PlanKey],
+        mut head_idx: Vec<Vec<usize>>,
+    ) -> Result<SessionOutput> {
+        let snapshot: Vec<(PlanKey, Arc<SparsePlan>)> =
+            cache.as_ref().map(|c| c.snapshot()).unwrap_or_default();
+
+        struct RemoteJob<'w> {
+            shard: usize,
+            remote: &'w mut RemoteShard,
+            heads: Vec<usize>,
+            msg: DispatchMsg,
+        }
+        let mut jobs: Vec<RemoteJob<'_>> = Vec::new();
+        for (s, remote) in remotes.iter_mut().enumerate() {
+            let hs = std::mem::take(&mut head_idx[s]);
+            if hs.is_empty() {
+                continue;
+            }
+            let sub_keys: Vec<PlanKey> = hs.iter().map(|&h| keys[h]).collect();
+            // Seeds: the coordinator cache's current plans for exactly the
+            // keys this shard owns — the wire stand-in for the thread
+            // workers' shared-cache reads, and what makes the worker's
+            // hit/miss accounting land where the thread path puts it.
+            let seeds: Vec<(PlanKey, Arc<SparsePlan>)> =
+                snapshot.iter().filter(|(k, _)| sub_keys.contains(k)).cloned().collect();
+            let msg = DispatchMsg {
+                seq: 0, // assigned by the transport
+                keys: sub_keys,
+                seeds,
+                heads: hs.iter().map(|&h| batch.heads[h].clone()).collect(),
+            };
+            jobs.push(RemoteJob { shard: s, remote, heads: hs, msg });
+        }
+
+        type RemoteResult = (usize, Vec<usize>, Result<ReplyMsg, String>);
+        let mut results: Vec<RemoteResult> = Vec::with_capacity(jobs.len());
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(jobs.len());
+            for job in jobs {
+                let RemoteJob { shard, remote, heads, mut msg } = job;
+                let handle =
+                    scope.spawn(move || remote.round_trip(&mut msg).map_err(|e| e.to_string()));
+                handles.push((shard, heads, handle));
+            }
+            for (shard, heads, handle) in handles {
+                let r = match handle.join() {
+                    Ok(r) => r,
+                    Err(e) => Err(panic_message(&*e)),
+                };
+                results.push((shard, heads, r));
+            }
+        });
+
+        let mut merge = Merge::new(batch.h());
+        for (s, hs, r) in results {
+            let reply = r.map_err(|msg| anyhow!("shard {s} failed: {msg}"))?;
+            if reply.outs.len() != hs.len() {
+                return Err(anyhow!(
+                    "shard {s} failed: reply carried {} head(s) for {} dispatched",
+                    reply.outs.len(),
+                    hs.len()
+                ));
+            }
+            merge.accounting(reply.cache_hits, reply.cache_misses, reply.ident_paid, reply.pipeline);
+            for ((&h, (mat, cost)), &pi) in hs.iter().zip(reply.outs).zip(&reply.plan_of) {
+                let plan = reply.plans[pi as usize].clone();
+                if plan.n != batch.n() || mat.rows != batch.n() || mat.cols != batch.d() {
+                    return Err(anyhow!(
+                        "shard {s} failed: reply geometry {}×{} / plan n {} for a {}×{} batch",
+                        mat.rows,
+                        mat.cols,
+                        plan.n,
+                        batch.n(),
+                        batch.d()
+                    ));
+                }
+                // Warm the coordinator cache so the next batch's seeds make
+                // this key a worker-side hit (an existing entry wins — same
+                // plan by determinism).
+                if let Some(c) = cache {
+                    c.seed(keys[h], plan.clone());
+                }
+                let coverage = plan.coverage();
+                merge.place(h, AttnOutput { out: mat, coverage, cost }, plan);
+            }
+        }
+        Ok(merge.finish())
     }
 
     /// Write filed plans back to the runtime manifest (no-op when the
@@ -410,6 +614,76 @@ impl ShardedSession {
         match self.store.as_mut() {
             Some(store) => store.flush(),
             None => Ok(()),
+        }
+    }
+}
+
+/// Shared merge state for both transports: outputs/plans return to
+/// original head positions, accounting sums, pipeline stats aggregate
+/// with concurrent wall time (max) and summed stage times.
+struct Merge {
+    outputs: Vec<Option<AttnOutput>>,
+    plans: Vec<Option<Arc<SparsePlan>>>,
+    cache_hits: u64,
+    cache_misses: u64,
+    ident_paid: CostTally,
+    pipeline: Option<PipelineStats>,
+}
+
+impl Merge {
+    fn new(h: usize) -> Self {
+        Self {
+            outputs: (0..h).map(|_| None).collect(),
+            plans: (0..h).map(|_| None).collect(),
+            cache_hits: 0,
+            cache_misses: 0,
+            ident_paid: CostTally::default(),
+            pipeline: None,
+        }
+    }
+
+    fn accounting(
+        &mut self,
+        hits: u64,
+        misses: u64,
+        ident: CostTally,
+        pipeline: Option<PipelineStats>,
+    ) {
+        self.cache_hits += hits;
+        self.cache_misses += misses;
+        self.ident_paid.add(ident);
+        if let Some(st) = pipeline {
+            let agg = self.pipeline.get_or_insert_with(PipelineStats::default);
+            agg.ident_total_s += st.ident_total_s;
+            agg.ident_hidden_s += st.ident_hidden_s;
+            agg.exec_total_s += st.exec_total_s;
+            agg.stall_s += st.stall_s;
+            agg.wall_s = agg.wall_s.max(st.wall_s);
+            agg.items += st.items;
+        }
+    }
+
+    fn place(&mut self, h: usize, out: AttnOutput, plan: Arc<SparsePlan>) {
+        self.outputs[h] = Some(out);
+        self.plans[h] = Some(plan);
+    }
+
+    fn finish(self) -> SessionOutput {
+        SessionOutput {
+            outputs: self
+                .outputs
+                .into_iter()
+                .map(|o| o.expect("every head owned by exactly one shard"))
+                .collect(),
+            plans: self
+                .plans
+                .into_iter()
+                .map(|p| p.expect("every head's plan owned by exactly one shard"))
+                .collect(),
+            cache_hits: self.cache_hits,
+            cache_misses: self.cache_misses,
+            ident_cost_paid: self.ident_paid,
+            pipeline: self.pipeline,
         }
     }
 }
@@ -438,6 +712,8 @@ mod tests {
     use crate::attention::{HeadInput, TileConfig};
     use crate::tensor::Mat;
     use crate::util::rng::Pcg64;
+    use crate::wire::worker::serve_uds;
+    use std::time::Duration;
 
     fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
         let mut rng = Pcg64::seeded(seed);
@@ -578,5 +854,149 @@ mod tests {
         }
         drop(warm);
         let _ = std::fs::remove_file(&path);
+    }
+
+    // -- remote transport (in-process workers over UDS; true child
+    //    processes are exercised in tests/wire_parity.rs, where the built
+    //    binary is available) --
+
+    fn worker_sockets(tag: &str, count: usize) -> Vec<std::path::PathBuf> {
+        (0..count)
+            .map(|i| {
+                std::env::temp_dir().join(format!(
+                    "anchor_shard_test_{tag}_{}_{i}.sock",
+                    std::process::id()
+                ))
+            })
+            .collect()
+    }
+
+    fn start_workers(paths: &[std::path::PathBuf]) -> Vec<std::thread::JoinHandle<()>> {
+        paths
+            .iter()
+            .map(|p| {
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    serve_uds(&p).expect("worker serve loop");
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn remote_endpoint_count_must_match_shards() {
+        let err = anchor_method()
+            .sharded_session(2)
+            .remote(RemoteSpec::Endpoints(vec![ShardEndpoint::Tcp("127.0.0.1:1".into())]))
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("endpoint"), "{err}");
+    }
+
+    /// The full wire loop against in-process workers: outputs, costs, plan
+    /// coordinates, and hit/miss/ident accounting are bitwise-equal to the
+    /// thread transport, cold and warm.
+    #[test]
+    fn remote_uds_workers_match_thread_shards_bitwise() {
+        let sockets = worker_sockets("parity", 2);
+        let handles = start_workers(&sockets);
+        let heads: Vec<HeadInput> = (0..5).map(|i| rand_head(300 + i, 96, 8)).collect();
+        let batch = BatchInput::new(heads);
+        let keys = vec![
+            PlanKey::new(0, 0),
+            PlanKey::new(0, 0),
+            PlanKey::new(0, 1),
+            PlanKey::new(0, 1),
+            PlanKey::new(0, 2),
+        ];
+        let m = anchor_method();
+        let mut threads = m.sharded_session(2).keys(keys.clone()).build().unwrap();
+        let mut remote = m
+            .sharded_session(2)
+            .keys(keys)
+            .remote(RemoteSpec::Endpoints(
+                sockets.iter().cloned().map(ShardEndpoint::Uds).collect(),
+            ))
+            .build()
+            .unwrap();
+        assert!(remote.is_remote() && !threads.is_remote());
+        for round in 0..2 {
+            let a = threads.run_batch(&batch).unwrap();
+            let b = remote.run_batch(&batch).unwrap();
+            assert_eq!((a.cache_hits, a.cache_misses), (b.cache_hits, b.cache_misses), "round {round}");
+            assert_eq!(a.ident_cost_paid, b.ident_cost_paid, "round {round}");
+            for (x, y) in a.outputs.iter().zip(&b.outputs) {
+                assert_eq!(x.out.data, y.out.data, "round {round}: outputs must be bitwise");
+                assert_eq!(x.cost, y.cost, "round {round}");
+                assert_eq!(x.coverage.total_covered(), y.coverage.total_covered());
+            }
+            for (p, q) in a.plans.iter().zip(&b.plans) {
+                assert_eq!(**p, **q, "round {round}: plan coordinates must match");
+            }
+        }
+        // Key-group plan sharing survives the wire (per-batch Arc dedup).
+        let b = remote.run_batch(&batch).unwrap();
+        assert!(Arc::ptr_eq(&b.plans[0], &b.plans[1]));
+        drop(remote);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    /// An unreachable worker fails the batch with an error naming the
+    /// shard — the thread path's loud-failure contract, over the wire.
+    #[test]
+    fn remote_connect_timeout_names_the_shard() {
+        let missing = std::env::temp_dir().join("anchor_shard_test_never_bound.sock");
+        let _ = std::fs::remove_file(&missing);
+        let mut remote = anchor_method()
+            .sharded_session(1)
+            .remote(RemoteSpec::Endpoints(vec![ShardEndpoint::Uds(missing)]))
+            .wire_timeouts(WireTimeouts {
+                connect: Duration::from_millis(80),
+                read: Duration::from_secs(1),
+                retries: 1,
+                backoff: Duration::from_millis(10),
+            })
+            .build()
+            .unwrap();
+        let batch = BatchInput::new(vec![rand_head(400, 64, 8)]);
+        let err = remote.run_batch(&batch).unwrap_err().to_string();
+        assert!(err.contains("shard 0"), "{err}");
+        assert!(err.contains("attempt"), "{err}");
+    }
+
+    /// `no_cache` over the wire matches `no_cache` over threads: every
+    /// head re-identifies, no seeds cross.
+    #[test]
+    fn remote_no_cache_matches_threads() {
+        let sockets = worker_sockets("nocache", 2);
+        let handles = start_workers(&sockets);
+        let heads: Vec<HeadInput> = (0..3).map(|i| rand_head(500 + i, 64, 8)).collect();
+        let batch = BatchInput::new(heads);
+        let m = anchor_method();
+        let mut threads = m.sharded_session(2).no_cache().build().unwrap();
+        let mut remote = m
+            .sharded_session(2)
+            .no_cache()
+            .remote(RemoteSpec::Endpoints(
+                sockets.iter().cloned().map(ShardEndpoint::Uds).collect(),
+            ))
+            .build()
+            .unwrap();
+        let a = threads.run_batch(&batch).unwrap();
+        let b = remote.run_batch(&batch).unwrap();
+        assert_eq!((b.cache_hits, b.cache_misses), (0, 3));
+        assert_eq!((a.cache_hits, a.cache_misses), (b.cache_hits, b.cache_misses));
+        for (x, y) in a.outputs.iter().zip(&b.outputs) {
+            assert_eq!(x.out.data, y.out.data);
+            assert_eq!(x.cost, y.cost);
+        }
+        drop(remote);
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

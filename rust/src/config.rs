@@ -9,7 +9,7 @@ use anyhow::{anyhow, Result};
 
 use crate::attention::anchor::AnchorConfig;
 use crate::attention::exec::ExecutorKind;
-use crate::attention::session::SessionConfig;
+use crate::attention::session::{SessionConfig, SessionTransport};
 use crate::attention::TileConfig;
 use crate::coordinator::scheduler::{CostConstants, SchedulerConfig, SparsityModel};
 use crate::coordinator::server::ServerConfig;
@@ -119,6 +119,10 @@ impl AppConfig {
                 page_tokens: s.get("page_tokens").as_usize().unwrap_or(d.page_tokens),
                 max_seq: s.get("max_seq").as_usize().unwrap_or(d.max_seq),
                 realtime: s.get("realtime").as_bool().unwrap_or(d.realtime),
+                max_pending: match s.get("max_pending").as_usize() {
+                    Some(0) => return Err(anyhow!("server max_pending must be >= 1")),
+                    cap => cap.or(d.max_pending),
+                },
             };
         }
 
@@ -144,6 +148,10 @@ impl AppConfig {
                         return Err(anyhow!("session store_max_entries must be >= 1"))
                     }
                     cap => cap,
+                },
+                transport: match se.get("transport").as_str() {
+                    None => d.transport,
+                    Some(s) => SessionTransport::parse(s)?,
                 },
             };
         }
@@ -285,6 +293,25 @@ mod tests {
             AppConfig::parse(r#"{"session": {"store_max_entries": 0}}"#).is_err(),
             "zero store cap is rejected, not silently clamped"
         );
+    }
+
+    #[test]
+    fn session_transport_parses_and_defaults() {
+        let cfg = AppConfig::parse("{}").unwrap();
+        assert_eq!(cfg.session.transport, SessionTransport::Threads);
+        let cfg = AppConfig::parse(r#"{"session": {"transport": "process"}}"#).unwrap();
+        assert_eq!(cfg.session.transport, SessionTransport::Process);
+        // Unknown transports are rejected, not defaulted.
+        assert!(AppConfig::parse(r#"{"session": {"transport": "carrier-pigeon"}}"#).is_err());
+    }
+
+    #[test]
+    fn max_pending_parses_and_rejects_zero() {
+        let cfg = AppConfig::parse("{}").unwrap();
+        assert_eq!(cfg.server.max_pending, None, "unbounded by default");
+        let cfg = AppConfig::parse(r#"{"server": {"max_pending": 32}}"#).unwrap();
+        assert_eq!(cfg.server.max_pending, Some(32));
+        assert!(AppConfig::parse(r#"{"server": {"max_pending": 0}}"#).is_err());
     }
 
     #[test]

@@ -19,7 +19,11 @@
 //!   context, the exact shape the scheduler's chunk pricing consumes;
 //! * **plan broadcast** — cloning the plan's coordinate vectors (what
 //!   head-group shards actually exchange, DESIGN.md §12), again relative
-//!   to dense execution, giving `plan_broadcast_frac`.
+//!   to dense execution, giving `plan_broadcast_frac`. With
+//!   [`calibrate_with`]'s `wire` flag the clone proxy is replaced by a
+//!   real framed socket round-trip of the delta-encoded coordinates
+//!   (DESIGN.md §14) — encode, syscall, decode — the number
+//!   `serve --transport process` should be priced with.
 //!
 //! The derived fractions are clamped to sane ranges so a freak timer
 //! reading can never wedge the scheduler (e.g. a zero-cost ident would
@@ -83,6 +87,14 @@ fn scaled_step(n: usize, tile: TileConfig) -> usize {
 /// Measure the cost-model primitives for `kind` on this machine.
 /// `quick` trades precision for wall time (CI smoke runs).
 pub fn calibrate(kind: ExecutorKind, quick: bool) -> Calibration {
+    calibrate_with(kind, quick, false)
+}
+
+/// [`calibrate`] with an explicit broadcast methodology: `wire = true`
+/// measures the plan-broadcast constant over a real framed socket
+/// round-trip of the delta-encoded coordinates instead of the in-memory
+/// clone proxy.
+pub fn calibrate_with(kind: ExecutorKind, quick: bool, wire: bool) -> Calibration {
     let runner = if quick { BenchRunner::quick() } else { BenchRunner::default() };
     let (n, d) = workload_shape(quick);
     let tile = TileConfig::new(128, 128);
@@ -149,17 +161,44 @@ pub fn calibrate(kind: ExecutorKind, quick: bool) -> Calibration {
     });
     rows.push(dense.clone());
 
-    // Plan broadcast: cloning coordinate vectors, the only payload shard
-    // workers exchange.
+    // Plan broadcast: coordinates are the only payload shard workers
+    // exchange. The default proxy clones the coordinate vectors; the wire
+    // mode round-trips the delta-encoded frame through a real socketpair
+    // (encode + two syscalls + decode), pricing process transport.
     let anchor_plan = anchor.plan(&head);
-    let bcast = runner.run("broadcast/coord-clone", || {
-        anchor_plan
-            .groups
-            .iter()
-            .map(|g| (g.spans.clone(), g.stripes.clone()))
-            .collect::<Vec<_>>()
-            .len()
-    });
+    let bcast = if wire {
+        use crate::wire::codec::{get_plan, put_plan};
+        use crate::wire::frame::{read_frame, read_frame_opt, write_frame, Dec, Enc, FrameKind};
+        use std::os::unix::net::UnixStream;
+        let (mut here, mut there) = UnixStream::pair().expect("calibrate: socketpair");
+        let echo = std::thread::spawn(move || {
+            while let Ok(Some((kind, payload))) = read_frame_opt(&mut there) {
+                if kind != FrameKind::Ping || write_frame(&mut there, FrameKind::Pong, &payload).is_err() {
+                    break;
+                }
+            }
+        });
+        let r = runner.run("broadcast/wire-coords", || {
+            let mut e = Enc::new();
+            put_plan(&mut e, &anchor_plan, d);
+            write_frame(&mut here, FrameKind::Ping, &e.buf).expect("calibrate: wire write");
+            let (_, payload) = read_frame(&mut here).expect("calibrate: wire read");
+            let mut dec = Dec::new(&payload);
+            get_plan(&mut dec).expect("calibrate: wire decode").groups.len()
+        });
+        drop(here); // EOF stops the echo thread
+        echo.join().expect("calibrate: echo thread");
+        r
+    } else {
+        runner.run("broadcast/coord-clone", || {
+            anchor_plan
+                .groups
+                .iter()
+                .map(|g| (g.spans.clone(), g.stripes.clone()))
+                .collect::<Vec<_>>()
+                .len()
+        })
+    };
     rows.push(bcast.clone());
 
     let ident_cost_frac =
@@ -230,5 +269,26 @@ mod tests {
         let eff = m.effective_context(4096);
         assert!(eff.is_finite() && eff > 0.0 && eff <= 4096.0, "eff {eff}");
         assert_eq!(cal.rows.len(), 6);
+    }
+
+    /// The wire broadcast mode yields a measured, clamped constant from a
+    /// real framed round-trip — the `calibrate --wire` acceptance path.
+    #[test]
+    fn wire_broadcast_round_trip_is_measured() {
+        let cal = calibrate_with(ExecutorKind::Cpu, true, true);
+        let c = cal.constants;
+        assert!(c.is_measured());
+        assert!(
+            (BROADCAST_FRAC_RANGE.0..=BROADCAST_FRAC_RANGE.1).contains(&c.plan_broadcast_frac),
+            "wire broadcast frac {}",
+            c.plan_broadcast_frac
+        );
+        assert!(cal.broadcast_s.is_finite() && cal.broadcast_s > 0.0);
+        assert_eq!(cal.rows.len(), 6, "wire mode replaces the clone row, not adds one");
+        assert!(
+            cal.rows.iter().any(|r| r.name == "broadcast/wire-coords"),
+            "rows: {:?}",
+            cal.rows.iter().map(|r| r.name.clone()).collect::<Vec<_>>()
+        );
     }
 }

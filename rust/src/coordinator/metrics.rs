@@ -2,6 +2,36 @@
 
 use crate::util::stats;
 
+/// What ultimately happened to one submitted request — the per-request
+/// outcome the [`ServeReport`] carries so a front end (or its operator)
+/// can tell shed load from served load without parsing log lines.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Served to completion.
+    #[default]
+    Completed,
+    /// Rejected at validation (empty prompt, zero decode budget).
+    RejectedInvalid,
+    /// Rejected because prompt + decode budget exceeds `max_seq`.
+    RejectedOversized,
+    /// Shed by admission control (`max_pending` queue cap).
+    Overloaded,
+    /// Admitted but failed mid-serve (engine error).
+    Failed,
+}
+
+impl RequestOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestOutcome::Completed => "completed",
+            RequestOutcome::RejectedInvalid => "rejected-invalid",
+            RequestOutcome::RejectedOversized => "rejected-oversized",
+            RequestOutcome::Overloaded => "overloaded",
+            RequestOutcome::Failed => "failed",
+        }
+    }
+}
+
 /// Final record for one served request.
 #[derive(Clone, Debug)]
 pub struct RequestRecord {
@@ -13,6 +43,8 @@ pub struct RequestRecord {
     pub ttft_s: f64,
     /// End-to-end latency, from arrival.
     pub e2e_s: f64,
+    /// How the request ended (completed / rejected / shed / failed).
+    pub outcome: RequestOutcome,
 }
 
 /// Aggregate serving report (printed by `serve` / `examples/serve_trace`).
@@ -32,6 +64,11 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// Records with the given outcome.
+    pub fn outcome_count(&self, outcome: RequestOutcome) -> usize {
+        self.records.iter().filter(|r| r.outcome == outcome).count()
+    }
+
     pub fn total_prompt_tokens(&self) -> usize {
         self.records.iter().map(|r| r.prompt_tokens).sum()
     }
@@ -106,6 +143,42 @@ impl ServeReport {
                 rate, self.plan_hit_observations
             );
         }
+        let not_completed: Vec<String> = [
+            RequestOutcome::RejectedInvalid,
+            RequestOutcome::RejectedOversized,
+            RequestOutcome::Overloaded,
+            RequestOutcome::Failed,
+        ]
+        .iter()
+        .filter_map(|&o| {
+            let n = self.outcome_count(o);
+            (n > 0).then(|| format!("{n} {}", o.name()))
+        })
+        .collect();
+        if !not_completed.is_empty() {
+            println!("not completed     {:>10}", not_completed.join(", "));
+        }
+    }
+
+    /// Compact JSON summary — the wire front-end's Metrics reply.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"requests\": {}, \"completed\": {}, \"rejected_invalid\": {}, \
+             \"rejected_oversized\": {}, \"overloaded\": {}, \"failed\": {}, \
+             \"iterations\": {}, \"wall_s\": {:.6}, \"prompt_tokens\": {}, \
+             \"generated_tokens\": {}, \"plan_hit_observations\": {}}}",
+            self.records.len(),
+            self.outcome_count(RequestOutcome::Completed),
+            self.outcome_count(RequestOutcome::RejectedInvalid),
+            self.outcome_count(RequestOutcome::RejectedOversized),
+            self.outcome_count(RequestOutcome::Overloaded),
+            self.outcome_count(RequestOutcome::Failed),
+            self.iterations,
+            self.wall_s,
+            self.total_prompt_tokens(),
+            self.total_generated_tokens(),
+            self.plan_hit_observations,
+        )
     }
 }
 
@@ -121,6 +194,7 @@ mod tests {
             arrival_s: 0.0,
             ttft_s: ttft,
             e2e_s: e2e,
+            outcome: RequestOutcome::Completed,
         }
     }
 
@@ -147,5 +221,22 @@ mod tests {
         assert_eq!(rep.prefill_throughput(), 0.0);
         assert_eq!(rep.ttft_percentile(99.0), 0.0);
         assert_eq!(rep.utilization(), 0.0);
+    }
+
+    #[test]
+    fn outcomes_are_counted_and_summarized() {
+        let mut shed = record(3, f64::NAN, f64::NAN);
+        shed.generated_tokens = 0;
+        shed.outcome = RequestOutcome::Overloaded;
+        let rep = ServeReport {
+            records: vec![record(1, 0.1, 1.0), record(2, 0.3, 2.0), shed],
+            ..ServeReport::default()
+        };
+        assert_eq!(rep.outcome_count(RequestOutcome::Completed), 2);
+        assert_eq!(rep.outcome_count(RequestOutcome::Overloaded), 1);
+        assert_eq!(rep.outcome_count(RequestOutcome::Failed), 0);
+        let json = rep.to_json();
+        assert!(json.contains("\"completed\": 2"), "{json}");
+        assert!(json.contains("\"overloaded\": 1"), "{json}");
     }
 }

@@ -1,4 +1,45 @@
 //! Request/response types flowing through the coordinator.
+//!
+//! [`Request`] is the public request envelope: front ends (the CLI trace
+//! replay and the wire front-end alike) construct one through
+//! [`Request::builder`], which rejects malformed submissions with a typed
+//! [`RequestError`] — an empty prompt, a zero decode budget, or a prompt
+//! that cannot fit the sequence budget — instead of silently clamping.
+//! The raw [`Request::new`] constructor stays for trusted internal
+//! callers (tests, trace generators) that build by-construction-valid
+//! requests.
+
+use std::fmt;
+
+/// Why a request submission was rejected before admission. Typed so front
+/// ends can map each variant to a wire status code
+/// ([`crate::wire::StatusCode`]) instead of pattern-matching strings.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RequestError {
+    /// The prompt carried no tokens.
+    EmptyPrompt,
+    /// `max_new_tokens` was zero — the request could never emit a token.
+    ZeroDecode,
+    /// Prompt + decode budget exceeds the sequence capacity. Carries the
+    /// numbers so the reply can say exactly what to shrink.
+    PromptTooLong { prompt: usize, budget: usize },
+}
+
+impl fmt::Display for RequestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RequestError::EmptyPrompt => write!(f, "empty prompt"),
+            RequestError::ZeroDecode => write!(f, "max_new_tokens must be >= 1"),
+            RequestError::PromptTooLong { prompt, budget } => write!(
+                f,
+                "prompt of {prompt} token(s) exceeds the {budget}-token budget \
+                 (max_seq minus the decode allotment)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
 
 /// Lifecycle of a request inside the coordinator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,8 +68,72 @@ impl Request {
         Self { id, prompt, max_new_tokens, arrival_s }
     }
 
+    /// Start a validated request build; [`RequestBuilder::build`] checks
+    /// the submission against the sequence capacity.
+    pub fn builder(id: u64) -> RequestBuilder {
+        RequestBuilder { id, prompt: Vec::new(), max_new_tokens: 1, arrival_s: 0.0 }
+    }
+
     pub fn total_tokens(&self) -> usize {
         self.prompt.len() + self.max_new_tokens
+    }
+
+    /// The validation the builder applies, callable on an already-built
+    /// request (the admission path re-checks wire submissions with it).
+    pub fn validate(&self, max_seq: usize) -> Result<(), RequestError> {
+        if self.prompt.is_empty() {
+            return Err(RequestError::EmptyPrompt);
+        }
+        if self.max_new_tokens == 0 {
+            return Err(RequestError::ZeroDecode);
+        }
+        if self.total_tokens() > max_seq {
+            return Err(RequestError::PromptTooLong {
+                prompt: self.prompt.len(),
+                budget: max_seq.saturating_sub(self.max_new_tokens),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`Request`] — the validated construction path every front
+/// end shares. `build(max_seq)` rejects malformed submissions with a
+/// typed [`RequestError`] instead of clamping them into shape.
+#[derive(Clone, Debug)]
+pub struct RequestBuilder {
+    id: u64,
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    arrival_s: f64,
+}
+
+impl RequestBuilder {
+    pub fn prompt(mut self, prompt: Vec<i32>) -> Self {
+        self.prompt = prompt;
+        self
+    }
+
+    pub fn max_new_tokens(mut self, n: usize) -> Self {
+        self.max_new_tokens = n;
+        self
+    }
+
+    pub fn arrival_s(mut self, t: f64) -> Self {
+        self.arrival_s = t;
+        self
+    }
+
+    /// Validate against the serving sequence capacity and construct.
+    pub fn build(self, max_seq: usize) -> Result<Request, RequestError> {
+        let req = Request {
+            id: self.id,
+            prompt: self.prompt,
+            max_new_tokens: self.max_new_tokens,
+            arrival_s: self.arrival_s,
+        };
+        req.validate(max_seq)?;
+        Ok(req)
     }
 }
 
@@ -90,5 +195,45 @@ mod tests {
         st.generated.push(8);
         assert!(st.decode_done());
         assert_eq!(st.seq_len(), 6);
+    }
+
+    #[test]
+    fn builder_accepts_a_valid_request() {
+        let r = Request::builder(7)
+            .prompt(vec![1, 2, 3])
+            .max_new_tokens(4)
+            .arrival_s(0.5)
+            .build(16)
+            .unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.total_tokens(), 7);
+        assert_eq!(r.arrival_s, 0.5);
+    }
+
+    #[test]
+    fn builder_rejects_with_typed_errors_not_clamps() {
+        assert_eq!(
+            Request::builder(1).max_new_tokens(2).build(16).unwrap_err(),
+            RequestError::EmptyPrompt
+        );
+        assert_eq!(
+            Request::builder(1).prompt(vec![1]).max_new_tokens(0).build(16).unwrap_err(),
+            RequestError::ZeroDecode
+        );
+        let err = Request::builder(1)
+            .prompt(vec![0; 30])
+            .max_new_tokens(4)
+            .build(16)
+            .unwrap_err();
+        assert_eq!(err, RequestError::PromptTooLong { prompt: 30, budget: 12 });
+        // The error names the actionable budget, not just "too long".
+        assert!(err.to_string().contains("12"), "{err}");
+    }
+
+    #[test]
+    fn validate_matches_builder_on_boundaries() {
+        // Exactly at capacity is accepted; one past is rejected.
+        assert!(Request::new(1, vec![0; 12], 4, 0.0).validate(16).is_ok());
+        assert!(Request::new(1, vec![0; 13], 4, 0.0).validate(16).is_err());
     }
 }

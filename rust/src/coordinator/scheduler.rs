@@ -26,7 +26,11 @@ pub const IDENT_COST_FRAC: f64 = 0.125;
 /// magnitude less than the execution it unlocks (DESIGN.md §12). The
 /// 0.2%/shard constant keeps scaling near-linear at practical shard
 /// counts while still pricing a floor — past `attn / broadcast` shards,
-/// adding workers stops paying.
+/// adding workers stops paying. This is a modeled guess: `anchor-attn
+/// calibrate --wire` replaces it with a measured constant from a real
+/// framed socket round-trip of the delta-encoded coordinates
+/// (DESIGN.md §14), which is what `serve --transport process` should be
+/// priced with.
 pub const PLAN_BROADCAST_FRAC: f64 = 0.002;
 
 /// The constants the Anchor cost estimates are built from: either the

@@ -1,8 +1,28 @@
-//! Trace-driven serving loop: admission → scheduling → batching → engine,
-//! producing a [`ServeReport`]. Generic over [`StepExecutor`] so the whole
-//! control plane is unit-testable with [`MockEngine`]; the binary wires in
-//! the PJRT engine.
+//! Trace-driven serving loop and the typed request front-end:
+//! admission → scheduling → batching → engine, producing a
+//! [`ServeReport`]. Generic over [`StepExecutor`] so the whole control
+//! plane is unit-testable with [`MockEngine`]; the binary wires in the
+//! PJRT engine.
+//!
+//! Three front doors, one loop:
+//! * [`serve`] — trusted, pre-built [`Request`]s (trace replay, tests);
+//! * [`serve_requests`] — typed submissions ([`ServeRequest`]) validated
+//!   through [`Request::builder`]'s rules and admission-controlled
+//!   (`max_pending`), each answered with a [`ServeResponse`] carrying an
+//!   explicit [`StatusCode`]; rejected submissions land in the report
+//!   with their [`RequestOutcome`], never silently dropped;
+//! * [`serve_wire`] — the same envelope over the coordinate-only wire
+//!   protocol (DESIGN.md §14): `ReqSubmit` frames answered per-request,
+//!   plus `Health` and `Metrics` probe endpoints.
+//!
+//! Configuration overrides flow through one validated path: the CLI, a
+//! config file, and the wire front-end all construct a [`ServeOverrides`]
+//! and apply it via [`ServerConfig::apply_overrides`] — no stringly-typed
+//! flag surgery at call sites, and every rejection is a descriptive
+//! error.
 
+use std::collections::HashMap;
+use std::io::{Read, Write};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -10,9 +30,15 @@ use anyhow::Result;
 use super::batcher::build_batch;
 use super::engine::{StepExecutor, StepOutcome};
 use super::kv_cache::PagePool;
-use super::metrics::{RequestRecord, ServeReport};
-use super::request::{Phase, Request, RequestState};
-use super::scheduler::{plan_iteration, SchedulerConfig};
+use super::metrics::{RequestOutcome, RequestRecord, ServeReport};
+use super::request::{Phase, Request, RequestError, RequestState};
+use super::scheduler::{plan_iteration, CostConstants, SchedulerConfig, SparsityModel};
+use crate::attention::exec::ExecutorKind;
+use crate::attention::session::{SessionConfig, SessionTransport};
+use crate::wire::codec::{HealthReplyMsg, MetricsReplyMsg, ReqReplyMsg, ReqSubmitMsg};
+use crate::wire::frame::{read_frame_opt, write_frame, FrameKind};
+use crate::wire::{ErrorEnvelope, StatusCode};
+use crate::workload::trace::TraceConfig;
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -24,6 +50,11 @@ pub struct ServerConfig {
     /// Gate arrivals on wall-clock trace replay; `false` releases
     /// everything immediately (max-throughput mode).
     pub realtime: bool,
+    /// Admission-control cap on queued submissions: past it, the typed
+    /// front doors shed load with an `Overloaded` reply instead of
+    /// building an unbounded backlog. `None` = unbounded (the trusted
+    /// trace-replay default).
+    pub max_pending: Option<usize>,
 }
 
 impl Default for ServerConfig {
@@ -34,8 +65,326 @@ impl Default for ServerConfig {
             page_tokens: 64,
             max_seq: 2048,
             realtime: false,
+            max_pending: None,
         }
     }
+}
+
+/// Typed serve-time overrides — what the CLI flags, the config file, and
+/// the wire front-end can each change about a loaded [`ServerConfig`] /
+/// session / trace. One struct, one validated application path
+/// ([`ServerConfig::apply_overrides`]), descriptive errors; `None`/`false`
+/// fields leave the config untouched.
+#[derive(Clone, Debug, Default)]
+pub struct ServeOverrides {
+    /// Trace arrival rate (requests/s).
+    pub rate: Option<f64>,
+    /// Trace request count.
+    pub num_requests: Option<usize>,
+    /// Swap the scheduler's sparsity model for the anchor cost model.
+    pub anchor_sched: bool,
+    /// Price identification as overlapped with execution (DESIGN.md §9).
+    /// Only meaningful with the anchor model.
+    pub pipeline: bool,
+    /// Executor backend the scheduler's estimates are attributed to.
+    pub executor: Option<ExecutorKind>,
+    /// Head-group shard workers (scheduler pricing AND session execution).
+    pub shards: Option<usize>,
+    /// Shard-worker transport for the session (threads | process).
+    pub transport: Option<SessionTransport>,
+    /// Manifest path holding machine-measured cost constants
+    /// (DESIGN.md §13) to swap in for the modeled defaults.
+    pub calibration: Option<String>,
+    /// Manifest-backed plan store path for the session block.
+    pub plan_store: Option<String>,
+    /// Admission-control queue cap (shed with `Overloaded` past it).
+    pub max_pending: Option<usize>,
+}
+
+impl ServerConfig {
+    /// Apply the scheduler/server-side overrides, validating each:
+    /// zero shard counts, a calibration without the anchor model, a
+    /// missing calibration entry, and a zero queue cap are all rejected
+    /// with descriptive errors instead of being clamped or ignored.
+    pub fn apply_overrides(&mut self, ov: &ServeOverrides) -> Result<()> {
+        if ov.anchor_sched {
+            self.scheduler.sparsity = SparsityModel::Anchor {
+                stripe_keep: 0.1,
+                anchor_tokens: 256,
+                plan_hit_rate: 0.0,
+                pipelined: ov.pipeline,
+                executor: ExecutorKind::default(),
+                shards: 1,
+                constants: CostConstants::modeled(),
+            };
+        }
+        if let Some(kind) = ov.executor {
+            if let SparsityModel::Anchor { ref mut executor, .. } = self.scheduler.sparsity {
+                *executor = kind;
+            }
+        }
+        if let Some(n) = ov.shards {
+            anyhow::ensure!(n >= 1, "shards override must be >= 1 (got {n})");
+            if let SparsityModel::Anchor { ref mut shards, .. } = self.scheduler.sparsity {
+                *shards = n;
+            }
+        }
+        // The calibration lookup keys on the executor backend actually
+        // priced, so it reads the post-override executor.
+        if let Some(path) = &ov.calibration {
+            let kind = match self.scheduler.sparsity {
+                SparsityModel::Anchor { executor, .. } => executor,
+                _ => anyhow::bail!(
+                    "calibration override needs the anchor scheduler (pass --anchor-sched \
+                     or set scheduler.sparsity in the config)"
+                ),
+            };
+            let c = crate::runtime::manifest::load_calibration(path, kind)?.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "manifest '{path}' holds no calibration for executor '{}' — run \
+                     `anchor-attn calibrate --manifest {path} --executor {}` first",
+                    kind.name(),
+                    kind.name()
+                )
+            })?;
+            self.scheduler.sparsity.set_constants(c);
+        }
+        if let Some(cap) = ov.max_pending {
+            anyhow::ensure!(cap >= 1, "max_pending override must be >= 1 (got {cap})");
+            self.max_pending = Some(cap);
+        }
+        Ok(())
+    }
+}
+
+impl ServeOverrides {
+    /// Apply the session-block overrides (same validation discipline).
+    pub fn apply_session(&self, cfg: &mut SessionConfig) -> Result<()> {
+        if let Some(n) = self.shards {
+            anyhow::ensure!(n >= 1, "shards override must be >= 1 (got {n})");
+            cfg.shards = n;
+        }
+        if let Some(t) = self.transport {
+            cfg.transport = t;
+        }
+        if let Some(p) = &self.plan_store {
+            cfg.plan_store = Some(p.clone());
+        }
+        Ok(())
+    }
+
+    /// Apply the trace-block overrides.
+    pub fn apply_trace(&self, cfg: &mut TraceConfig) {
+        if let Some(r) = self.rate {
+            cfg.rate = r;
+        }
+        if let Some(n) = self.num_requests {
+            cfg.num_requests = n;
+        }
+    }
+}
+
+/// One typed front-end submission — the validated public envelope the
+/// wire `ReqSubmit` frame decodes into.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrival_s: f64,
+}
+
+/// Per-submission reply: an explicit status code plus a human-readable
+/// detail (empty on acceptance). Maps 1:1 onto the wire `ReqReply` frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeResponse {
+    pub id: u64,
+    pub status: StatusCode,
+    pub detail: String,
+}
+
+impl ServeResponse {
+    pub fn accepted(id: u64) -> Self {
+        Self { id, status: StatusCode::Ok, detail: String::new() }
+    }
+
+    pub fn is_accepted(&self) -> bool {
+        self.status == StatusCode::Ok
+    }
+}
+
+/// The admission decision for one submission: validated request in, or a
+/// typed rejection (status code for the reply, outcome for the report).
+fn admit_one(
+    cfg: &ServerConfig,
+    queued: usize,
+    sub: &ServeRequest,
+) -> Result<Request, (StatusCode, RequestOutcome, String)> {
+    if let Some(cap) = cfg.max_pending {
+        if queued >= cap {
+            return Err((
+                StatusCode::Overloaded,
+                RequestOutcome::Overloaded,
+                format!("queue full ({cap} pending); retry later"),
+            ));
+        }
+    }
+    let req = Request::builder(sub.id)
+        .prompt(sub.prompt.clone())
+        .max_new_tokens(sub.max_new_tokens)
+        .arrival_s(sub.arrival_s)
+        .build(cfg.max_seq);
+    req.map_err(|e| {
+        let (status, outcome) = match e {
+            RequestError::EmptyPrompt | RequestError::ZeroDecode => {
+                (StatusCode::Invalid, RequestOutcome::RejectedInvalid)
+            }
+            RequestError::PromptTooLong { .. } => {
+                (StatusCode::Oversized, RequestOutcome::RejectedOversized)
+            }
+        };
+        (status, outcome, e.to_string())
+    })
+}
+
+/// A report record for a submission that never reached the engine.
+fn rejected_record(sub: &ServeRequest, outcome: RequestOutcome) -> RequestRecord {
+    RequestRecord {
+        id: sub.id,
+        prompt_tokens: sub.prompt.len(),
+        generated_tokens: 0,
+        arrival_s: sub.arrival_s,
+        ttft_s: f64::NAN,
+        e2e_s: f64::NAN,
+        outcome,
+    }
+}
+
+/// The typed front door: validate and admission-control `submissions`,
+/// serve the accepted ones, and answer every submission — accepted or
+/// not — with a [`ServeResponse`]. Rejected submissions appear in the
+/// report's records with their [`RequestOutcome`].
+pub fn serve_requests<E: StepExecutor>(
+    cfg: &ServerConfig,
+    submissions: Vec<ServeRequest>,
+    executor: &mut E,
+    register: impl Fn(&mut E, &Request),
+) -> Result<(ServeReport, Vec<ServeResponse>)> {
+    let mut admitted: Vec<Request> = Vec::new();
+    let mut responses: Vec<ServeResponse> = Vec::new();
+    let mut rejects: Vec<RequestRecord> = Vec::new();
+    for sub in &submissions {
+        match admit_one(cfg, admitted.len(), sub) {
+            Ok(req) => {
+                responses.push(ServeResponse::accepted(sub.id));
+                admitted.push(req);
+            }
+            Err((status, outcome, detail)) => {
+                responses.push(ServeResponse { id: sub.id, status, detail });
+                rejects.push(rejected_record(sub, outcome));
+            }
+        }
+    }
+    let mut report = serve(cfg, admitted, executor, register)?;
+    report.records.extend(rejects);
+    Ok((report, responses))
+}
+
+/// The wire front door (DESIGN.md §14): drive one framed connection —
+/// `ReqSubmit` frames are admitted through the same path as
+/// [`serve_requests`] and answered immediately with `ReqReply`; `Health`
+/// answers queue depth vs capacity; `Metrics` answers a JSON counter
+/// snapshot. `Shutdown` (or EOF) closes admission, serves the accepted
+/// batch, and — on `Shutdown` — answers a final `Metrics` frame carrying
+/// the full report before returning it.
+pub fn serve_wire<S: Read + Write, E: StepExecutor>(
+    cfg: &ServerConfig,
+    stream: &mut S,
+    executor: &mut E,
+    register: impl Fn(&mut E, &Request),
+) -> Result<ServeReport> {
+    let mut admitted: Vec<Request> = Vec::new();
+    let mut rejects: Vec<RequestRecord> = Vec::new();
+    let mut reply_final = false;
+    loop {
+        let Some((kind, payload)) = read_frame_opt(stream)? else {
+            break; // EOF: serve what was admitted, nobody is listening
+        };
+        match kind {
+            FrameKind::ReqSubmit => {
+                // A malformed payload rejects that submission, not the
+                // connection — frames are length-delimited, the stream
+                // stays aligned.
+                let reply = match ReqSubmitMsg::decode(&payload) {
+                    Ok(msg) => {
+                        let sub = ServeRequest {
+                            id: msg.id,
+                            prompt: msg.prompt,
+                            max_new_tokens: msg.max_new_tokens as usize,
+                            arrival_s: msg.arrival_s,
+                        };
+                        match admit_one(cfg, admitted.len(), &sub) {
+                            Ok(req) => {
+                                admitted.push(req);
+                                ReqReplyMsg {
+                                    id: sub.id,
+                                    status: StatusCode::Ok,
+                                    detail: String::new(),
+                                }
+                            }
+                            Err((status, outcome, detail)) => {
+                                rejects.push(rejected_record(&sub, outcome));
+                                ReqReplyMsg { id: sub.id, status, detail }
+                            }
+                        }
+                    }
+                    Err(e) => ReqReplyMsg {
+                        id: 0,
+                        status: StatusCode::Invalid,
+                        detail: format!("malformed submission: {e}"),
+                    },
+                };
+                write_frame(stream, FrameKind::ReqReply, &reply.encode())?;
+            }
+            FrameKind::Health => {
+                let msg = HealthReplyMsg {
+                    queued: admitted.len() as u64,
+                    capacity: cfg.max_pending.unwrap_or(0) as u64,
+                };
+                write_frame(stream, FrameKind::HealthReply, &msg.encode())?;
+            }
+            FrameKind::Metrics => {
+                let json = format!(
+                    "{{\"queued\": {}, \"rejected\": {}, \"max_pending\": {}}}",
+                    admitted.len(),
+                    rejects.len(),
+                    cfg.max_pending.map_or("null".to_string(), |c| c.to_string()),
+                );
+                let msg = MetricsReplyMsg { json };
+                write_frame(stream, FrameKind::MetricsReply, &msg.encode())?;
+            }
+            FrameKind::Ping => write_frame(stream, FrameKind::Pong, &[])?,
+            FrameKind::Shutdown => {
+                reply_final = true;
+                break;
+            }
+            other => {
+                let env = ErrorEnvelope::new(
+                    StatusCode::Internal,
+                    format!("unexpected {other:?} frame on the serve front-end"),
+                );
+                write_frame(stream, FrameKind::Error, &env.encode())?;
+                anyhow::bail!("serve front-end: unexpected {other:?} frame");
+            }
+        }
+    }
+    let mut report = serve(cfg, admitted, executor, register)?;
+    report.records.extend(rejects);
+    if reply_final {
+        let msg = MetricsReplyMsg { json: report.to_json() };
+        write_frame(stream, FrameKind::MetricsReply, &msg.encode())?;
+    }
+    Ok(report)
 }
 
 /// Serve `trace` to completion on `executor`.
@@ -59,6 +408,7 @@ pub fn serve<E: StepExecutor>(
 
     let mut sched = cfg.scheduler;
     let mut states: Vec<RequestState> = Vec::new();
+    let mut outcomes: HashMap<u64, RequestOutcome> = HashMap::new();
     let mut pool = PagePool::new(cfg.pool_pages, cfg.page_tokens);
     let mut report = ServeReport::default();
     let t0 = Instant::now();
@@ -76,6 +426,7 @@ pub fn serve<E: StepExecutor>(
                     let mut st = RequestState::new(req);
                     st.phase = Phase::Finished;
                     st.finished_s = Some(now);
+                    outcomes.insert(st.request.id, RequestOutcome::RejectedOversized);
                     states.push(st);
                     continue;
                 }
@@ -107,7 +458,7 @@ pub fn serve<E: StepExecutor>(
 
         let batch = build_batch(iteration, &plan, &states)?;
         iteration += 1;
-        let outcomes = executor.execute(&batch);
+        let outcomes_step = executor.execute(&batch);
         // Live amortization feedback: the engine's merged plan-cache hit
         // rate moves the scheduler's EWMA for the *next* iterations.
         if let Some(observed) = executor.observed_plan_hit_rate() {
@@ -116,7 +467,7 @@ pub fn serve<E: StepExecutor>(
         }
         let now = t0.elapsed().as_secs_f64();
 
-        for outcome in outcomes {
+        for outcome in outcomes_step {
             match outcome {
                 StepOutcome::PrefillChunk { req, took, next_token, elapsed_s, .. } => {
                     report.engine_busy_s += elapsed_s;
@@ -148,6 +499,7 @@ pub fn serve<E: StepExecutor>(
                     }
                     st.phase = Phase::Finished;
                     st.finished_s = Some(now);
+                    outcomes.insert(req, RequestOutcome::Failed);
                     executor.finish_request(req);
                 }
             }
@@ -165,6 +517,10 @@ pub fn serve<E: StepExecutor>(
             arrival_s: st.request.arrival_s,
             ttft_s: st.first_token_s.map(|t| t - st.request.arrival_s).unwrap_or(f64::NAN),
             e2e_s: st.finished_s.map(|t| t - st.request.arrival_s).unwrap_or(f64::NAN),
+            outcome: outcomes
+                .get(&st.request.id)
+                .copied()
+                .unwrap_or(RequestOutcome::Completed),
         });
     }
     Ok(report)
@@ -210,6 +566,7 @@ mod tests {
             assert_eq!(r.generated_tokens, 4);
             assert!(r.ttft_s.is_finite() && r.e2e_s.is_finite());
             assert!(r.ttft_s <= r.e2e_s + 1e-9);
+            assert_eq!(r.outcome, RequestOutcome::Completed);
         }
         assert!(rep.iterations > 0);
     }
@@ -226,8 +583,10 @@ mod tests {
         let rep = run(t, &cfg);
         let rejected = rep.records.iter().find(|r| r.prompt_tokens == 1000).unwrap();
         assert_eq!(rejected.generated_tokens, 0);
+        assert_eq!(rejected.outcome, RequestOutcome::RejectedOversized);
         let ok = rep.records.iter().find(|r| r.id == 99).unwrap();
         assert_eq!(ok.generated_tokens, 2);
+        assert_eq!(ok.outcome, RequestOutcome::Completed);
     }
 
     #[test]
@@ -314,5 +673,177 @@ mod tests {
         // The mock engine's busy time reflects the cheaper pipelined
         // chunks too (cost model ↔ engine agreement).
         assert!(piped.engine_busy_s <= sequential.engine_busy_s + 1e-9);
+    }
+
+    // -- typed front-end --
+
+    fn sub(id: u64, prompt: usize, new_tokens: usize) -> ServeRequest {
+        ServeRequest { id, prompt: vec![1; prompt], max_new_tokens: new_tokens, arrival_s: 0.0 }
+    }
+
+    #[test]
+    fn serve_requests_answers_every_submission_with_a_status() {
+        let mut cfg = ServerConfig::default();
+        cfg.max_seq = 512;
+        let subs = vec![
+            sub(1, 100, 4),        // ok
+            sub(2, 0, 4),          // invalid: empty prompt
+            sub(3, 100, 0),        // invalid: zero decode
+            sub(4, 5000, 4),       // oversized
+            sub(5, 100, 2),        // ok
+        ];
+        let mut engine = MockEngine::new(512);
+        let (rep, responses) = serve_requests(&cfg, subs, &mut engine, |_, _| {}).unwrap();
+        assert_eq!(responses.len(), 5);
+        assert!(responses[0].is_accepted());
+        assert_eq!(responses[1].status, StatusCode::Invalid);
+        assert_eq!(responses[2].status, StatusCode::Invalid);
+        assert_eq!(responses[3].status, StatusCode::Oversized);
+        assert!(responses[4].is_accepted());
+        // Rejections carry actionable detail, not just a code.
+        assert!(responses[3].detail.contains("budget"), "{}", responses[3].detail);
+        // Every submission lands in the report with its outcome.
+        assert_eq!(rep.records.len(), 5);
+        assert_eq!(rep.outcome_count(RequestOutcome::Completed), 2);
+        assert_eq!(rep.outcome_count(RequestOutcome::RejectedInvalid), 2);
+        assert_eq!(rep.outcome_count(RequestOutcome::RejectedOversized), 1);
+    }
+
+    #[test]
+    fn admission_control_sheds_load_with_overloaded() {
+        let mut cfg = ServerConfig::default();
+        cfg.max_pending = Some(2);
+        let subs = (0..4).map(|i| sub(i, 64, 1)).collect();
+        let mut engine = MockEngine::new(512);
+        let (rep, responses) = serve_requests(&cfg, subs, &mut engine, |_, _| {}).unwrap();
+        assert!(responses[0].is_accepted() && responses[1].is_accepted());
+        assert_eq!(responses[2].status, StatusCode::Overloaded);
+        assert_eq!(responses[3].status, StatusCode::Overloaded);
+        assert_eq!(rep.outcome_count(RequestOutcome::Completed), 2);
+        assert_eq!(rep.outcome_count(RequestOutcome::Overloaded), 2);
+    }
+
+    #[test]
+    fn overrides_apply_through_one_validated_path() {
+        let mut cfg = ServerConfig::default();
+        let ov = ServeOverrides {
+            anchor_sched: true,
+            pipeline: true,
+            executor: Some(ExecutorKind::Pjrt),
+            shards: Some(4),
+            max_pending: Some(32),
+            ..ServeOverrides::default()
+        };
+        cfg.apply_overrides(&ov).unwrap();
+        match cfg.scheduler.sparsity {
+            SparsityModel::Anchor { pipelined, executor, shards, .. } => {
+                assert!(pipelined);
+                assert_eq!(executor, ExecutorKind::Pjrt);
+                assert_eq!(shards, 4);
+            }
+            _ => panic!("anchor_sched override must install the anchor model"),
+        }
+        assert_eq!(cfg.max_pending, Some(32));
+        // Validation is loud, not clamping.
+        let bad = ServeOverrides { shards: Some(0), ..ServeOverrides::default() };
+        assert!(ServerConfig::default().apply_overrides(&bad).is_err());
+        let bad = ServeOverrides { max_pending: Some(0), ..ServeOverrides::default() };
+        assert!(ServerConfig::default().apply_overrides(&bad).is_err());
+        // Calibration without the anchor model is a descriptive error.
+        let bad = ServeOverrides {
+            calibration: Some("nonexistent.json".into()),
+            ..ServeOverrides::default()
+        };
+        let err = ServerConfig::default().apply_overrides(&bad).unwrap_err().to_string();
+        assert!(err.contains("anchor"), "{err}");
+    }
+
+    #[test]
+    fn overrides_apply_to_session_and_trace_blocks() {
+        let ov = ServeOverrides {
+            rate: Some(9.5),
+            num_requests: Some(7),
+            shards: Some(3),
+            transport: Some(SessionTransport::Process),
+            plan_store: Some("artifacts/manifest.json".into()),
+            ..ServeOverrides::default()
+        };
+        let mut session = SessionConfig::default();
+        ov.apply_session(&mut session).unwrap();
+        assert_eq!(session.shards, 3);
+        assert_eq!(session.transport, SessionTransport::Process);
+        assert_eq!(session.plan_store.as_deref(), Some("artifacts/manifest.json"));
+        let mut trace = TraceConfig::default();
+        ov.apply_trace(&mut trace);
+        assert_eq!(trace.rate, 9.5);
+        assert_eq!(trace.num_requests, 7);
+    }
+
+    /// The wire front door end-to-end over an in-memory duplex stream:
+    /// submissions answered per-request with typed status codes, health
+    /// and metrics probes answered, and the final report delivered on
+    /// Shutdown.
+    #[test]
+    fn wire_front_end_serves_a_framed_session() {
+        use crate::wire::codec::{HealthReplyMsg, MetricsReplyMsg, ReqReplyMsg, ReqSubmitMsg};
+        use crate::wire::frame::{encode_frame, read_frame, FrameKind};
+        use std::os::unix::net::UnixStream;
+
+        let (mut client, mut server) = UnixStream::pair().unwrap();
+        let serve_thread = std::thread::spawn(move || {
+            let mut cfg = ServerConfig::default();
+            cfg.max_pending = Some(2);
+            let mut engine = MockEngine::new(512);
+            serve_wire(&cfg, &mut server, &mut engine, |_, _| {}).unwrap()
+        });
+
+        let submit = |client: &mut UnixStream, id: u64, prompt: usize| -> ReqReplyMsg {
+            let msg = ReqSubmitMsg {
+                id,
+                prompt: vec![1; prompt],
+                max_new_tokens: 2,
+                arrival_s: 0.0,
+            };
+            client.write_all(&encode_frame(FrameKind::ReqSubmit, &msg.encode())).unwrap();
+            let (kind, payload) = read_frame(client).unwrap();
+            assert_eq!(kind, FrameKind::ReqReply);
+            ReqReplyMsg::decode(&payload).unwrap()
+        };
+
+        // Health before anything queued.
+        client.write_all(&encode_frame(FrameKind::Health, &[])).unwrap();
+        let (kind, payload) = read_frame(&mut client).unwrap();
+        assert_eq!(kind, FrameKind::HealthReply);
+        let health = HealthReplyMsg::decode(&payload).unwrap();
+        assert_eq!((health.queued, health.capacity), (0, 2));
+
+        assert_eq!(submit(&mut client, 1, 100).status, StatusCode::Ok);
+        assert_eq!(submit(&mut client, 2, 0).status, StatusCode::Invalid);
+        assert_eq!(submit(&mut client, 3, 100).status, StatusCode::Ok);
+        // Queue cap reached: typed shed, not a hang or a silent drop.
+        let shed = submit(&mut client, 4, 100);
+        assert_eq!(shed.status, StatusCode::Overloaded);
+        assert!(shed.detail.contains("retry"), "{}", shed.detail);
+
+        // Metrics probe mid-session.
+        client.write_all(&encode_frame(FrameKind::Metrics, &[])).unwrap();
+        let (kind, payload) = read_frame(&mut client).unwrap();
+        assert_eq!(kind, FrameKind::MetricsReply);
+        let m = MetricsReplyMsg::decode(&payload).unwrap();
+        assert!(m.json.contains("\"queued\": 2"), "{}", m.json);
+
+        // Shutdown: the accepted batch serves; the final metrics frame
+        // carries the report.
+        client.write_all(&encode_frame(FrameKind::Shutdown, &[])).unwrap();
+        let (kind, payload) = read_frame(&mut client).unwrap();
+        assert_eq!(kind, FrameKind::MetricsReply);
+        let final_m = MetricsReplyMsg::decode(&payload).unwrap();
+        assert!(final_m.json.contains("\"completed\": 2"), "{}", final_m.json);
+
+        let report = serve_thread.join().unwrap();
+        assert_eq!(report.outcome_count(RequestOutcome::Completed), 2);
+        assert_eq!(report.outcome_count(RequestOutcome::RejectedInvalid), 1);
+        assert_eq!(report.outcome_count(RequestOutcome::Overloaded), 1);
+        assert_eq!(report.records.len(), 4);
     }
 }

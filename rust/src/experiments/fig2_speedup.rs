@@ -60,6 +60,15 @@ pub struct Fig2Options {
     /// under `shard_grid` in `BENCH_fig2.json` and gates the 2-shard vs
     /// 1-shard total latency.
     pub shards: Vec<usize>,
+    /// Process shard-worker counts to measure over the coordinate-only
+    /// wire (`--wire-shards 1,2`, DESIGN.md §14): each point runs the
+    /// batch through spawned `anchor-attn worker` processes AND an
+    /// in-thread session with the same shard count, gates the two bitwise
+    /// (outputs, plans, cache accounting), and reports both latencies.
+    /// Empty = skip the wire grid. Only meaningful when invoked from the
+    /// `anchor-attn` binary (spawn mode re-executes the current
+    /// executable as a worker).
+    pub wire_shards: Vec<usize>,
 }
 
 impl Default for Fig2Options {
@@ -72,6 +81,7 @@ impl Default for Fig2Options {
             plan_store: None,
             step: None,
             shards: vec![1],
+            wire_shards: vec![],
         }
     }
 }
@@ -118,6 +128,9 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
         }
         if shard_counts != [1] {
             t.push_str("_shards");
+        }
+        if !opts.wire_shards.is_empty() {
+            t.push_str("_wire");
         }
         t
     };
@@ -253,6 +266,84 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
         &rows,
     );
 
+    // Wire grid: the same measurement through spawned process workers
+    // speaking the coordinate-only wire (DESIGN.md §14), each point gated
+    // bitwise against an in-thread session with the same shard count —
+    // transport must never change results, costs, plans, or cache
+    // accounting.
+    let mut wire_json: Vec<Json> = Vec::new();
+    if !opts.wire_shards.is_empty() {
+        println!(
+            "\n--- wire grid: process shard workers vs threads \
+             (coordinate-only wire, bitwise-gated) ---"
+        );
+        let kind = executors[0];
+        let mut wrows = Vec::new();
+        for &n in &lengths {
+            let batch = common::gqa_batch(&profile, n, BATCH_HEADS, GROUP_SIZE, seed);
+            let keys = common::gqa_keys(0, BATCH_HEADS, GROUP_SIZE);
+            let methods = common::paper_methods_with_step(n, tile, 12.0, step);
+            for &ws in &opts.wire_shards {
+                for m in &methods {
+                    let mk = |remote: bool| -> ShardedSession {
+                        let mut b = m.sharded_session(ws).executor(kind).keys(keys.clone());
+                        if remote {
+                            b = b.remote(crate::wire::RemoteSpec::Spawn { program: None });
+                        }
+                        b.build().expect("fig2 wire session rejected")
+                    };
+                    let mut threads = mk(false);
+                    let t0 = std::time::Instant::now();
+                    let base = threads.run_batch(&batch).expect("fig2 thread batch failed");
+                    let t_threads = t0.elapsed().as_secs_f64();
+                    let mut remote = mk(true);
+                    let t0 = std::time::Instant::now();
+                    let wired = remote.run_batch(&batch).expect("fig2 wire batch failed");
+                    let t_wire = t0.elapsed().as_secs_f64();
+                    let ctx = format!("{} n={n} wire_shards={ws}", m.name());
+                    assert_eq!(
+                        base.outputs.len(),
+                        wired.outputs.len(),
+                        "wire head count diverged ({ctx})"
+                    );
+                    for (a, b) in base.outputs.iter().zip(&wired.outputs) {
+                        assert_eq!(a.out.data, b.out.data, "wire output diverged ({ctx})");
+                        assert_eq!(a.cost, b.cost, "wire cost diverged ({ctx})");
+                    }
+                    assert_eq!(base.plans.len(), wired.plans.len(), "plan count ({ctx})");
+                    for (a, b) in base.plans.iter().zip(&wired.plans) {
+                        assert_eq!(**a, **b, "wire plan coordinates diverged ({ctx})");
+                    }
+                    assert_eq!(
+                        (base.cache_hits, base.cache_misses),
+                        (wired.cache_hits, wired.cache_misses),
+                        "wire cache accounting diverged ({ctx})"
+                    );
+                    wrows.push(vec![
+                        fmt_len(n),
+                        m.name().to_string(),
+                        ws.to_string(),
+                        format!("{:.2}", t_threads * 1e3),
+                        format!("{:.2}", t_wire * 1e3),
+                        "bitwise".to_string(),
+                    ]);
+                    wire_json.push(Json::obj(vec![
+                        ("length", Json::num(n as f64)),
+                        ("method", Json::str(m.name())),
+                        ("wire_shards", Json::num(ws as f64)),
+                        ("threads_ms", Json::num(t_threads * 1e3)),
+                        ("wire_ms", Json::num(t_wire * 1e3)),
+                        ("parity", Json::Bool(true)),
+                    ]));
+                }
+            }
+        }
+        common::print_table(
+            &["length", "method", "wire_shards", "threads_ms", "wire_ms", "parity"],
+            &wrows,
+        );
+    }
+
     // Cost-model projection at the paper's lengths. Raw sparsity does NOT
     // extrapolate (the always-computed anchor window is a large fraction
     // of short contexts and a vanishing one of 128k), so we measure the
@@ -355,6 +446,13 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &Fig2Options) -> Vec<Vec<Strin
             // warm-start gate divides a cold run's total by a warm one's.
             ("ident_paid_scores_total", Json::num(total_ident_paid as f64)),
             ("store_seeded_plans", Json::num(total_seeded as f64)),
+            // Process-worker grid (DESIGN.md §14): every row already
+            // passed the bitwise gate against the in-thread session.
+            (
+                "wire_shard_counts",
+                Json::arr(opts.wire_shards.iter().map(|&s| Json::num(s as f64))),
+            ),
+            ("wire_grid", Json::arr(wire_json)),
         ],
     );
     // Tag-specific filename: the CI bench job runs both modes plus the
@@ -490,6 +588,7 @@ mod tests {
             plan_store: Some(store.to_string_lossy().into_owned()),
             step: None,
             shards: vec![1],
+            wire_shards: vec![],
         };
         run_with(ExpScale::Quick, 7, &opts);
         let cold = std::fs::read_to_string("reports/fig2_speedup_sequential_store.json").unwrap();
@@ -524,6 +623,7 @@ mod tests {
             plan_store: None,
             step: Some(8),
             shards: vec![1],
+            wire_shards: vec![],
         };
         let rows = run_with(ExpScale::Quick, 7, &opts);
         assert!(rows.iter().any(|r| r[1] == "anchor"));

@@ -24,4 +24,5 @@ pub mod runtime;
 pub mod simulator;
 pub mod tensor;
 pub mod util;
+pub mod wire;
 pub mod workload;

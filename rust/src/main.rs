@@ -2,21 +2,33 @@
 //!
 //! Subcommands:
 //!   selftest                      PJRT + artifact sanity checks
-//!   serve       [--config F]      serve a synthetic trace over PJRT
-//!                                 (--executor cpu|pjrt names the plan
-//!                                 executor backend in the scheduler's
-//!                                 cost attribution; --plan-store F warms
-//!                                 the plan-hit prior from a populated
-//!                                 manifest plan store; --shards N prices
-//!                                 head-group sharding, DESIGN.md §12;
+//!   serve       [--config F]      serve a synthetic trace over PJRT; all
+//!                                 flags funnel through one typed
+//!                                 ServeOverrides path (--executor
+//!                                 cpu|pjrt names the plan executor in
+//!                                 the scheduler's cost attribution;
+//!                                 --plan-store F warms the plan-hit
+//!                                 prior from a populated manifest plan
+//!                                 store; --shards N prices head-group
+//!                                 sharding, DESIGN.md §12; --transport
+//!                                 threads|process picks the shard-worker
+//!                                 transport, DESIGN.md §14;
+//!                                 --max-pending N caps admission;
 //!                                 --calibration F loads machine-measured
 //!                                 cost constants persisted by `calibrate`,
 //!                                 DESIGN.md §13)
+//!   worker      --uds P | --tcp A serve the coordinate-only wire protocol
+//!                                 as a shard worker process (spawned by
+//!                                 process-transport sessions, or started
+//!                                 manually and addressed via endpoints;
+//!                                 DESIGN.md §14)
 //!   calibrate   [--manifest F]    measure the scheduler's cost constants
 //!                                 (span read, discrete gather, tile fold,
 //!                                 ident-vs-dense) on this machine and
 //!                                 persist them into the runtime manifest
 //!                                 (--executor cpu|pjrt|both, --quick,
+//!                                 --wire measures the broadcast constant
+//!                                 over a real framed socket round-trip,
 //!                                 --show reloads + prices a 64k context)
 //!   bench <exp> [--quick]         run one experiment driver
 //!                                 (fig2|tab1|fig4|fig5|fig6|fig7|tab2|tab3|tab4|all,
@@ -30,18 +42,21 @@
 //!                                 --plan-store F (manifest-backed plan
 //!                                 persistence: cold vs warm identification),
 //!                                 --step S (anchor identification step),
-//!                                 --shards 1,2,4 (head-group shard grid)
+//!                                 --shards 1,2,4 (head-group shard grid),
+//!                                 --wire-shards 1,2 (process-worker grid:
+//!                                 same measurement through spawned wire
+//!                                 workers, parity-gated against threads)
 //!   dominance   [--n N]           Fig. 5 measurement at arbitrary length
 //!   tpu-estimate                  L1 VMEM/MXU block-shape table
 //!   gen-trace   [--rate R]        print a synthetic serving trace
 
 use anchor_attention::attention::exec::ExecutorKind;
+use anchor_attention::attention::session::SessionTransport;
 use anchor_attention::attention::Method;
 use anchor_attention::config::AppConfig;
 use anchor_attention::coordinator::engine::PjrtEngine;
-use anchor_attention::coordinator::request::Request;
 use anchor_attention::coordinator::scheduler::{CostConstants, SparsityModel};
-use anchor_attention::coordinator::server::serve;
+use anchor_attention::coordinator::server::{serve_requests, ServeOverrides, ServeRequest};
 use anchor_attention::experiments::{self, ExpScale};
 use anchor_attention::util::cli::Args;
 use anchor_attention::workload::trace::generate_trace;
@@ -51,6 +66,7 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand() {
         Some("selftest") => selftest(&args),
         Some("serve") => cmd_serve(&args),
+        Some("worker") => cmd_worker(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("bench") => cmd_bench(&args),
         Some("dominance") => cmd_dominance(&args),
@@ -58,7 +74,7 @@ fn main() -> anyhow::Result<()> {
         Some("gen-trace") => cmd_gen_trace(&args),
         _ => {
             eprintln!(
-                "usage: anchor-attn <selftest|serve|calibrate|bench|dominance|tpu-estimate|gen-trace> [flags]"
+                "usage: anchor-attn <selftest|serve|worker|calibrate|bench|dominance|tpu-estimate|gen-trace> [flags]"
             );
             eprintln!("  bench experiments: fig2 tab1 fig4 fig5 fig6 fig7 tab2 tab3 tab4 all micro");
             Ok(())
@@ -102,72 +118,57 @@ fn selftest(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut cfg = load_config(args)?;
-    cfg.trace.rate = args.f64_or("rate", cfg.trace.rate)?;
-    cfg.trace.num_requests = args.usize_or("requests", cfg.trace.num_requests)?;
-    if args.has("anchor-sched") {
-        cfg.server.scheduler.sparsity = SparsityModel::Anchor {
-            stripe_keep: 0.1,
-            anchor_tokens: 256,
-            plan_hit_rate: 0.0,
-            // `--pipeline` prices identification as overlapped with
-            // execution (the async plan pipeline, DESIGN.md §9).
-            pipelined: args.bool_or("pipeline", false)?,
-            executor: ExecutorKind::default(),
-            shards: 1,
-            constants: CostConstants::modeled(),
-        };
-    }
-    // `--executor cpu|pjrt` names the plan executor backend in the
-    // scheduler's cost attribution (config: scheduler.executor).
-    if let Some(s) = args.get("executor") {
-        let kind = ExecutorKind::parse(s)?;
-        if let SparsityModel::Anchor { ref mut executor, .. } = cfg.server.scheduler.sparsity {
-            *executor = kind;
+    // Every serve-time flag funnels through one typed override struct —
+    // the same validated path the config file and the wire front-end
+    // share (`ServerConfig::apply_overrides`): no per-flag surgery on the
+    // scheduler here, and every bad value is a descriptive error.
+    let overrides = ServeOverrides {
+        rate: match args.get("rate") {
+            Some(_) => Some(args.f64_or("rate", 0.0)?),
+            None => None,
+        },
+        num_requests: match args.get("requests") {
+            Some(_) => Some(args.usize_or("requests", 0)?),
+            None => None,
+        },
+        anchor_sched: args.has("anchor-sched"),
+        pipeline: args.bool_or("pipeline", false)?,
+        executor: match args.get("executor") {
+            Some(s) => Some(ExecutorKind::parse(s)?),
+            None => None,
+        },
+        shards: match args.get("shards") {
+            Some(_) => Some(args.usize_or("shards", 1)?),
+            None => None,
+        },
+        transport: match args.get("transport") {
+            Some(s) => Some(SessionTransport::parse(s)?),
+            None => None,
+        },
+        calibration: args.get("calibration").map(|s| s.to_string()),
+        plan_store: args.get("plan-store").map(|s| s.to_string()),
+        max_pending: match args.get("max-pending") {
+            Some(_) => Some(args.usize_or("max-pending", 0)?),
+            None => None,
+        },
+    };
+    overrides.apply_trace(&mut cfg.trace);
+    cfg.server.apply_overrides(&overrides)?;
+    overrides.apply_session(&mut cfg.session)?;
+    if let Some(path) = &overrides.calibration {
+        if let SparsityModel::Anchor { executor, constants: c, .. } = cfg.server.scheduler.sparsity
+        {
+            println!(
+                "calibration: '{}' constants from {path} (ident {:.4}, broadcast {:.6}, \
+                 span {:.2} ns/row, gather {:.2} ns/row, fold {:.3} ns/score)",
+                executor.name(),
+                c.ident_cost_frac,
+                c.plan_broadcast_frac,
+                c.span_ns_per_row,
+                c.gather_ns_per_row,
+                c.fold_ns_per_score
+            );
         }
-    }
-    // `--shards N` (config: scheduler.shards / session.shards): head-group
-    // shard workers — the cost model prices near-linear exec scaling with
-    // a plan-broadcast term (DESIGN.md §12).
-    if args.has("shards") {
-        let n = args.usize_or("shards", 1)?;
-        anyhow::ensure!(n >= 1, "--shards must be >= 1 (got {n})");
-        cfg.session.shards = n;
-        if let SparsityModel::Anchor { ref mut shards, .. } = cfg.server.scheduler.sparsity {
-            *shards = n;
-        }
-    }
-    // `--calibration F` swaps the scheduler's modeled cost constants for
-    // the machine-measured set `anchor-attn calibrate` persisted into the
-    // runtime manifest (DESIGN.md §13). The lookup keys on the executor
-    // backend actually priced, so it runs after --executor is applied.
-    if let Some(path) = args.get("calibration") {
-        let kind = match cfg.server.scheduler.sparsity {
-            SparsityModel::Anchor { executor, .. } => executor,
-            _ => anyhow::bail!(
-                "--calibration needs the anchor scheduler (pass --anchor-sched \
-                 or set scheduler.sparsity in the config)"
-            ),
-        };
-        let c = anchor_attention::runtime::manifest::load_calibration(path, kind)?
-            .ok_or_else(|| {
-                anyhow::anyhow!(
-                    "manifest '{path}' holds no calibration for executor '{}' — run \
-                     `anchor-attn calibrate --manifest {path} --executor {}` first",
-                    kind.name(),
-                    kind.name()
-                )
-            })?;
-        cfg.server.scheduler.sparsity.set_constants(c);
-        println!(
-            "calibration: '{}' constants from {path} (ident {:.4}, broadcast {:.6}, \
-             span {:.2} ns/row, gather {:.2} ns/row, fold {:.3} ns/score)",
-            kind.name(),
-            c.ident_cost_frac,
-            c.plan_broadcast_frac,
-            c.span_ns_per_row,
-            c.gather_ns_per_row,
-            c.fold_ns_per_score
-        );
     }
     // Report the shard pricing actually in effect: the dense model never
     // prices shards, and a config file may set scheduler.shards
@@ -180,15 +181,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
-    // `--plan-store F` (config: session.plan_store) points the session
-    // block at a manifest-backed plan store. The probe below validates
-    // the whole session block — shard count included — at startup: a bad
-    // path, a disabled cache, or a zero shard count fails fast with the
+    // The probe validates the whole session block — shard count, plan
+    // store path, transport included — at startup: a bad path, a disabled
+    // cache, or an unreachable worker endpoint fails fast with the
     // builder's error; a populated store guarantees first-touch
     // plan-cache hits for previously seen keys, so it warms the
     // scheduler's amortization prior (DESIGN.md §11/§12).
-    if let Some(p) = args.get("plan-store") {
-        cfg.session.plan_store = Some(p.to_string());
+    if cfg.session.transport == SessionTransport::Process {
+        println!("transport: process shard workers over the coordinate-only wire (DESIGN.md §14)");
     }
     let probe = cfg.session.sharded_builder(Method::Anchor(cfg.anchor)).build()?;
     if let (Some(total), Some(compatible)) = (probe.store_len(), probe.store_len_compatible()) {
@@ -210,25 +210,51 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut engine = PjrtEngine::new(&cfg.artifact_dir)?;
     let vocab = engine.vocab() as i32;
 
+    // Submissions go through the typed front door: a prompt that cannot
+    // fit `max_seq` is rejected with an explicit Oversized status (and
+    // shows up in the report's outcome counts) instead of being silently
+    // clamped into shape.
     let trace = generate_trace(&cfg.trace);
-    let max_prompt = cfg.server.max_seq.saturating_sub(cfg.trace.decode_max);
-    let requests: Vec<Request> = trace
+    let submissions: Vec<ServeRequest> = trace
         .iter()
         .map(|t| {
-            let len = t.prompt_tokens.min(max_prompt);
-            let prompt: Vec<i32> = (0..len)
+            let prompt: Vec<i32> = (0..t.prompt_tokens)
                 .map(|i| ((t.id as usize * 131 + i * 7) % vocab as usize) as i32)
                 .collect();
-            Request::new(t.id, prompt, t.decode_tokens, t.arrival_s)
+            ServeRequest {
+                id: t.id,
+                prompt,
+                max_new_tokens: t.decode_tokens,
+                arrival_s: t.arrival_s,
+            }
         })
         .collect();
-    println!("serving {} requests (rate {}/s)…", requests.len(), cfg.trace.rate);
+    println!("serving {} requests (rate {}/s)…", submissions.len(), cfg.trace.rate);
 
-    let report = serve(&cfg.server, requests, &mut engine, |e, r| {
+    let (report, responses) = serve_requests(&cfg.server, submissions, &mut engine, |e, r| {
         e.register(r.id, r.prompt.clone());
     })?;
+    for r in responses.iter().filter(|r| !r.is_accepted()) {
+        println!("rejected request {}: {} — {}", r.id, r.status.name(), r.detail);
+    }
     report.print_summary();
     Ok(())
+}
+
+/// `worker` — serve the coordinate-only wire protocol (DESIGN.md §14) as a
+/// shard worker process. Process-transport sessions spawn these
+/// themselves over private UDS sockets; started manually (`--tcp` or
+/// `--uds`) the endpoint can be handed to a session via
+/// `RemoteSpec::Endpoints`. Blocks until a coordinator sends Shutdown
+/// (UDS) or forever accepting connections (TCP).
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    match (args.get("uds"), args.get("tcp")) {
+        (Some(path), None) => {
+            anchor_attention::wire::worker::serve_uds(std::path::Path::new(path))
+        }
+        (None, Some(addr)) => anchor_attention::wire::worker::serve_tcp(addr),
+        _ => anyhow::bail!("worker requires exactly one of --uds PATH or --tcp ADDR"),
+    }
 }
 
 /// `calibrate` — measure the scheduler's cost constants on this machine
@@ -237,10 +263,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// skips measurement and reloads the stored set through the exact loader
 /// serve uses, pricing a 64k context to prove the scheduler consumes it.
 fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
-    use anchor_attention::coordinator::calibrate::calibrate;
+    use anchor_attention::coordinator::calibrate::calibrate_with;
     use anchor_attention::runtime::manifest::{load_calibration, save_calibration};
     let manifest = args.get("manifest");
     let quick = args.bool_or("quick", false)?;
+    // `--wire` measures the plan-broadcast constant over a real framed
+    // socket round-trip (delta-encoded coordinates through the wire
+    // codec) instead of the in-memory clone proxy — the measured number
+    // `serve --transport process` should be priced with (DESIGN.md §14).
+    let wire = args.bool_or("wire", false)?;
     let kinds = match args.get("executor") {
         None => vec![ExecutorKind::default()],
         Some("both") => vec![ExecutorKind::Cpu, ExecutorKind::Pjrt],
@@ -289,11 +320,12 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     }
     for kind in kinds {
         println!(
-            "calibrating executor '{}' ({} mode)…",
+            "calibrating executor '{}' ({} mode{})…",
             kind.name(),
-            if quick { "quick" } else { "full" }
+            if quick { "quick" } else { "full" },
+            if wire { ", wire broadcast" } else { "" }
         );
-        let cal = calibrate(kind, quick);
+        let cal = calibrate_with(kind, quick, wire);
         for r in &cal.rows {
             println!("  {}", r.report_line());
         }
@@ -351,6 +383,15 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         shard_counts.iter().all(|&s| s >= 1),
         "--shards entries must be >= 1 (got {shard_counts:?})"
     );
+    // `--wire-shards 1,2` re-runs the anchor measurement through spawned
+    // process workers (coordinate-only wire, DESIGN.md §14), gating each
+    // row bitwise against the in-thread shard path; rows land under
+    // `wire_grid` in `BENCH_fig2.json`.
+    let wire_shards = args.usize_list_or("wire-shards", &[])?;
+    anyhow::ensure!(
+        wire_shards.iter().all(|&s| s >= 1),
+        "--wire-shards entries must be >= 1 (got {wire_shards:?})"
+    );
     let executors = match args.get("executor") {
         None => vec![ExecutorKind::default()],
         Some("both") => vec![ExecutorKind::Cpu, ExecutorKind::Pjrt],
@@ -381,6 +422,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             None => None,
         },
         shards: if shard_counts.is_empty() { vec![1] } else { shard_counts },
+        wire_shards,
     };
     // micro-only knob: `--baseline F` gates the suite's dimensionless
     // ratios against a committed baseline — a >15% regression on any

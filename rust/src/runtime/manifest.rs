@@ -578,9 +578,10 @@ impl PlanStore {
 }
 
 /// Method-name interning: `SparsePlan::method` is a `&'static str`, so a
-/// deserialized plan must map onto a known method identifier — an unknown
-/// name is a corruption signal, never silently accepted.
-fn method_static(name: &str) -> Result<&'static str> {
+/// deserialized plan (from the plan store or off the wire) must map onto a
+/// known method identifier — an unknown name is a corruption signal, never
+/// silently accepted.
+pub(crate) fn method_static(name: &str) -> Result<&'static str> {
     const KNOWN: [&str; 7] = [
         "full-attn",
         "anchor",

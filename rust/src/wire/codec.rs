@@ -1,0 +1,1036 @@
+//! Typed payload codecs for the wire frames (DESIGN.md §14).
+//!
+//! The protocol exists because plans are *coordinates only*: the reply to
+//! a dispatch is a [`SparsePlan`] per fresh key — delta-encoded stripe
+//! positions and span runs — plus the per-head output rows. K and V never
+//! come back across the wire, and the coordinator never trusts derived
+//! quantities: `predicted_cost` is re-priced from the decoded coordinates
+//! (deterministic integer tile walk, so the re-derivation is bitwise) and
+//! `Coverage` is rebuilt via `plan.coverage()`.
+//!
+//! **Decode validates before it constructs.** `SparsePlan::new`,
+//! `BatchInput::new`, `HeadInput::new` and `Mat::from_vec` all `assert!`
+//! their invariants — a panic is the correct response to a caller bug but
+//! the wrong response to a corrupted frame. Every decoder here therefore
+//! checks the full invariant set (lengths against remaining bytes, group
+//! counts against plan geometry, span/stripe ordering, head-shape
+//! uniformity) and returns a descriptive `Err` first; the constructors'
+//! asserts then re-verify what was already proven.
+//!
+//! Coordinate compression (§3.4 of the paper makes stripes near-arithmetic,
+//! so deltas are small and varints shrink them):
+//! * stripes: varint count, varint first value, then varint deltas that
+//!   must be ≥ 1 — strict ascent is unrepresentable to violate;
+//! * spans: varint count, then per span a varint gap from the previous
+//!   span's end and a varint length ≥ 1 — overlap is unrepresentable.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::frame::{Dec, Enc};
+use crate::attention::exec::ExecutorKind;
+use crate::attention::pipeline::PipelineStats;
+use crate::attention::plan::{GroupPlan, PlanKey, SparsePlan};
+use crate::attention::{anchor, baselines, CostTally, HeadInput, Method, TileConfig};
+use crate::runtime::manifest::method_static;
+use crate::tensor::Mat;
+
+/// Sanity cap on tile edges, steps, and head dims decoded off the wire —
+/// far above anything the grids run, small enough that a corrupted field
+/// cannot drive pathological allocation downstream.
+const MAX_GEOMETRY: u64 = 1 << 20;
+
+// ---------------------------------------------------------------------------
+// Status codes and the error envelope
+// ---------------------------------------------------------------------------
+
+/// Explicit status of a typed reply. Wire-stable discriminants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StatusCode {
+    Ok = 0,
+    /// Request failed validation (empty prompt, prompt too long, …).
+    Invalid = 1,
+    /// Request can never fit the configured pool/sequence budget.
+    Oversized = 2,
+    /// Admission control shed this request: the queue is at capacity.
+    Overloaded = 3,
+    /// Accepted but failed during serving.
+    Failed = 4,
+    /// Peer-side bug or protocol violation.
+    Internal = 5,
+}
+
+impl StatusCode {
+    pub fn from_u8(v: u8) -> Result<StatusCode> {
+        Ok(match v {
+            0 => StatusCode::Ok,
+            1 => StatusCode::Invalid,
+            2 => StatusCode::Oversized,
+            3 => StatusCode::Overloaded,
+            4 => StatusCode::Failed,
+            5 => StatusCode::Internal,
+            other => return Err(anyhow!("wire: unknown status code {other}")),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StatusCode::Ok => "ok",
+            StatusCode::Invalid => "invalid",
+            StatusCode::Oversized => "oversized",
+            StatusCode::Overloaded => "overloaded",
+            StatusCode::Failed => "failed",
+            StatusCode::Internal => "internal",
+        }
+    }
+}
+
+/// Typed failure payload ([`super::frame::FrameKind::Error`] frames and
+/// rejected front-end requests).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ErrorEnvelope {
+    pub status: StatusCode,
+    pub detail: String,
+}
+
+impl ErrorEnvelope {
+    pub fn new(status: StatusCode, detail: impl Into<String>) -> Self {
+        Self { status, detail: detail.into() }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u8(self.status as u8);
+        e.str(&self.detail);
+        e.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ErrorEnvelope> {
+        let mut d = Dec::new(buf);
+        let status = StatusCode::from_u8(d.u8()?)?;
+        let detail = d.str()?;
+        d.finish()?;
+        Ok(ErrorEnvelope { status, detail })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Geometry, coordinates, plans
+// ---------------------------------------------------------------------------
+
+fn put_tile(e: &mut Enc, t: TileConfig) {
+    e.varint(t.b_q as u64);
+    e.varint(t.b_kv as u64);
+}
+
+fn get_tile(d: &mut Dec) -> Result<TileConfig> {
+    let b_q = get_geometry(d, "tile b_q")?;
+    let b_kv = get_geometry(d, "tile b_kv")?;
+    Ok(TileConfig { b_q, b_kv })
+}
+
+/// A geometry-sized field: ≥ 1 and ≤ [`MAX_GEOMETRY`].
+fn get_geometry(d: &mut Dec, what: &str) -> Result<usize> {
+    let v = d.varint()?;
+    if v == 0 || v > MAX_GEOMETRY {
+        return Err(anyhow!("wire: {what} = {v} out of range 1..={MAX_GEOMETRY}"));
+    }
+    Ok(v as usize)
+}
+
+fn put_cost(e: &mut Enc, c: CostTally) {
+    e.u64(c.flops);
+    e.u64(c.kv_bytes);
+    e.u64(c.ident_scores);
+}
+
+fn get_cost(d: &mut Dec) -> Result<CostTally> {
+    Ok(CostTally { flops: d.u64()?, kv_bytes: d.u64()?, ident_scores: d.u64()? })
+}
+
+fn put_group(e: &mut Enc, g: &GroupPlan) {
+    e.varint(g.spans.len() as u64);
+    let mut prev_end = 0u64;
+    for &(s, e_) in &g.spans {
+        e.varint(u64::from(s) - prev_end);
+        e.varint(u64::from(e_) - u64::from(s));
+        prev_end = u64::from(e_);
+    }
+    e.varint(g.stripes.len() as u64);
+    let mut prev = 0u64;
+    for (i, &c) in g.stripes.iter().enumerate() {
+        if i == 0 {
+            e.varint(u64::from(c));
+        } else {
+            e.varint(u64::from(c) - prev);
+        }
+        prev = u64::from(c);
+    }
+}
+
+fn get_group(d: &mut Dec, n: u64) -> Result<GroupPlan> {
+    let span_count = d.varint()? as usize;
+    // Every span costs ≥ 2 payload bytes; bound the allocation by what can
+    // actually be present.
+    if span_count > d.remaining() {
+        return Err(anyhow!(
+            "wire: group declares {span_count} spans but only {} bytes remain",
+            d.remaining()
+        ));
+    }
+    let mut spans = Vec::with_capacity(span_count.min(1024));
+    let mut prev_end = 0u64;
+    for _ in 0..span_count {
+        let start = prev_end
+            .checked_add(d.varint()?)
+            .ok_or_else(|| anyhow!("wire: span start overflows"))?;
+        let len = d.varint()?;
+        if len == 0 {
+            return Err(anyhow!("wire: empty span in plan group"));
+        }
+        let end = start.checked_add(len).ok_or_else(|| anyhow!("wire: span end overflows"))?;
+        if end > n {
+            return Err(anyhow!("wire: span [{start}, {end}) exceeds plan length {n}"));
+        }
+        spans.push((start as u32, end as u32));
+        prev_end = end;
+    }
+    let stripe_count = d.varint()? as usize;
+    if stripe_count > d.remaining() {
+        return Err(anyhow!(
+            "wire: group declares {stripe_count} stripes but only {} bytes remain",
+            d.remaining()
+        ));
+    }
+    let mut stripes = Vec::with_capacity(stripe_count.min(1024));
+    let mut prev = 0u64;
+    for i in 0..stripe_count {
+        let delta = d.varint()?;
+        let col = if i == 0 {
+            delta
+        } else {
+            if delta == 0 {
+                return Err(anyhow!("wire: stripe delta of 0 breaks strict ascent"));
+            }
+            prev.checked_add(delta).ok_or_else(|| anyhow!("wire: stripe overflows"))?
+        };
+        if col >= n {
+            return Err(anyhow!("wire: stripe {col} ≥ plan length {n}"));
+        }
+        stripes.push(col as u32);
+        prev = col;
+    }
+    Ok(GroupPlan { spans, stripes })
+}
+
+/// Encode one plan. The head dim `d_head` rides along because
+/// `predicted_cost` is *not* transmitted — the receiver re-prices the
+/// decoded coordinates against `d_head`, which is bitwise-identical to the
+/// sender's pricing (pure integer walk).
+pub fn put_plan(e: &mut Enc, plan: &SparsePlan, d_head: usize) {
+    e.str(plan.method);
+    e.varint(plan.n as u64);
+    e.varint(d_head as u64);
+    put_tile(e, plan.tile);
+    e.varint(plan.step as u64);
+    put_cost(e, plan.ident_cost);
+    for g in &plan.groups {
+        put_group(e, g);
+    }
+}
+
+/// Decode and fully validate one plan, then (and only then) hand the
+/// coordinates to `SparsePlan::new`, which re-derives `predicted_cost`.
+pub fn get_plan(d: &mut Dec) -> Result<SparsePlan> {
+    let method = method_static(&d.str()?)?;
+    let n = d.varint()?;
+    if n == 0 || n > u64::from(u32::MAX) {
+        return Err(anyhow!("wire: plan length {n} out of range 1..=u32::MAX"));
+    }
+    let d_head = get_geometry(d, "plan head dim")?;
+    let tile = get_tile(d)?;
+    let step = get_geometry(d, "plan step")?;
+    let ident_cost = get_cost(d)?;
+    let expected = tile.q_blocks(n as usize).div_ceil(step);
+    // Each group is ≥ 2 payload bytes; a corrupted n cannot force a giant
+    // allocation past what the frame could hold.
+    if expected > d.remaining() {
+        return Err(anyhow!(
+            "wire: plan geometry implies {expected} groups but only {} bytes remain",
+            d.remaining()
+        ));
+    }
+    let mut groups = Vec::with_capacity(expected.min(1024));
+    for _ in 0..expected {
+        groups.push(get_group(d, n)?);
+    }
+    Ok(SparsePlan::new(method, n as usize, d_head, tile, step, groups, ident_cost))
+}
+
+// ---------------------------------------------------------------------------
+// Tensors and heads
+// ---------------------------------------------------------------------------
+
+fn put_mat(e: &mut Enc, m: &Mat) {
+    e.u32(m.rows as u32);
+    e.u32(m.cols as u32);
+    e.f32_slice(&m.data);
+}
+
+fn get_mat(d: &mut Dec) -> Result<Mat> {
+    let rows = d.u32()? as usize;
+    let cols = d.u32()? as usize;
+    let count = rows
+        .checked_mul(cols)
+        .ok_or_else(|| anyhow!("wire: matrix {rows}×{cols} overflows"))?;
+    let bytes = count
+        .checked_mul(4)
+        .ok_or_else(|| anyhow!("wire: matrix {rows}×{cols} overflows"))?;
+    if bytes > d.remaining() {
+        return Err(anyhow!(
+            "wire: matrix {rows}×{cols} needs {count} f32s but only {} bytes remain",
+            d.remaining()
+        ));
+    }
+    Ok(Mat::from_vec(rows, cols, d.f32_vec(count)?))
+}
+
+fn put_head(e: &mut Enc, h: &HeadInput) {
+    put_mat(e, &h.q);
+    put_mat(e, &h.k);
+    put_mat(e, &h.v);
+}
+
+fn get_head(d: &mut Dec) -> Result<HeadInput> {
+    let q = get_mat(d)?;
+    let k = get_mat(d)?;
+    let v = get_mat(d)?;
+    if q.cols != k.cols || k.rows != v.rows || k.cols != v.cols {
+        return Err(anyhow!(
+            "wire: inconsistent head shapes q {}×{}, k {}×{}, v {}×{}",
+            q.rows, q.cols, k.rows, k.cols, v.rows, v.cols
+        ));
+    }
+    Ok(HeadInput::new(q, k, v))
+}
+
+fn put_key(e: &mut Enc, k: PlanKey) {
+    e.u32(k.layer);
+    e.u32(k.head_group);
+}
+
+fn get_key(d: &mut Dec) -> Result<PlanKey> {
+    Ok(PlanKey { layer: d.u32()?, head_group: d.u32()? })
+}
+
+// ---------------------------------------------------------------------------
+// Configure
+// ---------------------------------------------------------------------------
+
+/// coordinator → worker handshake: which method/executor/pipeline shape
+/// this worker must mirror. A worker's session is built from exactly these
+/// fields, so thread-shard and process-shard configurations cannot drift.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConfigureMsg {
+    pub shard_id: u32,
+    pub method: Method,
+    pub executor: ExecutorKind,
+    pub pipelined: bool,
+    /// Whether the coordinator runs a shared plan cache (false mirrors
+    /// `no_cache` sessions: every head re-identifies).
+    pub cache: bool,
+}
+
+fn put_method(e: &mut Enc, m: &Method) {
+    match m {
+        Method::Full(tile) => {
+            e.u8(0);
+            put_tile(e, *tile);
+        }
+        Method::Anchor(c) => {
+            e.u8(1);
+            put_tile(e, c.tile);
+            e.f32(c.theta);
+            e.varint(c.step as u64);
+            e.varint(c.init_blocks as u64);
+            e.bool(c.use_anchor);
+        }
+        Method::Streaming(c) => {
+            e.u8(2);
+            put_tile(e, c.tile);
+            e.varint(c.global_tokens as u64);
+            e.varint(c.local_tokens as u64);
+        }
+        Method::VerticalSlash(c) => {
+            e.u8(3);
+            put_tile(e, c.tile);
+            e.varint(c.vertical_tokens as u64);
+            e.varint(c.slash_tokens as u64);
+            e.varint(c.last_q as u64);
+        }
+        Method::FlexPrefill(c) => {
+            e.u8(4);
+            put_tile(e, c.tile);
+            e.f64(c.gamma);
+            e.varint(c.min_budget_tokens as u64);
+        }
+        Method::BlockTopK(c) => {
+            e.u8(5);
+            put_tile(e, c.tile);
+            e.varint(c.k as u64);
+            e.bool(c.force_sink_local);
+        }
+    }
+}
+
+fn get_method(d: &mut Dec) -> Result<Method> {
+    let variant = d.u8()?;
+    Ok(match variant {
+        0 => Method::Full(get_tile(d)?),
+        1 => {
+            let tile = get_tile(d)?;
+            let theta = d.f32()?;
+            let step = get_geometry(d, "anchor step")?;
+            let init_blocks = d.varint()? as usize;
+            let use_anchor = d.bool()?;
+            Method::Anchor(anchor::AnchorConfig { tile, theta, step, init_blocks, use_anchor })
+        }
+        2 => {
+            let tile = get_tile(d)?;
+            let global_tokens = d.varint()? as usize;
+            let local_tokens = d.varint()? as usize;
+            Method::Streaming(baselines::streaming::StreamingConfig {
+                tile,
+                global_tokens,
+                local_tokens,
+            })
+        }
+        3 => {
+            let tile = get_tile(d)?;
+            let vertical_tokens = d.varint()? as usize;
+            let slash_tokens = d.varint()? as usize;
+            let last_q = d.varint()? as usize;
+            Method::VerticalSlash(baselines::vertical_slash::VerticalSlashConfig {
+                tile,
+                vertical_tokens,
+                slash_tokens,
+                last_q,
+            })
+        }
+        4 => {
+            let tile = get_tile(d)?;
+            let gamma = d.f64()?;
+            let min_budget_tokens = d.varint()? as usize;
+            Method::FlexPrefill(baselines::flexprefill::FlexPrefillConfig {
+                tile,
+                gamma,
+                min_budget_tokens,
+            })
+        }
+        5 => {
+            let tile = get_tile(d)?;
+            let k = d.varint()? as usize;
+            let force_sink_local = d.bool()?;
+            Method::BlockTopK(baselines::block_topk::BlockTopKConfig { tile, k, force_sink_local })
+        }
+        other => return Err(anyhow!("wire: unknown method variant {other}")),
+    })
+}
+
+impl ConfigureMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u32(self.shard_id);
+        put_method(&mut e, &self.method);
+        e.str(self.executor.name());
+        e.bool(self.pipelined);
+        e.bool(self.cache);
+        e.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ConfigureMsg> {
+        let mut d = Dec::new(buf);
+        let shard_id = d.u32()?;
+        let method = get_method(&mut d)?;
+        let executor = ExecutorKind::parse(&d.str()?)?;
+        let pipelined = d.bool()?;
+        let cache = d.bool()?;
+        d.finish()?;
+        Ok(ConfigureMsg { shard_id, method, executor, pipelined, cache })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------------
+
+/// One sub-batch for one shard: the heads it owns, their `PlanKey`s, and
+/// cache seeds (plans the coordinator already holds for those keys), so
+/// the worker's hit/miss accounting lands exactly where a thread worker's
+/// would. Q/K/V cross the wire **once, inbound**; only coordinates and
+/// output rows come back.
+#[derive(Debug)]
+pub struct DispatchMsg {
+    /// Coordinator-assigned sequence number; the matching reply echoes it.
+    pub seq: u64,
+    pub keys: Vec<PlanKey>,
+    pub seeds: Vec<(PlanKey, Arc<SparsePlan>)>,
+    pub heads: Vec<HeadInput>,
+}
+
+impl DispatchMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let d_head = self.heads.first().map_or(0, |h| h.d());
+        let mut e = Enc::new();
+        e.u64(self.seq);
+        e.u32(self.keys.len() as u32);
+        for &k in &self.keys {
+            put_key(&mut e, k);
+        }
+        e.u32(self.seeds.len() as u32);
+        for (k, p) in &self.seeds {
+            put_key(&mut e, *k);
+            put_plan(&mut e, p, d_head);
+        }
+        e.u32(self.heads.len() as u32);
+        for h in &self.heads {
+            put_head(&mut e, h);
+        }
+        e.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<DispatchMsg> {
+        let mut d = Dec::new(buf);
+        let seq = d.u64()?;
+        let key_count = d.seq_len(8, "dispatch keys")?;
+        let mut keys = Vec::with_capacity(key_count);
+        for _ in 0..key_count {
+            keys.push(get_key(&mut d)?);
+        }
+        let seed_count = d.seq_len(8, "dispatch seeds")?;
+        let mut seeds = Vec::with_capacity(seed_count);
+        for _ in 0..seed_count {
+            let k = get_key(&mut d)?;
+            seeds.push((k, Arc::new(get_plan(&mut d)?)));
+        }
+        let head_count = d.seq_len(24, "dispatch heads")?;
+        if head_count == 0 {
+            return Err(anyhow!("wire: dispatch with no heads"));
+        }
+        if head_count != key_count {
+            return Err(anyhow!(
+                "wire: dispatch has {key_count} keys for {head_count} heads"
+            ));
+        }
+        let mut heads = Vec::with_capacity(head_count);
+        for _ in 0..head_count {
+            heads.push(get_head(&mut d)?);
+        }
+        let (n, dh) = (heads[0].n(), heads[0].d());
+        for h in &heads[1..] {
+            if h.n() != n || h.d() != dh {
+                return Err(anyhow!(
+                    "wire: ragged dispatch batch ({n}×{dh} vs {}×{})",
+                    h.n(),
+                    h.d()
+                ));
+            }
+        }
+        d.finish()?;
+        Ok(DispatchMsg { seq, keys, seeds, heads })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reply
+// ---------------------------------------------------------------------------
+
+/// Worker → coordinator result for one dispatch. Plans are deduplicated:
+/// `plan_of[h]` indexes into `plans`, so a key group's shared plan crosses
+/// the wire once. `Coverage` is never transmitted — the coordinator rebuilds
+/// it from the decoded plan's coordinates.
+#[derive(Debug)]
+pub struct ReplyMsg {
+    pub seq: u64,
+    /// Per-head output rows and execution cost (ident already folded in,
+    /// exactly as a thread worker reports them).
+    pub outs: Vec<(Mat, CostTally)>,
+    /// Plan index per head, into `plans`.
+    pub plan_of: Vec<u32>,
+    pub plans: Vec<Arc<SparsePlan>>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub ident_paid: CostTally,
+    pub pipeline: Option<PipelineStats>,
+}
+
+fn put_pipeline(e: &mut Enc, p: &PipelineStats) {
+    e.f64(p.ident_total_s);
+    e.f64(p.ident_hidden_s);
+    e.f64(p.exec_total_s);
+    e.f64(p.stall_s);
+    e.f64(p.wall_s);
+    e.u64(p.items as u64);
+}
+
+fn get_pipeline(d: &mut Dec) -> Result<PipelineStats> {
+    Ok(PipelineStats {
+        ident_total_s: d.f64()?,
+        ident_hidden_s: d.f64()?,
+        exec_total_s: d.f64()?,
+        stall_s: d.f64()?,
+        wall_s: d.f64()?,
+        items: d.u64()? as usize,
+    })
+}
+
+impl ReplyMsg {
+    pub fn encode(&self, d_head: usize) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.seq);
+        e.u32(self.outs.len() as u32);
+        for (m, c) in &self.outs {
+            put_mat(&mut e, m);
+            put_cost(&mut e, *c);
+        }
+        for &i in &self.plan_of {
+            e.u32(i);
+        }
+        e.u32(self.plans.len() as u32);
+        for p in &self.plans {
+            put_plan(&mut e, p, d_head);
+        }
+        e.u64(self.cache_hits);
+        e.u64(self.cache_misses);
+        put_cost(&mut e, self.ident_paid);
+        match &self.pipeline {
+            Some(p) => {
+                e.bool(true);
+                put_pipeline(&mut e, p);
+            }
+            None => e.bool(false),
+        }
+        e.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ReplyMsg> {
+        let mut d = Dec::new(buf);
+        let seq = d.u64()?;
+        let h = d.seq_len(32, "reply outputs")?;
+        let mut outs = Vec::with_capacity(h);
+        for _ in 0..h {
+            let m = get_mat(&mut d)?;
+            let c = get_cost(&mut d)?;
+            outs.push((m, c));
+        }
+        let mut plan_of = Vec::with_capacity(h);
+        for _ in 0..h {
+            plan_of.push(d.u32()?);
+        }
+        let plan_count = d.seq_len(1, "reply plans")?;
+        let mut plans = Vec::with_capacity(plan_count);
+        for _ in 0..plan_count {
+            plans.push(Arc::new(get_plan(&mut d)?));
+        }
+        for &i in &plan_of {
+            if i as usize >= plans.len() {
+                return Err(anyhow!(
+                    "wire: reply plan index {i} out of range ({plan_count} plans)"
+                ));
+            }
+        }
+        let cache_hits = d.u64()?;
+        let cache_misses = d.u64()?;
+        let ident_paid = get_cost(&mut d)?;
+        let pipeline = if d.bool()? { Some(get_pipeline(&mut d)?) } else { None };
+        d.finish()?;
+        Ok(ReplyMsg {
+            seq,
+            outs,
+            plan_of,
+            plans,
+            cache_hits,
+            cache_misses,
+            ident_paid,
+            pipeline,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Front-end request envelope
+// ---------------------------------------------------------------------------
+
+/// Wire form of a serve submission ([`super::frame::FrameKind::ReqSubmit`]).
+/// Mirrors `coordinator::server::ServeRequest` field-for-field.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReqSubmitMsg {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: u64,
+    pub arrival_s: f64,
+}
+
+impl ReqSubmitMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.id);
+        e.u32(self.prompt.len() as u32);
+        for &t in &self.prompt {
+            e.u32(t as u32);
+        }
+        e.u64(self.max_new_tokens);
+        e.f64(self.arrival_s);
+        e.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ReqSubmitMsg> {
+        let mut d = Dec::new(buf);
+        let id = d.u64()?;
+        let count = d.seq_len(4, "prompt tokens")?;
+        let mut prompt = Vec::with_capacity(count);
+        for _ in 0..count {
+            prompt.push(d.u32()? as i32);
+        }
+        let max_new_tokens = d.u64()?;
+        let arrival_s = d.f64()?;
+        d.finish()?;
+        Ok(ReqSubmitMsg { id, prompt, max_new_tokens, arrival_s })
+    }
+}
+
+/// Admission verdict for one submission
+/// ([`super::frame::FrameKind::ReqReply`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReqReplyMsg {
+    pub id: u64,
+    pub status: StatusCode,
+    pub detail: String,
+}
+
+impl ReqReplyMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.id);
+        e.u8(self.status as u8);
+        e.str(&self.detail);
+        e.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ReqReplyMsg> {
+        let mut d = Dec::new(buf);
+        let id = d.u64()?;
+        let status = StatusCode::from_u8(d.u8()?)?;
+        let detail = d.str()?;
+        d.finish()?;
+        Ok(ReqReplyMsg { id, status, detail })
+    }
+}
+
+/// Health endpoint reply: queue depth against capacity (0 = unbounded).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HealthReplyMsg {
+    pub queued: u64,
+    pub capacity: u64,
+}
+
+impl HealthReplyMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.queued);
+        e.u64(self.capacity);
+        e.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<HealthReplyMsg> {
+        let mut d = Dec::new(buf);
+        let msg = HealthReplyMsg { queued: d.u64()?, capacity: d.u64()? };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Metrics endpoint reply: a JSON document (the serve report summary).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsReplyMsg {
+    pub json: String,
+}
+
+impl MetricsReplyMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.str(&self.json);
+        e.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<MetricsReplyMsg> {
+        let mut d = Dec::new(buf);
+        let msg = MetricsReplyMsg { json: d.str()? };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn anchor_method() -> Method {
+        Method::Anchor(anchor::AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta: 4.0,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        })
+    }
+
+    fn all_methods() -> Vec<Method> {
+        let tile = TileConfig::new(16, 16);
+        vec![
+            Method::Full(tile),
+            anchor_method(),
+            Method::Streaming(baselines::streaming::StreamingConfig {
+                tile,
+                global_tokens: 16,
+                local_tokens: 32,
+            }),
+            Method::VerticalSlash(baselines::vertical_slash::VerticalSlashConfig {
+                tile,
+                vertical_tokens: 8,
+                slash_tokens: 8,
+                last_q: 16,
+            }),
+            Method::FlexPrefill(baselines::flexprefill::FlexPrefillConfig {
+                tile,
+                gamma: 0.9,
+                min_budget_tokens: 16,
+            }),
+            Method::BlockTopK(baselines::block_topk::BlockTopKConfig {
+                tile,
+                k: 3,
+                force_sink_local: true,
+            }),
+        ]
+    }
+
+    #[test]
+    fn every_method_config_round_trips() {
+        for m in all_methods() {
+            let msg = ConfigureMsg {
+                shard_id: 3,
+                method: m,
+                executor: ExecutorKind::Cpu,
+                pipelined: true,
+                cache: false,
+            };
+            let back = ConfigureMsg::decode(&msg.encode()).unwrap();
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn real_plans_round_trip_bitwise_for_all_planners() {
+        let h = rand_head(7, 192, 16);
+        for m in all_methods() {
+            let plan = m.plan(&h);
+            let mut e = Enc::new();
+            put_plan(&mut e, &plan, h.d());
+            let mut d = Dec::new(&e.buf);
+            let back = get_plan(&mut d).unwrap();
+            d.finish().unwrap();
+            // PartialEq covers coordinates, ident_cost, and the re-derived
+            // predicted_cost — the quantity the wire never transmits.
+            assert_eq!(back, plan, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn corrupted_plan_coordinates_are_rejected_not_panicked() {
+        let h = rand_head(8, 64, 8);
+        let plan = anchor_method().plan(&h);
+        let mut e = Enc::new();
+        put_plan(&mut e, &plan, 8);
+        let clean = e.buf.clone();
+        // Every single-byte corruption either still decodes to *some* valid
+        // plan or errors — it must never panic.
+        for i in 0..clean.len() {
+            let mut bad = clean.clone();
+            bad[i] ^= 0x41;
+            let mut d = Dec::new(&bad);
+            let _ = get_plan(&mut d); // must not panic
+        }
+        // Truncations likewise.
+        for cut in 0..clean.len() {
+            let mut d = Dec::new(&clean[..cut]);
+            assert!(get_plan(&mut d).is_err(), "truncation at {cut} decoded");
+        }
+    }
+
+    #[test]
+    fn plan_with_wrong_group_count_is_rejected() {
+        // Hand-encode a plan whose geometry demands 2 groups but carries 0
+        // bytes of them.
+        let mut e = Enc::new();
+        e.str("anchor");
+        e.varint(64); // n → 4 q-blocks
+        e.varint(8); // d
+        e.varint(16);
+        e.varint(16); // tile
+        e.varint(2); // step → 2 groups
+        put_cost(&mut e, CostTally::default());
+        let mut d = Dec::new(&e.buf);
+        assert!(get_plan(&mut d).is_err());
+    }
+
+    #[test]
+    fn unknown_method_name_is_a_corruption_signal() {
+        let h = rand_head(9, 32, 4);
+        let plan = Method::Full(TileConfig::new(16, 16)).plan(&h);
+        let mut e = Enc::new();
+        put_plan(&mut e, &plan, 4);
+        // Overwrite the method string "full-attn" in place (it is the first
+        // field: u32 len + bytes).
+        e.buf[4..13].copy_from_slice(b"full-bttn");
+        let mut d = Dec::new(&e.buf);
+        let err = get_plan(&mut d).unwrap_err().to_string();
+        assert!(err.contains("full-bttn"), "{err}");
+    }
+
+    #[test]
+    fn dispatch_round_trips_with_seeds() {
+        let h0 = rand_head(10, 64, 8);
+        let h1 = rand_head(11, 64, 8);
+        let key = PlanKey::new(0, 0);
+        let plan = Arc::new(anchor_method().plan(&h0));
+        let msg = DispatchMsg {
+            seq: 42,
+            keys: vec![key, PlanKey::new(0, 1)],
+            seeds: vec![(key, plan.clone())],
+            heads: vec![h0.clone(), h1.clone()],
+        };
+        let back = DispatchMsg::decode(&msg.encode()).unwrap();
+        assert_eq!(back.seq, 42);
+        assert_eq!(back.keys, msg.keys);
+        assert_eq!(back.seeds.len(), 1);
+        assert_eq!(*back.seeds[0].1, *plan);
+        assert_eq!(back.heads.len(), 2);
+        // Tensor payloads are bitwise.
+        assert_eq!(back.heads[0].q.data, h0.q.data);
+        assert_eq!(back.heads[1].v.data, h1.v.data);
+    }
+
+    #[test]
+    fn dispatch_key_head_mismatch_rejected() {
+        let h = rand_head(12, 32, 4);
+        let msg =
+            DispatchMsg { seq: 1, keys: vec![PlanKey::new(0, 0)], seeds: vec![], heads: vec![h] };
+        let mut buf = msg.encode();
+        // Append nothing; instead corrupt the key count to 0.
+        buf[8..12].copy_from_slice(&0u32.to_le_bytes());
+        assert!(DispatchMsg::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn reply_round_trips_bitwise() {
+        let h = rand_head(13, 96, 8);
+        let plan = Arc::new(anchor_method().plan(&h));
+        let out = crate::attention::plan::execute_plan(&h, &plan);
+        let msg = ReplyMsg {
+            seq: 7,
+            outs: vec![(out.out.clone(), out.cost)],
+            plan_of: vec![0],
+            plans: vec![plan.clone()],
+            cache_hits: 2,
+            cache_misses: 1,
+            ident_paid: plan.ident_cost,
+            pipeline: Some(PipelineStats {
+                ident_total_s: 0.5,
+                ident_hidden_s: 0.25,
+                exec_total_s: 1.0,
+                stall_s: 0.25,
+                wall_s: 1.25,
+                items: 3,
+            }),
+        };
+        let back = ReplyMsg::decode(&msg.encode(h.d())).unwrap();
+        assert_eq!(back.seq, 7);
+        assert_eq!(back.outs[0].0.data, out.out.data); // bitwise rows
+        assert_eq!(back.outs[0].1, out.cost);
+        assert_eq!(*back.plans[0], *plan);
+        assert_eq!((back.cache_hits, back.cache_misses), (2, 1));
+        assert_eq!(back.ident_paid, plan.ident_cost);
+        assert_eq!(back.pipeline.unwrap().items, 3);
+    }
+
+    #[test]
+    fn reply_with_dangling_plan_index_rejected() {
+        let h = rand_head(14, 32, 4);
+        let plan = Arc::new(Method::Full(TileConfig::new(16, 16)).plan(&h));
+        let out = crate::attention::plan::execute_plan(&h, &plan);
+        let msg = ReplyMsg {
+            seq: 1,
+            outs: vec![(out.out, out.cost)],
+            plan_of: vec![5], // out of range
+            plans: vec![plan],
+            cache_hits: 0,
+            cache_misses: 1,
+            ident_paid: CostTally::default(),
+            pipeline: None,
+        };
+        assert!(ReplyMsg::decode(&msg.encode(4)).is_err());
+    }
+
+    #[test]
+    fn front_end_envelopes_round_trip() {
+        let req = ReqSubmitMsg {
+            id: 9,
+            prompt: vec![1, 2, 3, -4],
+            max_new_tokens: 16,
+            arrival_s: 0.5,
+        };
+        assert_eq!(ReqSubmitMsg::decode(&req.encode()).unwrap(), req);
+        let rep = ReqReplyMsg {
+            id: 9,
+            status: StatusCode::Overloaded,
+            detail: "queue at capacity".into(),
+        };
+        assert_eq!(ReqReplyMsg::decode(&rep.encode()).unwrap(), rep);
+        let health = HealthReplyMsg { queued: 3, capacity: 8 };
+        assert_eq!(HealthReplyMsg::decode(&health.encode()).unwrap(), health);
+        let metrics = MetricsReplyMsg { json: "{\"requests\": 3}".into() };
+        assert_eq!(MetricsReplyMsg::decode(&metrics.encode()).unwrap(), metrics);
+        let env = ErrorEnvelope::new(StatusCode::Internal, "boom");
+        assert_eq!(ErrorEnvelope::decode(&env.encode()).unwrap(), env);
+    }
+
+    #[test]
+    fn delta_encoding_is_compact_for_arithmetic_stripes() {
+        // §3.4: stripes are near-arithmetic, so deltas are small and the
+        // varint coding should beat 4-bytes-per-coordinate by a wide margin.
+        let stripes: Vec<u32> = (0..1000u32).map(|i| 100 + 3 * i).collect();
+        let g = GroupPlan { spans: vec![(0, 16)], stripes };
+        let mut e = Enc::new();
+        put_group(&mut e, &g);
+        assert!(
+            e.buf.len() < 2 + 1002 * 2,
+            "delta coding took {} bytes for 1000 stripes",
+            e.buf.len()
+        );
+        let mut d = Dec::new(&e.buf);
+        let back = get_group(&mut d, 4096).unwrap();
+        assert_eq!(back, g);
+    }
+}

@@ -1,0 +1,487 @@
+//! Binary frame layer of the coordinate-only wire protocol (DESIGN.md §14).
+//!
+//! Every message on a shard or front-end connection is one frame:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic    0x414E4B52 ("ANKR", big-endian byte order on the
+//!                        wire so a hexdump reads the tag)
+//!      4     2  version  WIRE_VERSION, little-endian
+//!      6     2  kind     FrameKind discriminant, little-endian
+//!      8     4  length   payload byte count, little-endian
+//!     12     …  payload  kind-specific body (see [`super::codec`])
+//! ```
+//!
+//! The version rule mirrors the manifest stores (DESIGN.md §11/§13): a
+//! frame whose magic, version, or kind is unknown — or whose declared
+//! length exceeds [`MAX_FRAME_BYTES`] — is **rejected with a descriptive
+//! error, never reinterpreted**. Peers on different protocol versions must
+//! fail loudly at the first frame, not corrupt tensors silently.
+//!
+//! Payload primitives are little-endian fixed-width integers, raw IEEE-754
+//! bit patterns for floats (`f32::to_le_bytes` / `from_le_bytes`, so
+//! tensors round-trip **bitwise** — the shard parity wall depends on it),
+//! and LEB128 varints for the delta-encoded plan coordinates. Every length
+//! read by [`Dec`] is validated against the bytes actually remaining
+//! before any allocation, so a corrupted or hostile length field cannot
+//! trigger an over-allocation or a panic.
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, Result};
+
+/// Frame tag: "ANKR" as big-endian bytes on the wire.
+pub const WIRE_MAGIC: u32 = 0x414E_4B52;
+/// Protocol version. Bump on any payload layout change; peers reject
+/// mismatches loudly (never reinterpret).
+pub const WIRE_VERSION: u16 = 1;
+/// Upper bound on one frame's payload. Generous for sub-batch tensor
+/// dispatch (a 5-head 32k×128 f32 batch is ~250 MiB is far beyond any grid
+/// this repo runs; typical frames are KiB–MiB), tight enough that a
+/// corrupted length field cannot drive a giant allocation.
+pub const MAX_FRAME_BYTES: usize = 256 << 20;
+/// Fixed header size: magic + version + kind + length.
+pub const HEADER_BYTES: usize = 12;
+
+/// Every frame type the protocol speaks. Discriminants are wire-stable:
+/// never reuse a retired value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// coordinator → worker: method/executor/pipeline configuration.
+    Configure = 1,
+    /// worker → coordinator: configuration accepted, ready for dispatch.
+    Ready = 2,
+    /// coordinator → worker: one sub-batch (keys + Q/K/V heads + seeds).
+    Dispatch = 3,
+    /// worker → coordinator: outputs + plan coordinates for one dispatch.
+    Reply = 4,
+    /// Either direction: typed failure ([`super::codec::ErrorEnvelope`]).
+    Error = 5,
+    /// Liveness probe / answer.
+    Ping = 6,
+    Pong = 7,
+    /// coordinator → worker: exit cleanly.
+    Shutdown = 8,
+    /// client → front-end: submit one typed serve request.
+    ReqSubmit = 9,
+    /// front-end → client: admission verdict for one request.
+    ReqReply = 10,
+    /// client → front-end: health endpoint.
+    Health = 11,
+    HealthReply = 12,
+    /// client → front-end: metrics endpoint.
+    Metrics = 13,
+    MetricsReply = 14,
+}
+
+impl FrameKind {
+    pub fn from_u16(v: u16) -> Result<FrameKind> {
+        Ok(match v {
+            1 => FrameKind::Configure,
+            2 => FrameKind::Ready,
+            3 => FrameKind::Dispatch,
+            4 => FrameKind::Reply,
+            5 => FrameKind::Error,
+            6 => FrameKind::Ping,
+            7 => FrameKind::Pong,
+            8 => FrameKind::Shutdown,
+            9 => FrameKind::ReqSubmit,
+            10 => FrameKind::ReqReply,
+            11 => FrameKind::Health,
+            12 => FrameKind::HealthReply,
+            13 => FrameKind::Metrics,
+            14 => FrameKind::MetricsReply,
+            other => return Err(anyhow!("wire: unknown frame kind {other}")),
+        })
+    }
+}
+
+/// Serialize one frame into a fresh buffer (header + payload).
+pub fn encode_frame(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_FRAME_BYTES, "frame payload over MAX_FRAME_BYTES");
+    let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len());
+    buf.extend_from_slice(&WIRE_MAGIC.to_be_bytes());
+    buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    buf.extend_from_slice(&(kind as u16).to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// Write one frame to a stream.
+pub fn write_frame(w: &mut impl Write, kind: FrameKind, payload: &[u8]) -> Result<()> {
+    let buf = encode_frame(kind, payload);
+    w.write_all(&buf).map_err(|e| anyhow!("wire: write failed: {e}"))?;
+    w.flush().map_err(|e| anyhow!("wire: flush failed: {e}"))?;
+    Ok(())
+}
+
+/// Validate a frame header; returns `(kind, payload_len)`.
+fn parse_header(h: &[u8; HEADER_BYTES]) -> Result<(FrameKind, usize)> {
+    let magic = u32::from_be_bytes([h[0], h[1], h[2], h[3]]);
+    if magic != WIRE_MAGIC {
+        return Err(anyhow!("wire: bad frame magic {magic:#010x} (expected {WIRE_MAGIC:#010x})"));
+    }
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    if version != WIRE_VERSION {
+        return Err(anyhow!(
+            "wire: protocol version {version} does not match this build's {WIRE_VERSION} — \
+             versions are rejected, never reinterpreted"
+        ));
+    }
+    let kind = FrameKind::from_u16(u16::from_le_bytes([h[6], h[7]]))?;
+    let len = u32::from_le_bytes([h[8], h[9], h[10], h[11]]) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(anyhow!(
+            "wire: declared payload of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte frame cap"
+        ));
+    }
+    Ok((kind, len))
+}
+
+/// Read one frame from a stream (blocking; honors the stream's read
+/// timeout — a deadline expiry surfaces as an `Err`, never a hang).
+pub fn read_frame(r: &mut impl Read) -> Result<(FrameKind, Vec<u8>)> {
+    let mut header = [0u8; HEADER_BYTES];
+    r.read_exact(&mut header).map_err(|e| anyhow!("wire: read failed: {e}"))?;
+    let (kind, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| anyhow!("wire: truncated {kind:?} frame ({len} byte payload): {e}"))?;
+    Ok((kind, payload))
+}
+
+/// As [`read_frame`], but a clean end-of-stream at the frame boundary is
+/// `Ok(None)` — the worker's accept loop treats a peer hangup as "back to
+/// accept", not an error. EOF *inside* a frame is still corruption-loud.
+pub fn read_frame_opt(r: &mut impl Read) -> Result<Option<(FrameKind, Vec<u8>)>> {
+    let mut header = [0u8; HEADER_BYTES];
+    if let Err(e) = r.read_exact(&mut header) {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            return Ok(None);
+        }
+        return Err(anyhow!("wire: read failed: {e}"));
+    }
+    let (kind, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| anyhow!("wire: truncated {kind:?} frame ({len} byte payload): {e}"))?;
+    Ok(Some((kind, payload)))
+}
+
+/// Decode one frame from an in-memory buffer (the fuzz/property-test
+/// entry). Rejects trailing bytes: a frame is exactly header + payload.
+pub fn decode_frame_bytes(buf: &[u8]) -> Result<(FrameKind, &[u8])> {
+    if buf.len() < HEADER_BYTES {
+        return Err(anyhow!(
+            "wire: {} bytes is shorter than the {HEADER_BYTES}-byte frame header",
+            buf.len()
+        ));
+    }
+    let mut header = [0u8; HEADER_BYTES];
+    header.copy_from_slice(&buf[..HEADER_BYTES]);
+    let (kind, len) = parse_header(&header)?;
+    let body = &buf[HEADER_BYTES..];
+    if body.len() != len {
+        return Err(anyhow!(
+            "wire: declared payload of {len} bytes but {} present",
+            body.len()
+        ));
+    }
+    Ok((kind, body))
+}
+
+/// Payload encoder: fixed-width little-endian primitives + LEB128 varints.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(u8::from(v));
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw IEEE-754 bits — the bitwise-parity-preserving float encoding.
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// LEB128 varint — the delta-coordinate encoding.
+    pub fn varint(&mut self, mut v: u64) {
+        loop {
+            let byte = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                return;
+            }
+            self.buf.push(byte | 0x80);
+        }
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// A whole f32 slice as raw little-endian bits.
+    pub fn f32_slice(&mut self, xs: &[f32]) {
+        self.buf.reserve(xs.len() * 4);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Payload decoder over a borrowed buffer. Every accessor validates the
+/// remaining byte count before touching the buffer, so corrupted frames
+/// produce descriptive `Err`s instead of panics or over-allocations.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(anyhow!(
+                "wire: truncated payload at byte {}: {what} needs {n} bytes, {} remain",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(anyhow!("wire: bool byte must be 0 or 1, got {other}")),
+        }
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2, "u16")?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4, "u32")?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8, "u64")?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4, "f32")?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8, "f64")?;
+        Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let byte = self.take(1, "varint")?[0];
+            v |= u64::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(anyhow!("wire: varint longer than 10 bytes at byte {}", self.pos))
+    }
+
+    /// Read a `u32` element count and verify `count * elem_bytes` fits in
+    /// the remaining payload **before** any allocation.
+    pub fn seq_len(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let count = self.u32()? as usize;
+        let need = count.checked_mul(elem_bytes).ok_or_else(|| {
+            anyhow!("wire: {what} count {count} overflows the frame size")
+        })?;
+        if need > self.remaining() {
+            return Err(anyhow!(
+                "wire: {what} declares {count} elements ({need} bytes) but only {} bytes remain",
+                self.remaining()
+            ));
+        }
+        Ok(count)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.seq_len(1, "string")?;
+        let bytes = self.take(len, "string bytes")?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|e| anyhow!("wire: invalid utf-8 in string: {e}"))
+    }
+
+    pub fn f32_vec(&mut self, count: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(count * 4, "f32 data")?;
+        let mut out = Vec::with_capacity(count);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+
+    /// Payloads must be fully consumed — trailing bytes mean the peer and
+    /// this build disagree on the layout, which the version field should
+    /// have caught; reject rather than guess.
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(anyhow!(
+                "wire: {} unconsumed payload byte(s) after decode — layout mismatch",
+                self.remaining()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_round_trips_through_bytes() {
+        let buf = encode_frame(FrameKind::Ping, b"hello");
+        let (kind, body) = decode_frame_bytes(&buf).unwrap();
+        assert_eq!(kind, FrameKind::Ping);
+        assert_eq!(body, b"hello");
+    }
+
+    #[test]
+    fn frame_round_trips_through_a_stream() {
+        let mut stream: Vec<u8> = Vec::new();
+        write_frame(&mut stream, FrameKind::Reply, &[1, 2, 3]).unwrap();
+        write_frame(&mut stream, FrameKind::Shutdown, &[]).unwrap();
+        let mut r = std::io::Cursor::new(stream);
+        let (k1, p1) = read_frame(&mut r).unwrap();
+        let (k2, p2) = read_frame(&mut r).unwrap();
+        assert_eq!((k1, p1.as_slice()), (FrameKind::Reply, &[1u8, 2, 3][..]));
+        assert_eq!((k2, p2.len()), (FrameKind::Shutdown, 0));
+    }
+
+    #[test]
+    fn wrong_version_is_rejected_loudly() {
+        let mut buf = encode_frame(FrameKind::Ping, &[]);
+        buf[4] = WIRE_VERSION as u8 + 1;
+        let err = decode_frame_bytes(&buf).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_and_bad_kind_are_rejected() {
+        let mut buf = encode_frame(FrameKind::Ping, &[]);
+        buf[0] ^= 0xff;
+        assert!(decode_frame_bytes(&buf).unwrap_err().to_string().contains("magic"));
+        let mut buf = encode_frame(FrameKind::Ping, &[]);
+        buf[6] = 0xee;
+        assert!(decode_frame_bytes(&buf).unwrap_err().to_string().contains("kind"));
+    }
+
+    #[test]
+    fn over_length_declaration_is_rejected_before_allocation() {
+        let mut buf = encode_frame(FrameKind::Ping, &[]);
+        buf[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_frame_bytes(&buf).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.bool(true);
+        e.u16(300);
+        e.u32(70_000);
+        e.u64(1 << 40);
+        e.f32(-0.0);
+        e.f64(std::f64::consts::PI);
+        e.varint(0);
+        e.varint(127);
+        e.varint(128);
+        e.varint(u64::MAX);
+        e.str("stripe");
+        e.f32_slice(&[1.5, -2.5]);
+        let mut d = Dec::new(&e.buf);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert!(d.bool().unwrap());
+        assert_eq!(d.u16().unwrap(), 300);
+        assert_eq!(d.u32().unwrap(), 70_000);
+        assert_eq!(d.u64().unwrap(), 1 << 40);
+        assert_eq!(d.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(d.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(d.varint().unwrap(), 0);
+        assert_eq!(d.varint().unwrap(), 127);
+        assert_eq!(d.varint().unwrap(), 128);
+        assert_eq!(d.varint().unwrap(), u64::MAX);
+        assert_eq!(d.str().unwrap(), "stripe");
+        assert_eq!(d.f32_vec(2).unwrap(), vec![1.5, -2.5]);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_reads_error_instead_of_panicking() {
+        let mut d = Dec::new(&[1, 2]);
+        assert!(d.u32().is_err());
+        let mut d = Dec::new(&[0x80, 0x80]);
+        assert!(d.varint().is_err());
+        // A declared length far past the buffer is caught before allocation.
+        let mut e = Enc::new();
+        e.u32(u32::MAX);
+        let mut d = Dec::new(&e.buf);
+        assert!(d.str().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_fail_finish() {
+        let d = Dec::new(&[1]);
+        assert!(d.finish().is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! Coordinate-only wire protocol (DESIGN.md §14): the first multi-process
+//! subsystem in the repo.
+//!
+//! The architecture's core invariant — shards exchange **plan coordinates,
+//! never K/V** (DESIGN.md §12) — is exactly what makes sharding viable
+//! across a process or machine boundary: a dispatch ships each head's
+//! Q/K/V to one worker once, and everything that comes back or is shared
+//! afterwards is discrete stripe/span coordinates (§3.2–§3.3 of the
+//! paper), delta-encoded into a few bytes per coordinate.
+//!
+//! Layers, bottom-up:
+//! * [`frame`] — length-prefixed, versioned, magic-tagged binary frames;
+//!   unknown versions/kinds/lengths are rejected loudly, never
+//!   reinterpreted (the manifest stores' version rule, applied to a
+//!   socket).
+//! * [`codec`] — typed payloads: Configure/Dispatch/Reply for shard
+//!   traffic, request/health/metrics envelopes for the serve front-end.
+//!   Decoders validate everything before constructing (the repo's
+//!   assert-heavy types must never panic on corrupt input).
+//! * [`worker`] — the `anchor-attn worker` serve loop: stateless across
+//!   dispatches, seeded per dispatch, loud on failure.
+//! * [`transport`] — [`transport::RemoteShard`]: spawned-child or
+//!   TCP/UDS endpoints with connect/read deadlines and
+//!   reconnect-with-backoff at batch boundaries.
+//!
+//! `ShardedSession` plugs in at `ShardedSessionBuilder::remote`, keeping
+//! one merge/accounting path: sharded-over-wire output is bitwise-equal to
+//! sharded-over-threads (gated by `tests/wire_parity.rs` and CI's
+//! `wire-parity` job).
+
+pub mod codec;
+pub mod frame;
+pub mod transport;
+pub mod worker;
+
+pub use codec::{ErrorEnvelope, StatusCode};
+pub use transport::{RemoteSpec, ShardEndpoint, WireTimeouts};

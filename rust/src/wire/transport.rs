@@ -1,0 +1,361 @@
+//! The coordinator side of the wire: [`RemoteShard`] owns one shard
+//! worker's connection, whether that worker is a child process this
+//! coordinator spawned or a pre-started TCP/UDS endpoint.
+//!
+//! Failure contract (mirrors the thread path's "failure is loud"
+//! invariant, DESIGN.md §12): an I/O error, deadline expiry, or worker
+//! `Error` frame **mid-batch** drops the connection and surfaces
+//! immediately as an `Err` — there is no silent in-batch retry that could
+//! mask a crashed worker. Reconnect-with-backoff happens at the *next*
+//! batch's `ensure_connected`, which (in spawn mode) also respawns a dead
+//! child; a subsequent batch on a recovered or surviving worker therefore
+//! succeeds without the caller doing anything.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::codec::{ConfigureMsg, DispatchMsg, ErrorEnvelope, ReplyMsg};
+use super::frame::{read_frame, write_frame, FrameKind};
+
+/// Where one pre-started shard worker listens.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardEndpoint {
+    /// TCP address, e.g. `"127.0.0.1:7401"`.
+    Tcp(String),
+    /// Unix domain socket path.
+    Uds(PathBuf),
+}
+
+/// How a sharded session reaches its remote workers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RemoteSpec {
+    /// Spawn one child process per shard (`<program> worker --uds <sock>`).
+    /// `None` runs the current executable — the production shape for the
+    /// `anchor-attn` binary.
+    Spawn { program: Option<PathBuf> },
+    /// Connect to pre-started workers; length must equal the shard count.
+    Endpoints(Vec<ShardEndpoint>),
+}
+
+/// Per-shard wire deadlines. A worker that cannot be reached within
+/// `connect`, or does not answer a dispatch within `read`, fails that
+/// batch loudly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireTimeouts {
+    pub connect: Duration,
+    pub read: Duration,
+    /// Extra connect attempts after the first (exponential backoff).
+    pub retries: u32,
+    /// Backoff before retry `i` is `backoff × 2^(i−1)`.
+    pub backoff: Duration,
+}
+
+impl Default for WireTimeouts {
+    fn default() -> Self {
+        Self {
+            connect: Duration::from_secs(5),
+            read: Duration::from_secs(30),
+            retries: 2,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Resolved per-shard endpoint (spawn mode carries the socket the child
+/// will bind).
+#[derive(Clone, Debug)]
+pub(crate) enum Endpoint {
+    Spawn { program: PathBuf, socket: PathBuf },
+    Tcp(String),
+    Uds(PathBuf),
+}
+
+/// Distinguishes concurrently-built sessions' spawn sockets within one
+/// process.
+static SOCKET_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+pub(crate) fn spawn_socket_path(shard: usize) -> PathBuf {
+    let c = SOCKET_COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "anchor-wire-{}-{}-{}.sock",
+        std::process::id(),
+        shard,
+        c
+    ))
+}
+
+enum Conn {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+impl Conn {
+    fn set_read_timeout(&self, t: Duration) -> std::io::Result<()> {
+        let t = t.max(Duration::from_millis(1)); // zero means "no timeout" to std
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(Some(t)),
+            Conn::Unix(s) => s.set_read_timeout(Some(t)),
+        }
+    }
+}
+
+/// One shard worker as seen from the coordinator: connection, child
+/// process (spawn mode), and the Configure payload replayed on every
+/// (re)connect so a recovered worker always runs the session's exact
+/// method/executor/pipeline shape.
+pub struct RemoteShard {
+    shard: usize,
+    endpoint: Endpoint,
+    timeouts: WireTimeouts,
+    configure: Vec<u8>,
+    conn: Option<Conn>,
+    child: Option<Child>,
+    seq: u64,
+}
+
+impl RemoteShard {
+    pub(crate) fn new(
+        shard: usize,
+        endpoint: Endpoint,
+        timeouts: WireTimeouts,
+        configure: &ConfigureMsg,
+    ) -> Self {
+        Self {
+            shard,
+            endpoint,
+            timeouts,
+            configure: configure.encode(),
+            conn: None,
+            child: None,
+            seq: 0,
+        }
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Connect (or reconnect) with exponential backoff, replaying the
+    /// Configure handshake. No-op while a connection is live.
+    pub fn ensure_connected(&mut self) -> Result<()> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..=self.timeouts.retries {
+            if attempt > 0 {
+                std::thread::sleep(self.timeouts.backoff * 2u32.pow(attempt - 1));
+            }
+            match self.connect_once() {
+                Ok(conn) => {
+                    self.conn = Some(conn);
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(anyhow!(
+            "worker unreachable after {} attempt(s): {}",
+            self.timeouts.retries + 1,
+            last.expect("at least one attempt ran")
+        ))
+    }
+
+    fn connect_once(&mut self) -> Result<Conn> {
+        let deadline = Instant::now() + self.timeouts.connect;
+        let mut conn = match self.endpoint.clone() {
+            Endpoint::Tcp(addr) => connect_tcp(&addr, deadline)?,
+            Endpoint::Uds(path) => Conn::Unix(connect_uds(&path, deadline)?),
+            Endpoint::Spawn { program, socket } => {
+                self.respawn_if_needed(&program, &socket)?;
+                Conn::Unix(connect_uds(&socket, deadline)?)
+            }
+        };
+        conn.set_read_timeout(self.timeouts.read)
+            .map_err(|e| anyhow!("set read timeout: {e}"))?;
+        // Handshake: Configure → Ready, under the read deadline.
+        write_frame(&mut conn, FrameKind::Configure, &self.configure)?;
+        match read_frame(&mut conn)? {
+            (FrameKind::Ready, _) => Ok(conn),
+            (FrameKind::Error, payload) => {
+                let env = ErrorEnvelope::decode(&payload)?;
+                Err(anyhow!("worker rejected configuration ({}): {}", env.status.name(), env.detail))
+            }
+            (kind, _) => Err(anyhow!("expected Ready, worker sent {kind:?}")),
+        }
+    }
+
+    /// Spawn the child worker if it was never started or has exited.
+    fn respawn_if_needed(&mut self, program: &PathBuf, socket: &PathBuf) -> Result<()> {
+        if let Some(child) = self.child.as_mut() {
+            match child.try_wait() {
+                Ok(None) => return Ok(()), // still running
+                Ok(Some(status)) => {
+                    eprintln!(
+                        "wire: shard {} worker exited ({status}); respawning",
+                        self.shard
+                    );
+                }
+                Err(e) => return Err(anyhow!("poll worker child: {e}")),
+            }
+        }
+        // Remove a stale socket so the connect loop below waits for the
+        // fresh child's bind instead of hitting a dead file.
+        let _ = std::fs::remove_file(socket);
+        let child = Command::new(program)
+            .arg("worker")
+            .arg("--uds")
+            .arg(socket)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .spawn()
+            .map_err(|e| anyhow!("spawn {}: {e}", program.display()))?;
+        self.child = Some(child);
+        Ok(())
+    }
+
+    /// Send one dispatch and wait for its reply. Any failure — send, read
+    /// deadline, worker `Error` frame, decode, or sequence mismatch —
+    /// drops the connection and returns `Err`; the *next* call reconnects.
+    pub fn round_trip(&mut self, msg: &mut DispatchMsg) -> Result<ReplyMsg> {
+        self.ensure_connected()?;
+        self.seq += 1;
+        msg.seq = self.seq;
+        let payload = msg.encode();
+        let result = self.round_trip_inner(&payload, msg.seq);
+        if result.is_err() {
+            self.conn = None;
+        }
+        result
+    }
+
+    fn round_trip_inner(&mut self, payload: &[u8], seq: u64) -> Result<ReplyMsg> {
+        let conn = self.conn.as_mut().expect("connected");
+        write_frame(conn, FrameKind::Dispatch, payload)?;
+        match read_frame(conn)? {
+            (FrameKind::Reply, body) => {
+                let reply = ReplyMsg::decode(&body)?;
+                if reply.seq != seq {
+                    return Err(anyhow!(
+                        "reply sequence {} does not match dispatch {seq}",
+                        reply.seq
+                    ));
+                }
+                Ok(reply)
+            }
+            (FrameKind::Error, body) => {
+                let env = ErrorEnvelope::decode(&body)?;
+                Err(anyhow!("worker error ({}): {}", env.status.name(), env.detail))
+            }
+            (kind, _) => Err(anyhow!("expected Reply, worker sent {kind:?}")),
+        }
+    }
+
+    /// Liveness probe over the live connection.
+    pub fn ping(&mut self) -> Result<()> {
+        self.ensure_connected()?;
+        let conn = self.conn.as_mut().expect("connected");
+        write_frame(conn, FrameKind::Ping, &[])?;
+        match read_frame(conn) {
+            Ok((FrameKind::Pong, _)) => Ok(()),
+            Ok((kind, _)) => {
+                self.conn = None;
+                Err(anyhow!("expected Pong, worker sent {kind:?}"))
+            }
+            Err(e) => {
+                self.conn = None;
+                Err(e)
+            }
+        }
+    }
+}
+
+impl Drop for RemoteShard {
+    fn drop(&mut self) {
+        if let Some(conn) = self.conn.as_mut() {
+            let _ = write_frame(conn, FrameKind::Shutdown, &[]);
+        }
+        if let Some(mut child) = self.child.take() {
+            // The Shutdown frame above lets the worker exit cleanly; kill
+            // is the backstop (a no-op if it already exited), and wait
+            // reaps either way.
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        if let Endpoint::Spawn { socket, .. } = &self.endpoint {
+            let _ = std::fs::remove_file(socket);
+        }
+    }
+}
+
+fn connect_uds(path: &std::path::Path, deadline: Instant) -> Result<UnixStream> {
+    loop {
+        match UnixStream::connect(path) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!("connect to {} timed out: {e}", path.display()));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn connect_tcp(addr: &str, deadline: Instant) -> Result<Conn> {
+    let targets: Vec<SocketAddr> = addr
+        .to_socket_addrs()
+        .map_err(|e| anyhow!("resolve {addr}: {e}"))?
+        .collect();
+    let target = *targets.first().ok_or_else(|| anyhow!("resolve {addr}: no addresses"))?;
+    loop {
+        let remain = deadline.saturating_duration_since(Instant::now());
+        if remain.is_zero() {
+            return Err(anyhow!("connect to {addr} timed out"));
+        }
+        match TcpStream::connect_timeout(&target, remain) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                return Ok(Conn::Tcp(s));
+            }
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!("connect to {addr} timed out: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! The shard worker's serve loop (`anchor-attn worker --uds <path>` /
+//! `--tcp <addr>`): accept a connection, take a Configure handshake, then
+//! answer Dispatch frames until the peer hangs up or sends Shutdown.
+//!
+//! A worker is stateless across dispatches by design: every Dispatch
+//! carries the coordinator's cache seeds for the keys it routes here, the
+//! worker builds a fresh `shard_worker` session around a cache seeded from
+//! exactly those plans, and returns outputs plus plan coordinates. That
+//! makes hit/miss/ident accounting land bit-for-bit where the in-thread
+//! shard path puts it (the thread worker reads the same coordinator cache
+//! the seeds were snapshotted from), and it makes worker crashes cheap:
+//! there is no session state to rebuild on reconnect — the next dispatch
+//! re-seeds.
+//!
+//! Failures inside a dispatch (bad frame, session build error, executor
+//! panic) are caught and answered with a typed `Error` frame; the frame
+//! stream stays aligned (frames are length-delimited), so the connection
+//! survives for the next dispatch unless the transport itself broke.
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::os::unix::net::UnixListener;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::codec::{ConfigureMsg, DispatchMsg, ErrorEnvelope, ReplyMsg, StatusCode};
+use super::frame::{read_frame_opt, write_frame, FrameKind};
+use crate::attention::plan::{BatchInput, PlanCache, SparsePlan};
+use crate::attention::session::AttentionSession;
+use crate::util::threadpool::panic_message;
+
+/// What ended one connection's serve loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnFlow {
+    /// Peer hung up cleanly; go back to accept.
+    Eof,
+    /// Peer sent Shutdown; the worker process should exit.
+    Shutdown,
+}
+
+/// Serve on a Unix domain socket until a peer sends Shutdown. Removes a
+/// stale socket file before binding and cleans up after itself.
+pub fn serve_uds(path: &Path) -> Result<()> {
+    let _ = std::fs::remove_file(path);
+    let listener =
+        UnixListener::bind(path).map_err(|e| anyhow!("worker: bind {}: {e}", path.display()))?;
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => match serve_connection(s) {
+                Ok(ConnFlow::Shutdown) => break,
+                Ok(ConnFlow::Eof) => {}
+                Err(e) => eprintln!("worker: connection failed: {e}"),
+            },
+            Err(e) => eprintln!("worker: accept failed: {e}"),
+        }
+    }
+    let _ = std::fs::remove_file(path);
+    Ok(())
+}
+
+/// Serve on a TCP address until a peer sends Shutdown. Prints the bound
+/// address (useful with an ephemeral `:0` port).
+pub fn serve_tcp(addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).map_err(|e| anyhow!("worker: bind {addr}: {e}"))?;
+    if let Ok(local) = listener.local_addr() {
+        println!("worker listening on {local}");
+    }
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                match serve_connection(s) {
+                    Ok(ConnFlow::Shutdown) => break,
+                    Ok(ConnFlow::Eof) => {}
+                    Err(e) => eprintln!("worker: connection failed: {e}"),
+                }
+            }
+            Err(e) => eprintln!("worker: accept failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Drive one connection: Configure handshake, then Dispatch/Ping until
+/// EOF or Shutdown. Public within the crate so tests can serve an
+/// in-process stream without spawning the binary.
+pub fn serve_connection<S: Read + Write>(mut stream: S) -> Result<ConnFlow> {
+    // Handshake: the first real frame must be Configure.
+    let cfg = loop {
+        let Some((kind, payload)) = read_frame_opt(&mut stream)? else {
+            return Ok(ConnFlow::Eof);
+        };
+        match kind {
+            FrameKind::Configure => break ConfigureMsg::decode(&payload)?,
+            FrameKind::Ping => write_frame(&mut stream, FrameKind::Pong, &[])?,
+            FrameKind::Shutdown => return Ok(ConnFlow::Shutdown),
+            other => {
+                let env = ErrorEnvelope::new(
+                    StatusCode::Internal,
+                    format!("expected Configure, got {other:?}"),
+                );
+                write_frame(&mut stream, FrameKind::Error, &env.encode())?;
+                return Err(anyhow!("worker: handshake got {other:?}"));
+            }
+        }
+    };
+    write_frame(&mut stream, FrameKind::Ready, &[])?;
+
+    loop {
+        let Some((kind, payload)) = read_frame_opt(&mut stream)? else {
+            return Ok(ConnFlow::Eof);
+        };
+        match kind {
+            FrameKind::Dispatch => match run_dispatch(&cfg, &payload) {
+                Ok(reply) => write_frame(&mut stream, FrameKind::Reply, &reply)?,
+                Err(e) => {
+                    // Frames are length-delimited, so the stream is still
+                    // aligned: report the failure and keep serving.
+                    let env = ErrorEnvelope::new(StatusCode::Failed, e.to_string());
+                    write_frame(&mut stream, FrameKind::Error, &env.encode())?;
+                }
+            },
+            FrameKind::Ping => write_frame(&mut stream, FrameKind::Pong, &[])?,
+            FrameKind::Shutdown => return Ok(ConnFlow::Shutdown),
+            other => {
+                let env = ErrorEnvelope::new(
+                    StatusCode::Internal,
+                    format!("unexpected {other:?} frame"),
+                );
+                write_frame(&mut stream, FrameKind::Error, &env.encode())?;
+                return Err(anyhow!("worker: unexpected {other:?} frame"));
+            }
+        }
+    }
+}
+
+/// Decode one dispatch, run it through a fresh seeded `shard_worker`
+/// session, and encode the reply. Executor panics are caught and reported
+/// as errors — the same loud-failure contract as the thread path.
+fn run_dispatch(cfg: &ConfigureMsg, payload: &[u8]) -> Result<Vec<u8>> {
+    let msg = DispatchMsg::decode(payload)?;
+    // DispatchMsg::decode proved non-empty + uniform shapes, so the
+    // constructor's asserts cannot fire.
+    let batch = BatchInput::new(msg.heads);
+    let (n, d) = (batch.n(), batch.d());
+
+    let cache = Arc::new(PlanCache::new());
+    if cfg.cache {
+        // Seed only plans matching this batch's geometry — the same filter
+        // the coordinator's store seeding applies (`seed_cache_from_store`).
+        let (tile, step) = cfg.method.plan_geometry();
+        for (key, plan) in &msg.seeds {
+            if plan.n == n
+                && plan.tile == tile
+                && plan.step == step
+                && plan.method == cfg.method.name()
+            {
+                cache.seed(*key, plan.clone());
+            }
+        }
+    }
+
+    let mut b = AttentionSession::builder(cfg.method.clone())
+        .executor(cfg.executor)
+        .shard_worker();
+    b = if cfg.cache { b.shared_cache(cache.clone()) } else { b.no_cache() };
+    if cfg.pipelined {
+        b = b.pipelined(true);
+    }
+    let mut session = b.build()?;
+    session.set_keys(msg.keys);
+
+    let run = catch_unwind(AssertUnwindSafe(|| session.run_batch(&batch)));
+    let out = match run {
+        Ok(r) => r?,
+        Err(p) => return Err(anyhow!("{}", panic_message(&*p))),
+    };
+
+    // Deduplicate plans by Arc identity: a key group's shared plan crosses
+    // the wire once, and the coordinator reassembles the sharing.
+    let mut plans: Vec<Arc<SparsePlan>> = Vec::new();
+    let mut plan_of = Vec::with_capacity(out.plans.len());
+    for p in &out.plans {
+        let idx = match plans.iter().position(|q| Arc::ptr_eq(q, p)) {
+            Some(i) => i,
+            None => {
+                plans.push(p.clone());
+                plans.len() - 1
+            }
+        };
+        plan_of.push(idx as u32);
+    }
+    let reply = ReplyMsg {
+        seq: msg.seq,
+        outs: out.outputs.into_iter().map(|o| (o.out, o.cost)).collect(),
+        plan_of,
+        plans,
+        cache_hits: out.cache_hits,
+        cache_misses: out.cache_misses,
+        ident_paid: out.ident_cost_paid,
+        pipeline: out.pipeline,
+    };
+    Ok(reply.encode(d))
+}

@@ -1,0 +1,532 @@
+//! Fuzz-style property wall for the wire protocol (DESIGN.md §14):
+//!
+//! * **Round-trip** — every frame kind and every message type survives
+//!   encode → frame → decode bitwise: tensors compare by raw f32 bits,
+//!   plans by full coordinate/cost equality, and the header never
+//!   reinterprets a byte.
+//! * **Corruption is loud** — every strict truncation of a valid frame or
+//!   payload is an `Err`; wrong version, bad magic, unknown kind,
+//!   over-cap length, and trailing bytes are all rejected with
+//!   descriptive messages.
+//! * **Corruption never panics** — random single-bit flips anywhere in a
+//!   frame either decode to a valid value or return `Err`; hostile
+//!   all-0xFF buffers (giant declared counts) are rejected by the
+//!   pre-allocation guards in every message decoder.
+//!
+//! Uses the homegrown `util::proptest` harness (proptest itself is
+//! unavailable offline), mirroring `prop_shard_parity.rs` idiom.
+
+use std::sync::Arc;
+
+use anchor_attention::attention::anchor::AnchorConfig;
+use anchor_attention::attention::baselines::block_topk::BlockTopKConfig;
+use anchor_attention::attention::baselines::flexprefill::FlexPrefillConfig;
+use anchor_attention::attention::baselines::streaming::StreamingConfig;
+use anchor_attention::attention::baselines::vertical_slash::VerticalSlashConfig;
+use anchor_attention::attention::exec::ExecutorKind;
+use anchor_attention::attention::pipeline::PipelineStats;
+use anchor_attention::attention::plan::{PlanKey, SparsePlan};
+use anchor_attention::attention::{CostTally, HeadInput, Method, TileConfig};
+use anchor_attention::tensor::Mat;
+use anchor_attention::util::proptest::{check, ensure, Config};
+use anchor_attention::util::rng::Pcg64;
+use anchor_attention::wire::codec::{
+    ConfigureMsg, DispatchMsg, ErrorEnvelope, HealthReplyMsg, MetricsReplyMsg, ReplyMsg,
+    ReqReplyMsg, ReqSubmitMsg, StatusCode,
+};
+use anchor_attention::wire::frame::{
+    decode_frame_bytes, encode_frame, read_frame, read_frame_opt, write_frame, FrameKind,
+    HEADER_BYTES, MAX_FRAME_BYTES, WIRE_VERSION,
+};
+
+const ALL_KINDS: [FrameKind; 14] = [
+    FrameKind::Configure,
+    FrameKind::Ready,
+    FrameKind::Dispatch,
+    FrameKind::Reply,
+    FrameKind::Error,
+    FrameKind::Ping,
+    FrameKind::Pong,
+    FrameKind::Shutdown,
+    FrameKind::ReqSubmit,
+    FrameKind::ReqReply,
+    FrameKind::Health,
+    FrameKind::HealthReply,
+    FrameKind::Metrics,
+    FrameKind::MetricsReply,
+];
+
+const ALL_STATUS: [StatusCode; 6] = [
+    StatusCode::Ok,
+    StatusCode::Invalid,
+    StatusCode::Oversized,
+    StatusCode::Overloaded,
+    StatusCode::Failed,
+    StatusCode::Internal,
+];
+
+fn rand_head(rng: &mut Pcg64, n: usize, d: usize) -> HeadInput {
+    HeadInput::new(
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+    )
+}
+
+fn method_for(idx: usize, theta: f32, step: usize) -> Method {
+    let tile = TileConfig::new(16, 16);
+    match idx {
+        0 => Method::Full(tile),
+        1 => Method::Anchor(AnchorConfig {
+            tile,
+            theta,
+            step,
+            init_blocks: 1,
+            use_anchor: true,
+        }),
+        2 => Method::Streaming(StreamingConfig { tile, global_tokens: 16, local_tokens: 32 }),
+        3 => Method::VerticalSlash(VerticalSlashConfig {
+            tile,
+            vertical_tokens: 8,
+            slash_tokens: 8,
+            last_q: 16,
+        }),
+        4 => Method::FlexPrefill(FlexPrefillConfig { tile, gamma: 0.85, min_budget_tokens: 16 }),
+        _ => Method::BlockTopK(BlockTopKConfig { tile, k: 3, force_sink_local: true }),
+    }
+}
+
+fn rand_tally(rng: &mut Pcg64) -> CostTally {
+    CostTally {
+        flops: rng.next_below(1 << 40),
+        kv_bytes: rng.next_below(1 << 33),
+        ident_scores: rng.next_below(1 << 20),
+    }
+}
+
+fn mats_bitwise_equal(a: &Mat, b: &Mat) -> bool {
+    a.rows == b.rows
+        && a.cols == b.cols
+        && a.data.iter().map(|x| x.to_bits()).eq(b.data.iter().map(|x| x.to_bits()))
+}
+
+/// One randomized wire scenario: shapes, method, seed-plan count.
+#[derive(Clone, Debug)]
+struct WireCase {
+    seed: u64,
+    n: usize,
+    heads: usize,
+    method_idx: usize,
+    seeds: usize,
+    pipelined: bool,
+}
+
+fn gen_case(rng: &mut Pcg64) -> WireCase {
+    WireCase {
+        seed: rng.next_u64(),
+        n: 32 + rng.next_below(64) as usize,
+        heads: 1 + rng.next_below(4) as usize,
+        method_idx: rng.next_below(6) as usize,
+        seeds: rng.next_below(3) as usize,
+        pipelined: rng.next_below(2) == 1,
+    }
+}
+
+fn shrink_case(c: &WireCase) -> Vec<WireCase> {
+    let mut out = Vec::new();
+    if c.n > 32 {
+        out.push(WireCase { n: 32, ..c.clone() });
+    }
+    if c.heads > 1 {
+        out.push(WireCase { heads: 1, ..c.clone() });
+    }
+    if c.seeds > 0 {
+        out.push(WireCase { seeds: 0, ..c.clone() });
+    }
+    if c.method_idx > 0 {
+        out.push(WireCase { method_idx: 0, ..c.clone() });
+    }
+    out
+}
+
+/// Build a representative Dispatch message: real planner plans as cache
+/// seeds, random Q/K/V heads, GQA-style repeated keys.
+fn dispatch_for(c: &WireCase) -> DispatchMsg {
+    let mut rng = Pcg64::seeded(c.seed);
+    let d = 8;
+    let m = method_for(c.method_idx, 3.0, 2);
+    let heads: Vec<HeadInput> = (0..c.heads).map(|_| rand_head(&mut rng, c.n, d)).collect();
+    let keys: Vec<PlanKey> =
+        (0..c.heads).map(|i| PlanKey::new((i % 2) as u32, (i % 3) as u32)).collect();
+    let seeds: Vec<(PlanKey, Arc<SparsePlan>)> = (0..c.seeds)
+        .map(|i| (PlanKey::new(9, i as u32), Arc::new(m.plan(&heads[i % heads.len()]))))
+        .collect();
+    DispatchMsg { seq: rng.next_u64(), keys, seeds, heads }
+}
+
+/// Build a representative Reply message: output rows, deduplicated real
+/// plans, accounting counters, optional pipeline stats.
+fn reply_for(c: &WireCase) -> (ReplyMsg, usize) {
+    let mut rng = Pcg64::seeded(c.seed ^ 0xA5A5);
+    let d = 8;
+    let m = method_for(c.method_idx, 3.0, 2);
+    let plan_heads: Vec<HeadInput> =
+        (0..c.heads.min(2)).map(|_| rand_head(&mut rng, c.n, d)).collect();
+    let plans: Vec<Arc<SparsePlan>> =
+        plan_heads.iter().map(|h| Arc::new(m.plan(h))).collect();
+    let outs: Vec<(Mat, CostTally)> = (0..c.heads)
+        .map(|_| (Mat::from_fn(c.n, d, |_, _| rng.normal()), rand_tally(&mut rng)))
+        .collect();
+    let plan_of: Vec<u32> = (0..c.heads).map(|i| (i % plans.len()) as u32).collect();
+    let pipeline = c.pipelined.then(|| PipelineStats {
+        ident_total_s: 0.5,
+        ident_hidden_s: 0.25,
+        exec_total_s: 1.5,
+        stall_s: 0.25,
+        wall_s: 2.0,
+        items: c.heads,
+    });
+    let msg = ReplyMsg {
+        seq: rng.next_u64(),
+        outs,
+        plan_of,
+        plans,
+        cache_hits: rng.next_below(1 << 16),
+        cache_misses: rng.next_below(1 << 16),
+        ident_paid: rand_tally(&mut rng),
+        pipeline,
+    };
+    (msg, d)
+}
+
+// ---------------------------------------------------------------------------
+// Round-trip
+// ---------------------------------------------------------------------------
+
+/// Every frame kind round-trips through bytes and through a stream, and
+/// a clean EOF at the frame boundary is `Ok(None)` — never an error.
+#[test]
+fn every_frame_kind_round_trips() {
+    let payloads: [&[u8]; 3] = [b"", b"x", &[0xABu8; 257]];
+    for kind in ALL_KINDS {
+        for payload in payloads {
+            let buf = encode_frame(kind, payload);
+            assert_eq!(buf.len(), HEADER_BYTES + payload.len());
+            let (k, body) = decode_frame_bytes(&buf).unwrap();
+            assert_eq!((k, body), (kind, payload), "{kind:?} byte round-trip");
+
+            let mut stream: Vec<u8> = Vec::new();
+            write_frame(&mut stream, kind, payload).unwrap();
+            assert_eq!(stream, buf, "{kind:?}: write_frame must equal encode_frame");
+            let mut r = std::io::Cursor::new(stream);
+            let (k2, p2) = read_frame(&mut r).unwrap();
+            assert_eq!((k2, p2.as_slice()), (kind, payload), "{kind:?} stream round-trip");
+            assert!(read_frame_opt(&mut r).unwrap().is_none(), "clean EOF is Ok(None)");
+        }
+    }
+}
+
+/// Property: random payload bytes round-trip under every kind.
+#[test]
+fn prop_random_payloads_round_trip() {
+    let cfg = Config { cases: 64, seed: 0x31BE, ..Default::default() };
+    check(
+        &cfg,
+        |rng| {
+            let len = rng.next_below(2048) as usize;
+            let kind_idx = rng.next_below(ALL_KINDS.len() as u64) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            (kind_idx, bytes)
+        },
+        |(k, bytes)| {
+            let mut out = Vec::new();
+            if !bytes.is_empty() {
+                out.push((*k, bytes[..bytes.len() / 2].to_vec()));
+                out.push((*k, Vec::new()));
+            }
+            out
+        },
+        |(kind_idx, bytes)| {
+            let kind = ALL_KINDS[*kind_idx];
+            let buf = encode_frame(kind, bytes);
+            let (k, body) = decode_frame_bytes(&buf).map_err(|e| e.to_string())?;
+            ensure(k == kind, format!("kind {k:?} != {kind:?}"))?;
+            ensure(body == &bytes[..], "payload bytes differ")
+        },
+    );
+}
+
+/// Deterministic round-trip of every fixed-shape control message:
+/// Configure across all six methods, both executors, and both flag
+/// settings; ErrorEnvelope across all six status codes; the request
+/// envelope with edge-case token values; health and metrics replies.
+#[test]
+fn control_messages_round_trip_exactly() {
+    for idx in 0..6 {
+        for (e_i, executor) in [ExecutorKind::Cpu, ExecutorKind::Pjrt].into_iter().enumerate() {
+            let msg = ConfigureMsg {
+                shard_id: (idx * 2 + e_i) as u32,
+                method: method_for(idx, 2.5, 3),
+                executor,
+                pipelined: idx % 2 == 0,
+                cache: idx % 2 == 1,
+            };
+            let back = ConfigureMsg::decode(&msg.encode()).unwrap();
+            assert_eq!(back, msg, "configure method {idx} executor {e_i}");
+        }
+    }
+
+    for status in ALL_STATUS {
+        let msg = ErrorEnvelope::new(status, format!("detail for {}", status.name()));
+        assert_eq!(ErrorEnvelope::decode(&msg.encode()).unwrap(), msg);
+    }
+
+    // Prompt tokens are i32 (negative sentinels included); arrival times
+    // are raw f64 bits.
+    let submits = [
+        ReqSubmitMsg { id: 0, prompt: vec![], max_new_tokens: 0, arrival_s: 0.0 },
+        ReqSubmitMsg { id: 7, prompt: vec![1, -1, i32::MAX, i32::MIN], max_new_tokens: 64, arrival_s: -1.5 },
+        ReqSubmitMsg { id: u64::MAX, prompt: vec![42; 300], max_new_tokens: u64::MAX, arrival_s: 1e300 },
+    ];
+    for msg in submits {
+        assert_eq!(ReqSubmitMsg::decode(&msg.encode()).unwrap(), msg);
+    }
+
+    let reply = ReqReplyMsg {
+        id: 3,
+        status: StatusCode::Overloaded,
+        detail: "queue full (2 pending); retry later — ¡überfüllt!".to_string(),
+    };
+    assert_eq!(ReqReplyMsg::decode(&reply.encode()).unwrap(), reply);
+
+    let health = HealthReplyMsg { queued: 12, capacity: 0 };
+    assert_eq!(HealthReplyMsg::decode(&health.encode()).unwrap(), health);
+
+    let metrics = MetricsReplyMsg { json: "{\"completed\": 2, \"π\": 3.14}".to_string() };
+    assert_eq!(MetricsReplyMsg::decode(&metrics.encode()).unwrap(), metrics);
+}
+
+/// Property: a Dispatch built from real planner plans round-trips
+/// bitwise — keys, seed plans (coordinates + cost), and Q/K/V tensors by
+/// raw f32 bits. DispatchMsg has no PartialEq (tensors), so fields are
+/// compared explicitly.
+#[test]
+fn prop_dispatch_round_trips_bitwise() {
+    let cfg = Config::heavy(12, 0xD15B);
+    check(&cfg, gen_case, shrink_case, |c| {
+        let msg = dispatch_for(c);
+        let buf = encode_frame(FrameKind::Dispatch, &msg.encode());
+        let (kind, payload) = decode_frame_bytes(&buf).map_err(|e| e.to_string())?;
+        ensure(kind == FrameKind::Dispatch, "frame kind")?;
+        let back = DispatchMsg::decode(payload).map_err(|e| format!("decode: {e}"))?;
+        ensure(back.seq == msg.seq, "seq differs")?;
+        ensure(back.keys == msg.keys, "keys differ")?;
+        ensure(back.seeds.len() == msg.seeds.len(), "seed count differs")?;
+        for ((ka, pa), (kb, pb)) in msg.seeds.iter().zip(&back.seeds) {
+            ensure(ka == kb, "seed key differs")?;
+            ensure(**pa == **pb, "seed plan differs")?;
+        }
+        ensure(back.heads.len() == msg.heads.len(), "head count differs")?;
+        for (h, (a, b)) in msg.heads.iter().zip(&back.heads).enumerate() {
+            for (name, x, y) in [("q", &a.q, &b.q), ("k", &a.k, &b.k), ("v", &a.v, &b.v)] {
+                ensure(
+                    mats_bitwise_equal(x, y),
+                    format!("head {h} {name} not bitwise-equal"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: a Reply round-trips bitwise — output rows by raw f32 bits,
+/// deduplicated plans by full equality, counters and pipeline stats
+/// exactly. ReplyMsg has no PartialEq (tensors), so fields are compared
+/// explicitly.
+#[test]
+fn prop_reply_round_trips_bitwise() {
+    let cfg = Config::heavy(12, 0x4E97);
+    check(&cfg, gen_case, shrink_case, |c| {
+        let (msg, d) = reply_for(c);
+        let buf = encode_frame(FrameKind::Reply, &msg.encode(d));
+        let (kind, payload) = decode_frame_bytes(&buf).map_err(|e| e.to_string())?;
+        ensure(kind == FrameKind::Reply, "frame kind")?;
+        let back = ReplyMsg::decode(payload).map_err(|e| format!("decode: {e}"))?;
+        ensure(back.seq == msg.seq, "seq differs")?;
+        ensure(back.outs.len() == msg.outs.len(), "output count differs")?;
+        for (h, ((ma, ca), (mb, cb))) in msg.outs.iter().zip(&back.outs).enumerate() {
+            ensure(mats_bitwise_equal(ma, mb), format!("out {h} not bitwise-equal"))?;
+            ensure(ca == cb, format!("out {h} cost differs"))?;
+        }
+        ensure(back.plan_of == msg.plan_of, "plan_of differs")?;
+        ensure(back.plans.len() == msg.plans.len(), "plan count differs")?;
+        for (i, (pa, pb)) in msg.plans.iter().zip(&back.plans).enumerate() {
+            ensure(**pa == **pb, format!("plan {i} differs"))?;
+        }
+        ensure(
+            (back.cache_hits, back.cache_misses) == (msg.cache_hits, msg.cache_misses),
+            "hit accounting differs",
+        )?;
+        ensure(back.ident_paid == msg.ident_paid, "ident_paid differs")?;
+        ensure(back.pipeline == msg.pipeline, "pipeline stats differ")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Corruption: loud rejection, never a panic
+// ---------------------------------------------------------------------------
+
+/// Every strict truncation of a valid frame fails frame decode, and every
+/// strict truncation of a valid message payload fails message decode —
+/// the decoders are deterministic stream reads, so missing bytes always
+/// surface before a value is constructed.
+#[test]
+fn every_truncation_is_rejected() {
+    let c = WireCase { seed: 9, n: 32, heads: 1, method_idx: 1, seeds: 1, pipelined: true };
+    let dispatch = dispatch_for(&c).encode();
+    let (reply_msg, d) = reply_for(&c);
+    let reply = reply_msg.encode(d);
+    let configure = ConfigureMsg {
+        shard_id: 1,
+        method: method_for(1, 3.0, 2),
+        executor: ExecutorKind::Cpu,
+        pipelined: false,
+        cache: true,
+    }
+    .encode();
+
+    let frame = encode_frame(FrameKind::Dispatch, &dispatch);
+    for cut in 0..frame.len() {
+        assert!(
+            decode_frame_bytes(&frame[..cut]).is_err(),
+            "frame truncated to {cut}/{} bytes must be rejected",
+            frame.len()
+        );
+    }
+
+    for cut in 0..dispatch.len() {
+        assert!(
+            DispatchMsg::decode(&dispatch[..cut]).is_err(),
+            "dispatch payload truncated to {cut}/{} bytes must be rejected",
+            dispatch.len()
+        );
+    }
+    for cut in 0..reply.len() {
+        assert!(
+            ReplyMsg::decode(&reply[..cut]).is_err(),
+            "reply payload truncated to {cut}/{} bytes must be rejected",
+            reply.len()
+        );
+    }
+    for cut in 0..configure.len() {
+        assert!(
+            ConfigureMsg::decode(&configure[..cut]).is_err(),
+            "configure payload truncated to {cut}/{} bytes must be rejected",
+            configure.len()
+        );
+    }
+
+    // EOF inside a frame on the stream path is corruption-loud, not
+    // Ok(None): the header promises a payload that never arrives.
+    let mut r = std::io::Cursor::new(frame[..HEADER_BYTES + 3].to_vec());
+    assert!(read_frame(&mut r).is_err());
+}
+
+/// Property: flipping any single bit of a valid frame either yields a
+/// descriptive `Err` or decodes to some valid value — never a panic. In
+/// the header, only the kind field can survive a flip (onto another
+/// valid kind); magic, version, and length flips must always be
+/// rejected.
+#[test]
+fn prop_single_bit_flips_never_panic() {
+    let c = WireCase { seed: 11, n: 32, heads: 2, method_idx: 1, seeds: 1, pipelined: false };
+    let frame = encode_frame(FrameKind::Dispatch, &dispatch_for(&c).encode());
+    let cfg = Config { cases: 256, seed: 0xF11B, ..Default::default() };
+    let len = frame.len();
+    check(
+        &cfg,
+        move |rng| (rng.next_below(len as u64) as usize, rng.next_below(8) as u8),
+        |&(idx, bit)| {
+            let mut out = Vec::new();
+            if idx > 0 {
+                out.push((0, bit));
+                out.push((idx / 2, bit));
+            }
+            if bit > 0 {
+                out.push((idx, 0));
+            }
+            out
+        },
+        |&(idx, bit)| {
+            let mut buf = frame.clone();
+            buf[idx] ^= 1 << bit;
+            match decode_frame_bytes(&buf) {
+                Err(_) => Ok(()), // loud rejection is the expected outcome
+                Ok((_, payload)) => {
+                    // Header flips can only survive in the kind field
+                    // (bytes 6..8): magic, version, and length are pinned.
+                    ensure(
+                        idx >= HEADER_BYTES || (6..8).contains(&idx),
+                        format!("header flip at byte {idx} bit {bit} must be rejected"),
+                    )?;
+                    // Message decode over a corrupted payload must return
+                    // a Result, not panic; either verdict is acceptable.
+                    let _ = DispatchMsg::decode(payload);
+                    let _ = ReplyMsg::decode(payload);
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+/// Header-field corruption is rejected with a message naming the field,
+/// and hostile all-0xFF buffers (declared counts far beyond the payload)
+/// are rejected by every message decoder's pre-allocation guards.
+#[test]
+fn hostile_headers_and_buffers_are_rejected() {
+    let base = encode_frame(FrameKind::Ping, b"x");
+
+    let mut wrong_version = base.clone();
+    wrong_version[4] = (WIRE_VERSION + 1) as u8;
+    let err = decode_frame_bytes(&wrong_version).unwrap_err().to_string();
+    assert!(err.contains("version"), "version error: {err}");
+
+    let mut bad_magic = base.clone();
+    bad_magic[0] ^= 0xFF;
+    let err = decode_frame_bytes(&bad_magic).unwrap_err().to_string();
+    assert!(err.contains("magic"), "magic error: {err}");
+
+    let mut bad_kind = base.clone();
+    bad_kind[6] = 99;
+    let err = decode_frame_bytes(&bad_kind).unwrap_err().to_string();
+    assert!(err.contains("kind"), "kind error: {err}");
+
+    // Declared length over the frame cap is rejected before any read of
+    // the body.
+    let mut over = Vec::new();
+    over.extend_from_slice(&base[..8]);
+    over.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+    let err = decode_frame_bytes(&over).unwrap_err().to_string();
+    assert!(err.contains("exceeds"), "over-length error: {err}");
+
+    let mut trailing = base.clone();
+    trailing.push(0);
+    assert!(decode_frame_bytes(&trailing).is_err(), "trailing bytes must be rejected");
+
+    assert!(decode_frame_bytes(&base[..5]).is_err(), "sub-header buffer must be rejected");
+
+    // All-0xFF buffers declare absurd element counts; the seq_len /
+    // geometry guards must reject them before allocating.
+    for len in [0usize, 1, 2, 3, 7, 9, 33, 64] {
+        let buf = vec![0xFFu8; len];
+        assert!(ConfigureMsg::decode(&buf).is_err(), "configure 0xFF×{len}");
+        assert!(DispatchMsg::decode(&buf).is_err(), "dispatch 0xFF×{len}");
+        assert!(ReplyMsg::decode(&buf).is_err(), "reply 0xFF×{len}");
+        assert!(ReqSubmitMsg::decode(&buf).is_err(), "req-submit 0xFF×{len}");
+        assert!(ReqReplyMsg::decode(&buf).is_err(), "req-reply 0xFF×{len}");
+        assert!(ErrorEnvelope::decode(&buf).is_err(), "error-envelope 0xFF×{len}");
+        assert!(HealthReplyMsg::decode(&buf).is_err(), "health 0xFF×{len}");
+        assert!(MetricsReplyMsg::decode(&buf).is_err(), "metrics 0xFF×{len}");
+    }
+}

@@ -1,0 +1,391 @@
+//! Sharded-over-wire ≡ sharded-over-threads parity wall (DESIGN.md §14).
+//!
+//! Extends the §12 shard parity wall across a real process boundary: the
+//! coordinator talks to `anchor-attn worker` child processes over framed
+//! UDS/TCP sockets, and the merged output must stay **bitwise-equal** to
+//! the in-thread `ShardedSession` — outputs, per-head costs, plan
+//! coordinates, hit/miss accounting, and ident attribution — for all six
+//! planners × process shards {1, 2, 3}, cold and warm.
+//!
+//! Failure modes are loud and recoverable at batch granularity:
+//! * a worker killed between dispatches surfaces as an `Err` naming the
+//!   shard, and the next batch succeeds once a fresh worker listens;
+//! * an unreachable endpoint fails the batch naming the shard while the
+//!   surviving worker keeps serving;
+//! * a worker that accepts but never answers trips the read deadline.
+//!
+//! Runs the actual binary (`CARGO_BIN_EXE_anchor-attn`), so this is also
+//! the CI `wire-parity` gate's in-tree half.
+
+use std::io::BufRead;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anchor_attention::attention::anchor::AnchorConfig;
+use anchor_attention::attention::baselines::block_topk::BlockTopKConfig;
+use anchor_attention::attention::baselines::flexprefill::FlexPrefillConfig;
+use anchor_attention::attention::baselines::streaming::StreamingConfig;
+use anchor_attention::attention::baselines::vertical_slash::VerticalSlashConfig;
+use anchor_attention::attention::exec::ExecutorKind;
+use anchor_attention::attention::plan::{BatchInput, PlanKey};
+use anchor_attention::attention::session::SessionOutput;
+use anchor_attention::attention::shard::ShardedSession;
+use anchor_attention::attention::{HeadInput, Method, TileConfig};
+use anchor_attention::tensor::Mat;
+use anchor_attention::util::rng::Pcg64;
+use anchor_attention::wire::{RemoteSpec, ShardEndpoint, WireTimeouts};
+
+const BIN: &str = env!("CARGO_BIN_EXE_anchor-attn");
+
+fn rand_head(rng: &mut Pcg64, n: usize, d: usize) -> HeadInput {
+    HeadInput::new(
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+    )
+}
+
+fn method_for(idx: usize) -> Method {
+    let tile = TileConfig::new(16, 16);
+    match idx {
+        0 => Method::Full(tile),
+        1 => Method::Anchor(AnchorConfig {
+            tile,
+            theta: 3.0,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        }),
+        2 => Method::Streaming(StreamingConfig { tile, global_tokens: 16, local_tokens: 32 }),
+        3 => Method::VerticalSlash(VerticalSlashConfig {
+            tile,
+            vertical_tokens: 8,
+            slash_tokens: 8,
+            last_q: 16,
+        }),
+        4 => Method::FlexPrefill(FlexPrefillConfig { tile, gamma: 0.85, min_budget_tokens: 16 }),
+        _ => Method::BlockTopK(BlockTopKConfig { tile, k: 3, force_sink_local: true }),
+    }
+}
+
+/// Five heads over three GQA groups — both workers of a 2-shard split and
+/// all three of a 3-shard split stay non-empty.
+fn five_head_batch(seed: u64, n: usize, d: usize) -> (BatchInput, Vec<PlanKey>) {
+    let mut rng = Pcg64::seeded(seed);
+    let heads: Vec<HeadInput> = (0..5).map(|_| rand_head(&mut rng, n, d)).collect();
+    let keys = vec![
+        PlanKey::new(0, 0),
+        PlanKey::new(0, 0),
+        PlanKey::new(0, 1),
+        PlanKey::new(0, 1),
+        PlanKey::new(0, 2),
+    ];
+    (BatchInput::new(heads), keys)
+}
+
+fn assert_outputs_bitwise(tag: &str, a: &SessionOutput, b: &SessionOutput) {
+    assert_eq!(a.outputs.len(), b.outputs.len(), "{tag}: head count");
+    for (h, (x, y)) in a.outputs.iter().zip(&b.outputs).enumerate() {
+        assert_eq!(x.out.data, y.out.data, "{tag} head {h}: output not bitwise-equal");
+        assert_eq!(x.cost, y.cost, "{tag} head {h}: cost differs");
+    }
+    for (h, (p, q)) in a.plans.iter().zip(&b.plans).enumerate() {
+        assert_eq!(**p, **q, "{tag} head {h}: plan differs");
+    }
+    assert_eq!(
+        (a.cache_hits, a.cache_misses),
+        (b.cache_hits, b.cache_misses),
+        "{tag}: hit accounting differs"
+    );
+    assert_eq!(a.ident_cost_paid, b.ident_cost_paid, "{tag}: ident attribution differs");
+}
+
+fn sock_path(tag: &str) -> PathBuf {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "anchor-parity-{}-{}-{}.sock",
+        std::process::id(),
+        tag,
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// A pre-started worker child; killed and reaped on drop.
+struct WorkerGuard(Child);
+
+impl WorkerGuard {
+    fn spawn_uds(path: &std::path::Path) -> Self {
+        let child = Command::new(BIN)
+            .arg("worker")
+            .arg("--uds")
+            .arg(path)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .spawn()
+            .expect("spawn worker");
+        WorkerGuard(child)
+    }
+
+    fn kill(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+fn quick_timeouts() -> WireTimeouts {
+    WireTimeouts {
+        connect: Duration::from_secs(10),
+        read: Duration::from_secs(30),
+        retries: 2,
+        backoff: Duration::from_millis(50),
+    }
+}
+
+fn thread_session(m: &Method, shards: usize, keys: &[PlanKey], kind: ExecutorKind) -> ShardedSession {
+    m.sharded_session(shards)
+        .keys(keys.to_vec())
+        .executor(kind)
+        .build()
+        .expect("thread session build")
+}
+
+fn spawned_session(m: &Method, shards: usize, keys: &[PlanKey], kind: ExecutorKind) -> ShardedSession {
+    m.sharded_session(shards)
+        .keys(keys.to_vec())
+        .executor(kind)
+        .remote(RemoteSpec::Spawn { program: Some(PathBuf::from(BIN)) })
+        .wire_timeouts(quick_timeouts())
+        .build()
+        .expect("spawned session build")
+}
+
+/// The acceptance wall: all six planners × spawned process shards
+/// {1, 2, 3}, cold batch and warm repeat, bitwise against the in-thread
+/// sharded session.
+#[test]
+fn process_shards_bitwise_equal_thread_shards_for_all_six_methods() {
+    let (batch, keys) = five_head_batch(0x3B1E, 96, 8);
+    for method_idx in 0..6 {
+        let m = method_for(method_idx);
+        for shards in [1usize, 2, 3] {
+            let tag = format!("{} over {shards} process shard(s)", m.name());
+            let mut threads = thread_session(&m, shards, &keys, ExecutorKind::Cpu);
+            let mut procs = spawned_session(&m, shards, &keys, ExecutorKind::Cpu);
+            let cold_t = threads.run_batch(&batch).unwrap();
+            let cold_p = procs.run_batch(&batch).unwrap();
+            assert_outputs_bitwise(&format!("{tag} (cold)"), &cold_t, &cold_p);
+            let warm_t = threads.run_batch(&batch).unwrap();
+            let warm_p = procs.run_batch(&batch).unwrap();
+            assert_outputs_bitwise(&format!("{tag} (warm)"), &warm_t, &warm_p);
+            assert!(
+                warm_p.cache_hits > 0,
+                "{tag}: warm run must hit the coordinator-seeded cache"
+            );
+        }
+    }
+}
+
+/// Pipelined dispatch and the PJRT backend cross the wire bitwise too —
+/// the worker mirrors the coordinator's exact session shape.
+#[test]
+fn pipelined_pjrt_process_shards_stay_bitwise_equal() {
+    let (batch, keys) = five_head_batch(0x9A7C, 96, 8);
+    let m = method_for(1);
+    let mut threads = m
+        .sharded_session(2)
+        .keys(keys.clone())
+        .executor(ExecutorKind::Pjrt)
+        .pipelined(true)
+        .build()
+        .unwrap();
+    let mut procs = m
+        .sharded_session(2)
+        .keys(keys)
+        .executor(ExecutorKind::Pjrt)
+        .pipelined(true)
+        .remote(RemoteSpec::Spawn { program: Some(PathBuf::from(BIN)) })
+        .wire_timeouts(quick_timeouts())
+        .build()
+        .unwrap();
+    let a = threads.run_batch(&batch).unwrap();
+    let b = procs.run_batch(&batch).unwrap();
+    assert_outputs_bitwise("anchor pjrt pipelined over processes", &a, &b);
+}
+
+/// A worker killed between dispatches fails the batch with an `Err`
+/// naming the shard; once a fresh worker listens on the same endpoint,
+/// the session reconnects (with backoff) and the next batch is bitwise
+/// clean again.
+#[test]
+fn killed_worker_names_the_shard_and_recovers_after_restart() {
+    let (batch, keys) = five_head_batch(0xDEAD, 64, 8);
+    let m = method_for(1);
+    let p0 = sock_path("kill-0");
+    let p1 = sock_path("kill-1");
+    let _w0 = WorkerGuard::spawn_uds(&p0);
+    let mut w1 = WorkerGuard::spawn_uds(&p1);
+
+    let mut threads = thread_session(&m, 2, &keys, ExecutorKind::Cpu);
+    let mut procs = m
+        .sharded_session(2)
+        .keys(keys)
+        .executor(ExecutorKind::Cpu)
+        .remote(RemoteSpec::Endpoints(vec![
+            ShardEndpoint::Uds(p0.clone()),
+            ShardEndpoint::Uds(p1.clone()),
+        ]))
+        .wire_timeouts(quick_timeouts())
+        .build()
+        .unwrap();
+
+    let a = threads.run_batch(&batch).unwrap();
+    let b = procs.run_batch(&batch).unwrap();
+    assert_outputs_bitwise("pre-kill", &a, &b);
+
+    w1.kill();
+    let err = procs.run_batch(&batch).unwrap_err().to_string();
+    assert!(err.contains("shard 1"), "must name the dead shard: {err}");
+
+    // A fresh worker on the same socket: the next batch reconnects and
+    // replays the Configure handshake without any caller intervention.
+    let _w1b = WorkerGuard::spawn_uds(&p1);
+    let a2 = threads.run_batch(&batch).unwrap();
+    let b2 = procs.run_batch(&batch).unwrap();
+    assert_outputs_bitwise("post-restart", &a2, &b2);
+}
+
+/// An endpoint nobody listens on exhausts its connect deadline and names
+/// the shard; the surviving worker keeps serving (a fresh single-shard
+/// session over it stays bitwise-equal to threads).
+#[test]
+fn unreachable_endpoint_names_the_shard_and_survivor_keeps_serving() {
+    let (batch, keys) = five_head_batch(0x0FF, 64, 8);
+    let m = method_for(5);
+    let good = sock_path("surv-good");
+    let absent = sock_path("surv-absent"); // never bound
+    let _w = WorkerGuard::spawn_uds(&good);
+
+    let short = WireTimeouts {
+        connect: Duration::from_millis(200),
+        read: Duration::from_secs(10),
+        retries: 0,
+        backoff: Duration::from_millis(10),
+    };
+    let mut split = m
+        .sharded_session(2)
+        .keys(keys.clone())
+        .executor(ExecutorKind::Cpu)
+        .remote(RemoteSpec::Endpoints(vec![
+            ShardEndpoint::Uds(good.clone()),
+            ShardEndpoint::Uds(absent),
+        ]))
+        .wire_timeouts(short)
+        .build()
+        .unwrap();
+    let err = split.run_batch(&batch).unwrap_err().to_string();
+    assert!(err.contains("shard 1"), "must name the unreachable shard: {err}");
+
+    let mut threads = thread_session(&m, 1, &keys, ExecutorKind::Cpu);
+    let mut survivor = m
+        .sharded_session(1)
+        .keys(keys)
+        .executor(ExecutorKind::Cpu)
+        .remote(RemoteSpec::Endpoints(vec![ShardEndpoint::Uds(good)]))
+        .wire_timeouts(quick_timeouts())
+        .build()
+        .unwrap();
+    let a = threads.run_batch(&batch).unwrap();
+    let b = survivor.run_batch(&batch).unwrap();
+    assert_outputs_bitwise("survivor after neighbor loss", &a, &b);
+}
+
+/// A worker that accepts the connection but never answers trips the read
+/// deadline instead of hanging the coordinator, and the error names the
+/// shard.
+#[test]
+fn mute_worker_hits_the_read_deadline() {
+    let (batch, keys) = five_head_batch(0x51E7, 64, 8);
+    let m = method_for(0);
+    let path = sock_path("mute");
+    let listener = std::os::unix::net::UnixListener::bind(&path).unwrap();
+    let mute = std::thread::spawn(move || {
+        // Accept, swallow every byte, answer nothing.
+        if let Ok((mut s, _)) = listener.accept() {
+            let mut sink = [0u8; 4096];
+            while let Ok(n) = std::io::Read::read(&mut s, &mut sink) {
+                if n == 0 {
+                    break;
+                }
+            }
+        }
+    });
+
+    let short = WireTimeouts {
+        connect: Duration::from_secs(2),
+        read: Duration::from_millis(200),
+        retries: 0,
+        backoff: Duration::from_millis(10),
+    };
+    let mut session = m
+        .sharded_session(1)
+        .keys(keys)
+        .executor(ExecutorKind::Cpu)
+        .remote(RemoteSpec::Endpoints(vec![ShardEndpoint::Uds(path.clone())]))
+        .wire_timeouts(short)
+        .build()
+        .unwrap();
+    let err = session.run_batch(&batch).unwrap_err().to_string();
+    assert!(err.contains("shard 0"), "must name the deadline-missing shard: {err}");
+
+    drop(session); // closes the coordinator side; the mute thread sees EOF
+    mute.join().unwrap();
+    let _ = std::fs::remove_file(&path);
+}
+
+/// TCP endpoints work end-to-end: spawn a worker on an ephemeral port,
+/// parse the bound address from its stdout, and gate bitwise parity
+/// through it.
+#[test]
+fn tcp_worker_round_trips_bitwise() {
+    let (batch, keys) = five_head_batch(0x7C9, 64, 8);
+    let m = method_for(1);
+    let mut child = Command::new(BIN)
+        .args(["worker", "--tcp", "127.0.0.1:0"])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn tcp worker");
+    let stdout = child.stdout.take().expect("worker stdout");
+    let mut line = String::new();
+    std::io::BufReader::new(stdout).read_line(&mut line).expect("read bound address");
+    let addr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .expect("address token in worker banner")
+        .to_string();
+    let mut guard = WorkerGuard(child);
+
+    let mut threads = thread_session(&m, 1, &keys, ExecutorKind::Cpu);
+    let mut procs = m
+        .sharded_session(1)
+        .keys(keys)
+        .executor(ExecutorKind::Cpu)
+        .remote(RemoteSpec::Endpoints(vec![ShardEndpoint::Tcp(addr)]))
+        .wire_timeouts(quick_timeouts())
+        .build()
+        .unwrap();
+    let a = threads.run_batch(&batch).unwrap();
+    let b = procs.run_batch(&batch).unwrap();
+    assert_outputs_bitwise("tcp transport", &a, &b);
+    drop(procs); // send Shutdown before reaping the child
+    guard.kill();
+}
