@@ -518,7 +518,10 @@ pub(crate) fn open_plan_store(
 /// persisted plan from a differently-configured method must re-identify,
 /// never serve stale coordinates or mispriced costs. Returns the seeded
 /// count. Shared by the session's warm path and the `ShardedSession`
-/// coordinator (DESIGN.md §12).
+/// coordinator (DESIGN.md §12). The filter runs on the store's index
+/// ([`PlanStore::plans_for_compatible`]), so non-matching entries are
+/// never decoded — seeding cost scales with this session's slice of the
+/// store, not the total key count (DESIGN.md §15).
 pub(crate) fn seed_cache_from_store(
     cache: &PlanCache,
     store: &mut PlanStore,
@@ -528,13 +531,10 @@ pub(crate) fn seed_cache_from_store(
     d: usize,
 ) -> u64 {
     let (tile, step) = method.plan_geometry();
-    let name = method.name();
     let mut seeded = 0;
-    for (key, entry_d, plan) in store.plans_for(model, n) {
-        if plan.method == name && plan.tile == tile && plan.step == step && entry_d == d {
-            cache.seed(key, plan);
-            seeded += 1;
-        }
+    for (key, plan) in store.plans_for_compatible(model, n, method.name(), tile, step, d) {
+        cache.seed(key, plan);
+        seeded += 1;
     }
     seeded
 }

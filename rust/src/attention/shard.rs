@@ -11,7 +11,10 @@
 //! coordinator alone warms/flushes the manifest [`PlanStore`]. K/V never
 //! crosses a shard boundary: each head's Q/K/V is handed to exactly one
 //! shard, and what shards exchange — through the cache and the store — is
-//! [`SparsePlan`] coordinates.
+//! [`SparsePlan`] coordinates. The store is segmented (DESIGN.md §15):
+//! the coordinator's warm pass filters on the index and decodes only this
+//! session's compatible slice, so a fleet-sized store does not tax a
+//! single cell's startup.
 //!
 //! The worker seam is a transport choice (DESIGN.md §14): by default
 //! shards are in-process threads; [`ShardedSessionBuilder::remote`] swaps

@@ -5,7 +5,7 @@
 //! thread-local scratch) stay measurably faster than the paths they
 //! replaced.
 //!
-//! Four groups:
+//! Five groups:
 //!
 //! * **gather-vs-span crossover** — the same row multiset served through
 //!   [`KvSource::span_into`] (one read per run) vs [`KvSource::gather_into`]
@@ -20,6 +20,11 @@
 //! * **runs-vs-discrete end-to-end** — [`CpuTileExecutor`] in
 //!   [`LoweringMode::Runs`] vs [`LoweringMode::Discrete`] on a structured
 //!   anchor plan (identical bits out, different read schedule).
+//! * **plan-store seeding** — warming from a legacy JSON plan store
+//!   (parse the whole blob, decode every plan, then filter) vs the
+//!   segmented store (index filter, then byte-range reads of only the
+//!   ~1% of entries that match), at 100 / 1k / 10k stored keys
+//!   (DESIGN.md §15).
 //!
 //! Every group reduces to dimensionless ratios (higher = the optimization
 //! is winning) written under `ratios` in `reports/bench_micro.json`; CI
@@ -27,13 +32,17 @@
 //! `--baseline F`, each ratio named in the committed baseline must stay
 //! within [`GATE_TOLERANCE`] of its floor or the run exits nonzero.
 
+use std::sync::Arc;
+
 use anyhow::Context;
 
 use crate::attention::anchor::AnchorConfig;
 use crate::attention::exec::{CpuTileExecutor, Executor, FlatKv, KvSource, LoweringMode};
 use crate::attention::full::BlockState;
-use crate::attention::{Method, TileConfig};
+use crate::attention::plan::{GroupPlan, SparsePlan};
+use crate::attention::{CostTally, Method, TileConfig};
 use crate::coordinator::kv_cache::{PagedKv, PagedKvStore};
+use crate::runtime::manifest::{entry_from_json, write_legacy_json_store, PlanStore, PlanStoreKey};
 use crate::tensor::{self, Mat};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -212,6 +221,98 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &MicroOptions) -> anyhow::Resu
     });
     ratios.push(("discrete_over_runs".to_string(), disc.mean_s / runs.mean_s));
     results.extend([runs, disc]);
+
+    // ---- group 5: plan-store seeding — legacy JSON vs segments -----------
+    // Warm-start cost at fleet scale: a store holding `size` plans of
+    // which 1% belong to this session's model. The JSON leg replays the
+    // pre-segment behavior (parse the whole blob, decode every plan,
+    // filter after the fact); the segment leg is `PlanStore::open` +
+    // `plans_for_compatible`, which filters on the index and decodes
+    // only the matching byte ranges (DESIGN.md §15).
+    let store_tile = TileConfig::new(16, 16);
+    let (store_n, store_d, store_step) = (128usize, 8usize, 2usize);
+    let store_groups: Vec<GroupPlan> = (0..store_tile.q_blocks(store_n).div_ceil(store_step))
+        .map(|g| {
+            let win = (g * 32) as u32;
+            let end = ((g + 1) * 32).min(store_n) as u32;
+            if win == 0 {
+                GroupPlan { spans: vec![(0, end)], stripes: vec![] }
+            } else {
+                GroupPlan {
+                    spans: vec![(0, 16), (win, end)],
+                    stripes: (16..win).step_by(5).collect(),
+                }
+            }
+        })
+        .collect();
+    let store_plan = Arc::new(SparsePlan::new(
+        "anchor",
+        store_n,
+        store_d,
+        store_tile,
+        store_step,
+        store_groups,
+        CostTally { flops: 640, kv_bytes: 128, ident_scores: 32 },
+    ));
+    for (size, label) in [(100usize, "100"), (1_000, "1k"), (10_000, "10k")] {
+        let entries: Vec<(PlanStoreKey, usize, Arc<SparsePlan>)> = (0..size)
+            .map(|i| {
+                let model = if i % 100 == 0 { "hot" } else { "cold" };
+                (
+                    PlanStoreKey {
+                        model: model.to_string(),
+                        layer: i as u32,
+                        head_group: 0,
+                        n: store_n,
+                    },
+                    store_d,
+                    Arc::clone(&store_plan),
+                )
+            })
+            .collect();
+        let dir = std::env::temp_dir()
+            .join(format!("anchor_micro_store_{}_{label}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).context("creating plan-store bench dir")?;
+        let legacy = dir.join("legacy.json");
+        let segmented = dir.join("segmented.json");
+        write_legacy_json_store(&legacy, &entries)?;
+        write_legacy_json_store(&segmented, &entries)?;
+        // One untimed open migrates the segment-side fixture into the
+        // segmented layout; the timed leg then measures steady state.
+        drop(PlanStore::open(&segmented)?);
+        let json_leg = runner.run(&format!("store/seed-json/{label}"), || {
+            let text = std::fs::read_to_string(&legacy).unwrap();
+            let doc = Json::parse(&text).unwrap();
+            let mut hits = 0usize;
+            for e in doc.get("plan_store").get("entries").as_arr().unwrap_or(&[]) {
+                let (key, d_e, plan) = entry_from_json(e).unwrap();
+                if key.model == "hot"
+                    && key.n == store_n
+                    && d_e == store_d
+                    && plan.method == "anchor"
+                    && plan.tile == store_tile
+                    && plan.step == store_step
+                {
+                    hits += 1;
+                }
+            }
+            hits
+        });
+        let seg_leg = runner.run(&format!("store/seed-segment/{label}"), || {
+            let mut store = PlanStore::open(&segmented).unwrap();
+            store
+                .plans_for_compatible("hot", store_n, "anchor", store_tile, store_step, store_d)
+                .len()
+        });
+        ratios.push((
+            format!("store_seed_json_over_segment_{label}"),
+            json_leg.mean_s / seg_leg.mean_s,
+        ));
+        results.push(json_leg);
+        results.push(seg_leg);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     // ---- report ----------------------------------------------------------
     print_table(

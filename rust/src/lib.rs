@@ -20,6 +20,7 @@ pub mod config;
 pub mod experiments;
 pub mod coordinator;
 pub mod model;
+pub mod plan_codec;
 pub mod runtime;
 pub mod simulator;
 pub mod tensor;

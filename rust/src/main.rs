@@ -47,6 +47,16 @@
 //!                                 same measurement through spawned wire
 //!                                 workers, parity-gated against threads)
 //!   dominance   [--n N]           Fig. 5 measurement at arbitrary length
+//!   store <op>  --manifest F      segmented plan-store maintenance
+//!                                 (DESIGN.md §15): `inspect` reports the
+//!                                 index — format, entry/segment counts,
+//!                                 models, bytes — without decoding
+//!                                 payloads (--json for machine-readable
+//!                                 output); `compact` merges segments and
+//!                                 deletes superseded files; `migrate`
+//!                                 imports a legacy JSON-blob store into
+//!                                 segments (a no-op once migrated —
+//!                                 opening does it transparently too)
 //!   tpu-estimate                  L1 VMEM/MXU block-shape table
 //!   gen-trace   [--rate R]        print a synthetic serving trace
 
@@ -70,13 +80,15 @@ fn main() -> anyhow::Result<()> {
         Some("calibrate") => cmd_calibrate(&args),
         Some("bench") => cmd_bench(&args),
         Some("dominance") => cmd_dominance(&args),
+        Some("store") => cmd_store(&args),
         Some("tpu-estimate") => cmd_tpu(),
         Some("gen-trace") => cmd_gen_trace(&args),
         _ => {
             eprintln!(
-                "usage: anchor-attn <selftest|serve|worker|calibrate|bench|dominance|tpu-estimate|gen-trace> [flags]"
+                "usage: anchor-attn <selftest|serve|worker|calibrate|bench|dominance|store|tpu-estimate|gen-trace> [flags]"
             );
             eprintln!("  bench experiments: fig2 tab1 fig4 fig5 fig6 fig7 tab2 tab3 tab4 all micro");
+            eprintln!("  store ops: inspect compact migrate (--manifest F [--json])");
             Ok(())
         }
     }
@@ -474,6 +486,149 @@ fn cmd_dominance(args: &Args) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+/// `store <inspect|compact|migrate> --manifest F [--json]` — maintenance
+/// front-end for the segmented plan store (DESIGN.md §15). `inspect` is
+/// strictly read-only: it reports from the index and the segment files'
+/// metadata without decoding a single payload, so it is safe against a
+/// store another process is actively writing.
+fn cmd_store(args: &Args) -> anyhow::Result<()> {
+    use anchor_attention::runtime::manifest::{PlanStore, PLAN_STORE_FORMAT};
+    use anchor_attention::runtime::segment;
+    use anchor_attention::util::json::Json;
+    let op = args.positional().get(1).map(|s| s.as_str());
+    let usage = "usage: anchor-attn store <inspect|compact|migrate> --manifest F [--json]";
+    let Some(op) = op else {
+        eprintln!("{usage}");
+        return Ok(());
+    };
+    let manifest = args
+        .get("manifest")
+        .ok_or_else(|| anyhow::anyhow!("store {op}: --manifest F is required\n{usage}"))?
+        .to_string();
+    match op {
+        "inspect" => {
+            let text = std::fs::read_to_string(&manifest)
+                .map_err(|e| anyhow::anyhow!("store inspect {manifest}: {e}"))?;
+            let doc = Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("store inspect {manifest}: not valid JSON: {e}"))?;
+            let ps = doc.get("plan_store");
+            let format = if ps.is_null() {
+                "none"
+            } else if ps.get("format").as_str() == Some(PLAN_STORE_FORMAT) {
+                PLAN_STORE_FORMAT
+            } else if ps.get("format").is_null() {
+                "legacy-json"
+            } else {
+                "unknown"
+            };
+            let mut models: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+            let mut total_entries = 0usize;
+            let mut payload_bytes = 0u64;
+            // (file, entries, payload bytes, on-disk bytes or null)
+            let mut segments: Vec<(String, usize, u64, Option<u64>)> = Vec::new();
+            let dir = segment::segments_dir(std::path::Path::new(&manifest));
+            if format == PLAN_STORE_FORMAT {
+                for seg in ps.get("entries").as_arr().unwrap_or(&[]) {
+                    let file = seg.get("segment").as_str().unwrap_or("<malformed>").to_string();
+                    let mut seg_entries = 0usize;
+                    let mut seg_payload = 0u64;
+                    for g in seg.get("groups").as_arr().unwrap_or(&[]) {
+                        if let Some(m) = g.get("model").as_str() {
+                            models.insert(m.to_string());
+                        }
+                        for rec in g.get("keys").as_arr().unwrap_or(&[]) {
+                            seg_entries += 1;
+                            seg_payload += rec.idx(3).as_f64().unwrap_or(0.0) as u64;
+                        }
+                    }
+                    total_entries += seg_entries;
+                    payload_bytes += seg_payload;
+                    let file_bytes = std::fs::metadata(dir.join(&file)).ok().map(|m| m.len());
+                    segments.push((file, seg_entries, seg_payload, file_bytes));
+                }
+            } else if format == "legacy-json" {
+                for e in ps.get("entries").as_arr().unwrap_or(&[]) {
+                    total_entries += 1;
+                    if let Some(m) = e.get("model").as_str() {
+                        models.insert(m.to_string());
+                    }
+                }
+            }
+            if args.has("json") {
+                let report = Json::obj(vec![
+                    ("manifest", Json::str(&manifest)),
+                    ("format", Json::str(format)),
+                    (
+                        "version",
+                        ps.get("version").as_usize().map_or(Json::Null, |v| Json::num(v as f64)),
+                    ),
+                    (
+                        "migrated_from",
+                        ps.get("migrated_from").as_str().map_or(Json::Null, Json::str),
+                    ),
+                    ("entries", Json::num(total_entries as f64)),
+                    ("payload_bytes", Json::num(payload_bytes as f64)),
+                    ("models", Json::arr(models.iter().map(|m| Json::str(m)))),
+                    (
+                        "segments",
+                        Json::arr(segments.iter().map(|(file, entries, payload, disk)| {
+                            Json::obj(vec![
+                                ("file", Json::str(file)),
+                                ("entries", Json::num(*entries as f64)),
+                                ("payload_bytes", Json::num(*payload as f64)),
+                                (
+                                    "file_bytes",
+                                    disk.map_or(Json::Null, |b| Json::num(b as f64)),
+                                ),
+                            ])
+                        })),
+                    ),
+                ]);
+                println!("{}", report.to_string_pretty());
+            } else {
+                println!("{manifest}: plan store format={format}, {total_entries} entries");
+                if let Some(m) = ps.get("migrated_from").as_str() {
+                    println!("  migrated from: {m}");
+                }
+                if !models.is_empty() {
+                    println!(
+                        "  models: {}",
+                        models.iter().cloned().collect::<Vec<_>>().join(", ")
+                    );
+                }
+                for (file, entries, payload, disk) in &segments {
+                    println!(
+                        "  {file}: {entries} entries, {payload} payload bytes{}",
+                        match disk {
+                            Some(b) => format!(", {b} bytes on disk"),
+                            None => ", MISSING on disk".to_string(),
+                        }
+                    );
+                }
+            }
+            Ok(())
+        }
+        "compact" => {
+            let mut store = PlanStore::open(&manifest)?;
+            let stats = store.compact()?;
+            println!(
+                "{manifest}: compacted {} segment(s) into {} ({} entries, {} file(s) removed)",
+                stats.segments_before, stats.segments_after, stats.entries, stats.files_removed
+            );
+            Ok(())
+        }
+        "migrate" => {
+            // Opening migrates a legacy store transparently (and is a
+            // no-op on an already-segmented one); this just makes the
+            // one-time import an explicit, observable step.
+            let store = PlanStore::open(&manifest)?;
+            println!("{manifest}: {} entr(ies) ready in the segmented store", store.len());
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("store: unknown op '{other}'\n{usage}")),
+    }
 }
 
 fn cmd_tpu() -> anyhow::Result<()> {

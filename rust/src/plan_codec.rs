@@ -1,0 +1,192 @@
+//! Shared delta codec for plan coordinates — one implementation for the
+//! wire protocol (DESIGN.md §14) and the segmented plan store (§15).
+//!
+//! The paper's premise (§3.2–3.4) is that stripe coordinates are sorted
+//! and near-arithmetic, so deltas are small and varints shrink them:
+//! * stripes: varint count, varint first value, then varint deltas that
+//!   must be ≥ 1 — strict ascent is unrepresentable to violate;
+//! * spans: varint count, then per span a varint gap from the previous
+//!   span's end and a varint length ≥ 1 — overlap is unrepresentable.
+//!
+//! **Decode validates before it constructs.** `SparsePlan::new` `assert!`s
+//! its invariants — a panic is the correct response to a caller bug but
+//! the wrong response to a corrupted frame or a bit-flipped segment file.
+//! Every decoder here therefore checks the full invariant set (lengths
+//! against remaining bytes, group counts against plan geometry,
+//! span/stripe ordering) and returns a descriptive `Err` first; the
+//! constructor's asserts then re-verify what was already proven.
+//!
+//! This module was lifted out of `wire/codec.rs` so that storage and wire
+//! cannot drift: a plan persisted by the store decodes bitwise-identically
+//! to one received off the wire, and the corruption-rejection walls in
+//! both test suites exercise the same code. The byte layout is unchanged
+//! from the wire original — `put_plan` output is wire-stable.
+
+use anyhow::{anyhow, Result};
+
+use crate::attention::plan::{GroupPlan, SparsePlan};
+use crate::attention::{CostTally, TileConfig};
+use crate::runtime::manifest::method_static;
+use crate::wire::frame::{Dec, Enc};
+
+/// Sanity cap on tile edges, steps, and head dims decoded off the wire or
+/// out of a segment — far above anything the grids run, small enough that
+/// a corrupted field cannot drive pathological allocation downstream.
+pub const MAX_GEOMETRY: u64 = 1 << 20;
+
+pub fn put_tile(e: &mut Enc, t: TileConfig) {
+    e.varint(t.b_q as u64);
+    e.varint(t.b_kv as u64);
+}
+
+pub fn get_tile(d: &mut Dec) -> Result<TileConfig> {
+    let b_q = get_geometry(d, "tile b_q")?;
+    let b_kv = get_geometry(d, "tile b_kv")?;
+    Ok(TileConfig { b_q, b_kv })
+}
+
+/// A geometry-sized field: ≥ 1 and ≤ [`MAX_GEOMETRY`].
+pub fn get_geometry(d: &mut Dec, what: &str) -> Result<usize> {
+    let v = d.varint()?;
+    if v == 0 || v > MAX_GEOMETRY {
+        return Err(anyhow!("wire: {what} = {v} out of range 1..={MAX_GEOMETRY}"));
+    }
+    Ok(v as usize)
+}
+
+pub fn put_cost(e: &mut Enc, c: CostTally) {
+    e.u64(c.flops);
+    e.u64(c.kv_bytes);
+    e.u64(c.ident_scores);
+}
+
+pub fn get_cost(d: &mut Dec) -> Result<CostTally> {
+    Ok(CostTally { flops: d.u64()?, kv_bytes: d.u64()?, ident_scores: d.u64()? })
+}
+
+pub fn put_group(e: &mut Enc, g: &GroupPlan) {
+    e.varint(g.spans.len() as u64);
+    let mut prev_end = 0u64;
+    for &(s, e_) in &g.spans {
+        e.varint(u64::from(s) - prev_end);
+        e.varint(u64::from(e_) - u64::from(s));
+        prev_end = u64::from(e_);
+    }
+    e.varint(g.stripes.len() as u64);
+    let mut prev = 0u64;
+    for (i, &c) in g.stripes.iter().enumerate() {
+        if i == 0 {
+            e.varint(u64::from(c));
+        } else {
+            e.varint(u64::from(c) - prev);
+        }
+        prev = u64::from(c);
+    }
+}
+
+pub fn get_group(d: &mut Dec, n: u64) -> Result<GroupPlan> {
+    let span_count = d.varint()? as usize;
+    // Every span costs ≥ 2 payload bytes; bound the allocation by what can
+    // actually be present.
+    if span_count > d.remaining() {
+        return Err(anyhow!(
+            "wire: group declares {span_count} spans but only {} bytes remain",
+            d.remaining()
+        ));
+    }
+    let mut spans = Vec::with_capacity(span_count.min(1024));
+    let mut prev_end = 0u64;
+    for _ in 0..span_count {
+        let start = prev_end
+            .checked_add(d.varint()?)
+            .ok_or_else(|| anyhow!("wire: span start overflows"))?;
+        let len = d.varint()?;
+        if len == 0 {
+            return Err(anyhow!("wire: empty span in plan group"));
+        }
+        let end = start.checked_add(len).ok_or_else(|| anyhow!("wire: span end overflows"))?;
+        if end > n {
+            return Err(anyhow!("wire: span [{start}, {end}) exceeds plan length {n}"));
+        }
+        spans.push((start as u32, end as u32));
+        prev_end = end;
+    }
+    let stripe_count = d.varint()? as usize;
+    if stripe_count > d.remaining() {
+        return Err(anyhow!(
+            "wire: group declares {stripe_count} stripes but only {} bytes remain",
+            d.remaining()
+        ));
+    }
+    let mut stripes = Vec::with_capacity(stripe_count.min(1024));
+    let mut prev = 0u64;
+    for i in 0..stripe_count {
+        let delta = d.varint()?;
+        let col = if i == 0 {
+            delta
+        } else {
+            if delta == 0 {
+                return Err(anyhow!("wire: stripe delta of 0 breaks strict ascent"));
+            }
+            prev.checked_add(delta).ok_or_else(|| anyhow!("wire: stripe overflows"))?
+        };
+        if col >= n {
+            return Err(anyhow!("wire: stripe {col} ≥ plan length {n}"));
+        }
+        stripes.push(col as u32);
+        prev = col;
+    }
+    Ok(GroupPlan { spans, stripes })
+}
+
+/// Encode one plan. The head dim `d_head` rides along because
+/// `predicted_cost` is *not* transmitted — the receiver re-prices the
+/// decoded coordinates against `d_head`, which is bitwise-identical to the
+/// sender's pricing (pure integer walk).
+pub fn put_plan(e: &mut Enc, plan: &SparsePlan, d_head: usize) {
+    e.str(plan.method);
+    e.varint(plan.n as u64);
+    e.varint(d_head as u64);
+    put_tile(e, plan.tile);
+    e.varint(plan.step as u64);
+    put_cost(e, plan.ident_cost);
+    for g in &plan.groups {
+        put_group(e, g);
+    }
+}
+
+/// Decode and fully validate one plan, then (and only then) hand the
+/// coordinates to `SparsePlan::new`, which re-derives `predicted_cost`.
+pub fn get_plan(d: &mut Dec) -> Result<SparsePlan> {
+    get_plan_with_dim(d).map(|(plan, _)| plan)
+}
+
+/// Like [`get_plan`], but also return the head dim the plan was priced
+/// against. `SparsePlan` does not store `d`, yet the plan store keys
+/// entries by it — storage decode cross-checks this value against the
+/// segment index.
+pub fn get_plan_with_dim(d: &mut Dec) -> Result<(SparsePlan, usize)> {
+    let method = method_static(&d.str()?)?;
+    let n = d.varint()?;
+    if n == 0 || n > u64::from(u32::MAX) {
+        return Err(anyhow!("wire: plan length {n} out of range 1..=u32::MAX"));
+    }
+    let d_head = get_geometry(d, "plan head dim")?;
+    let tile = get_tile(d)?;
+    let step = get_geometry(d, "plan step")?;
+    let ident_cost = get_cost(d)?;
+    let expected = tile.q_blocks(n as usize).div_ceil(step);
+    // Each group is ≥ 2 payload bytes; a corrupted n cannot force a giant
+    // allocation past what the frame could hold.
+    if expected > d.remaining() {
+        return Err(anyhow!(
+            "wire: plan geometry implies {expected} groups but only {} bytes remain",
+            d.remaining()
+        ));
+    }
+    let mut groups = Vec::with_capacity(expected.min(1024));
+    for _ in 0..expected {
+        groups.push(get_group(d, n)?);
+    }
+    Ok((SparsePlan::new(method, n as usize, d_head, tile, step, groups, ident_cost), d_head))
+}

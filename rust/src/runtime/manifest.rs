@@ -5,10 +5,11 @@
 //! flush fresh plans back, so identification amortizes across process
 //! restarts, not just within one.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -16,7 +17,10 @@ use crate::attention::exec::ExecutorKind;
 use crate::attention::plan::{GroupPlan, PlanKey, SparsePlan};
 use crate::attention::{CostTally, TileConfig};
 use crate::coordinator::scheduler::CostConstants;
+use crate::plan_codec;
+use crate::runtime::segment::{self, SegmentLoc};
 use crate::util::json::Json;
+use crate::wire::frame::{Dec, Enc};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
@@ -234,14 +238,62 @@ pub struct PlanStoreKey {
     pub n: usize,
 }
 
-/// One resident plan plus its LRU bookkeeping.
+/// Discriminator for the segmented layout inside the `plan_store` key; a
+/// legacy (pre-segment) store has no `format` field at all.
+pub const PLAN_STORE_FORMAT: &str = "segments";
+
+/// Segment count past which a flush schedules background compaction.
+const COMPACT_SEGMENT_THRESHOLD: usize = 8;
+
+/// What an entry is without decoding it — the index's per-group summary
+/// (`d` lives on [`StoreEntry`], `n` on the key). Filters (`len_compatible`,
+/// `plans_for_compatible`) run on this, so non-matching entries are never
+/// read off disk, let alone decoded.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct PlanSummary {
+    method: &'static str,
+    tile: TileConfig,
+    step: usize,
+}
+
+fn summary_of(plan: &SparsePlan) -> PlanSummary {
+    PlanSummary { method: plan.method, tile: plan.tile, step: plan.step }
+}
+
+/// One known plan plus its LRU bookkeeping.
 struct StoreEntry {
     /// Head dim the plan's `predicted_cost` was priced for.
     d: usize,
-    plan: Arc<SparsePlan>,
     /// Logical timestamp of the last warm (`plans_for`) or `insert` touch;
     /// the eviction cap removes the lowest-stamped entry first.
     touched: u64,
+    summary: PlanSummary,
+    state: EntryState,
+}
+
+enum EntryState {
+    /// Decoded plan in memory. `loc` is its committed segment location —
+    /// `None` while the payload has not been appended to a segment yet.
+    Resident { plan: Arc<SparsePlan>, loc: Option<SegmentLoc> },
+    /// Indexed but never decoded; the payload is read lazily on demand.
+    OnDisk { loc: SegmentLoc },
+}
+
+impl StoreEntry {
+    fn resident_plan(&self) -> Option<&Arc<SparsePlan>> {
+        match &self.state {
+            EntryState::Resident { plan, .. } => Some(plan),
+            EntryState::OnDisk { .. } => None,
+        }
+    }
+
+    /// The committed segment location, if any.
+    fn loc(&self) -> Option<&SegmentLoc> {
+        match &self.state {
+            EntryState::Resident { loc, .. } => loc.as_ref(),
+            EntryState::OnDisk { loc } => Some(loc),
+        }
+    }
 }
 
 /// Process-wide flush serialization, one lock per store path: concurrent
@@ -260,32 +312,50 @@ fn flush_lock(path: &Path) -> Arc<Mutex<()>> {
     map.entry(key).or_default().clone()
 }
 
-/// Manifest-backed persistence for [`SparsePlan`] coordinates.
+/// Manifest-backed persistence for [`SparsePlan`] coordinates, segmented
+/// (DESIGN.md §15).
 ///
-/// Plans live under a `plan_store` key *inside* an existing runtime
-/// manifest JSON (the store never creates the manifest — a persistence
-/// path without one is a configuration error surfaced at session build).
-/// Only coordinates and identification provenance are stored;
-/// `predicted_cost` is re-derived from the coordinates on load, and any
-/// corrupted or truncated entry fails `open` with a descriptive error —
-/// never a silent empty plan (DESIGN.md §11).
+/// The manifest's `plan_store` key holds a compact JSON **index** — per
+/// segment file, per `(model, n, d, method, geometry)` group, a list of
+/// `[layer, head_group, offset, len, crc]` records — while the payloads
+/// themselves live delta-encoded ([`crate::plan_codec`], the wire codec)
+/// in immutable binary segment files under a sidecar directory
+/// (`<manifest>.segments/`). `open` parses only the index and verifies
+/// each referenced segment's magic/version/length; payloads are read and
+/// decoded lazily, so seeding cost scales with the session's filter, not
+/// the fleet's key count. Any corrupted or truncated index fails `open`
+/// with a descriptive error, and a payload whose CRC or cross-checked
+/// identity (n/d/method/geometry vs the index) disagrees fails its read
+/// loudly — never a silent empty or wrong plan.
 ///
-/// `flush` rewrites the document captured at `open` with the `plan_store`
-/// key replaced, preserving every other manifest key. The write is a
-/// *union*, built under a process-wide per-path lock: this store's
-/// resident entries win per key, and on-disk entries another store
-/// instance flushed since `open` are written through untouched — so
+/// The index always rides *inside* the existing runtime manifest JSON
+/// (the store never creates the manifest — a persistence path without one
+/// is a configuration error surfaced at session build). A manifest still
+/// carrying the legacy JSON-blob `plan_store` (no `format` field) is
+/// migrated into segments once at `open`, round-trip asserted, and marked
+/// `migrated_from: "json-v1"`; the legacy layout stays readable but is
+/// never written again.
+///
+/// `flush` appends dirty payloads to one *new* segment (write-then-rename,
+/// like every mutation here) and rewrites the document captured at `open`
+/// with the `plan_store` index replaced, preserving every other manifest
+/// key. The index write is a *union*, built under a process-wide per-path
+/// lock: this store's entries win per key, and on-disk entries another
+/// store instance flushed since `open` are referenced untouched — so
 /// concurrent sessions persisting to one manifest never erase each
-/// other's plans (DESIGN.md §12). Disk entries never enter this
-/// instance's resident set, and keys this instance *evicted* are
+/// other's plans (DESIGN.md §12). Keys this instance *evicted* are
 /// tombstoned out of the union (an eviction is a real deletion, not a
-/// suggestion the next flush resurrects).
+/// suggestion the next flush resurrects). When the live segment count
+/// passes a threshold, a background compaction merges them, drops
+/// unreferenced payloads, and deletes the superseded files.
 ///
-/// An optional `max_entries` cap bounds the resident set LRU-ish: every
+/// An optional `max_entries` cap bounds the entry set LRU-ish: every
 /// eviction is logged loudly, `plans_for` (the warm path) refreshes the
 /// entries it serves, and `insert` never evicts the entry it just wrote.
 pub struct PlanStore {
     path: PathBuf,
+    /// Sidecar segment directory (`<path>.segments/`).
+    dir: PathBuf,
     doc: Json,
     entries: HashMap<PlanStoreKey, StoreEntry>,
     dirty: bool,
@@ -296,54 +366,128 @@ pub struct PlanStore {
     /// Keys the cap evicted; excluded from the flush union so they stay
     /// deleted on disk (a later `insert` of the key clears the tombstone).
     evicted: HashSet<PlanStoreKey>,
+    /// Marker preserved across rewrites once a legacy JSON store was
+    /// imported (satellite of the §15 migration contract).
+    migrated_from: Option<String>,
+    /// At most one in-flight background compaction; joined before a new
+    /// spawn and on drop, so no segment file mutates after the store dies.
+    compactor: Option<JoinHandle<()>>,
+}
+
+impl Drop for PlanStore {
+    fn drop(&mut self) {
+        if let Some(h) = self.compactor.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 impl PlanStore {
     /// Open the store inside the runtime manifest at `path`. The file must
     /// exist and hold a JSON object; a `plan_store` key, when present, is
-    /// parsed strictly.
+    /// parsed strictly. A segmented index additionally has every
+    /// referenced segment's header and length verified before `open`
+    /// returns, so truncation is caught here, not at first read. A legacy
+    /// JSON-blob store is imported into segments once (see [`PlanStore`]).
     pub fn open(path: impl Into<PathBuf>) -> Result<Self> {
         let path = path.into();
-        let text = std::fs::read_to_string(&path).map_err(|e| {
-            anyhow!(
-                "plan store {}: persistence path has no runtime manifest ({e}); \
-                 plans persist into an existing manifest JSON, e.g. artifacts/manifest.json",
-                path.display()
-            )
-        })?;
-        let doc = Json::parse(&text).map_err(|e| {
-            anyhow!("plan store {}: manifest is not valid JSON: {e}", path.display())
-        })?;
-        if doc.as_obj().is_none() {
-            return Err(anyhow!("plan store {}: manifest must be a JSON object", path.display()));
-        }
-        let mut entries = HashMap::new();
-        let ps = doc.get("plan_store");
-        if !ps.is_null() {
-            let version = ps
-                .get("version")
-                .as_usize()
-                .ok_or_else(|| anyhow!("plan store {}: missing version", path.display()))?;
-            if version != PLAN_STORE_VERSION {
+        let dir = segment::segments_dir(&path);
+        // Segment verification can race a concurrent instance's
+        // compaction: the manifest we read may reference segments deleted
+        // just after. Compaction always commits the new index (rename)
+        // *before* deleting files, so re-reading converges; a check
+        // failure against an *unchanged* manifest is genuine corruption.
+        let mut prev_text: Option<String> = None;
+        let (doc, entries, migrated_from, legacy) = loop {
+            let text = std::fs::read_to_string(&path).map_err(|e| {
+                anyhow!(
+                    "plan store {}: persistence path has no runtime manifest ({e}); \
+                     plans persist into an existing manifest JSON, e.g. artifacts/manifest.json",
+                    path.display()
+                )
+            })?;
+            let doc = Json::parse(&text).map_err(|e| {
+                anyhow!("plan store {}: manifest is not valid JSON: {e}", path.display())
+            })?;
+            if doc.as_obj().is_none() {
                 return Err(anyhow!(
-                    "plan store {}: unsupported version {version} (expected {PLAN_STORE_VERSION})",
+                    "plan store {}: manifest must be a JSON object",
                     path.display()
                 ));
             }
-            let arr = ps.get("entries").as_arr().ok_or_else(|| {
-                anyhow!("plan store {}: entries must be an array", path.display())
-            })?;
-            for (i, e) in arr.iter().enumerate() {
-                let (key, d, plan) = entry_from_json(e)
-                    .with_context(|| format!("plan store {} entry {i}", path.display()))?;
-                let entry = StoreEntry { d, plan: Arc::new(plan), touched: 0 };
-                if entries.insert(key, entry).is_some() {
-                    return Err(anyhow!("plan store {} entry {i}: duplicate key", path.display()));
+            let mut entries = HashMap::new();
+            let mut migrated_from = None;
+            let mut legacy: Option<Vec<(PlanStoreKey, usize, SparsePlan)>> = None;
+            let mut seg_err = None;
+            let ps = doc.get("plan_store");
+            if !ps.is_null() {
+                let version = ps
+                    .get("version")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("plan store {}: missing version", path.display()))?;
+                if version != PLAN_STORE_VERSION {
+                    return Err(anyhow!(
+                        "plan store {}: unsupported version {version} \
+                         (expected {PLAN_STORE_VERSION})",
+                        path.display()
+                    ));
+                }
+                let format = ps.get("format");
+                if format.is_null() {
+                    // Legacy JSON blob: parse strictly, import into segments
+                    // below (after `self` exists, so the import is one flush).
+                    let arr = ps.get("entries").as_arr().ok_or_else(|| {
+                        anyhow!("plan store {}: entries must be an array", path.display())
+                    })?;
+                    let mut parsed = Vec::with_capacity(arr.len());
+                    let mut seen: HashSet<PlanStoreKey> = HashSet::new();
+                    for (i, e) in arr.iter().enumerate() {
+                        let (key, d, plan) = entry_from_json(e)
+                            .with_context(|| format!("plan store {} entry {i}", path.display()))?;
+                        if !seen.insert(key.clone()) {
+                            return Err(anyhow!(
+                                "plan store {} entry {i}: duplicate key",
+                                path.display()
+                            ));
+                        }
+                        parsed.push((key, d, plan));
+                    }
+                    legacy = Some(parsed);
+                } else if format.as_str() == Some(PLAN_STORE_FORMAT) {
+                    migrated_from = ps.get("migrated_from").as_str().map(str::to_string);
+                    let (parsed, seg_min_len) = index_from_json(ps)
+                        .with_context(|| format!("plan store {}", path.display()))?;
+                    for (name, min_len) in &seg_min_len {
+                        if let Err(e) = segment::check_segment(&dir, name, *min_len) {
+                            seg_err = Some(
+                                e.context(format!("plan store {}", path.display())),
+                            );
+                            break;
+                        }
+                    }
+                    entries = parsed;
+                } else {
+                    return Err(anyhow!(
+                        "plan store {}: unknown format '{}' (expected \"{PLAN_STORE_FORMAT}\" \
+                         or a legacy store without the field)",
+                        path.display(),
+                        format.as_str().unwrap_or("<non-string>")
+                    ));
                 }
             }
-        }
-        Ok(Self {
+            match seg_err {
+                None => break (doc, entries, migrated_from, legacy),
+                Some(err) => {
+                    if prev_text.as_deref() == Some(text.as_str()) {
+                        return Err(err);
+                    }
+                    prev_text = Some(text);
+                }
+            }
+        };
+        let mut store = Self {
             path,
+            dir,
             doc,
             entries,
             dirty: false,
@@ -351,7 +495,75 @@ impl PlanStore {
             max_entries: None,
             evictions: 0,
             evicted: HashSet::new(),
-        })
+            migrated_from,
+            compactor: None,
+        };
+        if let Some(legacy) = legacy {
+            store.migrate_legacy(legacy)?;
+        }
+        Ok(store)
+    }
+
+    /// Import strictly-parsed legacy JSON entries into segments: one
+    /// flush writes the payloads and the segmented index, then every
+    /// entry is read back off disk and compared bitwise (coordinates,
+    /// ident provenance, and the re-derived `predicted_cost`) before the
+    /// migration is declared done. The `migrated_from` marker persists in
+    /// the index; the legacy layout is never written again.
+    fn migrate_legacy(&mut self, legacy: Vec<(PlanStoreKey, usize, SparsePlan)>) -> Result<()> {
+        let count = legacy.len();
+        for (key, d, plan) in legacy {
+            let plan = Arc::new(plan);
+            let summary = summary_of(&plan);
+            self.entries.insert(
+                key,
+                StoreEntry {
+                    d,
+                    touched: 0,
+                    summary,
+                    state: EntryState::Resident { plan, loc: None },
+                },
+            );
+        }
+        self.migrated_from = Some("json-v1".to_string());
+        self.dirty = true;
+        self.flush().with_context(|| {
+            format!("plan store {}: migrating legacy JSON entries", self.path.display())
+        })?;
+        for (k, e) in &self.entries {
+            let (Some(plan), Some(loc)) = (e.resident_plan(), e.loc()) else {
+                return Err(anyhow!(
+                    "plan store {}: migration left (model={}, layer={}, head_group={}, n={}) \
+                     without a committed segment location",
+                    self.path.display(),
+                    k.model,
+                    k.layer,
+                    k.head_group,
+                    k.n
+                ));
+            };
+            let bytes = segment::read_payload(&self.dir, loc)
+                .with_context(|| format!("plan store {}: migration read-back", self.path.display()))?;
+            let back = decode_payload(&bytes, k, e.d, &e.summary)
+                .with_context(|| format!("plan store {}: migration read-back", self.path.display()))?;
+            if back != **plan {
+                return Err(anyhow!(
+                    "plan store {}: migrated entry (model={}, layer={}, head_group={}, n={}) \
+                     did not round-trip bitwise",
+                    self.path.display(),
+                    k.model,
+                    k.layer,
+                    k.head_group,
+                    k.n
+                ));
+            }
+        }
+        eprintln!(
+            "plan store {}: migrated {count} legacy JSON entr{} into segments",
+            self.path.display(),
+            if count == 1 { "y" } else { "ies" }
+        );
+        Ok(())
     }
 
     /// Cap the resident entry set (LRU-ish eviction, logged loudly).
@@ -419,10 +631,97 @@ impl PlanStore {
         self.entries.is_empty()
     }
 
+    /// Read and fully verify one entry's payload at `loc`, healing a
+    /// stale location first if the disk index has moved the key (a
+    /// concurrent instance's compaction): returns the decoded plan plus
+    /// the location it was actually read from.
+    fn read_entry(
+        &self,
+        key: &PlanStoreKey,
+        d: usize,
+        summary: &PlanSummary,
+        loc: &SegmentLoc,
+    ) -> Result<(SparsePlan, SegmentLoc)> {
+        let first = segment::read_payload(&self.dir, loc)
+            .and_then(|bytes| decode_payload(&bytes, key, d, summary));
+        match first {
+            Ok(plan) => Ok((plan, loc.clone())),
+            Err(e) => {
+                // Self-heal: re-resolve against the current disk index.
+                if let Some(DiskEntry::Seg { d: dd, summary: ds, loc: dl }) =
+                    self.disk_state().remove(key)
+                {
+                    if dl != *loc {
+                        let bytes = segment::read_payload(&self.dir, &dl)?;
+                        let plan = decode_payload(&bytes, key, dd, &ds)?;
+                        if dd != d || ds != *summary {
+                            return Err(anyhow!(
+                                "entry moved on disk with a different identity (d {d} -> {dd})"
+                            ));
+                        }
+                        return Ok((plan, dl));
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
     /// Look up one persisted plan (read-only peek; does not refresh the
     /// entry's eviction stamp — warming goes through [`PlanStore::plans_for`]).
+    /// An on-disk entry is decoded on the fly; a payload that fails its
+    /// CRC or identity cross-check is reported loudly and served as
+    /// `None`, never as a wrong plan.
     pub fn get(&self, key: &PlanStoreKey) -> Option<Arc<SparsePlan>> {
-        self.entries.get(key).map(|e| e.plan.clone())
+        let e = self.entries.get(key)?;
+        if let Some(plan) = e.resident_plan() {
+            return Some(plan.clone());
+        }
+        let loc = e.loc()?;
+        match self.read_entry(key, e.d, &e.summary, loc) {
+            Ok((plan, _)) => Some(Arc::new(plan)),
+            Err(err) => {
+                eprintln!(
+                    "plan store {}: unreadable entry (model={}, layer={}, head_group={}, n={}): {err}",
+                    self.path.display(),
+                    key.model,
+                    key.layer,
+                    key.head_group,
+                    key.n
+                );
+                None
+            }
+        }
+    }
+
+    /// Decode `key`'s entry into residency (if it is not already) and
+    /// return its plan. A failed read is loud and yields `None`; the
+    /// entry stays on disk so a later pass can retry after a heal.
+    fn materialize(&mut self, key: &PlanStoreKey) -> Option<(usize, Arc<SparsePlan>)> {
+        let e = self.entries.get(key)?;
+        if let Some(plan) = e.resident_plan() {
+            return Some((e.d, plan.clone()));
+        }
+        let (d, summary, loc) = (e.d, e.summary, e.loc()?.clone());
+        match self.read_entry(key, d, &summary, &loc) {
+            Ok((plan, used)) => {
+                let plan = Arc::new(plan);
+                let e = self.entries.get_mut(key)?;
+                e.state = EntryState::Resident { plan: plan.clone(), loc: Some(used) };
+                Some((d, plan))
+            }
+            Err(err) => {
+                eprintln!(
+                    "plan store {}: unreadable entry (model={}, layer={}, head_group={}, n={}): {err}",
+                    self.path.display(),
+                    key.model,
+                    key.layer,
+                    key.head_group,
+                    key.n
+                );
+                None
+            }
+        }
     }
 
     /// All plans stored for `(model, n)` as `(PlanKey, priced head dim,
@@ -435,14 +734,65 @@ impl PlanStore {
     pub fn plans_for(&mut self, model: &str, n: usize) -> Vec<(PlanKey, usize, Arc<SparsePlan>)> {
         self.clock += 1;
         let stamp = self.clock;
+        let keys: Vec<PlanStoreKey> = self
+            .entries
+            .keys()
+            .filter(|k| k.model == model && k.n == n)
+            .cloned()
+            .collect();
         let mut out: Vec<(PlanKey, usize, Arc<SparsePlan>)> = Vec::new();
-        for (k, e) in self.entries.iter_mut() {
-            if k.model == model && k.n == n {
-                e.touched = stamp;
-                out.push((PlanKey::new(k.layer, k.head_group), e.d, e.plan.clone()));
+        for k in keys {
+            if let Some((d, plan)) = self.materialize(&k) {
+                if let Some(e) = self.entries.get_mut(&k) {
+                    e.touched = stamp;
+                }
+                out.push((PlanKey::new(k.layer, k.head_group), d, plan));
             }
         }
         out.sort_by_key(|(k, _, _)| (k.layer, k.head_group));
+        out
+    }
+
+    /// The seeding fast path (DESIGN.md §15): plans for `(model, n)` whose
+    /// index summary also matches the session's `(method, tile, step, d)`
+    /// configuration, in deterministic `(layer, head_group)` order. The
+    /// filter runs entirely on the index, so non-matching entries are
+    /// never read off disk, let alone decoded — seeding cost scales with
+    /// the session's slice of the store, not the fleet's key count.
+    pub fn plans_for_compatible(
+        &mut self,
+        model: &str,
+        n: usize,
+        method: &str,
+        tile: TileConfig,
+        step: usize,
+        d: usize,
+    ) -> Vec<(PlanKey, Arc<SparsePlan>)> {
+        self.clock += 1;
+        let stamp = self.clock;
+        let keys: Vec<PlanStoreKey> = self
+            .entries
+            .iter()
+            .filter(|(k, e)| {
+                k.model == model
+                    && k.n == n
+                    && e.d == d
+                    && e.summary.method == method
+                    && e.summary.tile == tile
+                    && e.summary.step == step
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        let mut out: Vec<(PlanKey, Arc<SparsePlan>)> = Vec::new();
+        for k in keys {
+            if let Some((_, plan)) = self.materialize(&k) {
+                if let Some(e) = self.entries.get_mut(&k) {
+                    e.touched = stamp;
+                }
+                out.push((PlanKey::new(k.layer, k.head_group), plan));
+            }
+        }
+        out.sort_by_key(|(k, _)| (k.layer, k.head_group));
         out
     }
 
@@ -455,7 +805,7 @@ impl PlanStore {
     /// configuration could actually seed from (any length) — the same
     /// compatibility filter sessions apply when warming, so warm-start
     /// expectations (e.g. the serve plan-hit prior) read this, not a raw
-    /// count.
+    /// count. Answered from the index summary alone; nothing is decoded.
     pub fn len_compatible(
         &self,
         model: &str,
@@ -467,9 +817,9 @@ impl PlanStore {
             .iter()
             .filter(|(k, e)| {
                 k.model == model
-                    && e.plan.method == method
-                    && e.plan.tile == tile
-                    && e.plan.step == step
+                    && e.summary.method == method
+                    && e.summary.tile == tile
+                    && e.summary.step == step
             })
             .count()
     }
@@ -478,103 +828,453 @@ impl PlanStore {
     /// the store changed. Re-inserting the same plan is a no-op, detected
     /// by `Arc` identity first (the steady-state path: a session syncs the
     /// same cached `Arc`s every run) and deep equality otherwise, so
-    /// steady-state serving never dirties the store.
+    /// steady-state serving never dirties the store. Against an on-disk
+    /// entry the summary is compared first and the payload decoded only
+    /// when it matches — an identical plan is adopted into residency
+    /// without dirtying anything.
     pub fn insert(&mut self, key: PlanStoreKey, d: usize, plan: Arc<SparsePlan>) -> bool {
-        if let Some(e) = self.entries.get(&key) {
-            if e.d == d && (Arc::ptr_eq(&e.plan, &plan) || *e.plan == *plan) {
-                return false;
+        enum Probe {
+            NoOp,
+            AdoptClean(SegmentLoc),
+            Write,
+        }
+        let probe = match self.entries.get(&key) {
+            Some(e) if e.d == d => match &e.state {
+                EntryState::Resident { plan: p, .. }
+                    if Arc::ptr_eq(p, &plan) || **p == *plan =>
+                {
+                    Probe::NoOp
+                }
+                EntryState::OnDisk { loc } if e.summary == summary_of(&plan) => {
+                    match self.read_entry(&key, e.d, &e.summary, loc) {
+                        Ok((existing, used)) if existing == *plan => Probe::AdoptClean(used),
+                        _ => Probe::Write,
+                    }
+                }
+                _ => Probe::Write,
+            },
+            _ => Probe::Write,
+        };
+        match probe {
+            Probe::NoOp => false,
+            Probe::AdoptClean(loc) => {
+                if let Some(e) = self.entries.get_mut(&key) {
+                    e.state = EntryState::Resident { plan, loc: Some(loc) };
+                }
+                false
+            }
+            Probe::Write => {
+                self.clock += 1;
+                let touched = self.clock;
+                self.evicted.remove(&key);
+                let summary = summary_of(&plan);
+                self.entries.insert(
+                    key.clone(),
+                    StoreEntry {
+                        d,
+                        touched,
+                        summary,
+                        state: EntryState::Resident { plan, loc: None },
+                    },
+                );
+                self.dirty = true;
+                self.enforce_cap(Some(&key));
+                true
             }
         }
-        self.clock += 1;
-        let touched = self.clock;
-        self.evicted.remove(&key);
-        self.entries.insert(key.clone(), StoreEntry { d, plan, touched });
-        self.dirty = true;
-        self.enforce_cap(Some(&key));
-        true
     }
 
-    /// On-disk entries another store instance flushed since this one
-    /// opened, minus keys resident here (ours win) or tombstoned by the
-    /// cap (evictions stay deleted). Callers hold the per-path flush
-    /// lock. Unparseable disk state yields nothing — the rewrite about to
-    /// happen restores a valid store either way.
-    fn disk_only_entries(&self) -> Vec<(PlanStoreKey, usize, Arc<SparsePlan>)> {
-        let mut out = Vec::new();
+    /// Everything the manifest on disk currently knows, keyed — lenient:
+    /// unparseable disk state yields nothing (the rewrite about to happen
+    /// restores a valid store either way). Both layouts are understood;
+    /// legacy entries surface decoded so the union re-encodes them into
+    /// segments.
+    fn disk_state(&self) -> HashMap<PlanStoreKey, DiskEntry> {
+        let mut out = HashMap::new();
         let Ok(text) = std::fs::read_to_string(&self.path) else { return out };
         let Ok(doc) = Json::parse(&text) else { return out };
         let ps = doc.get("plan_store");
         if ps.is_null() || ps.get("version").as_usize() != Some(PLAN_STORE_VERSION) {
             return out;
         }
-        let Some(arr) = ps.get("entries").as_arr() else { return out };
-        for e in arr {
-            if let Ok((key, d, plan)) = entry_from_json(e) {
-                if !self.entries.contains_key(&key) && !self.evicted.contains(&key) {
-                    out.push((key, d, Arc::new(plan)));
+        let format = ps.get("format");
+        if format.is_null() {
+            if let Some(arr) = ps.get("entries").as_arr() {
+                for e in arr {
+                    if let Ok((key, d, plan)) = entry_from_json(e) {
+                        out.insert(key, DiskEntry::Legacy { d, plan: Arc::new(plan) });
+                    }
+                }
+            }
+        } else if format.as_str() == Some(PLAN_STORE_FORMAT) {
+            if let Ok((entries, _)) = index_from_json(ps) {
+                for (k, e) in entries {
+                    if let EntryState::OnDisk { loc } = e.state {
+                        out.insert(k, DiskEntry::Seg { d: e.d, summary: e.summary, loc });
+                    }
                 }
             }
         }
         out
     }
 
-    /// Serialize the entries back into the manifest document and write it.
-    /// A clean store is a no-op. Concurrent flushes to one path are
-    /// serialized process-wide and the written set is the union of this
-    /// store's residents with the disk-only entries of other instances
+    /// Append dirty payloads to one new segment and rewrite the manifest
+    /// index. A clean store is a no-op. Concurrent flushes to one path
+    /// are serialized process-wide and the written index is the union of
+    /// this store's entries with the disk-only entries of other instances
     /// (see the type docs), so a flush never erases entries another store
     /// instance committed first — and the cap never evicts them either
-    /// (it bounds only this instance's resident set).
+    /// (it bounds only this instance's entry set). Payloads already
+    /// committed to a segment are *referenced*, not rewritten; only new
+    /// or moved entries cost bytes.
     pub fn flush(&mut self) -> Result<()> {
         if !self.dirty {
             return Ok(());
         }
-        let lock = flush_lock(&self.path);
-        let _guard = lock.lock().unwrap_or_else(|e| e.into_inner());
-        let mut all: Vec<(PlanStoreKey, usize, Arc<SparsePlan>)> = self
-            .entries
-            .iter()
-            .map(|(k, e)| (k.clone(), e.d, e.plan.clone()))
-            .collect();
-        all.extend(self.disk_only_entries());
-        all.sort_by(|a, b| {
-            (&a.0.model, a.0.layer, a.0.head_group, a.0.n)
-                .cmp(&(&b.0.model, b.0.layer, b.0.head_group, b.0.n))
-        });
-        let entries: Vec<Json> =
-            all.iter().map(|(k, d, plan)| entry_to_json(k, *d, plan)).collect();
-        let ps = Json::obj(vec![
-            ("version", Json::num(PLAN_STORE_VERSION as f64)),
-            ("entries", Json::Arr(entries)),
-        ]);
-        if let Json::Obj(m) = &mut self.doc {
-            m.insert("plan_store".to_string(), ps);
+        enum Src {
+            Loc(SegmentLoc),
+            Append(Vec<u8>),
         }
-        let mut text = self.doc.to_string_pretty();
-        text.push('\n');
-        // Write-then-rename: flush also runs best-effort from session
-        // drop, and a crash mid-write must never destroy the manifest
-        // (it holds the aot.py artifact contract, not just plans). The
-        // temp name is unique per flush so two stores flushing one path
-        // never clobber each other's in-flight write.
-        static FLUSH_SEQ: AtomicU64 = AtomicU64::new(0);
-        let seq = FLUSH_SEQ.fetch_add(1, Ordering::Relaxed);
-        let mut tmp_name = self.path.as_os_str().to_os_string();
-        tmp_name.push(format!(".tmp.{}.{seq}", std::process::id()));
-        let tmp = PathBuf::from(tmp_name);
-        std::fs::write(&tmp, &text)
-            .with_context(|| format!("writing plan store {}", tmp.display()))?;
-        std::fs::rename(&tmp, &self.path)
-            .with_context(|| format!("committing plan store {}", self.path.display()))?;
-        self.dirty = false;
-        // The committed file now reflects the deletions, so the
-        // tombstones have done their one job. Keeping them would turn an
-        // eviction into a permanent ban: another instance legitimately
-        // re-writing the key later would be silently erased by this
-        // instance's next flush.
-        self.evicted.clear();
+        let referenced_segments;
+        {
+            let lock = flush_lock(&self.path);
+            let _guard = lock.lock().unwrap_or_else(|e| e.into_inner());
+            let disk = self.disk_state();
+            let mut outs: Vec<(PlanStoreKey, usize, PlanSummary, Src)> = Vec::new();
+            for (k, e) in &self.entries {
+                match &e.state {
+                    EntryState::Resident { plan, loc } => {
+                        // Keep a committed location only while the disk
+                        // index still agrees — a concurrent compaction may
+                        // have moved or dropped the payload under us.
+                        let keep = loc.as_ref().filter(|l| {
+                            matches!(disk.get(k),
+                                Some(DiskEntry::Seg { loc: dl, .. }) if dl == *l)
+                        });
+                        match keep {
+                            Some(l) => outs.push((k.clone(), e.d, e.summary, Src::Loc(l.clone()))),
+                            None => outs.push((
+                                k.clone(),
+                                e.d,
+                                e.summary,
+                                Src::Append(encode_payload(plan, e.d)),
+                            )),
+                        }
+                    }
+                    EntryState::OnDisk { loc } => match disk.get(k) {
+                        Some(DiskEntry::Seg { d, summary, loc: dl }) => {
+                            outs.push((k.clone(), *d, *summary, Src::Loc(dl.clone())));
+                        }
+                        Some(DiskEntry::Legacy { d, plan }) => {
+                            outs.push((k.clone(), *d, summary_of(plan), Src::Append(encode_payload(plan, *d))));
+                        }
+                        None => match segment::read_payload(&self.dir, loc) {
+                            // The key vanished from the disk index but its
+                            // bytes are intact: ours win, re-append them.
+                            Ok(bytes) => outs.push((k.clone(), e.d, e.summary, Src::Append(bytes))),
+                            Err(err) => eprintln!(
+                                "plan store {}: dropping unreadable entry \
+                                 (model={}, layer={}, head_group={}, n={}) at flush: {err}",
+                                self.path.display(),
+                                k.model,
+                                k.layer,
+                                k.head_group,
+                                k.n
+                            ),
+                        },
+                    },
+                }
+            }
+            for (k, de) in &disk {
+                if self.entries.contains_key(k) || self.evicted.contains(k) {
+                    continue;
+                }
+                match de {
+                    DiskEntry::Seg { d, summary, loc } => {
+                        outs.push((k.clone(), *d, *summary, Src::Loc(loc.clone())));
+                    }
+                    DiskEntry::Legacy { d, plan } => {
+                        outs.push((k.clone(), *d, summary_of(plan), Src::Append(encode_payload(plan, *d))));
+                    }
+                }
+            }
+            outs.sort_by(|a, b| {
+                (&a.0.model, a.0.layer, a.0.head_group, a.0.n)
+                    .cmp(&(&b.0.model, b.0.layer, b.0.head_group, b.0.n))
+            });
+            // One new segment for everything that needs bytes on disk.
+            let appends: Vec<&[u8]> = outs
+                .iter()
+                .filter_map(|(_, _, _, src)| match src {
+                    Src::Append(bytes) => Some(bytes.as_slice()),
+                    Src::Loc(_) => None,
+                })
+                .collect();
+            let mut new_locs = if appends.is_empty() {
+                Vec::new()
+            } else {
+                let name = segment::next_segment_name(&self.dir)?;
+                segment::write_segment(&self.dir, &name, &appends)
+                    .with_context(|| format!("plan store {}", self.path.display()))?
+            }
+            .into_iter();
+            let finals: Vec<(PlanStoreKey, usize, PlanSummary, SegmentLoc)> = outs
+                .into_iter()
+                .map(|(k, d, s, src)| {
+                    let loc = match src {
+                        Src::Loc(l) => l,
+                        Src::Append(_) => {
+                            new_locs.next().expect("one loc per appended payload")
+                        }
+                    };
+                    (k, d, s, loc)
+                })
+                .collect();
+            let ps = index_to_json(&finals, self.migrated_from.as_deref());
+            if let Json::Obj(m) = &mut self.doc {
+                m.insert("plan_store".to_string(), ps);
+            }
+            let mut text = self.doc.to_string_pretty();
+            text.push('\n');
+            // Write-then-rename: flush also runs best-effort from session
+            // drop, and a crash mid-write must never destroy the manifest
+            // (it holds the aot.py artifact contract, not just plans). The
+            // temp name is unique per flush so two stores flushing one path
+            // never clobber each other's in-flight write.
+            static FLUSH_SEQ: AtomicU64 = AtomicU64::new(0);
+            let seq = FLUSH_SEQ.fetch_add(1, Ordering::Relaxed);
+            let mut tmp_name = self.path.as_os_str().to_os_string();
+            tmp_name.push(format!(".tmp.{}.{seq}", std::process::id()));
+            let tmp = PathBuf::from(tmp_name);
+            std::fs::write(&tmp, &text)
+                .with_context(|| format!("writing plan store {}", tmp.display()))?;
+            std::fs::rename(&tmp, &self.path)
+                .with_context(|| format!("committing plan store {}", self.path.display()))?;
+            // Adopt the committed locations so the next flush references
+            // instead of re-appending.
+            let mut seg_names: HashSet<String> = HashSet::new();
+            for (k, d, s, loc) in finals {
+                seg_names.insert(loc.segment.clone());
+                if let Some(e) = self.entries.get_mut(&k) {
+                    e.d = d;
+                    e.summary = s;
+                    e.state = match std::mem::replace(
+                        &mut e.state,
+                        EntryState::OnDisk { loc: loc.clone() },
+                    ) {
+                        EntryState::Resident { plan, .. } => {
+                            EntryState::Resident { plan, loc: Some(loc) }
+                        }
+                        EntryState::OnDisk { .. } => EntryState::OnDisk { loc },
+                    };
+                }
+            }
+            referenced_segments = seg_names.len();
+            self.dirty = false;
+            // The committed file now reflects the deletions, so the
+            // tombstones have done their one job. Keeping them would turn an
+            // eviction into a permanent ban: another instance legitimately
+            // re-writing the key later would be silently erased by this
+            // instance's next flush.
+            self.evicted.clear();
+        }
+        // Outside the lock: compaction takes it itself.
+        if referenced_segments > COMPACT_SEGMENT_THRESHOLD {
+            self.spawn_compaction();
+        }
         Ok(())
     }
+
+    /// Schedule a background compaction unless one is already running.
+    fn spawn_compaction(&mut self) {
+        if let Some(h) = &self.compactor {
+            if !h.is_finished() {
+                return;
+            }
+        }
+        if let Some(h) = self.compactor.take() {
+            let _ = h.join();
+        }
+        let path = self.path.clone();
+        self.compactor = Some(std::thread::spawn(move || {
+            match compact_plan_store(&path) {
+                Ok(stats) => eprintln!(
+                    "plan store {}: background compaction merged {} segments into {} \
+                     ({} entries, {} files removed)",
+                    path.display(),
+                    stats.segments_before,
+                    stats.segments_after,
+                    stats.entries,
+                    stats.files_removed
+                ),
+                Err(e) => eprintln!(
+                    "plan store {}: background compaction failed (store left intact): {e}",
+                    path.display()
+                ),
+            }
+        }));
+    }
+
+    /// Synchronous compaction (the `store compact` CLI and tests): flush
+    /// anything dirty, merge every live payload into one fresh segment,
+    /// rewrite the index, and delete superseded files. Aborts with the
+    /// store intact if any payload fails verification.
+    pub fn compact(&mut self) -> Result<CompactionStats> {
+        if let Some(h) = self.compactor.take() {
+            let _ = h.join();
+        }
+        self.flush()?;
+        let stats = compact_plan_store(&self.path)?;
+        // Our in-memory locations now point at deleted segments; adopt
+        // the rewritten index (reads would self-heal, but eagerly
+        // re-resolving keeps every later flush reference-only).
+        let disk = self.disk_state();
+        for (k, e) in self.entries.iter_mut() {
+            if let Some(DiskEntry::Seg { loc, .. }) = disk.get(k) {
+                e.state = match std::mem::replace(
+                    &mut e.state,
+                    EntryState::OnDisk { loc: loc.clone() },
+                ) {
+                    EntryState::Resident { plan, .. } => {
+                        EntryState::Resident { plan, loc: Some(loc.clone()) }
+                    }
+                    EntryState::OnDisk { .. } => EntryState::OnDisk { loc: loc.clone() },
+                };
+            }
+        }
+        Ok(stats)
+    }
+}
+
+/// What one key maps to on disk right now (see [`PlanStore::disk_state`]).
+enum DiskEntry {
+    Seg { d: usize, summary: PlanSummary, loc: SegmentLoc },
+    Legacy { d: usize, plan: Arc<SparsePlan> },
+}
+
+/// Result summary of one compaction pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompactionStats {
+    /// Segment files present before (referenced or orphaned).
+    pub segments_before: usize,
+    /// Segment files referenced after (0 for an empty store, else 1).
+    pub segments_after: usize,
+    /// Live entries carried across.
+    pub entries: usize,
+    /// Files deleted (superseded segments, crashed writers' temps).
+    pub files_removed: usize,
+}
+
+/// Merge every live payload into one fresh segment and delete the rest.
+///
+/// Runs under the per-path flush lock. Every payload is read and
+/// CRC-verified *before* anything is written; any failure aborts with the
+/// store intact. The new segment and the rewritten manifest both commit
+/// via write-then-rename, so a kill at any point leaves either the old
+/// index (referencing the old, still-present segments) or the new one —
+/// half-written files are temps a later compaction sweeps up. Eviction
+/// tombstones need no special handling here: compaction rewrites from the
+/// committed index, which tombstoned keys never reach.
+fn compact_plan_store(path: &Path) -> Result<CompactionStats> {
+    let lock = flush_lock(path);
+    let _guard = lock.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = segment::segments_dir(path);
+    let files = segment::list_files(&dir)?;
+    let segments_before = files.iter().filter(|f| segment::segment_seq(f).is_some()).count();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("plan store {}: compaction read", path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow!("plan store {}: manifest is not valid JSON: {e}", path.display()))?;
+    let ps = doc.get("plan_store");
+    if ps.is_null() {
+        // No store at all: the sidecar dir should hold nothing live.
+        let files_removed = segment::remove_unreferenced(&dir, &HashSet::new());
+        return Ok(CompactionStats { segments_before, files_removed, ..Default::default() });
+    }
+    if ps.get("version").as_usize() != Some(PLAN_STORE_VERSION) {
+        return Err(anyhow!("plan store {}: unsupported version", path.display()));
+    }
+    if ps.get("format").as_str() != Some(PLAN_STORE_FORMAT) {
+        return Err(anyhow!(
+            "plan store {}: not a segmented store — open it once to migrate, then compact",
+            path.display()
+        ));
+    }
+    let (entries, _) = index_from_json(ps).with_context(|| {
+        format!("plan store {}: compaction index parse", path.display())
+    })?;
+    let migrated_from = ps.get("migrated_from").as_str().map(str::to_string);
+    // Fast path: already compact (a single segment, no strays).
+    let mut referenced: HashSet<String> = HashSet::new();
+    for e in entries.values() {
+        if let Some(loc) = e.loc() {
+            referenced.insert(loc.segment.clone());
+        }
+    }
+    if referenced.len() <= 1 && files.len() == referenced.len() {
+        return Ok(CompactionStats {
+            segments_before,
+            segments_after: referenced.len(),
+            entries: entries.len(),
+            ..Default::default()
+        });
+    }
+    // Verify-read every live payload before touching anything.
+    let mut live: Vec<(PlanStoreKey, usize, PlanSummary, Vec<u8>)> = Vec::new();
+    for (k, e) in &entries {
+        let loc = e.loc().ok_or_else(|| anyhow!("index entry without a location"))?;
+        let bytes = segment::read_payload(&dir, loc).with_context(|| {
+            format!(
+                "plan store {}: compaction aborted, entry (model={}, layer={}, \
+                 head_group={}, n={}) unreadable",
+                path.display(),
+                k.model,
+                k.layer,
+                k.head_group,
+                k.n
+            )
+        })?;
+        live.push((k.clone(), e.d, e.summary, bytes));
+    }
+    live.sort_by(|a, b| {
+        (&a.0.model, a.0.layer, a.0.head_group, a.0.n)
+            .cmp(&(&b.0.model, b.0.layer, b.0.head_group, b.0.n))
+    });
+    let mut finals: Vec<(PlanStoreKey, usize, PlanSummary, SegmentLoc)> = Vec::new();
+    let mut keep: HashSet<String> = HashSet::new();
+    if !live.is_empty() {
+        let name = segment::next_segment_name(&dir)?;
+        let payloads: Vec<&[u8]> = live.iter().map(|(_, _, _, b)| b.as_slice()).collect();
+        let locs = segment::write_segment(&dir, &name, &payloads)
+            .with_context(|| format!("plan store {}: compaction write", path.display()))?;
+        keep.insert(name);
+        for ((k, d, s, _), loc) in live.into_iter().zip(locs) {
+            finals.push((k, d, s, loc));
+        }
+    }
+    let entries_count = finals.len();
+    let mut doc = doc;
+    let ps = index_to_json(&finals, migrated_from.as_deref());
+    if let Json::Obj(m) = &mut doc {
+        m.insert("plan_store".to_string(), ps);
+    }
+    let mut out = doc.to_string_pretty();
+    out.push('\n');
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(format!(".compact.tmp.{}", std::process::id()));
+    let tmp = PathBuf::from(tmp_name);
+    std::fs::write(&tmp, &out)
+        .with_context(|| format!("writing compacted plan store {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("committing compacted plan store {}", path.display()))?;
+    // Only after the new index is committed do the old files go.
+    let files_removed = segment::remove_unreferenced(&dir, &keep);
+    Ok(CompactionStats {
+        segments_before,
+        segments_after: keep.len(),
+        entries: entries_count,
+        files_removed,
+    })
 }
 
 /// Method-name interning: `SparsePlan::method` is a `&'static str`, so a
@@ -853,7 +1553,7 @@ pub fn load_calibration(
         .map(Some)
 }
 
-fn entry_to_json(key: &PlanStoreKey, d: usize, plan: &SparsePlan) -> Json {
+pub(crate) fn entry_to_json(key: &PlanStoreKey, d: usize, plan: &SparsePlan) -> Json {
     Json::obj(vec![
         ("model", Json::str(&key.model)),
         ("layer", Json::num(key.layer as f64)),
@@ -863,7 +1563,7 @@ fn entry_to_json(key: &PlanStoreKey, d: usize, plan: &SparsePlan) -> Json {
     ])
 }
 
-fn entry_from_json(j: &Json) -> Result<(PlanStoreKey, usize, SparsePlan)> {
+pub(crate) fn entry_from_json(j: &Json) -> Result<(PlanStoreKey, usize, SparsePlan)> {
     let model = j.get("model").as_str().ok_or_else(|| anyhow!("entry missing model"))?.to_string();
     let layer = j.get("layer").as_usize().ok_or_else(|| anyhow!("entry missing layer"))? as u32;
     let head_group =
@@ -874,6 +1574,267 @@ fn entry_from_json(j: &Json) -> Result<(PlanStoreKey, usize, SparsePlan)> {
         return Err(anyhow!("entry n={n} disagrees with plan n={}", plan.n));
     }
     Ok((PlanStoreKey { model, layer, head_group, n }, d, plan))
+}
+
+/// Segment payload = exactly the wire encoding of one plan
+/// ([`plan_codec::put_plan`]): one codec for the network and the disk, so
+/// a payload is byte-identical to the frame a shard worker would receive.
+fn encode_payload(plan: &SparsePlan, d: usize) -> Vec<u8> {
+    let mut e = Enc::new();
+    plan_codec::put_plan(&mut e, plan, d);
+    e.buf
+}
+
+/// Decode one payload and cross-check it against the index identity it
+/// was filed under — `n` from the key, `d` and `(method, tile, step)`
+/// from the index group. A disagreement means index/segment skew (a
+/// corrupted index pointing at someone else's bytes) and is rejected; the
+/// store never serves a plan under the wrong key.
+fn decode_payload(
+    bytes: &[u8],
+    key: &PlanStoreKey,
+    d: usize,
+    summary: &PlanSummary,
+) -> Result<SparsePlan> {
+    let mut dec = Dec::new(bytes);
+    let (plan, d_head) = plan_codec::get_plan_with_dim(&mut dec)?;
+    dec.finish()?;
+    if plan.n != key.n {
+        return Err(anyhow!("payload n={} disagrees with indexed n={}", plan.n, key.n));
+    }
+    if d_head != d {
+        return Err(anyhow!("payload head dim {d_head} disagrees with indexed d={d}"));
+    }
+    if plan.method != summary.method || plan.tile != summary.tile || plan.step != summary.step {
+        return Err(anyhow!(
+            "payload identity ({}, b_q={}, b_kv={}, step={}) disagrees with the index \
+             ({}, b_q={}, b_kv={}, step={})",
+            plan.method,
+            plan.tile.b_q,
+            plan.tile.b_kv,
+            plan.step,
+            summary.method,
+            summary.tile.b_q,
+            summary.tile.b_kv,
+            summary.step
+        ));
+    }
+    Ok(plan)
+}
+
+/// Parse the segmented `plan_store` index strictly. Returns the entry map
+/// (every entry `OnDisk`) plus, per referenced segment, the minimum file
+/// length implied by its farthest entry — `open` verifies each segment
+/// against it so truncation fails there, not at first read.
+fn index_from_json(
+    ps: &Json,
+) -> Result<(HashMap<PlanStoreKey, StoreEntry>, HashMap<String, u64>)> {
+    let mut entries: HashMap<PlanStoreKey, StoreEntry> = HashMap::new();
+    let mut seg_min_len: HashMap<String, u64> = HashMap::new();
+    let arr = ps
+        .get("entries")
+        .as_arr()
+        .ok_or_else(|| anyhow!("index entries must be an array"))?;
+    for (si, seg) in arr.iter().enumerate() {
+        let name = seg
+            .get("segment")
+            .as_str()
+            .ok_or_else(|| anyhow!("index entry {si}: missing segment name"))?;
+        if segment::segment_seq(name).is_none() {
+            return Err(anyhow!("index entry {si}: malformed segment name '{name}'"));
+        }
+        let groups = seg
+            .get("groups")
+            .as_arr()
+            .ok_or_else(|| anyhow!("index entry {si} ({name}): groups must be an array"))?;
+        for (gi, g) in groups.iter().enumerate() {
+            let at = format!("index entry {si} ({name}) group {gi}");
+            let model =
+                g.get("model").as_str().ok_or_else(|| anyhow!("{at}: missing model"))?.to_string();
+            let req = |k: &str| -> Result<usize> {
+                g.get(k).as_usize().ok_or_else(|| anyhow!("{at}: missing {k}"))
+            };
+            let n = req("n")?;
+            let d = req("d")?;
+            let b_q = req("b_q")?;
+            let b_kv = req("b_kv")?;
+            let step = req("step")?;
+            let method = method_static(
+                g.get("method").as_str().ok_or_else(|| anyhow!("{at}: missing method"))?,
+            )
+            .with_context(|| at.clone())?;
+            if n == 0 || d == 0 || b_q == 0 || b_kv == 0 || step == 0 {
+                return Err(anyhow!("{at}: zero-sized dimension"));
+            }
+            if n > u32::MAX as usize {
+                return Err(anyhow!("{at}: n={n} exceeds the u32 coordinate range"));
+            }
+            let summary = PlanSummary { method, tile: TileConfig::new(b_q, b_kv), step };
+            let keys =
+                g.get("keys").as_arr().ok_or_else(|| anyhow!("{at}: missing keys"))?;
+            for (ki, rec) in keys.iter().enumerate() {
+                let field = |i: usize, what: &str| -> Result<u64> {
+                    let x = rec
+                        .idx(i)
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("{at} key {ki}: bad {what}"))?;
+                    if x < 0.0 || x.fract() != 0.0 {
+                        return Err(anyhow!(
+                            "{at} key {ki}: {what} is not a non-negative integer"
+                        ));
+                    }
+                    Ok(x as u64)
+                };
+                let layer = field(0, "layer")?;
+                let head_group = field(1, "head_group")?;
+                let offset = field(2, "offset")?;
+                let len = field(3, "len")?;
+                let crc = field(4, "crc")?;
+                if layer > u32::MAX as u64 || head_group > u32::MAX as u64 {
+                    return Err(anyhow!("{at} key {ki}: coordinate exceeds u32"));
+                }
+                if crc > u32::MAX as u64 {
+                    return Err(anyhow!("{at} key {ki}: crc exceeds u32"));
+                }
+                if len == 0 || len > segment::MAX_ENTRY_BYTES as u64 {
+                    return Err(anyhow!("{at} key {ki}: implausible payload length {len}"));
+                }
+                if offset < segment::SEGMENT_HEADER_BYTES {
+                    return Err(anyhow!(
+                        "{at} key {ki}: offset {offset} inside the segment header"
+                    ));
+                }
+                let key = PlanStoreKey {
+                    model: model.clone(),
+                    layer: layer as u32,
+                    head_group: head_group as u32,
+                    n,
+                };
+                let loc = SegmentLoc {
+                    segment: name.to_string(),
+                    offset,
+                    len: len as u32,
+                    crc: crc as u32,
+                };
+                let end = loc.end();
+                let prior = entries.insert(
+                    key,
+                    StoreEntry { d, touched: 0, summary, state: EntryState::OnDisk { loc } },
+                );
+                if prior.is_some() {
+                    return Err(anyhow!("{at} key {ki}: duplicate store key"));
+                }
+                let min = seg_min_len.entry(name.to_string()).or_insert(0);
+                *min = (*min).max(end);
+            }
+        }
+    }
+    Ok((entries, seg_min_len))
+}
+
+/// Serialize the committed entry set into the segmented index layout:
+/// per segment, per `(model, n, d, method, b_q, b_kv, step)` group, the
+/// sorted `[layer, head_group, offset, len, crc]` records. Grouping pulls
+/// the filterable identity out of the per-key records, so a session's
+/// compatibility filter skips whole groups without touching their keys.
+fn index_to_json(
+    all: &[(PlanStoreKey, usize, PlanSummary, SegmentLoc)],
+    migrated_from: Option<&str>,
+) -> Json {
+    type GroupId = (String, usize, usize, &'static str, usize, usize, usize);
+    type KeyRec = (u32, u32, u64, u32, u32);
+    let mut segs: BTreeMap<String, BTreeMap<GroupId, Vec<KeyRec>>> = BTreeMap::new();
+    for (k, d, s, loc) in all {
+        segs.entry(loc.segment.clone())
+            .or_default()
+            .entry((k.model.clone(), k.n, *d, s.method, s.tile.b_q, s.tile.b_kv, s.step))
+            .or_default()
+            .push((k.layer, k.head_group, loc.offset, loc.len, loc.crc));
+    }
+    let entries = Json::arr(segs.into_iter().map(|(name, groups)| {
+        Json::obj(vec![
+            ("segment", Json::str(&name)),
+            (
+                "groups",
+                Json::arr(groups.into_iter().map(
+                    |((model, n, d, method, b_q, b_kv, step), mut keys)| {
+                        keys.sort_unstable();
+                        Json::obj(vec![
+                            ("model", Json::str(&model)),
+                            ("n", Json::num(n as f64)),
+                            ("d", Json::num(d as f64)),
+                            ("method", Json::str(method)),
+                            ("b_q", Json::num(b_q as f64)),
+                            ("b_kv", Json::num(b_kv as f64)),
+                            ("step", Json::num(step as f64)),
+                            (
+                                "keys",
+                                Json::arr(keys.into_iter().map(
+                                    |(layer, head_group, offset, len, crc)| {
+                                        Json::arr([
+                                            Json::num(layer as f64),
+                                            Json::num(head_group as f64),
+                                            Json::num(offset as f64),
+                                            Json::num(len as f64),
+                                            Json::num(crc as f64),
+                                        ])
+                                    },
+                                )),
+                            ),
+                        ])
+                    },
+                )),
+            ),
+        ])
+    }));
+    let mut fields = vec![
+        ("version", Json::num(PLAN_STORE_VERSION as f64)),
+        ("format", Json::str(PLAN_STORE_FORMAT)),
+        ("entries", entries),
+    ];
+    if let Some(m) = migrated_from {
+        fields.push(("migrated_from", Json::str(m)));
+    }
+    Json::obj(fields)
+}
+
+/// Fixture helper (tests, benches, the CI migration smoke): write
+/// `entries` to `path` in the **legacy** pre-segment JSON-blob layout —
+/// the shape old deployments left behind, which `PlanStore::open`
+/// migrates on first contact. The store itself never writes this layout
+/// anymore. Creates the manifest as `{}` if `path` does not exist.
+pub fn write_legacy_json_store(
+    path: impl AsRef<Path>,
+    entries: &[(PlanStoreKey, usize, Arc<SparsePlan>)],
+) -> Result<()> {
+    let path = path.as_ref();
+    let mut doc = match std::fs::read_to_string(path) {
+        Ok(text) => Json::parse(&text)
+            .map_err(|e| anyhow!("legacy store {}: not valid JSON: {e}", path.display()))?,
+        Err(_) => Json::obj(vec![]),
+    };
+    if doc.as_obj().is_none() {
+        return Err(anyhow!("legacy store {}: manifest must be a JSON object", path.display()));
+    }
+    let mut sorted: Vec<&(PlanStoreKey, usize, Arc<SparsePlan>)> = entries.iter().collect();
+    sorted.sort_by(|a, b| {
+        (&a.0.model, a.0.layer, a.0.head_group, a.0.n)
+            .cmp(&(&b.0.model, b.0.layer, b.0.head_group, b.0.n))
+    });
+    let arr: Vec<Json> =
+        sorted.iter().map(|(k, d, plan)| entry_to_json(k, *d, plan)).collect();
+    let ps = Json::obj(vec![
+        ("version", Json::num(PLAN_STORE_VERSION as f64)),
+        ("entries", Json::Arr(arr)),
+    ]);
+    if let Json::Obj(m) = &mut doc {
+        m.insert("plan_store".to_string(), ps);
+    }
+    let mut text = doc.to_string_pretty();
+    text.push('\n');
+    std::fs::write(path, &text)
+        .with_context(|| format!("writing legacy store {}", path.display()))?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -1023,7 +1984,11 @@ mod tests {
         std::fs::write(&path, &good[..good.len() / 2]).unwrap();
         assert!(PlanStore::open(&path).is_err());
 
-        // Structurally valid JSON, corrupted plan fields: each must error.
+        // Structurally valid JSON, corrupted index fields: open must error
+        // — or, where the edit leaves the index self-consistent (a
+        // coordinate rewrite open-time checks cannot see), every read of
+        // the affected key must fail loudly instead of serving the
+        // payload under a wrong identity.
         for (from, to) in [
             ("\"step\": 2", "\"step\": 0"),
             ("\"method\": \"anchor\"", "\"method\": \"mystery\""),
@@ -1032,14 +1997,25 @@ mod tests {
         ] {
             assert!(good.contains(from), "fixture drifted: {from}");
             std::fs::write(&path, good.replace(from, to)).unwrap();
-            let err = PlanStore::open(&path).unwrap_err().to_string();
-            assert!(!err.is_empty(), "{from} -> {to} must be rejected");
+            match PlanStore::open(&path) {
+                Err(e) => assert!(!e.to_string().is_empty(), "{from} -> {to} must error"),
+                Ok(opened) => {
+                    for n in [96usize, 95] {
+                        let k = PlanStoreKey { model: "m".into(), layer: 0, head_group: 0, n };
+                        assert!(
+                            opened.get(&k).is_none(),
+                            "{from} -> {to}: corrupted entry must fail its read"
+                        );
+                    }
+                }
+            }
         }
 
         // The pristine store still reopens after the corruption sweep.
         std::fs::write(&path, &good).unwrap();
         assert!(PlanStore::open(&path).is_ok(), "pristine store must reopen");
         let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir_all(segment::segments_dir(&path));
     }
 
     fn key(model: &str, group: u32, n: usize) -> PlanStoreKey {
@@ -1091,6 +2067,97 @@ mod tests {
         let _ = std::fs::remove_file(&missing);
         assert!(save_calibration(&missing, ExecutorKind::Cpu, &cpu).is_err());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compatible_filter_seeds_only_the_matching_slice() {
+        let path = tmp_manifest("compat", "{}\n");
+        let p8 = Arc::new(sample_plan(96, 8));
+        let mut store = PlanStore::open(&path).unwrap();
+        store.insert(key("m", 0, 96), 8, p8.clone());
+        // Same geometry, different priced head dim: must not seed.
+        store.insert(key("m", 1, 96), 4, Arc::new(sample_plan(96, 4)));
+        // Different model: must not seed.
+        store.insert(key("other", 2, 96), 8, p8.clone());
+        store.flush().unwrap();
+        drop(store);
+
+        let tile = TileConfig::new(16, 16);
+        let mut re = PlanStore::open(&path).unwrap();
+        let seeds = re.plans_for_compatible("m", 96, "anchor", tile, 2, 8);
+        assert_eq!(seeds.len(), 1);
+        assert_eq!(seeds[0].0, PlanKey::new(0, 0));
+        assert_eq!(*seeds[0].1, *p8);
+        assert!(re.plans_for_compatible("m", 96, "anchor", tile, 4, 8).is_empty());
+        assert!(re.plans_for_compatible("m", 96, "full-attn", tile, 2, 8).is_empty());
+        assert!(re.plans_for_compatible("m", 96, "anchor", TileConfig::new(8, 8), 2, 8).is_empty());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir_all(segment::segments_dir(&path));
+    }
+
+    #[test]
+    fn migration_imports_legacy_json_bitwise_once() {
+        let path = tmp_manifest("migrate", "{\"other_key\": 7}\n");
+        let plan = Arc::new(sample_plan(96, 8));
+        write_legacy_json_store(
+            &path,
+            &[(key("m", 0, 96), 8, plan.clone()), (key("m", 1, 96), 8, plan.clone())],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"plan\""), "fixture must be the legacy inline-plan layout");
+
+        // First open migrates; entries must survive bitwise.
+        let store = PlanStore::open(&path).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(*store.get(&key("m", 0, 96)).unwrap(), *plan);
+        drop(store);
+
+        // The legacy blob is gone, replaced by the marked segmented index;
+        // unrelated manifest keys survive.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.contains("\"plan\""), "legacy inline plans must not be rewritten");
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("plan_store").get("format").as_str(), Some(PLAN_STORE_FORMAT));
+        assert_eq!(doc.get("plan_store").get("migrated_from").as_str(), Some("json-v1"));
+        assert_eq!(doc.get("other_key").as_usize(), Some(7));
+
+        let re = PlanStore::open(&path).unwrap();
+        assert_eq!(re.len(), 2);
+        assert_eq!(*re.get(&key("m", 1, 96)).unwrap(), *plan);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir_all(segment::segments_dir(&path));
+    }
+
+    #[test]
+    fn compaction_merges_segments_and_removes_files() {
+        let path = tmp_manifest("compact_merge", "{}\n");
+        let plan = Arc::new(sample_plan(96, 8));
+        let mut store = PlanStore::open(&path).unwrap();
+        for g in 0..3 {
+            store.insert(key("m", g, 96), 8, plan.clone());
+            store.flush().unwrap(); // one new segment per flush
+        }
+        let dir = segment::segments_dir(&path);
+        assert!(segment::list_files(&dir).unwrap().len() >= 3, "flushes must append segments");
+        let stats = store.compact().unwrap();
+        assert_eq!(stats.segments_after, 1);
+        assert_eq!(stats.entries, 3);
+        assert_eq!(segment::list_files(&dir).unwrap(), {
+            let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+            let seg = doc.get("plan_store").get("entries").idx(0).get("segment");
+            vec![seg.as_str().unwrap().to_string()]
+        });
+        // Everything still reads: through the live store and a fresh open.
+        assert_eq!(*store.get(&key("m", 2, 96)).unwrap(), *plan);
+        drop(store);
+        let re = PlanStore::open(&path).unwrap();
+        assert_eq!(re.len(), 3);
+        for g in 0..3 {
+            assert_eq!(*re.get(&key("m", g, 96)).unwrap(), *plan);
+        }
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! dedicated engine thread that owns the runtime (`coordinator::engine`).
 
 pub mod manifest;
+pub mod segment;
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -1,0 +1,389 @@
+//! Binary segment files for the plan store (DESIGN.md §15).
+//!
+//! A segment is an immutable file of delta-encoded plan payloads
+//! (`crate::plan_codec::put_plan` output) living in a sidecar directory
+//! next to the runtime manifest (`<manifest>.segments/`). The manifest's
+//! `plan_store` key holds the index — key → (segment, offset, len, crc)
+//! plus a model/method/geometry summary — so seeding reads only the byte
+//! ranges matching the session's filter.
+//!
+//! Layout discipline mirrors the wire frames (`wire/frame.rs`): a magic +
+//! version header so foreign files are rejected before any decode, a
+//! length prefix per entry so truncation is structurally detectable, and
+//! a CRC32 per entry so bit-flips are rejected loudly instead of decoding
+//! into a plausible-but-wrong plan. Segments are never modified in place:
+//! every flush writes a *new* segment via write-then-rename, and
+//! compaction replaces the whole set the same way — a crash at any byte
+//! leaves either the old index valid or the new one committed.
+//!
+//! ```text
+//! segment file:  [magic "ANKS" (4)] [version u16 LE] [reserved u16 = 0]
+//!                then per entry: [len u32 LE] [crc32 u32 LE] [payload]
+//! ```
+//!
+//! The index records `offset` = start of the entry frame and `len` =
+//! payload length; readers re-verify both the frame fields and the
+//! payload CRC against the index before handing bytes to the codec.
+
+use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, Context, Result};
+
+/// First bytes of every segment file ("ANKS" — anchor segment).
+pub const SEGMENT_MAGIC: [u8; 4] = *b"ANKS";
+/// Bumped on any layout change; readers reject other versions loudly.
+pub const SEGMENT_VERSION: u16 = 1;
+/// Magic (4) + version (2) + reserved (2).
+pub const SEGMENT_HEADER_BYTES: u64 = 8;
+/// Length prefix (4) + CRC32 (4) ahead of each payload.
+pub const ENTRY_FRAME_BYTES: u64 = 8;
+/// Sanity cap on a single plan payload — far above any real plan, small
+/// enough that a corrupted index length cannot drive a giant allocation.
+pub const MAX_ENTRY_BYTES: u32 = 64 << 20;
+
+/// Where one entry's payload lives. `offset` points at the entry frame
+/// (len + crc), not the payload itself.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentLoc {
+    pub segment: String,
+    pub offset: u64,
+    pub len: u32,
+    pub crc: u32,
+}
+
+impl SegmentLoc {
+    /// First byte past this entry — the minimum file length that can hold it.
+    pub fn end(&self) -> u64 {
+        self.offset + ENTRY_FRAME_BYTES + u64::from(self.len)
+    }
+}
+
+/// Sidecar directory for a manifest path: `reports/plan_manifest.json`
+/// keeps its segments in `reports/plan_manifest.json.segments/`.
+pub fn segments_dir(manifest_path: &Path) -> PathBuf {
+    let mut os = manifest_path.as_os_str().to_os_string();
+    os.push(".segments");
+    PathBuf::from(os)
+}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected) — table-based, no external crates.
+// ---------------------------------------------------------------------------
+
+fn crc_table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut table = [0u32; 256];
+        for (i, slot) in table.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        table
+    })
+}
+
+/// CRC-32/IEEE of `bytes` (`crc32(b"123456789") == 0xCBF4_3926`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let table = crc_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ u32::from(b)) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Naming
+// ---------------------------------------------------------------------------
+
+/// Parse `seg-NNNNNN.bin` → `NNNNNN`. Temp files and foreign names → None.
+pub fn segment_seq(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("seg-")?.strip_suffix(".bin")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Every plain file currently in the sidecar dir (segments, temps, strays).
+/// A missing dir is an empty store, not an error.
+pub fn list_files(dir: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(names),
+        Err(e) => return Err(e).with_context(|| format!("listing {}", dir.display())),
+    };
+    for entry in rd {
+        let entry = entry.with_context(|| format!("listing {}", dir.display()))?;
+        if entry.file_type().map(|t| t.is_file()).unwrap_or(false) {
+            if let Some(name) = entry.file_name().to_str() {
+                names.push(name.to_string());
+            }
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+/// Next unused segment name: one past the highest `seg-NNNNNN.bin` on
+/// disk. Scanning the dir (rather than counting index entries) means a
+/// crashed writer's leftover file can never be silently overwritten.
+pub fn next_segment_name(dir: &Path) -> Result<String> {
+    let max = list_files(dir)?.iter().filter_map(|n| segment_seq(n)).max().unwrap_or(0);
+    Ok(format!("seg-{:06}.bin", max + 1))
+}
+
+// ---------------------------------------------------------------------------
+// Write / read
+// ---------------------------------------------------------------------------
+
+static SEGMENT_TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Write `payloads` into a brand-new segment `dir/name` (write-then-rename;
+/// the file appears atomically or not at all). Returns one [`SegmentLoc`]
+/// per payload, in order.
+pub fn write_segment(dir: &Path, name: &str, payloads: &[&[u8]]) -> Result<Vec<SegmentLoc>> {
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let mut buf: Vec<u8> = Vec::with_capacity(
+        SEGMENT_HEADER_BYTES as usize
+            + payloads.iter().map(|p| p.len() + ENTRY_FRAME_BYTES as usize).sum::<usize>(),
+    );
+    buf.extend_from_slice(&SEGMENT_MAGIC);
+    buf.extend_from_slice(&SEGMENT_VERSION.to_le_bytes());
+    buf.extend_from_slice(&[0u8; 2]);
+    let mut locs = Vec::with_capacity(payloads.len());
+    for payload in payloads {
+        if payload.is_empty() || payload.len() > MAX_ENTRY_BYTES as usize {
+            return Err(anyhow!(
+                "segment entry of {} bytes out of range 1..={MAX_ENTRY_BYTES}",
+                payload.len()
+            ));
+        }
+        let offset = buf.len() as u64;
+        let crc = crc32(payload);
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf.extend_from_slice(payload);
+        locs.push(SegmentLoc { segment: name.to_string(), offset, len: payload.len() as u32, crc });
+    }
+    let tmp = dir.join(format!(
+        "{name}.tmp.{}.{}",
+        std::process::id(),
+        SEGMENT_TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let path = dir.join(name);
+    let write = (|| -> std::io::Result<()> {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+        fs::rename(&tmp, &path)
+    })();
+    if let Err(e) = write {
+        let _ = fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("writing segment {}", path.display()));
+    }
+    Ok(locs)
+}
+
+/// Validate a segment's header and that the file can hold `min_len`
+/// bytes. Returns the file length. Called at store open with `min_len` =
+/// the index's max entry end, so *any* truncation of an indexed range is
+/// caught before a single payload is read.
+pub fn check_segment(dir: &Path, name: &str, min_len: u64) -> Result<u64> {
+    let path = dir.join(name);
+    let mut f =
+        fs::File::open(&path).with_context(|| format!("opening segment {}", path.display()))?;
+    let file_len =
+        f.metadata().with_context(|| format!("stat segment {}", path.display()))?.len();
+    if file_len < SEGMENT_HEADER_BYTES {
+        return Err(anyhow!(
+            "segment {} is {file_len} bytes — shorter than its {SEGMENT_HEADER_BYTES}-byte header",
+            path.display()
+        ));
+    }
+    let mut header = [0u8; SEGMENT_HEADER_BYTES as usize];
+    f.read_exact(&mut header)
+        .with_context(|| format!("reading segment header {}", path.display()))?;
+    if header[..4] != SEGMENT_MAGIC {
+        return Err(anyhow!("segment {} has bad magic {:02x?}", path.display(), &header[..4]));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != SEGMENT_VERSION {
+        return Err(anyhow!(
+            "segment {} is version {version}, expected {SEGMENT_VERSION}",
+            path.display()
+        ));
+    }
+    if file_len < min_len {
+        return Err(anyhow!(
+            "segment {} is {file_len} bytes but the index references {min_len} — truncated",
+            path.display()
+        ));
+    }
+    Ok(file_len)
+}
+
+/// Read and verify one entry's payload. Checks the header, the frame's
+/// length and CRC fields against the index, and the payload CRC against
+/// the frame — a mismatch anywhere is a loud `Err`, never a wrong plan.
+pub fn read_payload(dir: &Path, loc: &SegmentLoc) -> Result<Vec<u8>> {
+    if loc.len == 0 || loc.len > MAX_ENTRY_BYTES {
+        return Err(anyhow!(
+            "index length {} for {}@{} out of range 1..={MAX_ENTRY_BYTES}",
+            loc.len,
+            loc.segment,
+            loc.offset
+        ));
+    }
+    check_segment(dir, &loc.segment, loc.end())?;
+    let path = dir.join(&loc.segment);
+    let mut f =
+        fs::File::open(&path).with_context(|| format!("opening segment {}", path.display()))?;
+    f.seek(SeekFrom::Start(loc.offset))
+        .with_context(|| format!("seeking {}@{}", path.display(), loc.offset))?;
+    let mut frame = [0u8; ENTRY_FRAME_BYTES as usize];
+    f.read_exact(&mut frame).with_context(|| format!("reading {}@{}", path.display(), loc.offset))?;
+    let len = u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]);
+    let crc = u32::from_le_bytes([frame[4], frame[5], frame[6], frame[7]]);
+    if len != loc.len || crc != loc.crc {
+        return Err(anyhow!(
+            "segment {}@{}: frame says len={len} crc={crc:08x}, index says len={} crc={:08x}",
+            path.display(),
+            loc.offset,
+            loc.len,
+            loc.crc
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    f.read_exact(&mut payload)
+        .with_context(|| format!("reading {} payload bytes at {}@{}", len, path.display(), loc.offset))?;
+    let actual = crc32(&payload);
+    if actual != crc {
+        return Err(anyhow!(
+            "segment {}@{}: payload crc {actual:08x} != recorded {crc:08x} — bit flip",
+            path.display(),
+            loc.offset
+        ));
+    }
+    Ok(payload)
+}
+
+/// Delete files in the sidecar dir that `referenced` does not name
+/// (superseded segments after compaction, temps from crashed writers).
+/// Best-effort per file, loud on each removal; returns how many went.
+pub fn remove_unreferenced(dir: &Path, referenced: &std::collections::HashSet<String>) -> usize {
+    let mut removed = 0;
+    for name in list_files(dir).unwrap_or_default() {
+        if referenced.contains(&name) {
+            continue;
+        }
+        match fs::remove_file(dir.join(&name)) {
+            Ok(()) => {
+                eprintln!("plan store: removed unreferenced segment file '{name}'");
+                removed += 1;
+            }
+            Err(e) => eprintln!("plan store: could not remove '{name}': {e}"),
+        }
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("anchor-segment-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn write_then_read_round_trips_every_payload() {
+        let dir = tmp_dir("roundtrip");
+        let payloads: Vec<Vec<u8>> = vec![vec![1, 2, 3], vec![0xFF; 100], vec![7]];
+        let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        let locs = write_segment(&dir, "seg-000001.bin", &refs).unwrap();
+        assert_eq!(locs.len(), 3);
+        assert_eq!(locs[0].offset, SEGMENT_HEADER_BYTES);
+        for (loc, payload) in locs.iter().zip(&payloads) {
+            assert_eq!(&read_payload(&dir, loc).unwrap(), payload);
+        }
+        // The file ends exactly at the last entry's end.
+        let file_len = fs::metadata(dir.join("seg-000001.bin")).unwrap().len();
+        assert_eq!(file_len, locs.last().unwrap().end());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn every_truncation_and_bit_flip_is_rejected() {
+        let dir = tmp_dir("corrupt");
+        let payloads: Vec<&[u8]> = vec![b"hello plan", b"goodbye plan"];
+        let locs = write_segment(&dir, "seg-000001.bin", &payloads).unwrap();
+        let path = dir.join("seg-000001.bin");
+        let clean = fs::read(&path).unwrap();
+        for cut in 0..clean.len() {
+            fs::write(&path, &clean[..cut]).unwrap();
+            let max_end = locs.iter().map(SegmentLoc::end).max().unwrap();
+            assert!(
+                check_segment(&dir, "seg-000001.bin", max_end).is_err(),
+                "truncation at {cut} accepted"
+            );
+        }
+        for i in 0..clean.len() {
+            let mut bad = clean.clone();
+            bad[i] ^= 0x41;
+            fs::write(&path, &bad).unwrap();
+            for loc in &locs {
+                // The flipped byte either misses this entry (read fine and
+                // bitwise-equal) or hits it (loud error) — never a silent
+                // wrong payload.
+                if let Ok(p) = read_payload(&dir, loc) {
+                    let lo = (loc.offset + ENTRY_FRAME_BYTES) as usize;
+                    let hi = loc.end() as usize;
+                    assert!(
+                        i < lo || i >= hi,
+                        "flip at {i} inside payload [{lo},{hi}) read back cleanly"
+                    );
+                    assert_eq!(p, clean[lo..hi].to_vec());
+                }
+            }
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn naming_skips_temps_and_never_reuses_a_live_sequence() {
+        let dir = tmp_dir("naming");
+        fs::create_dir_all(&dir).unwrap();
+        assert_eq!(next_segment_name(&dir).unwrap(), "seg-000001.bin");
+        fs::write(dir.join("seg-000004.bin"), b"x").unwrap();
+        fs::write(dir.join("seg-000002.bin.tmp.1.0"), b"x").unwrap();
+        fs::write(dir.join("notes.txt"), b"x").unwrap();
+        assert_eq!(next_segment_name(&dir).unwrap(), "seg-000005.bin");
+        assert_eq!(segment_seq("seg-000004.bin"), Some(4));
+        assert_eq!(segment_seq("seg-000002.bin.tmp.1.0"), None);
+        assert_eq!(segment_seq("seg-x.bin"), None);
+        let mut keep = std::collections::HashSet::new();
+        keep.insert("seg-000004.bin".to_string());
+        let removed = remove_unreferenced(&dir, &keep);
+        assert_eq!(removed, 2);
+        assert_eq!(list_files(&dir).unwrap(), vec!["seg-000004.bin".to_string()]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

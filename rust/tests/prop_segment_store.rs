@@ -1,0 +1,337 @@
+//! Segmented plan-store crash-safety properties (DESIGN.md §15):
+//!
+//! * **Truncation is loud** — a segment file cut at *any* byte is
+//!   rejected at `PlanStore::open` (the index's max entry end bounds the
+//!   file length, so no payload read is needed to notice).
+//! * **Bit flips never serve a wrong plan** — a single-bit flip anywhere
+//!   in a segment file or in the manifest index either fails `open`, or
+//!   opens and then every affected read returns `None` loudly; reads
+//!   that do succeed are bitwise-identical to what was stored.
+//! * **A killed compaction leaves a working store** — leftover temp
+//!   files and fully-written-but-uncommitted segments are ignored at
+//!   `open` and swept by the next compaction.
+//! * **Legacy migration is bitwise and one-time** — a JSON-blob
+//!   `plan_store` is imported into segments on first `open`, every plan
+//!   compares equal, the `migrated_from` marker persists, and the legacy
+//!   layout is never written again.
+//! * **Seeding is lazy** — `plans_for_compatible` decodes only the
+//!   index-matched byte ranges: damage confined to non-matching entries
+//!   is invisible to a compatible seed pass.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anchor_attention::attention::plan::{GroupPlan, PlanKey, SparsePlan};
+use anchor_attention::attention::{CostTally, TileConfig};
+use anchor_attention::runtime::manifest::{write_legacy_json_store, PlanStore, PlanStoreKey};
+use anchor_attention::runtime::segment::{segments_dir, ENTRY_FRAME_BYTES};
+use anchor_attention::util::json::Json;
+use anchor_attention::util::proptest::{check, choose, ensure, Config};
+use anchor_attention::util::rng::Pcg64;
+
+fn tmp_manifest(tag: &str) -> PathBuf {
+    let path = std::env::temp_dir()
+        .join(format!("anchor_segment_store_{}_{tag}.json", std::process::id()));
+    let _ = std::fs::remove_dir_all(segments_dir(&path));
+    std::fs::write(&path, "{}\n").unwrap();
+    path
+}
+
+fn cleanup(path: &Path) {
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_dir_all(segments_dir(path));
+}
+
+fn key(model: &str, layer: u32, n: usize) -> PlanStoreKey {
+    PlanStoreKey { model: model.to_string(), layer, head_group: 0, n }
+}
+
+/// A small deterministic plan; `salt` varies stripes and provenance so
+/// distinct entries have distinct payload bytes.
+fn sample_plan(n: usize, d: usize, salt: u32) -> SparsePlan {
+    let tile = TileConfig::new(16, 16);
+    let groups: Vec<GroupPlan> = (0..tile.q_blocks(n).div_ceil(2))
+        .map(|g| {
+            let win = (g * 32) as u32;
+            let end = ((g + 1) * 32).min(n) as u32;
+            if win == 0 {
+                GroupPlan { spans: vec![(0, end)], stripes: vec![] }
+            } else {
+                GroupPlan {
+                    spans: vec![(0, 16), (win, end)],
+                    stripes: (16 + salt % 5..win).step_by(5).collect(),
+                }
+            }
+        })
+        .collect();
+    let ident = CostTally { flops: 100 + salt as u64, kv_bytes: 7, ident_scores: 3 };
+    SparsePlan::new("anchor", n, d, tile, 2, groups, ident)
+}
+
+/// The dir's single `seg-*.bin` file (panics if there isn't exactly one).
+fn only_segment(dir: &Path) -> String {
+    let mut segs: Vec<String> = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.unwrap().file_name().to_str().map(str::to_string))
+        .filter(|n| n.starts_with("seg-") && n.ends_with(".bin"))
+        .collect();
+    assert_eq!(segs.len(), 1, "expected exactly one segment, got {segs:?}");
+    segs.pop().unwrap()
+}
+
+/// Seed a store with three distinct entries in one flush (one segment)
+/// and return the keys with the plans they must read back as.
+fn seed_three(path: &Path) -> Vec<(PlanStoreKey, SparsePlan)> {
+    let mut store = PlanStore::open(path).unwrap();
+    let mut want = Vec::new();
+    for i in 0..3u32 {
+        let plan = sample_plan(64, 8, i);
+        store.insert(key("m", i, 64), 8, Arc::new(plan.clone()));
+        want.push((key("m", i, 64), plan));
+    }
+    store.flush().unwrap();
+    want
+}
+
+/// After a corruption: either `open` failed, or every seeded key reads
+/// back as `None` (loud drop) or the exact stored plan — never a
+/// different plan.
+fn assert_none_or_identical(path: &Path, want: &[(PlanStoreKey, SparsePlan)], what: &str) {
+    if let Ok(store) = PlanStore::open(path) {
+        for (k, plan) in want {
+            match store.get(k) {
+                None => {}
+                Some(got) => assert_eq!(&*got, plan, "{what} served a wrong plan for {k:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn segment_truncated_at_every_byte_is_rejected_at_open() {
+    let path = tmp_manifest("trunc");
+    let want = seed_three(&path);
+    let dir = segments_dir(&path);
+    let seg = only_segment(&dir);
+    let original = std::fs::read(dir.join(&seg)).unwrap();
+    assert!(original.len() > 8, "segment smaller than its header");
+    for len in 0..original.len() {
+        std::fs::write(dir.join(&seg), &original[..len]).unwrap();
+        assert!(
+            PlanStore::open(&path).is_err(),
+            "segment truncated to {len}/{} bytes opened cleanly",
+            original.len()
+        );
+    }
+    // Restoring the bytes restores the store.
+    std::fs::write(dir.join(&seg), &original).unwrap();
+    let store = PlanStore::open(&path).unwrap();
+    for (k, plan) in &want {
+        assert_eq!(store.get(k).as_deref(), Some(plan));
+    }
+    cleanup(&path);
+}
+
+#[test]
+fn segment_bit_flips_never_serve_a_wrong_plan() {
+    let path = tmp_manifest("segflip");
+    let want = seed_three(&path);
+    let dir = segments_dir(&path);
+    let seg = only_segment(&dir);
+    let original = std::fs::read(dir.join(&seg)).unwrap();
+    for pos in 0..original.len() {
+        let mut bytes = original.clone();
+        bytes[pos] ^= 0x01;
+        std::fs::write(dir.join(&seg), &bytes).unwrap();
+        assert_none_or_identical(&path, &want, &format!("segment bit flip at byte {pos}"));
+    }
+    std::fs::write(dir.join(&seg), &original).unwrap();
+    assert_eq!(PlanStore::open(&path).unwrap().len(), 3);
+    cleanup(&path);
+}
+
+#[test]
+fn index_bit_flips_are_rejected_or_isolated() {
+    let path = tmp_manifest("idxflip");
+    let want = seed_three(&path);
+    let good = std::fs::read(&path).unwrap();
+    for pos in 0..good.len() {
+        let mut bytes = good.clone();
+        bytes[pos] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert_none_or_identical(&path, &want, &format!("index bit flip at byte {pos}"));
+    }
+    std::fs::write(&path, &good).unwrap();
+    let store = PlanStore::open(&path).unwrap();
+    for (k, plan) in &want {
+        assert_eq!(store.get(k).as_deref(), Some(plan));
+    }
+    cleanup(&path);
+}
+
+#[test]
+fn killed_compaction_leftovers_are_recovered_and_cleaned() {
+    let path = tmp_manifest("killcomp");
+    // Three flushes → three live segments referenced by the index.
+    let mut store = PlanStore::open(&path).unwrap();
+    let mut want = Vec::new();
+    for i in 0..3u32 {
+        let plan = sample_plan(64, 8, i);
+        store.insert(key("m", i, 64), 8, Arc::new(plan.clone()));
+        store.flush().unwrap();
+        want.push((key("m", i, 64), plan));
+    }
+    drop(store);
+    let dir = segments_dir(&path);
+    let mut segs: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.unwrap().file_name().to_str().map(str::to_string))
+        .collect();
+    segs.sort();
+    assert!(segs.len() >= 3, "expected one segment per flush, got {segs:?}");
+    // Simulate a compactor killed at both of its crash points: (a) after
+    // writing its merged segment but before committing the index — a
+    // fully-formed unreferenced file; (b) mid-write — a temp file.
+    std::fs::copy(dir.join(&segs[0]), dir.join("seg-000999.bin")).unwrap();
+    std::fs::write(dir.join("seg-001000.bin.tmp.12345.0"), b"half-written junk").unwrap();
+
+    // Open ignores both leftovers: the committed index is authoritative.
+    let mut store = PlanStore::open(&path).unwrap();
+    assert_eq!(store.len(), 3);
+    for (k, plan) in &want {
+        assert_eq!(store.get(k).as_deref(), Some(plan));
+    }
+    // The next compaction merges the live segments and sweeps the rest.
+    let stats = store.compact().unwrap();
+    assert_eq!((stats.segments_after, stats.entries), (1, 3));
+    assert!(stats.files_removed >= 4, "leftovers survived: {stats:?}");
+    drop(store);
+    let after: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.unwrap().file_name().to_str().map(str::to_string))
+        .collect();
+    assert_eq!(after.len(), 1, "compaction left strays: {after:?}");
+    let re = PlanStore::open(&path).unwrap();
+    for (k, plan) in &want {
+        assert_eq!(re.get(k).as_deref(), Some(plan));
+    }
+    cleanup(&path);
+}
+
+#[test]
+fn seeding_decodes_only_the_matching_byte_ranges() {
+    let path = tmp_manifest("lazy");
+    let mut store = PlanStore::open(&path).unwrap();
+    let mut hot = Vec::new();
+    for i in 0..2u32 {
+        let plan = sample_plan(64, 8, i);
+        store.insert(key("hot", i, 64), 8, Arc::new(plan.clone()));
+        hot.push((key("hot", i, 64), plan));
+    }
+    for i in 0..6u32 {
+        store.insert(key("cold", i, 64), 8, Arc::new(sample_plan(64, 8, 100 + i)));
+    }
+    store.flush().unwrap();
+    drop(store);
+    // Corrupt the first payload byte of every cold entry (locations come
+    // from the index), leaving hot entries in the same segment intact.
+    let dir = segments_dir(&path);
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let mut corrupted = 0;
+    for e in doc.get("plan_store").get("entries").as_arr().unwrap() {
+        let seg = e.get("segment").as_str().unwrap().to_string();
+        for g in e.get("groups").as_arr().unwrap() {
+            if g.get("model").as_str() != Some("cold") {
+                continue;
+            }
+            for rec in g.get("keys").as_arr().unwrap() {
+                let offset = rec.idx(2).as_f64().unwrap() as u64;
+                let at = (offset + ENTRY_FRAME_BYTES) as usize;
+                let mut bytes = std::fs::read(dir.join(&seg)).unwrap();
+                bytes[at] ^= 0xFF;
+                std::fs::write(dir.join(&seg), &bytes).unwrap();
+                corrupted += 1;
+            }
+        }
+    }
+    assert_eq!(corrupted, 6, "index lost track of the cold entries");
+    // Open never scans payloads (header + length only) and compatible
+    // seeding decodes only the matched slice, so the damage is invisible
+    // to the hot session...
+    let mut store = PlanStore::open(&path).unwrap();
+    let seeded = store.plans_for_compatible("hot", 64, "anchor", TileConfig::new(16, 16), 2, 8);
+    assert_eq!(seeded.len(), hot.len());
+    for (pk, plan) in &seeded {
+        let want = hot
+            .iter()
+            .find(|(k, _)| PlanKey::new(k.layer, k.head_group) == *pk)
+            .map(|(_, p)| p)
+            .expect("seeded an unknown key");
+        assert_eq!(&**plan, want, "lazy seeding decoded wrong bytes");
+    }
+    // ...while touching a damaged entry is a loud None, never a wrong plan.
+    assert!(store.get(&key("cold", 0, 64)).is_none());
+    cleanup(&path);
+}
+
+#[test]
+fn prop_legacy_migration_is_bitwise_and_one_time() {
+    let cfg = Config::heavy(6, 0xA2C4);
+    check(
+        &cfg,
+        |rng| rng.next_u64(),
+        |_| vec![],
+        |&seed| {
+            let mut rng = Pcg64::seeded(seed);
+            let path = tmp_manifest(&format!("mig_{seed:x}"));
+            let count = 1 + rng.next_below(6) as usize;
+            let mut entries: Vec<(PlanStoreKey, usize, Arc<SparsePlan>)> = Vec::new();
+            for i in 0..count {
+                let n = *choose(&mut rng, &[64usize, 96, 128]);
+                let d = *choose(&mut rng, &[4usize, 8]);
+                let plan = sample_plan(n, d, rng.next_below(1000) as u32);
+                entries.push((
+                    PlanStoreKey {
+                        model: format!("m{}", i % 2),
+                        layer: i as u32,
+                        head_group: 0,
+                        n,
+                    },
+                    d,
+                    Arc::new(plan),
+                ));
+            }
+            write_legacy_json_store(&path, &entries).map_err(|e| e.to_string())?;
+            let before = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
+            ensure(before.contains("\"plan\""), "legacy fixture lacks inline plans")?;
+
+            // First open migrates; every plan must survive bitwise.
+            let store = PlanStore::open(&path).map_err(|e| e.to_string())?;
+            ensure(store.len() == entries.len(), "migration changed the entry count")?;
+            for (k, _, plan) in &entries {
+                ensure(
+                    store.get(k).as_deref() == Some(&**plan),
+                    "migrated plan differs from the legacy original",
+                )?;
+            }
+            drop(store);
+            let after = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
+            let doc = Json::parse(&after).map_err(|e| e.to_string())?;
+            let ps = doc.get("plan_store");
+            ensure(ps.get("format").as_str() == Some("segments"), "store not segmented")?;
+            ensure(
+                ps.get("migrated_from").as_str() == Some("json-v1"),
+                "migrated_from marker missing",
+            )?;
+            ensure(!after.contains("\"plan\""), "legacy inline plans written back")?;
+
+            // Second open is a plain segmented open, still bitwise.
+            let re = PlanStore::open(&path).map_err(|e| e.to_string())?;
+            for (k, _, plan) in &entries {
+                ensure(re.get(k).as_deref() == Some(&**plan), "reopen lost an entry")?;
+            }
+            cleanup(&path);
+            Ok(())
+        },
+    );
+}
