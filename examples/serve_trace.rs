@@ -14,7 +14,7 @@
 use anchor_attention::attention::exec::ExecutorKind;
 use anchor_attention::coordinator::engine::PjrtEngine;
 use anchor_attention::coordinator::request::Request;
-use anchor_attention::coordinator::scheduler::SparsityModel;
+use anchor_attention::coordinator::scheduler::{CostConstants, SparsityModel};
 use anchor_attention::coordinator::server::{serve, ServerConfig};
 use anchor_attention::workload::trace::{generate_trace, TraceConfig};
 
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
         decode_max: 12,
         seed: 7,
     };
-    let trace = generate_trace(&trace_cfg);
+    let trace = generate_trace(&trace_cfg)?;
 
     for (label, sparsity) in [
         ("dense scheduler", SparsityModel::Dense),
@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
                 pipelined: false,
                 executor: ExecutorKind::Cpu,
                 shards: 1,
+                constants: CostConstants::modeled(),
             },
         ),
         (
@@ -56,6 +57,7 @@ fn main() -> anyhow::Result<()> {
                 pipelined: true,
                 executor: ExecutorKind::Cpu,
                 shards: 1,
+                constants: CostConstants::modeled(),
             },
         ),
     ] {

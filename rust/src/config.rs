@@ -114,6 +114,12 @@ impl AppConfig {
                         .get("decode_token_cost")
                         .as_f64()
                         .unwrap_or(sd.decode_token_cost),
+                    // Under KV pressure, evict the largest in-flight prefill
+                    // to admit a smaller queued request (DESIGN.md §16).
+                    preempt_prefill: sched
+                        .get("preempt_prefill")
+                        .as_bool()
+                        .unwrap_or(sd.preempt_prefill),
                 },
                 pool_pages: s.get("pool_pages").as_usize().unwrap_or(d.pool_pages),
                 page_tokens: s.get("page_tokens").as_usize().unwrap_or(d.page_tokens),
@@ -178,6 +184,9 @@ impl AppConfig {
                 decode_max: t.get("decode_max").as_usize().unwrap_or(d.decode_max),
                 seed: t.get("seed").as_i64().unwrap_or(d.seed as i64) as u64,
             };
+            // Reject degenerate traces at parse time, matching the
+            // `shards: 0` precedent above.
+            cfg.trace.validate().map_err(|e| anyhow!("trace config: {e}"))?;
         }
 
         Ok(cfg)
@@ -312,6 +321,32 @@ mod tests {
         let cfg = AppConfig::parse(r#"{"server": {"max_pending": 32}}"#).unwrap();
         assert_eq!(cfg.server.max_pending, Some(32));
         assert!(AppConfig::parse(r#"{"server": {"max_pending": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn preempt_prefill_parses_and_defaults_off() {
+        let cfg = AppConfig::parse("{}").unwrap();
+        assert!(!cfg.server.scheduler.preempt_prefill);
+        let cfg = AppConfig::parse(r#"{"server": {"scheduler": {"preempt_prefill": true}}}"#)
+            .unwrap();
+        assert!(cfg.server.scheduler.preempt_prefill);
+    }
+
+    #[test]
+    fn degenerate_trace_blocks_are_rejected_at_parse() {
+        // Zero/negative rate.
+        assert!(AppConfig::parse(r#"{"trace": {"rate": 0.0}}"#).is_err());
+        // Empty length mix.
+        assert!(AppConfig::parse(r#"{"trace": {"length_mix": []}}"#).is_err());
+        // Non-positive mixture weight.
+        assert!(AppConfig::parse(r#"{"trace": {"length_mix": [[128, 0.0]]}}"#).is_err());
+        // Inverted decode bounds.
+        assert!(
+            AppConfig::parse(r#"{"trace": {"decode_min": 9, "decode_max": 2}}"#).is_err()
+        );
+        // A well-formed block still parses.
+        let cfg = AppConfig::parse(r#"{"trace": {"rate": 2.0, "decode_max": 64}}"#).unwrap();
+        assert_eq!(cfg.trace.decode_max, 64);
     }
 
     #[test]

@@ -112,7 +112,7 @@ mod tests {
         let plan = IterationPlan {
             prefill: vec![(2, 256)],
             decode: vec![1],
-            admitted: vec![],
+            ..IterationPlan::default()
         };
         let b = build_batch(3, &plan, &states).unwrap();
         assert_eq!(b.items[0], WorkItem::Decode { req: 1, token: 42 });
@@ -124,20 +124,20 @@ mod tests {
     #[test]
     fn rejects_wrong_phase() {
         let states = vec![state(1, 64, Phase::Queued, 0)];
-        let plan = IterationPlan { prefill: vec![(1, 64)], decode: vec![], admitted: vec![] };
+        let plan = IterationPlan { prefill: vec![(1, 64)], ..IterationPlan::default() };
         assert!(build_batch(0, &plan, &states).is_err());
     }
 
     #[test]
     fn rejects_oversized_chunk() {
         let states = vec![state(1, 100, Phase::Prefill, 50)];
-        let plan = IterationPlan { prefill: vec![(1, 64)], decode: vec![], admitted: vec![] };
+        let plan = IterationPlan { prefill: vec![(1, 64)], ..IterationPlan::default() };
         assert!(build_batch(0, &plan, &states).is_err());
     }
 
     #[test]
     fn rejects_unknown_request() {
-        let plan = IterationPlan { prefill: vec![(9, 1)], decode: vec![], admitted: vec![] };
+        let plan = IterationPlan { prefill: vec![(9, 1)], ..IterationPlan::default() };
         assert!(build_batch(0, &plan, &[]).is_err());
     }
 

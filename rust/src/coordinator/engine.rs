@@ -44,6 +44,17 @@ pub trait StepExecutor {
     fn observed_plan_hit_rate(&mut self) -> Option<f64> {
         None
     }
+    /// Per-request plan-cache attribution since the last poll:
+    /// `(request id, cache hits, cache misses)` triples from the attention
+    /// sessions behind the steps. The serve loop drains this every
+    /// iteration and attaches the totals to the request's
+    /// [`RequestRecord`](super::metrics::RequestRecord), which is what
+    /// makes hit rates attributable *per workload scenario* in the serving
+    /// report. Default: no attribution (executors that don't run sessions,
+    /// like the mock, report nothing).
+    fn take_plan_attribution(&mut self) -> Vec<(u64, u64, u64)> {
+        Vec::new()
+    }
 }
 
 /// The real PJRT-backed engine. Owns one [`LmModel`] and per-request

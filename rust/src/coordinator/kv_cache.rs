@@ -44,6 +44,10 @@ pub struct PagePool {
     seqs: HashMap<u64, SeqAlloc>,
     stats: Vec<PageStripeStats>,
     total_pages: usize,
+    /// Eviction events (scheduler preemption under memory pressure).
+    evictions: u64,
+    /// Pages reclaimed across all evictions.
+    evicted_pages: u64,
 }
 
 impl PagePool {
@@ -55,6 +59,8 @@ impl PagePool {
             seqs: HashMap::new(),
             stats: vec![PageStripeStats::default(); total_pages],
             total_pages,
+            evictions: 0,
+            evicted_pages: 0,
         }
     }
 
@@ -84,7 +90,8 @@ impl PagePool {
     }
 
     /// Reserve pages for a new sequence (its *full* expected length —
-    /// conservative admission, no mid-decode eviction in this build).
+    /// conservative admission; decoding sequences are never evicted, only
+    /// prefill-phase sequences may be preempted via [`PagePool::evict`]).
     pub fn admit(&mut self, seq: u64, tokens: usize) -> Result<()> {
         if self.seqs.contains_key(&seq) {
             return Err(anyhow!("sequence {seq} already admitted"));
@@ -109,6 +116,30 @@ impl PagePool {
         }
         self.free.extend(alloc.pages);
         Ok(())
+    }
+
+    /// Evict a sequence under memory pressure: identical to [`release`]
+    /// (pages freed, per-page stats reset) but counted separately, because
+    /// an eviction means the victim must re-prefill from scratch while a
+    /// release means it finished. Scheduler preemption is the only caller.
+    ///
+    /// [`release`]: PagePool::release
+    pub fn evict(&mut self, seq: u64) -> Result<()> {
+        let pages = self.seqs.get(&seq).map(|a| a.pages.len()).unwrap_or(0);
+        self.release(seq)?;
+        self.evictions += 1;
+        self.evicted_pages += pages as u64;
+        Ok(())
+    }
+
+    /// Eviction events so far (one per preempted sequence).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Total pages reclaimed by evictions.
+    pub fn evicted_pages(&self) -> u64 {
+        self.evicted_pages
     }
 
     pub fn pages_of(&self, seq: u64) -> Option<&[u32]> {
@@ -488,6 +519,23 @@ mod tests {
         assert_eq!(pool.stripe_stats(pages[2]).hot_fraction, 0.2);
         let hot = pool.hot_pages(1, 0.5);
         assert_eq!(hot, vec![pages[0]]);
+    }
+
+    #[test]
+    fn evictions_are_counted_separately_from_releases() {
+        let mut pool = PagePool::new(8, 64);
+        pool.admit(1, 256).unwrap(); // 4 pages
+        pool.admit(2, 64).unwrap(); // 1 page
+        assert_eq!(pool.evictions(), 0);
+        pool.evict(1).unwrap();
+        assert_eq!(pool.evictions(), 1);
+        assert_eq!(pool.evicted_pages(), 4);
+        assert_eq!(pool.free_pages(), 7);
+        // A normal release does not bump the eviction counters.
+        pool.release(2).unwrap();
+        assert_eq!(pool.evictions(), 1);
+        assert_eq!(pool.evicted_pages(), 4);
+        assert!(pool.evict(99).is_err());
     }
 
     #[test]

@@ -45,6 +45,40 @@ pub struct RequestRecord {
     pub e2e_s: f64,
     /// How the request ended (completed / rejected / shed / failed).
     pub outcome: RequestOutcome,
+    /// Workload scenario tag the request carried (`None` if untagged).
+    pub scenario: Option<String>,
+    /// Plan-cache hits/misses attributed to this request by the engine
+    /// (zero when the executor doesn't attribute, e.g. the mock).
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    /// KV-page evictions this request suffered (prefill preemption).
+    pub evictions: u32,
+}
+
+/// Per-scenario aggregate inside a [`ServeReport`] — the breakdown ISSUE 9
+/// gates on (shared-prefix traffic must out-hit needle traffic).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioStats {
+    pub scenario: String,
+    pub requests: usize,
+    pub completed: usize,
+    pub p50_ttft_s: f64,
+    pub p99_ttft_s: f64,
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub evictions: u64,
+}
+
+impl ScenarioStats {
+    /// Plan-cache hit rate over attributed lookups (0 when none).
+    pub fn plan_hit_rate(&self) -> f64 {
+        let total = self.plan_hits + self.plan_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / total as f64
+        }
+    }
 }
 
 /// Aggregate serving report (printed by `serve` / `examples/serve_trace`).
@@ -61,6 +95,11 @@ pub struct ServeReport {
     /// Scheduler's plan-hit EWMA at the end of the run (`None` for the
     /// dense model, which carries no amortization state).
     pub final_plan_hit_rate: Option<f64>,
+    /// KV-page eviction events the pool recorded (prefill preemption under
+    /// memory pressure).
+    pub kv_evictions: u64,
+    /// High-water mark of the admission queue depth.
+    pub peak_queue_depth: usize,
 }
 
 impl ServeReport {
@@ -94,13 +133,55 @@ impl ServeReport {
     }
 
     pub fn ttft_percentile(&self, q: f64) -> f64 {
-        let xs: Vec<f64> = self.records.iter().map(|r| r.ttft_s).collect();
+        // Shed/rejected records carry NaN latencies; filter them so the
+        // percentile sort never sees an unordered value.
+        let xs: Vec<f64> =
+            self.records.iter().map(|r| r.ttft_s).filter(|x| x.is_finite()).collect();
         stats::percentile(&xs, q)
     }
 
     pub fn e2e_percentile(&self, q: f64) -> f64 {
-        let xs: Vec<f64> = self.records.iter().map(|r| r.e2e_s).collect();
+        let xs: Vec<f64> =
+            self.records.iter().map(|r| r.e2e_s).filter(|x| x.is_finite()).collect();
         stats::percentile(&xs, q)
+    }
+
+    /// Per-scenario breakdown, sorted by scenario tag (untagged traffic
+    /// aggregates under `"untagged"`).
+    pub fn scenario_breakdown(&self) -> Vec<ScenarioStats> {
+        let mut tags: Vec<String> = self
+            .records
+            .iter()
+            .map(|r| r.scenario.clone().unwrap_or_else(|| "untagged".to_string()))
+            .collect();
+        tags.sort();
+        tags.dedup();
+        tags.iter()
+            .map(|tag| {
+                let matching: Vec<&RequestRecord> = self
+                    .records
+                    .iter()
+                    .filter(|r| {
+                        r.scenario.as_deref().unwrap_or("untagged") == tag.as_str()
+                    })
+                    .collect();
+                let ttfts: Vec<f64> =
+                    matching.iter().map(|r| r.ttft_s).filter(|x| x.is_finite()).collect();
+                ScenarioStats {
+                    scenario: tag.clone(),
+                    requests: matching.len(),
+                    completed: matching
+                        .iter()
+                        .filter(|r| r.outcome == RequestOutcome::Completed)
+                        .count(),
+                    p50_ttft_s: stats::percentile(&ttfts, 50.0),
+                    p99_ttft_s: stats::percentile(&ttfts, 99.0),
+                    plan_hits: matching.iter().map(|r| r.plan_hits).sum(),
+                    plan_misses: matching.iter().map(|r| r.plan_misses).sum(),
+                    evictions: matching.iter().map(|r| r.evictions as u64).sum(),
+                }
+            })
+            .collect()
     }
 
     pub fn utilization(&self) -> f64 {
@@ -143,6 +224,24 @@ impl ServeReport {
                 rate, self.plan_hit_observations
             );
         }
+        if self.kv_evictions > 0 {
+            println!("kv evictions      {:>10}", self.kv_evictions);
+        }
+        if self.peak_queue_depth > 0 {
+            println!("peak queue depth  {:>10}", self.peak_queue_depth);
+        }
+        let breakdown = self.scenario_breakdown();
+        if breakdown.iter().any(|s| s.scenario != "untagged") {
+            for s in &breakdown {
+                println!(
+                    "  [{}] {} req, p99 TTFT {:.3} s, plan hit {:.0}%",
+                    s.scenario,
+                    s.requests,
+                    s.p99_ttft_s,
+                    s.plan_hit_rate() * 100.0
+                );
+            }
+        }
         let not_completed: Vec<String> = [
             RequestOutcome::RejectedInvalid,
             RequestOutcome::RejectedOversized,
@@ -166,7 +265,8 @@ impl ServeReport {
             "{{\"requests\": {}, \"completed\": {}, \"rejected_invalid\": {}, \
              \"rejected_oversized\": {}, \"overloaded\": {}, \"failed\": {}, \
              \"iterations\": {}, \"wall_s\": {:.6}, \"prompt_tokens\": {}, \
-             \"generated_tokens\": {}, \"plan_hit_observations\": {}}}",
+             \"generated_tokens\": {}, \"plan_hit_observations\": {}, \
+             \"kv_evictions\": {}, \"peak_queue_depth\": {}}}",
             self.records.len(),
             self.outcome_count(RequestOutcome::Completed),
             self.outcome_count(RequestOutcome::RejectedInvalid),
@@ -178,6 +278,8 @@ impl ServeReport {
             self.total_prompt_tokens(),
             self.total_generated_tokens(),
             self.plan_hit_observations,
+            self.kv_evictions,
+            self.peak_queue_depth,
         )
     }
 }
@@ -195,6 +297,10 @@ mod tests {
             ttft_s: ttft,
             e2e_s: e2e,
             outcome: RequestOutcome::Completed,
+            scenario: None,
+            plan_hits: 0,
+            plan_misses: 0,
+            evictions: 0,
         }
     }
 
@@ -238,5 +344,51 @@ mod tests {
         let json = rep.to_json();
         assert!(json.contains("\"completed\": 2"), "{json}");
         assert!(json.contains("\"overloaded\": 1"), "{json}");
+        assert!(json.contains("\"kv_evictions\": 0"), "{json}");
+    }
+
+    #[test]
+    fn nan_latencies_do_not_poison_percentiles() {
+        // A shed record carries NaN; percentiles must come from the two
+        // finite records only (and not panic in the sort).
+        let mut shed = record(3, f64::NAN, f64::NAN);
+        shed.outcome = RequestOutcome::Overloaded;
+        let rep = ServeReport {
+            records: vec![record(1, 0.1, 1.0), record(2, 0.3, 2.0), shed],
+            ..ServeReport::default()
+        };
+        assert!((rep.ttft_percentile(50.0) - 0.2).abs() < 1e-9);
+        assert!(rep.e2e_percentile(99.0).is_finite());
+    }
+
+    #[test]
+    fn scenario_breakdown_attributes_hits_per_tag() {
+        let tagged = |id, tag: &str, ttft: f64, hits, misses| {
+            let mut r = record(id, ttft, ttft + 1.0);
+            r.scenario = Some(tag.to_string());
+            r.plan_hits = hits;
+            r.plan_misses = misses;
+            r
+        };
+        let rep = ServeReport {
+            records: vec![
+                tagged(1, "shared-prefix", 0.1, 9, 1),
+                tagged(2, "shared-prefix", 0.2, 8, 2),
+                tagged(3, "needle", 0.4, 0, 10),
+                record(4, 0.3, 1.3),
+            ],
+            ..ServeReport::default()
+        };
+        let breakdown = rep.scenario_breakdown();
+        let tags: Vec<&str> = breakdown.iter().map(|s| s.scenario.as_str()).collect();
+        assert_eq!(tags, vec!["needle", "shared-prefix", "untagged"]);
+        let shared = &breakdown[1];
+        assert_eq!(shared.requests, 2);
+        assert_eq!(shared.completed, 2);
+        assert!((shared.plan_hit_rate() - 17.0 / 20.0).abs() < 1e-9);
+        let needle = &breakdown[0];
+        assert_eq!(needle.plan_hit_rate(), 0.0);
+        assert!(shared.plan_hit_rate() > needle.plan_hit_rate());
+        assert_eq!(breakdown[2].plan_hits + breakdown[2].plan_misses, 0);
     }
 }

@@ -10,6 +10,7 @@ use super::request::Request;
 struct Inner {
     queue: VecDeque<Request>,
     closed: bool,
+    peak: usize,
 }
 
 /// MPMC admission queue (Mutex + Condvar; no external deps offline).
@@ -28,7 +29,14 @@ impl AdmissionQueue {
         let mut g = self.inner.lock().unwrap();
         assert!(!g.closed, "push after close");
         g.queue.push_back(r);
+        g.peak = g.peak.max(g.queue.len());
         self.cv.notify_all();
+    }
+
+    /// High-water mark of the queue depth since construction (never resets).
+    /// Serving harnesses report this as `peak_queue_depth`.
+    pub fn peak_depth(&self) -> usize {
+        self.inner.lock().unwrap().peak
     }
 
     /// No more requests will arrive; wakes all waiters.
@@ -101,6 +109,25 @@ mod tests {
         let got = q.drain_arrived(1.6);
         assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn peak_depth_is_a_high_water_mark() {
+        let q = AdmissionQueue::new();
+        assert_eq!(q.peak_depth(), 0);
+        q.push(req(1, 0.0));
+        q.push(req(2, 0.0));
+        q.push(req(3, 0.0));
+        assert_eq!(q.peak_depth(), 3);
+        q.pop_blocking();
+        q.pop_blocking();
+        assert_eq!(q.len(), 1);
+        // Draining does not lower the mark; a later burst can raise it.
+        assert_eq!(q.peak_depth(), 3);
+        q.push(req(4, 0.0));
+        q.push(req(5, 0.0));
+        q.push(req(6, 0.0));
+        assert_eq!(q.peak_depth(), 4);
     }
 
     #[test]

@@ -61,17 +61,26 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Trace-time arrival (seconds from trace start).
     pub arrival_s: f64,
+    /// Workload scenario tag (e.g. `"shared-prefix"`) for per-scenario
+    /// report breakdowns; `None` for untagged traffic.
+    pub scenario: Option<String>,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize, arrival_s: f64) -> Self {
-        Self { id, prompt, max_new_tokens, arrival_s }
+        Self { id, prompt, max_new_tokens, arrival_s, scenario: None }
     }
 
     /// Start a validated request build; [`RequestBuilder::build`] checks
     /// the submission against the sequence capacity.
     pub fn builder(id: u64) -> RequestBuilder {
-        RequestBuilder { id, prompt: Vec::new(), max_new_tokens: 1, arrival_s: 0.0 }
+        RequestBuilder {
+            id,
+            prompt: Vec::new(),
+            max_new_tokens: 1,
+            arrival_s: 0.0,
+            scenario: None,
+        }
     }
 
     pub fn total_tokens(&self) -> usize {
@@ -106,6 +115,7 @@ pub struct RequestBuilder {
     prompt: Vec<i32>,
     max_new_tokens: usize,
     arrival_s: f64,
+    scenario: Option<String>,
 }
 
 impl RequestBuilder {
@@ -124,6 +134,12 @@ impl RequestBuilder {
         self
     }
 
+    /// Tag the request with a workload scenario for report attribution.
+    pub fn scenario(mut self, tag: &str) -> Self {
+        self.scenario = Some(tag.to_string());
+        self
+    }
+
     /// Validate against the serving sequence capacity and construct.
     pub fn build(self, max_seq: usize) -> Result<Request, RequestError> {
         let req = Request {
@@ -131,6 +147,7 @@ impl RequestBuilder {
             prompt: self.prompt,
             max_new_tokens: self.max_new_tokens,
             arrival_s: self.arrival_s,
+            scenario: self.scenario,
         };
         req.validate(max_seq)?;
         Ok(req)
@@ -150,6 +167,9 @@ pub struct RequestState {
     pub first_token_s: Option<f64>,
     /// Completion time.
     pub finished_s: Option<f64>,
+    /// Times this request's KV pages were evicted by prefill preemption
+    /// (bounded by the scheduler's per-request preemption cap).
+    pub preemptions: u32,
 }
 
 impl RequestState {
@@ -161,6 +181,7 @@ impl RequestState {
             generated: Vec::new(),
             first_token_s: None,
             finished_s: None,
+            preemptions: 0,
         }
     }
 

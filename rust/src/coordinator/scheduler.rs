@@ -226,6 +226,10 @@ impl SparsityModel {
     }
 }
 
+/// Per-request cap on prefill preemptions: after this many evictions a
+/// request keeps its pages, bounding worst-case re-prefill work.
+pub const MAX_PREEMPTIONS: u32 = 2;
+
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerConfig {
     /// Cost budget per iteration, in normalized token-cost units.
@@ -237,6 +241,10 @@ pub struct SchedulerConfig {
     pub sparsity: SparsityModel,
     /// Per-token cost of a decode step relative to a prefill token.
     pub decode_token_cost: f64,
+    /// Allow a blocked admission to evict a strictly larger prefill-phase
+    /// request (never a decoding one) and take its pages. Off by default:
+    /// the conservative no-eviction admission of earlier builds.
+    pub preempt_prefill: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -247,6 +255,7 @@ impl Default for SchedulerConfig {
             max_running: 8,
             sparsity: SparsityModel::Dense,
             decode_token_cost: 4.0,
+            preempt_prefill: false,
         }
     }
 }
@@ -260,6 +269,9 @@ pub struct IterationPlan {
     pub decode: Vec<u64>,
     /// Request ids newly admitted (pages granted) this iteration.
     pub admitted: Vec<u64>,
+    /// Request ids whose pages were evicted this iteration (prefill
+    /// preemption); they return to the queue and re-prefill from scratch.
+    pub preempted: Vec<u64>,
 }
 
 impl IterationPlan {
@@ -298,20 +310,53 @@ pub fn plan_iteration(
     }
 
     // 2. Admissions: FIFO while pages are available and running slots open.
+    //    With `preempt_prefill`, a blocked admission may evict one
+    //    *strictly larger* prefill-phase request (never a decoding one —
+    //    its pages hold issued tokens) and take its pages. The strict size
+    //    order is the livelock guard: a victim can never in turn preempt
+    //    the request that displaced it, and [`MAX_PREEMPTIONS`] bounds how
+    //    often any one request re-prefills.
     let running = states
         .iter()
         .filter(|s| matches!(s.phase, Phase::Prefill | Phase::Decode))
         .count();
     let mut slots = cfg.max_running.saturating_sub(running);
-    for st in states.iter_mut() {
+    for i in 0..states.len() {
         if slots == 0 {
             break;
         }
-        if st.phase == Phase::Queued && pool.can_admit(st.request.total_tokens()) {
-            pool.admit(st.request.id, st.request.total_tokens())
-                .expect("can_admit checked");
-            st.phase = Phase::Prefill;
-            plan.admitted.push(st.request.id);
+        if states[i].phase != Phase::Queued {
+            continue;
+        }
+        let tokens = states[i].request.total_tokens();
+        if cfg.preempt_prefill && !pool.can_admit(tokens) {
+            // Largest eligible victim: prefill phase (no tokens issued),
+            // strictly more total tokens than the blocked request (so the
+            // freed pages are guaranteed to cover it), under the
+            // preemption cap, and not admitted this very iteration.
+            let victim = (0..states.len())
+                .filter(|&j| {
+                    j != i
+                        && states[j].phase == Phase::Prefill
+                        && states[j].preemptions < MAX_PREEMPTIONS
+                        && states[j].request.total_tokens() > tokens
+                        && !plan.admitted.contains(&states[j].request.id)
+                })
+                .max_by_key(|&j| states[j].request.total_tokens());
+            if let Some(v) = victim {
+                let vid = states[v].request.id;
+                pool.evict(vid).expect("prefill victim holds pages");
+                states[v].phase = Phase::Queued;
+                states[v].prefilled = 0;
+                states[v].preemptions += 1;
+                plan.preempted.push(vid);
+                slots += 1; // the victim's running slot opens up
+            }
+        }
+        if pool.can_admit(tokens) {
+            pool.admit(states[i].request.id, tokens).expect("can_admit checked");
+            states[i].phase = Phase::Prefill;
+            plan.admitted.push(states[i].request.id);
             slots -= 1;
         }
     }
@@ -360,6 +405,7 @@ mod tests {
             max_running: 4,
             sparsity: SparsityModel::Dense,
             decode_token_cost: 4.0,
+            preempt_prefill: false,
         }
     }
 
@@ -703,5 +749,90 @@ mod tests {
         let plan = plan_iteration(&cfg(), &mut states, &mut pool);
         assert!(plan.is_empty());
         assert!(plan.admitted.is_empty());
+    }
+
+    /// Preemption off (the default): a blocked small request waits behind
+    /// a large prefill exactly as before.
+    #[test]
+    fn no_preemption_by_default() {
+        let mut pool = PagePool::new(8, 256); // 2048 tokens
+        let mut states = mk_states(&[(1, 1800, 8), (2, 300, 8)]);
+        states[0].phase = Phase::Prefill;
+        pool.admit(1, states[0].request.total_tokens()).unwrap();
+        let plan = plan_iteration(&cfg(), &mut states, &mut pool);
+        assert!(plan.preempted.is_empty());
+        assert_eq!(states[1].phase, Phase::Queued);
+        assert_eq!(pool.evictions(), 0);
+        assert!(plan.prefill.iter().any(|&(id, _)| id == 1));
+    }
+
+    /// Preemption on: the blocked smaller request evicts the strictly
+    /// larger prefill victim, takes its pages, and is admitted in the same
+    /// iteration (so the plan is never empty and the serve loop never
+    /// bails on a false deadlock).
+    #[test]
+    fn preemption_evicts_larger_prefill_and_admits_same_iteration() {
+        let mut pool = PagePool::new(8, 256);
+        let mut states = mk_states(&[(1, 1800, 8), (2, 300, 8)]);
+        states[0].phase = Phase::Prefill;
+        states[0].prefilled = 512;
+        pool.admit(1, states[0].request.total_tokens()).unwrap();
+        let mut c = cfg();
+        c.preempt_prefill = true;
+        let plan = plan_iteration(&c, &mut states, &mut pool);
+        assert_eq!(plan.preempted, vec![1]);
+        assert_eq!(plan.admitted, vec![2]);
+        // The victim re-queues and its progress resets.
+        assert_eq!(states[0].phase, Phase::Queued);
+        assert_eq!(states[0].prefilled, 0);
+        assert_eq!(states[0].preemptions, 1);
+        // The winner holds pages and gets prefill work this iteration.
+        assert_eq!(states[1].phase, Phase::Prefill);
+        assert!(plan.prefill.iter().any(|&(id, _)| id == 2));
+        assert!(!plan.is_empty());
+        assert_eq!(pool.evictions(), 1);
+    }
+
+    /// A decoding request is never a preemption victim, and a victim must
+    /// be *strictly* larger — an equal-size queued request cannot displace
+    /// it (the total order that prevents eviction livelock).
+    #[test]
+    fn preemption_spares_decoders_and_equal_sizes() {
+        let mut c = cfg();
+        c.preempt_prefill = true;
+        // Decoder fills the pool: the queued request must simply wait.
+        let mut pool = PagePool::new(8, 256);
+        let mut states = mk_states(&[(1, 1800, 8), (2, 300, 8)]);
+        states[0].phase = Phase::Decode;
+        states[0].prefilled = 1800;
+        pool.admit(1, states[0].request.total_tokens()).unwrap();
+        let plan = plan_iteration(&c, &mut states, &mut pool);
+        assert!(plan.preempted.is_empty());
+        assert_eq!(states[1].phase, Phase::Queued);
+        // Equal sizes: no strict order, no eviction.
+        let mut pool = PagePool::new(8, 256);
+        let mut states = mk_states(&[(1, 1800, 8), (2, 1800, 8)]);
+        states[0].phase = Phase::Prefill;
+        pool.admit(1, states[0].request.total_tokens()).unwrap();
+        let plan = plan_iteration(&c, &mut states, &mut pool);
+        assert!(plan.preempted.is_empty());
+        assert_eq!(pool.evictions(), 0);
+    }
+
+    /// The per-request cap: after [`MAX_PREEMPTIONS`] evictions a request
+    /// keeps its pages for good.
+    #[test]
+    fn preemption_cap_protects_repeat_victims() {
+        let mut c = cfg();
+        c.preempt_prefill = true;
+        let mut pool = PagePool::new(8, 256);
+        let mut states = mk_states(&[(1, 1800, 8), (2, 300, 8)]);
+        states[0].phase = Phase::Prefill;
+        states[0].preemptions = MAX_PREEMPTIONS;
+        pool.admit(1, states[0].request.total_tokens()).unwrap();
+        let plan = plan_iteration(&c, &mut states, &mut pool);
+        assert!(plan.preempted.is_empty(), "capped victim was evicted again");
+        assert_eq!(states[0].phase, Phase::Prefill);
+        assert_eq!(states[1].phase, Phase::Queued);
     }
 }

@@ -257,6 +257,10 @@ fn rejected_record(sub: &ServeRequest, outcome: RequestOutcome) -> RequestRecord
         ttft_s: f64::NAN,
         e2e_s: f64::NAN,
         outcome,
+        scenario: None,
+        plan_hits: 0,
+        plan_misses: 0,
+        evictions: 0,
     }
 }
 
@@ -411,6 +415,8 @@ pub fn serve<E: StepExecutor>(
     let mut outcomes: HashMap<u64, RequestOutcome> = HashMap::new();
     let mut pool = PagePool::new(cfg.pool_pages, cfg.page_tokens);
     let mut report = ServeReport::default();
+    // Per-request plan-cache attribution drained from the executor.
+    let mut plan_attrib: HashMap<u64, (u64, u64)> = HashMap::new();
     let t0 = Instant::now();
     let mut iteration = 0u64;
 
@@ -442,7 +448,19 @@ pub fn serve<E: StepExecutor>(
             break;
         }
 
+        let queued_now =
+            pending.len() + states.iter().filter(|s| s.phase == Phase::Queued).count();
+        report.peak_queue_depth = report.peak_queue_depth.max(queued_now);
+
         let plan = plan_iteration(&sched, &mut states, &mut pool);
+        // Preempted requests restart prefill from scratch: reset the
+        // executor's per-request context so its cost/progress tracking
+        // matches the scheduler's `prefilled = 0`.
+        for &vid in &plan.preempted {
+            executor.finish_request(vid);
+            let st = states.iter().find(|s| s.request.id == vid).unwrap();
+            register(executor, &st.request);
+        }
         if plan.is_empty() {
             if let Some(next) = pending.last() {
                 // Idle until the next arrival.
@@ -464,6 +482,11 @@ pub fn serve<E: StepExecutor>(
         if let Some(observed) = executor.observed_plan_hit_rate() {
             sched.sparsity.observe_plan_hit_rate(observed);
             report.plan_hit_observations += 1;
+        }
+        for (req, hits, misses) in executor.take_plan_attribution() {
+            let e = plan_attrib.entry(req).or_insert((0, 0));
+            e.0 += hits;
+            e.1 += misses;
         }
         let now = t0.elapsed().as_secs_f64();
 
@@ -509,7 +532,10 @@ pub fn serve<E: StepExecutor>(
     report.wall_s = t0.elapsed().as_secs_f64();
     report.iterations = iteration;
     report.final_plan_hit_rate = sched.sparsity.plan_hit_rate();
+    report.kv_evictions = pool.evictions();
     for st in &states {
+        let (plan_hits, plan_misses) =
+            plan_attrib.get(&st.request.id).copied().unwrap_or((0, 0));
         report.records.push(RequestRecord {
             id: st.request.id,
             prompt_tokens: st.request.prompt.len(),
@@ -521,6 +547,10 @@ pub fn serve<E: StepExecutor>(
                 .get(&st.request.id)
                 .copied()
                 .unwrap_or(RequestOutcome::Completed),
+            scenario: st.request.scenario.clone(),
+            plan_hits,
+            plan_misses,
+            evictions: st.preemptions,
         });
     }
     Ok(report)
@@ -596,6 +626,31 @@ mod tests {
         let rep = run(trace(4, 300, 2), &cfg);
         assert_eq!(rep.records.len(), 4);
         assert!(rep.records.iter().all(|r| r.generated_tokens == 2));
+    }
+
+    #[test]
+    fn prefill_preemption_completes_everything_and_counts_evictions() {
+        let mut cfg = ServerConfig::default();
+        cfg.pool_pages = 8; // 512 tokens: the big request fills the pool
+        cfg.page_tokens = 64;
+        cfg.scheduler.preempt_prefill = true;
+        let mut t = trace(1, 480, 4); // id 0: 8 pages, blocks everyone
+        t.extend((1..4).map(|i| Request::new(i, vec![1; 120], 2, 0.0)));
+        let rep = run(t, &cfg);
+        assert_eq!(rep.records.len(), 4);
+        assert!(
+            rep.records.iter().all(|r| r.outcome == RequestOutcome::Completed),
+            "{:?}",
+            rep.records
+        );
+        // The big request was displaced at least once and the pool counted it.
+        assert!(rep.kv_evictions >= 1, "expected evictions, got {}", rep.kv_evictions);
+        let big = rep.records.iter().find(|r| r.id == 0).unwrap();
+        assert!(big.evictions >= 1 && big.evictions <= 2, "{:?}", big);
+        assert_eq!(big.generated_tokens, 4);
+        assert!(rep.peak_queue_depth >= 3);
+        // Scenario tags flow through to records (none set here).
+        assert!(rep.records.iter().all(|r| r.scenario.is_none()));
     }
 
     #[test]

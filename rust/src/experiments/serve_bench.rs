@@ -1,0 +1,458 @@
+//! `bench serve` — the SLO-gated serving harness (DESIGN.md §16).
+//!
+//! Replays a scenario-library trace ([`crate::workload::scenario`])
+//! through the *real* serving path — admission, paged KV pool under
+//! eviction pressure (prefill preemption on), chunked-prefill scheduler
+//! with the live plan-hit EWMA, dynamic batcher — against a mock engine
+//! that additionally drives a genuine [`AttentionSession`] per completed
+//! prefill, all sessions sharing one [`PlanCache`] keyed by the trace's
+//! reuse keys. Plan-cache hits therefore come from the cache itself, not
+//! a model: a shared-prefix tenant whose requests collide on
+//! `(tenant, group)` reuse keys hits warm plans, a needle tenant whose
+//! keys are unique never does, and the per-scenario hit rates in the
+//! report are the measured difference.
+//!
+//! Output: `reports/bench_serve.json` — TTFT/e2e percentiles,
+//! goodput-per-core, per-scenario plan hit rates, KV eviction counts and
+//! the trace's stream digest (the CI determinism check re-runs the
+//! binary and compares digests). `--baseline F` gates the run: latency
+//! ceilings within [`GATE_TOLERANCE`], throughput/hit-rate floors, and
+//! the paper-flavored ordering check that shared-prefix reuse must beat
+//! needle (§3.2's cross-input commonality, observed end-to-end).
+//!
+//! [`AttentionSession`]: crate::attention::session::AttentionSession
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::common::{bench_report_json, write_json_report, ExpScale};
+use crate::attention::anchor::AnchorConfig;
+use crate::attention::exec::ExecutorKind;
+use crate::attention::plan::{BatchInput, PlanCache, PlanKey};
+use crate::attention::{Method, TileConfig};
+use crate::coordinator::batcher::EngineBatch;
+use crate::coordinator::engine::{MockEngine, StepExecutor, StepOutcome};
+use crate::coordinator::metrics::RequestOutcome;
+use crate::coordinator::request::Request;
+use crate::coordinator::scheduler::{CostConstants, SparsityModel};
+use crate::coordinator::server::{serve, ServerConfig};
+use crate::util::json::Json;
+use crate::workload::scenario::{named_scenario, stream_digest, ScenarioRequest};
+use crate::workload::WorkloadProfile;
+
+/// Allowed fractional slack on a gated ceiling/floor before the gate
+/// fails the run (latencies vary with machine; orderings do not).
+pub const GATE_TOLERANCE: f64 = 0.15;
+
+/// Context length of the per-request attention session. Small on purpose:
+/// the harness measures *cache interaction* per request, not kernel
+/// speed — the micro/fig2 suites own that.
+const SESSION_N: usize = 256;
+
+/// CLI-facing knobs for `bench serve`.
+pub struct ServeBenchOptions {
+    /// Scenario name: long-doc | rag | shared-prefix | needle | mixed.
+    pub scenario: String,
+    /// Trace size override (default scales with quick/full).
+    pub requests: Option<usize>,
+    /// Committed baseline JSON with `ceilings` / `floors` /
+    /// `shared_prefix_beats_needle`; when set, violations exit nonzero.
+    pub baseline: Option<String>,
+}
+
+/// Fold a 64-bit scenario reuse key into the 32-bit plan-cache head
+/// group, preserving distinctness of the needle tenant's unique keys.
+fn fold_key(key: u64) -> u32 {
+    (key ^ (key >> 32)) as u32
+}
+
+/// Mock engine wrapper that runs one real attention session per request
+/// at prompt completion, sharing a single plan cache across the run.
+struct ScenarioEngine {
+    inner: MockEngine,
+    method: Method,
+    cache: Arc<PlanCache>,
+    batch: BatchInput,
+    /// Request id → plan-cache key derived from the scenario reuse key.
+    plan_keys: HashMap<u64, PlanKey>,
+    prompt_len: HashMap<u64, usize>,
+    /// Prefill progress tracked independently of the mock (reset on
+    /// preemption via `finish_request`, like the mock's own counter).
+    prefilled: HashMap<u64, usize>,
+    /// Requests whose session already ran — a preempted-and-replayed
+    /// prefill must not double-count its cache interaction.
+    ran: HashSet<u64>,
+    pending_attrib: Vec<(u64, u64, u64)>,
+    window_hits: u64,
+    window_misses: u64,
+}
+
+impl ScenarioEngine {
+    fn new(seed: u64, trace: &[ScenarioRequest], model: SparsityModel) -> Self {
+        let wl = crate::workload::qkv::generate(
+            &WorkloadProfile::llama_like(),
+            SESSION_N,
+            seed,
+        );
+        // Tiny tile so SESSION_N yields enough blocks for anchor
+        // identification to do real work per session.
+        let method = Method::Anchor(AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta: 4.0,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        });
+        let mut plan_keys = HashMap::new();
+        let mut prompt_len = HashMap::new();
+        for r in trace {
+            plan_keys.insert(r.id, PlanKey::new(r.kind.index(), fold_key(r.reuse_key)));
+            prompt_len.insert(r.id, r.prompt_tokens);
+        }
+        Self {
+            inner: MockEngine::with_cost_model(512, model),
+            method,
+            cache: Arc::new(PlanCache::new()),
+            batch: BatchInput::new(vec![wl.head]),
+            plan_keys,
+            prompt_len,
+            prefilled: HashMap::new(),
+            ran: HashSet::new(),
+            pending_attrib: Vec::new(),
+            window_hits: 0,
+            window_misses: 0,
+        }
+    }
+
+    fn run_session(&mut self, req: u64) {
+        let Some(&key) = self.plan_keys.get(&req) else { return };
+        let mut session = self
+            .method
+            .session()
+            .shared_cache(self.cache.clone())
+            .keys(vec![key])
+            .build()
+            .expect("anchor session config is infallible");
+        let out = session.run_batch(&self.batch).expect("in-memory batch cannot fail");
+        self.window_hits += out.cache_hits;
+        self.window_misses += out.cache_misses;
+        self.pending_attrib.push((req, out.cache_hits, out.cache_misses));
+    }
+}
+
+impl StepExecutor for ScenarioEngine {
+    fn execute(&mut self, batch: &EngineBatch) -> Vec<StepOutcome> {
+        let outcomes = self.inner.execute(batch);
+        for o in &outcomes {
+            if let StepOutcome::PrefillChunk { req, took, .. } = *o {
+                let done = {
+                    let p = self.prefilled.entry(req).or_insert(0);
+                    *p += took;
+                    *p >= self.prompt_len.get(&req).copied().unwrap_or(usize::MAX)
+                };
+                if done && self.ran.insert(req) {
+                    self.run_session(req);
+                }
+            }
+        }
+        outcomes
+    }
+
+    fn finish_request(&mut self, req: u64) {
+        self.inner.finish_request(req);
+        self.prefilled.remove(&req);
+    }
+
+    fn observed_plan_hit_rate(&mut self) -> Option<f64> {
+        let total = self.window_hits + self.window_misses;
+        if total == 0 {
+            return None;
+        }
+        let rate = self.window_hits as f64 / total as f64;
+        self.window_hits = 0;
+        self.window_misses = 0;
+        Some(rate)
+    }
+
+    fn take_plan_attribution(&mut self) -> Vec<(u64, u64, u64)> {
+        std::mem::take(&mut self.pending_attrib)
+    }
+}
+
+/// Run the harness, print the serving summary, write
+/// `reports/bench_serve.json`, and apply the SLO gate if configured.
+pub fn run_with(scale: ExpScale, seed: u64, opts: &ServeBenchOptions) -> Result<Json> {
+    let requests = opts.requests.unwrap_or(match scale {
+        ExpScale::Quick => 32,
+        ExpScale::Full => 96,
+    });
+    let cfg = named_scenario(&opts.scenario, requests, seed)?;
+    let trace = cfg.generate()?;
+    let digest = stream_digest(&trace);
+    // Determinism is part of the contract: same seed, same stream —
+    // byte-for-byte (CI re-runs the binary and compares digests too).
+    ensure!(
+        stream_digest(&cfg.generate()?) == digest,
+        "scenario '{}' is not deterministic at seed {seed}",
+        opts.scenario
+    );
+    println!(
+        "bench serve: scenario '{}', {} requests, seed {seed}, stream digest {digest:016x}",
+        opts.scenario,
+        trace.len()
+    );
+
+    // Arrival times collapse to zero (stable sort keeps scenario arrival
+    // order): with `realtime: false` the wall clock starts at serve
+    // entry, so TTFT measures time-in-system, never a negative offset
+    // against a synthetic arrival stamp.
+    let submissions: Vec<Request> = trace
+        .iter()
+        .map(|t| {
+            let mut r = Request::new(t.id, vec![1; t.prompt_tokens], t.decode_tokens, 0.0);
+            r.scenario = Some(t.kind.tag().to_string());
+            r
+        })
+        .collect();
+
+    let model = SparsityModel::Anchor {
+        stripe_keep: 0.1,
+        anchor_tokens: 256,
+        plan_hit_rate: 0.0,
+        pipelined: false,
+        executor: ExecutorKind::Cpu,
+        shards: 1,
+        constants: CostConstants::modeled(),
+    };
+    let mut server = ServerConfig::default();
+    server.scheduler.sparsity = model;
+    // Eviction pressure is the point: a pool sized well below the
+    // trace's aggregate footprint with prefill preemption enabled, so
+    // the report's eviction counts exercise the §16 policy.
+    server.scheduler.preempt_prefill = true;
+    server.pool_pages = 96;
+
+    let mut engine = ScenarioEngine::new(seed, &trace, model);
+    let report = serve(&server, submissions, &mut engine, |_, _| {})?;
+    report.print_summary();
+
+    let threads = crate::util::threadpool::num_threads().max(1);
+    let completed = report.outcome_count(RequestOutcome::Completed);
+    let goodput_per_core = completed as f64 / (report.wall_s.max(1e-9) * threads as f64);
+    let breakdown = report.scenario_breakdown();
+    let rows: Vec<Json> = breakdown
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("scenario", Json::str(&s.scenario)),
+                ("requests", Json::num(s.requests as f64)),
+                ("completed", Json::num(s.completed as f64)),
+                ("p50_ttft_s", Json::num(s.p50_ttft_s)),
+                ("p99_ttft_s", Json::num(s.p99_ttft_s)),
+                ("plan_hits", Json::num(s.plan_hits as f64)),
+                ("plan_misses", Json::num(s.plan_misses as f64)),
+                ("plan_hit_rate", Json::num(s.plan_hit_rate())),
+                ("evictions", Json::num(s.evictions as f64)),
+            ])
+        })
+        .collect();
+    let digest_hex = format!("{digest:016x}");
+    let rep = bench_report_json(
+        "serve_bench",
+        &opts.scenario,
+        seed,
+        rows,
+        vec![
+            ("requests", Json::num(trace.len() as f64)),
+            ("completed", Json::num(completed as f64)),
+            ("wall_s", Json::num(report.wall_s)),
+            ("p50_ttft_s", Json::num(report.ttft_percentile(0.50))),
+            ("p95_ttft_s", Json::num(report.ttft_percentile(0.95))),
+            ("p99_ttft_s", Json::num(report.ttft_percentile(0.99))),
+            ("p99_e2e_s", Json::num(report.e2e_percentile(0.99))),
+            ("goodput_per_core", Json::num(goodput_per_core)),
+            ("kv_evictions", Json::num(report.kv_evictions as f64)),
+            ("peak_queue_depth", Json::num(report.peak_queue_depth as f64)),
+            ("stream_digest", Json::str(&digest_hex)),
+            ("gate_tolerance", Json::num(GATE_TOLERANCE)),
+            ("baseline", opts.baseline.as_deref().map(Json::str).unwrap_or(Json::Null)),
+        ],
+    );
+    let path = write_json_report("bench_serve.json", &rep)?;
+    println!("wrote {}", path.display());
+
+    if let Some(bp) = &opts.baseline {
+        let text = std::fs::read_to_string(bp)
+            .with_context(|| format!("reading baseline '{bp}'"))?;
+        let baseline =
+            Json::parse(&text).map_err(|e| anyhow::anyhow!("baseline '{bp}': {e}"))?;
+        let lines = check_slo(&baseline, &rep, GATE_TOLERANCE)
+            .with_context(|| format!("serve SLO gate vs '{bp}'"))?;
+        println!("gate vs {bp} (tolerance {:.0}%):", GATE_TOLERANCE * 100.0);
+        for l in lines {
+            println!("  {l}");
+        }
+    }
+    Ok(rep)
+}
+
+/// Resolve a gate key against the report: summary fields by name
+/// (`p99_ttft_s`), per-scenario row fields as `<scenario>:<field>`
+/// (`shared-prefix:plan_hit_rate`).
+fn metric(rep: &Json, key: &str) -> Option<f64> {
+    if let Some((tag, field)) = key.split_once(':') {
+        return rep
+            .get("rows")
+            .as_arr()?
+            .iter()
+            .find(|row| row.get("scenario").as_str() == Some(tag))
+            .and_then(|row| row.get(field).as_f64());
+    }
+    rep.get(key).as_f64()
+}
+
+/// Apply a baseline's SLO gate to a run report. `ceilings` are maxima
+/// (latency-like, slack `1 + tol`), `floors` are minima (rate-like,
+/// slack `1 - tol`), and `shared_prefix_beats_needle: true` demands the
+/// deterministic reuse ordering with no slack at all. Every gated key
+/// must resolve in the report — a renamed metric fails loudly.
+pub fn check_slo(baseline: &Json, rep: &Json, tol: f64) -> Result<Vec<String>> {
+    let mut lines = Vec::new();
+    let mut failures = Vec::new();
+    let mut bound = |keys: &Json, ceiling: bool| -> Result<()> {
+        let Json::Obj(map) = keys else {
+            return Ok(()); // absent section: nothing gated
+        };
+        for (key, bound_v) in map {
+            let bound_v = bound_v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("baseline bound '{key}' is not a number"))?;
+            let cur = metric(rep, key)
+                .ok_or_else(|| anyhow::anyhow!("gated metric '{key}' missing from this run"))?;
+            let (ok, rel) = if ceiling {
+                (cur <= bound_v * (1.0 + tol), cur / bound_v.max(1e-12))
+            } else {
+                (cur >= bound_v * (1.0 - tol), cur / bound_v.max(1e-12))
+            };
+            let line = format!(
+                "{key}: {cur:.4} vs {} {bound_v:.4} ({rel:.2}x)",
+                if ceiling { "ceiling" } else { "floor" }
+            );
+            if ok {
+                lines.push(format!("OK   {line}"));
+            } else {
+                failures.push(format!("FAIL {line}"));
+            }
+        }
+        Ok(())
+    };
+    bound(baseline.get("ceilings"), true)?;
+    bound(baseline.get("floors"), false)?;
+    if baseline.get("shared_prefix_beats_needle").as_bool() == Some(true) {
+        let sp = metric(rep, "shared-prefix:plan_hit_rate")
+            .ok_or_else(|| anyhow::anyhow!("no shared-prefix scenario in this run"))?;
+        let needle = metric(rep, "needle:plan_hit_rate")
+            .ok_or_else(|| anyhow::anyhow!("no needle scenario in this run"))?;
+        let line = format!("shared-prefix hit rate {sp:.4} vs needle {needle:.4}");
+        if sp > needle {
+            lines.push(format!("OK   {line}"));
+        } else {
+            failures.push(format!("FAIL {line}"));
+        }
+    }
+    ensure!(
+        failures.is_empty(),
+        "SLO gate failed:\n{}",
+        failures.join("\n")
+    );
+    lines.extend(failures);
+    Ok(lines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rep() -> Json {
+        Json::obj(vec![
+            ("p99_ttft_s", Json::num(0.5)),
+            ("goodput_per_core", Json::num(4.0)),
+            (
+                "rows",
+                Json::arr(
+                    [("shared-prefix", 0.8), ("needle", 0.0)].iter().map(|(tag, hr)| {
+                        Json::obj(vec![
+                            ("scenario", Json::str(tag)),
+                            ("plan_hit_rate", Json::num(*hr)),
+                        ])
+                    }),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn fold_key_separates_needle_keys() {
+        // Needle keys count down from u64::MAX; folding must keep them
+        // distinct (they'd otherwise fake cache hits between needles).
+        let keys: std::collections::HashSet<u32> =
+            (0..1000u64).map(|i| fold_key(u64::MAX - i)).collect();
+        assert_eq!(keys.len(), 1000);
+        // Tenant-scoped keys with distinct low halves stay distinct too.
+        assert_ne!(fold_key(1 << 32), fold_key(2 << 32));
+        assert_ne!(fold_key((1 << 32) | 3), fold_key((1 << 32) | 4));
+    }
+
+    #[test]
+    fn slo_gate_passes_within_tolerance_and_orders_scenarios() {
+        let baseline = Json::parse(
+            r#"{"ceilings": {"p99_ttft_s": 0.45},
+                "floors": {"goodput_per_core": 4.5,
+                           "shared-prefix:plan_hit_rate": 0.75},
+                "shared_prefix_beats_needle": true}"#,
+        )
+        .unwrap();
+        // 0.5 <= 0.45*1.15, 4.0 >= 4.5*0.85, 0.8 >= 0.75*0.85, 0.8 > 0.0.
+        let lines = check_slo(&baseline, &rep(), GATE_TOLERANCE).unwrap();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.starts_with("OK")));
+    }
+
+    #[test]
+    fn slo_gate_fails_on_regression_and_on_missing_metrics() {
+        let tight = Json::parse(r#"{"ceilings": {"p99_ttft_s": 0.2}}"#).unwrap();
+        let err = check_slo(&tight, &rep(), GATE_TOLERANCE).unwrap_err();
+        assert!(err.to_string().contains("p99_ttft_s"), "{err}");
+        // A floor violation fails too.
+        let floor = Json::parse(r#"{"floors": {"goodput_per_core": 9.0}}"#).unwrap();
+        assert!(check_slo(&floor, &rep(), GATE_TOLERANCE).is_err());
+        // Gating a metric the run never produced is an error, not a skip.
+        let missing = Json::parse(r#"{"floors": {"no_such_metric": 1.0}}"#).unwrap();
+        let err = check_slo(&missing, &rep(), GATE_TOLERANCE).unwrap_err();
+        assert!(err.to_string().contains("no_such_metric"), "{err}");
+        // An absent scenario row fails the ordering check loudly.
+        let order = Json::parse(r#"{"shared_prefix_beats_needle": true}"#).unwrap();
+        let mut no_rows = rep();
+        if let Json::Obj(m) = &mut no_rows {
+            m.insert("rows".into(), Json::Arr(vec![]));
+        }
+        assert!(check_slo(&order, &no_rows, GATE_TOLERANCE).is_err());
+    }
+
+    #[test]
+    fn reversed_ordering_fails_the_gate() {
+        let order = Json::parse(r#"{"shared_prefix_beats_needle": true}"#).unwrap();
+        let flipped = Json::obj(vec![(
+            "rows",
+            Json::arr([("shared-prefix", 0.1), ("needle", 0.6)].iter().map(|(tag, hr)| {
+                Json::obj(vec![
+                    ("scenario", Json::str(tag)),
+                    ("plan_hit_rate", Json::num(*hr)),
+                ])
+            })),
+        )]);
+        assert!(check_slo(&order, &flipped, GATE_TOLERANCE).is_err());
+    }
+}

@@ -35,7 +35,18 @@
 //!                                 plus micro — the gated micro-bench suite,
 //!                                 standalone, not part of `all`;
 //!                                 micro extras: --baseline F gates ratios
-//!                                 against a committed baseline, >15% fails)
+//!                                 against a committed baseline, >15% fails;
+//!                                 plus serve — the SLO serving harness,
+//!                                 standalone, not part of `all`: replays a
+//!                                 scenario-library trace (--scenario
+//!                                 long-doc|rag|shared-prefix|needle|mixed)
+//!                                 through the real serve path and reports
+//!                                 TTFT percentiles, goodput-per-core and
+//!                                 per-scenario plan hit rates into
+//!                                 reports/bench_serve.json; --requests N
+//!                                 sizes the trace, --baseline F gates p99
+//!                                 TTFT and plan-hit-rate floors,
+//!                                 DESIGN.md §16)
 //!                                 fig2 extras: --pipeline (overlap ident with
 //!                                 execution), --iters N, --lengths a,b,c,
 //!                                 --executor cpu|pjrt|both (backend grid),
@@ -87,7 +98,9 @@ fn main() -> anyhow::Result<()> {
             eprintln!(
                 "usage: anchor-attn <selftest|serve|worker|calibrate|bench|dominance|store|tpu-estimate|gen-trace> [flags]"
             );
-            eprintln!("  bench experiments: fig2 tab1 fig4 fig5 fig6 fig7 tab2 tab3 tab4 all micro");
+            eprintln!(
+                "  bench experiments: fig2 tab1 fig4 fig5 fig6 fig7 tab2 tab3 tab4 all micro serve"
+            );
             eprintln!("  store ops: inspect compact migrate (--manifest F [--json])");
             Ok(())
         }
@@ -226,7 +239,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     // fit `max_seq` is rejected with an explicit Oversized status (and
     // shows up in the report's outcome counts) instead of being silently
     // clamped into shape.
-    let trace = generate_trace(&cfg.trace);
+    let trace = generate_trace(&cfg.trace)?;
     let submissions: Vec<ServeRequest> = trace
         .iter()
         .map(|t| {
@@ -442,6 +455,17 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let micro_opts = experiments::micro::MicroOptions {
         baseline: args.get("baseline").map(|s| s.to_string()),
     };
+    // serve-only knobs: `--scenario NAME` picks the workload scenario
+    // (long-doc|rag|shared-prefix|needle|mixed), `--requests N` sizes the
+    // trace, `--baseline F` gates p99 TTFT / plan-hit-rate floors.
+    let serve_opts = experiments::serve_bench::ServeBenchOptions {
+        scenario: args.get("scenario").unwrap_or("mixed").to_string(),
+        requests: match args.get("requests") {
+            Some(_) => Some(args.usize_or("requests", 0)?),
+            None => None,
+        },
+        baseline: args.get("baseline").map(|s| s.to_string()),
+    };
     let run_one = |name: &str| -> anyhow::Result<()> {
         match name {
             "fig2" => drop(experiments::fig2_speedup::run_with(scale, seed, &fig2_opts)),
@@ -456,6 +480,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             // Standalone: the micro suite times executor primitives, not a
             // paper figure, so `all` (the paper sweep) does not include it.
             "micro" => drop(experiments::micro::run_with(scale, seed, &micro_opts)?),
+            // Standalone: the serving harness measures SLO metrics over
+            // the coordinator, not a paper figure, so `all` skips it too.
+            "serve" => drop(experiments::serve_bench::run_with(scale, seed, &serve_opts)?),
             other => eprintln!("unknown experiment '{other}'"),
         }
         Ok(())
@@ -663,7 +690,7 @@ fn cmd_gen_trace(args: &Args) -> anyhow::Result<()> {
     let mut cfg = load_config(args)?.trace;
     cfg.rate = args.f64_or("rate", cfg.rate)?;
     cfg.num_requests = args.usize_or("requests", cfg.num_requests)?;
-    for r in generate_trace(&cfg) {
+    for r in generate_trace(&cfg)? {
         println!(
             "{{\"id\": {}, \"arrival_s\": {:.3}, \"prompt_tokens\": {}, \"decode_tokens\": {}}}",
             r.id, r.arrival_s, r.prompt_tokens, r.decode_tokens

@@ -1,0 +1,228 @@
+//! Arrival processes for the scenario library (DESIGN.md §16).
+//!
+//! The original trace generator only knew homogeneous Poisson arrivals;
+//! production request streams are burstier than that. This module models
+//! three processes behind one enum, each sampled deterministically from a
+//! caller-owned [`Pcg64`] so traces are reproducible byte-for-byte:
+//!
+//! - `Poisson`: homogeneous, exponential inter-arrivals at `rate`.
+//! - `OnOff`: a two-phase Markov-modulated Poisson process (MMPP). The
+//!   source alternates between an ON phase emitting at `burst_rate` and a
+//!   silent OFF phase; phase residence times are exponential with means
+//!   `mean_on_s` / `mean_off_s`. Long-run average rate is
+//!   `burst_rate · on/(on+off)`.
+//! - `Ramp`: inhomogeneous Poisson whose rate climbs linearly from
+//!   `start_rate` to `end_rate` over `ramp_s` seconds (then holds), sampled
+//!   by thinning against `lambda_max = max(start, end)`.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg64;
+
+/// A stochastic arrival process; see module docs for the taxonomy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson at `rate` req/s.
+    Poisson { rate: f64 },
+    /// Two-phase MMPP: ON bursts at `burst_rate` req/s, exponential phase
+    /// residence with means `mean_on_s` / `mean_off_s`.
+    OnOff { burst_rate: f64, mean_on_s: f64, mean_off_s: f64 },
+    /// Linear rate ramp from `start_rate` to `end_rate` over `ramp_s`
+    /// seconds, holding `end_rate` afterwards.
+    Ramp { start_rate: f64, end_rate: f64, ramp_s: f64 },
+}
+
+impl ArrivalProcess {
+    /// Validate parameters, mirroring the `shards: 0` config precedent:
+    /// descriptive `Err`, no panics.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                if !rate.is_finite() || rate <= 0.0 {
+                    bail!("arrival rate must be > 0 (got {rate})");
+                }
+            }
+            ArrivalProcess::OnOff { burst_rate, mean_on_s, mean_off_s } => {
+                if !burst_rate.is_finite() || burst_rate <= 0.0 {
+                    bail!("on/off burst_rate must be > 0 (got {burst_rate})");
+                }
+                if !mean_on_s.is_finite()
+                    || mean_on_s <= 0.0
+                    || !mean_off_s.is_finite()
+                    || mean_off_s <= 0.0
+                {
+                    bail!(
+                        "on/off phase means must be > 0 (got on {mean_on_s}, off {mean_off_s})"
+                    );
+                }
+            }
+            ArrivalProcess::Ramp { start_rate, end_rate, ramp_s } => {
+                if !start_rate.is_finite()
+                    || start_rate <= 0.0
+                    || !end_rate.is_finite()
+                    || end_rate <= 0.0
+                {
+                    bail!(
+                        "ramp rates must be > 0 (got start {start_rate}, end {end_rate})"
+                    );
+                }
+                if !ramp_s.is_finite() || ramp_s <= 0.0 {
+                    bail!("ramp duration must be > 0 (got {ramp_s})");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Long-run mean rate (req/s); used for sizing sanity checks.
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::OnOff { burst_rate, mean_on_s, mean_off_s } => {
+                burst_rate * mean_on_s / (mean_on_s + mean_off_s)
+            }
+            ArrivalProcess::Ramp { start_rate, end_rate, .. } => {
+                0.5 * (start_rate + end_rate)
+            }
+        }
+    }
+
+    /// Sample `n` absolute arrival times (seconds from trace start) from a
+    /// caller-owned RNG. Output is nondecreasing; same seed → same times.
+    pub fn sample(&self, rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                let mut t = 0.0;
+                for _ in 0..n {
+                    t += rng.exponential(rate);
+                    out.push(t);
+                }
+            }
+            ArrivalProcess::OnOff { burst_rate, mean_on_s, mean_off_s } => {
+                // Classic MMPP phase walk: inside an ON window, draw
+                // candidate inter-arrivals at the burst rate; when a
+                // candidate overshoots the window end, skip the OFF phase
+                // and continue from the next ON window's start.
+                let mut t = 0.0;
+                let mut on_until = rng.exponential(1.0 / mean_on_s);
+                while out.len() < n {
+                    let cand = t + rng.exponential(burst_rate);
+                    if cand <= on_until {
+                        t = cand;
+                        out.push(t);
+                    } else {
+                        // Jump over the OFF phase into the next ON window.
+                        let off = rng.exponential(1.0 / mean_off_s);
+                        t = on_until + off;
+                        on_until = t + rng.exponential(1.0 / mean_on_s);
+                    }
+                }
+            }
+            ArrivalProcess::Ramp { start_rate, end_rate, ramp_s } => {
+                // Thinning (Lewis–Shedler): propose at lambda_max, accept
+                // with probability lambda(t)/lambda_max.
+                let lambda_max = start_rate.max(end_rate);
+                let mut t = 0.0;
+                while out.len() < n {
+                    t += rng.exponential(lambda_max);
+                    let frac = (t / ramp_s).min(1.0);
+                    let lambda_t = start_rate + (end_rate - start_rate) * frac;
+                    if rng.next_f64() * lambda_max <= lambda_t {
+                        out.push(t);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn processes() -> Vec<ArrivalProcess> {
+        vec![
+            ArrivalProcess::Poisson { rate: 8.0 },
+            ArrivalProcess::OnOff { burst_rate: 40.0, mean_on_s: 0.5, mean_off_s: 1.5 },
+            ArrivalProcess::Ramp { start_rate: 2.0, end_rate: 20.0, ramp_s: 10.0 },
+        ]
+    }
+
+    #[test]
+    fn samples_are_nondecreasing_and_deterministic() {
+        for p in processes() {
+            let a = p.sample(&mut Pcg64::seeded(7), 500);
+            let b = p.sample(&mut Pcg64::seeded(7), 500);
+            assert_eq!(a, b, "{p:?} not deterministic");
+            assert_eq!(a.len(), 500);
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{p:?} not ordered");
+            assert!(a[0] > 0.0);
+        }
+    }
+
+    #[test]
+    fn poisson_rate_roughly_respected() {
+        let p = ArrivalProcess::Poisson { rate: 10.0 };
+        let t = p.sample(&mut Pcg64::seeded(1), 4000);
+        let measured = t.len() as f64 / t.last().unwrap();
+        assert!((measured - 10.0).abs() < 1.0, "measured {measured}");
+    }
+
+    #[test]
+    fn onoff_long_run_rate_matches_mean() {
+        let p = ArrivalProcess::OnOff { burst_rate: 40.0, mean_on_s: 0.5, mean_off_s: 1.5 };
+        let t = p.sample(&mut Pcg64::seeded(2), 4000);
+        let measured = t.len() as f64 / t.last().unwrap();
+        let expect = p.mean_rate(); // 40 * 0.25 = 10
+        assert!(
+            (measured - expect).abs() < 0.25 * expect,
+            "measured {measured} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn onoff_is_burstier_than_poisson() {
+        // Coefficient of variation of inter-arrivals: ≈1 for Poisson,
+        // substantially larger for the on/off source at equal mean rate.
+        let cv = |times: &[f64]| {
+            let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var =
+                gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var.sqrt() / mean
+        };
+        let pois = ArrivalProcess::Poisson { rate: 10.0 }.sample(&mut Pcg64::seeded(3), 4000);
+        let mmpp = ArrivalProcess::OnOff { burst_rate: 40.0, mean_on_s: 0.5, mean_off_s: 1.5 }
+            .sample(&mut Pcg64::seeded(3), 4000);
+        assert!(cv(&mmpp) > 1.3 * cv(&pois), "mmpp cv {} pois cv {}", cv(&mmpp), cv(&pois));
+    }
+
+    #[test]
+    fn ramp_accelerates() {
+        let p = ArrivalProcess::Ramp { start_rate: 2.0, end_rate: 20.0, ramp_s: 50.0 };
+        let t = p.sample(&mut Pcg64::seeded(4), 2000);
+        // First-quarter span should be much longer than last-quarter span
+        // (same request count at a higher rate).
+        let q = t.len() / 4;
+        let early = t[q] - t[0];
+        let late = t[t.len() - 1] - t[t.len() - 1 - q];
+        assert!(early > 1.5 * late, "early span {early} vs late span {late}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_parameters() {
+        assert!(ArrivalProcess::Poisson { rate: 0.0 }.validate().is_err());
+        assert!(ArrivalProcess::Poisson { rate: -1.0 }.validate().is_err());
+        assert!(ArrivalProcess::OnOff { burst_rate: 5.0, mean_on_s: 0.0, mean_off_s: 1.0 }
+            .validate()
+            .is_err());
+        assert!(ArrivalProcess::Ramp { start_rate: 1.0, end_rate: 2.0, ramp_s: 0.0 }
+            .validate()
+            .is_err());
+        for p in processes() {
+            assert!(p.validate().is_ok());
+        }
+    }
+}

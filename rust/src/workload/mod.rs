@@ -10,7 +10,9 @@
 //! anchor-region max-score dominance matches Fig. 5 (≈99 % LLaMA-like,
 //! ≈90 % Qwen-like).
 
+pub mod arrival;
 pub mod qkv;
+pub mod scenario;
 pub mod trace;
 
 pub use qkv::{HeadKind, Workload, WorkloadMeta, WorkloadProfile};

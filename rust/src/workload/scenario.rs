@@ -1,0 +1,539 @@
+//! Scenario library: multi-tenant serving traces (DESIGN.md §16).
+//!
+//! Grows the single Poisson generator in [`super::trace`] into a model of
+//! production traffic. A trace is composed from **tenants**; each tenant
+//! has a request shape ([`ScenarioKind`]), an arrival process
+//! ([`ArrivalProcess`]), and prompt/decode length distributions
+//! ([`LengthDist`], including the heavy-tailed log-normal and bounded
+//! Pareto families). Tenants sample from independent [`Pcg64`] streams and
+//! their request streams are merged by arrival time, so adding a tenant
+//! never perturbs another tenant's draws.
+//!
+//! Every request carries a `reuse_key` describing its plan-cache identity:
+//! shared-prefix requests in the same prefix group share a key (their
+//! prefixes are literally identical), RAG requests share keys through a
+//! small document corpus, long-doc requests share per length bucket, and
+//! needle requests are unique by construction. The serving harness maps
+//! `(scenario, reuse_key)` onto `PlanKey`s, which is what makes plan-cache
+//! and store-seed hits *attributable to a scenario* in `BENCH_serve.json`.
+
+use anyhow::{bail, Context, Result};
+
+use super::arrival::ArrivalProcess;
+use crate::util::rng::Pcg64;
+
+/// Request shape taxonomy (DESIGN.md §16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ScenarioKind {
+    /// One long document per request; moderate cross-request commonality
+    /// (plans generalize within a length bucket).
+    LongDoc,
+    /// Retrieval-augmented: many short chunks drawn from a shared corpus;
+    /// high plan reuse through repeated documents.
+    Rag,
+    /// Multi-turn with a shared conversation prefix: requests in a prefix
+    /// group carry byte-identical prefixes, the best case for the plan
+    /// cache and store seeding.
+    SharedPrefix,
+    /// Needle-in-a-haystack probes: every context unique, worst case for
+    /// reuse (the control scenario the CI gate compares against).
+    Needle,
+}
+
+impl ScenarioKind {
+    /// Stable tag used in reports and per-scenario breakdowns.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ScenarioKind::LongDoc => "long-doc",
+            ScenarioKind::Rag => "rag",
+            ScenarioKind::SharedPrefix => "shared-prefix",
+            ScenarioKind::Needle => "needle",
+        }
+    }
+
+    /// Stable numeric id (the harness uses it as the `PlanKey` layer).
+    pub fn index(&self) -> u32 {
+        match self {
+            ScenarioKind::LongDoc => 0,
+            ScenarioKind::Rag => 1,
+            ScenarioKind::SharedPrefix => 2,
+            ScenarioKind::Needle => 3,
+        }
+    }
+}
+
+/// Prompt/decode length distributions. All samples are clamped to the
+/// distribution's own `[min, max]`, so a tenant can never emit a request
+/// larger than its configured envelope.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LengthDist {
+    Fixed { tokens: usize },
+    Uniform { min: usize, max: usize },
+    /// Log-normal around `median`: `median · exp(sigma · N(0,1))`, clamped.
+    LogNormal { median: usize, sigma: f64, min: usize, max: usize },
+    /// Bounded Pareto on `[min, max]` with tail index `alpha` (smaller
+    /// alpha → heavier tail), via the inverse CDF.
+    BoundedPareto { alpha: f64, min: usize, max: usize },
+}
+
+impl LengthDist {
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            LengthDist::Fixed { tokens } => {
+                if tokens == 0 {
+                    bail!("fixed length must be > 0");
+                }
+            }
+            LengthDist::Uniform { min, max } => {
+                if min == 0 || min > max {
+                    bail!("uniform length bounds invalid: [{min}, {max}]");
+                }
+            }
+            LengthDist::LogNormal { median, sigma, min, max } => {
+                if median == 0 || min == 0 || min > max {
+                    bail!("log-normal length bounds invalid: median {median}, [{min}, {max}]");
+                }
+                if !sigma.is_finite() || sigma <= 0.0 {
+                    bail!("log-normal sigma must be > 0 (got {sigma})");
+                }
+            }
+            LengthDist::BoundedPareto { alpha, min, max } => {
+                if min == 0 || min >= max {
+                    bail!("bounded-Pareto bounds invalid: [{min}, {max}]");
+                }
+                if !alpha.is_finite() || alpha <= 0.0 {
+                    bail!("bounded-Pareto alpha must be > 0 (got {alpha})");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Largest value this distribution can emit.
+    pub fn max_tokens(&self) -> usize {
+        match *self {
+            LengthDist::Fixed { tokens } => tokens,
+            LengthDist::Uniform { max, .. }
+            | LengthDist::LogNormal { max, .. }
+            | LengthDist::BoundedPareto { max, .. } => max,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        match *self {
+            LengthDist::Fixed { tokens } => tokens,
+            LengthDist::Uniform { min, max } => {
+                min + rng.next_below((max - min + 1) as u64) as usize
+            }
+            LengthDist::LogNormal { median, sigma, min, max } => {
+                let x = median as f64 * (sigma * rng.normal() as f64).exp();
+                (x.round() as usize).clamp(min, max)
+            }
+            LengthDist::BoundedPareto { alpha, min, max } => {
+                // Inverse CDF: x = L · (1 - U·(1 - (L/H)^a))^(-1/a).
+                let (l, h) = (min as f64, max as f64);
+                let u = rng.next_f64();
+                let x = l * (1.0 - u * (1.0 - (l / h).powf(alpha))).powf(-1.0 / alpha);
+                (x.round() as usize).clamp(min, max)
+            }
+        }
+    }
+}
+
+/// One traffic source in a scenario mix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    /// Report label, e.g. `"rag-burst"`.
+    pub name: String,
+    pub kind: ScenarioKind,
+    pub arrival: ArrivalProcess,
+    /// Total prompt length (for shared-prefix: prefix + suffix envelope).
+    pub prompt: LengthDist,
+    pub decode: LengthDist,
+    pub requests: usize,
+    /// Shared-prefix only: number of conversation groups. Each group draws
+    /// one prefix length from `prompt` and every request in the group
+    /// reuses it verbatim.
+    pub prefix_groups: usize,
+    /// Shared-prefix only: fresh suffix tokens appended per turn.
+    pub suffix: LengthDist,
+    /// RAG only: corpus size; reuse keys cycle through this many documents.
+    pub rag_corpus: usize,
+}
+
+impl TenantSpec {
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("tenant name must be non-empty");
+        }
+        if self.requests == 0 {
+            bail!("tenant {} must have requests > 0", self.name);
+        }
+        self.arrival.validate().with_context(|| format!("tenant {}", self.name))?;
+        self.prompt.validate().with_context(|| format!("tenant {} prompt", self.name))?;
+        self.decode.validate().with_context(|| format!("tenant {} decode", self.name))?;
+        if self.kind == ScenarioKind::SharedPrefix {
+            if self.prefix_groups == 0 {
+                bail!("tenant {}: shared-prefix needs prefix_groups > 0", self.name);
+            }
+            self.suffix
+                .validate()
+                .with_context(|| format!("tenant {} suffix", self.name))?;
+        }
+        Ok(())
+    }
+}
+
+/// A full scenario: tenant mix plus seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioConfig {
+    pub seed: u64,
+    pub tenants: Vec<TenantSpec>,
+}
+
+/// One generated request. Superset of [`super::trace::TraceRequest`] with
+/// attribution metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioRequest {
+    /// Global id in merged arrival order.
+    pub id: u64,
+    /// Arrival time in seconds from trace start (nondecreasing).
+    pub arrival_s: f64,
+    pub prompt_tokens: usize,
+    pub decode_tokens: usize,
+    pub kind: ScenarioKind,
+    /// Index into `ScenarioConfig::tenants`.
+    pub tenant: u32,
+    /// Shared-prefix: conversation group id within the tenant.
+    pub prefix_group: Option<u32>,
+    /// Shared-prefix: length of the byte-identical shared prefix
+    /// (identical for every request in a group); 0 otherwise.
+    pub prefix_tokens: usize,
+    /// Plan-cache identity: requests with equal `(kind, reuse_key)` should
+    /// hit each other's cached plans. Needle keys are globally unique.
+    pub reuse_key: u64,
+}
+
+impl ScenarioConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.tenants.is_empty() {
+            bail!("scenario needs at least one tenant");
+        }
+        for t in &self.tenants {
+            t.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Largest prompt any tenant can emit (for `max_seq` sizing).
+    pub fn max_prompt_tokens(&self) -> usize {
+        self.tenants
+            .iter()
+            .map(|t| {
+                if t.kind == ScenarioKind::SharedPrefix {
+                    t.prompt.max_tokens() + t.suffix.max_tokens()
+                } else {
+                    t.prompt.max_tokens()
+                }
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.tenants.iter().map(|t| t.requests).sum()
+    }
+
+    /// Generate the merged trace. Deterministic: each tenant draws from
+    /// `Pcg64::new(seed, tenant_index + 1)`, streams are merged by
+    /// `(arrival_s, tenant)`, and ids follow merged order.
+    pub fn generate(&self) -> Result<Vec<ScenarioRequest>> {
+        self.validate()?;
+        let mut all: Vec<ScenarioRequest> = Vec::with_capacity(self.total_requests());
+        let mut needle_counter: u64 = 0;
+        for (ti, tenant) in self.tenants.iter().enumerate() {
+            let mut rng = Pcg64::new(self.seed, ti as u64 + 1);
+            let arrivals = tenant.arrival.sample(&mut rng, tenant.requests);
+            // Shared-prefix: pre-draw one prefix length per group so every
+            // request in the group reuses it verbatim.
+            let group_prefixes: Vec<usize> = if tenant.kind == ScenarioKind::SharedPrefix {
+                (0..tenant.prefix_groups).map(|_| tenant.prompt.sample(&mut rng)).collect()
+            } else {
+                Vec::new()
+            };
+            for (ri, &arrival_s) in arrivals.iter().enumerate() {
+                let (prompt_tokens, prefix_tokens, prefix_group, reuse_key) = match tenant.kind
+                {
+                    ScenarioKind::SharedPrefix => {
+                        let g = rng.next_below(tenant.prefix_groups as u64) as u32;
+                        let prefix = group_prefixes[g as usize];
+                        let suffix = tenant.suffix.sample(&mut rng);
+                        // Stable per (tenant, group): every turn of a
+                        // conversation maps to the same plan identity.
+                        let key = (ti as u64) << 32 | g as u64;
+                        (prefix + suffix, prefix, Some(g), key)
+                    }
+                    ScenarioKind::Needle => {
+                        let len = tenant.prompt.sample(&mut rng);
+                        needle_counter += 1;
+                        // Unique per request: needle probes never share
+                        // plans (the reuse control group).
+                        (len, 0, None, u64::MAX - needle_counter)
+                    }
+                    ScenarioKind::Rag => {
+                        let len = tenant.prompt.sample(&mut rng);
+                        let doc = rng.next_below(tenant.rag_corpus.max(1) as u64);
+                        (len, 0, None, (ti as u64) << 32 | doc)
+                    }
+                    ScenarioKind::LongDoc => {
+                        let len = tenant.prompt.sample(&mut rng);
+                        // Bucket by log2 length: plans generalize within a
+                        // bucket, not across an order of magnitude.
+                        let bucket = (len.max(1) as f64).log2().floor() as u64;
+                        (len, 0, None, (ti as u64) << 32 | bucket)
+                    }
+                };
+                let decode_tokens = tenant.decode.sample(&mut rng).max(1);
+                all.push(ScenarioRequest {
+                    id: ri as u64, // provisional; rewritten after the merge
+                    arrival_s,
+                    prompt_tokens: prompt_tokens.max(16),
+                    decode_tokens,
+                    kind: tenant.kind,
+                    tenant: ti as u32,
+                    prefix_group,
+                    prefix_tokens,
+                    reuse_key,
+                });
+            }
+        }
+        // Merge tenant streams by arrival time (tenant index breaks ties
+        // deterministically), then assign global ids in arrival order.
+        all.sort_by(|a, b| {
+            a.arrival_s
+                .partial_cmp(&b.arrival_s)
+                .expect("arrival times are finite")
+                .then(a.tenant.cmp(&b.tenant))
+        });
+        for (i, r) in all.iter_mut().enumerate() {
+            r.id = i as u64;
+        }
+        Ok(all)
+    }
+}
+
+/// FNV-1a digest over the deterministic fields of a request stream. Two
+/// runs of the same scenario+seed must produce equal digests; the harness
+/// embeds it in `bench_serve.json` and CI double-runs to compare.
+pub fn stream_digest(reqs: &[ScenarioRequest]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for r in reqs {
+        eat(r.id);
+        eat(r.arrival_s.to_bits());
+        eat(r.prompt_tokens as u64);
+        eat(r.decode_tokens as u64);
+        eat(r.kind.index() as u64);
+        eat(r.tenant as u64);
+        eat(r.prefix_tokens as u64);
+        eat(r.reuse_key);
+    }
+    h
+}
+
+/// Named scenario mixes behind `bench serve --scenario <name>`. Lengths
+/// are sized for the default `max_seq = 2048` serving envelope.
+pub fn named_scenario(name: &str, requests: usize, seed: u64) -> Result<ScenarioConfig> {
+    let requests = requests.max(4);
+    let tenants = match name {
+        "long-doc" => vec![long_doc_tenant(requests, 6.0)],
+        "rag" => vec![rag_tenant(requests)],
+        "shared-prefix" => vec![shared_prefix_tenant(requests, 8.0)],
+        "needle" => vec![needle_tenant(requests)],
+        "mixed" => {
+            // Four tenants with distinct shapes *and* distinct arrival
+            // processes; uneven split keeps the mix heavy on the reuse
+            // scenarios the gate compares.
+            let q = requests / 4;
+            vec![
+                long_doc_tenant(q, 4.0),
+                rag_tenant(q),
+                shared_prefix_tenant(requests - 3 * q, 10.0),
+                needle_tenant(q),
+            ]
+        }
+        other => bail!(
+            "unknown scenario {other:?} (expected long-doc | rag | shared-prefix | needle | mixed)"
+        ),
+    };
+    let cfg = ScenarioConfig { seed, tenants };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn long_doc_tenant(requests: usize, rate: f64) -> TenantSpec {
+    TenantSpec {
+        name: "long-doc".into(),
+        kind: ScenarioKind::LongDoc,
+        arrival: ArrivalProcess::Poisson { rate },
+        prompt: LengthDist::LogNormal { median: 768, sigma: 0.45, min: 256, max: 1536 },
+        decode: LengthDist::Uniform { min: 4, max: 16 },
+        requests,
+        prefix_groups: 0,
+        suffix: LengthDist::Fixed { tokens: 1 },
+        rag_corpus: 0,
+    }
+}
+
+fn rag_tenant(requests: usize) -> TenantSpec {
+    TenantSpec {
+        name: "rag-burst".into(),
+        kind: ScenarioKind::Rag,
+        arrival: ArrivalProcess::OnOff { burst_rate: 40.0, mean_on_s: 0.4, mean_off_s: 1.2 },
+        prompt: LengthDist::BoundedPareto { alpha: 1.3, min: 128, max: 1024 },
+        decode: LengthDist::Uniform { min: 4, max: 24 },
+        requests,
+        prefix_groups: 0,
+        suffix: LengthDist::Fixed { tokens: 1 },
+        rag_corpus: 24,
+    }
+}
+
+fn shared_prefix_tenant(requests: usize, rate: f64) -> TenantSpec {
+    TenantSpec {
+        name: "chat-shared-prefix".into(),
+        kind: ScenarioKind::SharedPrefix,
+        arrival: ArrivalProcess::Poisson { rate },
+        prompt: LengthDist::LogNormal { median: 512, sigma: 0.3, min: 256, max: 1024 },
+        decode: LengthDist::Uniform { min: 8, max: 32 },
+        requests,
+        prefix_groups: 8,
+        suffix: LengthDist::Uniform { min: 32, max: 192 },
+        rag_corpus: 0,
+    }
+}
+
+fn needle_tenant(requests: usize) -> TenantSpec {
+    TenantSpec {
+        name: "needle-probe".into(),
+        kind: ScenarioKind::Needle,
+        arrival: ArrivalProcess::Ramp { start_rate: 2.0, end_rate: 16.0, ramp_s: 8.0 },
+        prompt: LengthDist::Uniform { min: 512, max: 1536 },
+        decode: LengthDist::Uniform { min: 2, max: 8 },
+        requests,
+        prefix_groups: 0,
+        suffix: LengthDist::Fixed { tokens: 1 },
+        rag_corpus: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn named_scenarios_generate_and_are_deterministic() {
+        for name in ["long-doc", "rag", "shared-prefix", "needle", "mixed"] {
+            let cfg = named_scenario(name, 64, 5).unwrap();
+            let a = cfg.generate().unwrap();
+            let b = cfg.generate().unwrap();
+            assert_eq!(a, b, "{name} not deterministic");
+            assert_eq!(a.len(), cfg.total_requests());
+            assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+            assert!(a.iter().enumerate().all(|(i, r)| r.id == i as u64));
+            assert_eq!(stream_digest(&a), stream_digest(&b));
+        }
+        assert!(named_scenario("nope", 64, 5).is_err());
+    }
+
+    #[test]
+    fn prompts_fit_the_serving_envelope() {
+        for name in ["long-doc", "rag", "shared-prefix", "needle", "mixed"] {
+            let cfg = named_scenario(name, 128, 11).unwrap();
+            assert!(cfg.max_prompt_tokens() <= 2048 - 64, "{name} overflows max_seq");
+            for r in cfg.generate().unwrap() {
+                assert!(r.prompt_tokens >= 16 && r.prompt_tokens <= 2048 - 64, "{name}: {r:?}");
+                assert!(r.decode_tokens >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_prefix_groups_reuse_identical_prefixes() {
+        let cfg = named_scenario("shared-prefix", 96, 3).unwrap();
+        let reqs = cfg.generate().unwrap();
+        let mut by_group: HashMap<u32, Vec<&ScenarioRequest>> = HashMap::new();
+        for r in &reqs {
+            by_group.entry(r.prefix_group.unwrap()).or_default().push(r);
+        }
+        assert!(by_group.len() > 1, "expected multiple prefix groups");
+        for (g, members) in &by_group {
+            let p0 = members[0].prefix_tokens;
+            assert!(p0 > 0);
+            assert!(
+                members.iter().all(|r| r.prefix_tokens == p0),
+                "group {g} prefix lengths differ"
+            );
+            let k0 = members[0].reuse_key;
+            assert!(members.iter().all(|r| r.reuse_key == k0));
+        }
+    }
+
+    #[test]
+    fn needle_reuse_keys_are_unique() {
+        let cfg = named_scenario("needle", 200, 9).unwrap();
+        let reqs = cfg.generate().unwrap();
+        let mut keys: Vec<u64> = reqs.iter().map(|r| r.reuse_key).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), reqs.len());
+    }
+
+    #[test]
+    fn rag_reuse_keys_cycle_a_small_corpus() {
+        let cfg = named_scenario("rag", 200, 9).unwrap();
+        let reqs = cfg.generate().unwrap();
+        let mut keys: Vec<u64> = reqs.iter().map(|r| r.reuse_key).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert!(keys.len() <= 24, "corpus leaked: {} distinct keys", keys.len());
+        assert!(keys.len() > 4);
+    }
+
+    #[test]
+    fn heavy_tail_distributions_respect_bounds() {
+        let mut rng = Pcg64::seeded(1);
+        let ln = LengthDist::LogNormal { median: 768, sigma: 0.45, min: 256, max: 1536 };
+        let bp = LengthDist::BoundedPareto { alpha: 1.3, min: 128, max: 1024 };
+        for _ in 0..5000 {
+            let a = ln.sample(&mut rng);
+            assert!((256..=1536).contains(&a));
+            let b = bp.sample(&mut rng);
+            assert!((128..=1024).contains(&b));
+        }
+        // Bounded Pareto mass concentrates near the lower bound.
+        let mut rng = Pcg64::seeded(2);
+        let samples: Vec<usize> = (0..5000).map(|_| bp.sample(&mut rng)).collect();
+        let below_256 = samples.iter().filter(|&&x| x < 256).count();
+        assert!(below_256 > samples.len() / 2, "pareto tail too light: {below_256}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        assert!(ScenarioConfig { seed: 0, tenants: vec![] }.validate().is_err());
+        let mut t = needle_tenant(10);
+        t.requests = 0;
+        assert!(ScenarioConfig { seed: 0, tenants: vec![t] }.validate().is_err());
+        let mut t = shared_prefix_tenant(10, 4.0);
+        t.prefix_groups = 0;
+        assert!(ScenarioConfig { seed: 0, tenants: vec![t] }.validate().is_err());
+        assert!(LengthDist::Uniform { min: 9, max: 3 }.validate().is_err());
+        assert!(LengthDist::BoundedPareto { alpha: 0.0, min: 1, max: 2 }.validate().is_err());
+    }
+}

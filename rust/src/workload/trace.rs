@@ -1,6 +1,9 @@
 //! Serving trace generation for the coordinator benchmarks: Poisson
 //! arrivals with a long-context-skewed prompt-length mixture, matching the
-//! prefill-heavy regime the paper targets.
+//! prefill-heavy regime the paper targets. Richer multi-tenant scenario
+//! traces live in [`super::scenario`].
+
+use anyhow::{bail, Result};
 
 use crate::util::rng::Pcg64;
 
@@ -40,9 +43,36 @@ impl Default for TraceConfig {
     }
 }
 
+impl TraceConfig {
+    /// Validate the trace parameters, mirroring the `shards: 0` config
+    /// precedent: a descriptive `Err` at parse/CLI time instead of a panic
+    /// deep inside generation.
+    pub fn validate(&self) -> Result<()> {
+        if self.length_mix.is_empty() {
+            bail!("trace length_mix must be non-empty");
+        }
+        if self.length_mix.iter().any(|&(len, w)| len == 0 || !w.is_finite() || w <= 0.0) {
+            bail!("trace length_mix entries need len > 0 and weight > 0");
+        }
+        if !self.rate.is_finite() || self.rate <= 0.0 {
+            bail!("trace rate must be > 0 (got {})", self.rate);
+        }
+        if self.decode_min > self.decode_max {
+            bail!(
+                "trace decode_min ({}) must be <= decode_max ({})",
+                self.decode_min,
+                self.decode_max
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Generate a trace with Poisson arrivals and mixture-sampled lengths.
-pub fn generate_trace(cfg: &TraceConfig) -> Vec<TraceRequest> {
-    assert!(!cfg.length_mix.is_empty());
+/// Returns `Err` (not a panic) on invalid configs — see
+/// [`TraceConfig::validate`].
+pub fn generate_trace(cfg: &TraceConfig) -> Result<Vec<TraceRequest>> {
+    cfg.validate()?;
     let total_w: f64 = cfg.length_mix.iter().map(|x| x.1).sum();
     let mut rng = Pcg64::seeded(cfg.seed ^ 0x7ace);
     let mut t = 0.0;
@@ -66,7 +96,7 @@ pub fn generate_trace(cfg: &TraceConfig) -> Vec<TraceRequest> {
             + rng.next_below((cfg.decode_max - cfg.decode_min + 1) as u64) as usize;
         out.push(TraceRequest { id: id as u64, arrival_s: t, prompt_tokens, decode_tokens });
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -76,8 +106,8 @@ mod tests {
     #[test]
     fn trace_is_deterministic_and_ordered() {
         let cfg = TraceConfig::default();
-        let a = generate_trace(&cfg);
-        let b = generate_trace(&cfg);
+        let a = generate_trace(&cfg).unwrap();
+        let b = generate_trace(&cfg).unwrap();
         assert_eq!(a, b);
         assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
         assert_eq!(a.len(), cfg.num_requests);
@@ -86,7 +116,7 @@ mod tests {
     #[test]
     fn rate_roughly_respected() {
         let cfg = TraceConfig { rate: 10.0, num_requests: 2000, ..Default::default() };
-        let t = generate_trace(&cfg);
+        let t = generate_trace(&cfg).unwrap();
         let span = t.last().unwrap().arrival_s;
         let measured = cfg.num_requests as f64 / span;
         assert!((measured - 10.0).abs() < 1.5, "measured rate {measured}");
@@ -95,10 +125,26 @@ mod tests {
     #[test]
     fn lengths_within_mixture_envelope() {
         let cfg = TraceConfig::default();
-        for r in generate_trace(&cfg) {
+        for r in generate_trace(&cfg).unwrap() {
             assert!(r.prompt_tokens >= 16);
             assert!(r.prompt_tokens <= (32768_f64 * 1.25) as usize);
             assert!(r.decode_tokens >= cfg.decode_min && r.decode_tokens <= cfg.decode_max);
         }
+    }
+
+    #[test]
+    fn invalid_configs_err_instead_of_panicking() {
+        let empty = TraceConfig { length_mix: vec![], ..Default::default() };
+        assert!(generate_trace(&empty).is_err());
+        let bad_rate = TraceConfig { rate: 0.0, ..Default::default() };
+        assert!(bad_rate.validate().is_err());
+        let bad_rate = TraceConfig { rate: -3.0, ..Default::default() };
+        assert!(bad_rate.validate().is_err());
+        let bad_decode = TraceConfig { decode_min: 64, decode_max: 8, ..Default::default() };
+        let err = generate_trace(&bad_decode).unwrap_err().to_string();
+        assert!(err.contains("decode_min"), "unexpected error: {err}");
+        let bad_weight =
+            TraceConfig { length_mix: vec![(512, 0.0)], ..Default::default() };
+        assert!(bad_weight.validate().is_err());
     }
 }

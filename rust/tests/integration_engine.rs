@@ -70,7 +70,7 @@ fn large_trace_serves_to_completion() {
         decode_max: 6,
         seed: 5,
     };
-    let trace = generate_trace(&trace_cfg);
+    let trace = generate_trace(&trace_cfg).unwrap();
     let requests: Vec<Request> = trace
         .iter()
         .map(|t| Request::new(t.id, vec![1; t.prompt_tokens.min(1900)], t.decode_tokens, t.arrival_s))
