@@ -14,69 +14,102 @@ use crate::attention::{CostTally, HeadInput};
 use crate::tensor::{matmul_nt_scaled, Mat};
 use crate::util::threadpool::parallel_map;
 
+/// Anchor-region scoring for one query block: per-row max over
+/// `[0, init_cols) ∪ [win_start, limit)`, causally masked.
+fn score_block(input: &HeadInput, cfg: &AnchorConfig, qb: usize) -> (Vec<f32>, CostTally) {
+    let n = input.n();
+    let d = input.d();
+    let scale = input.scale();
+    let tile = cfg.tile;
+    let init_cols = cfg.init_cols(n);
+    let row0 = qb * tile.b_q;
+    let rows = (n - row0).min(tile.b_q);
+    let limit = row0 + rows;
+    let q_i = input.q.rows_mat(row0, rows);
+    let mut m = vec![f32::NEG_INFINITY; rows];
+    let mut cost = CostTally::default();
+
+    // Region spans: [0, init_cols) ∪ [win_start, limit), merged when
+    // they overlap (early blocks).
+    let win_start = cfg.window_start(qb).min(limit);
+    let spans: [(usize, usize); 2] = if win_start <= init_cols {
+        [(0, limit), (0, 0)]
+    } else {
+        [(0, init_cols.min(limit)), (win_start, limit)]
+    };
+
+    let mut s = Mat::zeros(rows, tile.b_kv);
+    for (start, end) in spans {
+        if start >= end {
+            continue;
+        }
+        let mut col0 = start;
+        while col0 < end {
+            let cols = (end - col0).min(tile.b_kv);
+            let k_j = input.k.rows_mat(col0, cols);
+            if s.cols != cols || s.rows != rows {
+                s = Mat::zeros(rows, cols);
+            }
+            matmul_nt_scaled(&q_i, &k_j, scale, &mut s);
+            if col0 + cols > row0 {
+                mask_tile_causal(&mut s, row0, col0);
+            }
+            for (r, mr) in m.iter_mut().enumerate() {
+                for &x in s.row(r) {
+                    if x > *mr {
+                        *mr = x;
+                    }
+                }
+            }
+            cost.add(CostTally::ident_tile(rows, cols, d));
+            col0 += cols;
+        }
+    }
+    (m, cost)
+}
+
 /// Compute the per-row anchor scores `M` over the anchor regions
 /// (init ∪ window, causally masked). Returns `M` (length `n`, `-∞` only
 /// for rows with no visible anchor key — impossible since the diagonal is
 /// always in the window) plus the scoring cost.
 pub fn anchor_m_pass(input: &HeadInput, cfg: &AnchorConfig) -> (Vec<f32>, CostTally) {
     let n = input.n();
-    let d = input.d();
-    let scale = input.scale();
-    let tile = cfg.tile;
-    let q_blocks = tile.q_blocks(n);
-    let init_cols = cfg.init_cols(n);
-
-    let results = parallel_map(q_blocks, |qb| {
-        let row0 = qb * tile.b_q;
-        let rows = (n - row0).min(tile.b_q);
-        let limit = row0 + rows;
-        let q_i = input.q.rows_mat(row0, rows);
-        let mut m = vec![f32::NEG_INFINITY; rows];
-        let mut cost = CostTally::default();
-
-        // Region spans: [0, init_cols) ∪ [win_start, limit), merged when
-        // they overlap (early blocks).
-        let win_start = cfg.window_start(qb).min(limit);
-        let spans: [(usize, usize); 2] = if win_start <= init_cols {
-            [(0, limit), (0, 0)]
-        } else {
-            [(0, init_cols.min(limit)), (win_start, limit)]
-        };
-
-        let mut s = Mat::zeros(rows, tile.b_kv);
-        for (start, end) in spans {
-            if start >= end {
-                continue;
-            }
-            let mut col0 = start;
-            while col0 < end {
-                let cols = (end - col0).min(tile.b_kv);
-                let k_j = input.k.rows_mat(col0, cols);
-                if s.cols != cols || s.rows != rows {
-                    s = Mat::zeros(rows, cols);
-                }
-                matmul_nt_scaled(&q_i, &k_j, scale, &mut s);
-                if col0 + cols > row0 {
-                    mask_tile_causal(&mut s, row0, col0);
-                }
-                for (r, mr) in m.iter_mut().enumerate() {
-                    for &x in s.row(r) {
-                        if x > *mr {
-                            *mr = x;
-                        }
-                    }
-                }
-                cost.add(CostTally::ident_tile(rows, cols, d));
-                col0 += cols;
-            }
-        }
-        (m, cost)
-    });
+    let q_blocks = cfg.tile.q_blocks(n);
+    let results = parallel_map(q_blocks, |qb| score_block(input, cfg, qb));
 
     let mut m = vec![f32::NEG_INFINITY; n];
     let mut cost = CostTally::default();
     for (qb, (block_m, c)) in results.into_iter().enumerate() {
-        let row0 = qb * tile.b_q;
+        let row0 = qb * cfg.tile.b_q;
+        m[row0..row0 + block_m.len()].copy_from_slice(&block_m);
+        cost.add(c);
+    }
+    (m, cost)
+}
+
+/// As [`anchor_m_pass`], but scoring only the given query blocks — rows
+/// outside them stay `-∞` and cost nothing. Each row's `M` depends only
+/// on its own block's anchor regions, so the computed entries are exactly
+/// the full pass's values. The speculative reuse layer's recall check
+/// (DESIGN.md §17) scores only the sampled groups' blocks this way; the
+/// restriction is what makes a recall check cheaper than identification.
+pub fn anchor_m_pass_for_blocks(
+    input: &HeadInput,
+    cfg: &AnchorConfig,
+    blocks: &[usize],
+) -> (Vec<f32>, CostTally) {
+    let n = input.n();
+    let q_blocks = cfg.tile.q_blocks(n);
+    assert!(
+        blocks.iter().all(|&qb| qb < q_blocks),
+        "query block out of range (have {q_blocks} blocks)"
+    );
+    let results = parallel_map(blocks.len(), |i| score_block(input, cfg, blocks[i]));
+
+    let mut m = vec![f32::NEG_INFINITY; n];
+    let mut cost = CostTally::default();
+    for (&qb, (block_m, c)) in blocks.iter().zip(results) {
+        let row0 = qb * cfg.tile.b_q;
         m[row0..row0 + block_m.len()].copy_from_slice(&block_m);
         cost.add(c);
     }
@@ -155,6 +188,25 @@ mod tests {
         let (m, _) = anchor_m_pass(&h, &c);
         assert_eq!(m.len(), n);
         assert!(m.iter().all(|&x| x > f32::NEG_INFINITY), "every row saw >=1 key");
+    }
+
+    /// Restricting the pass to a block subset reproduces the full pass's
+    /// values exactly on those rows (per-row independence) and pays less.
+    #[test]
+    fn block_restricted_m_matches_full_pass() {
+        let n = 200; // ragged last block
+        let h = rand_head(27, n, 8);
+        let c = cfg(16, 2);
+        let (full, full_cost) = anchor_m_pass(&h, &c);
+        let blocks = [0usize, 5, 12];
+        let (partial, cost) = anchor_m_pass_for_blocks(&h, &c, &blocks);
+        for &qb in &blocks {
+            let row0 = qb * 16;
+            let rows = (n - row0).min(16);
+            assert_eq!(&partial[row0..row0 + rows], &full[row0..row0 + rows], "block {qb}");
+        }
+        assert!(partial[16..32].iter().all(|&x| x == f32::NEG_INFINITY));
+        assert!(cost.ident_scores > 0 && cost.ident_scores < full_cost.ident_scores);
     }
 
     /// Larger init region can only raise the anchor.

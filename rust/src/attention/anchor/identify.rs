@@ -24,68 +24,86 @@ use crate::tensor::ops::{avgpool_rows, avgpool_vec};
 use crate::tensor::{matmul_nt_scaled, Mat};
 use crate::util::threadpool::parallel_map;
 
-/// Run Alg. 2 against the anchor scores `m` (per-row `M` from
-/// [`super::compute::anchor_m_pass`]; must have length `n` when
-/// `cfg.use_anchor`, ignored otherwise).
-pub fn identify_stripes(input: &HeadInput, cfg: &AnchorConfig, m: &[f32]) -> StripeSet {
+/// `avgpool(Q, b_q)` and `avgpool(x_a, b_q)` — one pooled row per query
+/// block, the shared inputs of every Alg. 2 selection.
+fn pooled_inputs(input: &HeadInput, cfg: &AnchorConfig, m: &[f32]) -> (Mat, Vec<f32>) {
+    let n = input.n();
+    let q_blocks = cfg.tile.q_blocks(n);
+    let q_pool = avgpool_rows(&input.q, cfg.tile.b_q);
+    let anchor_pool: Vec<f32> = if cfg.use_anchor {
+        assert_eq!(m.len(), n, "anchor scores must cover every row");
+        avgpool_vec(m, cfg.tile.b_q)
+    } else {
+        // Table 4 "Without Anchor": anchor is a zero tensor.
+        vec![0.0; q_blocks]
+    };
+    (q_pool, anchor_pool)
+}
+
+/// Alg. 2's selection for one group: pooled queries vs every candidate
+/// key; a column survives if ANY pooled row in the group is within θ of
+/// its anchor.
+fn select_group(
+    input: &HeadInput,
+    cfg: &AnchorConfig,
+    q_pool: &Mat,
+    anchor_pool: &[f32],
+    g: usize,
+) -> (Vec<u32>, CostTally) {
     let n = input.n();
     let d = input.d();
     let scale = input.scale();
     let tile = cfg.tile;
     let q_blocks = tile.q_blocks(n);
+    let (cand_start, cand_end) = cfg.candidate_range(g, n);
+    if cand_start >= cand_end {
+        return (Vec::new(), CostTally::default());
+    }
+    let row_start = g * cfg.step;
+    let row_end = ((g + 1) * cfg.step).min(q_blocks);
+    let grows = row_end - row_start;
+    let qg = q_pool.rows_mat(row_start, grows);
+    let anchors = &anchor_pool[row_start..row_end];
+
+    let mut selected = Vec::new();
+    let mut cost = CostTally::default();
+    let mut s = Mat::zeros(grows, tile.b_kv);
+    let mut col0 = cand_start;
+    while col0 < cand_end {
+        let cols = (cand_end - col0).min(tile.b_kv);
+        let k_j = input.k.rows_mat(col0, cols);
+        if s.cols != cols {
+            s = Mat::zeros(grows, cols);
+        }
+        matmul_nt_scaled(&qg, &k_j, scale, &mut s);
+        cost.add(CostTally::ident_tile(grows, cols, d));
+        for c in 0..cols {
+            let mut hit = false;
+            for r in 0..grows {
+                if anchors[r] - s.at(r, c) <= cfg.theta {
+                    hit = true;
+                    break;
+                }
+            }
+            if hit {
+                selected.push((col0 + c) as u32);
+            }
+        }
+        col0 += cols;
+    }
+    (selected, cost)
+}
+
+/// Run Alg. 2 against the anchor scores `m` (per-row `M` from
+/// [`super::compute::anchor_m_pass`]; must have length `n` when
+/// `cfg.use_anchor`, ignored otherwise).
+pub fn identify_stripes(input: &HeadInput, cfg: &AnchorConfig, m: &[f32]) -> StripeSet {
+    let q_blocks = cfg.tile.q_blocks(input.n());
     let groups = q_blocks.div_ceil(cfg.step);
+    let (q_pool, anchor_pool) = pooled_inputs(input, cfg, m);
 
-    // avgpool(Q, b_q) and avgpool(x_a, b_q): one pooled row per query block.
-    let q_pool = avgpool_rows(&input.q, tile.b_q);
-    let anchor_pool: Vec<f32> = if cfg.use_anchor {
-        assert_eq!(m.len(), n, "anchor scores must cover every row");
-        avgpool_vec(m, tile.b_q)
-    } else {
-        // Table 4 "Without Anchor": anchor is a zero tensor.
-        vec![0.0; q_blocks]
-    };
-
-    let per_group: Vec<(Vec<u32>, CostTally)> = parallel_map(groups, |g| {
-        let (cand_start, cand_end) = cfg.candidate_range(g, n);
-        if cand_start >= cand_end {
-            return (Vec::new(), CostTally::default());
-        }
-        let row_start = g * cfg.step;
-        let row_end = ((g + 1) * cfg.step).min(q_blocks);
-        let grows = row_end - row_start;
-        let qg = q_pool.rows_mat(row_start, grows);
-        let anchors = &anchor_pool[row_start..row_end];
-
-        let mut selected = Vec::new();
-        let mut cost = CostTally::default();
-        let mut s = Mat::zeros(grows, tile.b_kv);
-        let mut col0 = cand_start;
-        while col0 < cand_end {
-            let cols = (cand_end - col0).min(tile.b_kv);
-            let k_j = input.k.rows_mat(col0, cols);
-            if s.cols != cols {
-                s = Mat::zeros(grows, cols);
-            }
-            matmul_nt_scaled(&qg, &k_j, scale, &mut s);
-            cost.add(CostTally::ident_tile(grows, cols, d));
-            // Column survives if ANY pooled row in the group is within θ of
-            // its anchor.
-            for c in 0..cols {
-                let mut hit = false;
-                for r in 0..grows {
-                    if anchors[r] - s.at(r, c) <= cfg.theta {
-                        hit = true;
-                        break;
-                    }
-                }
-                if hit {
-                    selected.push((col0 + c) as u32);
-                }
-            }
-            col0 += cols;
-        }
-        (selected, cost)
-    });
+    let per_group: Vec<(Vec<u32>, CostTally)> =
+        parallel_map(groups, |g| select_group(input, cfg, &q_pool, &anchor_pool, g));
 
     let mut cost = CostTally::default();
     let mut out_groups = Vec::with_capacity(groups);
@@ -94,6 +112,38 @@ pub fn identify_stripes(input: &HeadInput, cfg: &AnchorConfig, m: &[f32]) -> Str
         out_groups.push(sel);
     }
     StripeSet { step: cfg.step, groups: out_groups, cost }
+}
+
+/// Alg. 2 restricted to an arbitrary subset of groups — same selection
+/// rule and the same cost accounting as [`identify_stripes`], but only
+/// over `group_ids`. The speculative reuse layer (DESIGN.md §17) uses
+/// this twice: the recall check selects fresh stripes for a *sampled*
+/// group subset to score a donor plan against, and prefix extension
+/// re-identifies only the suffix groups a shorter donor cannot cover.
+/// Returns one stripe list per requested group, in `group_ids` order.
+pub fn identify_stripes_for_groups(
+    input: &HeadInput,
+    cfg: &AnchorConfig,
+    m: &[f32],
+    group_ids: &[usize],
+) -> (Vec<Vec<u32>>, CostTally) {
+    let q_blocks = cfg.tile.q_blocks(input.n());
+    let n_groups = q_blocks.div_ceil(cfg.step);
+    assert!(
+        group_ids.iter().all(|&g| g < n_groups),
+        "group id out of range (have {n_groups} groups)"
+    );
+    let (q_pool, anchor_pool) = pooled_inputs(input, cfg, m);
+    let per_group: Vec<(Vec<u32>, CostTally)> = parallel_map(group_ids.len(), |i| {
+        select_group(input, cfg, &q_pool, &anchor_pool, group_ids[i])
+    });
+    let mut cost = CostTally::default();
+    let mut out = Vec::with_capacity(group_ids.len());
+    for (sel, c) in per_group {
+        cost.add(c);
+        out.push(sel);
+    }
+    (out, cost)
 }
 
 #[cfg(test)]
@@ -214,6 +264,22 @@ mod tests {
         let stripes = identify_stripes(&h, &c, &m);
         // Group 0: window starts at 0, so no candidate columns at all.
         assert!(stripes.groups[0].is_empty());
+    }
+
+    /// Restricting Alg. 2 to a group subset changes nothing about the
+    /// per-group selections — only which groups get paid for.
+    #[test]
+    fn subset_identification_matches_full_grid() {
+        let h = rand_head(37, 256, 8);
+        let c = cfg(1.0);
+        let (m, _) = anchor_m_pass(&h, &c);
+        let full = identify_stripes(&h, &c, &m);
+        let ids = [1usize, 3, 5, 7];
+        let (subset, cost) = identify_stripes_for_groups(&h, &c, &m, &ids);
+        for (i, &g) in ids.iter().enumerate() {
+            assert_eq!(subset[i], full.groups[g], "group {g}");
+        }
+        assert!(cost.ident_scores > 0 && cost.ident_scores < full.cost.ident_scores);
     }
 
     #[test]

@@ -82,14 +82,49 @@ impl AnchorConfig {
         (start, end.max(start))
     }
 
+    /// Anchor spans for group `g` at length `n` — the structural
+    /// (input-independent) half of a plan's coordinates: init region +
+    /// group window, merged when the window reaches the init region (the
+    /// executor clips each span to every block's causal limit).
+    /// [`AnchorConfig::plan_timed`] and the speculative reuse layer
+    /// (DESIGN.md §17) assemble groups from this one definition, so a
+    /// reused plan can never drift structurally from a fresh one.
+    pub fn group_spans(&self, g: usize, n: usize) -> Vec<(u32, u32)> {
+        let init_cols = self.init_cols(n);
+        let win = g * self.step * self.tile.b_q;
+        let group_end = ((g + 1) * self.step * self.tile.b_q).min(n);
+        let mut spans = if win <= init_cols {
+            vec![(0u32, group_end as u32)]
+        } else {
+            vec![(0u32, init_cols as u32), (win as u32, group_end as u32)]
+        };
+        spans.retain(|&(s, e)| s < e); // drop empty init span when init_blocks = 0
+        spans
+    }
+
+    /// Assemble a priced [`SparsePlan`] from per-group stripe selections
+    /// (the shape Alg. 2 emits) and the identification cost actually
+    /// paid. `stripes` must hold one sorted list per group.
+    pub fn assemble_plan(
+        &self,
+        n: usize,
+        d: usize,
+        stripes: Vec<Vec<u32>>,
+        ident_cost: CostTally,
+    ) -> SparsePlan {
+        let groups = stripes
+            .into_iter()
+            .enumerate()
+            .map(|(g, sel)| GroupPlan { spans: self.group_spans(g, n), stripes: sel })
+            .collect();
+        SparsePlan::new("anchor", n, d, self.tile, self.step, groups, ident_cost)
+    }
+
     /// Build the plan, also returning per-phase wallclock
     /// `(anchor_s, identify_s)` for Fig. 6-style phase reporting.
     pub fn plan_timed(&self, input: &HeadInput) -> (SparsePlan, f64, f64) {
         let n = input.n();
-        let tile = self.tile;
-        let q_blocks = tile.q_blocks(n);
-        let n_groups = q_blocks.div_ceil(self.step);
-        let init_cols = self.init_cols(n);
+        let n_groups = self.tile.q_blocks(n).div_ceil(self.step);
 
         let t0 = Instant::now();
         let (m, m_cost) = if self.use_anchor {
@@ -101,24 +136,9 @@ impl AnchorConfig {
         let stripes = identify::identify_stripes(input, self, &m);
         debug_assert_eq!(stripes.groups.len(), n_groups);
 
-        let mut groups = Vec::with_capacity(n_groups);
-        for (g, sel) in stripes.groups.iter().enumerate() {
-            let win = g * self.step * tile.b_q;
-            let group_end = ((g + 1) * self.step * tile.b_q).min(n);
-            // Anchor spans, merged when the window reaches the init region
-            // (the executor clips each span to every block's causal limit).
-            let mut spans = if win <= init_cols {
-                vec![(0u32, group_end as u32)]
-            } else {
-                vec![(0u32, init_cols as u32), (win as u32, group_end as u32)]
-            };
-            spans.retain(|&(s, e)| s < e); // drop empty init span when init_blocks = 0
-            groups.push(GroupPlan { spans, stripes: sel.clone() });
-        }
         let mut ident_cost = m_cost;
         ident_cost.add(stripes.cost);
-        let plan =
-            SparsePlan::new("anchor", n, input.d(), tile, self.step, groups, ident_cost);
+        let plan = self.assemble_plan(n, input.d(), stripes.groups, ident_cost);
         let t2 = Instant::now();
         (plan, (t1 - t0).as_secs_f64(), (t2 - t1).as_secs_f64())
     }

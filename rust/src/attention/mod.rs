@@ -33,6 +33,7 @@ pub mod mask;
 pub mod metrics;
 pub mod pipeline;
 pub mod plan;
+pub mod reuse;
 pub mod session;
 pub mod shard;
 pub mod strategy;
@@ -223,6 +224,7 @@ impl Method {
         &self,
         batch: &BatchInput,
         cached: Option<(&PlanCache, &[PlanKey])>,
+        spec: Option<&reuse::Speculator>,
         executor: &dyn Executor,
     ) -> BatchOutput {
         let planner = self.planner();
@@ -247,7 +249,14 @@ impl Method {
                 let resolved: Vec<(Arc<SparsePlan>, bool)> =
                     parallel_map(firsts.len(), |i| {
                         let (key, h) = firsts[i];
-                        cache.get_or_plan(key, || planner.plan(&batch.heads[h]))
+                        // On a miss the speculative reuse layer (if the
+                        // session enabled one) widens the lookup; the
+                        // builder runs outside the cache lock, so the
+                        // speculator may snapshot the cache for donors.
+                        cache.get_or_plan(key, || match spec {
+                            Some(s) => s.resolve(cache, key, &batch.heads[h]),
+                            None => planner.plan(&batch.heads[h]),
+                        })
                     });
                 let mut misses = 0u64;
                 for (&(key, h0), (head_plan, hit)) in firsts.iter().zip(&resolved) {

@@ -35,6 +35,7 @@ use std::time::Instant;
 
 use crate::attention::exec::Executor;
 use crate::attention::plan::{BatchInput, BatchOutput, PlanCache, PlanKey, Planner, SparsePlan};
+use crate::attention::reuse::Speculator;
 use crate::attention::AttnOutput;
 use crate::util::threadpool::{num_threads, panic_message, OrderedBoundedQueue, PoisonOnDrop};
 
@@ -119,6 +120,7 @@ pub fn run_planner_batch_pipelined(
     planner: &dyn Planner,
     batch: &BatchInput,
     cached: Option<(&PlanCache, &[PlanKey])>,
+    spec: Option<&Speculator>,
     pipe: &PlanPipeline,
     executor: &dyn Executor,
 ) -> Result<PipelinedBatchOutput, String> {
@@ -160,9 +162,14 @@ pub fn run_planner_batch_pipelined(
         let t0 = Instant::now();
         let planned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             match (cached, key) {
-                (Some((cache, _)), Some(k)) => {
-                    cache.get_or_plan(k, || planner.plan(&batch.heads[h0]))
-                }
+                // Misses route through the speculative reuse layer when
+                // the session enabled one — same interposition as the
+                // sequential path, so plans stay bitwise-identical
+                // between the two dispatches.
+                (Some((cache, _)), Some(k)) => cache.get_or_plan(k, || match spec {
+                    Some(s) => s.resolve(cache, k, &batch.heads[h0]),
+                    None => planner.plan(&batch.heads[h0]),
+                }),
                 _ => (Arc::new(planner.plan(&batch.heads[h0])), false),
             }
         }));
@@ -376,6 +383,7 @@ mod tests {
             let err = run_planner_batch_pipelined(
                 &PanicPlanner,
                 &batch,
+                None,
                 None,
                 &pipe,
                 &CpuTileExecutor::default(),

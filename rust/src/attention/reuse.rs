@@ -1,0 +1,567 @@
+//! Speculative plan reuse with recall-check fallback (DESIGN.md §17).
+//!
+//! The paper's core observation (§3.2) — attention patterns share
+//! commonalities across inputs — is why a cheap anchor pass can predict
+//! the stripe set at all. The [`crate::attention::plan::PlanCache`]
+//! already exploits the *exact* form of that commonality (heads of one
+//! `(layer, head_group)` cell share a plan); this module widens the
+//! lookup to the *approximate* forms: a neighboring layer's plan for the
+//! same geometry ([`ReusePolicy::CrossLayer`]) and a shared-prefix plan
+//! extended by suffix-only identification ([`ReusePolicy::Prefix`]).
+//!
+//! A speculative donor is never served blind. The [`Speculator`] runs a
+//! **recall check** — Alg. 2's anchor comparison restricted to a sampled
+//! group subset (every [`RECALL_SAMPLE_STRIDE`]-th checkable group,
+//! counted backward from the last, whose blocks alone pay the anchor `M`
+//! pass) — and scores how much of the freshly identified stripe set the
+//! donor's coverage retains. Below the policy's recall floor the
+//! speculator falls back to full identification, so a stale donor can
+//! degrade *speed* (the wasted check is folded into the plan's
+//! `ident_cost`), never *correctness*: the fallback plan has exactly the
+//! coordinates fresh identification produces, preserving the §11
+//! never-serve-a-wrong-plan invariant.
+//!
+//! Accounting rides the existing machinery: an accepted speculative plan
+//! is a fresh [`SparsePlan`] carrying the donor's coordinates but an
+//! `ident_cost` equal to the check work actually paid, so the session's
+//! `ident_cost_paid` attribution and the scheduler's pricing see the
+//! saving without any new plumbing through the executors.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::attention::anchor::compute::anchor_m_pass_for_blocks;
+use crate::attention::anchor::identify::identify_stripes_for_groups;
+use crate::attention::anchor::AnchorConfig;
+use crate::attention::plan::{PlanCache, PlanKey, SparsePlan};
+use crate::attention::{CostTally, HeadInput};
+
+/// Sampling rule of the recall check: every stride-th checkable group,
+/// counted backward from the last (recent groups see the most context,
+/// so drift shows up there first; the last checkable group is always
+/// sampled). `bench reuse` measures the check-cost fraction this yields.
+pub const RECALL_SAMPLE_STRIDE: usize = 4;
+
+/// Default recall floor: accept a donor when the sampled fresh stripes
+/// are ≥ this covered. Measured, not guessed — `bench reuse` sweeps
+/// layer distance vs. recall and reports the accept rate at this floor.
+pub const DEFAULT_RECALL_FLOOR: f64 = 0.75;
+
+/// Default cross-layer probe distance (`layer ± k`).
+pub const DEFAULT_MAX_DISTANCE: u32 = 1;
+
+/// How a session widens plan-cache/store lookup on a miss
+/// (`SessionBuilder::reuse`, DESIGN.md §17).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReusePolicy {
+    /// Serve cached plans only under their exact key — the pre-reuse
+    /// behavior, bitwise-identical to it by construction.
+    Exact,
+    /// On a miss, probe `layer ± k` (nearest first, lower layer first)
+    /// for an equal-length same-geometry plan of the same head group;
+    /// serve it if the recall check clears `recall_floor`.
+    CrossLayer { max_distance: u32, recall_floor: f64 },
+    /// On a miss, probe shared-prefix donors: a shorter plan under the
+    /// same key (extended by identifying only the suffix groups), or an
+    /// equal-length same-layer plan of another head group (the PR 9
+    /// workload `reuse_key` plumbing keys shared-prefix streams apart).
+    Prefix { recall_floor: f64 },
+}
+
+impl ReusePolicy {
+    pub fn cross_layer() -> Self {
+        ReusePolicy::CrossLayer {
+            max_distance: DEFAULT_MAX_DISTANCE,
+            recall_floor: DEFAULT_RECALL_FLOOR,
+        }
+    }
+
+    pub fn prefix() -> Self {
+        ReusePolicy::Prefix { recall_floor: DEFAULT_RECALL_FLOOR }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "exact" => Ok(ReusePolicy::Exact),
+            "cross-layer" => Ok(ReusePolicy::cross_layer()),
+            "prefix" => Ok(ReusePolicy::prefix()),
+            other => Err(anyhow!(
+                "unknown reuse policy '{other}' (expected exact|cross-layer|prefix)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReusePolicy::Exact => "exact",
+            ReusePolicy::CrossLayer { .. } => "cross-layer",
+            ReusePolicy::Prefix { .. } => "prefix",
+        }
+    }
+
+    pub fn is_exact(&self) -> bool {
+        matches!(self, ReusePolicy::Exact)
+    }
+
+    /// Policy with the recall floor replaced (no-op for `exact`).
+    pub fn with_recall_floor(self, floor: f64) -> Self {
+        match self {
+            ReusePolicy::Exact => ReusePolicy::Exact,
+            ReusePolicy::CrossLayer { max_distance, .. } => {
+                ReusePolicy::CrossLayer { max_distance, recall_floor: floor }
+            }
+            ReusePolicy::Prefix { .. } => ReusePolicy::Prefix { recall_floor: floor },
+        }
+    }
+
+    fn recall_floor(&self) -> f64 {
+        match self {
+            ReusePolicy::Exact => 1.0,
+            ReusePolicy::CrossLayer { recall_floor, .. }
+            | ReusePolicy::Prefix { recall_floor } => *recall_floor,
+        }
+    }
+}
+
+/// Count of common elements of two sorted stripe lists (two-pointer).
+fn intersect_count(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut common) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                common += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    common
+}
+
+/// The speculative resolver a non-`exact` session interposes between a
+/// plan-cache miss and fresh identification. Anchor-method only (the
+/// recall check *is* Alg. 2 on a sample); `SessionBuilder::build`
+/// enforces that. Public only so it can appear in the pipeline entry
+/// point's signature — construction and use are crate-internal.
+pub struct Speculator {
+    policy: ReusePolicy,
+    cfg: AnchorConfig,
+    /// Shorter-length prefix donors: adopted from the cache on a length
+    /// change (before invalidation) and seeded from the plan store's
+    /// widened lookup. Equal-length donors come from the live cache.
+    donors: Mutex<Vec<(PlanKey, Arc<SparsePlan>)>>,
+    hits: AtomicU64,
+    fallbacks: AtomicU64,
+    recall_sum: Mutex<f64>,
+}
+
+impl Speculator {
+    pub(crate) fn new(policy: ReusePolicy, cfg: AnchorConfig) -> Self {
+        Self {
+            policy,
+            cfg,
+            donors: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            fallbacks: AtomicU64::new(0),
+            recall_sum: Mutex::new(0.0),
+        }
+    }
+
+    /// Reset the per-run counters (the session calls this at the top of
+    /// `run`/`run_batch`; [`Speculator::take_run_stats`] reads them
+    /// after).
+    pub(crate) fn begin_run(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.fallbacks.store(0, Ordering::Relaxed);
+        *self.recall_sum.lock().unwrap() = 0.0;
+    }
+
+    /// `(speculative_hits, speculative_fallbacks, mean recall)` since the
+    /// last [`Speculator::begin_run`].
+    pub(crate) fn take_run_stats(&self) -> (u64, u64, Option<f64>) {
+        let hits = self.hits.load(Ordering::Relaxed);
+        let fallbacks = self.fallbacks.load(Ordering::Relaxed);
+        let checks = hits + fallbacks;
+        let recall = (checks > 0).then(|| *self.recall_sum.lock().unwrap() / checks as f64);
+        (hits, fallbacks, recall)
+    }
+
+    /// Adopt the cache's current entries as shorter-length prefix donors
+    /// (called on a length change, before the cache is invalidated).
+    pub(crate) fn adopt_donors(&self, snapshot: Vec<(PlanKey, Arc<SparsePlan>)>) {
+        if !matches!(self.policy, ReusePolicy::Prefix { .. }) {
+            return;
+        }
+        self.donors.lock().unwrap().extend(snapshot);
+    }
+
+    /// Seed one prefix donor (the plan store's widened lookup files
+    /// shorter compatible plans here during cache warm-up).
+    pub(crate) fn seed_donor(&self, key: PlanKey, plan: Arc<SparsePlan>) {
+        self.donors.lock().unwrap().push((key, plan));
+    }
+
+    fn compatible(&self, p: &SparsePlan) -> bool {
+        p.method == "anchor" && p.tile == self.cfg.tile && p.step == self.cfg.step
+    }
+
+    /// Can a shorter donor cover at least one complete group (rows and
+    /// candidate columns inside its prefix, init region included)?
+    fn prefix_usable(&self, donor: &SparsePlan, n: usize) -> bool {
+        donor.n >= self.cfg.step * self.cfg.tile.b_q && donor.n >= self.cfg.init_cols(n)
+    }
+
+    /// Number of leading groups whose coordinates a donor vouches for:
+    /// all of them for an equal-length donor, else the contiguous prefix
+    /// of groups whose pooled rows (and therefore candidate columns,
+    /// which end before the rows) lie fully inside the donor's length.
+    fn reusable_groups(&self, donor: &SparsePlan, n: usize, n_groups: usize) -> usize {
+        if donor.n == n {
+            return n_groups;
+        }
+        let rows_per_group = self.cfg.step * self.cfg.tile.b_q;
+        (0..n_groups).take_while(|&g| (g + 1) * rows_per_group <= donor.n).count()
+    }
+
+    /// Pick the donor to recall-check for a missed `key`, or `None` for
+    /// a plain miss. Deterministic: the cache snapshot is key-sorted and
+    /// the donor list is probed by (same-key, largest length) first.
+    fn find_donor(&self, cache: &PlanCache, key: PlanKey, n: usize) -> Option<Arc<SparsePlan>> {
+        match self.policy {
+            ReusePolicy::Exact => None,
+            ReusePolicy::CrossLayer { max_distance, .. } => {
+                let snap = cache.snapshot();
+                for dist in 1..=max_distance {
+                    // Lower layer first: in a forward pass it is the one
+                    // already computed.
+                    for layer in [key.layer.checked_sub(dist), key.layer.checked_add(dist)]
+                    {
+                        let Some(layer) = layer else { continue };
+                        if let Some((_, p)) = snap.iter().find(|(k, p)| {
+                            k.layer == layer
+                                && k.head_group == key.head_group
+                                && p.n == n
+                                && self.compatible(p)
+                        }) {
+                            return Some(p.clone());
+                        }
+                    }
+                }
+                None
+            }
+            ReusePolicy::Prefix { .. } => {
+                let donors = self.donors.lock().unwrap();
+                // 1. A shorter plan under the same key: this stream's own
+                //    prefix, extended by suffix identification.
+                if let Some((_, p)) = donors
+                    .iter()
+                    .filter(|(k, p)| {
+                        *k == key && p.n < n && self.compatible(p) && self.prefix_usable(p, n)
+                    })
+                    .max_by_key(|(_, p)| p.n)
+                {
+                    return Some(p.clone());
+                }
+                // 2. An equal-length same-layer plan of another head group
+                //    from the live cache (shared-prefix streams).
+                let snap = cache.snapshot();
+                if let Some((_, p)) = snap.iter().find(|(k, p)| {
+                    k.layer == key.layer && *k != key && p.n == n && self.compatible(p)
+                }) {
+                    return Some(p.clone());
+                }
+                // 3. A shorter same-layer donor from any head group.
+                if let Some((_, p)) = donors
+                    .iter()
+                    .filter(|(k, p)| {
+                        k.layer == key.layer
+                            && p.n < n
+                            && self.compatible(p)
+                            && self.prefix_usable(p, n)
+                    })
+                    .max_by_key(|(_, p)| p.n)
+                {
+                    return Some(p.clone());
+                }
+                None
+            }
+        }
+    }
+
+    /// Resolve a plan for a missed `key`: recall-check a donor when one
+    /// exists, else identify fresh. Runs inside the cache's
+    /// `get_or_plan` builder (outside its lock), so reading the cache
+    /// snapshot here is deadlock-free.
+    pub(crate) fn resolve(
+        &self,
+        cache: &PlanCache,
+        key: PlanKey,
+        input: &HeadInput,
+    ) -> SparsePlan {
+        match self.find_donor(cache, key, input.n()) {
+            Some(donor) => self.check_and_build(&donor, input),
+            None => self.cfg.plan_timed(input).0,
+        }
+    }
+
+    /// The query blocks of the given groups (the rows the recall check /
+    /// suffix identification must score).
+    fn blocks_of(&self, groups: impl Iterator<Item = usize>, q_blocks: usize) -> Vec<usize> {
+        let mut blocks = Vec::new();
+        for g in groups {
+            blocks.extend(g * self.cfg.step..((g + 1) * self.cfg.step).min(q_blocks));
+        }
+        blocks
+    }
+
+    /// Recall-check `donor` against fresh identification on the sampled
+    /// group subset; on acceptance assemble a plan from the donor's
+    /// coordinates (suffix groups identified fresh for a shorter donor),
+    /// on rejection fall back to full identification with the wasted
+    /// check folded into `ident_cost`.
+    fn check_and_build(&self, donor: &SparsePlan, input: &HeadInput) -> SparsePlan {
+        let cfg = &self.cfg;
+        let n = input.n();
+        let d = input.d();
+        let q_blocks = cfg.tile.q_blocks(n);
+        let n_groups = q_blocks.div_ceil(cfg.step);
+        let reusable = self.reusable_groups(donor, n, n_groups);
+
+        // Sampled subset of the checkable groups (reusable groups with a
+        // non-empty candidate range; the rest have structural coordinates
+        // the donor cannot get wrong).
+        let checkable: Vec<usize> = (0..reusable)
+            .filter(|&g| {
+                let (s, e) = cfg.candidate_range(g, n);
+                s < e
+            })
+            .collect();
+        let mut sampled: Vec<usize> =
+            checkable.iter().rev().copied().step_by(RECALL_SAMPLE_STRIDE).collect();
+        sampled.reverse();
+
+        let mut paid = CostTally::default();
+        let (fresh, recall) = if sampled.is_empty() {
+            (Vec::new(), 1.0)
+        } else {
+            let m = if cfg.use_anchor {
+                let blocks = self.blocks_of(sampled.iter().copied(), q_blocks);
+                let (m, m_cost) = anchor_m_pass_for_blocks(input, cfg, &blocks);
+                paid.add(m_cost);
+                m
+            } else {
+                Vec::new()
+            };
+            let (fresh, check_cost) = identify_stripes_for_groups(input, cfg, &m, &sampled);
+            paid.add(check_cost);
+            let mut fresh_total = 0usize;
+            let mut covered = 0usize;
+            for (sel, &g) in fresh.iter().zip(&sampled) {
+                fresh_total += sel.len();
+                covered += intersect_count(sel, &donor.groups[g].stripes);
+            }
+            let recall =
+                if fresh_total == 0 { 1.0 } else { covered as f64 / fresh_total as f64 };
+            (fresh, recall)
+        };
+        drop(fresh);
+
+        *self.recall_sum.lock().unwrap() += recall;
+        if recall < self.policy.recall_floor() {
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+            let mut plan = cfg.plan_timed(input).0;
+            // The wasted check is real paid work — fold it into the
+            // plan's identification cost so `ident_cost_paid` (and the
+            // scheduler pricing downstream) stays honest.
+            plan.ident_cost.add(paid);
+            return plan;
+        }
+
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        let mut stripes: Vec<Vec<u32>> = Vec::with_capacity(n_groups);
+        for g in 0..reusable {
+            stripes.push(donor.groups[g].stripes.clone());
+        }
+        if reusable < n_groups {
+            // Prefix extension: identify only the suffix groups, with the
+            // anchor pass restricted to their blocks.
+            let suffix: Vec<usize> = (reusable..n_groups).collect();
+            let m = if cfg.use_anchor {
+                let blocks = self.blocks_of(suffix.iter().copied(), q_blocks);
+                let (m, m_cost) = anchor_m_pass_for_blocks(input, cfg, &blocks);
+                paid.add(m_cost);
+                m
+            } else {
+                Vec::new()
+            };
+            let (suffix_sel, suffix_cost) = identify_stripes_for_groups(input, cfg, &m, &suffix);
+            paid.add(suffix_cost);
+            stripes.extend(suffix_sel);
+        }
+        cfg.assemble_plan(n, d, stripes, paid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::plan::Planner;
+    use crate::attention::TileConfig;
+    use crate::tensor::Mat;
+    use crate::util::rng::Pcg64;
+
+    fn rand_head(seed: u64, n: usize, d: usize) -> HeadInput {
+        let mut rng = Pcg64::seeded(seed);
+        HeadInput::new(
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+            Mat::from_fn(n, d, |_, _| rng.normal()),
+        )
+    }
+
+    fn small_cfg() -> AnchorConfig {
+        AnchorConfig {
+            tile: TileConfig::new(16, 16),
+            theta: 4.0,
+            step: 2,
+            init_blocks: 1,
+            use_anchor: true,
+        }
+    }
+
+    #[test]
+    fn policy_parses_and_names_roundtrip() {
+        for name in ["exact", "cross-layer", "prefix"] {
+            assert_eq!(ReusePolicy::parse(name).unwrap().name(), name);
+        }
+        assert!(ReusePolicy::parse("fuzzy").is_err());
+        assert!(ReusePolicy::Exact.is_exact());
+        assert!(!ReusePolicy::prefix().is_exact());
+        let p = ReusePolicy::cross_layer().with_recall_floor(0.5);
+        assert_eq!(p, ReusePolicy::CrossLayer { max_distance: 1, recall_floor: 0.5 });
+    }
+
+    #[test]
+    fn intersect_counts_sorted_overlap() {
+        assert_eq!(intersect_count(&[1, 3, 5, 9], &[2, 3, 4, 5, 6]), 2);
+        assert_eq!(intersect_count(&[], &[1, 2]), 0);
+        assert_eq!(intersect_count(&[7], &[7]), 1);
+    }
+
+    /// An identical-input donor passes the recall check with recall 1.0
+    /// and the accepted plan's coordinates equal fresh identification's,
+    /// at strictly lower identification cost.
+    #[test]
+    fn identical_donor_accepted_with_full_recall_and_cheaper_ident() {
+        let cfg = small_cfg();
+        let h = rand_head(60, 256, 8);
+        let fresh = Planner::plan(&cfg, &h);
+        let spec = Speculator::new(ReusePolicy::cross_layer(), cfg);
+        let cache = PlanCache::new();
+        cache.seed(PlanKey::new(0, 0), Arc::new(fresh.clone()));
+        let plan = spec.resolve(&cache, PlanKey::new(1, 0), &h);
+        let (hits, fallbacks, recall) = spec.take_run_stats();
+        assert_eq!((hits, fallbacks), (1, 0));
+        assert_eq!(recall, Some(1.0));
+        for (a, b) in plan.groups.iter().zip(&fresh.groups) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(plan.predicted_cost, fresh.predicted_cost);
+        assert!(
+            plan.ident_cost.ident_scores < fresh.ident_cost.ident_scores,
+            "check {} !< full {}",
+            plan.ident_cost.ident_scores,
+            fresh.ident_cost.ident_scores
+        );
+    }
+
+    /// A deliberately wrong donor fails the check; the fallback plan is
+    /// coordinate-equal to fresh identification and pays check + full
+    /// ident. Deterministic by construction: `theta = ∞` makes fresh
+    /// identification select *every* candidate column, so an
+    /// empty-stripe donor scores recall exactly 0 on any sampled group.
+    #[test]
+    fn wrong_donor_falls_back_to_fresh_coordinates() {
+        let cfg = AnchorConfig { theta: f32::INFINITY, ..small_cfg() };
+        let h = rand_head(61, 256, 8);
+        let fresh = Planner::plan(&cfg, &h);
+        assert!(fresh.total_stripes() > 0, "test needs a non-trivial selection");
+        let mut wrong = fresh.clone();
+        for grp in wrong.groups.iter_mut() {
+            grp.stripes.clear();
+        }
+        let spec = Speculator::new(
+            ReusePolicy::CrossLayer { max_distance: 1, recall_floor: 0.99 },
+            cfg,
+        );
+        let cache = PlanCache::new();
+        cache.seed(PlanKey::new(0, 0), Arc::new(wrong));
+        let plan = spec.resolve(&cache, PlanKey::new(1, 0), &h);
+        let (hits, fallbacks, _) = spec.take_run_stats();
+        assert_eq!((hits, fallbacks), (0, 1));
+        for (a, b) in plan.groups.iter().zip(&fresh.groups) {
+            assert_eq!(a, b, "fallback must serve fresh coordinates");
+        }
+        assert!(plan.ident_cost.ident_scores > fresh.ident_cost.ident_scores);
+    }
+
+    /// A wrong-length donor is structurally skipped by cross-layer
+    /// lookup: plain miss, no check, no fallback.
+    #[test]
+    fn cross_layer_skips_wrong_length_donors() {
+        let cfg = small_cfg();
+        let short = rand_head(62, 128, 8);
+        let h = rand_head(63, 256, 8);
+        let spec = Speculator::new(ReusePolicy::cross_layer(), cfg);
+        let cache = PlanCache::new();
+        cache.seed(PlanKey::new(0, 0), Arc::new(Planner::plan(&cfg, &short)));
+        let plan = spec.resolve(&cache, PlanKey::new(1, 0), &h);
+        assert_eq!(spec.take_run_stats(), (0, 0, None));
+        assert_eq!(plan, Planner::plan(&cfg, &h));
+    }
+
+    /// Prefix extension: a shorter same-key donor built from the same
+    /// prefix rows yields exactly the coordinates fresh identification
+    /// finds, at lower cost (suffix-only identification).
+    #[test]
+    fn prefix_donor_extends_to_fresh_coordinates() {
+        let cfg = small_cfg();
+        let n_full = 256;
+        let n_prefix = 128;
+        let full = rand_head(64, n_full, 8);
+        let prefix = HeadInput::new(
+            full.q.rows_mat(0, n_prefix),
+            full.k.rows_mat(0, n_prefix),
+            full.v.rows_mat(0, n_prefix),
+        );
+        let donor = Planner::plan(&cfg, &prefix);
+        let fresh = Planner::plan(&cfg, &full);
+        let spec = Speculator::new(ReusePolicy::prefix(), cfg);
+        spec.seed_donor(PlanKey::new(0, 0), Arc::new(donor));
+        let cache = PlanCache::new();
+        let plan = spec.resolve(&cache, PlanKey::new(0, 0), &full);
+        let (hits, fallbacks, recall) = spec.take_run_stats();
+        assert_eq!((hits, fallbacks), (1, 0), "recall {recall:?}");
+        for (g, (a, b)) in plan.groups.iter().zip(&fresh.groups).enumerate() {
+            assert_eq!(a, b, "group {g}");
+        }
+        assert!(plan.ident_cost.ident_scores < fresh.ident_cost.ident_scores);
+    }
+
+    /// A donor too short to cover one complete group is never picked.
+    #[test]
+    fn useless_prefix_donor_is_skipped() {
+        let cfg = small_cfg();
+        let tiny = rand_head(65, 16, 8); // one block < step*b_q = 32
+        let h = rand_head(66, 128, 8);
+        let spec = Speculator::new(ReusePolicy::prefix(), cfg);
+        spec.seed_donor(PlanKey::new(0, 0), Arc::new(Planner::plan(&cfg, &tiny)));
+        let plan = spec.resolve(&PlanCache::new(), PlanKey::new(0, 0), &h);
+        assert_eq!(spec.take_run_stats(), (0, 0, None));
+        assert_eq!(plan, Planner::plan(&cfg, &h));
+    }
+}

@@ -38,11 +38,15 @@
 //! with descriptive errors.
 //!
 //! Caveat on cache keys: the [`PlanCache`] is keyed by `(layer,
-//! head_group)` — reusing one session across *unrelated* inputs that
-//! collide on a key would serve stale plans. Sessions running arbitrary
-//! per-head inputs (experiments, latency probes) should `no_cache()`;
-//! cached sessions are for serving-shaped workloads where a key names a
-//! stable GQA cell.
+//! head_group)` — an *exact-policy* session reusing those keys across
+//! unrelated inputs would serve stale plans, so sessions running
+//! arbitrary per-head inputs (experiments, latency probes) should
+//! `no_cache()`, and cached sessions are for serving-shaped workloads
+//! where a key names a stable GQA cell. `SessionBuilder::reuse` widens
+//! the lookup *deliberately* (cross-layer / shared-prefix speculation,
+//! DESIGN.md §17), but unlike a key collision every widened serve is
+//! guarded by a recall check that falls back to fresh identification —
+//! staleness there degrades speed, never coordinates.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -54,6 +58,7 @@ use crate::attention::pipeline::{run_planner_batch_pipelined, PipelineStats, Pla
 use crate::attention::plan::{
     BatchInput, BatchOutput, PlanCache, PlanCacheStats, PlanKey, SparsePlan,
 };
+use crate::attention::reuse::{ReusePolicy, Speculator};
 use crate::attention::{AttnOutput, CostTally, HeadInput, Method};
 use crate::runtime::manifest::{PlanStore, PlanStoreKey};
 
@@ -153,6 +158,10 @@ pub struct SessionConfig {
     /// §14): threads in-process, or spawned worker processes over the
     /// wire.
     pub transport: SessionTransport,
+    /// Speculative plan-reuse policy (`"reuse"` / `--reuse`, DESIGN.md
+    /// §17): `exact` (default, pre-reuse behavior), `cross-layer`, or
+    /// `prefix`.
+    pub reuse: ReusePolicy,
 }
 
 impl Default for SessionConfig {
@@ -166,6 +175,7 @@ impl Default for SessionConfig {
             shards: 1,
             store_max_entries: None,
             transport: SessionTransport::Threads,
+            reuse: ReusePolicy::Exact,
         }
     }
 }
@@ -178,7 +188,8 @@ impl SessionConfig {
         let mut b = AttentionSession::builder(method)
             .executor(self.executor)
             .pipelined(self.pipelined)
-            .model(&self.model);
+            .model(&self.model)
+            .reuse(self.reuse);
         if !self.cache {
             b = b.no_cache();
         }
@@ -201,7 +212,8 @@ impl SessionConfig {
         let mut b = crate::attention::shard::ShardedSession::builder(method, self.shards)
             .executor(self.executor)
             .pipelined(self.pipelined)
-            .model(&self.model);
+            .model(&self.model)
+            .reuse(self.reuse);
         if self.transport == SessionTransport::Process {
             b = b.remote(crate::wire::RemoteSpec::Spawn { program: None });
         }
@@ -233,6 +245,7 @@ pub struct SessionBuilder {
     model: String,
     store_cap: Option<usize>,
     shard_worker: bool,
+    reuse: ReusePolicy,
 }
 
 impl SessionBuilder {
@@ -249,6 +262,7 @@ impl SessionBuilder {
             model: "default".to_string(),
             store_cap: None,
             shard_worker: false,
+            reuse: ReusePolicy::Exact,
         }
     }
 
@@ -346,6 +360,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Speculative plan-reuse policy (DESIGN.md §17). Non-`exact`
+    /// policies widen cache misses to cross-layer / shared-prefix donor
+    /// plans behind a recall check; they require the plan cache and the
+    /// anchor method (the check *is* Alg. 2 on a sampled group subset).
+    pub fn reuse(mut self, policy: ReusePolicy) -> Self {
+        self.reuse = policy;
+        self
+    }
+
     /// Validate the configuration and assemble the session.
     pub fn build(self) -> Result<AttentionSession> {
         if let KeyPolicy::Gqa { group_size, .. } = self.keys {
@@ -372,6 +395,26 @@ impl SessionBuilder {
                  owns the plan store (DESIGN.md §12)"
             ));
         }
+        let spec = match (&self.reuse, &self.method) {
+            (ReusePolicy::Exact, _) => None,
+            (policy, _) if self.cache.is_none() => {
+                return Err(anyhow!(
+                    "reuse '{}' widens the plan-cache lookup — a no_cache() session \
+                     has no cache to widen; re-enable the cache or use reuse 'exact'",
+                    policy.name()
+                ));
+            }
+            (policy, Method::Anchor(cfg)) => Some(Arc::new(Speculator::new(*policy, *cfg))),
+            (policy, other) => {
+                return Err(anyhow!(
+                    "reuse '{}' requires the anchor method (the recall check is \
+                     Alg. 2's anchor comparison — only the anchor planner can score \
+                     a speculative plan); the session runs '{}'",
+                    policy.name(),
+                    other.name()
+                ));
+            }
+        };
         let store = open_plan_store(&self.persist, self.cache.is_some(), self.store_cap)?;
         let executor: Box<dyn Executor> = match self.executor {
             ExecutorKind::Cpu => {
@@ -392,6 +435,7 @@ impl SessionBuilder {
             current_n: None,
             store_seeded: 0,
             shard_worker: self.shard_worker,
+            spec,
         })
     }
 }
@@ -408,10 +452,22 @@ pub struct SessionOutput {
     pub cache_hits: u64,
     pub cache_misses: u64,
     /// Identification cost actually paid this run (fresh keys only; a
-    /// fully warm run reports zero — the fig2 cold-vs-warm column).
+    /// fully warm run reports zero — the fig2 cold-vs-warm column). A
+    /// speculative hit pays only its recall-check (plus any prefix
+    /// suffix-identification) cost here, which is the reuse layer's
+    /// entire saving (DESIGN.md §17).
     pub ident_cost_paid: CostTally,
     /// Overlap accounting when the session pipelines batches.
     pub pipeline: Option<PipelineStats>,
+    /// Cache misses this run that a speculative donor plan resolved after
+    /// passing the recall check (always 0 under reuse `exact`).
+    pub speculative_hits: u64,
+    /// Cache misses whose recall check rejected the donor and fell back
+    /// to full identification (output unchanged, check cost wasted).
+    pub speculative_fallbacks: u64,
+    /// Mean recall the checks measured this run; `None` when no donor
+    /// was checked.
+    pub speculative_recall: Option<f64>,
 }
 
 impl SessionOutput {
@@ -468,6 +524,9 @@ pub struct AttentionSession {
     /// Shard-worker mode: cache lifecycle is owned by the coordinating
     /// `ShardedSession`, so prepare/invalidate/sync are no-ops here.
     shard_worker: bool,
+    /// Speculative reuse layer for non-`exact` policies (DESIGN.md §17);
+    /// `None` means exact lookup, bitwise the pre-reuse behavior.
+    spec: Option<Arc<Speculator>>,
 }
 
 /// Shared persistence validation + store opening for the session and
@@ -643,10 +702,28 @@ impl AttentionSession {
         // Invalidate only on an actual length change: the first run must
         // not wipe a cache the caller pre-warmed via `.cache()`.
         if self.current_n.is_some() {
+            // Under prefix reuse the outgoing plans become shorter-length
+            // donors first — a grown sequence's next run extends them by
+            // suffix identification instead of starting over.
+            if let Some(spec) = &self.spec {
+                spec.adopt_donors(cache.snapshot());
+            }
             cache.invalidate();
         }
         if let Some(store) = self.store.as_mut() {
             self.store_seeded += seed_cache_from_store(&cache, store, &self.model, &self.method, n, d);
+            // Widened store lookup (DESIGN.md §17): shorter compatible
+            // plans cannot seed the cache (the executor rejects
+            // wrong-length plans) but can seed the speculator's prefix
+            // donor table.
+            if let Some(spec) = &self.spec {
+                let (tile, step) = self.method.plan_geometry();
+                for (key, plan) in
+                    store.plans_for_prefix(&self.model, n, self.method.name(), tile, step, d)
+                {
+                    spec.seed_donor(key, plan);
+                }
+            }
         }
         self.current_n = Some(n);
     }
@@ -666,11 +743,17 @@ impl AttentionSession {
     pub fn run(&mut self, input: &HeadInput) -> Result<SessionOutput> {
         let n = input.n();
         self.prepare_cache(n, input.d());
+        if let Some(spec) = &self.spec {
+            spec.begin_run();
+        }
         let planner = self.method.planner();
         let (plan, hit) = match &self.cache {
             Some(cache) => {
                 let key = self.keys.key_of(0)?;
-                cache.get_or_plan(key, || planner.plan(input))
+                cache.get_or_plan(key, || match &self.spec {
+                    Some(s) => s.resolve(cache, key, input),
+                    None => planner.plan(input),
+                })
             }
             None => (Arc::new(planner.plan(input)), false),
         };
@@ -681,6 +764,8 @@ impl AttentionSession {
             ident_paid.add(plan.ident_cost);
         }
         self.sync_store(n, input.d());
+        let (speculative_hits, speculative_fallbacks, speculative_recall) =
+            self.spec.as_ref().map_or((0, 0, None), |s| s.take_run_stats());
         Ok(SessionOutput {
             outputs: vec![out],
             plans: vec![plan],
@@ -688,6 +773,9 @@ impl AttentionSession {
             cache_misses: u64::from(!hit),
             ident_cost_paid: ident_paid,
             pipeline: None,
+            speculative_hits,
+            speculative_fallbacks,
+            speculative_recall,
         })
     }
 
@@ -698,6 +786,9 @@ impl AttentionSession {
     pub fn run_batch(&mut self, batch: &BatchInput) -> Result<SessionOutput> {
         let n = batch.n();
         self.prepare_cache(n, batch.d());
+        if let Some(spec) = &self.spec {
+            spec.begin_run();
+        }
         let keys = match &self.cache {
             Some(_) => Some(self.keys.keys_for(batch.h())?),
             None => None,
@@ -707,19 +798,21 @@ impl AttentionSession {
                 (Some(c), Some(k)) => Some((c.as_ref(), k.as_slice())),
                 _ => None,
             };
+            let spec = self.spec.as_deref();
             if self.pipelined {
                 let planner = self.method.planner();
                 let piped = run_planner_batch_pipelined(
                     planner.as_ref(),
                     batch,
                     cached,
+                    spec,
                     &self.pipeline,
                     self.executor.as_ref(),
                 )
                 .map_err(|e| anyhow!("pipelined batch failed: {e}"))?;
                 (piped.batch, Some(piped.stats))
             } else {
-                (self.method.run_batch_inner(batch, cached, self.executor.as_ref()), None)
+                (self.method.run_batch_inner(batch, cached, spec, self.executor.as_ref()), None)
             }
         };
         let BatchOutput { outputs, plans, cache_hits, cache_misses } = out;
@@ -738,6 +831,8 @@ impl AttentionSession {
         // streaming-llm) are filed too and the restart warm-start
         // guarantee holds for every method.
         self.sync_store(n, batch.d());
+        let (speculative_hits, speculative_fallbacks, speculative_recall) =
+            self.spec.as_ref().map_or((0, 0, None), |s| s.take_run_stats());
         Ok(SessionOutput {
             outputs,
             plans,
@@ -745,6 +840,9 @@ impl AttentionSession {
             cache_misses,
             ident_cost_paid: ident_paid,
             pipeline: stats,
+            speculative_hits,
+            speculative_fallbacks,
+            speculative_recall,
         })
     }
 
@@ -916,6 +1014,61 @@ mod tests {
     }
 
     #[test]
+    fn build_rejects_reuse_without_cache() {
+        let err = anchor_method()
+            .session()
+            .no_cache()
+            .reuse(ReusePolicy::prefix())
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no cache to widen"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_reuse_on_non_anchor_methods() {
+        let err = Method::Full(TileConfig::new(16, 16))
+            .session()
+            .reuse(ReusePolicy::cross_layer())
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("anchor method"), "{err}");
+    }
+
+    /// A prefix-reuse session that grows its sequence adopts the old
+    /// plans as donors: the longer run reports a speculative hit and pays
+    /// less identification than a cold run at the new length.
+    #[test]
+    fn prefix_reuse_extends_across_a_length_change() {
+        let m = anchor_method();
+        let full = rand_head(22, 256, 8);
+        let prefix = HeadInput::new(
+            full.q.rows_mat(0, 128),
+            full.k.rows_mat(0, 128),
+            full.v.rows_mat(0, 128),
+        );
+        let mut session = m.session().reuse(ReusePolicy::prefix()).build().unwrap();
+        let short = session.run(&prefix).unwrap();
+        assert_eq!(short.speculative_hits, 0); // no donors yet
+        let grown = session.run(&full).unwrap();
+        assert_eq!((grown.cache_hits, grown.cache_misses), (0, 1));
+        assert_eq!((grown.speculative_hits, grown.speculative_fallbacks), (1, 0));
+        // Output identical to an exact-policy session at the full length
+        // (the prefix donor's stripes match fresh identification here).
+        let exact = m.session().build().unwrap().run(&full).unwrap();
+        assert_eq!(grown.outputs[0].out.data, exact.outputs[0].out.data);
+        assert!(
+            grown.ident_cost_paid.ident_scores < exact.ident_cost_paid.ident_scores,
+            "speculative {} !< fresh {}",
+            grown.ident_cost_paid.ident_scores,
+            exact.ident_cost_paid.ident_scores
+        );
+    }
+
+    #[test]
     fn build_rejects_zero_group_size() {
         let err = anchor_method()
             .session()
@@ -1073,6 +1226,7 @@ mod tests {
             shards: 1,
             store_max_entries: None,
             transport: SessionTransport::Threads,
+            reuse: ReusePolicy::Exact,
         };
         let session = cfg.builder(anchor_method()).build().unwrap();
         assert_eq!(session.executor_kind(), ExecutorKind::Pjrt);

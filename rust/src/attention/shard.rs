@@ -57,6 +57,7 @@ use anyhow::{anyhow, Result};
 use crate::attention::exec::ExecutorKind;
 use crate::attention::pipeline::PipelineStats;
 use crate::attention::plan::{BatchInput, PlanCache, PlanCacheStats, PlanKey, SparsePlan};
+use crate::attention::reuse::ReusePolicy;
 use crate::attention::session::{
     open_plan_store, seed_cache_from_store, sync_cache_to_store, AttentionSession, KeyPolicy,
     SessionOutput,
@@ -83,6 +84,7 @@ pub struct ShardedSessionBuilder {
     store_cap: Option<usize>,
     remote: Option<RemoteSpec>,
     timeouts: WireTimeouts,
+    reuse: ReusePolicy,
 }
 
 impl ShardedSessionBuilder {
@@ -99,6 +101,7 @@ impl ShardedSessionBuilder {
             store_cap: None,
             remote: None,
             timeouts: WireTimeouts::default(),
+            reuse: ReusePolicy::Exact,
         }
     }
 
@@ -176,6 +179,19 @@ impl ShardedSessionBuilder {
         self
     }
 
+    /// Speculative plan-reuse policy for every shard worker (DESIGN.md
+    /// §17). Thread workers speculate against the *shared* cache, so
+    /// cross-layer and equal-length shared-prefix donors work exactly as
+    /// in the unsharded session; shorter-length prefix donors are adopted
+    /// on length changes only by unsharded sessions (the coordinator owns
+    /// the shared cache's lifecycle, and workers never snapshot it at
+    /// invalidation). Incompatible with the remote transport — the wire
+    /// protocol ships exact seeds only.
+    pub fn reuse(mut self, policy: ReusePolicy) -> Self {
+        self.reuse = policy;
+        self
+    }
+
     /// Validate the configuration and assemble the sharded session.
     pub fn build(self) -> Result<ShardedSession> {
         if self.shards == 0 {
@@ -186,6 +202,15 @@ impl ShardedSessionBuilder {
                 return Err(anyhow!("sharded session key policy: group_size must be >= 1"));
             }
         }
+        if !self.reuse.is_exact() && self.remote.is_some() {
+            return Err(anyhow!(
+                "reuse '{}' is not available over the remote transport: wire \
+                 workers receive exact-key seeds only and cannot snapshot the \
+                 coordinator's cache for donor plans — run reuse over threads, \
+                 or use reuse 'exact' with remote shards",
+                self.reuse.name()
+            ));
+        }
         let store = open_plan_store(&self.persist, self.cache.is_some(), self.store_cap)?;
         let backend = match self.remote {
             None => {
@@ -193,6 +218,7 @@ impl ShardedSessionBuilder {
                 for _ in 0..self.shards {
                     let mut b = AttentionSession::builder(self.method.clone())
                         .executor(self.executor)
+                        .reuse(self.reuse)
                         .shard_worker();
                     b = match &self.cache {
                         Some(c) => b.shared_cache(c.clone()),
@@ -505,6 +531,11 @@ impl ShardedSession {
                 out.ident_cost_paid,
                 out.pipeline,
             );
+            merge.speculative(
+                out.speculative_hits,
+                out.speculative_fallbacks,
+                out.speculative_recall,
+            );
             for ((&h, o), p) in hs.iter().zip(out.outputs).zip(out.plans) {
                 merge.place(h, o, p);
             }
@@ -631,6 +662,11 @@ struct Merge {
     cache_misses: u64,
     ident_paid: CostTally,
     pipeline: Option<PipelineStats>,
+    speculative_hits: u64,
+    speculative_fallbacks: u64,
+    // Recall mean weighted by each shard's check count (hits + fallbacks),
+    // so the merged `speculative_recall` equals the mean over all checks.
+    recall_weighted: f64,
 }
 
 impl Merge {
@@ -642,6 +678,17 @@ impl Merge {
             cache_misses: 0,
             ident_paid: CostTally::default(),
             pipeline: None,
+            speculative_hits: 0,
+            speculative_fallbacks: 0,
+            recall_weighted: 0.0,
+        }
+    }
+
+    fn speculative(&mut self, hits: u64, fallbacks: u64, recall: Option<f64>) {
+        self.speculative_hits += hits;
+        self.speculative_fallbacks += fallbacks;
+        if let Some(r) = recall {
+            self.recall_weighted += r * (hits + fallbacks) as f64;
         }
     }
 
@@ -687,6 +734,12 @@ impl Merge {
             cache_misses: self.cache_misses,
             ident_cost_paid: self.ident_paid,
             pipeline: self.pipeline,
+            speculative_hits: self.speculative_hits,
+            speculative_fallbacks: self.speculative_fallbacks,
+            speculative_recall: {
+                let checks = self.speculative_hits + self.speculative_fallbacks;
+                (checks > 0).then(|| self.recall_weighted / checks as f64)
+            },
         }
     }
 }

@@ -9,6 +9,7 @@ use anyhow::{anyhow, Result};
 
 use crate::attention::anchor::AnchorConfig;
 use crate::attention::exec::ExecutorKind;
+use crate::attention::reuse::ReusePolicy;
 use crate::attention::session::{SessionConfig, SessionTransport};
 use crate::attention::TileConfig;
 use crate::coordinator::scheduler::{CostConstants, SchedulerConfig, SparsityModel};
@@ -81,6 +82,12 @@ impl AppConfig {
                     stripe_keep: sched.get("stripe_keep").as_f64().unwrap_or(0.1),
                     anchor_tokens: sched.get("anchor_tokens").as_usize().unwrap_or(256),
                     plan_hit_rate: sched.get("plan_hit_rate").as_f64().unwrap_or(0.0),
+                    // Prior on the speculative-reuse hit rate among misses
+                    // (DESIGN.md §17); the serve loop's EWMA moves it live.
+                    speculative_hit_rate: sched
+                        .get("speculative_hit_rate")
+                        .as_f64()
+                        .unwrap_or(0.0),
                     // Async plan pipeline: price identification as
                     // overlapped with execution (DESIGN.md §9).
                     pipelined: sched.get("pipelined").as_bool().unwrap_or(false),
@@ -159,6 +166,7 @@ impl AppConfig {
                     None => d.transport,
                     Some(s) => SessionTransport::parse(s)?,
                 },
+                reuse: parse_reuse(se, d.reuse)?,
             };
         }
 
@@ -191,6 +199,47 @@ impl AppConfig {
 
         Ok(cfg)
     }
+}
+
+/// Parse the session block's speculative-reuse keys (DESIGN.md §17):
+/// `reuse` names the policy, `reuse_distance` widens cross-layer donor
+/// probing, `recall_floor` tightens the acceptance gate. A modifier key
+/// that cannot apply to the chosen policy is an error, not a silent
+/// no-op — a config asking for a floor must be getting one.
+fn parse_reuse(se: &Json, default: ReusePolicy) -> Result<ReusePolicy> {
+    let mut policy = match se.get("reuse").as_str() {
+        None => default,
+        Some(s) => ReusePolicy::parse(s)?,
+    };
+    match se.get("reuse_distance").as_usize() {
+        None => {}
+        Some(0) => return Err(anyhow!("session reuse_distance must be >= 1")),
+        Some(k) => match policy {
+            ReusePolicy::CrossLayer { recall_floor, .. } => {
+                policy = ReusePolicy::CrossLayer { max_distance: k as u32, recall_floor };
+            }
+            other => {
+                return Err(anyhow!(
+                    "session reuse_distance only applies to reuse \"cross-layer\" \
+                     (policy is \"{}\")",
+                    other.name()
+                ))
+            }
+        },
+    }
+    match se.get("recall_floor").as_f64() {
+        None => {}
+        Some(f) if !(0.0..=1.0).contains(&f) => {
+            return Err(anyhow!("session recall_floor must be in [0, 1] (got {f})"))
+        }
+        Some(_) if policy.is_exact() => {
+            return Err(anyhow!(
+                "session recall_floor requires reuse \"cross-layer\" or \"prefix\""
+            ))
+        }
+        Some(f) => policy = policy.with_recall_floor(f),
+    }
+    Ok(policy)
 }
 
 #[cfg(test)]
@@ -312,6 +361,38 @@ mod tests {
         assert_eq!(cfg.session.transport, SessionTransport::Process);
         // Unknown transports are rejected, not defaulted.
         assert!(AppConfig::parse(r#"{"session": {"transport": "carrier-pigeon"}}"#).is_err());
+    }
+
+    #[test]
+    fn session_reuse_parses_modifiers_and_rejects_misapplied_keys() {
+        let cfg = AppConfig::parse("{}").unwrap();
+        assert!(cfg.session.reuse.is_exact(), "exact by default");
+        let cfg = AppConfig::parse(
+            r#"{"session": {"reuse": "cross-layer", "reuse_distance": 3,
+                            "recall_floor": 0.9}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.session.reuse,
+            ReusePolicy::CrossLayer { max_distance: 3, recall_floor: 0.9 }
+        );
+        let cfg =
+            AppConfig::parse(r#"{"session": {"reuse": "prefix", "recall_floor": 0.5}}"#).unwrap();
+        assert_eq!(cfg.session.reuse, ReusePolicy::Prefix { recall_floor: 0.5 });
+        // Misapplied or degenerate modifier keys are errors, not no-ops.
+        assert!(AppConfig::parse(r#"{"session": {"reuse": "telepathy"}}"#).is_err());
+        assert!(AppConfig::parse(
+            r#"{"session": {"reuse": "cross-layer", "reuse_distance": 0}}"#
+        )
+        .is_err());
+        assert!(
+            AppConfig::parse(r#"{"session": {"reuse": "prefix", "reuse_distance": 2}}"#).is_err()
+        );
+        assert!(AppConfig::parse(r#"{"session": {"recall_floor": 0.9}}"#).is_err());
+        assert!(AppConfig::parse(
+            r#"{"session": {"reuse": "prefix", "recall_floor": 1.5}}"#
+        )
+        .is_err());
     }
 
     #[test]

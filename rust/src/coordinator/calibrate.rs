@@ -260,6 +260,7 @@ mod tests {
             stripe_keep: 0.1,
             anchor_tokens: 256,
             plan_hit_rate: 0.0,
+            speculative_hit_rate: 0.0,
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards: 1,

@@ -55,6 +55,24 @@ pub trait StepExecutor {
     fn take_plan_attribution(&mut self) -> Vec<(u64, u64, u64)> {
         Vec::new()
     }
+    /// Speculative plan-reuse hit rate the engine observed since the last
+    /// poll — `speculative_hits / (speculative_hits + speculative_fallbacks)`
+    /// merged over the attention sessions behind the steps. Drained by the
+    /// serve loop into the scheduler's `speculative_hit_rate` EWMA
+    /// (`SparsityModel::observe_speculative_hit_rate`), so recall-check
+    /// pricing (DESIGN.md §17) tracks what the sessions actually achieve.
+    /// `None` when no recall checks ran (exact policy, or nothing to reuse).
+    fn observed_speculative_hit_rate(&mut self) -> Option<f64> {
+        None
+    }
+    /// Per-request speculative-reuse attribution since the last poll:
+    /// `(request id, speculative hits, speculative fallbacks)` triples,
+    /// same contract as [`Self::take_plan_attribution`]. Attached to
+    /// [`RequestRecord`](super::metrics::RequestRecord)s so speculative
+    /// hit rates are reportable per workload scenario.
+    fn take_speculative_attribution(&mut self) -> Vec<(u64, u64, u64)> {
+        Vec::new()
+    }
 }
 
 /// The real PJRT-backed engine. Owns one [`LmModel`] and per-request
@@ -339,6 +357,7 @@ mod tests {
                     stripe_keep: 0.1,
                     anchor_tokens: 256,
                     plan_hit_rate: hit,
+                    speculative_hit_rate: 0.0,
                     pipelined: false,
                     executor: ExecutorKind::Cpu,
                     shards: 1,
@@ -401,6 +420,7 @@ mod tests {
                     stripe_keep: 0.1,
                     anchor_tokens: 256,
                     plan_hit_rate: hit,
+                    speculative_hit_rate: 0.0,
                     pipelined,
                     executor: ExecutorKind::Cpu,
                     shards: 1,
@@ -431,6 +451,7 @@ mod tests {
             stripe_keep: 0.1,
             anchor_tokens: 256,
             plan_hit_rate: 0.0,
+            speculative_hit_rate: 0.0,
             pipelined: true,
             executor: ExecutorKind::Cpu,
             shards: 1,

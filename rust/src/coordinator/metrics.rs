@@ -1,5 +1,7 @@
 //! Serving metrics: per-request records and aggregate report.
 
+use std::collections::BTreeMap;
+
 use crate::util::stats;
 
 /// What ultimately happened to one submitted request — the per-request
@@ -51,6 +53,11 @@ pub struct RequestRecord {
     /// (zero when the executor doesn't attribute, e.g. the mock).
     pub plan_hits: u64,
     pub plan_misses: u64,
+    /// Of this request's `plan_misses`, how many were resolved by a
+    /// speculative reuse hit (recall check passed) vs fell back to full
+    /// identification (DESIGN.md §17).
+    pub speculative_hits: u64,
+    pub speculative_fallbacks: u64,
     /// KV-page evictions this request suffered (prefill preemption).
     pub evictions: u32,
 }
@@ -66,6 +73,8 @@ pub struct ScenarioStats {
     pub p99_ttft_s: f64,
     pub plan_hits: u64,
     pub plan_misses: u64,
+    pub speculative_hits: u64,
+    pub speculative_fallbacks: u64,
     pub evictions: u64,
 }
 
@@ -77,6 +86,17 @@ impl ScenarioStats {
             0.0
         } else {
             self.plan_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of plan-cache misses a speculative reuse hit resolved
+    /// instead of full identification (0 when nothing missed) — the
+    /// serve-slo shared-prefix floor reads this (DESIGN.md §17).
+    pub fn speculative_hit_rate(&self) -> f64 {
+        if self.plan_misses == 0 {
+            0.0
+        } else {
+            self.speculative_hits as f64 / self.plan_misses as f64
         }
     }
 }
@@ -147,39 +167,52 @@ impl ServeReport {
     }
 
     /// Per-scenario breakdown, sorted by scenario tag (untagged traffic
-    /// aggregates under `"untagged"`).
+    /// aggregates under `"untagged"`). Single pass over the records: the
+    /// `BTreeMap` yields the same sorted-tag order the old
+    /// sort+dedup+rescan produced, without the O(tags × records)
+    /// re-filtering on multi-thousand-request traces.
     pub fn scenario_breakdown(&self) -> Vec<ScenarioStats> {
-        let mut tags: Vec<String> = self
-            .records
-            .iter()
-            .map(|r| r.scenario.clone().unwrap_or_else(|| "untagged".to_string()))
-            .collect();
-        tags.sort();
-        tags.dedup();
-        tags.iter()
-            .map(|tag| {
-                let matching: Vec<&RequestRecord> = self
-                    .records
-                    .iter()
-                    .filter(|r| {
-                        r.scenario.as_deref().unwrap_or("untagged") == tag.as_str()
-                    })
-                    .collect();
-                let ttfts: Vec<f64> =
-                    matching.iter().map(|r| r.ttft_s).filter(|x| x.is_finite()).collect();
-                ScenarioStats {
-                    scenario: tag.clone(),
-                    requests: matching.len(),
-                    completed: matching
-                        .iter()
-                        .filter(|r| r.outcome == RequestOutcome::Completed)
-                        .count(),
-                    p50_ttft_s: stats::percentile(&ttfts, 50.0),
-                    p99_ttft_s: stats::percentile(&ttfts, 99.0),
-                    plan_hits: matching.iter().map(|r| r.plan_hits).sum(),
-                    plan_misses: matching.iter().map(|r| r.plan_misses).sum(),
-                    evictions: matching.iter().map(|r| r.evictions as u64).sum(),
-                }
+        #[derive(Default)]
+        struct Acc {
+            requests: usize,
+            completed: usize,
+            ttfts: Vec<f64>,
+            plan_hits: u64,
+            plan_misses: u64,
+            speculative_hits: u64,
+            speculative_fallbacks: u64,
+            evictions: u64,
+        }
+        let mut by_tag: BTreeMap<&str, Acc> = BTreeMap::new();
+        for r in &self.records {
+            let acc =
+                by_tag.entry(r.scenario.as_deref().unwrap_or("untagged")).or_default();
+            acc.requests += 1;
+            if r.outcome == RequestOutcome::Completed {
+                acc.completed += 1;
+            }
+            if r.ttft_s.is_finite() {
+                acc.ttfts.push(r.ttft_s);
+            }
+            acc.plan_hits += r.plan_hits;
+            acc.plan_misses += r.plan_misses;
+            acc.speculative_hits += r.speculative_hits;
+            acc.speculative_fallbacks += r.speculative_fallbacks;
+            acc.evictions += r.evictions as u64;
+        }
+        by_tag
+            .into_iter()
+            .map(|(tag, acc)| ScenarioStats {
+                scenario: tag.to_string(),
+                requests: acc.requests,
+                completed: acc.completed,
+                p50_ttft_s: stats::percentile(&acc.ttfts, 50.0),
+                p99_ttft_s: stats::percentile(&acc.ttfts, 99.0),
+                plan_hits: acc.plan_hits,
+                plan_misses: acc.plan_misses,
+                speculative_hits: acc.speculative_hits,
+                speculative_fallbacks: acc.speculative_fallbacks,
+                evictions: acc.evictions,
             })
             .collect()
     }
@@ -233,8 +266,13 @@ impl ServeReport {
         let breakdown = self.scenario_breakdown();
         if breakdown.iter().any(|s| s.scenario != "untagged") {
             for s in &breakdown {
+                let spec = if s.speculative_hits + s.speculative_fallbacks > 0 {
+                    format!(", spec hit {:.0}%", s.speculative_hit_rate() * 100.0)
+                } else {
+                    String::new()
+                };
                 println!(
-                    "  [{}] {} req, p99 TTFT {:.3} s, plan hit {:.0}%",
+                    "  [{}] {} req, p99 TTFT {:.3} s, plan hit {:.0}%{spec}",
                     s.scenario,
                     s.requests,
                     s.p99_ttft_s,
@@ -300,6 +338,8 @@ mod tests {
             scenario: None,
             plan_hits: 0,
             plan_misses: 0,
+            speculative_hits: 0,
+            speculative_fallbacks: 0,
             evictions: 0,
         }
     }
@@ -390,5 +430,50 @@ mod tests {
         assert_eq!(needle.plan_hit_rate(), 0.0);
         assert!(shared.plan_hit_rate() > needle.plan_hit_rate());
         assert_eq!(breakdown[2].plan_hits + breakdown[2].plan_misses, 0);
+    }
+
+    /// Speculative attribution aggregates per tag, and the rate is over
+    /// plan misses (a tag with no misses reports 0, not NaN).
+    #[test]
+    fn scenario_breakdown_aggregates_speculative_attribution() {
+        let spec = |id, tag: &str, misses, spec_hits, fallbacks| {
+            let mut r = record(id, 0.1, 1.0);
+            r.scenario = Some(tag.to_string());
+            r.plan_misses = misses;
+            r.speculative_hits = spec_hits;
+            r.speculative_fallbacks = fallbacks;
+            r
+        };
+        let rep = ServeReport {
+            records: vec![
+                spec(1, "shared-prefix", 4, 3, 1),
+                spec(2, "shared-prefix", 4, 3, 0),
+                spec(3, "needle", 8, 0, 0),
+            ],
+            ..ServeReport::default()
+        };
+        let breakdown = rep.scenario_breakdown();
+        let shared = breakdown.iter().find(|s| s.scenario == "shared-prefix").unwrap();
+        assert_eq!((shared.speculative_hits, shared.speculative_fallbacks), (6, 1));
+        assert!((shared.speculative_hit_rate() - 6.0 / 8.0).abs() < 1e-9);
+        let needle = breakdown.iter().find(|s| s.scenario == "needle").unwrap();
+        assert_eq!(needle.speculative_hit_rate(), 0.0);
+        // No misses at all: rate degrades to 0, never divides by zero.
+        assert_eq!(
+            ScenarioStats {
+                scenario: "x".into(),
+                requests: 0,
+                completed: 0,
+                p50_ttft_s: 0.0,
+                p99_ttft_s: 0.0,
+                plan_hits: 5,
+                plan_misses: 0,
+                speculative_hits: 0,
+                speculative_fallbacks: 0,
+                evictions: 0,
+            }
+            .speculative_hit_rate(),
+            0.0
+        );
     }
 }

@@ -33,6 +33,15 @@ pub const IDENT_COST_FRAC: f64 = 0.125;
 /// priced with.
 pub const PLAN_BROADCAST_FRAC: f64 = 0.002;
 
+/// What a *speculative* plan-cache hit (DESIGN.md §17) still pays,
+/// as a fraction of the full identification cost: the recall check runs
+/// Alg. 2 over a strided sample of the donor's reusable groups (every
+/// 4th), with the anchor m-pass restricted to exactly the sampled blocks
+/// — roughly a quarter of the pooled pass plus comparison overhead. A
+/// speculative hit therefore prices as `RECALL_COST_FRAC · ident`
+/// instead of dropping the term entirely the way an exact hit does.
+pub const RECALL_COST_FRAC: f64 = 0.35;
+
 /// The constants the Anchor cost estimates are built from: either the
 /// modeled defaults above or machine-measured replacements produced by
 /// `anchor-attn calibrate` and persisted under the runtime manifest's
@@ -103,6 +112,16 @@ pub enum SparsityModel {
         /// `(layer, head_group)` cell reuse identification work); hits
         /// drop the identification term from the chunk cost.
         plan_hit_rate: f64,
+        /// Observed *speculative* reuse hit rate in [0, 1] among the
+        /// cache misses (DESIGN.md §17): the fraction of misses a
+        /// widened-lookup donor plan served after passing the sampled
+        /// recall check. A speculative hit still pays the check —
+        /// [`RECALL_COST_FRAC`] of full identification — so the miss
+        /// fraction's ident term scales by
+        /// `(1 − s) + s · RECALL_COST_FRAC`. `0.0` (the default and the
+        /// exact-policy value) reproduces the historical pricing bit for
+        /// bit.
+        speculative_hit_rate: f64,
         /// Whether the engine runs the async plan pipeline (DESIGN.md §9).
         /// When on, identification of chunk *i+1* overlaps execution of
         /// chunk *i*, so a chunk costs `max(ident, exec)` effective tokens
@@ -137,7 +156,14 @@ impl SparsityModel {
         match *self {
             SparsityModel::Dense => context as f64,
             SparsityModel::Anchor {
-                stripe_keep, anchor_tokens, plan_hit_rate, pipelined, shards, constants, ..
+                stripe_keep,
+                anchor_tokens,
+                plan_hit_rate,
+                speculative_hit_rate,
+                pipelined,
+                shards,
+                constants,
+                ..
             } => {
                 let anchored = context.min(anchor_tokens) as f64;
                 let rest = context.saturating_sub(anchor_tokens) as f64;
@@ -149,7 +175,12 @@ impl SparsityModel {
                 // plans once, then the coordinates fan out.
                 let attn = (anchored + stripe_keep * rest) / s
                     + constants.plan_broadcast_frac * (s - 1.0) * context as f64;
+                // Misses split into speculative hits (priced at the recall
+                // check, RECALL_COST_FRAC of a full pass) and true misses
+                // (full identification). spec = 0 is the historical pricing.
+                let spec = speculative_hit_rate.clamp(0.0, 1.0);
                 let ident = (1.0 - plan_hit_rate.clamp(0.0, 1.0))
+                    * ((1.0 - spec) + spec * RECALL_COST_FRAC)
                     * constants.ident_cost_frac
                     * context as f64;
                 // Pipelined: identification overlaps execution, so only the
@@ -208,6 +239,26 @@ impl SparsityModel {
         match *self {
             SparsityModel::Dense => None,
             SparsityModel::Anchor { plan_hit_rate, .. } => Some(plan_hit_rate),
+        }
+    }
+
+    /// Current speculative-reuse hit-rate estimate (the EWMA state), when
+    /// the model prices recall-checked reuse.
+    pub fn speculative_hit_rate(&self) -> Option<f64> {
+        match *self {
+            SparsityModel::Dense => None,
+            SparsityModel::Anchor { speculative_hit_rate, .. } => Some(speculative_hit_rate),
+        }
+    }
+
+    /// Fold a newly observed speculative-reuse hit rate — the sessions'
+    /// `speculative_hits / (hits + fallbacks)` — into the model (no-op
+    /// for dense). Same EWMA shape as [`Self::observe_plan_hit_rate`],
+    /// drained from [`StepExecutor::observed_speculative_hit_rate`]
+    /// (`crate::coordinator::engine::StepExecutor`) by the serve loop.
+    pub fn observe_speculative_hit_rate(&mut self, observed: f64) {
+        if let SparsityModel::Anchor { speculative_hit_rate, .. } = self {
+            *speculative_hit_rate = 0.5 * *speculative_hit_rate + 0.5 * observed.clamp(0.0, 1.0);
         }
     }
 
@@ -466,6 +517,7 @@ mod tests {
             stripe_keep: 0.08,
             anchor_tokens: 256,
             plan_hit_rate: 0.0,
+            speculative_hit_rate: 0.0,
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards: 1,
@@ -503,6 +555,7 @@ mod tests {
             stripe_keep: 0.1,
             anchor_tokens: 200,
             plan_hit_rate: 1.0,
+            speculative_hit_rate: 0.0,
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards: 1,
@@ -523,6 +576,7 @@ mod tests {
             stripe_keep: 0.08,
             anchor_tokens: 256,
             plan_hit_rate: hit,
+            speculative_hit_rate: 0.0,
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards: 1,
@@ -554,6 +608,59 @@ mod tests {
         assert!(run(1.0) > run(0.0), "warm {} vs cold {}", run(1.0), run(0.0));
     }
 
+    /// Speculative hits price the miss fraction's ident work at the
+    /// sampled recall check ([`RECALL_COST_FRAC`] of a full pass): dearer
+    /// than an exact hit, strictly cheaper than a cold miss — and a zero
+    /// rate (the default, and what the exact policy reports) reproduces
+    /// the historical pricing bit for bit.
+    #[test]
+    fn speculative_hits_price_ident_at_recall_check() {
+        let mk = |spec| SparsityModel::Anchor {
+            stripe_keep: 0.1,
+            anchor_tokens: 256,
+            plan_hit_rate: 0.0,
+            speculative_hit_rate: spec,
+            pipelined: false,
+            executor: ExecutorKind::Cpu,
+            shards: 1,
+            constants: CostConstants::modeled(),
+        };
+        let n = 4096;
+        // attn = 256 + 0.1·3840 = 640; full ident = 0.125·4096 = 512.
+        let cold = mk(0.0).effective_context(n);
+        let all_spec = mk(1.0).effective_context(n);
+        let half = mk(0.5).effective_context(n);
+        assert!((cold - 1152.0).abs() < 1e-9, "cold {cold}");
+        assert!(
+            (all_spec - (640.0 + RECALL_COST_FRAC * 512.0)).abs() < 1e-9,
+            "speculative {all_spec}"
+        );
+        assert!(cold > half && half > all_spec, "{cold} > {half} > {all_spec}");
+        // Exact hits still beat speculative ones: the check is not free.
+        let warm = SparsityModel::Anchor {
+            stripe_keep: 0.1,
+            anchor_tokens: 256,
+            plan_hit_rate: 1.0,
+            speculative_hit_rate: 1.0,
+            pipelined: false,
+            executor: ExecutorKind::Cpu,
+            shards: 1,
+            constants: CostConstants::modeled(),
+        };
+        assert!(warm.effective_context(n) < all_spec);
+
+        // EWMA + getter, and the dense no-op.
+        let mut m = mk(0.0);
+        assert_eq!(m.speculative_hit_rate(), Some(0.0));
+        m.observe_speculative_hit_rate(1.0);
+        assert_eq!(m.speculative_hit_rate(), Some(0.5));
+        m.observe_speculative_hit_rate(1.0);
+        assert_eq!(m.speculative_hit_rate(), Some(0.75));
+        let mut d = SparsityModel::Dense;
+        d.observe_speculative_hit_rate(1.0);
+        assert_eq!(d.speculative_hit_rate(), None);
+    }
+
     /// With the plan pipeline on, identification is priced `max(ident,
     /// exec)` — overlapped — instead of `ident + exec`, so the same chunk
     /// is never more expensive pipelined and the scheduler fits at least
@@ -564,6 +671,7 @@ mod tests {
             stripe_keep: 0.1,
             anchor_tokens: 256,
             plan_hit_rate: 0.0,
+            speculative_hit_rate: 0.0,
             pipelined,
             executor: ExecutorKind::Cpu,
             shards: 1,
@@ -581,6 +689,7 @@ mod tests {
             stripe_keep: 0.0,
             anchor_tokens: 0,
             plan_hit_rate: 0.0,
+            speculative_hit_rate: 0.0,
             pipelined: true,
             executor: ExecutorKind::Cpu,
             shards: 1,
@@ -595,6 +704,7 @@ mod tests {
                     stripe_keep: 0.1,
                     anchor_tokens: 256,
                     plan_hit_rate: hit,
+                    speculative_hit_rate: 0.0,
                     pipelined,
                     executor: ExecutorKind::Cpu,
                     shards: 1,
@@ -620,6 +730,7 @@ mod tests {
             stripe_keep: 0.1,
             anchor_tokens: 256,
             plan_hit_rate: 1.0, // isolate the exec term
+            speculative_hit_rate: 0.0,
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards,
@@ -674,6 +785,7 @@ mod tests {
             stripe_keep: 0.1,
             anchor_tokens: 256,
             plan_hit_rate: 0.0,
+            speculative_hit_rate: 0.0,
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards: 1,
@@ -721,6 +833,7 @@ mod tests {
             stripe_keep: 0.1,
             anchor_tokens: 256,
             plan_hit_rate: 0.0,
+            speculative_hit_rate: 0.0,
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards: 2,

@@ -34,6 +34,7 @@ use super::metrics::{RequestOutcome, RequestRecord, ServeReport};
 use super::request::{Phase, Request, RequestError, RequestState};
 use super::scheduler::{plan_iteration, CostConstants, SchedulerConfig, SparsityModel};
 use crate::attention::exec::ExecutorKind;
+use crate::attention::reuse::ReusePolicy;
 use crate::attention::session::{SessionConfig, SessionTransport};
 use crate::wire::codec::{HealthReplyMsg, MetricsReplyMsg, ReqReplyMsg, ReqSubmitMsg};
 use crate::wire::frame::{read_frame_opt, write_frame, FrameKind};
@@ -99,6 +100,9 @@ pub struct ServeOverrides {
     pub plan_store: Option<String>,
     /// Admission-control queue cap (shed with `Overloaded` past it).
     pub max_pending: Option<usize>,
+    /// Speculative plan-reuse policy for the attention sessions
+    /// (DESIGN.md §17): exact | cross-layer | prefix.
+    pub reuse: Option<ReusePolicy>,
 }
 
 impl ServerConfig {
@@ -112,6 +116,7 @@ impl ServerConfig {
                 stripe_keep: 0.1,
                 anchor_tokens: 256,
                 plan_hit_rate: 0.0,
+                speculative_hit_rate: 0.0,
                 pipelined: ov.pipeline,
                 executor: ExecutorKind::default(),
                 shards: 1,
@@ -169,6 +174,9 @@ impl ServeOverrides {
         }
         if let Some(p) = &self.plan_store {
             cfg.plan_store = Some(p.clone());
+        }
+        if let Some(policy) = self.reuse {
+            cfg.reuse = policy;
         }
         Ok(())
     }
@@ -260,6 +268,8 @@ fn rejected_record(sub: &ServeRequest, outcome: RequestOutcome) -> RequestRecord
         scenario: None,
         plan_hits: 0,
         plan_misses: 0,
+        speculative_hits: 0,
+        speculative_fallbacks: 0,
         evictions: 0,
     }
 }
@@ -417,6 +427,8 @@ pub fn serve<E: StepExecutor>(
     let mut report = ServeReport::default();
     // Per-request plan-cache attribution drained from the executor.
     let mut plan_attrib: HashMap<u64, (u64, u64)> = HashMap::new();
+    // Per-request speculative-reuse attribution (hits, fallbacks).
+    let mut spec_attrib: HashMap<u64, (u64, u64)> = HashMap::new();
     let t0 = Instant::now();
     let mut iteration = 0u64;
 
@@ -488,6 +500,17 @@ pub fn serve<E: StepExecutor>(
             e.0 += hits;
             e.1 += misses;
         }
+        // Same feedback loop for speculative reuse: observed hit rate
+        // moves the recall-check pricing (DESIGN.md §17), per-request
+        // attribution lands in the records.
+        if let Some(observed) = executor.observed_speculative_hit_rate() {
+            sched.sparsity.observe_speculative_hit_rate(observed);
+        }
+        for (req, hits, fallbacks) in executor.take_speculative_attribution() {
+            let e = spec_attrib.entry(req).or_insert((0, 0));
+            e.0 += hits;
+            e.1 += fallbacks;
+        }
         let now = t0.elapsed().as_secs_f64();
 
         for outcome in outcomes_step {
@@ -536,6 +559,8 @@ pub fn serve<E: StepExecutor>(
     for st in &states {
         let (plan_hits, plan_misses) =
             plan_attrib.get(&st.request.id).copied().unwrap_or((0, 0));
+        let (speculative_hits, speculative_fallbacks) =
+            spec_attrib.get(&st.request.id).copied().unwrap_or((0, 0));
         report.records.push(RequestRecord {
             id: st.request.id,
             prompt_tokens: st.request.prompt.len(),
@@ -550,6 +575,8 @@ pub fn serve<E: StepExecutor>(
             scenario: st.request.scenario.clone(),
             plan_hits,
             plan_misses,
+            speculative_hits,
+            speculative_fallbacks,
             evictions: st.preemptions,
         });
     }
@@ -683,6 +710,7 @@ mod tests {
             stripe_keep: 0.08,
             anchor_tokens: 256,
             plan_hit_rate: 0.5,
+            speculative_hit_rate: 0.0,
             pipelined: false,
             executor: ExecutorKind::Cpu,
             shards: 1,
@@ -708,6 +736,7 @@ mod tests {
                 stripe_keep: 0.08,
                 anchor_tokens: 256,
                 plan_hit_rate: 0.0,
+                speculative_hit_rate: 0.0,
                 pipelined,
                 executor: ExecutorKind::Cpu,
                 shards: 1,

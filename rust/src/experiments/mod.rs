@@ -12,6 +12,7 @@ pub mod fig5_dominance;
 pub mod fig6_tradeoffs;
 pub mod fig7_needle;
 pub mod micro;
+pub mod reuse;
 pub mod serve_bench;
 pub mod tab1_granularity;
 pub mod tab2_longbench;

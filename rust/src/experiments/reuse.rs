@@ -1,0 +1,246 @@
+//! `bench reuse` — the cross-layer commonality sweep (DESIGN.md §17).
+//!
+//! The speculative reuse layer bets that a neighboring layer's plan is a
+//! good predictor of this layer's stripe set (§3.2's cross-input
+//! commonality, read across depth). This driver *measures* that bet
+//! instead of assuming it: it builds an AR(1)-correlated stack of layer
+//! inputs (`Q/K[l] = ρ·Q/K[l-1] + √(1-ρ²)·noise`, mimicking how residual
+//! streams drift slowly with depth) and, for every layer distance `k`,
+//! recall-checks the distance-`k` donor through the *real*
+//! [`Speculator`] machinery — same sampling rule, same floor, same
+//! fallback — recording the recall it scores, the accept rate at the
+//! default floor, and the identification cost actually paid relative to
+//! fresh identification.
+//!
+//! Output: `reports/bench_reuse.json` — one row per distance (distance 0
+//! is the identical-input sanity anchor and must score recall 1.0). CI's
+//! bench job merges the rows into `BENCH_fig2.json` under `reuse_grid`
+//! and gates the curve's shape: recall must not *increase* with
+//! distance, and an accepted check must stay far cheaper than fresh
+//! identification.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use super::common::{bench_report_json, print_table, write_json_report, ExpScale};
+use crate::attention::anchor::AnchorConfig;
+use crate::attention::plan::{PlanCache, PlanKey, Planner};
+use crate::attention::reuse::{
+    ReusePolicy, Speculator, DEFAULT_RECALL_FLOOR, RECALL_SAMPLE_STRIDE,
+};
+use crate::attention::{HeadInput, TileConfig};
+use crate::tensor::Mat;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::workload::qkv::generate;
+use crate::workload::WorkloadProfile;
+
+/// Depth-drift correlation of the synthetic layer stack. High on
+/// purpose: adjacent transformer layers see near-identical residual
+/// streams; the sweep shows how fast the reuse bet decays as the
+/// correlation compounds (`ρ^k` at distance `k`).
+const LAYER_RHO: f32 = 0.92;
+
+/// One aggregated measurement at a fixed layer distance.
+#[derive(Clone, Debug)]
+pub struct DistanceRow {
+    pub distance: usize,
+    pub pairs: usize,
+    pub recall_mean: f64,
+    pub recall_min: f64,
+    /// Fraction of checks clearing [`DEFAULT_RECALL_FLOOR`].
+    pub accept_rate: f64,
+    /// Mean identification cost actually paid (check, plus full
+    /// identification on fallback) over fresh identification's cost.
+    pub ident_paid_frac: f64,
+}
+
+/// `stack[l]` drifts from `stack[l-1]` by an AR(1) step on Q and K (V is
+/// irrelevant to identification and stays at the base workload's).
+fn layer_stack(profile: &WorkloadProfile, n: usize, layers: usize, seed: u64) -> Vec<HeadInput> {
+    let base = generate(profile, n, seed).head;
+    let mut rng = Pcg64::seeded(seed.wrapping_mul(0x9e37_79b9).wrapping_add(7));
+    let mut drift = |prev: &Mat| -> Mat {
+        let scale = (1.0 - LAYER_RHO * LAYER_RHO).sqrt();
+        let mut next = prev.clone();
+        for x in next.data.iter_mut() {
+            *x = LAYER_RHO * *x + scale * rng.normal();
+        }
+        next
+    };
+    let mut stack = vec![base];
+    for _ in 1..layers {
+        let prev = stack.last().unwrap();
+        let next = HeadInput::new(drift(&prev.q), drift(&prev.k), prev.v.clone());
+        stack.push(next);
+    }
+    stack
+}
+
+/// Recall-check the plan of `stack[l]` as a donor for `stack[l + dist]`
+/// through the real [`Speculator`] (donor seeded one layer below the
+/// target so the distance-1 probe finds it regardless of `dist` — the
+/// sweep varies *input* distance, not probe plumbing).
+fn measure_pair(
+    cfg: AnchorConfig,
+    donor: &HeadInput,
+    target: &HeadInput,
+) -> (u64, u64, f64, f64) {
+    let donor_plan = Planner::plan(&cfg, donor);
+    let fresh = Planner::plan(&cfg, target);
+    let spec = Speculator::new(ReusePolicy::cross_layer(), cfg);
+    let cache = PlanCache::new();
+    cache.seed(PlanKey::new(0, 0), Arc::new(donor_plan));
+    let plan = spec.resolve(&cache, PlanKey::new(1, 0), target);
+    let (hits, fallbacks, recall) = spec.take_run_stats();
+    let paid_frac = if fresh.ident_cost.ident_scores > 0 {
+        plan.ident_cost.ident_scores as f64 / fresh.ident_cost.ident_scores as f64
+    } else {
+        1.0
+    };
+    (hits, fallbacks, recall.unwrap_or(1.0), paid_frac)
+}
+
+/// Run the sweep and return the per-distance rows.
+pub fn sweep(scale: ExpScale, seed: u64) -> Vec<DistanceRow> {
+    let (n, layers, seeds, max_dist) = match scale {
+        ExpScale::Quick => (512, 6, 2u64, 3),
+        ExpScale::Full => (1024, 8, 3u64, 4),
+    };
+    let cfg = AnchorConfig {
+        tile: TileConfig::new(16, 16),
+        theta: 6.0,
+        step: 2,
+        init_blocks: 1,
+        use_anchor: true,
+    };
+    let profile = WorkloadProfile::llama_like();
+    let stacks: Vec<Vec<HeadInput>> = (0..seeds)
+        .map(|s| layer_stack(&profile, n, layers, seed.wrapping_add(s)))
+        .collect();
+
+    let mut rows = Vec::new();
+    for dist in 0..=max_dist {
+        let (mut hits, mut checks) = (0u64, 0u64);
+        let mut recall_sum = 0.0;
+        let mut recall_min = f64::INFINITY;
+        let mut paid_sum = 0.0;
+        let mut pairs = 0usize;
+        for stack in &stacks {
+            for l in 0..layers.saturating_sub(dist) {
+                let (h, f, recall, paid) = measure_pair(cfg, &stack[l], &stack[l + dist]);
+                hits += h;
+                checks += h + f;
+                recall_sum += recall;
+                recall_min = recall_min.min(recall);
+                paid_sum += paid;
+                pairs += 1;
+            }
+        }
+        rows.push(DistanceRow {
+            distance: dist,
+            pairs,
+            recall_mean: recall_sum / pairs.max(1) as f64,
+            recall_min: if pairs == 0 { 0.0 } else { recall_min },
+            accept_rate: if checks == 0 { 0.0 } else { hits as f64 / checks as f64 },
+            ident_paid_frac: paid_sum / pairs.max(1) as f64,
+        });
+    }
+    rows
+}
+
+/// Drive the sweep, print the curve and write `reports/bench_reuse.json`.
+pub fn run_with(scale: ExpScale, seed: u64) -> Result<Json> {
+    let rows = sweep(scale, seed);
+    println!(
+        "bench reuse: cross-layer commonality, ρ={LAYER_RHO}, floor {DEFAULT_RECALL_FLOOR}, \
+         sample stride {RECALL_SAMPLE_STRIDE}"
+    );
+    print_table(
+        &["distance", "pairs", "recall_mean", "recall_min", "accept_rate", "ident_paid_frac"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.distance.to_string(),
+                    r.pairs.to_string(),
+                    format!("{:.4}", r.recall_mean),
+                    format!("{:.4}", r.recall_min),
+                    format!("{:.3}", r.accept_rate),
+                    format!("{:.3}", r.ident_paid_frac),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    // The sweep is only evidence if its sanity anchor holds: an
+    // identical-input donor must check out perfectly and cheaply.
+    let d0 = &rows[0];
+    ensure!(
+        d0.recall_mean > 1.0 - 1e-9 && d0.accept_rate > 1.0 - 1e-9,
+        "distance-0 sanity anchor failed: recall {} accept {}",
+        d0.recall_mean,
+        d0.accept_rate
+    );
+    ensure!(
+        d0.ident_paid_frac < 1.0,
+        "an accepted identical donor must be cheaper than fresh identification \
+         (paid fraction {})",
+        d0.ident_paid_frac
+    );
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("distance", Json::num(r.distance as f64)),
+                ("pairs", Json::num(r.pairs as f64)),
+                ("recall_mean", Json::num(r.recall_mean)),
+                ("recall_min", Json::num(r.recall_min)),
+                ("accept_rate", Json::num(r.accept_rate)),
+                ("ident_paid_frac", Json::num(r.ident_paid_frac)),
+            ])
+        })
+        .collect();
+    let rep = bench_report_json(
+        "reuse_bench",
+        "cross-layer",
+        seed,
+        json_rows,
+        vec![
+            ("rho", Json::num(LAYER_RHO as f64)),
+            ("recall_floor", Json::num(DEFAULT_RECALL_FLOOR)),
+            ("sample_stride", Json::num(RECALL_SAMPLE_STRIDE as f64)),
+        ],
+    );
+    let path = write_json_report("bench_reuse.json", &rep)?;
+    println!("wrote {}", path.display());
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The commonality curve behaves: perfect at distance 0, and the
+    /// mean recall never *rises* as the input correlation decays (ties
+    /// allowed — a strongly structured head can stay reusable for a few
+    /// layers, which is the effect the policy banks on).
+    #[test]
+    fn recall_decays_with_layer_distance() {
+        let rows = sweep(ExpScale::Quick, 7);
+        assert_eq!(rows[0].distance, 0);
+        assert!(rows[0].recall_mean > 1.0 - 1e-9, "d0 recall {}", rows[0].recall_mean);
+        assert!(rows[0].accept_rate > 1.0 - 1e-9);
+        assert!(rows[0].ident_paid_frac < 1.0, "check must undercut fresh ident");
+        for w in rows.windows(2) {
+            assert!(
+                w[1].recall_mean <= w[0].recall_mean + 0.05,
+                "recall rose with distance: {} -> {}",
+                w[0].recall_mean,
+                w[1].recall_mean
+            );
+        }
+        // Every pair ran a check (a donor always exists in the sweep).
+        assert!(rows.iter().all(|r| r.pairs > 0));
+    }
+}

@@ -31,6 +31,7 @@ use super::common::{bench_report_json, write_json_report, ExpScale};
 use crate::attention::anchor::AnchorConfig;
 use crate::attention::exec::ExecutorKind;
 use crate::attention::plan::{BatchInput, PlanCache, PlanKey};
+use crate::attention::reuse::ReusePolicy;
 use crate::attention::{Method, TileConfig};
 use crate::coordinator::batcher::EngineBatch;
 use crate::coordinator::engine::{MockEngine, StepExecutor, StepOutcome};
@@ -60,6 +61,11 @@ pub struct ServeBenchOptions {
     /// Committed baseline JSON with `ceilings` / `floors` /
     /// `shared_prefix_beats_needle`; when set, violations exit nonzero.
     pub baseline: Option<String>,
+    /// Speculative plan-reuse policy for the per-request sessions
+    /// (DESIGN.md §17): exact | cross-layer | prefix. With `prefix` on a
+    /// shared-prefix scenario, group-first misses resolve from sibling
+    /// groups' plans at recall 1.0 and pay only the sampled check.
+    pub reuse: ReusePolicy,
 }
 
 /// Fold a 64-bit scenario reuse key into the 32-bit plan-cache head
@@ -87,10 +93,18 @@ struct ScenarioEngine {
     pending_attrib: Vec<(u64, u64, u64)>,
     window_hits: u64,
     window_misses: u64,
+    /// Speculative reuse policy applied to every per-request session.
+    reuse: ReusePolicy,
+    pending_spec: Vec<(u64, u64, u64)>,
+    window_spec_hits: u64,
+    window_spec_fallbacks: u64,
+    /// Identification scores actually paid across the whole run — the
+    /// quantity speculative reuse exists to shrink.
+    ident_scores_paid: f64,
 }
 
 impl ScenarioEngine {
-    fn new(seed: u64, trace: &[ScenarioRequest], model: SparsityModel) -> Self {
+    fn new(seed: u64, trace: &[ScenarioRequest], model: SparsityModel, reuse: ReusePolicy) -> Self {
         let wl = crate::workload::qkv::generate(
             &WorkloadProfile::llama_like(),
             SESSION_N,
@@ -123,6 +137,11 @@ impl ScenarioEngine {
             pending_attrib: Vec::new(),
             window_hits: 0,
             window_misses: 0,
+            reuse,
+            pending_spec: Vec::new(),
+            window_spec_hits: 0,
+            window_spec_fallbacks: 0,
+            ident_scores_paid: 0.0,
         }
     }
 
@@ -133,12 +152,19 @@ impl ScenarioEngine {
             .session()
             .shared_cache(self.cache.clone())
             .keys(vec![key])
+            .reuse(self.reuse)
             .build()
             .expect("anchor session config is infallible");
         let out = session.run_batch(&self.batch).expect("in-memory batch cannot fail");
         self.window_hits += out.cache_hits;
         self.window_misses += out.cache_misses;
         self.pending_attrib.push((req, out.cache_hits, out.cache_misses));
+        self.window_spec_hits += out.speculative_hits;
+        self.window_spec_fallbacks += out.speculative_fallbacks;
+        if out.speculative_hits + out.speculative_fallbacks > 0 {
+            self.pending_spec.push((req, out.speculative_hits, out.speculative_fallbacks));
+        }
+        self.ident_scores_paid += out.ident_cost_paid.ident_scores as f64;
     }
 }
 
@@ -179,6 +205,21 @@ impl StepExecutor for ScenarioEngine {
     fn take_plan_attribution(&mut self) -> Vec<(u64, u64, u64)> {
         std::mem::take(&mut self.pending_attrib)
     }
+
+    fn observed_speculative_hit_rate(&mut self) -> Option<f64> {
+        let total = self.window_spec_hits + self.window_spec_fallbacks;
+        if total == 0 {
+            return None;
+        }
+        let rate = self.window_spec_hits as f64 / total as f64;
+        self.window_spec_hits = 0;
+        self.window_spec_fallbacks = 0;
+        Some(rate)
+    }
+
+    fn take_speculative_attribution(&mut self) -> Vec<(u64, u64, u64)> {
+        std::mem::take(&mut self.pending_spec)
+    }
 }
 
 /// Run the harness, print the serving summary, write
@@ -199,9 +240,11 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &ServeBenchOptions) -> Result<
         opts.scenario
     );
     println!(
-        "bench serve: scenario '{}', {} requests, seed {seed}, stream digest {digest:016x}",
+        "bench serve: scenario '{}', {} requests, seed {seed}, reuse '{}', \
+         stream digest {digest:016x}",
         opts.scenario,
-        trace.len()
+        trace.len(),
+        opts.reuse.name()
     );
 
     // Arrival times collapse to zero (stable sort keeps scenario arrival
@@ -221,6 +264,7 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &ServeBenchOptions) -> Result<
         stripe_keep: 0.1,
         anchor_tokens: 256,
         plan_hit_rate: 0.0,
+        speculative_hit_rate: 0.0,
         pipelined: false,
         executor: ExecutorKind::Cpu,
         shards: 1,
@@ -234,9 +278,10 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &ServeBenchOptions) -> Result<
     server.scheduler.preempt_prefill = true;
     server.pool_pages = 96;
 
-    let mut engine = ScenarioEngine::new(seed, &trace, model);
+    let mut engine = ScenarioEngine::new(seed, &trace, model, opts.reuse);
     let report = serve(&server, submissions, &mut engine, |_, _| {})?;
     report.print_summary();
+    let ident_scores_paid = engine.ident_scores_paid;
 
     let threads = crate::util::threadpool::num_threads().max(1);
     let completed = report.outcome_count(RequestOutcome::Completed);
@@ -254,6 +299,9 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &ServeBenchOptions) -> Result<
                 ("plan_hits", Json::num(s.plan_hits as f64)),
                 ("plan_misses", Json::num(s.plan_misses as f64)),
                 ("plan_hit_rate", Json::num(s.plan_hit_rate())),
+                ("speculative_hits", Json::num(s.speculative_hits as f64)),
+                ("speculative_fallbacks", Json::num(s.speculative_fallbacks as f64)),
+                ("speculative_hit_rate", Json::num(s.speculative_hit_rate())),
                 ("evictions", Json::num(s.evictions as f64)),
             ])
         })
@@ -275,6 +323,18 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &ServeBenchOptions) -> Result<
             ("goodput_per_core", Json::num(goodput_per_core)),
             ("kv_evictions", Json::num(report.kv_evictions as f64)),
             ("peak_queue_depth", Json::num(report.peak_queue_depth as f64)),
+            ("reuse", Json::str(opts.reuse.name())),
+            ("ident_cost_paid", Json::num(ident_scores_paid)),
+            (
+                "speculative_hits",
+                Json::num(report.records.iter().map(|r| r.speculative_hits).sum::<u64>() as f64),
+            ),
+            (
+                "speculative_fallbacks",
+                Json::num(
+                    report.records.iter().map(|r| r.speculative_fallbacks).sum::<u64>() as f64,
+                ),
+            ),
             ("stream_digest", Json::str(&digest_hex)),
             ("gate_tolerance", Json::num(GATE_TOLERANCE)),
             ("baseline", opts.baseline.as_deref().map(Json::str).unwrap_or(Json::Null)),
@@ -284,6 +344,13 @@ pub fn run_with(scale: ExpScale, seed: u64, opts: &ServeBenchOptions) -> Result<
     println!("wrote {}", path.display());
 
     if let Some(bp) = &opts.baseline {
+        // A gate over zero completed requests would compare empty-slice
+        // percentile zeros against real ceilings and pass every one.
+        ensure!(
+            completed > 0,
+            "serve SLO gate vs '{bp}': zero completed requests — nothing \
+             to gate, refusing to pass vacuously"
+        );
         let text = std::fs::read_to_string(bp)
             .with_context(|| format!("reading baseline '{bp}'"))?;
         let baseline =
@@ -313,12 +380,32 @@ fn metric(rep: &Json, key: &str) -> Option<f64> {
     rep.get(key).as_f64()
 }
 
+/// Percentile metrics (`p50_…`, `p99_…`) come from slices that return
+/// 0.0 when empty: a zero there is the empty-slice sentinel, not a
+/// measurement, and must never pass a ceiling vacuously.
+fn is_percentile_key(key: &str) -> bool {
+    let field = key.rsplit(':').next().unwrap_or(key);
+    let mut chars = field.chars();
+    chars.next() == Some('p') && chars.next().is_some_and(|c| c.is_ascii_digit())
+}
+
 /// Apply a baseline's SLO gate to a run report. `ceilings` are maxima
 /// (latency-like, slack `1 + tol`), `floors` are minima (rate-like,
 /// slack `1 - tol`), and `shared_prefix_beats_needle: true` demands the
 /// deterministic reuse ordering with no slack at all. Every gated key
-/// must resolve in the report — a renamed metric fails loudly.
+/// must resolve in the report — a renamed metric fails loudly, and so do
+/// the vacuous-pass shapes: a run that completed zero requests, a
+/// non-finite gated value, or a ceiling-gated percentile sitting at the
+/// empty-slice 0.0.
 pub fn check_slo(baseline: &Json, rep: &Json, tol: f64) -> Result<Vec<String>> {
+    if let Some(completed) = rep.get("completed").as_f64() {
+        ensure!(
+            completed > 0.0,
+            "SLO gate refused: the run completed zero requests, so every \
+             latency percentile is the empty-slice 0.0 and any ceiling \
+             would pass vacuously"
+        );
+    }
     let mut lines = Vec::new();
     let mut failures = Vec::new();
     let mut bound = |keys: &Json, ceiling: bool| -> Result<()> {
@@ -329,8 +416,23 @@ pub fn check_slo(baseline: &Json, rep: &Json, tol: f64) -> Result<Vec<String>> {
             let bound_v = bound_v
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("baseline bound '{key}' is not a number"))?;
+            ensure!(
+                bound_v.is_finite(),
+                "baseline bound '{key}' is non-finite ({bound_v})"
+            );
             let cur = metric(rep, key)
                 .ok_or_else(|| anyhow::anyhow!("gated metric '{key}' missing from this run"))?;
+            ensure!(
+                cur.is_finite(),
+                "gated metric '{key}' is non-finite ({cur}) — refusing a \
+                 vacuous comparison"
+            );
+            ensure!(
+                !(ceiling && cur == 0.0 && is_percentile_key(key)),
+                "ceiling-gated percentile '{key}' is exactly 0.0 — the \
+                 empty-slice sentinel, not a measurement; the run recorded \
+                 nothing to gate"
+            );
             let (ok, rel) = if ceiling {
                 (cur <= bound_v * (1.0 + tol), cur / bound_v.max(1e-12))
             } else {
@@ -439,6 +541,45 @@ mod tests {
             m.insert("rows".into(), Json::Arr(vec![]));
         }
         assert!(check_slo(&order, &no_rows, GATE_TOLERANCE).is_err());
+    }
+
+    #[test]
+    fn gate_fails_loudly_on_vacuous_runs() {
+        let baseline = Json::parse(r#"{"ceilings": {"p99_ttft_s": 0.45}}"#).unwrap();
+        // Zero completed requests: the gate refuses before comparing.
+        let mut vacuous = rep();
+        if let Json::Obj(m) = &mut vacuous {
+            m.insert("completed".into(), Json::num(0.0));
+        }
+        let err = check_slo(&baseline, &vacuous, GATE_TOLERANCE).unwrap_err();
+        assert!(err.to_string().contains("zero requests"), "{err}");
+        // A ceiling-gated percentile at the empty-slice 0.0 is an error,
+        // never an OK line (0.0 <= any positive ceiling would pass).
+        let mut empty_pct = rep();
+        if let Json::Obj(m) = &mut empty_pct {
+            m.insert("completed".into(), Json::num(3.0));
+            m.insert("p99_ttft_s".into(), Json::num(0.0));
+        }
+        let err = check_slo(&baseline, &empty_pct, GATE_TOLERANCE).unwrap_err();
+        assert!(err.to_string().contains("empty-slice"), "{err}");
+        // A non-finite gated value is an error for floors too (NaN/inf
+        // comparisons would otherwise fail confusingly or pass silently).
+        let floors = Json::parse(r#"{"floors": {"goodput_per_core": 1.0}}"#).unwrap();
+        let mut nan = rep();
+        if let Json::Obj(m) = &mut nan {
+            m.insert("goodput_per_core".into(), Json::num(f64::NAN));
+        }
+        let err = check_slo(&floors, &nan, GATE_TOLERANCE).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        // A genuinely-zero non-percentile ceiling (e.g. eviction counts)
+        // still gates normally — the sentinel check is percentile-only.
+        let evict = Json::parse(r#"{"ceilings": {"kv_evictions": 5.0}}"#).unwrap();
+        let mut quiet = rep();
+        if let Json::Obj(m) = &mut quiet {
+            m.insert("kv_evictions".into(), Json::num(0.0));
+        }
+        let lines = check_slo(&evict, &quiet, GATE_TOLERANCE).unwrap();
+        assert!(lines.iter().any(|l| l.starts_with("OK") && l.contains("kv_evictions")));
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //!                                 threads|process picks the shard-worker
 //!                                 transport, DESIGN.md §14;
 //!                                 --max-pending N caps admission;
+//!                                 --reuse exact|cross-layer|prefix picks
+//!                                 the speculative plan-reuse policy
+//!                                 (--recall-floor F tightens its recall
+//!                                 gate), DESIGN.md §17;
 //!                                 --calibration F loads machine-measured
 //!                                 cost constants persisted by `calibrate`,
 //!                                 DESIGN.md §13)
@@ -45,8 +49,14 @@
 //!                                 per-scenario plan hit rates into
 //!                                 reports/bench_serve.json; --requests N
 //!                                 sizes the trace, --baseline F gates p99
-//!                                 TTFT and plan-hit-rate floors,
-//!                                 DESIGN.md §16)
+//!                                 TTFT and plan-hit-rate floors, --reuse
+//!                                 exact|cross-layer|prefix turns on
+//!                                 speculative plan reuse in the per-request
+//!                                 sessions, DESIGN.md §16/§17;
+//!                                 plus reuse — the cross-layer commonality
+//!                                 sweep, standalone: layer distance vs
+//!                                 recall-check verdicts into
+//!                                 reports/bench_reuse.json, DESIGN.md §17)
 //!                                 fig2 extras: --pipeline (overlap ident with
 //!                                 execution), --iters N, --lengths a,b,c,
 //!                                 --executor cpu|pjrt|both (backend grid),
@@ -72,6 +82,7 @@
 //!   gen-trace   [--rate R]        print a synthetic serving trace
 
 use anchor_attention::attention::exec::ExecutorKind;
+use anchor_attention::attention::reuse::ReusePolicy;
 use anchor_attention::attention::session::SessionTransport;
 use anchor_attention::attention::Method;
 use anchor_attention::config::AppConfig;
@@ -99,7 +110,8 @@ fn main() -> anyhow::Result<()> {
                 "usage: anchor-attn <selftest|serve|worker|calibrate|bench|dominance|store|tpu-estimate|gen-trace> [flags]"
             );
             eprintln!(
-                "  bench experiments: fig2 tab1 fig4 fig5 fig6 fig7 tab2 tab3 tab4 all micro serve"
+                "  bench experiments: fig2 tab1 fig4 fig5 fig6 fig7 tab2 tab3 tab4 all micro \
+                 serve reuse"
             );
             eprintln!("  store ops: inspect compact migrate (--manifest F [--json])");
             Ok(())
@@ -141,6 +153,29 @@ fn selftest(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse `--reuse` (plus the optional `--recall-floor` tightener) into a
+/// speculative plan-reuse policy; `None` when the flag is absent.
+fn reuse_flag(args: &Args) -> anyhow::Result<Option<ReusePolicy>> {
+    let Some(s) = args.get("reuse") else {
+        anyhow::ensure!(
+            args.get("recall-floor").is_none(),
+            "--recall-floor requires --reuse cross-layer|prefix"
+        );
+        return Ok(None);
+    };
+    let mut policy = ReusePolicy::parse(s)?;
+    if args.get("recall-floor").is_some() {
+        anyhow::ensure!(!policy.is_exact(), "--recall-floor has no effect with --reuse exact");
+        let floor = args.f64_or("recall-floor", 0.0)?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&floor),
+            "--recall-floor must be in [0, 1] (got {floor})"
+        );
+        policy = policy.with_recall_floor(floor);
+    }
+    Ok(Some(policy))
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut cfg = load_config(args)?;
     // Every serve-time flag funnels through one typed override struct —
@@ -176,6 +211,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             Some(_) => Some(args.usize_or("max-pending", 0)?),
             None => None,
         },
+        reuse: reuse_flag(args)?,
     };
     overrides.apply_trace(&mut cfg.trace);
     cfg.server.apply_overrides(&overrides)?;
@@ -309,6 +345,7 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
             stripe_keep: 0.1,
             anchor_tokens: 256,
             plan_hit_rate: 0.5,
+            speculative_hit_rate: 0.0,
             pipelined: false,
             executor: ExecutorKind::default(),
             shards: 1,
@@ -457,7 +494,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     };
     // serve-only knobs: `--scenario NAME` picks the workload scenario
     // (long-doc|rag|shared-prefix|needle|mixed), `--requests N` sizes the
-    // trace, `--baseline F` gates p99 TTFT / plan-hit-rate floors.
+    // trace, `--baseline F` gates p99 TTFT / plan-hit-rate floors,
+    // `--reuse exact|cross-layer|prefix` turns on speculative plan reuse
+    // in the per-request sessions (DESIGN.md §17).
     let serve_opts = experiments::serve_bench::ServeBenchOptions {
         scenario: args.get("scenario").unwrap_or("mixed").to_string(),
         requests: match args.get("requests") {
@@ -465,6 +504,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             None => None,
         },
         baseline: args.get("baseline").map(|s| s.to_string()),
+        reuse: reuse_flag(args)?.unwrap_or(ReusePolicy::Exact),
     };
     let run_one = |name: &str| -> anyhow::Result<()> {
         match name {
@@ -483,6 +523,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             // Standalone: the serving harness measures SLO metrics over
             // the coordinator, not a paper figure, so `all` skips it too.
             "serve" => drop(experiments::serve_bench::run_with(scale, seed, &serve_opts)?),
+            // Standalone: the cross-layer commonality sweep (layer
+            // distance vs speculative-recall verdicts, DESIGN.md §17).
+            "reuse" => drop(experiments::reuse::run_with(scale, seed)?),
             other => eprintln!("unknown experiment '{other}'"),
         }
         Ok(())

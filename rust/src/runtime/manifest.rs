@@ -796,6 +796,51 @@ impl PlanStore {
         out
     }
 
+    /// Donor plans for speculative prefix reuse (DESIGN.md §17): plans
+    /// filed under `model` at a *shorter* length than `n` whose index
+    /// summary matches the session's `(method, tile, step, d)`. Same
+    /// index-only filter as [`Self::plans_for_compatible`], but widened
+    /// from `k.n == n` to `k.n < n` — the speculator's recall check, not
+    /// this lookup, decides whether a shorter plan's stripes still hold.
+    /// Deterministic order: `(layer, head_group, n)`, so for each key the
+    /// longest (closest) prefix comes last and wins a last-write table.
+    pub fn plans_for_prefix(
+        &mut self,
+        model: &str,
+        n: usize,
+        method: &str,
+        tile: TileConfig,
+        step: usize,
+        d: usize,
+    ) -> Vec<(PlanKey, Arc<SparsePlan>)> {
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut keys: Vec<PlanStoreKey> = self
+            .entries
+            .iter()
+            .filter(|(k, e)| {
+                k.model == model
+                    && k.n < n
+                    && e.d == d
+                    && e.summary.method == method
+                    && e.summary.tile == tile
+                    && e.summary.step == step
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        keys.sort_by_key(|k| (k.layer, k.head_group, k.n));
+        let mut out: Vec<(PlanKey, Arc<SparsePlan>)> = Vec::new();
+        for k in keys {
+            if let Some((_, plan)) = self.materialize(&k) {
+                if let Some(e) = self.entries.get_mut(&k) {
+                    e.touched = stamp;
+                }
+                out.push((PlanKey::new(k.layer, k.head_group), plan));
+            }
+        }
+        out
+    }
+
     /// Entries filed under `model` (any layer/head_group/length).
     pub fn len_for_model(&self, model: &str) -> usize {
         self.entries.keys().filter(|k| k.model == model).count()

@@ -18,12 +18,19 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile with linear interpolation, `q` in [0, 100].
+///
+/// Non-finite samples (NaN, ±inf) are skipped: shed or failed requests
+/// carry NaN latencies, and a `pub` helper must not panic in the sort
+/// (or interpolate against an infinity) because one caller forgot to
+/// pre-filter. Returns 0.0 when no finite sample remains — callers that
+/// gate on the result must treat that as "no data", not "fast"
+/// (see `serve_bench::check_slo`).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+    let mut sorted: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if sorted.is_empty() {
         return 0.0;
     }
-    let mut sorted: Vec<f64> = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let rank = (q / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -69,6 +76,12 @@ impl Histogram {
     }
 
     pub fn record(&mut self, x: f64) {
+        // A NaN would land in the overflow bucket AND poison `sum` (and
+        // thus `mean`) for the histogram's whole lifetime; ±inf poisons
+        // `sum` the same way. Ignore non-finite samples entirely.
+        if !x.is_finite() {
+            return;
+        }
         let idx = match self.edges.iter().position(|&e| x < e) {
             Some(0) => 0,                       // underflow
             Some(i) => i,                       // bucket i-1 maps to counts[i]
@@ -181,6 +194,59 @@ mod tests {
         h.record(0.01);
         h.record(1e9);
         assert_eq!(h.count(), 2);
+    }
+
+    /// `percentile` is `pub` and reachable with unfiltered data: NaN must
+    /// not panic the sort, and non-finite samples must not shift ranks or
+    /// leak into interpolation.
+    #[test]
+    fn percentile_skips_non_finite_without_panicking() {
+        let clean = [10.0, 20.0, 30.0, 40.0];
+        let dirty = [
+            f64::NAN,
+            30.0,
+            f64::INFINITY,
+            10.0,
+            f64::NEG_INFINITY,
+            40.0,
+            f64::NAN,
+            20.0,
+        ];
+        for q in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&dirty, q), percentile(&clean, q), "q={q}");
+        }
+        // All-non-finite degrades to the empty-input sentinel.
+        assert_eq!(percentile(&[f64::NAN, f64::INFINITY], 50.0), 0.0);
+    }
+
+    /// The audit companions: `mean`/`std_dev`/`linreg` never panic on
+    /// non-finite input (NaN propagates arithmetically, which gated
+    /// callers detect via `is_finite`), and min/max skip NaN by `f64`
+    /// fold semantics.
+    #[test]
+    fn moments_and_linreg_tolerate_non_finite() {
+        let dirty = [1.0, f64::NAN, 3.0];
+        assert!(mean(&dirty).is_nan());
+        assert!(std_dev(&dirty).is_nan());
+        let (a, b) = linreg(&[0.0, 1.0, 2.0], &[1.0, f64::NAN, 3.0]);
+        assert!(a.is_nan() && b.is_nan());
+        assert_eq!(min(&dirty), 1.0);
+        assert_eq!(max(&dirty), 3.0);
+    }
+
+    /// Non-finite samples never poison a histogram's running sum or land
+    /// in a bucket.
+    #[test]
+    fn histogram_ignores_non_finite_samples() {
+        let mut h = Histogram::exponential(1.0, 100.0, 8);
+        h.record(10.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
+        h.record(10.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.mean(), 10.0);
+        assert!(h.quantile(0.99).is_finite());
     }
 
     #[test]

@@ -146,6 +146,7 @@ fn serve_loop_feeds_live_hit_rate_into_the_scheduler_ewma() {
         stripe_keep: 0.1,
         anchor_tokens: 256,
         plan_hit_rate: 0.0,
+        speculative_hit_rate: 0.0,
         pipelined: false,
         executor: ExecutorKind::Cpu,
         shards: 2,
@@ -204,6 +205,7 @@ fn anchor_scheduler_no_worse_than_dense() {
         stripe_keep: 0.08,
         anchor_tokens: 256,
         plan_hit_rate: 0.5,
+        speculative_hit_rate: 0.0,
         pipelined: false,
         executor: ExecutorKind::Cpu,
         shards: 1,
@@ -213,6 +215,7 @@ fn anchor_scheduler_no_worse_than_dense() {
         stripe_keep: 0.08,
         anchor_tokens: 256,
         plan_hit_rate: 0.5,
+        speculative_hit_rate: 0.0,
         pipelined: true,
         executor: ExecutorKind::Cpu,
         shards: 1,

@@ -361,6 +361,7 @@ fn poisoned_planner_worker_errors_instead_of_deadlocking() {
             &PanicPlanner,
             &batch,
             None,
+            None,
             &pipe,
             &CpuTileExecutor::default(),
         )

@@ -1,0 +1,455 @@
+//! Speculative plan reuse wall (DESIGN.md §17):
+//!
+//! * **Exact is inert** — a session built with `reuse(Exact)` is
+//!   bitwise-identical to one built without the knob, for all six
+//!   planners × cpu/pjrt × unsharded/sharded: outputs, plans, costs and
+//!   hit accounting. The reuse layer must be invisible until asked for.
+//! * **Speculation never changes output** — an accepted cross-layer or
+//!   prefix donor yields outputs bitwise-equal to fresh identification at
+//!   strictly lower paid identification cost; a *wrong* donor always
+//!   fails the recall check and falls back to coordinates identical to
+//!   fresh identification (speed can degrade, correctness cannot).
+//! * **Property form** — randomized shapes/params via the in-tree
+//!   proptest harness, same generator style as `prop_shard_parity.rs`.
+
+use std::sync::Arc;
+
+use anchor_attention::attention::anchor::AnchorConfig;
+use anchor_attention::attention::baselines::block_topk::BlockTopKConfig;
+use anchor_attention::attention::baselines::flexprefill::FlexPrefillConfig;
+use anchor_attention::attention::baselines::streaming::StreamingConfig;
+use anchor_attention::attention::baselines::vertical_slash::VerticalSlashConfig;
+use anchor_attention::attention::exec::ExecutorKind;
+use anchor_attention::attention::plan::{BatchInput, PlanCache, PlanKey};
+use anchor_attention::attention::reuse::ReusePolicy;
+use anchor_attention::attention::session::SessionOutput;
+use anchor_attention::attention::{HeadInput, Method, TileConfig};
+use anchor_attention::tensor::Mat;
+use anchor_attention::util::proptest::{check, choose, ensure, Config};
+use anchor_attention::util::rng::Pcg64;
+
+fn rand_head(rng: &mut Pcg64, n: usize, d: usize) -> HeadInput {
+    HeadInput::new(
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+        Mat::from_fn(n, d, |_, _| rng.normal()),
+    )
+}
+
+fn anchor_cfg() -> AnchorConfig {
+    AnchorConfig {
+        tile: TileConfig::new(16, 16),
+        theta: 3.0,
+        step: 2,
+        init_blocks: 1,
+        use_anchor: true,
+    }
+}
+
+fn method_for(idx: usize) -> Method {
+    let tile = TileConfig::new(16, 16);
+    match idx {
+        0 => Method::Full(tile),
+        1 => Method::Anchor(anchor_cfg()),
+        2 => Method::Streaming(StreamingConfig { tile, global_tokens: 16, local_tokens: 32 }),
+        3 => Method::VerticalSlash(VerticalSlashConfig {
+            tile,
+            vertical_tokens: 8,
+            slash_tokens: 8,
+            last_q: 16,
+        }),
+        4 => Method::FlexPrefill(FlexPrefillConfig { tile, gamma: 0.85, min_budget_tokens: 16 }),
+        _ => Method::BlockTopK(BlockTopKConfig { tile, k: 3, force_sink_local: true }),
+    }
+}
+
+fn assert_bitwise(tag: &str, a: &SessionOutput, b: &SessionOutput) {
+    assert_eq!(a.outputs.len(), b.outputs.len(), "{tag}: head count");
+    for (h, (x, y)) in a.outputs.iter().zip(&b.outputs).enumerate() {
+        assert_eq!(x.out.data, y.out.data, "{tag} head {h}: output not bitwise-equal");
+        assert_eq!(x.cost, y.cost, "{tag} head {h}: cost differs");
+    }
+    for (h, (p, q)) in a.plans.iter().zip(&b.plans).enumerate() {
+        assert_eq!(**p, **q, "{tag} head {h}: plan differs");
+    }
+    assert_eq!(
+        (a.cache_hits, a.cache_misses),
+        (b.cache_hits, b.cache_misses),
+        "{tag}: hit accounting differs"
+    );
+    assert_eq!(a.ident_cost_paid, b.ident_cost_paid, "{tag}: ident attribution differs");
+}
+
+/// `reuse(Exact)` is the do-nothing policy: bitwise-identical sessions
+/// for all six planners, both executors, unsharded and sharded, cold and
+/// warm — and it reports zero speculative activity.
+#[test]
+fn exact_reuse_is_bitwise_inert_for_all_six_methods() {
+    let mut rng = Pcg64::seeded(0x2E05E);
+    let heads: Vec<HeadInput> = (0..4).map(|_| rand_head(&mut rng, 96, 8)).collect();
+    let batch = BatchInput::new(heads);
+    let keys = vec![
+        PlanKey::new(0, 0),
+        PlanKey::new(0, 0),
+        PlanKey::new(0, 1),
+        PlanKey::new(1, 0),
+    ];
+    for idx in 0..6 {
+        let m = method_for(idx);
+        for kind in [ExecutorKind::Cpu, ExecutorKind::Pjrt] {
+            let tag = format!("{} ({})", m.name(), kind.name());
+            let mut plain = m.session().keys(keys.clone()).executor(kind).build().unwrap();
+            let mut exact = m
+                .session()
+                .keys(keys.clone())
+                .executor(kind)
+                .reuse(ReusePolicy::Exact)
+                .build()
+                .unwrap();
+            for round in 0..2 {
+                let a = plain.run_batch(&batch).unwrap();
+                let b = exact.run_batch(&batch).unwrap();
+                assert_bitwise(&format!("{tag} round {round}"), &a, &b);
+                assert_eq!(
+                    (b.speculative_hits, b.speculative_fallbacks, b.speculative_recall),
+                    (0, 0, None),
+                    "{tag}: exact must never speculate"
+                );
+            }
+            // Sharded: the same knob through the sharded builder.
+            let mut sh = m
+                .sharded_session(2)
+                .keys(keys.clone())
+                .executor(kind)
+                .reuse(ReusePolicy::Exact)
+                .build()
+                .unwrap();
+            let merged = sh.run_batch(&batch).unwrap();
+            let base = m
+                .session()
+                .keys(keys.clone())
+                .executor(kind)
+                .build()
+                .unwrap()
+                .run_batch(&batch)
+                .unwrap();
+            assert_bitwise(&format!("{tag} sharded"), &base, &merged);
+        }
+    }
+}
+
+/// Non-exact reuse is anchor-only: every other planner rejects it at
+/// build time (both builders), never silently ignoring the knob.
+#[test]
+fn non_anchor_methods_reject_speculative_reuse_at_build() {
+    for idx in [0usize, 2, 3, 4, 5] {
+        let m = method_for(idx);
+        for policy in [ReusePolicy::cross_layer(), ReusePolicy::prefix()] {
+            let err = m.session().reuse(policy).build().map(|_| ()).unwrap_err().to_string();
+            assert!(err.contains("anchor"), "{}: {err}", m.name());
+            let err =
+                m.sharded_session(2).reuse(policy).build().map(|_| ()).unwrap_err().to_string();
+            assert!(err.contains("anchor"), "{} sharded: {err}", m.name());
+        }
+    }
+}
+
+/// A cross-layer donor from an identical input is accepted at recall 1.0
+/// and serves bitwise-identical output at strictly lower paid
+/// identification cost; the same holds through the sharded session
+/// (thread workers speculating against the shared cache).
+#[test]
+fn accepted_cross_layer_donor_is_bitwise_equal_and_cheaper() {
+    let m = Method::Anchor(anchor_cfg());
+    let mut rng = Pcg64::seeded(0xC105);
+    let head = rand_head(&mut rng, 256, 8);
+    let batch = BatchInput::new(vec![head.clone()]);
+    let keys = vec![PlanKey::new(1, 0)];
+    let donor = Arc::new(m.plan(&head));
+
+    let exact = m
+        .session()
+        .keys(keys.clone())
+        .build()
+        .unwrap()
+        .run_batch(&batch)
+        .unwrap();
+
+    let seeded = PlanCache::new();
+    seeded.seed(PlanKey::new(0, 0), donor.clone());
+    let spec = m
+        .session()
+        .keys(keys.clone())
+        .cache(seeded)
+        .reuse(ReusePolicy::cross_layer())
+        .build()
+        .unwrap()
+        .run_batch(&batch)
+        .unwrap();
+
+    assert_eq!((spec.speculative_hits, spec.speculative_fallbacks), (1, 0));
+    assert_eq!(spec.speculative_recall, Some(1.0));
+    assert_eq!(spec.outputs[0].out.data, exact.outputs[0].out.data);
+    assert_eq!(spec.outputs[0].cost, exact.outputs[0].cost);
+    assert_eq!(spec.plans[0].groups, exact.plans[0].groups);
+    assert!(
+        spec.ident_cost_paid.ident_scores < exact.ident_cost_paid.ident_scores,
+        "speculative {} !< fresh {}",
+        spec.ident_cost_paid.ident_scores,
+        exact.ident_cost_paid.ident_scores
+    );
+
+    // Sharded form: shared cache pre-seeded with the donor, merged
+    // output bitwise-equal and speculative accounting surfaced.
+    let shared = Arc::new(PlanCache::new());
+    shared.seed(PlanKey::new(0, 0), donor);
+    let merged = m
+        .sharded_session(2)
+        .keys(keys)
+        .shared_cache(shared)
+        .reuse(ReusePolicy::cross_layer())
+        .build()
+        .unwrap()
+        .run_batch(&batch)
+        .unwrap();
+    assert_eq!((merged.speculative_hits, merged.speculative_fallbacks), (1, 0));
+    assert_eq!(merged.speculative_recall, Some(1.0));
+    assert_eq!(merged.outputs[0].out.data, exact.outputs[0].out.data);
+    assert!(merged.ident_cost_paid.ident_scores < exact.ident_cost_paid.ident_scores);
+}
+
+/// A wrong donor always fails the recall check: output and plan
+/// coordinates are bitwise-identical to the exact session's —
+/// speculation degraded speed, not correctness. Deterministic by
+/// construction: `theta = ∞` makes fresh identification select *every*
+/// candidate column, so an empty-stripe donor scores recall exactly 0.
+#[test]
+fn wrong_donor_always_falls_back_without_changing_output() {
+    let cfg = AnchorConfig { theta: f32::INFINITY, ..anchor_cfg() };
+    let m = Method::Anchor(cfg);
+    let mut rng = Pcg64::seeded(0xBAD0);
+    let head = rand_head(&mut rng, 256, 8);
+    let batch = BatchInput::new(vec![head.clone()]);
+    let keys = vec![PlanKey::new(1, 0)];
+
+    let fresh = m.plan(&head);
+    assert!(fresh.groups.iter().any(|g| !g.stripes.is_empty()), "needs a non-trivial plan");
+    let mut wrong = fresh.clone();
+    for grp in wrong.groups.iter_mut() {
+        grp.stripes.clear();
+    }
+
+    let exact = m
+        .session()
+        .keys(keys.clone())
+        .build()
+        .unwrap()
+        .run_batch(&batch)
+        .unwrap();
+
+    let seeded = PlanCache::new();
+    seeded.seed(PlanKey::new(0, 0), Arc::new(wrong));
+    let spec = m
+        .session()
+        .keys(keys)
+        .cache(seeded)
+        .reuse(ReusePolicy::cross_layer().with_recall_floor(0.99))
+        .build()
+        .unwrap()
+        .run_batch(&batch)
+        .unwrap();
+
+    assert_eq!((spec.speculative_hits, spec.speculative_fallbacks), (0, 1));
+    assert_eq!(spec.speculative_recall, Some(0.0));
+    assert_eq!(spec.outputs[0].out.data, exact.outputs[0].out.data);
+    assert_eq!(spec.plans[0].groups, exact.plans[0].groups);
+    // The wasted check is charged: fallback pays more than plain fresh.
+    assert!(
+        spec.ident_cost_paid.ident_scores > exact.ident_cost_paid.ident_scores,
+        "fallback {} !> fresh {}",
+        spec.ident_cost_paid.ident_scores,
+        exact.ident_cost_paid.ident_scores
+    );
+}
+
+/// A donor of the wrong length is structurally invisible to cross-layer
+/// lookup: a plain miss with zero speculative activity, output unchanged.
+#[test]
+fn wrong_length_donor_is_a_plain_miss() {
+    let m = Method::Anchor(anchor_cfg());
+    let mut rng = Pcg64::seeded(0x1E4);
+    let short = rand_head(&mut rng, 128, 8);
+    let head = rand_head(&mut rng, 256, 8);
+    let batch = BatchInput::new(vec![head.clone()]);
+
+    let exact = m
+        .session()
+        .keys(vec![PlanKey::new(1, 0)])
+        .build()
+        .unwrap()
+        .run_batch(&batch)
+        .unwrap();
+
+    let seeded = PlanCache::new();
+    seeded.seed(PlanKey::new(0, 0), Arc::new(m.plan(&short)));
+    let spec = m
+        .session()
+        .keys(vec![PlanKey::new(1, 0)])
+        .cache(seeded)
+        .reuse(ReusePolicy::cross_layer())
+        .build()
+        .unwrap()
+        .run_batch(&batch)
+        .unwrap();
+    assert_eq!((spec.speculative_hits, spec.speculative_fallbacks), (0, 0));
+    assert_eq!(spec.speculative_recall, None);
+    assert_bitwise("wrong-length donor", &exact, &spec);
+}
+
+/// Prefix reuse across a length change in a multi-head GQA batch: the
+/// grown batch reports speculative hits, pays less identification than a
+/// cold exact session at the new length, and stays bitwise-equal to it.
+#[test]
+fn prefix_reuse_extends_a_grown_batch_bitwise() {
+    let m = Method::Anchor(anchor_cfg());
+    let mut rng = Pcg64::seeded(0x9EF1);
+    let n_full = 256;
+    let n_prefix = 128;
+    let shared = rand_head(&mut rng, n_full, 8);
+    let mut other_v = shared.clone();
+    for x in other_v.v.data.iter_mut() {
+        *x += 0.5;
+    }
+    // Two heads, one key (GQA group): same Q/K, different V.
+    let full_batch = BatchInput::new(vec![shared.clone(), other_v.clone()]);
+    let prefix_of = |h: &HeadInput| {
+        HeadInput::new(
+            h.q.rows_mat(0, n_prefix),
+            h.k.rows_mat(0, n_prefix),
+            h.v.rows_mat(0, n_prefix),
+        )
+    };
+    let prefix_batch = BatchInput::new(vec![prefix_of(&shared), prefix_of(&other_v)]);
+    let keys = vec![PlanKey::new(0, 0), PlanKey::new(0, 0)];
+
+    let mut session = m
+        .session()
+        .keys(keys.clone())
+        .reuse(ReusePolicy::prefix())
+        .build()
+        .unwrap();
+    let short = session.run_batch(&prefix_batch).unwrap();
+    assert_eq!(short.speculative_hits, 0, "no donors before the length change");
+    let grown = session.run_batch(&full_batch).unwrap();
+    assert_eq!((grown.cache_hits, grown.cache_misses), (1, 1));
+    assert_eq!((grown.speculative_hits, grown.speculative_fallbacks), (1, 0));
+
+    let exact = m
+        .session()
+        .keys(keys)
+        .build()
+        .unwrap()
+        .run_batch(&full_batch)
+        .unwrap();
+    for (h, (a, b)) in grown.outputs.iter().zip(&exact.outputs).enumerate() {
+        assert_eq!(a.out.data, b.out.data, "head {h}");
+    }
+    assert!(
+        grown.ident_cost_paid.ident_scores < exact.ident_cost_paid.ident_scores,
+        "prefix extension {} !< cold {}",
+        grown.ident_cost_paid.ident_scores,
+        exact.ident_cost_paid.ident_scores
+    );
+}
+
+/// Property form: over random shapes and anchor params, (1) exact reuse
+/// is bitwise-inert, and (2) an identical-input cross-layer donor either
+/// hits at recall 1.0 with bitwise-equal output and cheaper ident, or —
+/// when the plan has nothing checkable — is at worst output-neutral.
+#[test]
+fn prop_speculation_is_output_neutral() {
+    #[derive(Clone, Debug)]
+    struct Case {
+        seed: u64,
+        n: usize,
+        d: usize,
+        theta: f32,
+        step: usize,
+    }
+    let cfg = Config::heavy(16, 0x5EC5);
+    check(
+        &cfg,
+        |rng| Case {
+            seed: rng.next_u64(),
+            n: *choose(rng, &[64, 128, 192, 256]),
+            d: *choose(rng, &[8, 16]),
+            theta: *choose(rng, &[-2.0, 0.5, 3.0, 8.0]),
+            step: *choose(rng, &[1, 2, 4]),
+        },
+        |_| Vec::new(),
+        |c| {
+            let m = Method::Anchor(AnchorConfig {
+                tile: TileConfig::new(16, 16),
+                theta: c.theta,
+                step: c.step,
+                init_blocks: 1,
+                use_anchor: true,
+            });
+            let mut rng = Pcg64::seeded(c.seed);
+            let head = rand_head(&mut rng, c.n, c.d);
+            let batch = BatchInput::new(vec![head.clone()]);
+
+            let exact = m
+                .session()
+                .keys(vec![PlanKey::new(1, 0)])
+                .build()
+                .map_err(|e| e.to_string())?
+                .run_batch(&batch)
+                .map_err(|e| e.to_string())?;
+            let inert = m
+                .session()
+                .keys(vec![PlanKey::new(1, 0)])
+                .reuse(ReusePolicy::Exact)
+                .build()
+                .map_err(|e| e.to_string())?
+                .run_batch(&batch)
+                .map_err(|e| e.to_string())?;
+            ensure(
+                inert.outputs[0].out.data == exact.outputs[0].out.data
+                    && inert.ident_cost_paid == exact.ident_cost_paid,
+                "exact reuse is not inert".to_string(),
+            )?;
+
+            let seeded = PlanCache::new();
+            seeded.seed(PlanKey::new(0, 0), Arc::new(m.plan(&head)));
+            let spec = m
+                .session()
+                .keys(vec![PlanKey::new(1, 0)])
+                .cache(seeded)
+                .reuse(ReusePolicy::cross_layer())
+                .build()
+                .map_err(|e| e.to_string())?
+                .run_batch(&batch)
+                .map_err(|e| e.to_string())?;
+            ensure(
+                spec.outputs[0].out.data == exact.outputs[0].out.data,
+                "speculation changed the output".to_string(),
+            )?;
+            ensure(
+                spec.speculative_fallbacks == 0,
+                "an identical-input donor must never fail the check".to_string(),
+            )?;
+            if spec.speculative_hits > 0 {
+                ensure(
+                    spec.speculative_recall == Some(1.0),
+                    format!("identical donor recall {:?}", spec.speculative_recall),
+                )?;
+                ensure(
+                    spec.ident_cost_paid.ident_scores <= exact.ident_cost_paid.ident_scores,
+                    "accepted donor paid more than fresh identification".to_string(),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
